@@ -1,0 +1,155 @@
+//! END-TO-END DRIVER: the hybrid analytics service on a real workload.
+//!
+//! Run: `make artifacts && cargo run --release --example hybrid_pjrt`
+//!
+//! This exercises every layer of the system together:
+//!   L1/L2  Pallas semiring kernels + JAX graph models, AOT-lowered to
+//!          `artifacts/*.hlo.txt` by `make artifacts`;
+//!   runtime  the Rust PJRT client loads + compiles the artifacts;
+//!   L3     the coordinator routes a stream of analytics requests —
+//!          PageRank/BFS/SSSP/CC/TC/BC over Kronecker graphs — to the
+//!          PJRT backend (coarse, 32-vertex dense kernels) or to the
+//!          native kernels paired on the SMT core via Relic (fine);
+//!
+//! and validates PJRT results against the native kernels before
+//! reporting throughput and latency percentiles (recorded in
+//! EXPERIMENTS.md §E2E).
+
+use std::path::Path;
+use std::time::Instant;
+
+use relic_smt::cli::Args;
+use relic_smt::coordinator::{
+    run_native_kernel, Backend, Coordinator, GraphKernel, Request, RequestResult, Router,
+    RouterConfig,
+};
+use relic_smt::graph::{kronecker_graph, KroneckerParams};
+use relic_smt::probe::NoProbe;
+use relic_smt::runtime::{GraphExecutor, Manifest};
+use relic_smt::testutil::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let artifacts = args.get("artifacts").unwrap_or("artifacts").to_string();
+    let n_requests = args.get_u64("requests", 256) as usize;
+
+    // --- Load the AOT artifacts (L1/L2 outputs) ------------------------
+    let manifest = Manifest::load(Path::new(&artifacts))
+        .map_err(|e| anyhow::anyhow!("{e:#}\nrun `make artifacts` first"))?;
+    let executor = GraphExecutor::new(Path::new(&artifacts))?;
+    println!(
+        "PJRT platform: {}; artifacts: {:?}",
+        executor.platform(),
+        executor.available()
+    );
+
+    // --- Validate PJRT vs native on every kernel -----------------------
+    validate(&artifacts)?;
+
+    // --- Build the request stream --------------------------------------
+    // Mix: 32-vertex graphs (PJRT-eligible) and 64-vertex graphs (no
+    // artifact -> native, Relic-paired).
+    let mut rng = Rng::new(7);
+    let kernels = GraphKernel::all();
+    let requests: Vec<Request> = (0..n_requests)
+        .map(|i| {
+            let scale = if rng.chance(0.5) { 5 } else { 6 };
+            let g = kronecker_graph(&KroneckerParams::gap(scale, 16, rng.next_u64() % 1000));
+            Request {
+                id: i as u64,
+                kernel: kernels[rng.range(0, kernels.len())],
+                source: rng.below(g.num_vertices() as u64) as u32,
+                graph: g,
+            }
+        })
+        .collect();
+
+    // --- Serve ----------------------------------------------------------
+    let router = Router::new(RouterConfig::default(), Some(&manifest));
+    let mut coord = Coordinator::with_parts(router, Some(executor));
+    coord.warmup(); // compile all executables before timing
+    let t0 = Instant::now();
+    let responses = coord.process_batch(requests);
+    let dt = t0.elapsed();
+
+    let pjrt = responses.iter().filter(|r| r.backend == Backend::Pjrt).count();
+    let native = responses.len() - pjrt;
+    println!("\n--- E2E results ---");
+    println!(
+        "{} requests in {:?}  ({:.0} req/s)",
+        responses.len(),
+        dt,
+        responses.len() as f64 / dt.as_secs_f64()
+    );
+    println!("routing: {pjrt} PJRT, {native} native (Relic-paired)");
+    println!("{}", coord.report());
+    Ok(())
+}
+
+/// PJRT outputs must agree with the native kernels on a shared input —
+/// the cross-layer correctness gate.
+fn validate(artifacts: &str) -> anyhow::Result<()> {
+    use relic_smt::graph::{dense, kronecker::paper_graph};
+    let mut exec = GraphExecutor::new(Path::new(artifacts))?;
+    let g = paper_graph();
+    let n = g.num_vertices();
+
+    // PageRank: elementwise compare.
+    let pjrt_pr = exec.execute("pagerank", n, &[dense::transition(&g), dense::uniform(n)])?;
+    let native_pr = relic_smt::graph::pr::pagerank(&g, 20, 0.0, &mut NoProbe);
+    let e = max_err(&pjrt_pr, &native_pr);
+    anyhow::ensure!(e < 1e-4, "pagerank diverges: {e}");
+
+    // BFS depths (inf -> u32::MAX).
+    let pjrt_bfs = exec.execute("bfs", n, &[dense::adjacency(&g), dense::one_hot(n, 0)])?;
+    let native_bfs = relic_smt::graph::bfs::bfs(&g, 0, &mut NoProbe);
+    for (v, (p, nn)) in pjrt_bfs.iter().zip(&native_bfs).enumerate() {
+        let p = if p.is_infinite() { u32::MAX } else { *p as u32 };
+        anyhow::ensure!(p == *nn, "bfs diverges at vertex {v}: {p} vs {nn}");
+    }
+
+    // SSSP distances.
+    let pjrt_sssp =
+        exec.execute("sssp", n, &[dense::weights_inf(&g), dense::one_hot(n, 0)])?;
+    let native_sssp =
+        relic_smt::graph::sssp::delta_stepping(&g, 0, relic_smt::graph::sssp::DEFAULT_DELTA, &mut NoProbe);
+    for (v, (p, nn)) in pjrt_sssp.iter().zip(&native_sssp).enumerate() {
+        let p = if p.is_infinite() { u32::MAX } else { *p as u32 };
+        anyhow::ensure!(p == *nn, "sssp diverges at vertex {v}: {p} vs {nn}");
+    }
+
+    // CC labels.
+    let pjrt_cc = exec.execute("cc", n, &[dense::w0(&g)])?;
+    let native_cc = relic_smt::graph::cc::shiloach_vishkin(&g, &mut NoProbe);
+    for (v, (p, nn)) in pjrt_cc.iter().zip(&native_cc).enumerate() {
+        anyhow::ensure!(*p as u32 == *nn, "cc diverges at vertex {v}");
+    }
+
+    // Triangle count.
+    let pjrt_tc = exec.execute("tc", n, &[dense::adjacency(&g)])?;
+    let native_tc = relic_smt::graph::tc::triangle_count(&g, &mut NoProbe);
+    anyhow::ensure!(
+        pjrt_tc[0] as u64 == native_tc,
+        "tc diverges: {} vs {native_tc}",
+        pjrt_tc[0]
+    );
+
+    // BC scores.
+    let pjrt_bc = exec.execute("bc", n, &[dense::adjacency(&g)])?;
+    let native_bc = relic_smt::graph::bc::brandes(&g, &mut NoProbe);
+    let e = max_err(&pjrt_bc, &native_bc);
+    anyhow::ensure!(e < 1e-2, "bc diverges: {e}");
+
+    println!("validation: PJRT outputs match native kernels on all 6 graph kernels");
+    Ok(())
+}
+
+fn max_err(a: &[f32], b: &[f64]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (*x as f64 - y).abs())
+        .fold(0.0, f64::max)
+}
+
+#[allow(dead_code)]
+fn unused(_: RequestResult) {}

@@ -1,0 +1,99 @@
+//! JSON ingestion service: parse a stream of client documents with
+//! fine-grained parallelism on one SMT core (the paper's §IV-B
+//! scenario scaled to a service), reporting latency percentiles.
+//!
+//! Run: `cargo run --release --example json_service [-- --docs 20000]`
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use relic_smt::cli::Args;
+use relic_smt::json;
+use relic_smt::metrics::Histogram;
+use relic_smt::relic::Relic;
+
+/// Build a batch of synthetic client documents around the widget sample
+/// (varying numeric payloads so parses aren't byte-identical).
+fn documents(n: usize) -> Vec<Vec<u8>> {
+    (0..n)
+        .map(|i| {
+            let widget = String::from_utf8_lossy(json::WIDGET).replace("500", &format!("{}", 100 + (i % 900)));
+            widget.into_bytes()
+        })
+        .collect()
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let n_docs = args.get_u64("docs", 20_000) as usize;
+    let docs = documents(n_docs);
+    let relic = Relic::new();
+
+    // Serial baseline.
+    let serial_nodes = AtomicU64::new(0);
+    let t0 = Instant::now();
+    for d in &docs {
+        serial_nodes.fetch_add(
+            json::parse(d).expect("valid doc").node_count() as u64,
+            Ordering::Relaxed,
+        );
+    }
+    let serial = t0.elapsed();
+
+    // Paired: two documents at a time, one per logical thread.
+    let paired_nodes = AtomicU64::new(0);
+    let latency = Histogram::new();
+    let t0 = Instant::now();
+    for pair in docs.chunks(2) {
+        let t = Instant::now();
+        match pair {
+            [a, b] => {
+                let task_b = || {
+                    paired_nodes.fetch_add(
+                        json::parse(b).expect("valid doc").node_count() as u64,
+                        Ordering::Relaxed,
+                    );
+                };
+                relic.pair(
+                    || {
+                        paired_nodes.fetch_add(
+                            json::parse(a).expect("valid doc").node_count() as u64,
+                            Ordering::Relaxed,
+                        );
+                    },
+                    &task_b,
+                );
+            }
+            [a] => {
+                paired_nodes.fetch_add(
+                    json::parse(a).expect("valid doc").node_count() as u64,
+                    Ordering::Relaxed,
+                );
+            }
+            _ => unreachable!(),
+        }
+        latency.record(t.elapsed().as_nanos() as u64);
+    }
+    let paired = t0.elapsed();
+
+    assert_eq!(
+        serial_nodes.load(Ordering::Relaxed),
+        paired_nodes.load(Ordering::Relaxed),
+        "parallel parse must produce identical DOMs"
+    );
+    println!("documents:        {n_docs}");
+    println!("DOM nodes total:  {}", serial_nodes.load(Ordering::Relaxed));
+    println!(
+        "serial:           {:?} ({:.2} µs/doc)",
+        serial,
+        serial.as_nanos() as f64 / 1000.0 / n_docs as f64
+    );
+    println!(
+        "relic-paired:     {:?} ({:.2} µs/doc, speedup {:.3}x)",
+        paired,
+        paired.as_nanos() as f64 / 1000.0 / n_docs as f64,
+        serial.as_nanos() as f64 / paired.as_nanos() as f64
+    );
+    println!("pair latency:     {}", latency.summary("ns"));
+    println!("note: speedup >1 requires a real SMT host; see `repro fig3` for sim results");
+}

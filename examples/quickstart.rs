@@ -1,0 +1,63 @@
+//! Quickstart: the Relic framework in 60 lines.
+//!
+//! Run: `cargo run --release --example quickstart`
+//!
+//! Demonstrates the paper's API (§VI-A): `submit()` / `wait()` from the
+//! main thread, the assistant thread executing tasks, and the
+//! `wake_up_hint` / `sleep_hint` lifecycle — plus the two-instance
+//! benchmark protocol on one real kernel.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use relic_smt::graph::{kronecker::paper_graph, tc};
+use relic_smt::probe::NoProbe;
+use relic_smt::relic::{affinity, Relic, RelicConfig, WaitPolicy};
+
+fn main() {
+    println!("host: {}", affinity::topology_summary());
+
+    // 1. Start Relic (paper defaults: SPSC capacity 128, spin+pause).
+    //    Pin the assistant to the SMT sibling when the host has one.
+    let relic = Relic::with_config(RelicConfig {
+        queue_capacity: 128,
+        wait_policy: WaitPolicy::SpinPause,
+        assistant_cpu: affinity::smt_sibling_pair().map(|(_, b)| b),
+    });
+
+    // 2. The C-style API: function pointer + argument.
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    fn routine(arg: usize) {
+        COUNTER.fetch_add(arg as u64, Ordering::Relaxed);
+    }
+    for i in 0..100 {
+        relic.submit(routine, i).expect("queue has room");
+    }
+    relic.wait();
+    println!("submit/wait: counter = {} (expect 4950)", COUNTER.load(Ordering::Relaxed));
+
+    // 3. The two-instance protocol from the paper's benchmarks: run two
+    //    triangle-counting tasks, one on each logical thread.
+    let g = paper_graph();
+    let triangles = AtomicU64::new(0);
+    relic.pair(
+        || {
+            triangles.fetch_add(tc::triangle_count(&g, &mut NoProbe), Ordering::Relaxed);
+        },
+        &|| {
+            triangles.fetch_add(tc::triangle_count(&g, &mut NoProbe), Ordering::Relaxed);
+        },
+    );
+    println!("two TC instances counted {} triangles total", triangles.load(Ordering::Relaxed));
+
+    // 4. Long serial phase coming up? Park the assistant explicitly.
+    relic.sleep_hint();
+    let serial_work: u64 = (0..1_000_000u64).sum();
+    relic.wake_up_hint();
+    println!("serial phase done ({serial_work}); assistant re-armed");
+
+    let stats = relic.stats();
+    println!(
+        "stats: submitted={} completed={} queue_full={}",
+        stats.submitted, stats.completed, stats.queue_full_events
+    );
+}

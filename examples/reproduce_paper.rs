@@ -1,0 +1,52 @@
+//! Reproduce every figure and table in the paper in one run.
+//!
+//! Run: `cargo run --release --example reproduce_paper`
+//!
+//! Emits, with the paper's reported values beside ours:
+//!   §IV  task-granularity table;
+//!   Fig. 1  speedups for the seven baseline frameworks;
+//!   §V   geomeans including degradations;
+//!   Fig. 3  Relic speedups;
+//!   Fig. 4  averages without negative outliers.
+
+use relic_smt::bench::figures;
+use relic_smt::smtsim::CoreConfig;
+
+fn main() {
+    let cfg = CoreConfig::default();
+
+    println!("=== §IV: serial task granularities ===\n");
+    println!("{}", figures::render_granularity(&figures::granularity(&cfg)));
+
+    println!("=== Figure 1: baseline frameworks ===\n");
+    let f1 = figures::fig1(&cfg);
+    println!("{}", figures::render_matrix(&f1));
+
+    println!("=== §V geomeans (with degradations) ===\n");
+    println!(
+        "{}",
+        figures::render_summary(&figures::section5_geomeans(&f1), "")
+    );
+
+    println!("=== Figure 3: Relic ===\n");
+    let f3 = figures::fig3(&cfg);
+    println!("{}", figures::render_matrix(&f3));
+
+    println!("=== Figure 4: averages w/o negative outliers ===\n");
+    let f4 = figures::fig4(&f1, &f3);
+    println!("{}", figures::render_summary(&f4, ""));
+
+    // Headline check: Relic's relative gain over each baseline.
+    let relic = f4.iter().find(|r| r.runtime == "relic").unwrap().value;
+    println!("Relic's relative gain over each baseline (paper: 19.1–33.2%):");
+    for row in &f4 {
+        if row.runtime == "relic" {
+            continue;
+        }
+        println!(
+            "  vs {:<14} +{:.1}%",
+            row.runtime,
+            (relic / row.value - 1.0) * 100.0
+        );
+    }
+}

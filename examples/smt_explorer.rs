@@ -1,0 +1,61 @@
+//! SMT design-space exploration with the simulator: how do Relic's
+//! speedups respond to core parameters the paper could not vary on
+//! fixed silicon? Sweeps wake latency (OS), pause latency (ISA), issue
+//! width (µarch), and SMT fetch policy.
+//!
+//! Run: `cargo run --release --example smt_explorer`
+
+use relic_smt::bench::Workload;
+use relic_smt::smtsim::{self, CoreConfig, FetchPolicy};
+
+fn geo(vals: &[f64]) -> f64 {
+    (vals.iter().map(|v| v.ln()).sum::<f64>() / vals.len() as f64).exp()
+}
+
+fn geomean_speedup(runtime: &str, cfg: &CoreConfig) -> f64 {
+    let vals: Vec<f64> = Workload::all()
+        .iter()
+        .map(|w| {
+            let (a, b) = (w.trace(0, cfg), w.trace(1, cfg));
+            smtsim::speedup(runtime, &a, &b, cfg)
+        })
+        .collect();
+    geo(&vals)
+}
+
+fn main() {
+    let base = CoreConfig::default();
+
+    println!("geomean speedup across the 7 paper kernels (simulated)\n");
+
+    println!("-- wake latency (futex) sensitivity: gnu-openmp vs relic --");
+    for wake in [1_000u64, 2_500, 5_000, 10_000, 20_000] {
+        let cfg = CoreConfig { wake_latency: wake, ..base };
+        println!(
+            "  wake={wake:>6}cy   gnu={:.3}   relic={:.3}",
+            geomean_speedup("gnu-openmp", &cfg),
+            geomean_speedup("relic", &cfg)
+        );
+    }
+
+    println!("\n-- pause latency sensitivity (relic spins with pause) --");
+    for pause in [5u64, 15, 30, 60, 120] {
+        let cfg = CoreConfig { pause_latency: pause, ..base };
+        println!("  pause={pause:>4}cy   relic={:.3}", geomean_speedup("relic", &cfg));
+    }
+
+    println!("\n-- issue width / SMT sharing --");
+    for (w, per) in [(2u32, 2u32), (3, 2), (4, 3), (6, 4), (8, 6)] {
+        let cfg = CoreConfig { issue_width: w, per_thread_issue: per, ..base };
+        println!(
+            "  width={w} per-thread={per}   relic={:.3}",
+            geomean_speedup("relic", &cfg)
+        );
+    }
+
+    println!("\n-- fetch policy --");
+    for policy in [FetchPolicy::RoundRobin, FetchPolicy::Icount] {
+        let cfg = CoreConfig { fetch: policy, ..base };
+        println!("  {policy:?}: relic={:.3}", geomean_speedup("relic", &cfg));
+    }
+}

@@ -1,0 +1,9 @@
+fn main() {
+    for seed in 0..5000u64 {
+        let g = relic_smt::graph::kronecker_graph(&relic_smt::graph::KroneckerParams::gap(5, 4, seed));
+        if g.num_edges() == 157 {
+            println!("seed {} -> 157 edges", seed);
+            if seed > 100 { break; }
+        }
+    }
+}

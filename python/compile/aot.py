@@ -1,0 +1,76 @@
+"""AOT lowering: JAX graph kernels -> HLO *text* artifacts for the Rust
+PJRT runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts [--sizes 32,64]
+
+Outputs, per kernel K and size N:
+    artifacts/K_nN.hlo.txt
+plus artifacts/manifest.json describing every artifact's entry point and
+input shapes (consumed by rust/src/runtime/manifest.rs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import export_registry
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str, sizes: list[int]) -> dict:
+    manifest: dict = {"format": "hlo-text", "return_tuple": True, "entries": []}
+    os.makedirs(out_dir, exist_ok=True)
+    for n in sizes:
+        for name, (fn, specs) in export_registry(n).items():
+            lowered = jax.jit(fn).lower(*specs)
+            text = to_hlo_text(lowered)
+            fname = f"{name}_n{n}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            manifest["entries"].append(
+                {
+                    "kernel": name,
+                    "n": n,
+                    "file": fname,
+                    "inputs": [list(s.shape) for s in specs],
+                    "outputs": 1,
+                }
+            )
+            print(f"  wrote {fname} ({len(text)} chars, inputs "
+                  f"{[tuple(s.shape) for s in specs]})")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote manifest.json ({len(manifest['entries'])} entries)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default="32",
+                    help="comma-separated graph sizes to export")
+    args = ap.parse_args()
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    lower_all(args.out_dir, sizes)
+
+
+if __name__ == "__main__":
+    main()

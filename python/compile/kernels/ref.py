@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas semiring kernels.
+
+These are the correctness ground truth: pytest/hypothesis sweep shapes and
+semirings and assert the Pallas kernels match these to float tolerance.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matvec_ref(a, x, semiring: str = "plus_times"):
+    a = jnp.asarray(a, jnp.float32)
+    x = jnp.asarray(x, jnp.float32)
+    if semiring == "plus_times":
+        return a @ x
+    if semiring == "min_plus":
+        return jnp.min(a + x[None, :], axis=1)
+    if semiring == "or_and":
+        return jnp.max(jnp.minimum(a, x[None, :]), axis=1)
+    raise ValueError(semiring)
+
+
+def matmul_ref(a, b, semiring: str = "plus_times"):
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    if semiring == "plus_times":
+        return a @ b
+    if semiring == "min_plus":
+        return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+    if semiring == "or_and":
+        return jnp.max(jnp.minimum(a[:, :, None], b[None, :, :]), axis=1)
+    raise ValueError(semiring)
+
+
+def triangle_count_ref(a):
+    """6 * #triangles for symmetric 0/1 adjacency with zero diagonal."""
+    a = jnp.asarray(a, jnp.float32)
+    return jnp.sum((a @ a) * a)

@@ -1,0 +1,220 @@
+"""L1 — Pallas semiring matrix kernels.
+
+The paper's workload side is graph analytics (GAP kernels). For the PJRT
+offload path we express the graph operators in GraphBLAS style: a single
+blocked matvec/matmul kernel template instantiated over three semirings
+
+    plus_times : y_i = sum_j  a_ij * x_j          (PageRank, BC)
+    min_plus   : y_i = min_j (a_ij + x_j)         (SSSP, CC label prop)
+    or_and     : y_i = max_j min(a_ij, x_j)       (BFS frontier expansion)
+
+plus a fused triangle-count kernel  tc = sum( (A @ A) * A ).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): blocks are BlockSpec
+tiles sized for VMEM; the (+,*) instantiation uses `jnp.dot` so it lowers
+onto the MXU systolic array; (min,+) and (or,and) are VPU element-wise +
+reduce with the identical HBM<->VMEM schedule. `interpret=True` always —
+the CPU PJRT plugin cannot execute Mosaic custom-calls (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Semiring registry -----------------------------------------------------------
+
+#: Additive identities per semiring (the "zero" of the reduction).
+IDENTITY = {
+    "plus_times": 0.0,
+    "min_plus": jnp.inf,
+    # True (max, min) tropical semiring: the max-reduce identity is -inf
+    # (0 would clamp negative inputs; for {0,1} graph masks the result is
+    # identical, but the kernel stays correct on arbitrary reals).
+    "or_and": -jnp.inf,
+}
+
+SEMIRINGS = tuple(IDENTITY)
+
+
+def _combine_reduce(semiring: str, a_blk, x_blk):
+    """One (bm, bk) x (bk,) block contribution: reduce_j combine(a_ij, x_j).
+
+    Returns a (bm,) partial result for this k-block.
+    """
+    if semiring == "plus_times":
+        # MXU-eligible on real TPU hardware.
+        return jnp.dot(a_blk, x_blk, preferred_element_type=jnp.float32)
+    if semiring == "min_plus":
+        return jnp.min(a_blk + x_blk[None, :], axis=1)
+    if semiring == "or_and":
+        # Boolean graphs encoded as {0.0, 1.0}: AND == min, OR == max.
+        return jnp.max(jnp.minimum(a_blk, x_blk[None, :]), axis=1)
+    raise ValueError(f"unknown semiring {semiring!r}")
+
+
+def _merge(semiring: str, acc, part):
+    """Merge a new k-block partial into the accumulator (the semiring 'add')."""
+    if semiring == "plus_times":
+        return acc + part
+    if semiring == "min_plus":
+        return jnp.minimum(acc, part)
+    if semiring == "or_and":
+        return jnp.maximum(acc, part)
+    raise ValueError(f"unknown semiring {semiring!r}")
+
+
+# Matvec kernel ----------------------------------------------------------------
+
+
+def _matvec_kernel(a_ref, x_ref, o_ref, *, semiring: str, k_blocks: int):
+    """Grid = (m_blocks, k_blocks); o block is revisited for every k."""
+    k = pl.program_id(1)
+    part = _combine_reduce(semiring, a_ref[...], x_ref[...])
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, IDENTITY[semiring])
+
+    o_ref[...] = _merge(semiring, o_ref[...], part)
+
+
+def _pad_to(v: int, block: int) -> int:
+    return (v + block - 1) // block * block
+
+
+@functools.partial(jax.jit, static_argnames=("semiring", "block_m", "block_k"))
+def semiring_matvec(a, x, *, semiring: str = "plus_times",
+                    block_m: int = 32, block_k: int = 32):
+    """y_i = reduce_j combine(a_ij, x_j) over the given semiring.
+
+    `a` is (n, m) float32, `x` is (m,) float32. Arbitrary n/m: inputs are
+    padded with the semiring's annihilator so padding never contributes.
+    """
+    a = jnp.asarray(a, jnp.float32)
+    x = jnp.asarray(x, jnp.float32)
+    n, m = a.shape
+    bm = min(block_m, _pad_to(n, 8))
+    bk = min(block_k, _pad_to(m, 8))
+    np_, mp = _pad_to(n, bm), _pad_to(m, bk)
+
+    # The annihilator for `combine` (so padded columns reduce to identity):
+    #   plus_times: 0 * x = 0;  min_plus: inf + x = inf;
+    #   or_and: min(-inf, x) = -inf (the max-identity).
+    pad_a = IDENTITY[semiring]
+    a_p = jnp.pad(a, ((0, np_ - n), (0, mp - m)), constant_values=pad_a)
+    # x padding value is irrelevant given annihilator in A, but keep it inert.
+    pad_x = jnp.inf if semiring == "min_plus" else 0.0
+    x_p = jnp.pad(x, (0, mp - m), constant_values=pad_x)
+
+    k_blocks = mp // bk
+    out = pl.pallas_call(
+        functools.partial(_matvec_kernel, semiring=semiring, k_blocks=k_blocks),
+        grid=(np_ // bm, k_blocks),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+            pl.BlockSpec((bk,), lambda i, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i, k: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.float32),
+        interpret=True,
+    )(a_p, x_p)
+    return out[:n]
+
+
+# Matmul kernel (used by triangle counting and BC stage batching) ---------------
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, semiring: str):
+    k = pl.program_id(2)
+    if semiring == "plus_times":
+        part = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    elif semiring == "min_plus":
+        part = jnp.min(a_ref[...][:, :, None] + b_ref[...][None, :, :], axis=1)
+    elif semiring == "or_and":
+        part = jnp.max(
+            jnp.minimum(a_ref[...][:, :, None], b_ref[...][None, :, :]), axis=1
+        )
+    else:  # pragma: no cover - registry guards this
+        raise ValueError(semiring)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, IDENTITY[semiring])
+
+    o_ref[...] = _merge(semiring, o_ref[...], part)
+
+
+@functools.partial(jax.jit, static_argnames=("semiring", "block"))
+def semiring_matmul(a, b, *, semiring: str = "plus_times", block: int = 32):
+    """C = A (combine/reduce) B over the given semiring; A (n,k), B (k,m)."""
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    n, k = a.shape
+    k2, m = b.shape
+    assert k == k2, (k, k2)
+    bs = min(block, _pad_to(max(n, k, m), 8))
+    np_, kp, mp = _pad_to(n, bs), _pad_to(k, bs), _pad_to(m, bs)
+    pad = IDENTITY[semiring]
+    a_p = jnp.pad(a, ((0, np_ - n), (0, kp - k)), constant_values=pad)
+    b_p = jnp.pad(b, ((0, kp - k), (0, mp - m)), constant_values=pad)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, semiring=semiring),
+        grid=(np_ // bs, mp // bs, kp // bs),
+        in_specs=[
+            pl.BlockSpec((bs, bs), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bs, bs), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bs, bs), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, mp), jnp.float32),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:n, :m]
+
+
+# Fused triangle-count kernel ----------------------------------------------------
+
+
+def _tc_kernel(a_ik_ref, a_kj_ref, a_ij_ref, o_ref):
+    """Partial sums of (A@A) * A per (i, j) output block, accumulated over k."""
+    k = pl.program_id(2)
+    c = jnp.dot(a_ik_ref[...], a_kj_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(c * a_ij_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def triangle_count_fused(a, *, block: int = 32):
+    """6 * (#triangles) = sum((A @ A) * A) for a symmetric 0/1 adjacency.
+
+    Fused: the (A@A) block is multiplied by the A block and reduced inside
+    the kernel, so the n^2 intermediate never round-trips through HBM.
+    """
+    a = jnp.asarray(a, jnp.float32)
+    n = a.shape[0]
+    bs = min(block, _pad_to(n, 8))
+    np_ = _pad_to(n, bs)
+    a_p = jnp.pad(a, ((0, np_ - n), (0, np_ - n)))
+    g = np_ // bs
+    partials = pl.pallas_call(
+        _tc_kernel,
+        grid=(g, g, g),
+        in_specs=[
+            pl.BlockSpec((bs, bs), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bs, bs), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bs, bs), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, g), jnp.float32),
+        interpret=True,
+    )(a_p, a_p, a_p)
+    return jnp.sum(partials)

@@ -1,0 +1,189 @@
+"""L2 — GraphBLAS-style GAP graph kernels in JAX, built on the L1 Pallas
+semiring kernels.
+
+These are the *offload-path* formulations of the paper's six GAP benchmark
+kernels (BC, BFS, CC, PR, SSSP, TC): graph traversal as semiring linear
+algebra over a dense adjacency representation (the paper's input graphs
+are tiny — 32 nodes — so dense is the right layout for the MXU).
+
+Every public function here is a pure, shape-static JAX function; they are
+lowered once by `aot.py` to HLO text and executed from the Rust runtime
+(`rust/src/runtime/`) on the PJRT CPU client. Python never runs at request
+time.
+
+Conventions
+-----------
+* `a`    — symmetric {0,1} adjacency matrix, float32, zero diagonal.
+* `w`    — weight matrix, float32, `inf` where no edge, zero diagonal.
+* `w0`   — {0, inf} matrix: 0 on edges *and* the diagonal, inf elsewhere
+           (min-plus identity-preserving adjacency for label propagation).
+* `src`  — one-hot float32 source-vertex vector.
+* unreachable vertices get depth/dist `inf`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.semiring import semiring_matvec, triangle_count_fused
+
+INF = jnp.inf
+
+
+# -- PageRank -------------------------------------------------------------------
+
+
+def pr_step(m, r, *, damping: float = 0.85):
+    """One PageRank power iteration: r' = d * (M @ r) + (1 - d) / n.
+
+    `m` is the column-normalized transition matrix transposed into
+    row-major gather form, i.e. m[i, j] = a[j, i] / degree(j).
+    """
+    n = r.shape[0]
+    contrib = semiring_matvec(m, r, semiring="plus_times")
+    return damping * contrib + (1.0 - damping) / n
+
+
+def pagerank(m, r0, *, iters: int = 20, damping: float = 0.85):
+    """`iters` PageRank power iterations from initial distribution `r0`."""
+
+    def body(_, r):
+        return pr_step(m, r, damping=damping)
+
+    return (jax.lax.fori_loop(0, iters, body, r0),)
+
+
+# -- BFS ------------------------------------------------------------------------
+
+
+def bfs(a, src):
+    """Level-synchronous BFS; returns float32 depths (`inf` = unreachable).
+
+    Frontier expansion is the (or, and) semiring matvec: next = A^T ∨.∧ f.
+    """
+    n = a.shape[0]
+    depth0 = jnp.where(src > 0.0, 0.0, INF)
+
+    def body(l, state):
+        depth, frontier = state
+        nxt = semiring_matvec(a, frontier, semiring="or_and")
+        newly = (nxt > 0.0) & jnp.isinf(depth)
+        depth = jnp.where(newly, jnp.float32(l + 1), depth)
+        return depth, newly.astype(jnp.float32)
+
+    depth, _ = jax.lax.fori_loop(0, n - 1, body, (depth0, src))
+    return (depth,)
+
+
+# -- SSSP (Bellman-Ford over the (min, +) semiring) ------------------------------
+
+
+def sssp(w, src):
+    """Single-source shortest paths: n-1 rounds of d' = min(d, W^T min.+ d)."""
+    n = w.shape[0]
+    dist0 = jnp.where(src > 0.0, 0.0, INF)
+
+    def body(_, dist):
+        relax = semiring_matvec(w, dist, semiring="min_plus")
+        return jnp.minimum(dist, relax)
+
+    return (jax.lax.fori_loop(0, n - 1, body, dist0),)
+
+
+# -- Connected components (min label propagation) --------------------------------
+
+
+def connected_components(w0):
+    """Label propagation: l' = min(l, W0 min.+ l) until fixpoint (n rounds).
+
+    Equivalent component labelling to Shiloach-Vishkin (the paper's CC
+    variant): every vertex ends with the minimum vertex id of its component.
+    """
+    n = w0.shape[0]
+    labels0 = jnp.arange(n, dtype=jnp.float32)
+
+    def body(_, labels):
+        prop = semiring_matvec(w0, labels, semiring="min_plus")
+        return jnp.minimum(labels, prop)
+
+    return (jax.lax.fori_loop(0, n, body, labels0),)
+
+
+# -- Triangle counting -----------------------------------------------------------
+
+
+def triangle_count(a):
+    """#triangles = sum((A @ A) ⊙ A) / 6, fused in one Pallas kernel."""
+    return (triangle_count_fused(a) / 6.0,)
+
+
+# -- Betweenness centrality (Brandes, level-synchronous linear-algebra form) ------
+
+
+def _bc_single_source(a, src):
+    """Brandes dependency accumulation for one source, all as matvecs."""
+    n = a.shape[0]
+    depth0 = jnp.where(src > 0.0, 0.0, INF)
+    sigma0 = src  # path counts
+
+    def fwd(l, state):
+        depth, sigma = state
+        f = jnp.where(depth == jnp.float32(l), sigma, 0.0)
+        t = semiring_matvec(a, f, semiring="plus_times")
+        newly = (t > 0.0) & jnp.isinf(depth)
+        depth = jnp.where(newly, jnp.float32(l + 1), depth)
+        sigma = sigma + jnp.where(depth == jnp.float32(l + 1), t, 0.0)
+        return depth, sigma
+
+    depth, sigma = jax.lax.fori_loop(0, n - 1, fwd, (depth0, sigma0))
+
+    safe_sigma = jnp.where(sigma > 0.0, sigma, 1.0)
+
+    def bwd(i, delta):
+        l = jnp.float32(n - 1) - i  # levels n-1 .. 1
+        coef = jnp.where(depth == l, (1.0 + delta) / safe_sigma, 0.0)
+        contrib = semiring_matvec(a, coef, semiring="plus_times")
+        upd = jnp.where(depth == l - 1.0, sigma * contrib, 0.0)
+        return delta + upd
+
+    delta = jax.lax.fori_loop(0, n - 1, bwd, jnp.zeros(n, jnp.float32))
+    # The source accumulates spurious dependency; zero it out.
+    return jnp.where(src > 0.0, 0.0, delta)
+
+
+def betweenness_centrality(a):
+    """Exact BC over all sources (unnormalized; each pair counted twice for
+    undirected graphs, matching GAP's convention of halving at the end)."""
+    n = a.shape[0]
+
+    def body(s, acc):
+        src = (jnp.arange(n) == s).astype(jnp.float32)
+        return acc + _bc_single_source(a, src)
+
+    bc = jax.lax.fori_loop(0, n, body, jnp.zeros(n, jnp.float32))
+    return (bc / 2.0,)
+
+
+# -- Export registry (consumed by aot.py and the Rust manifest) -------------------
+
+
+def _specs(n: int, *shapes):
+    return [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+
+
+def export_registry(n: int):
+    """name -> (fn, example arg specs). All fns return tuples (see aot.py)."""
+    return {
+        "pagerank": (
+            functools.partial(pagerank, iters=20, damping=0.85),
+            _specs(n, (n, n), (n,)),
+        ),
+        "bfs": (bfs, _specs(n, (n, n), (n,))),
+        "sssp": (sssp, _specs(n, (n, n), (n,))),
+        "cc": (connected_components, _specs(n, (n, n))),
+        "tc": (triangle_count, _specs(n, (n, n))),
+        "bc": (betweenness_centrality, _specs(n, (n, n))),
+    }

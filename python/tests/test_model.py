@@ -1,0 +1,186 @@
+"""L2 correctness: the JAX graph kernels vs NumPy graph oracles."""
+
+import heapq
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def random_graph(rng, n, p):
+    a = (rng.random((n, n)) < p).astype(np.float32)
+    a = np.triu(a, 1)
+    return a + a.T
+
+
+def graph_strategy():
+    return st.tuples(st.integers(2, 20), st.floats(0.05, 0.7), st.integers(0, 2**31 - 1))
+
+
+# -- oracles ----------------------------------------------------------------
+
+
+def bfs_oracle(a, src):
+    n = a.shape[0]
+    depth = np.full(n, np.inf)
+    depth[src] = 0
+    frontier = [src]
+    d = 0
+    while frontier:
+        nxt = []
+        for u in frontier:
+            for v in range(n):
+                if a[u, v] > 0 and np.isinf(depth[v]):
+                    depth[v] = d + 1
+                    nxt.append(v)
+        frontier = nxt
+        d += 1
+    return depth
+
+
+def dijkstra_oracle(w, src):
+    n = w.shape[0]
+    dist = np.full(n, np.inf)
+    dist[src] = 0.0
+    heap = [(0.0, src)]
+    while heap:
+        d, u = heapq.heappop(heap)
+        if d > dist[u]:
+            continue
+        for v in range(n):
+            if u != v and np.isfinite(w[u, v]):
+                nd = d + w[u, v]
+                if nd < dist[v] - 1e-9:
+                    dist[v] = nd
+                    heapq.heappush(heap, (nd, v))
+    return dist
+
+
+def cc_oracle(a):
+    n = a.shape[0]
+    label = np.arange(n)
+    for _ in range(n):
+        changed = False
+        for u in range(n):
+            for v in range(n):
+                if (u == v or a[u, v] > 0) and label[v] < label[u]:
+                    label[u] = label[v]
+                    changed = True
+        if not changed:
+            break
+    return label.astype(np.float32)
+
+
+def brandes_oracle(a):
+    n = a.shape[0]
+    bc = np.zeros(n)
+    for s in range(n):
+        depth = bfs_oracle(a, s)
+        # path counts
+        sigma = np.zeros(n)
+        sigma[s] = 1
+        order = sorted(range(n), key=lambda v: depth[v] if np.isfinite(depth[v]) else 1e18)
+        for v in order:
+            if not np.isfinite(depth[v]) or depth[v] == 0:
+                continue
+            sigma[v] = sum(
+                sigma[u] for u in range(n) if a[u, v] > 0 and depth[u] == depth[v] - 1
+            )
+        delta = np.zeros(n)
+        for v in reversed(order):
+            if not np.isfinite(depth[v]):
+                continue
+            for u in range(n):
+                if a[u, v] > 0 and depth[u] == depth[v] - 1 and sigma[v] > 0:
+                    delta[u] += sigma[u] / sigma[v] * (1 + delta[v])
+        delta[s] = 0
+        bc += delta
+    return bc / 2.0
+
+
+# -- tests --------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(graph_strategy())
+def test_bfs_matches_oracle(params):
+    n, p, seed = params
+    rng = np.random.default_rng(seed)
+    a = random_graph(rng, n, p)
+    depth, = model.bfs(a, np.eye(n, dtype=np.float32)[0])
+    np.testing.assert_allclose(np.asarray(depth), bfs_oracle(a, 0))
+
+
+@settings(**SETTINGS)
+@given(graph_strategy())
+def test_sssp_matches_dijkstra(params):
+    n, p, seed = params
+    rng = np.random.default_rng(seed)
+    a = random_graph(rng, n, p)
+    w = np.where(a > 0, (rng.integers(1, 256, (n, n))).astype(np.float32), np.inf)
+    w = np.minimum(w, w.T)
+    np.fill_diagonal(w, 0.0)
+    dist, = model.sssp(w.astype(np.float32), np.eye(n, dtype=np.float32)[0])
+    np.testing.assert_allclose(np.asarray(dist), dijkstra_oracle(w, 0), rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(graph_strategy())
+def test_cc_matches_oracle(params):
+    n, p, seed = params
+    rng = np.random.default_rng(seed)
+    a = random_graph(rng, n, p)
+    w0 = np.where(a > 0, 0.0, np.inf).astype(np.float32)
+    np.fill_diagonal(w0, 0.0)
+    labels, = model.connected_components(w0)
+    np.testing.assert_allclose(np.asarray(labels), cc_oracle(a))
+
+
+@settings(**SETTINGS)
+@given(graph_strategy())
+def test_tc_matches_trace_formula(params):
+    n, p, seed = params
+    rng = np.random.default_rng(seed)
+    a = random_graph(rng, n, p)
+    count, = model.triangle_count(a)
+    want = np.trace(a @ a @ a) / 6.0
+    assert float(count) == pytest.approx(want)
+
+
+@settings(**SETTINGS)
+@given(graph_strategy())
+def test_pagerank_sums_to_one_and_matches_power_iteration(params):
+    n, p, seed = params
+    rng = np.random.default_rng(seed)
+    a = random_graph(rng, n, p)
+    deg = a.sum(axis=1)
+    m = (a / np.maximum(deg, 1.0)[None, :]).astype(np.float32)
+    r0 = np.full(n, 1.0 / n, np.float32)
+    r, = model.pagerank(m, r0, iters=20, damping=0.85)
+    # NumPy power iteration oracle.
+    want = r0.astype(np.float64)
+    for _ in range(20):
+        want = 0.85 * (m.astype(np.float64) @ want) + 0.15 / n
+    np.testing.assert_allclose(np.asarray(r), want, rtol=1e-4, atol=1e-6)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.tuples(st.integers(3, 10), st.floats(0.2, 0.7), st.integers(0, 2**31 - 1)))
+def test_bc_matches_brandes_oracle(params):
+    n, p, seed = params
+    rng = np.random.default_rng(seed)
+    a = random_graph(rng, n, p)
+    bc, = model.betweenness_centrality(a)
+    np.testing.assert_allclose(np.asarray(bc), brandes_oracle(a), rtol=1e-4, atol=1e-4)
+
+
+def test_export_registry_covers_all_kernels():
+    reg = model.export_registry(8)
+    assert set(reg) == {"pagerank", "bfs", "sssp", "cc", "tc", "bc"}
+    for name, (fn, specs) in reg.items():
+        out = fn(*[np.zeros(s.shape, np.float32) for s in specs])
+        assert isinstance(out, tuple) and len(out) == 1, name

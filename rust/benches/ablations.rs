@@ -1,0 +1,57 @@
+//! Ablation bench target (DESIGN.md §6 A1–A3):
+//!   A1 SPSC queue capacity sweep,
+//!   A2 waiting-mechanism sweep (spin / spin+pause / hybrid / park),
+//!   A3 SMT fetch-policy sensitivity.
+//!
+//! Run: `cargo bench --bench ablations`
+
+mod common;
+
+use relic_smt::bench::{harness::geomean, Workload};
+use relic_smt::smtsim::CoreConfig;
+
+fn main() {
+    let cfg = CoreConfig::default();
+
+    common::section("A2 — waiting mechanism (Relic assistant), per kernel");
+    let rows = relic_smt::bench::ablation::waiting_mechanism(&cfg);
+    println!("{}", relic_smt::bench::ablation::render(&rows, ""));
+    // Geomean per setting.
+    for setting in ["spin", "spin+pause", "hybrid", "park"] {
+        let vals: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.setting == setting)
+            .map(|r| r.speedup)
+            .collect();
+        println!("geomean {:<12} {:.3}", setting, geomean(vals));
+    }
+
+    common::section("A1 — SPSC queue capacity (batch of 16 CC tasks)");
+    let rows = relic_smt::bench::ablation::queue_capacity(&cfg, &[2, 4, 8, 16, 32, 64, 128]);
+    println!("{}", relic_smt::bench::ablation::render(&rows, ""));
+
+    common::section("A3 — SMT fetch policy");
+    let rows = relic_smt::bench::ablation::fetch_policy(&cfg);
+    println!("{}", relic_smt::bench::ablation::render(&rows, ""));
+
+    common::section("native SPSC queue capacity (wall-clock run_batch, this host)");
+    for cap in [8usize, 32, 128, 512] {
+        let relic = relic_smt::relic::Relic::with_config(relic_smt::relic::RelicConfig {
+            queue_capacity: cap,
+            ..Default::default()
+        });
+        let w = Workload::new("cc");
+        let sink = std::sync::atomic::AtomicU64::new(0);
+        let tasks: Vec<_> = (0..16)
+            .map(|_| {
+                let (w, sink) = (&w, &sink);
+                move || {
+                    sink.fetch_add(w.run_native(), std::sync::atomic::Ordering::Relaxed);
+                }
+            })
+            .collect();
+        common::bench(&format!("relic/run_batch16-cc/cap{cap}"), 1_000, 100, || {
+            relic.run_batch(&tasks);
+        });
+    }
+}

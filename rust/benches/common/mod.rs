@@ -1,0 +1,34 @@
+//! Shared mini-bench harness (no criterion in the offline environment):
+//! warmup + timed repetitions with mean/min/max reporting, plus the
+//! simulator-backed figure helpers every bench target uses.
+
+use std::time::Instant;
+
+/// Time `f` `iters` times after `warmup`; print a criterion-style line.
+pub fn bench<F: FnMut()>(name: &str, iters: u64, warmup: u64, mut f: F) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut best = u128::MAX;
+    let mut worst = 0u128;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        let ns = t.elapsed().as_nanos();
+        best = best.min(ns);
+        worst = worst.max(ns);
+    }
+    let total = t0.elapsed().as_nanos();
+    println!(
+        "{name:<44} {:>12.1} ns/iter (min {:>10} max {:>10}, {iters} iters)",
+        total as f64 / iters as f64,
+        best,
+        worst
+    );
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,50 @@
+//! Bench target for **Figure 1**: speedups over serial for the seven
+//! baseline frameworks across the seven paper kernels.
+//!
+//! Two sections:
+//! 1. *Simulated* (authoritative on non-SMT hosts): prints the full
+//!    matrix with the paper's reported cells beside ours.
+//! 2. *Wall-clock* mechanism microbenches: the native runtime models'
+//!    `run_pair` dispatch cost on this host (meaningful relative to
+//!    each other even without SMT).
+//!
+//! Run: `cargo bench --bench fig1_frameworks`
+
+mod common;
+
+use relic_smt::bench::{figures, Workload};
+use relic_smt::runtimes;
+use relic_smt::smtsim::CoreConfig;
+
+fn main() {
+    let cfg = CoreConfig::default();
+
+    common::section("Figure 1 (simulated SMT core) — speedup over serial");
+    let cells = figures::fig1(&cfg);
+    println!("{}", figures::render_matrix(&cells));
+    println!(
+        "{}",
+        figures::render_summary(
+            &figures::section5_geomeans(&cells),
+            "§V geomeans (with degradations)"
+        )
+    );
+
+    common::section("native runtime dispatch cost (wall-clock, this host)");
+    let w = Workload::new("cc"); // finest kernel: overhead-dominated
+    for name in runtimes::FRAMEWORK_NAMES {
+        let mut rt = runtimes::by_name(name, None).unwrap();
+        let sink = std::sync::atomic::AtomicU64::new(0);
+        common::bench(&format!("run_pair/{name}/cc"), 2_000, 200, || {
+            rt.run_pair(
+                &|| {
+                    sink.fetch_add(w.run_native(), std::sync::atomic::Ordering::Relaxed);
+                },
+                &|| {
+                    sink.fetch_add(w.run_native(), std::sync::atomic::Ordering::Relaxed);
+                },
+            );
+        });
+        std::hint::black_box(sink.load(std::sync::atomic::Ordering::Relaxed));
+    }
+}

@@ -1,0 +1,86 @@
+//! Bench target for **Figure 3**: Relic's speedups over serial on the
+//! seven paper kernels (simulated), plus wall-clock microbenches of the
+//! native Relic hot paths (submit/wait and pair dispatch).
+//!
+//! Run: `cargo bench --bench fig3_relic`
+
+mod common;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use relic_smt::bench::{figures, Workload};
+use relic_smt::relic::Relic;
+use relic_smt::smtsim::CoreConfig;
+
+fn main() {
+    let cfg = CoreConfig::default();
+
+    common::section("Figure 3 (simulated SMT core) — Relic speedup over serial");
+    let cells = figures::fig3(&cfg);
+    println!("{}", figures::render_matrix(&cells));
+
+    common::section("Relic native hot paths (wall-clock, this host)");
+    let relic = Relic::new();
+    static SINK: AtomicU64 = AtomicU64::new(0);
+    fn tiny(arg: usize) {
+        SINK.fetch_add(arg as u64, Ordering::Relaxed);
+    }
+
+    // submit+wait round trip for a trivial task (framework overhead;
+    // on 1-CPU hosts this is scheduling-quantum bound — see the
+    // submit-only bench below for the producer-side cost).
+    common::bench("relic/submit+wait/empty-task", 2_000, 100, || {
+        relic.submit(tiny, 1).expect("queue");
+        relic.wait();
+    });
+
+    // Producer-side submit cost in isolation: park the assistant, time
+    // only the 64-submission bursts (drain excluded from the clock).
+    {
+        let rounds = 20_000u32;
+        relic.sleep_hint();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let mut timed = std::time::Duration::ZERO;
+        for _ in 0..rounds {
+            let t0 = std::time::Instant::now();
+            for i in 0..64 {
+                relic.submit(tiny, i).expect("queue");
+            }
+            timed += t0.elapsed();
+            relic.wake_up_hint();
+            relic.wait();
+            relic.sleep_hint();
+        }
+        relic.wake_up_hint();
+        println!(
+            "{:<44} {:>12.2} ns/submit (assistant parked, {} bursts of 64)",
+            "relic/submit-only",
+            timed.as_nanos() as f64 / (rounds as f64 * 64.0),
+            rounds
+        );
+    }
+
+    // pair() with both sides doing one CC instance (the paper protocol).
+    let w = Workload::new("cc");
+    let sink = AtomicU64::new(0);
+    common::bench("relic/pair/cc-instance-each", 2_000, 200, || {
+        let task = || {
+            sink.fetch_add(w.run_native(), Ordering::Relaxed);
+        };
+        relic.pair(&task, &task);
+    });
+
+    // run_batch amortization: 64 tiny closures per call.
+    let tasks: Vec<_> = (0..64usize)
+        .map(|i| {
+            let sink = &sink;
+            move || {
+                sink.fetch_add(i as u64, Ordering::Relaxed);
+            }
+        })
+        .collect();
+    common::bench("relic/run_batch/64-tiny-tasks", 2_000, 200, || {
+        relic.run_batch(&tasks);
+    });
+    std::hint::black_box(sink.load(Ordering::Relaxed));
+}

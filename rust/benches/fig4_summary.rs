@@ -1,0 +1,44 @@
+//! Bench target for **Figure 4** (average speedups without negative
+//! outliers) and the §V in-text geomeans — the paper's headline
+//! comparison, with the paper's numbers printed beside ours.
+//!
+//! Run: `cargo bench --bench fig4_summary`
+
+mod common;
+
+use relic_smt::bench::figures;
+use relic_smt::smtsim::CoreConfig;
+
+fn main() {
+    let cfg = CoreConfig::default();
+    let f1 = figures::fig1(&cfg);
+    let f3 = figures::fig3(&cfg);
+
+    common::section("Figure 4 — average speedup w/o negative outliers");
+    let rows = figures::fig4(&f1, &f3);
+    println!("{}", figures::render_summary(&rows, ""));
+
+    common::section("§V geomeans (with degradations)");
+    println!("{}", figures::render_summary(&figures::section5_geomeans(&f1), ""));
+
+    common::section("headline: Relic's relative gain over each baseline");
+    let relic = rows.iter().find(|r| r.runtime == "relic").unwrap().value;
+    let paper_gain = [
+        ("llvm-openmp", 19.1),
+        ("gnu-openmp", 31.0),
+        ("intel-openmp", 20.2),
+        ("x-openmp", 33.2),
+        ("onetbb", 30.1),
+        ("taskflow", 23.0),
+        ("opencilk", 21.4),
+    ];
+    println!("{:<16}{:>10}{:>12}", "baseline", "ours %", "paper %");
+    for (name, paper) in paper_gain {
+        let ours = rows
+            .iter()
+            .find(|r| r.runtime == name)
+            .map(|r| (relic / r.value - 1.0) * 100.0)
+            .unwrap();
+        println!("{name:<16}{ours:>10.1}{paper:>12.1}");
+    }
+}

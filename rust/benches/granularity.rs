@@ -1,0 +1,27 @@
+//! Bench target for the **§IV in-text granularity table**: serial task
+//! time of each benchmark kernel — simulated (calibrated) µs beside the
+//! paper's values, plus native wall-clock µs on this host for
+//! reference.
+//!
+//! Run: `cargo bench --bench granularity`
+
+mod common;
+
+use relic_smt::bench::{figures, Workload};
+use relic_smt::smtsim::CoreConfig;
+
+fn main() {
+    let cfg = CoreConfig::default();
+
+    common::section("§IV serial task granularities — simulated vs paper");
+    println!("{}", figures::render_granularity(&figures::granularity(&cfg)));
+
+    common::section("native kernels on this host (wall-clock, not the paper's testbed)");
+    for w in Workload::all() {
+        let sink = std::sync::atomic::AtomicU64::new(0);
+        common::bench(&format!("native/{}", w.name), 20_000, 2_000, || {
+            sink.fetch_add(w.run_native(), std::sync::atomic::Ordering::Relaxed);
+        });
+        std::hint::black_box(sink.load(std::sync::atomic::Ordering::Relaxed));
+    }
+}

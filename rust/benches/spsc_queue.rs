@@ -1,0 +1,84 @@
+//! Microbench of Relic's core data structure: the lock-free SPSC queue.
+//! Single-threaded push/pop throughput, ping-pong across two threads,
+//! and a comparison against a mutex-guarded deque (the GNU-style team
+//! queue) — quantifying why the paper builds on an SPSC ring.
+//!
+//! Run: `cargo bench --bench spsc_queue`
+
+mod common;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use relic_smt::relic::SpscQueue;
+use relic_smt::runtimes::common::TeamQueue;
+
+fn main() {
+    common::section("single-threaded push+pop (queue mechanics only)");
+    // Batches of 64 per timed iteration to push clock/preemption noise
+    // below the signal.
+    let q: SpscQueue<u64> = SpscQueue::new(128);
+    common::bench("spsc/push+pop-x64", 100_000, 2_000, || {
+        for i in 0..64u64 {
+            let _ = q.push(i);
+            std::hint::black_box(q.pop());
+        }
+    });
+
+    let tq: TeamQueue<u64> = TeamQueue::new();
+    common::bench("mutex-deque/push+pop-x64", 20_000, 1_000, || {
+        for i in 0..64u64 {
+            tq.push(i);
+            std::hint::black_box(tq.try_pop());
+        }
+    });
+
+    // On 1-CPU hosts the threads time-share; yield instead of spinning
+    // so the bench completes quickly (absolute numbers are only
+    // meaningful on multi-core/SMT hosts).
+    common::section("cross-thread ping-pong (100k items)");
+    for &cap in &[16usize, 128, 1024] {
+        let q: Arc<SpscQueue<u64>> = Arc::new(SpscQueue::new(cap));
+        let stop = Arc::new(AtomicBool::new(false));
+        let consumer = {
+            let q = Arc::clone(&q);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut sum = 0u64;
+                while !stop.load(Ordering::Acquire) {
+                    if let Some(v) = q.pop() {
+                        sum += v;
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+                while let Some(v) = q.pop() {
+                    sum += v;
+                }
+                sum
+            })
+        };
+        let n = 100_000u64;
+        let t0 = std::time::Instant::now();
+        for i in 0..n {
+            let mut v = i;
+            loop {
+                match q.push(v) {
+                    Ok(()) => break,
+                    Err(back) => {
+                        v = back;
+                        std::thread::yield_now();
+                    }
+                }
+            }
+        }
+        stop.store(true, Ordering::Release);
+        let sum = consumer.join().unwrap();
+        let dt = t0.elapsed();
+        assert_eq!(sum, n * (n - 1) / 2);
+        println!(
+            "spsc/x-thread/cap{cap:<5} {:>10.1} ns/item ({n} items in {dt:?})",
+            dt.as_nanos() as f64 / n as f64
+        );
+    }
+}

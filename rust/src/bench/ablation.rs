@@ -1,0 +1,209 @@
+//! Ablation studies for the design choices DESIGN.md §6 calls out:
+//!
+//! * **A1 — SPSC queue capacity** (paper fixes 128): sweep 16…1024 and
+//!   measure Relic's simulated speedup; depth-1 pairs shouldn't care,
+//!   batch submission saturates small queues.
+//! * **A2 — waiting mechanism** (paper §VI-B): spin vs spin+pause vs
+//!   hybrid vs park for Relic's assistant.
+//! * **A3 — SMT fetch policy** sensitivity of the simulator itself
+//!   (round-robin vs ICOUNT).
+
+use crate::smtsim::{self, CoreConfig, FetchPolicy, PollKind};
+
+use super::workloads::Workload;
+
+/// One ablation data point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AblationRow {
+    pub setting: String,
+    pub kernel: String,
+    pub speedup: f64,
+}
+
+/// A2: sweep the assistant's waiting mechanism in the Relic model.
+///
+/// Scenario per §VI-B: the application runs a *serial phase* (only the
+/// main thread has work) before each parallel section — the idle
+/// assistant's waiting mechanism determines both how much it disturbs
+/// the serial phase (naked spinning steals issue slots) and how fast it
+/// reacts to the submit (parking pays the futex wake).
+pub fn waiting_mechanism(cfg: &CoreConfig) -> Vec<AblationRow> {
+    let variants: [(&str, PollKind); 4] = [
+        ("spin", PollKind::Spin),
+        ("spin+pause", PollKind::SpinPause),
+        ("hybrid", PollKind::HybridPark(64)),
+        ("park", PollKind::Park),
+    ];
+    // Serial main-only phase preceding the parallel section (~1 µs of
+    // ALU work at 3 uops/cycle).
+    let prelude = smtsim::Op::Compute(4000);
+    let mut rows = Vec::new();
+    for w in Workload::all() {
+        let (a, b) = (w.trace(0, cfg), w.trace(1, cfg));
+        let mut serial_prog = vec![prelude];
+        serial_prog.extend_from_slice(&a.ops);
+        serial_prog.extend_from_slice(&b.ops);
+        let serial =
+            smtsim::SmtCore::new(*cfg).run_warm(&serial_prog, &[]).cycles as f64;
+        for (name, kind) in variants {
+            let mut m = smtsim::model("relic").unwrap();
+            m.assistant_wait = kind;
+            let (mut main, assist) = smtsim::parallel_programs(&m, &a, &b);
+            main.insert(0, prelude);
+            let par = smtsim::SmtCore::new(*cfg).run_warm(&main, &assist).cycles as f64;
+            rows.push(AblationRow {
+                setting: name.to_string(),
+                kernel: w.name.to_string(),
+                speedup: serial / par,
+            });
+        }
+    }
+    rows
+}
+
+/// A1: queue capacity sweep under *batched* submission (`batch` tasks
+/// per iteration, mirroring `Relic::run_batch`): small queues force
+/// inline fallbacks, modeled as the producer executing overflow tasks.
+pub fn queue_capacity(cfg: &CoreConfig, capacities: &[usize]) -> Vec<AblationRow> {
+    // Use the finest kernel (CC) where queue effects are proportionally
+    // largest; 16 tasks per batch.
+    let w = Workload::new("cc");
+    let batch = 16usize;
+    let (a, b) = (w.trace(0, cfg), w.trace(1, cfg));
+    let m = smtsim::model("relic").unwrap();
+    let mut rows = Vec::new();
+    // Serial: all batch tasks on one context.
+    let mut serial_prog = Vec::new();
+    for i in 0..batch {
+        serial_prog.extend_from_slice(if i % 2 == 0 { &a.ops } else { &b.ops });
+    }
+    let serial = smtsim::SmtCore::new(*cfg).run_warm(&serial_prog, &[]).cycles as f64;
+    for &cap in capacities {
+        // Producer submits up to `cap` tasks (SPSC holds them), runs the
+        // overflow inline; assistant drains the queued ones.
+        let queued = batch.min(cap) / 1; // tasks the assistant executes
+        let inline = batch - queued;
+        let mut main = Vec::new();
+        let mut assist = Vec::new();
+        for _ in 0..queued {
+            main.extend_from_slice(&m.submit);
+        }
+        main.push(smtsim::Op::SetFlag(smtsim::flags::TASK_READY));
+        for i in 0..inline {
+            main.extend_from_slice(if i % 2 == 0 { &a.ops } else { &b.ops });
+        }
+        main.push(smtsim::Op::WaitFlag(smtsim::flags::TASK_DONE, m.main_wait));
+        assist.push(smtsim::Op::WaitFlag(smtsim::flags::TASK_READY, m.assistant_wait));
+        for i in 0..queued {
+            assist.extend_from_slice(&m.dispatch);
+            assist.extend_from_slice(if i % 2 == 0 { &b.ops } else { &a.ops });
+            assist.extend_from_slice(&m.complete);
+        }
+        assist.push(smtsim::Op::SetFlag(smtsim::flags::TASK_DONE));
+        let par = smtsim::SmtCore::new(*cfg).run_warm(&main, &assist).cycles as f64;
+        rows.push(AblationRow {
+            setting: format!("cap={cap}"),
+            kernel: "cc-batch16".into(),
+            speedup: serial / par,
+        });
+    }
+    rows
+}
+
+/// A3: fetch-policy sensitivity — all kernels, Relic model, RR vs ICOUNT.
+pub fn fetch_policy(cfg: &CoreConfig) -> Vec<AblationRow> {
+    let mut rows = Vec::new();
+    for policy in [FetchPolicy::RoundRobin, FetchPolicy::Icount] {
+        let mut c = *cfg;
+        c.fetch = policy;
+        for w in Workload::all() {
+            let (a, b) = (w.trace(0, &c), w.trace(1, &c));
+            rows.push(AblationRow {
+                setting: format!("{policy:?}"),
+                kernel: w.name.to_string(),
+                speedup: smtsim::speedup("relic", &a, &b, &c),
+            });
+        }
+    }
+    rows
+}
+
+/// Render ablation rows grouped by setting.
+pub fn render(rows: &[AblationRow], label: &str) -> String {
+    let mut out = format!("{label}\n{:<14}{:<12}{:>10}\n", "setting", "kernel", "speedup");
+    for r in rows {
+        out += &format!("{:<14}{:<12}{:>10.3}\n", r.setting, r.kernel, r.speedup);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pause_beats_naked_spin_and_park_on_fine_tasks() {
+        // The paper's §VI-B design argument, quantified: for µs tasks the
+        // assistant should spin with pause — naked spin steals sibling
+        // slots, parking pays wake latency.
+        let cfg = CoreConfig::default();
+        let rows = waiting_mechanism(&cfg);
+        let get = |setting: &str, kernel: &str| {
+            rows.iter()
+                .find(|r| r.setting == setting && r.kernel == kernel)
+                .unwrap()
+                .speedup
+        };
+        for kernel in ["cc", "bfs", "tc"] {
+            let pause = get("spin+pause", kernel);
+            let spin = get("spin", kernel);
+            let park = get("park", kernel);
+            assert!(pause >= spin, "{kernel}: pause {pause} < spin {spin}");
+            assert!(pause > park, "{kernel}: pause {pause} <= park {park}");
+        }
+    }
+
+    #[test]
+    fn queue_capacity_sweep_peaks_at_balance() {
+        // run_batch pushes every queued task to the assistant, so the
+        // best capacity for a batch of 16 is ~8 (half the work runs
+        // inline on the producer, half on the assistant); tiny queues
+        // leave the assistant starved, huge queues leave the *producer*
+        // idle — a design insight the paper's depth-1 usage never hits.
+        let cfg = CoreConfig::default();
+        let rows = queue_capacity(&cfg, &[2, 4, 8, 16, 32]);
+        let get = |cap: usize| {
+            rows.iter()
+                .find(|r| r.setting == format!("cap={cap}"))
+                .unwrap()
+                .speedup
+        };
+        assert!(get(4) > get(2), "4 {:.3} !> 2 {:.3}", get(4), get(2));
+        assert!(get(8) > get(4), "8 {:.3} !> 4 {:.3}", get(8), get(4));
+        assert!(get(8) > get(16), "8 {:.3} !> 16 {:.3}", get(8), get(16));
+        // Saturated beyond the batch size: 16 and 32 identical.
+        assert!((get(16) - get(32)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fetch_policy_effect_is_modest() {
+        let cfg = CoreConfig::default();
+        let rows = fetch_policy(&cfg);
+        for kernel in super::super::workloads::KERNEL_NAMES {
+            let rr = rows
+                .iter()
+                .find(|r| r.setting.contains("RoundRobin") && r.kernel == kernel)
+                .unwrap()
+                .speedup;
+            let ic = rows
+                .iter()
+                .find(|r| r.setting.contains("Icount") && r.kernel == kernel)
+                .unwrap()
+                .speedup;
+            assert!(
+                (rr - ic).abs() / rr < 0.25,
+                "{kernel}: RR {rr} vs ICOUNT {ic} diverge wildly"
+            );
+        }
+    }
+}

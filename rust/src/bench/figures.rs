@@ -1,0 +1,367 @@
+//! Figure regeneration: every table and figure in the paper's
+//! evaluation (DESIGN.md §6).
+//!
+//! * [`fig1`] — speedups over serial, 7 frameworks × 7 kernels (Fig. 1);
+//! * [`fig3`] — Relic's speedups (Fig. 3);
+//! * [`fig4`] — average speedups without negative outliers (Fig. 4);
+//! * [`granularity`] — the §IV in-text serial task-time table;
+//! * [`section5_geomeans`] — the §V in-text geomeans (with degradations).
+//!
+//! Each function returns structured rows; [`render_table`] pretty-prints
+//! them with the paper's reference values beside ours.
+
+use crate::smtsim::{self, CoreConfig, Trace};
+
+use super::harness::geomean;
+use super::workloads::{paper_task_micros, Workload, KERNEL_NAMES};
+
+/// Framework order used in the paper's figures.
+pub const FIG_RUNTIMES: [&str; 7] = [
+    "llvm-openmp",
+    "gnu-openmp",
+    "intel-openmp",
+    "x-openmp",
+    "onetbb",
+    "taskflow",
+    "opencilk",
+];
+
+/// One speedup measurement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cell {
+    pub kernel: String,
+    pub runtime: String,
+    pub speedup: f64,
+    /// Paper's value for this cell, where the text reports one.
+    pub paper: Option<f64>,
+}
+
+/// Paper-reported Fig. 1 cells (§V and §VII name the per-kernel bests
+/// and a few specific values).
+pub fn paper_fig1(kernel: &str, runtime: &str) -> Option<f64> {
+    match (kernel, runtime) {
+        ("bc", "taskflow") => Some(1.057),
+        ("cc", "llvm-openmp") => Some(1.094),
+        ("pr", "gnu-openmp") => Some(1.665),
+        ("sssp", "taskflow") => Some(1.557),
+        ("tc", "llvm-openmp") => Some(1.514),
+        ("json", "opencilk") => Some(1.235),
+        _ => None,
+    }
+}
+
+/// Paper-reported Fig. 3 values (Relic): §VII gives BFS and the
+/// per-kernel improvements over the best baseline.
+pub fn paper_fig3(kernel: &str) -> Option<f64> {
+    match kernel {
+        "bc" => Some(1.057 + 0.304),
+        "cc" => Some(1.094 + 0.301),
+        "pr" => Some(1.665 + 0.143),
+        "sssp" => Some(1.557 + 0.213),
+        "json" => Some(1.235 + 0.086),
+        "bfs" => Some(1.056),
+        _ => None, // TC: "lower than LLVM's 1.514", no exact value
+    }
+}
+
+/// Paper Fig. 4 (average speedup w/o negative outliers): Relic = 1.421
+/// (§VII 42.1%); baselines derived from the reported relative gains.
+pub fn paper_fig4(runtime: &str) -> Option<f64> {
+    match runtime {
+        "relic" => Some(1.421),
+        "llvm-openmp" => Some(1.421 / 1.191),
+        "gnu-openmp" => Some(1.421 / 1.310),
+        "intel-openmp" => Some(1.421 / 1.202),
+        "x-openmp" => Some(1.421 / 1.332),
+        "onetbb" => Some(1.421 / 1.301),
+        "taskflow" => Some(1.421 / 1.230),
+        "opencilk" => Some(1.421 / 1.214),
+        _ => None,
+    }
+}
+
+/// Paper §V geometric means *including* degradations.
+pub fn paper_section5_geomean(runtime: &str) -> Option<f64> {
+    match runtime {
+        "llvm-openmp" => Some(1.139),
+        "gnu-openmp" => Some(1.0 - 0.177),
+        "intel-openmp" => Some(1.113),
+        "x-openmp" => Some(1.0 - 0.067),
+        "onetbb" => Some(1.0 - 0.019),
+        "taskflow" => Some(1.118),
+        "opencilk" => Some(1.126),
+        _ => None,
+    }
+}
+
+/// Calibrated trace pair for every kernel (memoize: trace calibration
+/// runs the simulator repeatedly).
+pub fn all_trace_pairs(cfg: &CoreConfig) -> Vec<(String, Trace, Trace)> {
+    Workload::all()
+        .into_iter()
+        .map(|w| {
+            let a = w.trace(0, cfg);
+            let b = w.trace(1, cfg);
+            (w.name.to_string(), a, b)
+        })
+        .collect()
+}
+
+/// Fig. 1: the seven baseline frameworks across the seven kernels.
+pub fn fig1(cfg: &CoreConfig) -> Vec<Cell> {
+    let pairs = all_trace_pairs(cfg);
+    let mut cells = Vec::new();
+    for rt in FIG_RUNTIMES {
+        for (kernel, a, b) in &pairs {
+            cells.push(Cell {
+                kernel: kernel.clone(),
+                runtime: rt.to_string(),
+                speedup: smtsim::speedup(rt, a, b, cfg),
+                paper: paper_fig1(kernel, rt),
+            });
+        }
+    }
+    cells
+}
+
+/// Fig. 3: Relic across the seven kernels.
+pub fn fig3(cfg: &CoreConfig) -> Vec<Cell> {
+    all_trace_pairs(cfg)
+        .into_iter()
+        .map(|(kernel, a, b)| Cell {
+            speedup: smtsim::speedup("relic", &a, &b, cfg),
+            paper: paper_fig3(&kernel),
+            kernel,
+            runtime: "relic".into(),
+        })
+        .collect()
+}
+
+/// One Fig. 4 row: runtime + average speedup without negative outliers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SummaryRow {
+    pub runtime: String,
+    pub value: f64,
+    pub paper: Option<f64>,
+}
+
+/// Fig. 4: per-framework geomean with degradations replaced by the
+/// serial baseline (the paper's "without negative outliers" rule:
+/// regressing kernels would be reverted to serial in production).
+pub fn fig4(fig1_cells: &[Cell], fig3_cells: &[Cell]) -> Vec<SummaryRow> {
+    let mut rows = Vec::new();
+    for rt in FIG_RUNTIMES.iter().copied().chain(["relic"]) {
+        let vals: Vec<f64> = fig1_cells
+            .iter()
+            .chain(fig3_cells)
+            .filter(|c| c.runtime == rt)
+            .map(|c| c.speedup.max(1.0))
+            .collect();
+        assert_eq!(vals.len(), KERNEL_NAMES.len(), "{rt}");
+        rows.push(SummaryRow {
+            runtime: rt.to_string(),
+            value: geomean(vals),
+            paper: paper_fig4(rt),
+        });
+    }
+    rows
+}
+
+/// §V: geomeans including degradations (the in-text numbers).
+pub fn section5_geomeans(fig1_cells: &[Cell]) -> Vec<SummaryRow> {
+    FIG_RUNTIMES
+        .iter()
+        .map(|rt| {
+            let vals: Vec<f64> = fig1_cells
+                .iter()
+                .filter(|c| c.runtime == *rt)
+                .map(|c| c.speedup)
+                .collect();
+            SummaryRow {
+                runtime: rt.to_string(),
+                value: geomean(vals),
+                paper: paper_section5_geomean(rt),
+            }
+        })
+        .collect()
+}
+
+/// §IV granularity table row: kernel, simulated solo µs, paper µs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GranularityRow {
+    pub kernel: String,
+    pub micros: f64,
+    pub paper_micros: f64,
+}
+
+/// The §IV serial task-granularity table (simulated, calibrated).
+pub fn granularity(cfg: &CoreConfig) -> Vec<GranularityRow> {
+    Workload::all()
+        .into_iter()
+        .map(|w| {
+            let t = w.trace(0, cfg);
+            let cycles = super::workloads::solo_cycles(&t, cfg);
+            GranularityRow {
+                kernel: w.name.to_string(),
+                micros: cycles as f64 / (cfg.freq_ghz * 1000.0),
+                paper_micros: paper_task_micros(w.name),
+            }
+        })
+        .collect()
+}
+
+/// Render speedup cells as a kernel × runtime text matrix.
+pub fn render_matrix(cells: &[Cell]) -> String {
+    let runtimes: Vec<&str> = {
+        let mut seen = Vec::new();
+        for c in cells {
+            if !seen.contains(&c.runtime.as_str()) {
+                seen.push(&c.runtime);
+            }
+        }
+        seen
+    };
+    let mut out = format!("{:<8}", "kernel");
+    for rt in &runtimes {
+        out += &format!("{rt:>14}");
+    }
+    out += "\n";
+    for kernel in KERNEL_NAMES {
+        out += &format!("{kernel:<8}");
+        for rt in &runtimes {
+            let cell = cells
+                .iter()
+                .find(|c| c.kernel == kernel && c.runtime == *rt);
+            match cell {
+                Some(c) => {
+                    let paper = c
+                        .paper
+                        .map(|p| format!("({p:.2})"))
+                        .unwrap_or_default();
+                    out += &format!("{:>14}", format!("{:.3}{paper}", c.speedup));
+                }
+                None => out += &format!("{:>14}", "-"),
+            }
+        }
+        out += "\n";
+    }
+    out += "(parenthesized = paper-reported value for that cell)\n";
+    out
+}
+
+/// Render Fig. 4 / §V summary rows.
+pub fn render_summary(rows: &[SummaryRow], label: &str) -> String {
+    let mut out = format!("{label}\n{:<14}{:>10}{:>12}\n", "runtime", "ours", "paper");
+    for r in rows {
+        let paper = r.paper.map(|p| format!("{p:.3}")).unwrap_or_else(|| "-".into());
+        out += &format!("{:<14}{:>10.3}{:>12}\n", r.runtime, r.value, paper);
+    }
+    out
+}
+
+/// Render the granularity table.
+pub fn render_granularity(rows: &[GranularityRow]) -> String {
+    let mut out = format!("{:<8}{:>12}{:>12}\n", "kernel", "sim µs", "paper µs");
+    for r in rows {
+        out += &format!("{:<8}{:>12.2}{:>12.2}\n", r.kernel, r.micros, r.paper_micros);
+    }
+    out
+}
+
+/// Serialize cells to JSON for plotting.
+pub fn cells_to_json(cells: &[Cell]) -> String {
+    use crate::json::Value;
+    let arr = cells
+        .iter()
+        .map(|c| {
+            Value::Object(vec![
+                ("kernel".into(), Value::String(c.kernel.clone())),
+                ("runtime".into(), Value::String(c.runtime.clone())),
+                ("speedup".into(), Value::Number(c.speedup)),
+                (
+                    "paper".into(),
+                    c.paper.map(Value::Number).unwrap_or(Value::Null),
+                ),
+            ])
+        })
+        .collect();
+    crate::json::to_string(&Value::Array(arr))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> CoreConfig {
+        CoreConfig::default()
+    }
+
+    #[test]
+    fn fig4_uses_outlier_rule() {
+        let f1 = vec![
+            Cell { kernel: "bc".into(), runtime: "llvm-openmp".into(), speedup: 0.5, paper: None },
+        ];
+        // Build full synthetic sets for one runtime + relic.
+        let mut f1_full = Vec::new();
+        let mut f3_full = Vec::new();
+        for k in KERNEL_NAMES {
+            for rt in FIG_RUNTIMES {
+                f1_full.push(Cell {
+                    kernel: k.into(),
+                    runtime: rt.into(),
+                    speedup: if rt == "llvm-openmp" { 0.5 } else { 1.2 },
+                    paper: None,
+                });
+            }
+            f3_full.push(Cell {
+                kernel: k.into(),
+                runtime: "relic".into(),
+                speedup: 1.5,
+                paper: None,
+            });
+        }
+        let rows = fig4(&f1_full, &f3_full);
+        let llvm = rows.iter().find(|r| r.runtime == "llvm-openmp").unwrap();
+        // All-degrading runtime floors at 1.0, not 0.5.
+        assert!((llvm.value - 1.0).abs() < 1e-12);
+        let relic = rows.iter().find(|r| r.runtime == "relic").unwrap();
+        assert!((relic.value - 1.5).abs() < 1e-12);
+        drop(f1);
+    }
+
+    #[test]
+    fn paper_reference_values_sane() {
+        assert!(paper_fig4("relic").unwrap() > paper_fig4("llvm-openmp").unwrap());
+        assert!(paper_section5_geomean("gnu-openmp").unwrap() < 1.0);
+        assert_eq!(paper_fig1("pr", "gnu-openmp"), Some(1.665));
+    }
+
+    #[test]
+    fn granularity_rows_cover_all_kernels() {
+        let rows = granularity(&cfg());
+        assert_eq!(rows.len(), KERNEL_NAMES.len());
+        for r in &rows {
+            // Calibration holds each to ±7% of the paper's time.
+            assert!(
+                (r.micros - r.paper_micros).abs() / r.paper_micros < 0.08,
+                "{}: {} vs {}",
+                r.kernel,
+                r.micros,
+                r.paper_micros
+            );
+        }
+    }
+
+    #[test]
+    fn render_matrix_contains_all_kernels() {
+        let cells = vec![Cell {
+            kernel: "bc".into(),
+            runtime: "relic".into(),
+            speedup: 1.5,
+            paper: Some(1.361),
+        }];
+        let s = render_matrix(&cells);
+        assert!(s.contains("bc"));
+        assert!(s.contains("1.500(1.36)"));
+    }
+}

@@ -1,0 +1,120 @@
+//! Wall-clock measurement harness (the paper's protocol: repeat the
+//! two-instance experiment 10^5 times and average).
+//!
+//! On hosts with a real SMT pair this reproduces the paper's actual
+//! methodology; on the 1-CPU CI host the numbers are not meaningful
+//! (DESIGN.md §2) and sim mode is authoritative — `repro` warns when
+//! pinning is unavailable.
+
+use std::time::Instant;
+
+use crate::runtimes::TaskRuntime;
+
+use super::workloads::Workload;
+
+/// Summary statistics over repeated timed iterations.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stats {
+    pub iterations: u64,
+    pub mean_ns: f64,
+    pub min_ns: u64,
+    pub max_ns: u64,
+}
+
+/// Time `f` over `iters` iterations (after `warmup` discarded ones),
+/// timing the whole block and dividing — matching the paper's
+/// "average over 10^5 iterations" (per-iteration clocking would distort
+/// sub-µs tasks).
+pub fn measure<F: FnMut()>(iters: u64, warmup: u64, mut f: F) -> Stats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    // Block timing for the mean…
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let total = t0.elapsed().as_nanos() as u64;
+    // …plus a short sampled pass for min/max (diagnostic only).
+    let sample = iters.min(256);
+    let (mut min_ns, mut max_ns) = (u64::MAX, 0u64);
+    for _ in 0..sample {
+        let t = Instant::now();
+        f();
+        let ns = t.elapsed().as_nanos() as u64;
+        min_ns = min_ns.min(ns);
+        max_ns = max_ns.max(ns);
+    }
+    Stats { iterations: iters, mean_ns: total as f64 / iters as f64, min_ns, max_ns }
+}
+
+/// Wall-clock speedup of `runtime` over serial for one workload, per
+/// the paper's two-instance protocol.
+pub fn wallclock_speedup(
+    runtime: &mut dyn TaskRuntime,
+    workload: &Workload,
+    iters: u64,
+    warmup: u64,
+) -> f64 {
+    let sink = std::sync::atomic::AtomicU64::new(0);
+    let task = || {
+        sink.fetch_add(workload.run_native(), std::sync::atomic::Ordering::Relaxed);
+    };
+    // Serial baseline: both instances on the calling thread.
+    let serial = measure(iters, warmup, || {
+        task();
+        task();
+    });
+    // Parallel: one instance per logical thread via the runtime.
+    let parallel = measure(iters, warmup, || {
+        runtime.run_pair(&task, &task);
+    });
+    std::hint::black_box(sink.load(std::sync::atomic::Ordering::Relaxed));
+    serial.mean_ns / parallel.mean_ns
+}
+
+/// Geometric mean.
+pub fn geomean(values: impl IntoIterator<Item = f64>) -> f64 {
+    let (mut log_sum, mut n) = (0.0f64, 0u32);
+    for v in values {
+        assert!(v > 0.0, "geomean needs positive values");
+        log_sum += v.ln();
+        n += 1;
+    }
+    if n == 0 {
+        return 1.0;
+    }
+    (log_sum / n as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iterations() {
+        let mut n = 0u64;
+        let s = measure(100, 10, || n += 1);
+        assert_eq!(s.iterations, 100);
+        assert!(n >= 110); // warmup + timed + sampled
+        assert!(s.mean_ns >= 0.0);
+        assert!(s.min_ns <= s.max_ns);
+    }
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean([2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert!((geomean([1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(geomean(std::iter::empty()), 1.0);
+    }
+
+    #[test]
+    fn wallclock_speedup_runs_serial_runtime() {
+        // With the serial "runtime", speedup must be ~1 (same work).
+        let mut rt = crate::runtimes::serial::Serial;
+        let w = Workload::new("cc");
+        let s = wallclock_speedup(&mut rt, &w, 50, 5);
+        assert!(s > 0.3 && s < 3.0, "serial-vs-serial speedup {s} far from 1");
+    }
+}

@@ -1,0 +1,14 @@
+//! The experiment harness: the paper's benchmark workloads
+//! ([`workloads`]), wall-clock measurement ([`harness`]), and figure
+//! regeneration ([`figures`]) in simulator and wall-clock modes.
+
+pub mod ablation;
+pub mod figures;
+pub mod harness;
+pub mod svg;
+pub mod sweep;
+pub mod workloads;
+
+pub use figures::{fig1, fig3, fig4, granularity, section5_geomeans, Cell, SummaryRow};
+pub use harness::{geomean, measure, wallclock_speedup, Stats};
+pub use workloads::{calibrated_trace, paper_task_micros, solo_cycles, Workload, KERNEL_NAMES};

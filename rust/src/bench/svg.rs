@@ -1,0 +1,190 @@
+//! SVG bar-chart rendering for the paper's figures — `repro fig1 --out
+//! results` emits `fig1.svg`/`fig3.svg`/`fig4.svg` in the visual style
+//! of the paper (grouped bars of speedup-over-serial, unit line marked).
+
+use super::figures::{Cell, SummaryRow};
+
+/// Chart geometry.
+const BAR_W: f64 = 14.0;
+const GROUP_GAP: f64 = 18.0;
+const PLOT_H: f64 = 260.0;
+const MARGIN_L: f64 = 56.0;
+const MARGIN_TOP: f64 = 30.0;
+const MARGIN_BOT: f64 = 70.0;
+
+/// Color palette (one per runtime, stable order).
+const COLORS: [&str; 8] = [
+    "#4e79a7", "#f28e2b", "#e15759", "#76b7b2", "#59a14f", "#edc948", "#b07aa1",
+    "#1b9e77",
+];
+
+fn esc(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+/// Render grouped bars: kernels on the x-axis, one bar per runtime.
+pub fn grouped_bars(title: &str, cells: &[Cell]) -> String {
+    let kernels: Vec<&str> = {
+        let mut seen = Vec::new();
+        for c in cells {
+            if !seen.contains(&c.kernel.as_str()) {
+                seen.push(&c.kernel);
+            }
+        }
+        seen
+    };
+    let runtimes: Vec<&str> = {
+        let mut seen = Vec::new();
+        for c in cells {
+            if !seen.contains(&c.runtime.as_str()) {
+                seen.push(&c.runtime);
+            }
+        }
+        seen
+    };
+    let max_v = cells.iter().map(|c| c.speedup).fold(2.0_f64, f64::max) * 1.05;
+    let group_w = runtimes.len() as f64 * BAR_W + GROUP_GAP;
+    let width = MARGIN_L + kernels.len() as f64 * group_w + 160.0; // legend space
+    let height = MARGIN_TOP + PLOT_H + MARGIN_BOT;
+    let y_of = |v: f64| MARGIN_TOP + PLOT_H * (1.0 - v / max_v);
+
+    let mut svg = format!(
+        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{width:.0}" height="{height:.0}" font-family="sans-serif" font-size="11">"#
+    );
+    svg += &format!(
+        r#"<text x="{:.0}" y="16" font-size="13" font-weight="bold">{}</text>"#,
+        MARGIN_L,
+        esc(title)
+    );
+    // Y axis + gridlines at 0.5 steps.
+    let mut v = 0.0;
+    while v <= max_v {
+        let y = y_of(v);
+        let stroke = if (v - 1.0).abs() < 1e-9 { "#888" } else { "#ddd" };
+        svg += &format!(
+            r#"<line x1="{MARGIN_L:.0}" y1="{y:.1}" x2="{:.0}" y2="{y:.1}" stroke="{stroke}"/>"#,
+            MARGIN_L + kernels.len() as f64 * group_w
+        );
+        svg += &format!(
+            r#"<text x="{:.0}" y="{:.1}" text-anchor="end">{v:.1}</text>"#,
+            MARGIN_L - 6.0,
+            y + 4.0
+        );
+        v += 0.5;
+    }
+    // Bars.
+    for (ki, kernel) in kernels.iter().enumerate() {
+        let gx = MARGIN_L + ki as f64 * group_w;
+        for (ri, rt) in runtimes.iter().enumerate() {
+            if let Some(c) = cells.iter().find(|c| c.kernel == *kernel && c.runtime == *rt)
+            {
+                let x = gx + ri as f64 * BAR_W;
+                let y = y_of(c.speedup);
+                let h = MARGIN_TOP + PLOT_H - y;
+                let color = COLORS[ri % COLORS.len()];
+                svg += &format!(
+                    r#"<rect x="{x:.1}" y="{y:.1}" width="{:.1}" height="{h:.1}" fill="{color}"><title>{}/{}: {:.3}</title></rect>"#,
+                    BAR_W - 2.0,
+                    esc(kernel),
+                    esc(rt),
+                    c.speedup
+                );
+                // Paper-reported marker: a black tick at the paper value.
+                if let Some(p) = c.paper {
+                    let py = y_of(p);
+                    svg += &format!(
+                        r##"<line x1="{x:.1}" y1="{py:.1}" x2="{:.1}" y2="{py:.1}" stroke="#000" stroke-width="2"/>"##,
+                        x + BAR_W - 2.0
+                    );
+                }
+            }
+        }
+        svg += &format!(
+            r#"<text x="{:.1}" y="{:.0}" text-anchor="middle">{}</text>"#,
+            gx + (runtimes.len() as f64 * BAR_W) / 2.0,
+            MARGIN_TOP + PLOT_H + 16.0,
+            esc(kernel)
+        );
+    }
+    // Legend.
+    let lx = MARGIN_L + kernels.len() as f64 * group_w + 12.0;
+    for (ri, rt) in runtimes.iter().enumerate() {
+        let y = MARGIN_TOP + ri as f64 * 16.0;
+        svg += &format!(
+            r#"<rect x="{lx:.0}" y="{y:.0}" width="12" height="12" fill="{}"/>"#,
+            COLORS[ri % COLORS.len()]
+        );
+        svg += &format!(
+            r#"<text x="{:.0}" y="{:.0}">{}</text>"#,
+            lx + 16.0,
+            y + 10.0,
+            esc(rt)
+        );
+    }
+    svg += &format!(
+        r##"<text x="{lx:.0}" y="{:.0}" fill="#444">black tick = paper value</text>"##,
+        MARGIN_TOP + runtimes.len() as f64 * 16.0 + 16.0
+    );
+    svg += "</svg>\n";
+    svg
+}
+
+/// Render Fig. 4-style summary bars (one bar per runtime).
+pub fn summary_bars(title: &str, rows: &[SummaryRow]) -> String {
+    let cells: Vec<Cell> = rows
+        .iter()
+        .map(|r| Cell {
+            kernel: "average".into(),
+            runtime: r.runtime.clone(),
+            speedup: r.value,
+            paper: r.paper,
+        })
+        .collect();
+    grouped_bars(title, &cells)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(k: &str, r: &str, s: f64, p: Option<f64>) -> Cell {
+        Cell { kernel: k.into(), runtime: r.into(), speedup: s, paper: p }
+    }
+
+    #[test]
+    fn renders_valid_svg_with_bars_and_ticks() {
+        let cells = vec![
+            cell("bfs", "relic", 1.3, Some(1.06)),
+            cell("bfs", "llvm-openmp", 1.2, None),
+            cell("pr", "relic", 1.9, Some(1.81)),
+            cell("pr", "llvm-openmp", 1.9, None),
+        ];
+        let svg = grouped_bars("Figure 3", &cells);
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>\n"));
+        assert_eq!(svg.matches("<rect").count(), 4 + 2, "4 bars + 2 legend swatches");
+        assert_eq!(svg.matches("stroke-width=\"2\"").count(), 2, "2 paper ticks");
+        assert!(svg.contains("Figure 3"));
+        assert!(svg.contains("relic"));
+    }
+
+    #[test]
+    fn escapes_markup_in_labels() {
+        let cells = vec![cell("a<b", "x&y", 1.0, None)];
+        let svg = grouped_bars("t", &cells);
+        assert!(!svg.contains("a<b"));
+        assert!(svg.contains("a&lt;b"));
+        assert!(svg.contains("x&amp;y"));
+    }
+
+    #[test]
+    fn summary_bars_from_rows() {
+        let rows = vec![
+            SummaryRow { runtime: "relic".into(), value: 1.5, paper: Some(1.42) },
+            SummaryRow { runtime: "gnu-openmp".into(), value: 1.1, paper: Some(1.09) },
+        ];
+        let svg = summary_bars("Figure 4", &rows);
+        assert!(svg.contains("Figure 4"));
+        assert!(svg.matches("<rect").count() >= 2);
+    }
+}

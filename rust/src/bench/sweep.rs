@@ -1,0 +1,146 @@
+//! Granularity sweep: the experiment the paper implies but never shows —
+//! how each runtime's speedup responds to *task size*, holding the
+//! workload shape constant.
+//!
+//! The paper evaluates seven kernels at fixed (tiny) sizes; this sweep
+//! varies a single kernel's trace length from ~0.25 µs to ~16 µs and
+//! plots speedup vs granularity per runtime. It makes the crossovers
+//! explicit: every parking runtime has a task size below which it
+//! degrades (its wake latency), every spinning runtime converges to the
+//! co-run ceiling, and Relic's advantage concentrates in the sub-2 µs
+//! regime the paper targets.
+
+use crate::smtsim::{self, CoreConfig, Trace};
+
+use super::workloads::{calibrated_trace, Workload};
+
+/// One sweep data point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepPoint {
+    pub runtime: String,
+    pub task_micros: f64,
+    pub speedup: f64,
+}
+
+/// Default sweep sizes in microseconds.
+pub const DEFAULT_MICROS: [f64; 7] = [0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0];
+
+/// Sweep task granularity for one kernel across all runtimes + relic.
+pub fn granularity_sweep(kernel: &str, micros: &[f64], cfg: &CoreConfig) -> Vec<SweepPoint> {
+    let w = Workload::new(kernel);
+    let raw_a = w.raw_trace(0);
+    let raw_b = w.raw_trace(1);
+    let mut points = Vec::new();
+    for &us in micros {
+        let target = (us * cfg.freq_ghz * 1000.0) as u64;
+        let a: Trace = calibrated_trace(&raw_a, target, cfg);
+        let b: Trace = calibrated_trace(&raw_b, target, cfg);
+        for rt in smtsim::model_names() {
+            points.push(SweepPoint {
+                runtime: rt.to_string(),
+                task_micros: us,
+                speedup: smtsim::speedup(rt, &a, &b, cfg),
+            });
+        }
+    }
+    points
+}
+
+/// The task size where `runtime` first reaches `threshold` speedup
+/// (linear scan over the sweep; `None` if never).
+pub fn breakeven_micros(points: &[SweepPoint], runtime: &str, threshold: f64) -> Option<f64> {
+    points
+        .iter()
+        .filter(|p| p.runtime == runtime && p.speedup >= threshold)
+        .map(|p| p.task_micros)
+        .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.min(v))))
+}
+
+/// Render the sweep as a text table (runtimes x sizes).
+pub fn render(points: &[SweepPoint]) -> String {
+    let mut sizes: Vec<f64> = Vec::new();
+    for p in points {
+        if !sizes.contains(&p.task_micros) {
+            sizes.push(p.task_micros);
+        }
+    }
+    let mut out = format!("{:<14}", "runtime");
+    for s in &sizes {
+        out += &format!("{:>9}", format!("{s}µs"));
+    }
+    out += "\n";
+    for rt in smtsim::model_names() {
+        out += &format!("{rt:<14}");
+        for s in &sizes {
+            let v = points
+                .iter()
+                .find(|p| p.runtime == rt && p.task_micros == *s)
+                .map(|p| p.speedup)
+                .unwrap_or(f64::NAN);
+            out += &format!("{v:>9.3}");
+        }
+        out += "\n";
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_shows_the_granularity_story() {
+        let cfg = CoreConfig::default();
+        let points = granularity_sweep("tc", &[0.5, 4.0, 16.0], &cfg);
+        let get = |rt: &str, us: f64| {
+            points
+                .iter()
+                .find(|p| p.runtime == rt && p.task_micros == us)
+                .unwrap()
+                .speedup
+        };
+        // GNU (parking) degrades on fine tasks, recovers on coarse ones.
+        assert!(get("gnu-openmp", 0.5) < 1.0);
+        assert!(get("gnu-openmp", 16.0) > 1.2);
+        // Speedup grows with granularity for every runtime.
+        for rt in smtsim::model_names() {
+            assert!(
+                get(rt, 16.0) >= get(rt, 0.5) - 0.05,
+                "{rt}: coarse {:.3} < fine {:.3}",
+                get(rt, 16.0),
+                get(rt, 0.5)
+            );
+        }
+        // Relic dominates at the finest granularity.
+        for rt in smtsim::model_names() {
+            if rt != "relic" {
+                assert!(
+                    get("relic", 0.5) >= get(rt, 0.5) - 1e-9,
+                    "relic must win at 0.5µs vs {rt}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn breakeven_reports_first_crossing() {
+        let points = vec![
+            SweepPoint { runtime: "x".into(), task_micros: 0.5, speedup: 0.8 },
+            SweepPoint { runtime: "x".into(), task_micros: 1.0, speedup: 1.1 },
+            SweepPoint { runtime: "x".into(), task_micros: 2.0, speedup: 1.4 },
+        ];
+        assert_eq!(breakeven_micros(&points, "x", 1.0), Some(1.0));
+        assert_eq!(breakeven_micros(&points, "x", 1.5), None);
+        assert_eq!(breakeven_micros(&points, "y", 1.0), None);
+    }
+
+    #[test]
+    fn render_contains_all_runtimes() {
+        let cfg = CoreConfig::default();
+        let points = granularity_sweep("cc", &[1.0], &cfg);
+        let table = render(&points);
+        for rt in smtsim::model_names() {
+            assert!(table.contains(rt), "{rt} missing");
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! The paper's benchmark workloads (§IV): the six GAP kernels on the
+//! 32-node Kronecker input plus RapidJSON-style parsing of the widget
+//! document — as native closures (wall-clock mode) and as calibrated
+//! simulator traces (sim mode).
+//!
+//! ## Granularity calibration
+//!
+//! The paper reports each kernel's serial task time on its i7-8700
+//! (§IV: BC 1.1 µs, BFS 0.5 µs, CC 0.4 µs, PR 4.3 µs, SSSP 6.4 µs,
+//! TC 1.3 µs, JSON 1.1 µs). Trace-level simulation reproduces each
+//! kernel's *operation mix* but not its exact machine IPC, so raw trace
+//! lengths land within ~0.2–7x of those times. [`calibrated_trace`]
+//! closes the gap: it repeats (whole copies) or truncates (prefix) the
+//! recorded trace until the simulated solo runtime matches the paper's
+//! reported granularity, preserving the mix. The scale factor per
+//! kernel is recorded in EXPERIMENTS.md §Calibration.
+
+use crate::graph::{bc, bfs, cc, kronecker::paper_graph, pr, sssp, tc, CsrGraph};
+use crate::json;
+use crate::probe::Probe;
+use crate::smtsim::{self, CoreConfig, Trace, TraceProbe};
+
+/// Benchmark kernel names in the paper's figure order.
+pub const KERNEL_NAMES: [&str; 7] = ["bc", "bfs", "cc", "pr", "sssp", "tc", "json"];
+
+/// The paper's measured serial task granularities in microseconds (§IV).
+pub fn paper_task_micros(kernel: &str) -> f64 {
+    match kernel {
+        "bc" => 1.1,
+        "bfs" => 0.5,
+        "cc" => 0.4,
+        "pr" => 4.3,
+        "sssp" => 6.4,
+        "tc" => 1.3,
+        "json" => 1.1,
+        _ => panic!("unknown kernel {kernel}"),
+    }
+}
+
+/// One benchmark workload: can run natively (with a checksum) and can
+/// record its operation trace.
+pub struct Workload {
+    pub name: &'static str,
+    graph: CsrGraph,
+    json_doc: &'static [u8],
+}
+
+impl Workload {
+    /// Instantiate a paper workload by name.
+    pub fn new(name: &str) -> Self {
+        let name = KERNEL_NAMES
+            .iter()
+            .find(|k| **k == name)
+            .unwrap_or_else(|| panic!("unknown kernel {name}"));
+        Workload { name, graph: paper_graph(), json_doc: json::WIDGET }
+    }
+
+    /// All seven paper workloads.
+    pub fn all() -> Vec<Workload> {
+        KERNEL_NAMES.iter().map(|k| Workload::new(k)).collect()
+    }
+
+    /// Run one task instance natively, returning a work checksum (the
+    /// value also defends against dead-code elimination in benches).
+    pub fn run_native(&self) -> u64 {
+        self.run_probed(&mut crate::probe::NoProbe)
+    }
+
+    /// Run one task instance through a probe (trace recording or no-op).
+    pub fn run_probed<P: Probe>(&self, probe: &mut P) -> u64 {
+        match self.name {
+            "bc" => bc::checksum(&bc::brandes_single_source(&self.graph, 0, probe)),
+            "bfs" => bfs::checksum(&bfs::bfs(&self.graph, 0, probe)),
+            "cc" => cc::checksum(&cc::shiloach_vishkin(&self.graph, probe)),
+            "pr" => pr::checksum(&pr::pagerank(&self.graph, pr::MAX_ITERS, pr::TOLERANCE, probe)),
+            "sssp" => {
+                sssp::checksum(&sssp::delta_stepping(&self.graph, 0, sssp::DEFAULT_DELTA, probe))
+            }
+            "tc" => tc::checksum(tc::triangle_count(&self.graph, probe)),
+            "json" => json::parse_probed(self.json_doc, probe)
+                .expect("widget parses")
+                .node_count() as u64,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Record the raw (uncalibrated) trace of one task instance.
+    pub fn raw_trace(&self, instance: u64) -> Trace {
+        let mut probe = TraceProbe::with_offset(instance);
+        self.run_probed(&mut probe);
+        probe.finish()
+    }
+
+    /// Record the calibrated trace: solo simulated runtime matches the
+    /// paper's reported granularity within ±5%. Results for the default
+    /// `CoreConfig` are memoized process-wide (calibration reruns the
+    /// simulator several times).
+    pub fn trace(&self, instance: u64, cfg: &CoreConfig) -> Trace {
+        let default_cfg = *cfg == CoreConfig::default();
+        if default_cfg {
+            if let Some(hit) = trace_cache().lock().unwrap().get(&(self.name, instance)) {
+                return hit.clone();
+            }
+        }
+        let raw = self.raw_trace(instance);
+        let target = (paper_task_micros(self.name) * cfg.freq_ghz * 1000.0) as u64;
+        let out = calibrated_trace(&raw, target, cfg);
+        if default_cfg {
+            trace_cache().lock().unwrap().insert((self.name, instance), out.clone());
+        }
+        out
+    }
+}
+
+type TraceCache = std::sync::Mutex<std::collections::HashMap<(&'static str, u64), Trace>>;
+
+fn trace_cache() -> &'static TraceCache {
+    static CACHE: std::sync::OnceLock<TraceCache> = std::sync::OnceLock::new();
+    CACHE.get_or_init(Default::default)
+}
+
+/// Solo simulated cycles of a trace (context 1 idle, warm caches).
+pub fn solo_cycles(trace: &Trace, cfg: &CoreConfig) -> u64 {
+    smtsim::SmtCore::new(*cfg).run_warm(&trace.ops, &[]).cycles
+}
+
+/// Scale `raw` (by whole-trace repetition and/or prefix truncation,
+/// preserving the op mix) until its solo simulated runtime is within
+/// ±5% of `target_cycles`. Returns the calibrated trace.
+pub fn calibrated_trace(raw: &Trace, target_cycles: u64, cfg: &CoreConfig) -> Trace {
+    assert!(!raw.ops.is_empty(), "empty trace");
+    // Grow by repetition until one run covers the target.
+    let mut work = raw.clone();
+    let mut solo = solo_cycles(&work, cfg);
+    while solo < target_cycles {
+        work.extend(raw);
+        let next = solo_cycles(&work, cfg);
+        assert!(next > solo, "trace repetition must increase runtime");
+        solo = next;
+    }
+    if within(solo, target_cycles, 0.05) {
+        return work;
+    }
+    // Binary-search a prefix length whose solo time hits the target.
+    let (mut lo, mut hi) = (1usize, work.ops.len());
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        let t = Trace { ops: work.ops[..mid].to_vec() };
+        let c = solo_cycles(&t, cfg);
+        if within(c, target_cycles, 0.05) {
+            return t;
+        }
+        if c < target_cycles {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    Trace { ops: work.ops[..lo.max(1)].to_vec() }
+}
+
+fn within(value: u64, target: u64, tol: f64) -> bool {
+    (value as f64 - target as f64).abs() <= tol * target as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_workloads_run_natively() {
+        for w in Workload::all() {
+            let c1 = w.run_native();
+            let c2 = w.run_native();
+            assert_eq!(c1, c2, "{} checksum must be deterministic", w.name);
+        }
+    }
+
+    #[test]
+    fn native_and_traced_checksums_agree() {
+        // The probe must not change kernel results (same code path).
+        for w in Workload::all() {
+            let native = w.run_native();
+            let mut probe = TraceProbe::new();
+            let traced = w.run_probed(&mut probe);
+            assert_eq!(native, traced, "{}", w.name);
+            assert!(!probe.is_empty(), "{} records ops", w.name);
+        }
+    }
+
+    #[test]
+    fn calibration_hits_paper_granularity() {
+        let cfg = CoreConfig::default();
+        for w in Workload::all() {
+            let t = w.trace(0, &cfg);
+            let target = (paper_task_micros(w.name) * cfg.freq_ghz * 1000.0) as u64;
+            let got = solo_cycles(&t, &cfg);
+            assert!(
+                within(got, target, 0.07),
+                "{}: calibrated {got} vs target {target}",
+                w.name
+            );
+        }
+    }
+
+    #[test]
+    fn granularity_ordering_matches_paper() {
+        // SSSP > PR > TC > BC ~ JSON > BFS > CC after calibration.
+        let cfg = CoreConfig::default();
+        let us = |k: &str| {
+            let w = Workload::new(k);
+            solo_cycles(&w.trace(0, &cfg), &cfg) as f64 / (cfg.freq_ghz * 1000.0)
+        };
+        let (sssp, pr, tc, bfs, cc) = (us("sssp"), us("pr"), us("tc"), us("bfs"), us("cc"));
+        assert!(sssp > pr && pr > tc && tc > bfs && bfs > cc);
+    }
+}

@@ -1,0 +1,99 @@
+//! Minimal command-line parser (the offline environment carries no
+//! `clap`): subcommand + `--key value` / `--flag` options.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Args {
+    /// First non-flag token (e.g. `fig1`).
+    pub command: Option<String>,
+    /// Positional arguments after the command.
+    pub positional: Vec<String>,
+    /// `--key value` options and `--flag` booleans (value = "").
+    options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Self {
+        let mut args = Args::default();
+        let mut iter = tokens.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                let value = match iter.peek() {
+                    Some(next) if !next.starts_with("--") => iter.next().unwrap(),
+                    _ => String::new(),
+                };
+                args.options.insert(key.to_string(), value);
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse the process's command line.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    /// Integer option with default.
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Float option with default.
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Boolean flag (present without value, or `--key true`).
+    pub fn flag(&self, key: &str) -> bool {
+        match self.options.get(key) {
+            Some(v) => v.is_empty() || v == "true" || v == "1",
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn command_options_positionals() {
+        let a = parse("fig1 --mode sim --iters 500 extra --verbose");
+        assert_eq!(a.command.as_deref(), Some("fig1"));
+        assert_eq!(a.get("mode"), Some("sim"));
+        assert_eq!(a.get_u64("iters", 0), 500);
+        assert_eq!(a.positional, vec!["extra"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("run --fast --out dir");
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("out"), Some("dir"));
+    }
+
+    #[test]
+    fn defaults_kick_in() {
+        let a = parse("x");
+        assert_eq!(a.get_u64("n", 7), 7);
+        assert_eq!(a.get_f64("r", 1.5), 1.5);
+    }
+}

@@ -1,0 +1,247 @@
+//! Experiment/service configuration: a typed config struct parsed from a
+//! minimal TOML subset (the offline environment carries no `toml`
+//! crate). Supported syntax: `[section]` headers, `key = value` with
+//! string/int/float/bool values, `#` comments.
+
+use std::collections::BTreeMap;
+
+/// Parsed raw config: `section.key -> value` (top-level keys live under
+/// the empty section).
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct RawConfig {
+    entries: BTreeMap<String, Value>,
+}
+
+/// A TOML-subset scalar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+/// Config parse error (line number + reason).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub line: usize,
+    pub reason: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config error on line {}: {}", self.line, self.reason)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl RawConfig {
+    /// Parse from TOML-subset text.
+    pub fn parse(text: &str) -> Result<Self, ParseError> {
+        let mut cfg = RawConfig::default();
+        let mut section = String::new();
+        for (i, raw_line) in text.lines().enumerate() {
+            let line = raw_line.trim();
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                let name = inner.strip_suffix(']').ok_or_else(|| ParseError {
+                    line: i + 1,
+                    reason: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| ParseError {
+                line: i + 1,
+                reason: format!("expected 'key = value', got {line:?}"),
+            })?;
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            cfg.entries.insert(
+                full_key,
+                parse_value(value.trim()).map_err(|reason| ParseError {
+                    line: i + 1,
+                    reason,
+                })?,
+            );
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::parse(&text)?)
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        match self.entries.get(key) {
+            Some(Value::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, key: &str) -> Option<i64> {
+        match self.entries.get(key) {
+            Some(Value::Int(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn get_float(&self, key: &str) -> Option<f64> {
+        match self.entries.get(key) {
+            Some(Value::Float(v)) => Some(*v),
+            Some(Value::Int(v)) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        match self.entries.get(key) {
+            Some(Value::Bool(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// All keys (sorted; useful for validating unknown options).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(v) = s.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+/// Top-level experiment configuration (defaults mirror the paper §III/IV).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    /// Iterations per measurement (paper: 1e5).
+    pub iterations: u64,
+    /// Warmup iterations excluded from stats.
+    pub warmup: u64,
+    /// Kronecker scale (paper: 5 → 32 vertices).
+    pub scale: u32,
+    /// Kronecker edge factor (GAP default 16 reproduces the paper's
+    /// 157-edge input; see `graph::kronecker`).
+    pub edge_factor: u32,
+    /// Generator seed (default reproduces the paper's 157 edges).
+    pub seed: u64,
+    /// Measurement mode: "sim" (default; deterministic) or "wallclock".
+    pub mode: String,
+    /// Output directory for figure data files.
+    pub out_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            iterations: 100_000,
+            warmup: 1_000,
+            scale: 5,
+            edge_factor: crate::graph::kronecker::PAPER_EDGE_FACTOR,
+            seed: crate::graph::kronecker::PAPER_SEED,
+            mode: "sim".into(),
+            out_dir: "results".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Overlay values from a raw config (section `[experiment]`).
+    pub fn from_raw(raw: &RawConfig) -> Self {
+        let d = Self::default();
+        ExperimentConfig {
+            iterations: raw
+                .get_int("experiment.iterations")
+                .map(|v| v as u64)
+                .unwrap_or(d.iterations),
+            warmup: raw.get_int("experiment.warmup").map(|v| v as u64).unwrap_or(d.warmup),
+            scale: raw.get_int("experiment.scale").map(|v| v as u32).unwrap_or(d.scale),
+            edge_factor: raw
+                .get_int("experiment.edge_factor")
+                .map(|v| v as u32)
+                .unwrap_or(d.edge_factor),
+            seed: raw.get_int("experiment.seed").map(|v| v as u64).unwrap_or(d.seed),
+            mode: raw.get_str("experiment.mode").unwrap_or(&d.mode).to_string(),
+            out_dir: raw.get_str("experiment.out_dir").unwrap_or(&d.out_dir).to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = RawConfig::parse(
+            r#"
+            # comment
+            top = 1
+            [experiment]
+            iterations = 5000   # inline comment
+            mode = "wallclock"
+            ratio = 2.5
+            enabled = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.get_int("top"), Some(1));
+        assert_eq!(cfg.get_int("experiment.iterations"), Some(5000));
+        assert_eq!(cfg.get_str("experiment.mode"), Some("wallclock"));
+        assert_eq!(cfg.get_float("experiment.ratio"), Some(2.5));
+        assert_eq!(cfg.get_bool("experiment.enabled"), Some(true));
+    }
+
+    #[test]
+    fn error_carries_line_number() {
+        let err = RawConfig::parse("ok = 1\nbroken line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn experiment_defaults_match_paper() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.iterations, 100_000);
+        assert_eq!(c.scale, 5);
+        assert_eq!(c.edge_factor, 16);
+    }
+
+    #[test]
+    fn overlay_overrides_defaults_only_where_present() {
+        let raw = RawConfig::parse("[experiment]\niterations = 10\n").unwrap();
+        let c = ExperimentConfig::from_raw(&raw);
+        assert_eq!(c.iterations, 10);
+        assert_eq!(c.scale, 5); // default preserved
+    }
+
+    #[test]
+    fn int_float_coercion() {
+        let raw = RawConfig::parse("x = 3\n").unwrap();
+        assert_eq!(raw.get_float("x"), Some(3.0));
+        assert_eq!(raw.get_str("x"), None);
+    }
+}

@@ -1,0 +1,119 @@
+//! The hybrid analytics coordinator — the deployment scenario the paper
+//! motivates (§VI-A): a client-side graph-analytics service where
+//! *coarse* work is offloaded to the AOT-compiled JAX/Pallas kernels
+//! via PJRT ([`crate::runtime`]) while *fine-grained* requests are
+//! paired onto the two logical threads of one SMT core through Relic.
+//!
+//! Components:
+//! * [`router`] — per-request backend decision (PJRT vs native) based
+//!   on kernel kind and graph size vs the artifact manifest;
+//! * [`service`] — the request loop: batches compatible PJRT requests,
+//!   pairs fine-grained native requests onto Relic, records latency and
+//!   throughput metrics.
+//!
+//! See `examples/hybrid_pjrt.rs` for the end-to-end driver.
+
+pub mod router;
+pub mod service;
+
+pub use router::{Backend, Router, RouterConfig};
+pub use service::{Coordinator, Request, RequestResult, Response};
+
+use crate::graph::CsrGraph;
+
+/// The graph kernels the service exposes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GraphKernel {
+    Bc,
+    Bfs,
+    Cc,
+    Pr,
+    Sssp,
+    Tc,
+}
+
+impl GraphKernel {
+    /// Manifest name of the kernel's PJRT artifact.
+    pub fn artifact_name(self) -> &'static str {
+        match self {
+            GraphKernel::Bc => "bc",
+            GraphKernel::Bfs => "bfs",
+            GraphKernel::Cc => "cc",
+            GraphKernel::Pr => "pagerank",
+            GraphKernel::Sssp => "sssp",
+            GraphKernel::Tc => "tc",
+        }
+    }
+
+    /// All kernels.
+    pub fn all() -> [GraphKernel; 6] {
+        [
+            GraphKernel::Bc,
+            GraphKernel::Bfs,
+            GraphKernel::Cc,
+            GraphKernel::Pr,
+            GraphKernel::Sssp,
+            GraphKernel::Tc,
+        ]
+    }
+
+    /// Parse from the CLI / figure name.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "bc" => GraphKernel::Bc,
+            "bfs" => GraphKernel::Bfs,
+            "cc" => GraphKernel::Cc,
+            "pr" | "pagerank" => GraphKernel::Pr,
+            "sssp" => GraphKernel::Sssp,
+            "tc" => GraphKernel::Tc,
+            _ => return None,
+        })
+    }
+}
+
+/// Run a kernel natively (serial, optimized) and reduce to a checksum.
+pub fn run_native_kernel(kernel: GraphKernel, graph: &CsrGraph, source: u32) -> u64 {
+    use crate::graph::*;
+    use crate::probe::NoProbe;
+    match kernel {
+        GraphKernel::Bc => bc::checksum(&bc::brandes_single_source(graph, source, &mut NoProbe)),
+        GraphKernel::Bfs => bfs::checksum(&bfs::bfs(graph, source, &mut NoProbe)),
+        GraphKernel::Cc => cc::checksum(&cc::shiloach_vishkin(graph, &mut NoProbe)),
+        GraphKernel::Pr => {
+            pr::checksum(&pr::pagerank(graph, pr::MAX_ITERS, pr::TOLERANCE, &mut NoProbe))
+        }
+        GraphKernel::Sssp => sssp::checksum(&sssp::delta_stepping(
+            graph,
+            source,
+            sssp::DEFAULT_DELTA,
+            &mut NoProbe,
+        )),
+        GraphKernel::Tc => tc::checksum(tc::triangle_count(graph, &mut NoProbe)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_parse_roundtrip() {
+        for k in GraphKernel::all() {
+            let name = match k {
+                GraphKernel::Pr => "pr",
+                other => other.artifact_name(),
+            };
+            assert_eq!(GraphKernel::parse(name), Some(k));
+        }
+        assert_eq!(GraphKernel::parse("nope"), None);
+    }
+
+    #[test]
+    fn native_kernels_run_on_paper_graph() {
+        let g = crate::graph::kronecker::paper_graph();
+        for k in GraphKernel::all() {
+            let c = run_native_kernel(k, &g, 0);
+            assert_eq!(c, run_native_kernel(k, &g, 0), "{k:?} deterministic");
+        }
+    }
+}

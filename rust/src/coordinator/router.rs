@@ -1,0 +1,124 @@
+//! Request routing: PJRT offload vs native execution.
+//!
+//! Policy (configurable): kernels whose artifact exists for the
+//! request's graph size AND whose dense formulation amortizes the
+//! literal-packing cost (n >= `pjrt_min_n`) go to PJRT; everything else
+//! runs natively. Fine-grained native requests are additionally marked
+//! pairable so the service can co-schedule two of them on the SMT core
+//! through Relic.
+
+use super::GraphKernel;
+use crate::runtime::Manifest;
+
+/// Execution backend chosen for a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT-compiled JAX/Pallas kernel via the PJRT client.
+    Pjrt,
+    /// Native serial kernel on the service threads (Relic-pairable).
+    Native,
+}
+
+/// Router configuration.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Smallest graph size worth offloading to PJRT.
+    pub pjrt_min_n: usize,
+    /// Disable PJRT entirely (no artifacts available).
+    pub pjrt_enabled: bool,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig { pjrt_min_n: 32, pjrt_enabled: true }
+    }
+}
+
+/// The routing table: knows which artifacts exist.
+pub struct Router {
+    cfg: RouterConfig,
+    /// (kernel name, n) pairs available as artifacts.
+    available: Vec<(String, usize)>,
+}
+
+impl Router {
+    /// Build from a manifest (pass `None` when artifacts are absent —
+    /// everything routes native).
+    pub fn new(cfg: RouterConfig, manifest: Option<&Manifest>) -> Self {
+        let available = manifest
+            .map(|m| m.entries.iter().map(|e| (e.kernel.clone(), e.n)).collect())
+            .unwrap_or_default();
+        Router { cfg, available }
+    }
+
+    /// Choose a backend for `kernel` on an `n`-vertex graph.
+    pub fn route(&self, kernel: GraphKernel, n: usize) -> Backend {
+        if self.cfg.pjrt_enabled
+            && n >= self.cfg.pjrt_min_n
+            && self
+                .available
+                .iter()
+                .any(|(k, an)| k == kernel.artifact_name() && *an == n)
+        {
+            Backend::Pjrt
+        } else {
+            Backend::Native
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Entry;
+    use std::path::PathBuf;
+
+    fn manifest() -> Manifest {
+        Manifest {
+            dir: PathBuf::from("."),
+            entries: vec![
+                Entry {
+                    kernel: "pagerank".into(),
+                    n: 32,
+                    file: "pagerank_n32.hlo.txt".into(),
+                    inputs: vec![vec![32, 32], vec![32]],
+                },
+                Entry {
+                    kernel: "tc".into(),
+                    n: 64,
+                    file: "tc_n64.hlo.txt".into(),
+                    inputs: vec![vec![64, 64]],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn routes_to_pjrt_when_artifact_exists() {
+        let m = manifest();
+        let r = Router::new(RouterConfig::default(), Some(&m));
+        assert_eq!(r.route(GraphKernel::Pr, 32), Backend::Pjrt);
+        assert_eq!(r.route(GraphKernel::Tc, 64), Backend::Pjrt);
+        // No artifact at that size.
+        assert_eq!(r.route(GraphKernel::Pr, 64), Backend::Native);
+        // No artifact for that kernel at all.
+        assert_eq!(r.route(GraphKernel::Bfs, 32), Backend::Native);
+    }
+
+    #[test]
+    fn min_n_gates_offload() {
+        let m = manifest();
+        let r = Router::new(RouterConfig { pjrt_min_n: 64, pjrt_enabled: true }, Some(&m));
+        assert_eq!(r.route(GraphKernel::Pr, 32), Backend::Native);
+        assert_eq!(r.route(GraphKernel::Tc, 64), Backend::Pjrt);
+    }
+
+    #[test]
+    fn disabled_or_missing_manifest_routes_native() {
+        let m = manifest();
+        let off = Router::new(RouterConfig { pjrt_enabled: false, ..Default::default() }, Some(&m));
+        assert_eq!(off.route(GraphKernel::Pr, 32), Backend::Native);
+        let none = Router::new(RouterConfig::default(), None);
+        assert_eq!(none.route(GraphKernel::Pr, 32), Backend::Native);
+    }
+}

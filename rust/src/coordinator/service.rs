@@ -1,0 +1,278 @@
+//! The coordinator service: batching, Relic pairing, PJRT dispatch,
+//! and metrics.
+//!
+//! Request flow:
+//! 1. [`Router`] assigns each request a backend.
+//! 2. PJRT requests are grouped by (kernel, n) so each batch reuses the
+//!    compiled executable and its dense-matrix packing buffers.
+//! 3. Native requests are taken two at a time and co-scheduled on the
+//!    SMT core via [`Relic::pair`] — the paper's fine-grained scenario;
+//!    a leftover odd request runs serially.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::graph::{dense, CsrGraph};
+use crate::metrics::{Counter, Histogram};
+use crate::relic::{Relic, RelicConfig};
+use crate::runtime::GraphExecutor;
+
+use super::router::{Backend, Router};
+use super::{run_native_kernel, GraphKernel};
+
+/// One analytics request.
+pub struct Request {
+    pub id: u64,
+    pub kernel: GraphKernel,
+    pub graph: CsrGraph,
+    pub source: u32,
+}
+
+/// Result payload of a processed request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RequestResult {
+    /// Checksum from the native kernel.
+    Native(u64),
+    /// Output vector from the PJRT kernel (scores, depths, …).
+    Pjrt(Vec<f32>),
+}
+
+/// Response with latency/backends for reporting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    pub backend: Backend,
+    pub result: RequestResult,
+    pub latency_ns: u64,
+}
+
+/// Service metrics snapshot (see [`Coordinator::report`]).
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    pub native_requests: Counter,
+    pub pjrt_requests: Counter,
+    pub relic_pairs: Counter,
+    pub native_latency: Histogram,
+    pub pjrt_latency: Histogram,
+}
+
+/// The hybrid analytics coordinator.
+pub struct Coordinator {
+    router: Router,
+    executor: Option<GraphExecutor>,
+    relic: Relic,
+    pub metrics: ServiceMetrics,
+}
+
+impl Coordinator {
+    /// Build from parts (router already configured against the
+    /// manifest; `executor: None` → everything native).
+    pub fn with_parts(router: Router, executor: Option<GraphExecutor>) -> Self {
+        Coordinator {
+            router,
+            executor,
+            relic: Relic::with_config(RelicConfig::default()),
+            metrics: ServiceMetrics::default(),
+        }
+    }
+
+    /// Pre-compile every available PJRT executable so first-request
+    /// latency excludes compilation (EXPERIMENTS.md §Perf iteration 3:
+    /// p99 343 ms -> sub-ms on the serve demo).
+    pub fn warmup(&mut self) {
+        if let Some(exec) = self.executor.as_mut() {
+            for (kernel, n) in exec.available() {
+                if let Err(err) = exec.prepare(&kernel, n) {
+                    eprintln!("warmup: {kernel}/{n}: {err:#}");
+                }
+            }
+        }
+    }
+
+    /// Process a batch of requests, returning responses in request order.
+    pub fn process_batch(&mut self, requests: Vec<Request>) -> Vec<Response> {
+        let mut responses: Vec<Option<Response>> = Vec::new();
+        let mut native_queue: Vec<(usize, Request)> = Vec::new();
+        let mut pjrt_queue: Vec<(usize, Request)> = Vec::new();
+
+        for req in requests {
+            let idx = responses.len();
+            responses.push(None);
+            match self.router.route(req.kernel, req.graph.num_vertices()) {
+                Backend::Pjrt if self.executor.is_some() => pjrt_queue.push((idx, req)),
+                _ => native_queue.push((idx, req)),
+            }
+        }
+
+        // PJRT batches grouped by (kernel, n): executable + packing reuse.
+        pjrt_queue.sort_by_key(|(_, r)| (r.kernel.artifact_name(), r.graph.num_vertices()));
+        for (idx, req) in pjrt_queue {
+            let t0 = Instant::now();
+            let result = self.execute_pjrt(&req);
+            let latency = t0.elapsed().as_nanos() as u64;
+            self.metrics.pjrt_requests.inc();
+            self.metrics.pjrt_latency.record(latency);
+            responses[idx] = Some(Response {
+                id: req.id,
+                backend: Backend::Pjrt,
+                result,
+                latency_ns: latency,
+            });
+        }
+
+        // Native requests: pair onto the SMT core through Relic.
+        let mut iter = native_queue.into_iter();
+        loop {
+            match (iter.next(), iter.next()) {
+                (Some((ia, ra)), Some((ib, rb))) => {
+                    let t0 = Instant::now();
+                    let out_a = AtomicU64::new(0);
+                    let out_b = AtomicU64::new(0);
+                    let task_b = || {
+                        out_b.store(
+                            run_native_kernel(rb.kernel, &rb.graph, rb.source),
+                            Ordering::Release,
+                        );
+                    };
+                    self.relic.pair(
+                        || {
+                            out_a.store(
+                                run_native_kernel(ra.kernel, &ra.graph, ra.source),
+                                Ordering::Release,
+                            );
+                        },
+                        &task_b,
+                    );
+                    let latency = t0.elapsed().as_nanos() as u64;
+                    self.metrics.relic_pairs.inc();
+                    self.metrics.native_requests.add(2);
+                    self.metrics.native_latency.record(latency);
+                    responses[ia] = Some(Response {
+                        id: ra.id,
+                        backend: Backend::Native,
+                        result: RequestResult::Native(out_a.load(Ordering::Acquire)),
+                        latency_ns: latency,
+                    });
+                    responses[ib] = Some(Response {
+                        id: rb.id,
+                        backend: Backend::Native,
+                        result: RequestResult::Native(out_b.load(Ordering::Acquire)),
+                        latency_ns: latency,
+                    });
+                }
+                (Some((idx, req)), None) => {
+                    let t0 = Instant::now();
+                    let checksum = run_native_kernel(req.kernel, &req.graph, req.source);
+                    let latency = t0.elapsed().as_nanos() as u64;
+                    self.metrics.native_requests.inc();
+                    self.metrics.native_latency.record(latency);
+                    responses[idx] = Some(Response {
+                        id: req.id,
+                        backend: Backend::Native,
+                        result: RequestResult::Native(checksum),
+                        latency_ns: latency,
+                    });
+                    break;
+                }
+                _ => break,
+            }
+        }
+
+        responses.into_iter().map(|r| r.expect("all requests answered")).collect()
+    }
+
+    fn execute_pjrt(&mut self, req: &Request) -> RequestResult {
+        let exec = self.executor.as_mut().expect("routed to PJRT");
+        let n = req.graph.num_vertices();
+        let inputs: Vec<Vec<f32>> = match req.kernel {
+            GraphKernel::Pr => {
+                vec![dense::transition(&req.graph), dense::uniform(n)]
+            }
+            GraphKernel::Bfs => {
+                vec![dense::adjacency(&req.graph), dense::one_hot(n, req.source)]
+            }
+            GraphKernel::Sssp => {
+                vec![dense::weights_inf(&req.graph), dense::one_hot(n, req.source)]
+            }
+            GraphKernel::Cc => vec![dense::w0(&req.graph)],
+            GraphKernel::Tc | GraphKernel::Bc => vec![dense::adjacency(&req.graph)],
+        };
+        match exec.execute(req.kernel.artifact_name(), n, &inputs) {
+            Ok(values) => RequestResult::Pjrt(values),
+            Err(err) => {
+                // Fail soft: fall back to the native kernel and report.
+                eprintln!("PJRT execution failed ({err:#}); falling back to native");
+                RequestResult::Native(run_native_kernel(req.kernel, &req.graph, req.source))
+            }
+        }
+    }
+
+    /// Human-readable metrics report.
+    pub fn report(&self) -> String {
+        format!(
+            "native: {} reqs ({} relic pairs) {}\npjrt:   {} reqs {}",
+            self.metrics.native_requests.get(),
+            self.metrics.relic_pairs.get(),
+            self.metrics.native_latency.summary("ns"),
+            self.metrics.pjrt_requests.get(),
+            self.metrics.pjrt_latency.summary("ns"),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RouterConfig;
+    use crate::graph::kronecker::paper_graph;
+
+    fn native_coordinator() -> Coordinator {
+        Coordinator::with_parts(Router::new(RouterConfig::default(), None), None)
+    }
+
+    fn req(id: u64, kernel: GraphKernel) -> Request {
+        Request { id, kernel, graph: paper_graph(), source: 0 }
+    }
+
+    #[test]
+    fn processes_batch_in_order_with_pairing() {
+        let mut c = native_coordinator();
+        let reqs = (0..5).map(|i| req(i, GraphKernel::Tc)).collect();
+        let responses = c.process_batch(reqs);
+        assert_eq!(responses.len(), 5);
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.backend, Backend::Native);
+        }
+        // 5 requests = 2 relic pairs + 1 serial leftover.
+        assert_eq!(c.metrics.relic_pairs.get(), 2);
+        assert_eq!(c.metrics.native_requests.get(), 5);
+        // All TC checksums identical (same graph).
+        let first = &responses[0].result;
+        assert!(responses.iter().all(|r| r.result == *first));
+    }
+
+    #[test]
+    fn paired_results_match_serial_execution() {
+        let mut c = native_coordinator();
+        let serial: Vec<u64> = GraphKernel::all()
+            .iter()
+            .map(|&k| run_native_kernel(k, &paper_graph(), 0))
+            .collect();
+        let reqs = GraphKernel::all()
+            .iter()
+            .enumerate()
+            .map(|(i, &k)| req(i as u64, k))
+            .collect();
+        let responses = c.process_batch(reqs);
+        for (resp, want) in responses.iter().zip(&serial) {
+            assert_eq!(resp.result, RequestResult::Native(*want));
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let mut c = native_coordinator();
+        assert!(c.process_batch(Vec::new()).is_empty());
+    }
+}

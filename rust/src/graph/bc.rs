@@ -1,0 +1,150 @@
+//! Betweenness centrality — Brandes' algorithm (GAP `bc`).
+//!
+//! GAP's BC approximates by running Brandes from a small sample of
+//! sources; the paper's 1.1 µs task granularity on the 32-node input
+//! corresponds to a single-source pass, so [`brandes_single_source`] is
+//! the benchmark task and [`brandes`] the full exact variant.
+
+use crate::probe::Probe;
+
+use super::CsrGraph;
+
+const SIGMA_BASE: u64 = 0x5700_0000;
+const DEPTH_BASE: u64 = 0x5800_0000;
+const DELTA_BASE: u64 = 0x5900_0000;
+const STACK_BASE: u64 = 0x5A00_0000;
+
+/// One Brandes forward/backward pass; returns the dependency scores
+/// accumulated from `source` (unnormalized).
+pub fn brandes_single_source<P: Probe>(
+    g: &CsrGraph,
+    source: u32,
+    probe: &mut P,
+) -> Vec<f64> {
+    let n = g.num_vertices();
+    let mut sigma = vec![0.0f64; n]; // shortest-path counts
+    let mut depth = vec![i32::MAX; n];
+    let mut order = Vec::with_capacity(n); // BFS visit order (stack)
+    sigma[source as usize] = 1.0;
+    depth[source as usize] = 0;
+    order.push(source);
+    probe.store(SIGMA_BASE + source as u64 * 8);
+    probe.store(DEPTH_BASE + source as u64 * 4);
+
+    // Forward BFS accumulating path counts.
+    let mut head = 0;
+    while head < order.len() {
+        let u = order[head];
+        head += 1;
+        probe.load_dep(STACK_BASE + head as u64 * 4);
+        probe.branch(true);
+        let (du, su) = (depth[u as usize], sigma[u as usize]);
+        probe.load_dep(DEPTH_BASE + u as u64 * 4);
+        probe.load(SIGMA_BASE + u as u64 * 8);
+        g.probe_scan(u, probe);
+        for &v in g.neighbors(u) {
+            probe.load_dep(DEPTH_BASE + v as u64 * 4);
+            probe.branch(false);
+            probe.compute(2);
+            if depth[v as usize] == i32::MAX {
+                depth[v as usize] = du + 1;
+                order.push(v);
+                probe.store(DEPTH_BASE + v as u64 * 4);
+                probe.store(STACK_BASE + order.len() as u64 * 4);
+            }
+            if depth[v as usize] == du + 1 {
+                sigma[v as usize] += su;
+                probe.store(SIGMA_BASE + v as u64 * 8);
+                probe.compute_fp(1);
+            }
+        }
+    }
+
+    // Backward dependency accumulation in reverse BFS order.
+    let mut delta = vec![0.0f64; n];
+    for &w in order.iter().rev() {
+        probe.load(STACK_BASE + w as u64 * 4);
+        let (dw, sw, deltw) = (depth[w as usize], sigma[w as usize], delta[w as usize]);
+        probe.load(DELTA_BASE + w as u64 * 8);
+        g.probe_scan(w, probe);
+        for &v in g.neighbors(w) {
+            probe.load(DEPTH_BASE + v as u64 * 4);
+            probe.branch(false);
+            // v is a predecessor of w on shortest paths.
+            if depth[v as usize] == dw - 1 {
+                let c = sigma[v as usize] / sw * (1.0 + deltw);
+                delta[v as usize] += c;
+                probe.load(SIGMA_BASE + v as u64 * 8);
+                probe.store(DELTA_BASE + v as u64 * 8);
+                probe.compute_fp(4); // div + mul + adds, dependent
+            }
+        }
+    }
+    delta[source as usize] = 0.0;
+    delta
+}
+
+/// Exact BC: sum single-source dependencies over all sources; halved for
+/// undirected graphs (GAP convention).
+pub fn brandes<P: Probe>(g: &CsrGraph, probe: &mut P) -> Vec<f64> {
+    let n = g.num_vertices();
+    let mut bc = vec![0.0f64; n];
+    for s in 0..n as u32 {
+        let dep = brandes_single_source(g, s, probe);
+        for (b, d) in bc.iter_mut().zip(&dep) {
+            *b += d;
+        }
+    }
+    for b in &mut bc {
+        *b /= 2.0;
+    }
+    bc
+}
+
+/// Benchmark checksum: quantized dependency sum.
+pub fn checksum(scores: &[f64]) -> u64 {
+    scores.iter().map(|s| (s * 1e6) as u64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{oracle, CsrGraph};
+    use crate::probe::NoProbe;
+
+    #[test]
+    fn path_center_has_highest_bc() {
+        // 0-1-2: vertex 1 lies on the only 0..2 path.
+        let g = CsrGraph::from_undirected_edges(3, &[(0, 1), (1, 2)]);
+        let bc = brandes(&g, &mut NoProbe);
+        assert_eq!(bc, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn cycle_is_uniform() {
+        let g = CsrGraph::from_undirected_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let bc = brandes(&g, &mut NoProbe);
+        for v in &bc {
+            assert!((v - 0.5).abs() < 1e-12, "{bc:?}");
+        }
+    }
+
+    #[test]
+    fn matches_brute_force_oracle() {
+        crate::testutil::check(30, |rng| {
+            let n = rng.range(2, 24);
+            let m = rng.range(1, 3 * n);
+            let edges: Vec<(u32, u32)> = (0..m)
+                .map(|_| (rng.below(n as u64) as u32, rng.below(n as u64) as u32))
+                .collect();
+            let g = CsrGraph::from_undirected_edges(n, &edges);
+            let got = brandes(&g, &mut NoProbe);
+            let want = oracle::betweenness_brute(&g);
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                crate::testutil::close(*a, *b, 1e-9)
+                    .map_err(|e| format!("bc[{i}]: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+}

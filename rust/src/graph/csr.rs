@@ -1,0 +1,218 @@
+//! Compressed sparse row graph — the GAP benchmark data structure.
+
+use crate::probe::Probe;
+
+/// Logical probe-address bases for the CSR arrays (see `probe` docs).
+pub const OFFSETS_BASE: u64 = 0x4000_0000;
+pub const TARGETS_BASE: u64 = 0x4100_0000;
+pub const WEIGHTS_BASE: u64 = 0x4200_0000;
+
+/// An undirected graph in CSR form with optional integer edge weights.
+///
+/// Neighbor lists are sorted (GAP does the same), which triangle
+/// counting relies on for merge-based intersection.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CsrGraph {
+    /// `offsets[v]..offsets[v+1]` indexes `targets` for vertex `v`.
+    offsets: Vec<u32>,
+    /// Concatenated sorted neighbor lists.
+    targets: Vec<u32>,
+    /// Per-directed-edge weights, parallel to `targets` (empty if unweighted).
+    weights: Vec<u32>,
+}
+
+impl CsrGraph {
+    /// Build from an undirected edge list; self-loops and duplicate edges
+    /// are removed, each remaining edge appears in both endpoint lists.
+    pub fn from_undirected_edges(n: usize, edges: &[(u32, u32)]) -> Self {
+        Self::from_undirected_weighted(n, &edges.iter().map(|&(u, v)| (u, v, 1)).collect::<Vec<_>>(), false)
+    }
+
+    /// Weighted variant; `keep_weights=false` drops the weight array.
+    pub fn from_undirected_weighted(
+        n: usize,
+        edges: &[(u32, u32, u32)],
+        keep_weights: bool,
+    ) -> Self {
+        assert!(n <= u32::MAX as usize);
+        // Symmetrize, drop self loops, dedup (keeping first weight).
+        let mut dir: Vec<(u32, u32, u32)> = Vec::with_capacity(edges.len() * 2);
+        for &(u, v, w) in edges {
+            assert!((u as usize) < n && (v as usize) < n, "edge out of range");
+            if u != v {
+                dir.push((u, v, w));
+                dir.push((v, u, w));
+            }
+        }
+        // Sort including the weight so dedup deterministically keeps the
+        // *minimum* weight per directed pair — both directions of an
+        // undirected edge then agree (duplicate R-MAT samples can carry
+        // different weights; keeping an arbitrary one per direction would
+        // make the graph silently asymmetric).
+        dir.sort_unstable();
+        dir.dedup_by_key(|e| (e.0, e.1));
+
+        let mut offsets = vec![0u32; n + 1];
+        for &(u, _, _) in &dir {
+            offsets[u as usize + 1] += 1;
+        }
+        for i in 0..n {
+            offsets[i + 1] += offsets[i];
+        }
+        let targets: Vec<u32> = dir.iter().map(|&(_, v, _)| v).collect();
+        let weights = if keep_weights {
+            dir.iter().map(|&(_, _, w)| w).collect()
+        } else {
+            Vec::new()
+        };
+        CsrGraph { offsets, targets, weights }
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.targets.len() / 2
+    }
+
+    /// Degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: u32) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    /// Sorted neighbors of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        let (s, e) = (self.offsets[v as usize] as usize, self.offsets[v as usize + 1] as usize);
+        &self.targets[s..e]
+    }
+
+    /// Neighbors with weights; panics if the graph is unweighted.
+    #[inline]
+    pub fn neighbors_weighted(&self, v: u32) -> impl Iterator<Item = (u32, u32)> + '_ {
+        let (s, e) = (self.offsets[v as usize] as usize, self.offsets[v as usize + 1] as usize);
+        self.targets[s..e].iter().copied().zip(self.weights[s..e].iter().copied())
+    }
+
+    /// Whether a weight array is present (edge-free graphs built with
+    /// `keep_weights` count as weighted).
+    #[inline]
+    pub fn is_weighted(&self) -> bool {
+        self.weights.len() == self.targets.len()
+    }
+
+    /// Probe helper: record the loads for scanning `v`'s neighbor list
+    /// (offset lookup + one load per target cache line).
+    #[inline]
+    pub fn probe_scan<P: Probe>(&self, v: u32, probe: &mut P) {
+        probe.load(OFFSETS_BASE + v as u64 * 4);
+        let (s, e) = (self.offsets[v as usize] as u64, self.offsets[v as usize + 1] as u64);
+        let mut line = u64::MAX;
+        for i in s..e {
+            let l = TARGETS_BASE + (i * 4 & !63);
+            if l != line {
+                line = l;
+                probe.load(l);
+            }
+        }
+    }
+
+    /// Probe helper: loads for the weighted scan (targets + weights lines).
+    #[inline]
+    pub fn probe_scan_weighted<P: Probe>(&self, v: u32, probe: &mut P) {
+        self.probe_scan(v, probe);
+        let (s, e) = (self.offsets[v as usize] as u64, self.offsets[v as usize + 1] as u64);
+        let mut line = u64::MAX;
+        for i in s..e {
+            let l = WEIGHTS_BASE + (i * 4 & !63);
+            if l != line {
+                line = l;
+                probe.load(l);
+            }
+        }
+    }
+
+    /// Total directed-edge count (2x undirected).
+    #[inline]
+    pub fn num_directed_edges(&self) -> usize {
+        self.targets.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> CsrGraph {
+        // 0-1, 0-2, 1-2, 1-3, 2-3
+        CsrGraph::from_undirected_edges(4, &[(0, 1), (0, 2), (1, 2), (1, 3), (2, 3)])
+    }
+
+    #[test]
+    fn build_symmetric_sorted() {
+        let g = diamond();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 5);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[0, 2, 3]);
+        assert_eq!(g.neighbors(3), &[1, 2]);
+        assert_eq!(g.degree(1), 3);
+    }
+
+    #[test]
+    fn dedup_and_self_loops() {
+        let g = CsrGraph::from_undirected_edges(3, &[(0, 1), (1, 0), (0, 1), (2, 2)]);
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.neighbors(2), &[] as &[u32]);
+    }
+
+    #[test]
+    fn duplicate_edges_keep_min_weight_symmetrically() {
+        let g = CsrGraph::from_undirected_weighted(
+            3,
+            &[(1, 2, 50), (2, 1, 10), (1, 2, 30)],
+            true,
+        );
+        let w12: Vec<_> = g.neighbors_weighted(1).collect();
+        let w21: Vec<_> = g.neighbors_weighted(2).collect();
+        assert_eq!(w12, vec![(2, 10)]);
+        assert_eq!(w21, vec![(1, 10)]);
+    }
+
+    #[test]
+    fn weighted_build() {
+        let g = CsrGraph::from_undirected_weighted(3, &[(0, 1, 7), (1, 2, 3)], true);
+        assert!(g.is_weighted());
+        let n1: Vec<_> = g.neighbors_weighted(1).collect();
+        assert_eq!(n1, vec![(0, 7), (2, 3)]);
+    }
+
+    #[test]
+    fn symmetry_property() {
+        crate::testutil::check(50, |rng| {
+            let n = rng.range(1, 40);
+            let m = rng.range(0, 80);
+            let edges: Vec<(u32, u32)> = (0..m)
+                .map(|_| (rng.below(n as u64) as u32, rng.below(n as u64) as u32))
+                .collect();
+            let g = CsrGraph::from_undirected_edges(n, &edges);
+            for u in 0..n as u32 {
+                for &v in g.neighbors(u) {
+                    if !g.neighbors(v).contains(&u) {
+                        return Err(format!("asymmetric edge {u}->{v}"));
+                    }
+                }
+                if !g.neighbors(u).windows(2).all(|w| w[0] < w[1]) {
+                    return Err(format!("unsorted/duplicate neighbors of {u}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

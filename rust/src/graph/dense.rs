@@ -1,0 +1,129 @@
+//! Dense matrix exports for the PJRT offload path.
+//!
+//! The L2 JAX models (`python/compile/model.py`) consume dense f32
+//! matrices; these builders produce row-major buffers matching its
+//! conventions exactly:
+//!
+//! * [`adjacency`] — symmetric {0,1} with zero diagonal (`a`).
+//! * [`weights_inf`] — edge weights, `+inf` off-edge, zero diagonal (`w`).
+//! * [`w0`] — {0, inf}: 0 on edges and diagonal (`w0`, CC label prop).
+//! * [`transition`] — `m[i][j] = a[j][i] / degree(j)` (PageRank pull).
+//! * [`one_hot`] — source vector.
+
+use super::CsrGraph;
+
+/// Row-major (n, n) {0,1} adjacency.
+pub fn adjacency(g: &CsrGraph) -> Vec<f32> {
+    let n = g.num_vertices();
+    let mut a = vec![0.0f32; n * n];
+    for u in 0..n as u32 {
+        for &v in g.neighbors(u) {
+            a[u as usize * n + v as usize] = 1.0;
+        }
+    }
+    a
+}
+
+/// Row-major (n, n) weight matrix with `inf` where no edge, 0 diagonal.
+pub fn weights_inf(g: &CsrGraph) -> Vec<f32> {
+    let n = g.num_vertices();
+    let mut w = vec![f32::INFINITY; n * n];
+    for i in 0..n {
+        w[i * n + i] = 0.0;
+    }
+    for u in 0..n as u32 {
+        for (v, wt) in g.neighbors_weighted(u) {
+            w[u as usize * n + v as usize] = wt as f32;
+        }
+    }
+    w
+}
+
+/// Row-major (n, n) {0, inf} matrix: 0 on edges and the diagonal.
+pub fn w0(g: &CsrGraph) -> Vec<f32> {
+    let n = g.num_vertices();
+    let mut w = vec![f32::INFINITY; n * n];
+    for i in 0..n {
+        w[i * n + i] = 0.0;
+    }
+    for u in 0..n as u32 {
+        for &v in g.neighbors(u) {
+            w[u as usize * n + v as usize] = 0.0;
+        }
+    }
+    w
+}
+
+/// PageRank pull transition matrix: `m[i][j] = a[j][i] / deg(j)`
+/// (column-normalized adjacency, transposed into gather form).
+pub fn transition(g: &CsrGraph) -> Vec<f32> {
+    let n = g.num_vertices();
+    let mut m = vec![0.0f32; n * n];
+    for j in 0..n as u32 {
+        let deg = g.degree(j) as f32;
+        if deg == 0.0 {
+            continue;
+        }
+        for &i in g.neighbors(j) {
+            m[i as usize * n + j as usize] = 1.0 / deg;
+        }
+    }
+    m
+}
+
+/// One-hot f32 vector of length `n`.
+pub fn one_hot(n: usize, idx: u32) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    v[idx as usize] = 1.0;
+    v
+}
+
+/// Uniform initial PageRank distribution.
+pub fn uniform(n: usize) -> Vec<f32> {
+    vec![1.0 / n as f32; n]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::CsrGraph;
+
+    fn tri() -> CsrGraph {
+        CsrGraph::from_undirected_weighted(3, &[(0, 1, 5), (1, 2, 7)], true)
+    }
+
+    #[test]
+    fn adjacency_symmetric() {
+        let a = adjacency(&tri());
+        assert_eq!(a, vec![0., 1., 0., 1., 0., 1., 0., 1., 0.]);
+    }
+
+    #[test]
+    fn weights_match_graph() {
+        let w = weights_inf(&tri());
+        assert_eq!(w[0 * 3 + 1], 5.0);
+        assert_eq!(w[1 * 3 + 2], 7.0);
+        assert_eq!(w[2 * 3 + 1], 7.0);
+        assert!(w[0 * 3 + 2].is_infinite());
+        assert_eq!(w[1 * 3 + 1], 0.0);
+    }
+
+    #[test]
+    fn transition_columns_sum_to_one() {
+        let g = tri();
+        let m = transition(&g);
+        let n = 3;
+        for j in 0..n {
+            let s: f32 = (0..n).map(|i| m[i * n + j]).sum();
+            assert!((s - 1.0).abs() < 1e-6, "column {j} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn w0_diagonal_and_edges_zero() {
+        let w = w0(&tri());
+        assert_eq!(w[0], 0.0);
+        assert_eq!(w[1], 0.0);
+        assert!(w[2].is_infinite());
+    }
+}

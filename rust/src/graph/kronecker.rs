@@ -1,0 +1,150 @@
+//! GAP-style Kronecker (R-MAT) graph generator.
+//!
+//! The paper's input (§IV-A) is "a generated Kronecker graph with 32
+//! nodes and 157 undirected edges for a degree of 4": scale 5
+//! (2^5 = 32 vertices), edge factor 4, i.e. GAP's `-g 5 -k 4`
+//! generator, which draws `edge_factor * n` directed edge samples from
+//! the R-MAT distribution (A=0.57, B=0.19, C=0.19, D=0.05), then
+//! symmetrizes and deduplicates. The seed below is chosen so the
+//! resulting graph has exactly the paper's 157 undirected edges.
+
+use crate::testutil::Rng;
+
+use super::CsrGraph;
+
+/// R-MAT quadrant probabilities used by GAP / Graph500.
+#[derive(Debug, Clone, Copy)]
+pub struct KroneckerParams {
+    /// log2 of the vertex count.
+    pub scale: u32,
+    /// Directed edge samples per vertex.
+    pub edge_factor: u32,
+    /// Quadrant probabilities (a + b + c <= 1; d is the remainder).
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    /// PRNG seed.
+    pub seed: u64,
+    /// Generate uniform integer weights in `[1, 255]` (GAP's SSSP input).
+    pub weighted: bool,
+}
+
+impl KroneckerParams {
+    /// GAP defaults for a given scale/edge-factor.
+    pub fn gap(scale: u32, edge_factor: u32, seed: u64) -> Self {
+        KroneckerParams {
+            scale,
+            edge_factor,
+            a: 0.57,
+            b: 0.19,
+            c: 0.19,
+            seed,
+            weighted: true,
+        }
+    }
+}
+
+/// Generate a Kronecker graph per `params`.
+pub fn kronecker_graph(params: &KroneckerParams) -> CsrGraph {
+    let n = 1usize << params.scale;
+    let m = n * params.edge_factor as usize;
+    let mut rng = Rng::new(params.seed);
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        let (mut u, mut v) = (0u32, 0u32);
+        for _ in 0..params.scale {
+            u <<= 1;
+            v <<= 1;
+            let r = rng.f64();
+            if r < params.a {
+                // top-left: no bits set
+            } else if r < params.a + params.b {
+                v |= 1;
+            } else if r < params.a + params.b + params.c {
+                u |= 1;
+            } else {
+                u |= 1;
+                v |= 1;
+            }
+        }
+        let w = 1 + rng.below(255) as u32;
+        edges.push((u, v, w));
+    }
+    // GAP permutes vertex labels so degree doesn't correlate with id.
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut perm);
+    for e in &mut edges {
+        e.0 = perm[e.0 as usize];
+        e.1 = perm[e.1 as usize];
+    }
+    CsrGraph::from_undirected_weighted(n, &edges, params.weighted)
+}
+
+/// Seed reproducing the paper's exact input size (see `paper_graph`).
+pub const PAPER_SEED: u64 = 1;
+
+/// Edge factor reproducing the paper's 157 undirected edges at scale 5.
+///
+/// Note: the paper says "157 undirected edges for a degree of 4", but
+/// drawing only 4·n = 128 R-MAT samples can never produce 157 distinct
+/// undirected edges; GAP's *default* edge factor 16 (512 draws over 32
+/// vertices, then symmetrize + dedup) lands exactly on 157 — so the
+/// paper's input is evidently the GAP default generator and we match
+/// its reported node/edge counts exactly (DESIGN.md §2).
+pub const PAPER_EDGE_FACTOR: u32 = 16;
+
+/// The paper's benchmark input graph (§IV-A): Kronecker, 32 nodes,
+/// 157 undirected edges, weighted.
+pub fn paper_graph() -> CsrGraph {
+    let g = kronecker_graph(&KroneckerParams::gap(5, PAPER_EDGE_FACTOR, PAPER_SEED));
+    debug_assert_eq!(g.num_vertices(), 32);
+    debug_assert_eq!(g.num_edges(), 157);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_graph_matches_paper_input() {
+        let g = paper_graph();
+        assert_eq!(g.num_vertices(), 32);
+        assert_eq!(g.num_edges(), 157, "seed must reproduce the paper's 157 edges");
+        assert!(g.is_weighted());
+    }
+
+    #[test]
+    fn generator_is_deterministic() {
+        let p = KroneckerParams::gap(6, 8, 42);
+        assert_eq!(kronecker_graph(&p), kronecker_graph(&p));
+    }
+
+    #[test]
+    fn scale_controls_vertex_count() {
+        for scale in [3u32, 5, 8] {
+            let g = kronecker_graph(&KroneckerParams::gap(scale, 4, 1));
+            assert_eq!(g.num_vertices(), 1 << scale);
+        }
+    }
+
+    #[test]
+    fn rmat_skew_produces_hubs() {
+        // R-MAT graphs are power-law-ish: max degree far above average.
+        let g = kronecker_graph(&KroneckerParams::gap(10, 8, 7));
+        let n = g.num_vertices();
+        let avg = g.num_directed_edges() as f64 / n as f64;
+        let max = (0..n as u32).map(|v| g.degree(v)).max().unwrap() as f64;
+        assert!(max > 4.0 * avg, "max {max} avg {avg}");
+    }
+
+    #[test]
+    fn weights_in_gap_range() {
+        let g = kronecker_graph(&KroneckerParams::gap(6, 4, 3));
+        for v in 0..g.num_vertices() as u32 {
+            for (_, w) in g.neighbors_weighted(v) {
+                assert!((1..=255).contains(&w));
+            }
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! GAP Benchmark Suite substrate: CSR graphs, the Kronecker generator,
+//! and serial high-performance ports of the six GAP kernels the paper
+//! benchmarks (§IV-A): betweenness centrality (BC), breadth-first search
+//! (BFS), connected components via Shiloach-Vishkin (CC), PageRank (PR),
+//! single-source shortest paths via delta-stepping (SSSP), and triangle
+//! counting (TC).
+//!
+//! Every kernel is written once, generic over a [`crate::probe::Probe`]:
+//! the zero-cost [`crate::probe::NoProbe`] instantiation is the native
+//! kernel used for wall-clock benchmarks and the public API; the
+//! simulator's `TraceProbe` instantiation replays the identical
+//! algorithm on the modeled SMT core.
+//!
+//! ```
+//! use relic_smt::graph::{kronecker, bfs};
+//! use relic_smt::probe::NoProbe;
+//! let g = kronecker::paper_graph();
+//! let depth = bfs::bfs(&g, 0, &mut NoProbe);
+//! assert_eq!(depth[0], 0);
+//! ```
+
+pub mod bc;
+pub mod bfs;
+pub mod cc;
+pub mod csr;
+pub mod dense;
+pub mod io;
+pub mod kronecker;
+pub mod oracle;
+pub mod pr;
+pub mod sssp;
+pub mod tc;
+
+pub use csr::CsrGraph;
+pub use kronecker::{kronecker_graph, paper_graph, KroneckerParams};

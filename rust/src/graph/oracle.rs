@@ -1,0 +1,197 @@
+//! Naive reference implementations used only by tests — deliberately
+//! written with *different* algorithms than the optimized kernels so
+//! agreement is meaningful (Dijkstra vs delta-stepping, union-find vs
+//! Shiloach-Vishkin, dense matrix PR vs CSR pull, pair-BFS BC vs
+//! Brandes, brute-force TC vs merge intersection).
+
+use std::collections::{BinaryHeap, VecDeque};
+
+use super::CsrGraph;
+
+/// BFS depths via an explicit deque (vs the kernel's vec-cursor queue).
+pub fn bfs_depths(g: &CsrGraph, source: u32) -> Vec<u32> {
+    let n = g.num_vertices();
+    let mut depth = vec![u32::MAX; n];
+    let mut q = VecDeque::new();
+    depth[source as usize] = 0;
+    q.push_back(source);
+    while let Some(u) = q.pop_front() {
+        for &v in g.neighbors(u) {
+            if depth[v as usize] == u32::MAX {
+                depth[v as usize] = depth[u as usize] + 1;
+                q.push_back(v);
+            }
+        }
+    }
+    depth
+}
+
+/// Union-find with path halving; labels normalized to min vertex id.
+pub fn components_min_label(g: &CsrGraph) -> Vec<u32> {
+    let n = g.num_vertices();
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+
+    fn find(parent: &mut [u32], mut x: u32) -> u32 {
+        while parent[x as usize] != x {
+            parent[x as usize] = parent[parent[x as usize] as usize];
+            x = parent[x as usize];
+        }
+        x
+    }
+
+    for u in 0..n as u32 {
+        for &v in g.neighbors(u) {
+            let (ru, rv) = (find(&mut parent, u), find(&mut parent, v));
+            if ru != rv {
+                let (lo, hi) = if ru < rv { (ru, rv) } else { (rv, ru) };
+                parent[hi as usize] = lo;
+            }
+        }
+    }
+    (0..n as u32).map(|v| find(&mut parent, v)).collect()
+}
+
+/// Dijkstra with a binary heap.
+pub fn dijkstra(g: &CsrGraph, source: u32) -> Vec<u32> {
+    let n = g.num_vertices();
+    let mut dist = vec![u32::MAX; n];
+    let mut heap = BinaryHeap::new();
+    dist[source as usize] = 0;
+    heap.push(std::cmp::Reverse((0u32, source)));
+    while let Some(std::cmp::Reverse((d, u))) = heap.pop() {
+        if d > dist[u as usize] {
+            continue;
+        }
+        for (v, w) in g.neighbors_weighted(u) {
+            let nd = d.saturating_add(w);
+            if nd < dist[v as usize] {
+                dist[v as usize] = nd;
+                heap.push(std::cmp::Reverse((nd, v)));
+            }
+        }
+    }
+    dist
+}
+
+/// PageRank by dense transition-matrix power iteration (no tolerance
+/// early-exit; pass the same iteration count to the kernel and disable
+/// its tolerance to compare).
+pub fn pagerank_dense(g: &CsrGraph, iters: u32) -> Vec<f64> {
+    let n = g.num_vertices();
+    let d = super::pr::DAMPING;
+    let mut r = vec![1.0 / n as f64; n];
+    for _ in 0..iters {
+        let mut next = vec![(1.0 - d) / n as f64; n];
+        for u in 0..n as u32 {
+            let deg = g.degree(u);
+            if deg == 0 {
+                continue;
+            }
+            let share = d * r[u as usize] / deg as f64;
+            for &v in g.neighbors(u) {
+                next[v as usize] += share;
+            }
+        }
+        r = next;
+    }
+    r
+}
+
+/// Brute-force triangle count: test every vertex triple.
+pub fn triangles_brute(g: &CsrGraph) -> u64 {
+    let n = g.num_vertices() as u32;
+    let mut count = 0;
+    for a in 0..n {
+        for b in (a + 1)..n {
+            if !g.neighbors(a).contains(&b) {
+                continue;
+            }
+            for c in (b + 1)..n {
+                if g.neighbors(a).contains(&c) && g.neighbors(b).contains(&c) {
+                    count += 1;
+                }
+            }
+        }
+    }
+    count
+}
+
+/// Brute-force betweenness: enumerate all shortest paths per pair via
+/// BFS path counting from each endpoint.
+pub fn betweenness_brute(g: &CsrGraph) -> Vec<f64> {
+    let n = g.num_vertices();
+    let mut bc = vec![0.0; n];
+    // sigma[s][v]: number of shortest s->v paths; depth via bfs_depths.
+    let depths: Vec<Vec<u32>> = (0..n as u32).map(|s| bfs_depths(g, s)).collect();
+    let sigmas: Vec<Vec<f64>> = (0..n as u32)
+        .map(|s| {
+            let mut sigma = vec![0.0; n];
+            sigma[s as usize] = 1.0;
+            // Relax in increasing depth order.
+            let mut order: Vec<u32> = (0..n as u32).collect();
+            order.sort_by_key(|&v| depths[s as usize][v as usize]);
+            for &v in &order {
+                let dv = depths[s as usize][v as usize];
+                if dv == u32::MAX || dv == 0 {
+                    continue;
+                }
+                sigma[v as usize] = g
+                    .neighbors(v)
+                    .iter()
+                    .filter(|&&p| depths[s as usize][p as usize] == dv - 1)
+                    .map(|&p| sigma[p as usize])
+                    .sum();
+            }
+            sigma
+        })
+        .collect();
+
+    for s in 0..n {
+        for t in 0..n {
+            if s == t || depths[s][t] == u32::MAX {
+                continue;
+            }
+            let total = sigmas[s][t];
+            if total == 0.0 {
+                continue;
+            }
+            for v in 0..n {
+                if v == s || v == t {
+                    continue;
+                }
+                let dv = depths[s][v];
+                if dv == u32::MAX || dv >= depths[s][t] || depths[t][v] == u32::MAX {
+                    continue;
+                }
+                if dv + depths[t][v] == depths[s][t] {
+                    bc[v] += sigmas[s][v] * sigmas[t][v] / total;
+                }
+            }
+        }
+    }
+    // Each unordered pair counted twice above; GAP halves undirected BC.
+    for b in &mut bc {
+        *b /= 2.0;
+    }
+    bc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_self_consistency_on_diamond() {
+        let g = CsrGraph::from_undirected_weighted(
+            4,
+            &[(0, 1, 1), (0, 2, 1), (1, 2, 1), (1, 3, 1), (2, 3, 1)],
+            true,
+        );
+        assert_eq!(bfs_depths(&g, 0), vec![0, 1, 1, 2]);
+        assert_eq!(components_min_label(&g), vec![0, 0, 0, 0]);
+        assert_eq!(dijkstra(&g, 0), vec![0, 1, 1, 2]);
+        assert_eq!(triangles_brute(&g), 2);
+        // Unit-weight Dijkstra equals BFS depth.
+        assert_eq!(dijkstra(&g, 3), bfs_depths(&g, 3));
+    }
+}

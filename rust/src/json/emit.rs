@@ -1,0 +1,118 @@
+//! JSON serialization (used for figure data files and round-trip tests).
+
+use super::Value;
+
+/// Serialize a [`Value`] to compact JSON.
+pub fn to_string(v: &Value) -> String {
+    let mut out = String::new();
+    write_value(v, &mut out);
+    out
+}
+
+fn write_value(v: &Value, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::Number(n) => write_number(*n, out),
+        Value::String(s) => write_string(s, out),
+        Value::Array(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value(item, out);
+            }
+            out.push(']');
+        }
+        Value::Object(members) => {
+            out.push('{');
+            for (i, (k, val)) in members.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_string(k, out);
+                out.push(':');
+                write_value(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn write_number(n: f64, out: &mut String) {
+    if n.fract() == 0.0 && n.abs() < 1e15 {
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        // Shortest representation that round-trips through our parser.
+        out.push_str(&format!("{n}"));
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse;
+    use super::*;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn emits_compact() {
+        let v = parse(br#"{ "a" : [ 1 , "x\n" , null ] }"#).unwrap();
+        assert_eq!(to_string(&v), r#"{"a":[1,"x\n",null]}"#);
+    }
+
+    fn random_value(rng: &mut Rng, depth: u32) -> Value {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.chance(0.5)),
+            2 => Value::Number((rng.below(2_000_001) as f64 - 1e6) / 8.0),
+            3 => {
+                let len = rng.below(12) as usize;
+                Value::String(
+                    (0..len)
+                        .map(|_| char::from(32 + rng.below(94) as u8))
+                        .collect(),
+                )
+            }
+            4 => Value::Array(
+                (0..rng.below(5)).map(|_| random_value(rng, depth - 1)).collect(),
+            ),
+            _ => Value::Object(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_value(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+
+    #[test]
+    fn property_roundtrip() {
+        crate::testutil::check(200, |rng| {
+            let v = random_value(rng, 4);
+            let s = to_string(&v);
+            let v2 = parse(s.as_bytes())
+                .map_err(|e| format!("reparse failed: {e} on {s}"))?;
+            if v != v2 {
+                return Err(format!("roundtrip mismatch: {s}"));
+            }
+            Ok(())
+        });
+    }
+}

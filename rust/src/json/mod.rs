@@ -1,0 +1,80 @@
+//! A fast DOM JSON parser — the RapidJSON substitute (DESIGN.md §2).
+//!
+//! The paper's JSON benchmark parses the json.org "widget" sample with
+//! RapidJSON, a ~1.1 µs task. This module provides the same workload
+//! shape: a recursive-descent parser building a DOM in a single pass,
+//! instrumented with [`crate::probe::Probe`] hooks so the identical code
+//! path drives both wall-clock benchmarks and the SMT simulator.
+//!
+//! It doubles as the crate's utility JSON layer (PJRT artifact manifests,
+//! figure emission) via [`Value`] accessors and [`emit`].
+//!
+//! ```
+//! use relic_smt::json::parse;
+//! let v = parse(br#"{"a": [1, 2.5, true, null, "x"]}"#).unwrap();
+//! assert_eq!(v["a"][1].as_f64(), Some(2.5));
+//! ```
+
+mod emit;
+mod parser;
+mod value;
+
+pub use emit::to_string;
+pub use parser::{parse, parse_probed, Error};
+pub use value::Value;
+
+/// The json.org "widget" sample document used by the paper's JSON
+/// parsing benchmark (§IV-B, reference [60]).
+pub const WIDGET: &[u8] = br#"{"widget": {
+    "debug": "on",
+    "window": {
+        "title": "Sample Konfabulator Widget",
+        "name": "main_window",
+        "width": 500,
+        "height": 500
+    },
+    "image": {
+        "src": "Images/Sun.png",
+        "name": "sun1",
+        "hOffset": 250,
+        "vOffset": 250,
+        "alignment": "center"
+    },
+    "text": {
+        "data": "Click Here",
+        "size": 36,
+        "style": "bold",
+        "name": "text1",
+        "hOffset": 250,
+        "vOffset": 100,
+        "alignment": "center",
+        "onMouseUp": "sun1.opacity = (sun1.opacity / 100) * 90;"
+    }
+}}"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widget_parses() {
+        let v = parse(WIDGET).unwrap();
+        assert_eq!(v["widget"]["window"]["width"].as_f64(), Some(500.0));
+        assert_eq!(
+            v["widget"]["image"]["src"].as_str(),
+            Some("Images/Sun.png")
+        );
+        assert_eq!(
+            v["widget"]["text"]["onMouseUp"].as_str(),
+            Some("sun1.opacity = (sun1.opacity / 100) * 90;")
+        );
+    }
+
+    #[test]
+    fn widget_roundtrips() {
+        let v = parse(WIDGET).unwrap();
+        let s = to_string(&v);
+        let v2 = parse(s.as_bytes()).unwrap();
+        assert_eq!(v, v2);
+    }
+}

@@ -1,0 +1,443 @@
+//! Recursive-descent JSON parser with probe instrumentation.
+//!
+//! Design follows RapidJSON's fast path: byte-level dispatch, manual
+//! number parsing, a single allocation per string/container. Probe hooks
+//! fire at cache-line granularity on the input buffer plus per-node on
+//! DOM construction, giving the SMT simulator a memory trace with the
+//! same locality structure as the native parse.
+
+use crate::probe::{NoProbe, Probe};
+
+use super::Value;
+
+/// Parse error with byte offset.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Error {
+    /// Byte offset of the error in the input.
+    pub offset: usize,
+    /// Static description of what went wrong.
+    pub reason: &'static str,
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "JSON parse error at byte {}: {}", self.offset, self.reason)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Parse a complete JSON document.
+pub fn parse(input: &[u8]) -> Result<Value, Error> {
+    parse_probed(input, &mut NoProbe)
+}
+
+/// Parse with probe instrumentation (the simulator's entry point).
+pub fn parse_probed<P: Probe>(input: &[u8], probe: &mut P) -> Result<Value, Error> {
+    let mut p = Parser { input, pos: 0, probe, line_seen: u64::MAX, depth: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.input.len() {
+        return Err(p.err("trailing data"));
+    }
+    Ok(v)
+}
+
+/// Logical base address of the input buffer in probe address space.
+const INPUT_BASE: u64 = 0x1000_0000;
+/// Logical base address of the DOM arena in probe address space.
+const DOM_BASE: u64 = 0x2000_0000;
+/// Nesting limit (RapidJSON defaults to kParseDefaultFlags with
+/// effectively unbounded depth; we bound to keep the parser stack-safe).
+const MAX_DEPTH: u32 = 128;
+
+struct Parser<'a, P: Probe> {
+    input: &'a [u8],
+    pos: usize,
+    probe: &'a mut P,
+    /// Last input cache line touched (dedup so the trace has one load
+    /// per 64-byte line, matching real streaming access).
+    line_seen: u64,
+    depth: u32,
+}
+
+impl<'a, P: Probe> Parser<'a, P> {
+    #[inline]
+    fn err(&self, reason: &'static str) -> Error {
+        Error { offset: self.pos, reason }
+    }
+
+    /// Current byte, with a probe load on new cache lines.
+    #[inline]
+    fn peek(&mut self) -> Option<u8> {
+        let b = *self.input.get(self.pos)?;
+        let line = INPUT_BASE + (self.pos as u64 & !63);
+        if line != self.line_seen {
+            self.line_seen = line;
+            self.probe.load(line);
+        }
+        Some(b)
+    }
+
+    #[inline]
+    fn bump(&mut self) {
+        self.pos += 1;
+    }
+
+    #[inline]
+    fn skip_ws(&mut self) {
+        let mut skipped = 0u32;
+        while let Some(b) = self.peek() {
+            if matches!(b, b' ' | b'\t' | b'\n' | b'\r') {
+                self.bump();
+                skipped += 1;
+            } else {
+                break;
+            }
+        }
+        if skipped > 0 {
+            self.probe.compute(skipped); // byte-wise whitespace scan
+        }
+    }
+
+    fn expect(&mut self, b: u8, reason: &'static str) -> Result<(), Error> {
+        if self.peek() == Some(b) {
+            self.bump();
+            Ok(())
+        } else {
+            Err(self.err(reason))
+        }
+    }
+
+    /// Record construction of one DOM node.
+    #[inline]
+    fn node(&mut self) {
+        // One store per node into the logical DOM arena; sequential
+        // placement mirrors an arena allocator. Linking into the parent
+        // container chases the container pointer (dependent load).
+        self.probe.load_dep(DOM_BASE + (self.pos as u64));
+        self.probe.store(DOM_BASE + (self.pos as u64) * 2);
+        self.probe.compute(10); // node init + type tag + parent link
+
+    }
+
+    fn value(&mut self) -> Result<Value, Error> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            self.depth -= 1;
+            return Err(self.err("nesting too deep"));
+        }
+        let b = self.peek().ok_or_else(|| self.err("unexpected end"))?;
+        self.probe.branch(false); // value-kind dispatch is data-dependent
+        let v = match b {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => self.string().map(Value::String),
+            b't' => self.lit(b"true", Value::Bool(true)),
+            b'f' => self.lit(b"false", Value::Bool(false)),
+            b'n' => self.lit(b"null", Value::Null),
+            b'-' | b'0'..=b'9' => self.number(),
+            _ => Err(self.err("unexpected character")),
+        };
+        self.depth -= 1;
+        v
+    }
+
+    fn lit(&mut self, text: &'static [u8], v: Value) -> Result<Value, Error> {
+        for &c in text {
+            if self.peek() != Some(c) {
+                return Err(self.err("invalid literal"));
+            }
+            self.bump();
+        }
+        self.node();
+        Ok(v)
+    }
+
+    fn object(&mut self) -> Result<Value, Error> {
+        self.expect(b'{', "expected '{'")?;
+        let mut members = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.bump();
+            self.node();
+            return Ok(Value::Object(members));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':', "expected ':'")?;
+            self.skip_ws();
+            let val = self.value()?;
+            members.push((key, val));
+            self.probe.store(DOM_BASE + members.len() as u64 * 16);
+            self.skip_ws();
+            self.probe.branch(true); // loop continuation
+            match self.peek() {
+                Some(b',') => self.bump(),
+                Some(b'}') => {
+                    self.bump();
+                    break;
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+        self.node();
+        Ok(Value::Object(members))
+    }
+
+    fn array(&mut self) -> Result<Value, Error> {
+        self.expect(b'[', "expected '['")?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.bump();
+            self.node();
+            return Ok(Value::Array(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            self.probe.branch(true);
+            match self.peek() {
+                Some(b',') => self.bump(),
+                Some(b']') => {
+                    self.bump();
+                    break;
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+        self.node();
+        Ok(Value::Array(items))
+    }
+
+    fn string(&mut self) -> Result<String, Error> {
+        self.expect(b'"', "expected '\"'")?;
+        let mut s = Vec::new();
+        loop {
+            let b = self.peek().ok_or_else(|| self.err("unterminated string"))?;
+            self.bump();
+            match b {
+                b'"' => break,
+                b'\\' => {
+                    let e = self.peek().ok_or_else(|| self.err("bad escape"))?;
+                    self.bump();
+                    self.probe.branch(false);
+                    match e {
+                        b'"' => s.push(b'"'),
+                        b'\\' => s.push(b'\\'),
+                        b'/' => s.push(b'/'),
+                        b'b' => s.push(8),
+                        b'f' => s.push(12),
+                        b'n' => s.push(b'\n'),
+                        b'r' => s.push(b'\r'),
+                        b't' => s.push(b'\t'),
+                        b'u' => {
+                            let cp = self.hex4()?;
+                            let ch = char::from_u32(cp)
+                                .ok_or_else(|| self.err("bad \\u escape"))?;
+                            let mut buf = [0u8; 4];
+                            s.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                }
+                0x00..=0x1F => return Err(self.err("control char in string")),
+                _ => s.push(b),
+            }
+        }
+        // Byte-wise scan/copy/escape-check cost (RapidJSON processes
+        // strings byte-by-byte on this path).
+        self.probe.compute((3 * s.len().max(1)) as u32);
+        self.node();
+        String::from_utf8(s).map_err(|_| self.err("invalid UTF-8"))
+    }
+
+    fn hex4(&mut self) -> Result<u32, Error> {
+        let mut cp = 0u32;
+        for _ in 0..4 {
+            let b = self.peek().ok_or_else(|| self.err("bad \\u escape"))?;
+            self.bump();
+            let d = match b {
+                b'0'..=b'9' => b - b'0',
+                b'a'..=b'f' => b - b'a' + 10,
+                b'A'..=b'F' => b - b'A' + 10,
+                _ => return Err(self.err("bad hex digit")),
+            };
+            cp = cp * 16 + d as u32;
+        }
+        Ok(cp)
+    }
+
+    fn number(&mut self) -> Result<Value, Error> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.bump();
+        }
+        // Integer part.
+        let mut int: f64 = 0.0;
+        let mut digits = 0;
+        while let Some(b @ b'0'..=b'9') = self.peek() {
+            int = int * 10.0 + (b - b'0') as f64;
+            self.bump();
+            digits += 1;
+        }
+        if digits == 0 {
+            return Err(self.err("expected digit"));
+        }
+        // Fraction.
+        let mut frac = 0.0;
+        let mut scale = 0.1;
+        if self.peek() == Some(b'.') {
+            self.bump();
+            let mut fdigits = 0;
+            while let Some(b @ b'0'..=b'9') = self.peek() {
+                frac += (b - b'0') as f64 * scale;
+                scale *= 0.1;
+                self.bump();
+                fdigits += 1;
+            }
+            if fdigits == 0 {
+                return Err(self.err("expected fraction digit"));
+            }
+        }
+        // Exponent.
+        let mut exp: i32 = 0;
+        let mut exp_neg = false;
+        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
+            self.bump();
+            match self.peek() {
+                Some(b'+') => self.bump(),
+                Some(b'-') => {
+                    exp_neg = true;
+                    self.bump();
+                }
+                _ => {}
+            }
+            let mut edigits = 0;
+            while let Some(b @ b'0'..=b'9') = self.peek() {
+                exp = exp.saturating_mul(10).saturating_add((b - b'0') as i32);
+                self.bump();
+                edigits += 1;
+            }
+            if edigits == 0 {
+                return Err(self.err("expected exponent digit"));
+            }
+        }
+        let mut v = int + frac;
+        if self.input.get(start) == Some(&b'-') {
+            v = -v;
+        }
+        if exp != 0 {
+            let e = if exp_neg { -exp } else { exp };
+            v *= 10f64.powi(e);
+        }
+        // Digit loop: mul-add chain per digit plus fp assembly.
+        self.probe.compute((2 * (self.pos - start)) as u32);
+        self.probe.compute_fp(3);
+        self.node();
+        Ok(Value::Number(v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(parse(b"null").unwrap(), Value::Null);
+        assert_eq!(parse(b"true").unwrap(), Value::Bool(true));
+        assert_eq!(parse(b"false").unwrap(), Value::Bool(false));
+        assert_eq!(parse(b"42").unwrap(), Value::Number(42.0));
+        assert_eq!(parse(b"-3.25").unwrap(), Value::Number(-3.25));
+        assert_eq!(parse(b"1e3").unwrap(), Value::Number(1000.0));
+        assert_eq!(parse(b"2.5E-2").unwrap(), Value::Number(0.025));
+        assert_eq!(parse(br#""hi""#).unwrap(), Value::String("hi".into()));
+    }
+
+    #[test]
+    fn escapes() {
+        assert_eq!(
+            parse(br#""a\n\t\"\\A""#).unwrap(),
+            Value::String("a\n\t\"\\A".into())
+        );
+        // UTF-8 passthrough ("é" as raw bytes) and \u escape.
+        assert_eq!(
+            parse(b"\"\xc3\xa9\"").unwrap(),
+            Value::String("\u{e9}".into())
+        );
+        assert_eq!(
+            parse(br#""\u00e9""#).unwrap(),
+            Value::String("\u{e9}".into())
+        );
+    }
+
+    #[test]
+    fn containers() {
+        let v = parse(b" [1, [2, 3], {\"k\": 4}] ").unwrap();
+        assert_eq!(v[0].as_f64(), Some(1.0));
+        assert_eq!(v[1][1].as_f64(), Some(3.0));
+        assert_eq!(v[2]["k"].as_f64(), Some(4.0));
+        assert_eq!(parse(b"{}").unwrap(), Value::Object(vec![]));
+        assert_eq!(parse(b"[]").unwrap(), Value::Array(vec![]));
+    }
+
+    #[test]
+    fn errors() {
+        for bad in [
+            &b"{"[..],
+            b"[1,",
+            b"\"unterminated",
+            b"01x",
+            b"tru",
+            b"{\"k\" 1}",
+            b"1 2",
+            b"",
+            b"[1,]2",
+            b"\"\\q\"",
+            b"1.",
+            b"1e",
+            b"\x01",
+        ] {
+            assert!(parse(bad).is_err(), "should fail: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn deep_nesting_bounded() {
+        let deep: Vec<u8> = std::iter::repeat(b'[')
+            .take(200)
+            .chain(std::iter::repeat(b']').take(200))
+            .collect();
+        assert!(parse(&deep).is_err());
+        let ok: Vec<u8> = std::iter::repeat(b'[')
+            .take(100)
+            .chain(std::iter::repeat(b']').take(100))
+            .collect();
+        assert!(parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn probe_sees_input_lines() {
+        struct L(Vec<u64>);
+        impl Probe for L {
+            fn load(&mut self, a: u64) {
+                self.0.push(a);
+            }
+        }
+        let mut p = L(Vec::new());
+        let doc = vec![b' '; 200].into_iter().chain(b"1".iter().copied())
+            .collect::<Vec<_>>();
+        parse_probed(&doc, &mut p).unwrap();
+        // 201 bytes = 4 cache lines of input (plus DOM-arena touches).
+        let input_lines: Vec<u64> =
+            p.0.iter().copied().filter(|a| *a < super::DOM_BASE).collect();
+        assert_eq!(input_lines.len(), 4);
+        assert!(input_lines.windows(2).all(|w| w[1] == w[0] + 64));
+    }
+}

@@ -1,0 +1,135 @@
+//! The JSON DOM.
+
+use std::ops::Index;
+
+/// A parsed JSON document node.
+///
+/// Objects preserve insertion order (like RapidJSON's DOM) and use a
+/// flat `Vec` of pairs — faster than a hash map at the benchmark's
+/// document sizes and deterministic for round-trip tests.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Number(f64),
+    String(String),
+    Array(Vec<Value>),
+    Object(Vec<(String, Value)>),
+}
+
+impl Value {
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Number(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Numeric value as u64 if it is a non-negative integer.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Number(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::String(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_object(&self) -> Option<&[(String, Value)]> {
+        match self {
+            Value::Object(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    /// Object field lookup; `None` for missing keys or non-objects.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Object(o) => o.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Array element lookup.
+    pub fn at(&self, idx: usize) -> Option<&Value> {
+        match self {
+            Value::Array(a) => a.get(idx),
+            _ => None,
+        }
+    }
+
+    /// Total node count (objects/arrays count themselves plus children);
+    /// used as the parse benchmark's checksum so work cannot be elided.
+    pub fn node_count(&self) -> usize {
+        match self {
+            Value::Array(a) => 1 + a.iter().map(Value::node_count).sum::<usize>(),
+            Value::Object(o) => {
+                1 + o.iter().map(|(_, v)| v.node_count()).sum::<usize>()
+            }
+            _ => 1,
+        }
+    }
+}
+
+static NULL: Value = Value::Null;
+
+impl Index<&str> for Value {
+    type Output = Value;
+    /// Panics-free indexing: missing keys yield `Value::Null`.
+    fn index(&self, key: &str) -> &Value {
+        self.get(key).unwrap_or(&NULL)
+    }
+}
+
+impl Index<usize> for Value {
+    type Output = Value;
+    fn index(&self, idx: usize) -> &Value {
+        self.at(idx).unwrap_or(&NULL)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let v = Value::Object(vec![
+            ("n".into(), Value::Number(3.0)),
+            ("s".into(), Value::String("hi".into())),
+            ("a".into(), Value::Array(vec![Value::Bool(true), Value::Null])),
+        ]);
+        assert_eq!(v["n"].as_u64(), Some(3));
+        assert_eq!(v["s"].as_str(), Some("hi"));
+        assert_eq!(v["a"][0].as_bool(), Some(true));
+        assert_eq!(v["a"][1], Value::Null);
+        assert_eq!(v["missing"], Value::Null);
+        assert_eq!(v.node_count(), 6);
+    }
+
+    #[test]
+    fn as_u64_rejects_fractions_and_negatives() {
+        assert_eq!(Value::Number(1.5).as_u64(), None);
+        assert_eq!(Value::Number(-2.0).as_u64(), None);
+        assert_eq!(Value::Number(7.0).as_u64(), Some(7));
+    }
+}

@@ -1,0 +1,47 @@
+//! # relic-smt — fine-grained task parallelism on SMT cores
+//!
+//! A reproduction of *"Exploring Fine-grained Task Parallelism on
+//! Simultaneous Multithreading Cores"* (Los & Petushkov, 2024) as a
+//! complete system:
+//!
+//! * [`relic`] — the paper's contribution: a specialized software-only
+//!   task-parallel framework for one 2-way SMT core (main/assistant
+//!   threads, lock-free SPSC queue, busy-waiting with `pause`,
+//!   `wake_up_hint`/`sleep_hint`).
+//! * [`runtimes`] — models of the seven baseline frameworks the paper
+//!   compares against (LLVM/GNU/Intel/X-OpenMP, oneTBB, Taskflow,
+//!   OpenCilk), behind one [`runtimes::TaskRuntime`] interface.
+//! * [`graph`] — the GAP benchmark substrate: CSR graphs, a Kronecker
+//!   generator, and the six GAP kernels (BC, BFS, CC, PR, SSSP, TC).
+//! * [`json`] — the RapidJSON-substitute parser used by the JSON
+//!   benchmark.
+//! * [`smtsim`] — the hardware substitution (DESIGN.md §2): a
+//!   cycle-approximate simulator of a 2-way SMT x86 core used to
+//!   regenerate the paper's figures deterministically on non-SMT hosts.
+//! * [`bench`] — the experiment harness regenerating Figures 1/3/4 and
+//!   the §IV granularity table, in both simulator and wall-clock modes.
+//! * [`runtime`] — PJRT client wrapper executing the AOT-compiled JAX /
+//!   Pallas graph kernels (`artifacts/*.hlo.txt`).
+//! * [`coordinator`] — the hybrid analytics service: coarse graph
+//!   analytics offloaded to PJRT executables, fine-grained subtasks run
+//!   through Relic, as motivated in the paper's §VI-A.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod graph;
+pub mod json;
+pub mod metrics;
+pub mod probe;
+pub mod relic;
+pub mod runtime;
+pub mod runtimes;
+pub mod smtsim;
+pub mod testutil;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,241 @@
+//! `repro` — the experiment CLI.
+//!
+//! ```text
+//! repro fig1         regenerate Fig. 1 (7 frameworks x 7 kernels)
+//! repro fig3         regenerate Fig. 3 (Relic)
+//! repro fig4         regenerate Fig. 4 + the §V geomeans
+//! repro granularity  regenerate the §IV task-granularity table
+//! repro sweep --kernel tc   speedup vs task-size crossover sweep
+//! repro ablation --sweep waiting|queue-capacity|fetch-policy
+//! repro wallclock    wall-clock mode (needs an SMT host for meaning)
+//! repro serve        run the hybrid analytics service demo
+//! repro selftest     PJRT artifact round-trip check
+//! ```
+//!
+//! Common options: `--out results` writes figure JSON/text files;
+//! `--iters N` (wallclock); `--artifacts DIR`.
+
+use std::path::Path;
+
+use relic_smt::bench::{self, figures};
+use relic_smt::bench::ablation;
+use relic_smt::cli::Args;
+use relic_smt::coordinator::{Coordinator, GraphKernel, Request, Router, RouterConfig};
+use relic_smt::graph::kronecker::paper_graph;
+use relic_smt::relic::affinity;
+use relic_smt::runtime::{GraphExecutor, Manifest};
+use relic_smt::runtimes;
+use relic_smt::smtsim::CoreConfig;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(err) => {
+            eprintln!("error: {err:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    let cfg = CoreConfig::default();
+    match args.command.as_deref() {
+        Some("fig1") => {
+            let cells = figures::fig1(&cfg);
+            println!("Figure 1 — speedups over serial (simulated SMT core)\n");
+            println!("{}", figures::render_matrix(&cells));
+            if args.flag("summary") {
+                let rows = figures::section5_geomeans(&cells);
+                println!("{}", figures::render_summary(&rows, "§V geomeans (with degradations)"));
+            }
+            write_out(args, "fig1.json", &figures::cells_to_json(&cells))?;
+            write_out(
+                args,
+                "fig1.svg",
+                &relic_smt::bench::svg::grouped_bars("Figure 1 — baseline frameworks", &cells),
+            )?;
+        }
+        Some("fig3") => {
+            let cells = figures::fig3(&cfg);
+            println!("Figure 3 — Relic speedups over serial (simulated SMT core)\n");
+            println!("{}", figures::render_matrix(&cells));
+            write_out(args, "fig3.json", &figures::cells_to_json(&cells))?;
+            write_out(
+                args,
+                "fig3.svg",
+                &relic_smt::bench::svg::grouped_bars("Figure 3 — Relic", &cells),
+            )?;
+        }
+        Some("fig4") => {
+            let f1 = figures::fig1(&cfg);
+            let f3 = figures::fig3(&cfg);
+            let rows = figures::fig4(&f1, &f3);
+            println!(
+                "{}",
+                figures::render_summary(
+                    &rows,
+                    "Figure 4 — average speedup w/o negative outliers"
+                )
+            );
+            let geo = figures::section5_geomeans(&f1);
+            println!("{}", figures::render_summary(&geo, "§V geomeans (with degradations)"));
+            write_out(
+                args,
+                "fig4.svg",
+                &relic_smt::bench::svg::summary_bars(
+                    "Figure 4 — average speedup w/o negative outliers",
+                    &rows,
+                ),
+            )?;
+        }
+        Some("sweep") => {
+            // Granularity sweep (DESIGN.md: the crossover experiment).
+            let kernel = args.get("kernel").unwrap_or("tc");
+            let points = relic_smt::bench::sweep::granularity_sweep(
+                kernel,
+                &relic_smt::bench::sweep::DEFAULT_MICROS,
+                &cfg,
+            );
+            println!("granularity sweep — kernel '{kernel}', speedup vs task size
+");
+            println!("{}", relic_smt::bench::sweep::render(&points));
+            for rt in relic_smt::smtsim::model_names() {
+                match relic_smt::bench::sweep::breakeven_micros(&points, rt, 1.0) {
+                    Some(us) => println!("{rt:<14} breaks even at {us} µs"),
+                    None => println!("{rt:<14} never breaks even in range"),
+                }
+            }
+        }
+        Some("granularity") => {
+            let rows = figures::granularity(&cfg);
+            println!("§IV serial task granularities (calibrated simulation)\n");
+            println!("{}", figures::render_granularity(&rows));
+        }
+        Some("ablation") => {
+            match args.get("sweep").unwrap_or("waiting") {
+                "waiting" => {
+                    let rows = ablation::waiting_mechanism(&cfg);
+                    println!("{}", ablation::render(&rows, "A2 — waiting mechanism (Relic)"));
+                }
+                "queue-capacity" => {
+                    let rows = ablation::queue_capacity(&cfg, &[2, 4, 8, 16, 32, 64, 128]);
+                    println!("{}", ablation::render(&rows, "A1 — SPSC queue capacity"));
+                }
+                "fetch-policy" => {
+                    let rows = ablation::fetch_policy(&cfg);
+                    println!("{}", ablation::render(&rows, "A3 — SMT fetch policy"));
+                }
+                other => anyhow::bail!("unknown sweep {other}"),
+            }
+        }
+        Some("wallclock") => {
+            println!("host: {}", affinity::topology_summary());
+            if affinity::smt_sibling_pair().is_none() {
+                println!("WARNING: no SMT siblings — wall-clock numbers are not meaningful here; sim mode (fig1/fig3/fig4) is authoritative.\n");
+            }
+            let iters = args.get_u64("iters", 2_000);
+            let warmup = args.get_u64("warmup", 100);
+            let pair = affinity::smt_sibling_pair();
+            if let Some((main_cpu, _)) = pair {
+                affinity::pin_to_cpu(main_cpu);
+            }
+            println!("{:<10}{:<14}{:>10}", "kernel", "runtime", "speedup");
+            for w in bench::Workload::all() {
+                for name in runtimes::FRAMEWORK_NAMES {
+                    let mut rt = runtimes::by_name(name, pair.map(|p| p.1)).unwrap();
+                    let s = bench::wallclock_speedup(rt.as_mut(), &w, iters, warmup);
+                    println!("{:<10}{:<14}{:>10.3}", w.name, name, s);
+                }
+                // Relic via its native implementation.
+                let relic = relic_smt::relic::Relic::with_config(
+                    relic_smt::relic::RelicConfig {
+                        assistant_cpu: pair.map(|p| p.1),
+                        ..Default::default()
+                    },
+                );
+                let sink = std::sync::atomic::AtomicU64::new(0);
+                let task = || {
+                    sink.fetch_add(w.run_native(), std::sync::atomic::Ordering::Relaxed);
+                };
+                let serial = bench::measure(iters, warmup, || {
+                    task();
+                    task();
+                });
+                let par = bench::measure(iters, warmup, || relic.pair(&task, &task));
+                println!("{:<10}{:<14}{:>10.3}", w.name, "relic", serial.mean_ns / par.mean_ns);
+            }
+        }
+        Some("serve") => {
+            let artifacts = args.get("artifacts").unwrap_or("artifacts");
+            let executor = GraphExecutor::new(Path::new(artifacts)).ok();
+            let manifest = Manifest::load(Path::new(artifacts)).ok();
+            if executor.is_none() {
+                println!("(no artifacts at {artifacts}; all requests run natively)");
+            }
+            let router = Router::new(RouterConfig::default(), manifest.as_ref());
+            let mut coord = Coordinator::with_parts(router, executor);
+            let t_warm = std::time::Instant::now();
+            coord.warmup();
+            println!("executable warmup: {:?}", t_warm.elapsed());
+            let n_req = args.get_u64("requests", 64) as usize;
+            let kernels = GraphKernel::all();
+            let requests: Vec<Request> = (0..n_req)
+                .map(|i| Request {
+                    id: i as u64,
+                    kernel: kernels[i % kernels.len()],
+                    graph: paper_graph(),
+                    source: (i % 32) as u32,
+                })
+                .collect();
+            let t0 = std::time::Instant::now();
+            let responses = coord.process_batch(requests);
+            let dt = t0.elapsed();
+            println!("processed {} requests in {:?}", responses.len(), dt);
+            println!("{}", coord.report());
+        }
+        Some("selftest") => {
+            let artifacts = args.get("artifacts").unwrap_or("artifacts");
+            let mut exec = GraphExecutor::new(Path::new(artifacts))?;
+            println!("platform: {}", exec.platform());
+            println!("artifacts: {:?}", exec.available());
+            // Round-trip PageRank vs the native kernel.
+            let g = paper_graph();
+            let n = g.num_vertices();
+            let scores = exec.execute(
+                "pagerank",
+                n,
+                &[
+                    relic_smt::graph::dense::transition(&g),
+                    relic_smt::graph::dense::uniform(n),
+                ],
+            )?;
+            let native =
+                relic_smt::graph::pr::pagerank(&g, 20, 0.0, &mut relic_smt::probe::NoProbe);
+            let max_err = scores
+                .iter()
+                .zip(&native)
+                .map(|(a, b)| (*a as f64 - b).abs())
+                .fold(0.0f64, f64::max);
+            println!("pagerank max |pjrt - native| = {max_err:.2e}");
+            anyhow::ensure!(max_err < 1e-4, "PJRT pagerank diverges from native");
+            println!("selftest OK");
+        }
+        _ => {
+            println!("usage: repro <fig1|fig3|fig4|granularity|ablation|wallclock|serve|selftest> [--options]");
+            println!("see rust/src/main.rs docs for details");
+        }
+    }
+    Ok(())
+}
+
+fn write_out(args: &Args, name: &str, content: &str) -> anyhow::Result<()> {
+    if let Some(dir) = args.get("out") {
+        std::fs::create_dir_all(dir)?;
+        let path = Path::new(dir).join(name);
+        std::fs::write(&path, content)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}

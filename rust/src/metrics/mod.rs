@@ -1,0 +1,203 @@
+//! Lightweight metrics: counters, gauges, and streaming histograms with
+//! percentile queries — used by the coordinator service and the
+//! benchmark harness (latency/throughput reporting in the E2E example).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic counter (thread-safe).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-bucketed histogram for latencies in nanoseconds.
+///
+/// 64 buckets of power-of-two widths cover 1 ns … ~18 s; recording is a
+/// single atomic increment, percentile queries interpolate within the
+/// matched bucket. Accuracy (<~3% relative error per bucket) is ample
+/// for p50/p99 reporting.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; 64],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value (e.g. nanoseconds).
+    pub fn record(&self, value: u64) {
+        let idx = (64 - value.max(1).leading_zeros() as usize).min(63);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+        self.max.fetch_max(value, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Approximate percentile (`q` in [0, 1]).
+    pub fn percentile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= target {
+                // Interpolate inside [2^(idx-1), 2^idx).
+                let lo = if idx == 0 { 0 } else { 1u64 << (idx - 1) };
+                let hi = if idx >= 63 { u64::MAX } else { 1u64 << idx };
+                let frac = (target - seen) as f64 / c as f64;
+                // Clamp: interpolation may overshoot the true maximum.
+                return (lo + ((hi - lo) as f64 * frac) as u64).min(self.max());
+            }
+            seen += c;
+        }
+        self.max()
+    }
+
+    /// p50/p90/p99/max snapshot, formatted for logs.
+    pub fn summary(&self, unit: &str) -> String {
+        format!(
+            "n={} mean={:.0}{unit} p50={}{unit} p90={}{unit} p99={}{unit} max={}{unit}",
+            self.count(),
+            self.mean(),
+            self.percentile(0.50),
+            self.percentile(0.90),
+            self.percentile(0.99),
+            self.max(),
+        )
+    }
+}
+
+/// Wall-clock stopwatch recording into a [`Histogram`] on drop.
+pub struct Timer<'a> {
+    hist: &'a Histogram,
+    start: std::time::Instant,
+}
+
+impl<'a> Timer<'a> {
+    pub fn start(hist: &'a Histogram) -> Self {
+        Timer { hist, start: std::time::Instant::now() }
+    }
+}
+
+impl Drop for Timer<'_> {
+    fn drop(&mut self) {
+        self.hist.record(self.start.elapsed().as_nanos() as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::new();
+        c.inc();
+        c.add(41);
+        assert_eq!(c.get(), 42);
+    }
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v * 100);
+        }
+        assert_eq!(h.count(), 1000);
+        let (p50, p90, p99) = (h.percentile(0.5), h.percentile(0.9), h.percentile(0.99));
+        assert!(p50 <= p90 && p90 <= p99, "{p50} {p90} {p99}");
+        assert!(p99 <= h.max());
+        // Log-bucketed: p50 of uniform 100..100_000 is within its 2x bucket.
+        assert!((25_000..100_000).contains(&p50), "p50={p50}");
+    }
+
+    #[test]
+    fn histogram_empty_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(0.99), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn timer_records() {
+        let h = Histogram::new();
+        {
+            let _t = Timer::start(&h);
+        }
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn property_percentile_monotone_in_q() {
+        crate::testutil::check(20, |rng| {
+            let h = Histogram::new();
+            for _ in 0..500 {
+                h.record(rng.below(1_000_000) + 1);
+            }
+            let mut last = 0;
+            for q in [0.1, 0.3, 0.5, 0.7, 0.9, 0.99, 1.0] {
+                let p = h.percentile(q);
+                if p < last {
+                    return Err(format!("percentile not monotone at q={q}"));
+                }
+                last = p;
+            }
+            Ok(())
+        });
+    }
+}

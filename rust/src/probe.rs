@@ -1,0 +1,116 @@
+//! Execution probes: one kernel implementation, two backends.
+//!
+//! The benchmark kernels ([`crate::graph`], [`crate::json`]) are written
+//! once, generic over a [`Probe`]. With [`NoProbe`] every hook is an
+//! inlined no-op and the kernel compiles to its plain native form (used
+//! for wall-clock measurement and by the public API). With
+//! `smtsim::TraceProbe` the same code path records an operation trace
+//! that the SMT core simulator replays cycle-by-cycle (used to
+//! regenerate the paper's figures on non-SMT hosts — DESIGN.md §2).
+//!
+//! Address convention: hooks receive *logical* byte addresses, usually
+//! `base + index * size_of::<T>()`, so traces are deterministic across
+//! runs and independent of the host allocator.
+
+/// Observation hooks called by instrumented kernels.
+///
+/// All methods have no-op defaults so probes may observe only what they
+/// need. Implementations must be cheap: hooks sit in kernel inner loops.
+pub trait Probe {
+    /// A data load of one machine word (or less) at logical address `addr`.
+    #[inline(always)]
+    fn load(&mut self, addr: u64) {
+        let _ = addr;
+    }
+
+    /// A *dependent* load: the address was produced by a preceding load
+    /// (pointer chasing — BFS queue/visited, Brandes traversal). These
+    /// cannot be prefetched or overlapped by the OoO window, and SMT
+    /// partitioning of the load buffers makes them slower again when a
+    /// sibling thread is active.
+    #[inline(always)]
+    fn load_dep(&mut self, addr: u64) {
+        self.load(addr);
+    }
+
+    /// A data store at logical address `addr`.
+    #[inline(always)]
+    fn store(&mut self, addr: u64) {
+        let _ = addr;
+    }
+
+    /// `n` ALU micro-ops of plain computation.
+    #[inline(always)]
+    fn compute(&mut self, n: u32) {
+        let _ = n;
+    }
+
+    /// `n` *dependent* floating-point micro-ops (a latency chain the
+    /// out-of-order window cannot hide — e.g. PageRank's running sums).
+    #[inline(always)]
+    fn compute_fp(&mut self, n: u32) {
+        let _ = n;
+    }
+
+    /// A conditional branch; `predictable` hints whether a real branch
+    /// predictor would usually get it right (loop back-edges: yes;
+    /// data-dependent comparisons: no).
+    #[inline(always)]
+    fn branch(&mut self, predictable: bool) {
+        let _ = predictable;
+    }
+
+    /// A lock-prefixed read-modify-write (CAS, fetch_add…) on `addr`.
+    #[inline(always)]
+    fn atomic_rmw(&mut self, addr: u64) {
+        let _ = addr;
+    }
+}
+
+/// The zero-cost probe: every hook inlines to nothing.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NoProbe;
+
+impl Probe for NoProbe {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Counting {
+        loads: u64,
+        stores: u64,
+        uops: u64,
+    }
+    impl Probe for Counting {
+        fn load(&mut self, _: u64) {
+            self.loads += 1;
+        }
+        fn store(&mut self, _: u64) {
+            self.stores += 1;
+        }
+        fn compute(&mut self, n: u32) {
+            self.uops += n as u64;
+        }
+    }
+
+    #[test]
+    fn default_hooks_are_noops() {
+        let mut p = NoProbe;
+        p.load(1);
+        p.store(2);
+        p.compute(3);
+        p.branch(true);
+        p.atomic_rmw(4);
+    }
+
+    #[test]
+    fn custom_probe_observes() {
+        let mut p = Counting { loads: 0, stores: 0, uops: 0 };
+        p.load(0);
+        p.load(8);
+        p.store(16);
+        p.compute(5);
+        assert_eq!((p.loads, p.stores, p.uops), (2, 1, 5));
+    }
+}

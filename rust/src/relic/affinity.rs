@@ -1,0 +1,113 @@
+//! CPU affinity helpers.
+//!
+//! The paper (§VI-B) deliberately leaves CPU pinning to the application:
+//! "We do not implement the CPU pinning algorithms in Relic and expect
+//! users of the framework to set the CPU affinities for both the main
+//! and assistant threads." These helpers are the utilities an
+//! application would use: pin the calling thread, and discover an SMT
+//! sibling pair from sysfs topology.
+
+use std::fs;
+
+/// Pin the calling thread to one logical CPU. Returns `false` (without
+/// panicking) when the host refuses — e.g. single-CPU containers.
+pub fn pin_to_cpu(cpu: usize) -> bool {
+    // SAFETY: plain libc affinity call on the calling thread with a
+    // properly zeroed cpu_set_t.
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_SET(cpu, &mut set);
+        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set) == 0
+    }
+}
+
+/// Number of online logical CPUs.
+pub fn num_cpus() -> usize {
+    // SAFETY: sysconf is always safe to call.
+    let n = unsafe { libc::sysconf(libc::_SC_NPROCESSORS_ONLN) };
+    if n < 1 {
+        1
+    } else {
+        n as usize
+    }
+}
+
+/// Parse a sysfs cpulist like `"0,6"` / `"0-1"` / `"2"` into CPU ids.
+pub fn parse_cpulist(s: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for part in s.trim().split(',') {
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((lo, hi)) = part.split_once('-') {
+            if let (Ok(lo), Ok(hi)) = (lo.trim().parse(), hi.trim().parse()) {
+                let (lo, hi): (usize, usize) = (lo, hi);
+                out.extend(lo..=hi);
+            }
+        } else if let Ok(v) = part.trim().parse() {
+            out.push(v);
+        }
+    }
+    out
+}
+
+/// Find a pair of logical CPUs that are SMT siblings of one physical
+/// core, from sysfs. `None` when the host has no SMT (the common case in
+/// CI containers — callers fall back to unpinned threads or the
+/// simulator; see DESIGN.md §2).
+pub fn smt_sibling_pair() -> Option<(usize, usize)> {
+    for cpu in 0..num_cpus() {
+        let path =
+            format!("/sys/devices/system/cpu/cpu{cpu}/topology/thread_siblings_list");
+        if let Ok(text) = fs::read_to_string(&path) {
+            let cpus = parse_cpulist(&text);
+            if cpus.len() >= 2 {
+                return Some((cpus[0], cpus[1]));
+            }
+        }
+    }
+    None
+}
+
+/// Describe the host topology for logs/reports.
+pub fn topology_summary() -> String {
+    match smt_sibling_pair() {
+        Some((a, b)) => format!(
+            "{} logical CPUs; SMT sibling pair ({a}, {b}) available",
+            num_cpus()
+        ),
+        None => format!("{} logical CPUs; no SMT siblings detected", num_cpus()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_cpulist_forms() {
+        assert_eq!(parse_cpulist("0,6"), vec![0, 6]);
+        assert_eq!(parse_cpulist("0-3"), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpulist("5"), vec![5]);
+        assert_eq!(parse_cpulist("0-1,4-5"), vec![0, 1, 4, 5]);
+        assert_eq!(parse_cpulist(" 2 , 3 "), vec![2, 3]);
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn num_cpus_positive() {
+        assert!(num_cpus() >= 1);
+    }
+
+    #[test]
+    fn pin_to_cpu0_usually_works() {
+        // CPU 0 always exists; pinning may be denied in exotic sandboxes,
+        // so only assert the call doesn't crash.
+        let _ = pin_to_cpu(0);
+    }
+
+    #[test]
+    fn topology_summary_mentions_cpus() {
+        assert!(topology_summary().contains("logical CPUs"));
+    }
+}

@@ -1,0 +1,495 @@
+//! The Relic framework proper (paper §VI).
+//!
+//! One *main* thread (the producer — the only thread allowed to submit)
+//! and one *assistant* thread (the consumer — the only thread allowed to
+//! run tasks), joined by the lock-free SPSC queue. No work stealing, no
+//! recursive tasks, busy-waiting with `pause` on both sides, and
+//! explicit `wake_up_hint` / `sleep_hint` control of the assistant for
+//! applications with long serial phases.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::affinity::pin_to_cpu;
+use super::spsc::SpscQueue;
+use super::wait::WaitPolicy;
+
+/// Queue capacity used in the paper (§VI-A).
+pub const DEFAULT_QUEUE_CAPACITY: usize = 128;
+
+/// Spin iterations before a waiting thread starts yielding its
+/// timeslice — a degraded-host escape hatch, unreachable during
+/// µs-scale waits on a real SMT pair.
+const YIELD_THRESHOLD: u32 = 10_000;
+
+/// A submitted task: routine + argument pointer (the paper's
+/// `submit()` signature: "passing pointers to a task routine and its
+/// arguments"), plus an integer argument word so the `fn(usize)` fast
+/// path needs no allocation (EXPERIMENTS.md §Perf iteration 2).
+#[derive(Clone, Copy)]
+struct Task {
+    routine: unsafe fn(*const (), usize),
+    data: *const (),
+    arg: usize,
+}
+
+// SAFETY: tasks cross to the assistant thread; validity and Sync-ness of
+// `data` is the submitting wrapper's obligation (see `submit`/`pair`).
+unsafe impl Send for Task {}
+
+#[repr(u8)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Running = 0,
+    Sleeping = 1,
+    Stopping = 2,
+}
+
+struct Shared {
+    queue: SpscQueue<Task>,
+    /// Tasks finished by the assistant.
+    completed: AtomicU64,
+    /// Lifecycle (Running / Sleeping / Stopping).
+    state: AtomicU8,
+    /// Set by the assistant just before parking (so the producer knows
+    /// an unpark is needed — kept out of the submit fast path otherwise).
+    parked: AtomicBool,
+}
+
+/// Configuration for a [`Relic`] instance.
+#[derive(Debug, Clone)]
+pub struct RelicConfig {
+    /// SPSC queue capacity (paper: 128).
+    pub queue_capacity: usize,
+    /// Assistant-side waiting policy (paper: busy-wait with `pause`).
+    pub wait_policy: WaitPolicy,
+    /// Pin the assistant thread to this logical CPU (the application is
+    /// expected to pin the main thread itself — paper §VI-B).
+    pub assistant_cpu: Option<usize>,
+}
+
+impl Default for RelicConfig {
+    fn default() -> Self {
+        RelicConfig {
+            queue_capacity: DEFAULT_QUEUE_CAPACITY,
+            wait_policy: WaitPolicy::SpinPause,
+            assistant_cpu: None,
+        }
+    }
+}
+
+/// Counters exposed for profiling (EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RelicStats {
+    /// Tasks submitted so far.
+    pub submitted: u64,
+    /// Tasks completed by the assistant.
+    pub completed: u64,
+    /// `submit` calls that found the queue full.
+    pub queue_full_events: u64,
+}
+
+/// The Relic runtime handle, owned by the main thread.
+///
+/// Not `Sync`: only the creating (main) thread may submit — Relic's
+/// single-producer restriction is enforced by the type system.
+pub struct Relic {
+    shared: Arc<Shared>,
+    submitted: Cell<u64>,
+    queue_full: Cell<u64>,
+    assistant: Option<JoinHandle<()>>,
+}
+
+/// Error returned by [`Relic::submit`] when the SPSC queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueFull;
+
+impl std::fmt::Display for QueueFull {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Relic SPSC queue is full")
+    }
+}
+
+impl std::error::Error for QueueFull {}
+
+impl Relic {
+    /// Start a Relic runtime with the paper's defaults.
+    pub fn new() -> Self {
+        Self::with_config(RelicConfig::default())
+    }
+
+    /// Start a Relic runtime with explicit configuration.
+    pub fn with_config(config: RelicConfig) -> Self {
+        let shared = Arc::new(Shared {
+            queue: SpscQueue::new(config.queue_capacity),
+            completed: AtomicU64::new(0),
+            state: AtomicU8::new(State::Running as u8),
+            parked: AtomicBool::new(false),
+        });
+        let assistant = {
+            let shared = Arc::clone(&shared);
+            let policy = config.wait_policy;
+            let cpu = config.assistant_cpu;
+            std::thread::Builder::new()
+                .name("relic-assistant".into())
+                .spawn(move || assistant_loop(&shared, policy, cpu))
+                .expect("failed to spawn relic assistant")
+        };
+        Relic {
+            shared,
+            submitted: Cell::new(0),
+            queue_full: Cell::new(0),
+            assistant: Some(assistant),
+        }
+    }
+
+    /// Submit a task as a plain function pointer + integer argument —
+    /// the allocation-free fast path matching the paper's C interface
+    /// (the fn pointer travels in the task's data word; no heap).
+    pub fn submit(&self, routine: fn(usize), arg: usize) -> Result<(), QueueFull> {
+        unsafe fn call_fn(data: *const (), arg: usize) {
+            // SAFETY: `data` was produced from a valid `fn(usize)` below;
+            // plain-fn pointers round-trip through raw pointers.
+            let f: fn(usize) = std::mem::transmute(data);
+            f(arg);
+        }
+        let task = Task { routine: call_fn, data: routine as *const (), arg };
+        self.push(task).map_err(|_| QueueFull)
+    }
+
+    /// Submit a borrowed closure. The closure **must stay alive and
+    /// unmoved until [`wait`](Self::wait) returns**; enforce with the
+    /// safe [`pair`](Self::pair) / [`run_batch`](Self::run_batch)
+    /// wrappers wherever possible. This is the zero-allocation path used
+    /// by the fine-grained benchmarks.
+    ///
+    /// # Safety
+    /// `f` must outlive the completion of this task (i.e. a subsequent
+    /// `wait()` on this thread), and must be safe to call from the
+    /// assistant thread (`Sync`).
+    pub unsafe fn submit_ref<F: Fn() + Sync>(&self, f: &F) -> Result<(), QueueFull> {
+        unsafe fn call_ref<F: Fn() + Sync>(data: *const (), _arg: usize) {
+            // SAFETY: data was created from &F in submit_ref; liveness is
+            // the caller's contract.
+            (*(data as *const F))();
+        }
+        let task =
+            Task { routine: call_ref::<F>, data: f as *const F as *const (), arg: 0 };
+        self.push(task).map_err(|_| QueueFull)
+    }
+
+    /// Run `a` on the calling (main) thread and `b` on the assistant in
+    /// parallel, returning when both finish — the paper's benchmark
+    /// protocol (§IV: "we run two instances of the same kernel in
+    /// parallel"). Falls back to serial execution if the queue is full.
+    pub fn pair<A: FnOnce(), B: Fn() + Sync>(&self, a: A, b: &B) {
+        // SAFETY: we wait() before returning, so `b` outlives its task.
+        let submitted = unsafe { self.submit_ref(b) }.is_ok();
+        a();
+        if submitted {
+            self.wait();
+        } else {
+            b();
+        }
+    }
+
+    /// Submit every closure in `tasks` and wait for all of them.
+    /// Closures the queue cannot hold run inline on the main thread —
+    /// Relic never blocks the producer on a full queue.
+    pub fn run_batch<F: Fn() + Sync>(&self, tasks: &[F]) {
+        for t in tasks {
+            // SAFETY: wait() below precedes the borrow's end.
+            // (push() maintains the submitted/queue-full counters.)
+            if unsafe { self.submit_ref(t) }.is_err() {
+                t();
+            }
+        }
+        self.wait();
+    }
+
+    fn push(&self, task: Task) -> Result<(), Task> {
+        let r = self.shared.queue.push(task);
+        if r.is_ok() {
+            self.submitted.set(self.submitted.get() + 1);
+            // Assistant may be parked (Hybrid/Park policies or sleep_hint
+            // race); wake it. The SeqCst fence pairs with the assistant's
+            // SeqCst parked-store/queue-check so exactly one of us sees
+            // the other (classic Dekker store-load handshake).
+            std::sync::atomic::fence(Ordering::SeqCst);
+            if self.shared.parked.load(Ordering::Acquire) {
+                if let Some(h) = &self.assistant {
+                    h.thread().unpark();
+                }
+            }
+        } else {
+            self.queue_full.set(self.queue_full.get() + 1);
+        }
+        r
+    }
+
+    /// Wait for every submitted task to complete (paper `wait()`):
+    /// busy-waits with `pause` on the completion counter.
+    pub fn wait(&self) {
+        let target = self.submitted.get();
+        if self.shared.completed.load(Ordering::Acquire) >= target {
+            return;
+        }
+        // Recover from a sleep_hint left active across submissions —
+        // otherwise the assistant never drains and we spin forever.
+        if self.shared.state.load(Ordering::Acquire) == State::Sleeping as u8 {
+            self.wake_up_hint();
+        }
+        // Busy-wait with pause (the paper's design). The yield escape
+        // only fires after ~10k spins — far beyond any µs-scale task on
+        // a real SMT sibling — and keeps single-CPU hosts (where main
+        // spinning would starve the assistant for a whole scheduling
+        // quantum) functional; see EXPERIMENTS.md §Perf iteration 4.
+        let mut spins = 0u32;
+        while self.shared.completed.load(Ordering::Acquire) < target {
+            std::hint::spin_loop();
+            spins += 1;
+            if spins >= YIELD_THRESHOLD {
+                std::thread::yield_now();
+            }
+        }
+    }
+
+    /// Hint that parallel work is imminent: ensure the assistant is
+    /// awake and spinning (paper `wake_up_hint()`).
+    pub fn wake_up_hint(&self) {
+        self.shared.state.store(State::Running as u8, Ordering::Release);
+        if let Some(h) = &self.assistant {
+            h.thread().unpark();
+        }
+    }
+
+    /// Hint that a long serial phase follows: the assistant parks and
+    /// stops consuming core resources (paper `sleep_hint()`).
+    pub fn sleep_hint(&self) {
+        self.shared.state.store(State::Sleeping as u8, Ordering::Release);
+    }
+
+    /// Profiling counters.
+    pub fn stats(&self) -> RelicStats {
+        RelicStats {
+            submitted: self.submitted.get(),
+            completed: self.shared.completed.load(Ordering::Acquire),
+            queue_full_events: self.queue_full.get(),
+        }
+    }
+}
+
+impl Default for Relic {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for Relic {
+    fn drop(&mut self) {
+        // Drain obligations before stopping so no submitted task is lost.
+        self.wait();
+        self.shared.state.store(State::Stopping as u8, Ordering::Release);
+        if let Some(h) = self.assistant.take() {
+            h.thread().unpark();
+            let _ = h.join();
+        }
+    }
+}
+
+/// The assistant thread's main loop — pseudocode of the paper's Fig. 2.
+fn assistant_loop(shared: &Shared, policy: WaitPolicy, cpu: Option<usize>) {
+    if let Some(cpu) = cpu {
+        pin_to_cpu(cpu);
+    }
+    let mut idle_spins: u32 = 0;
+    loop {
+        if let Some(task) = shared.queue.pop() {
+            idle_spins = 0;
+            // SAFETY: submitters guarantee task validity until completion.
+            unsafe { (task.routine)(task.data, task.arg) };
+            shared.completed.fetch_add(1, Ordering::Release);
+            continue;
+        }
+        match shared.state.load(Ordering::Acquire) {
+            s if s == State::Stopping as u8 => break,
+            s if s == State::Sleeping as u8 => {
+                shared.parked.store(true, Ordering::SeqCst);
+                // Re-check after announcing: a submit/wake may have raced.
+                if shared.state.load(Ordering::Acquire) == State::Sleeping as u8
+                    && shared.queue.is_empty()
+                {
+                    std::thread::park();
+                }
+                shared.parked.store(false, Ordering::SeqCst);
+            }
+            _ => match policy {
+                WaitPolicy::SpinBusy => {}
+                WaitPolicy::SpinPause => {
+                    std::hint::spin_loop();
+                    idle_spins = idle_spins.saturating_add(1);
+                    if idle_spins >= YIELD_THRESHOLD {
+                        std::thread::yield_now();
+                    }
+                }
+                WaitPolicy::Hybrid { spins } => {
+                    if idle_spins < spins {
+                        std::hint::spin_loop();
+                        idle_spins += 1;
+                    } else {
+                        shared.parked.store(true, Ordering::SeqCst);
+                        if shared.queue.is_empty()
+                            && shared.state.load(Ordering::Acquire)
+                                == State::Running as u8
+                        {
+                            std::thread::park();
+                        }
+                        shared.parked.store(false, Ordering::SeqCst);
+                        idle_spins = 0;
+                    }
+                }
+                WaitPolicy::Park => {
+                    shared.parked.store(true, Ordering::SeqCst);
+                    if shared.queue.is_empty()
+                        && shared.state.load(Ordering::Acquire) == State::Running as u8
+                    {
+                        std::thread::park();
+                    }
+                    shared.parked.store(false, Ordering::SeqCst);
+                }
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    static COUNTER: AtomicUsize = AtomicUsize::new(0);
+
+    fn bump(by: usize) {
+        COUNTER.fetch_add(by, Ordering::SeqCst);
+    }
+
+    #[test]
+    fn submit_fn_runs_on_assistant() {
+        let relic = Relic::new();
+        COUNTER.store(0, Ordering::SeqCst);
+        for i in 0..10 {
+            relic.submit(bump, i).unwrap();
+        }
+        relic.wait();
+        assert_eq!(COUNTER.load(Ordering::SeqCst), 45);
+        let s = relic.stats();
+        assert_eq!(s.submitted, 10);
+        assert_eq!(s.completed, 10);
+    }
+
+    #[test]
+    fn pair_runs_both_sides() {
+        let relic = Relic::new();
+        let a_ran = AtomicUsize::new(0);
+        let b_ran = AtomicUsize::new(0);
+        relic.pair(|| { a_ran.fetch_add(1, Ordering::SeqCst); },
+                   &|| { b_ran.fetch_add(1, Ordering::SeqCst); });
+        assert_eq!(a_ran.load(Ordering::SeqCst), 1);
+        assert_eq!(b_ran.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn run_batch_completes_all() {
+        let relic = Relic::new();
+        let sum = AtomicUsize::new(0);
+        let tasks: Vec<_> = (0..200usize)
+            .map(|i| {
+                let sum = &sum;
+                move || {
+                    sum.fetch_add(i, Ordering::SeqCst);
+                }
+            })
+            .collect();
+        relic.run_batch(&tasks);
+        assert_eq!(sum.load(Ordering::SeqCst), 199 * 200 / 2);
+    }
+
+    #[test]
+    fn queue_full_falls_back_serially() {
+        let relic = Relic::with_config(RelicConfig {
+            queue_capacity: 2,
+            ..RelicConfig::default()
+        });
+        let sum = AtomicUsize::new(0);
+        let tasks: Vec<_> = (0..100usize)
+            .map(|_| {
+                let sum = &sum;
+                move || {
+                    sum.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+            .collect();
+        relic.run_batch(&tasks);
+        assert_eq!(sum.load(Ordering::SeqCst), 100, "no task lost on overflow");
+    }
+
+    #[test]
+    fn sleep_and_wake_hints() {
+        let relic = Relic::new();
+        relic.sleep_hint();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        relic.wake_up_hint();
+        let ran = AtomicUsize::new(0);
+        relic.pair(|| {}, &|| { ran.fetch_add(1, Ordering::SeqCst); });
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn wait_recovers_from_sleeping_assistant() {
+        let relic = Relic::new();
+        let ran = AtomicUsize::new(0);
+        relic.sleep_hint();
+        // Submit while asleep; wait() must auto-wake (documented recovery).
+        let task = || {
+            ran.fetch_add(1, Ordering::SeqCst);
+        };
+        // SAFETY: wait() before task drops.
+        unsafe { relic.submit_ref(&task).unwrap() };
+        relic.wait();
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn hybrid_and_park_policies_work() {
+        for policy in [WaitPolicy::Hybrid { spins: 64 }, WaitPolicy::Park] {
+            let relic = Relic::with_config(RelicConfig {
+                wait_policy: policy,
+                ..RelicConfig::default()
+            });
+            let n = AtomicUsize::new(0);
+            for round in 0..20 {
+                // Let the assistant park between rounds.
+                if round % 5 == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+                relic.pair(|| {}, &|| { n.fetch_add(1, Ordering::SeqCst); });
+            }
+            assert_eq!(n.load(Ordering::SeqCst), 20, "{:?}", policy);
+        }
+    }
+
+    #[test]
+    fn drop_waits_for_outstanding_tasks() {
+        COUNTER.store(0, Ordering::SeqCst);
+        {
+            let relic = Relic::new();
+            for _ in 0..50 {
+                relic.submit(bump, 1).unwrap();
+            }
+            // No explicit wait: Drop must flush.
+        }
+        assert_eq!(COUNTER.load(Ordering::SeqCst), 50);
+    }
+}

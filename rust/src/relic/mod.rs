@@ -1,0 +1,35 @@
+//! **Relic** — the paper's specialized framework for extremely
+//! fine-grained task parallelism on SMT cores (§VI).
+//!
+//! Design, verbatim from the paper:
+//! * two roles: a *main* (producer) thread and an *assistant* (consumer)
+//!   thread — no work stealing, no recursive task submission;
+//! * a lock-free single-producer single-consumer queue (capacity 128);
+//! * busy-waiting with the x86 `pause` instruction on both sides;
+//! * `wake_up_hint()` / `sleep_hint()` so applications with long serial
+//!   phases can park the assistant explicitly;
+//! * CPU pinning left to the application ([`affinity`] has the helpers).
+//!
+//! ```
+//! use relic_smt::relic::Relic;
+//! use std::sync::atomic::{AtomicU64, Ordering};
+//!
+//! let relic = Relic::new();
+//! let hits = AtomicU64::new(0);
+//! // Run two fine-grained tasks in parallel: one on the main thread,
+//! // one on the assistant (the paper's benchmark protocol).
+//! relic.pair(
+//!     || { hits.fetch_add(1, Ordering::Relaxed); },
+//!     &|| { hits.fetch_add(1, Ordering::Relaxed); },
+//! );
+//! assert_eq!(hits.load(Ordering::Relaxed), 2);
+//! ```
+
+pub mod affinity;
+mod framework;
+mod spsc;
+pub mod wait;
+
+pub use framework::{QueueFull, Relic, RelicConfig, RelicStats, DEFAULT_QUEUE_CAPACITY};
+pub use spsc::SpscQueue;
+pub use wait::WaitPolicy;

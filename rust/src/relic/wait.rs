@@ -1,0 +1,147 @@
+//! Waiting mechanisms (paper §VI-B).
+//!
+//! Relic busy-waits with `pause` by default — the right choice for
+//! µs-scale tasks between two logical threads of one SMT core, where the
+//! `pause` instruction both saves power and *releases pipeline resources
+//! to the sibling thread*. The other policies exist for the waiting-
+//! mechanism ablation (DESIGN.md exp A2) and for embedding Relic in
+//! applications with long serial phases (where the paper instead
+//! recommends `sleep_hint`/`wake_up_hint`).
+
+/// How a thread waits for a condition that another thread will set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WaitPolicy {
+    /// Tight loop, no `pause` — burns issue slots of the SMT sibling
+    /// (included to demonstrate why `pause` matters on SMT).
+    SpinBusy,
+    /// Tight loop with `pause` (x86) / spin-loop hint — Relic's default.
+    SpinPause,
+    /// Spin `spins` times with `pause`, then park the OS thread
+    /// (the classic hybrid; wake costs a futex syscall + scheduler trip).
+    Hybrid { spins: u32 },
+    /// Park immediately (models condvar-style waiting à la GNU OpenMP).
+    Park,
+}
+
+impl Default for WaitPolicy {
+    fn default() -> Self {
+        WaitPolicy::SpinPause
+    }
+}
+
+impl WaitPolicy {
+    /// Short human name (used by bench output and the CLI).
+    pub fn name(self) -> &'static str {
+        match self {
+            WaitPolicy::SpinBusy => "spin",
+            WaitPolicy::SpinPause => "spin+pause",
+            WaitPolicy::Hybrid { .. } => "hybrid",
+            WaitPolicy::Park => "park",
+        }
+    }
+
+    /// All policies swept by the A2 ablation.
+    pub fn all() -> [WaitPolicy; 4] {
+        [
+            WaitPolicy::SpinBusy,
+            WaitPolicy::SpinPause,
+            WaitPolicy::Hybrid { spins: 1 << 12 },
+            WaitPolicy::Park,
+        ]
+    }
+}
+
+/// Spin until `cond()` holds, following `policy`. Returns the number of
+/// loop iterations (useful for tests and for the simulator's
+/// calibration).
+///
+/// With `Hybrid`/`Park` the caller must arrange for the setter to call
+/// [`std::thread::Thread::unpark`] on this thread after establishing the
+/// condition; `wait_until` re-checks on every wakeup so spurious unparks
+/// are harmless.
+pub fn wait_until<F: Fn() -> bool>(policy: WaitPolicy, cond: F) -> u64 {
+    let mut iters = 0u64;
+    match policy {
+        WaitPolicy::SpinBusy => {
+            while !cond() {
+                iters += 1;
+            }
+        }
+        WaitPolicy::SpinPause => {
+            while !cond() {
+                std::hint::spin_loop();
+                iters += 1;
+            }
+        }
+        WaitPolicy::Hybrid { spins } => {
+            while !cond() {
+                if iters < spins as u64 {
+                    std::hint::spin_loop();
+                } else {
+                    std::thread::park();
+                }
+                iters += 1;
+            }
+        }
+        WaitPolicy::Park => {
+            while !cond() {
+                std::thread::park();
+                iters += 1;
+            }
+        }
+    }
+    iters
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn immediate_condition_returns_zero_iters() {
+        for p in WaitPolicy::all() {
+            assert_eq!(wait_until(p, || true), 0, "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn spin_policies_observe_flag_from_other_thread() {
+        for p in [WaitPolicy::SpinBusy, WaitPolicy::SpinPause] {
+            let flag = Arc::new(AtomicBool::new(false));
+            let setter = {
+                let flag = Arc::clone(&flag);
+                std::thread::spawn(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                    flag.store(true, Ordering::Release);
+                })
+            };
+            wait_until(p, || flag.load(Ordering::Acquire));
+            setter.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn park_policies_wake_on_unpark() {
+        for p in [WaitPolicy::Hybrid { spins: 4 }, WaitPolicy::Park] {
+            let flag = Arc::new(AtomicBool::new(false));
+            let waiter = {
+                let flag = Arc::clone(&flag);
+                std::thread::spawn(move || {
+                    wait_until(p, || flag.load(Ordering::Acquire));
+                })
+            };
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            flag.store(true, Ordering::Release);
+            waiter.thread().unpark();
+            waiter.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(WaitPolicy::SpinPause.name(), "spin+pause");
+        assert_eq!(WaitPolicy::Hybrid { spins: 1 }.name(), "hybrid");
+    }
+}

@@ -1,0 +1,129 @@
+//! PJRT execution of the AOT-compiled JAX/Pallas graph kernels.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Executables are compiled once and
+//! cached; the hot path is literal packing + `execute` only — Python is
+//! never involved at request time.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::manifest::{Entry, Manifest};
+
+/// A PJRT client with a cache of compiled graph-kernel executables.
+pub struct GraphExecutor {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<(String, usize), xla::PjRtLoadedExecutable>,
+    /// Executions performed (for metrics/tests).
+    pub executions: u64,
+}
+
+impl GraphExecutor {
+    /// Create a CPU-PJRT executor over an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)
+            .with_context(|| format!("loading manifest from {artifacts_dir:?} (run `make artifacts`)"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(GraphExecutor { client, manifest, cache: HashMap::new(), executions: 0 })
+    }
+
+    /// Executor over the default artifacts directory.
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(&Manifest::default_dir())
+    }
+
+    /// PJRT platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Kernels available in the manifest.
+    pub fn available(&self) -> Vec<(String, usize)> {
+        self.manifest.entries.iter().map(|e| (e.kernel.clone(), e.n)).collect()
+    }
+
+    fn entry(&self, kernel: &str, n: usize) -> Result<Entry> {
+        self.manifest
+            .find(kernel, n)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("no artifact for kernel {kernel} at n={n}"))
+    }
+
+    /// Compile (or fetch from cache) the executable for `kernel`/`n`.
+    pub fn prepare(&mut self, kernel: &str, n: usize) -> Result<()> {
+        if self.cache.contains_key(&(kernel.to_string(), n)) {
+            return Ok(());
+        }
+        let entry = self.entry(kernel, n)?;
+        let path = self.manifest.path_of(&entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-UTF8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("PJRT compile")?;
+        self.cache.insert((kernel.to_string(), n), exe);
+        Ok(())
+    }
+
+    /// Execute a graph kernel. `inputs` are row-major f32 buffers whose
+    /// shapes must match the manifest entry. Returns the first (only)
+    /// output as a flat f32 vector.
+    pub fn execute(&mut self, kernel: &str, n: usize, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let entry = self.entry(kernel, n)?;
+        anyhow::ensure!(
+            inputs.len() == entry.inputs.len(),
+            "kernel {kernel} expects {} inputs, got {}",
+            entry.inputs.len(),
+            inputs.len()
+        );
+        self.prepare(kernel, n)?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, shape) in inputs.iter().zip(&entry.inputs) {
+            let expect: usize = shape.iter().product();
+            anyhow::ensure!(
+                buf.len() == expect,
+                "kernel {kernel} input shape {shape:?} needs {expect} elems, got {}",
+                buf.len()
+            );
+            let lit = xla::Literal::vec1(buf);
+            let lit = if shape.len() == 1 {
+                lit
+            } else {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).context("literal reshape")?
+            };
+            literals.push(lit);
+        }
+        let exe = self.cache.get(&(kernel.to_string(), n)).expect("prepared above");
+        let result = exe.execute::<xla::Literal>(&literals).context("PJRT execute")?[0][0]
+            .to_literal_sync()
+            .context("device-to-host")?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrap output tuple")?;
+        let values = out.to_vec::<f32>().context("output to f32 vec")?;
+        self.executions += 1;
+        Ok(values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Full round-trip tests live in `rust/tests/pjrt_roundtrip.rs`
+    //! (they need `make artifacts`); here we cover the error paths that
+    //! don't require artifacts.
+    use super::*;
+
+    #[test]
+    fn missing_artifacts_dir_is_a_clean_error() {
+        let err = GraphExecutor::new(Path::new("/nonexistent/artifacts"))
+            .err()
+            .expect("must fail");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+    }
+}

@@ -1,0 +1,128 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime. `artifacts/manifest.json` lists every lowered HLO
+//! module with its kernel name, graph size, and input shapes.
+
+use std::path::{Path, PathBuf};
+
+use crate::json::{self, Value};
+
+/// One AOT-compiled kernel artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Entry {
+    /// Kernel name (`pagerank`, `bfs`, `sssp`, `cc`, `tc`, `bc`).
+    pub kernel: String,
+    /// Graph size the module was lowered for.
+    pub n: usize,
+    /// HLO text file, relative to the artifacts directory.
+    pub file: String,
+    /// Input tensor shapes (row-major).
+    pub inputs: Vec<Vec<usize>>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<Entry>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read(dir.join("manifest.json"))?;
+        let v = json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        Self::from_value(dir, &v)
+    }
+
+    fn from_value(dir: &Path, v: &Value) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            v["format"].as_str() == Some("hlo-text"),
+            "unsupported artifact format {:?}; expected hlo-text",
+            v["format"]
+        );
+        let entries = v["entries"]
+            .as_array()
+            .ok_or_else(|| anyhow::anyhow!("manifest missing entries"))?
+            .iter()
+            .map(|e| {
+                Ok(Entry {
+                    kernel: e["kernel"]
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("entry missing kernel"))?
+                        .to_string(),
+                    n: e["n"].as_u64().ok_or_else(|| anyhow::anyhow!("entry missing n"))?
+                        as usize,
+                    file: e["file"]
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("entry missing file"))?
+                        .to_string(),
+                    inputs: e["inputs"]
+                        .as_array()
+                        .ok_or_else(|| anyhow::anyhow!("entry missing inputs"))?
+                        .iter()
+                        .map(|shape| {
+                            shape
+                                .as_array()
+                                .unwrap_or(&[])
+                                .iter()
+                                .map(|d| d.as_u64().unwrap_or(0) as usize)
+                                .collect()
+                        })
+                        .collect(),
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Find the entry for a kernel at size `n`.
+    pub fn find(&self, kernel: &str, n: usize) -> Option<&Entry> {
+        self.entries.iter().find(|e| e.kernel == kernel && e.n == n)
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, entry: &Entry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Default artifacts directory: `$RELIC_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("RELIC_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &[u8] = br#"{
+        "format": "hlo-text",
+        "return_tuple": true,
+        "entries": [
+            {"kernel": "pagerank", "n": 32, "file": "pagerank_n32.hlo.txt",
+             "inputs": [[32, 32], [32]], "outputs": 1},
+            {"kernel": "tc", "n": 32, "file": "tc_n32.hlo.txt",
+             "inputs": [[32, 32]], "outputs": 1}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let v = json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_value(Path::new("/tmp/a"), &v).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let pr = m.find("pagerank", 32).unwrap();
+        assert_eq!(pr.inputs, vec![vec![32, 32], vec![32]]);
+        assert_eq!(m.path_of(pr), PathBuf::from("/tmp/a/pagerank_n32.hlo.txt"));
+        assert!(m.find("pagerank", 64).is_none());
+        assert!(m.find("bogus", 32).is_none());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let v = json::parse(br#"{"format": "proto", "entries": []}"#).unwrap();
+        assert!(Manifest::from_value(Path::new("."), &v).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO text + manifest) and executes them on
+//! the CPU PJRT client from the Rust hot path.
+//!
+//! Layering (see the repository README): Python/JAX/Pallas runs once at
+//! build time (`make artifacts`); this module is the only component
+//! that touches the XLA runtime, and the coordinator calls it through
+//! [`GraphExecutor`].
+
+mod exec;
+pub mod manifest;
+
+pub use exec::GraphExecutor;
+pub use manifest::{Entry, Manifest};

@@ -1,0 +1,365 @@
+//! Shared machinery for the baseline runtime models: erased task
+//! references, completion latches, and a lockable work deque.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// A type-erased reference to a `Fn() + Sync` closure with the lifetime
+/// erased so it can sit in a runtime's queue while the worker picks it
+/// up.
+///
+/// # Safety contract
+/// The creator must guarantee the referent outlives the task's
+/// execution; every `run_pair` implementation joins/waits before
+/// returning, which upholds this.
+#[derive(Clone, Copy)]
+pub struct ErasedTask {
+    f: *const (dyn Fn() + Sync + 'static),
+}
+
+unsafe impl Send for ErasedTask {}
+// SAFETY: the referent is `Sync` by construction; sharing the raw
+// pointer adds no capability beyond `call`, whose safety contract covers
+// cross-thread use.
+unsafe impl Sync for ErasedTask {}
+
+impl ErasedTask {
+    /// Erase the lifetime of `f`.
+    ///
+    /// # Safety
+    /// Caller must ensure `f` outlives every [`call`](Self::call).
+    pub unsafe fn new(f: &(dyn Fn() + Sync)) -> Self {
+        // SAFETY: lifetime erasure only; validity is the caller's contract.
+        let f: *const (dyn Fn() + Sync) = f;
+        ErasedTask { f: std::mem::transmute(f) }
+    }
+
+    /// Invoke the closure.
+    ///
+    /// # Safety
+    /// The referent must still be alive (see [`new`](Self::new)).
+    pub unsafe fn call(&self) {
+        (*self.f)()
+    }
+}
+
+/// Countdown latch: workers `count_down`, the owner `wait`s by spinning
+/// with `pause` (all baseline frameworks spin in their join path at this
+/// task granularity).
+pub struct Latch {
+    remaining: AtomicU32,
+}
+
+impl Latch {
+    pub fn new(count: u32) -> Self {
+        Latch { remaining: AtomicU32::new(count) }
+    }
+
+    #[inline]
+    pub fn count_down(&self) {
+        self.remaining.fetch_sub(1, Ordering::Release);
+    }
+
+    #[inline]
+    pub fn done(&self) -> bool {
+        self.remaining.load(Ordering::Acquire) == 0
+    }
+
+    #[inline]
+    pub fn wait_spin(&self) {
+        while !self.done() {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+/// Worker stop flag shared between a runtime handle and its worker.
+pub struct StopFlag(AtomicBool);
+
+impl StopFlag {
+    pub fn new() -> Self {
+        StopFlag(AtomicBool::new(false))
+    }
+    #[inline]
+    pub fn stop(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+    #[inline]
+    pub fn stopped(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+impl Default for StopFlag {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A mutex-guarded deque with an associated condvar — the classic
+/// "team queue" shape used by GNU libgomp and (without the condvar
+/// sleeping) by the lock-based dispatch paths of other runtimes.
+pub struct TeamQueue<T> {
+    inner: Mutex<std::collections::VecDeque<T>>,
+    cv: Condvar,
+}
+
+impl<T> TeamQueue<T> {
+    pub fn new() -> Self {
+        TeamQueue { inner: Mutex::new(std::collections::VecDeque::new()), cv: Condvar::new() }
+    }
+
+    /// Push and notify one sleeper.
+    pub fn push_notify(&self, item: T) {
+        self.inner.lock().unwrap().push_back(item);
+        self.cv.notify_one();
+    }
+
+    /// Push without notifying (spin-polled queues).
+    pub fn push(&self, item: T) {
+        self.inner.lock().unwrap().push_back(item);
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        self.inner.lock().unwrap().pop_front()
+    }
+
+    /// Blocking pop with a timeout; returns `None` on timeout (callers
+    /// re-check their stop flags).
+    pub fn pop_wait(&self, timeout: std::time::Duration) -> Option<T> {
+        let guard = self.inner.lock().unwrap();
+        let (mut guard, _res) = self
+            .cv
+            .wait_timeout_while(guard, timeout, |q| q.is_empty())
+            .unwrap();
+        guard.pop_front()
+    }
+
+    /// Wake all sleepers (used on shutdown).
+    pub fn notify_all(&self) {
+        self.cv.notify_all();
+    }
+}
+
+impl<T> Default for TeamQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A bounded Chase-Lev work-stealing deque over small copyable slots.
+///
+/// Owner thread pushes/pops the bottom; thief threads steal the top via
+/// CAS — the lock-less structure X-OpenMP builds its runtime around and
+/// OpenCilk uses (with the THE protocol) for continuations. Capacity is
+/// fixed (both originals use bounded deques on the fine-grained path);
+/// `push` fails when full.
+pub struct WsDeque<T: Copy> {
+    buf: Box<[std::cell::UnsafeCell<std::mem::MaybeUninit<T>>]>,
+    mask: u64,
+    top: std::sync::atomic::AtomicU64,
+    bottom: std::sync::atomic::AtomicU64,
+}
+
+// SAFETY: cross-thread access is mediated by the top/bottom protocol.
+unsafe impl<T: Copy + Send> Sync for WsDeque<T> {}
+unsafe impl<T: Copy + Send> Send for WsDeque<T> {}
+
+impl<T: Copy> WsDeque<T> {
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(2).next_power_of_two();
+        WsDeque {
+            buf: (0..cap)
+                .map(|_| std::cell::UnsafeCell::new(std::mem::MaybeUninit::uninit()))
+                .collect::<Vec<_>>()
+                .into_boxed_slice(),
+            mask: cap as u64 - 1,
+            top: std::sync::atomic::AtomicU64::new(0),
+            bottom: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Owner: push at the bottom. Returns false when full.
+    pub fn push(&self, value: T) -> bool {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        if b.wrapping_sub(t) > self.mask {
+            return false;
+        }
+        // SAFETY: slot (b & mask) is not visible to thieves until the
+        // bottom store below.
+        unsafe { (*self.buf[(b & self.mask) as usize].get()).write(value) };
+        self.bottom.store(b.wrapping_add(1), Ordering::Release);
+        true
+    }
+
+    /// Owner: pop from the bottom (LIFO).
+    pub fn pop(&self) -> Option<T> {
+        let b = self.bottom.load(Ordering::Relaxed).wrapping_sub(1);
+        self.bottom.store(b, Ordering::Relaxed);
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t > b || b.wrapping_sub(t) > self.mask {
+            // Empty: restore.
+            self.bottom.store(b.wrapping_add(1), Ordering::Relaxed);
+            return None;
+        }
+        // SAFETY: index protocol guarantees the slot was published.
+        let value = unsafe { (*self.buf[(b & self.mask) as usize].get()).assume_init() };
+        if t == b {
+            // Last element: race against thieves for it.
+            let won = self
+                .top
+                .compare_exchange(t, t.wrapping_add(1), Ordering::SeqCst, Ordering::Relaxed)
+                .is_ok();
+            self.bottom.store(b.wrapping_add(1), Ordering::Relaxed);
+            return won.then_some(value);
+        }
+        Some(value)
+    }
+
+    /// Thief: steal from the top (FIFO).
+    pub fn steal(&self) -> Option<T> {
+        let t = self.top.load(Ordering::Acquire);
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::Acquire);
+        if t >= b {
+            return None;
+        }
+        // SAFETY: slot published before bottom advanced past it.
+        let value = unsafe { (*self.buf[(t & self.mask) as usize].get()).assume_init() };
+        self.top
+            .compare_exchange(t, t.wrapping_add(1), Ordering::SeqCst, Ordering::Relaxed)
+            .is_ok()
+            .then_some(value)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn latch_counts_down() {
+        let l = Latch::new(2);
+        assert!(!l.done());
+        l.count_down();
+        assert!(!l.done());
+        l.count_down();
+        assert!(l.done());
+        l.wait_spin(); // returns immediately
+    }
+
+    #[test]
+    fn erased_task_calls_through() {
+        let hits = AtomicUsize::new(0);
+        let f = || {
+            hits.fetch_add(1, Ordering::SeqCst);
+        };
+        // SAFETY: called before `f` drops.
+        let t = unsafe { ErasedTask::new(&f) };
+        unsafe { t.call() };
+        unsafe { t.call() };
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn team_queue_cross_thread() {
+        let q = Arc::new(TeamQueue::new());
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while got.len() < 3 {
+                if let Some(v) = q2.pop_wait(std::time::Duration::from_millis(50)) {
+                    got.push(v);
+                }
+            }
+            got
+        });
+        for i in 0..3 {
+            q.push_notify(i);
+        }
+        assert_eq!(h.join().unwrap(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn pop_wait_times_out_when_empty() {
+        let q: TeamQueue<u32> = TeamQueue::new();
+        let t0 = std::time::Instant::now();
+        assert_eq!(q.pop_wait(std::time::Duration::from_millis(5)), None);
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(4));
+    }
+
+    #[test]
+    fn wsdeque_lifo_owner_fifo_thief() {
+        let d: WsDeque<u64> = WsDeque::new(8);
+        assert!(d.push(1));
+        assert!(d.push(2));
+        assert!(d.push(3));
+        assert_eq!(d.steal(), Some(1)); // thief takes oldest
+        assert_eq!(d.pop(), Some(3)); // owner takes newest
+        assert_eq!(d.pop(), Some(2));
+        assert_eq!(d.pop(), None);
+        assert_eq!(d.steal(), None);
+    }
+
+    #[test]
+    fn wsdeque_rejects_overflow() {
+        let d: WsDeque<u64> = WsDeque::new(2);
+        assert!(d.push(1));
+        assert!(d.push(2));
+        assert!(!d.push(3));
+        assert_eq!(d.steal(), Some(1));
+        assert!(d.push(3));
+    }
+
+    #[test]
+    fn wsdeque_cross_thread_no_loss_no_dup() {
+        let d: Arc<WsDeque<u64>> = Arc::new(WsDeque::new(256));
+        let seen = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let thief = {
+            let d = Arc::clone(&d);
+            let seen = Arc::clone(&seen);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while !stop.load(Ordering::Acquire) {
+                    if let Some(v) = d.steal() {
+                        got.push(v);
+                    }
+                }
+                while let Some(v) = d.steal() {
+                    got.push(v);
+                }
+                seen.lock().unwrap().extend(got);
+            })
+        };
+        let mut owner_got = Vec::new();
+        let n = 10_000u64;
+        let mut next = 1u64;
+        while next <= n {
+            if d.push(next) {
+                next += 1;
+            }
+            if next % 3 == 0 {
+                if let Some(v) = d.pop() {
+                    owner_got.push(v);
+                }
+            }
+        }
+        while let Some(v) = d.pop() {
+            owner_got.push(v);
+        }
+        stop.store(true, Ordering::Release);
+        thief.join().unwrap();
+        let mut all = seen.lock().unwrap().clone();
+        all.extend(owner_got);
+        all.sort_unstable();
+        let expect: Vec<u64> = (1..=n).collect();
+        assert_eq!(all, expect, "every pushed item must appear exactly once");
+    }
+}

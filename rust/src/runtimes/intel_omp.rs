@@ -1,0 +1,135 @@
+//! Intel OpenMP model (from the oneAPI toolkit).
+//!
+//! Intel's OpenMP runtime shares ancestry with LLVM's `libomp` (Intel
+//! upstreamed it), so the mechanism matches [`super::llvm_omp`] —
+//! locked team deque, spinning worker (KMP_BLOCKTIME), taskwait
+//! help-execution — with measurably heavier per-task bookkeeping
+//! (ITT/stats hooks, hierarchical scheduling structures): the paper
+//! measures it slightly behind LLVM OpenMP (11.3% vs 13.9% geomean,
+//! §V). The model adds the second descriptor allocation and the extra
+//! bookkeeping stores that account for that gap.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+use crate::relic::affinity::pin_to_cpu;
+
+use super::common::{ErasedTask, StopFlag, TeamQueue};
+use super::TaskRuntime;
+
+struct TaskData {
+    /// Bookkeeping block (`kmp_taskdata_t` is ~256 bytes and is a
+    /// *separate* allocation from the task payload in libomp/iomp).
+    flags: u64,
+    _pad: [u64; 24],
+}
+
+struct TaskDesc {
+    task: ErasedTask,
+    /// Kept alive to model iomp's separate taskdata allocation.
+    #[allow(dead_code)]
+    data: Box<TaskData>,
+    _pad: [u64; 8],
+}
+
+struct Team {
+    deque: TeamQueue<Box<TaskDesc>>,
+    completed: AtomicU32,
+    stop: StopFlag,
+}
+
+/// Intel OpenMP (oneAPI `libiomp5`) model.
+pub struct IntelOpenMp {
+    team: Arc<Team>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl IntelOpenMp {
+    pub fn new(worker_cpu: Option<usize>) -> Self {
+        let team = Arc::new(Team {
+            deque: TeamQueue::new(),
+            completed: AtomicU32::new(0),
+            stop: StopFlag::new(),
+        });
+        let worker = {
+            let team = Arc::clone(&team);
+            std::thread::Builder::new()
+                .name("iomp-worker".into())
+                .spawn(move || {
+                    if let Some(cpu) = worker_cpu {
+                        pin_to_cpu(cpu);
+                    }
+                    while !team.stop.stopped() {
+                        if let Some(desc) = team.deque.try_pop() {
+                            // SAFETY: run_pair waits before returning.
+                            unsafe { desc.task.call() };
+                            team.completed.fetch_add(1, Ordering::Release);
+                        } else {
+                            std::hint::spin_loop();
+                        }
+                    }
+                })
+                .expect("spawn iomp worker")
+        };
+        IntelOpenMp { team, worker: Some(worker) }
+    }
+}
+
+impl TaskRuntime for IntelOpenMp {
+    fn name(&self) -> &'static str {
+        "intel-openmp"
+    }
+
+    fn run_pair(&mut self, a: &(dyn Fn() + Sync), b: &(dyn Fn() + Sync)) {
+        let before = self.team.completed.load(Ordering::Acquire);
+        // Two allocations (task + taskdata) and extra bookkeeping stores.
+        let mut data = Box::new(TaskData { flags: 0, _pad: [0; 24] });
+        data.flags = 0x13; // tiedness/final/priority bits
+        data._pad[0] = before as u64; // stats hook
+        // SAFETY: taskwait below precedes `b`'s end of scope.
+        let desc = Box::new(TaskDesc { task: unsafe { ErasedTask::new(b) }, data, _pad: [0; 8] });
+        self.team.deque.push(desc);
+        a();
+        while self.team.completed.load(Ordering::Acquire) == before {
+            if let Some(desc) = self.team.deque.try_pop() {
+                // SAFETY: as above.
+                unsafe { desc.task.call() };
+                self.team.completed.fetch_add(1, Ordering::Release);
+                break;
+            }
+            std::hint::spin_loop();
+        }
+    }
+}
+
+impl Drop for IntelOpenMp {
+    fn drop(&mut self) {
+        self.team.stop.stop();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn completes_all_pairs() {
+        let mut rt = IntelOpenMp::new(None);
+        let hits = AtomicUsize::new(0);
+        for _ in 0..1000 {
+            rt.run_pair(
+                &|| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                },
+                &|| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                },
+            );
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 2000);
+    }
+}

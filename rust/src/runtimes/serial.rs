@@ -1,0 +1,49 @@
+//! The serial baseline: both task instances execute back-to-back on the
+//! calling thread (paper §IV: "In the serial mode, we run two instances
+//! of a graph kernel in a single thread"). Speedups in every figure are
+//! relative to this.
+
+use super::TaskRuntime;
+
+/// Serial executor (the denominator of every speedup in Figures 1/3/4).
+pub struct Serial;
+
+impl TaskRuntime for Serial {
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+
+    fn run_pair(&mut self, a: &(dyn Fn() + Sync), b: &(dyn Fn() + Sync)) {
+        a();
+        b();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    #[test]
+    fn runs_in_order_on_calling_thread() {
+        let order = AtomicU32::new(0);
+        let caller = std::thread::current().id();
+        let t_a = std::sync::Mutex::new(None);
+        let t_b = std::sync::Mutex::new(None);
+        Serial.run_pair(
+            &|| {
+                assert_eq!(order.load(Ordering::SeqCst), 0);
+                order.store(1, Ordering::SeqCst);
+                *t_a.lock().unwrap() = Some(std::thread::current().id());
+            },
+            &|| {
+                assert_eq!(order.load(Ordering::SeqCst), 1);
+                order.store(2, Ordering::SeqCst);
+                *t_b.lock().unwrap() = Some(std::thread::current().id());
+            },
+        );
+        assert_eq!(order.load(Ordering::SeqCst), 2);
+        assert_eq!(t_a.lock().unwrap().unwrap(), caller);
+        assert_eq!(t_b.lock().unwrap().unwrap(), caller);
+    }
+}

@@ -1,0 +1,199 @@
+//! Taskflow model (v3.7 `executor.async(...)`, the paper's usage).
+//!
+//! Mechanism reproduced:
+//! * `async` allocates a shared-state node (an `std::packaged_task`-like
+//!   object + topology node — modeled as an `Arc` pair: one allocation,
+//!   one refcount);
+//! * the executor's **notifier** (Dekker-style two-phase commit): an
+//!   idle worker first *announces* itself as a waiter, re-checks the
+//!   queues, and only then sleeps on its condvar; a submitter checks the
+//!   waiter count and wakes one — cheap when workers are active, one
+//!   futex trip when they've just parked;
+//! * a short bounded spin precedes the announce (Taskflow's
+//!   `executor::_explore_task` loop).
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::relic::affinity::pin_to_cpu;
+
+use super::common::{ErasedTask, StopFlag, TeamQueue};
+use super::TaskRuntime;
+
+/// Shared-state node for one async task (`tf::AsyncTask` analogue).
+struct Node {
+    task: ErasedTask,
+    _refcount_pad: [u64; 6],
+}
+
+struct Executor {
+    queue: TeamQueue<Arc<Node>>,
+    /// Two-phase notifier state: number of announced waiters.
+    waiters: AtomicU32,
+    notify_mu: Mutex<()>,
+    notify_cv: Condvar,
+    completed: AtomicU32,
+    stop: StopFlag,
+}
+
+impl Executor {
+    /// Submitter side of the notifier.
+    fn notify_one(&self) {
+        if self.waiters.load(Ordering::Acquire) > 0 {
+            let _g = self.notify_mu.lock().unwrap();
+            self.notify_cv.notify_one();
+        }
+    }
+
+    /// Worker side: two-phase commit to sleep.
+    fn wait_for_work(&self) {
+        self.waiters.fetch_add(1, Ordering::SeqCst);
+        // Phase 2: re-check after announcing (the Dekker handshake).
+        let recheck = {
+            let g = self.queue.try_pop();
+            g
+        };
+        if let Some(node) = recheck {
+            self.waiters.fetch_sub(1, Ordering::SeqCst);
+            // SAFETY: producers wait before dropping referents.
+            unsafe { node.task.call() };
+            self.completed.fetch_add(1, Ordering::Release);
+            return;
+        }
+        if self.stop.stopped() {
+            self.waiters.fetch_sub(1, Ordering::SeqCst);
+            return;
+        }
+        let g = self.notify_mu.lock().unwrap();
+        let _g = self
+            .notify_cv
+            .wait_timeout(g, std::time::Duration::from_millis(10))
+            .unwrap();
+        self.waiters.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Taskflow executor model (1 worker — the paper's 2-thread setup).
+pub struct Taskflow {
+    exec: Arc<Executor>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Bounded exploration spins before the notifier announce.
+const EXPLORE_SPINS: u32 = 128;
+
+impl Taskflow {
+    pub fn new(worker_cpu: Option<usize>) -> Self {
+        let exec = Arc::new(Executor {
+            queue: TeamQueue::new(),
+            waiters: AtomicU32::new(0),
+            notify_mu: Mutex::new(()),
+            notify_cv: Condvar::new(),
+            completed: AtomicU32::new(0),
+            stop: StopFlag::new(),
+        });
+        let worker = {
+            let exec = Arc::clone(&exec);
+            std::thread::Builder::new()
+                .name("taskflow-worker".into())
+                .spawn(move || {
+                    if let Some(cpu) = worker_cpu {
+                        pin_to_cpu(cpu);
+                    }
+                    while !exec.stop.stopped() {
+                        // _explore_task: bounded spin over the queues.
+                        let mut found = false;
+                        for _ in 0..EXPLORE_SPINS {
+                            if let Some(node) = exec.queue.try_pop() {
+                                // SAFETY: producer waits before returning.
+                                unsafe { node.task.call() };
+                                exec.completed.fetch_add(1, Ordering::Release);
+                                found = true;
+                                break;
+                            }
+                            std::hint::spin_loop();
+                        }
+                        if !found {
+                            exec.wait_for_work();
+                        }
+                    }
+                })
+                .expect("spawn taskflow worker")
+        };
+        Taskflow { exec, worker: Some(worker) }
+    }
+}
+
+impl TaskRuntime for Taskflow {
+    fn name(&self) -> &'static str {
+        "taskflow"
+    }
+
+    fn run_pair(&mut self, a: &(dyn Fn() + Sync), b: &(dyn Fn() + Sync)) {
+        let before = self.exec.completed.load(Ordering::Acquire);
+        // executor.async(b): allocate the shared-state node, enqueue,
+        // poke the notifier.
+        // SAFETY: the wait loop below precedes `b`'s end of scope.
+        let node = Arc::new(Node { task: unsafe { ErasedTask::new(b) }, _refcount_pad: [0; 6] });
+        self.exec.queue.push(Arc::clone(&node));
+        self.exec.notify_one();
+        a();
+        // future.wait(): the caller is *not* a worker in Taskflow's async
+        // model, so it spins on the shared state rather than helping —
+        // unless the task is still unclaimed, in which case executing it
+        // inline models `executor.corun_until`.
+        while self.exec.completed.load(Ordering::Acquire) == before {
+            if let Some(node) = self.exec.queue.try_pop() {
+                // SAFETY: as above.
+                unsafe { node.task.call() };
+                self.exec.completed.fetch_add(1, Ordering::Release);
+                break;
+            }
+            std::hint::spin_loop();
+        }
+    }
+}
+
+impl Drop for Taskflow {
+    fn drop(&mut self) {
+        self.exec.stop.stop();
+        let _g = self.exec.notify_mu.lock().unwrap();
+        self.exec.notify_cv.notify_all();
+        drop(_g);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn completes_across_park_episodes() {
+        let mut rt = Taskflow::new(None);
+        let hits = AtomicUsize::new(0);
+        for i in 0..400 {
+            if i % 40 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            rt.run_pair(&|| {}, &|| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 400);
+    }
+
+    #[test]
+    fn notifier_waiter_count_returns_to_zero() {
+        let rt = Taskflow::new(None);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        // Worker may be parked (waiters=1) or spinning (waiters=0);
+        // after drop it must be 0.
+        let exec = Arc::clone(&rt.exec);
+        drop(rt);
+        assert_eq!(exec.waiters.load(Ordering::SeqCst), 0);
+    }
+}

@@ -1,0 +1,209 @@
+//! Cache hierarchy model for one physical core.
+//!
+//! On Intel SMT (the paper's i7-8700), the two logical threads of a core
+//! *share* L1d and L2 — the very property that makes producer/consumer
+//! data passing cheap on an SMT pair (paper §I: "passing data through
+//! lower private levels of cache hierarchy in the same physical CPU
+//! core could reduce an overhead"). The model is a set-associative LRU
+//! L1d and L2 plus a fixed-latency LLC/memory backstop, shared by both
+//! simulated contexts; capacity/conflict contention between the two
+//! co-running kernel instances emerges naturally.
+
+/// Latencies in cycles (Skylake-ish; see DESIGN.md §2 calibration).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheConfig {
+    pub l1_bytes: usize,
+    pub l1_ways: usize,
+    pub l2_bytes: usize,
+    pub l2_ways: usize,
+    pub line_bytes: usize,
+    pub l1_latency: u64,
+    pub l2_latency: u64,
+    pub llc_latency: u64,
+    pub mem_latency: u64,
+    /// Fraction (per mille) of LLC hits among L2 misses — a 12 MiB LLC
+    /// holds every benchmark working set, so this defaults high.
+    pub llc_hit_per_mille: u32,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            l1_bytes: 32 * 1024,
+            l1_ways: 8,
+            l2_bytes: 256 * 1024,
+            l2_ways: 4,
+            line_bytes: 64,
+            l1_latency: 4,
+            l2_latency: 14,
+            llc_latency: 44,
+            mem_latency: 200,
+            llc_hit_per_mille: 950,
+        }
+    }
+}
+
+/// One set-associative LRU level.
+struct Level {
+    sets: Vec<Vec<u64>>, // per-set: line tags, most-recent last
+    ways: usize,
+    set_shift: u32,
+    set_mask: u64,
+}
+
+impl Level {
+    fn new(bytes: usize, ways: usize, line: usize) -> Self {
+        let sets = (bytes / line / ways).max(1);
+        assert!(sets.is_power_of_two(), "cache sets must be a power of two");
+        Level {
+            sets: vec![Vec::with_capacity(ways); sets],
+            ways,
+            set_shift: line.trailing_zeros(),
+            set_mask: sets as u64 - 1,
+        }
+    }
+
+    /// Returns true on hit; inserts/updates LRU either way.
+    fn access(&mut self, line_addr: u64) -> bool {
+        let set = ((line_addr >> self.set_shift) & self.set_mask) as usize;
+        let lines = &mut self.sets[set];
+        if let Some(pos) = lines.iter().position(|&t| t == line_addr) {
+            let tag = lines.remove(pos);
+            lines.push(tag);
+            true
+        } else {
+            if lines.len() == self.ways {
+                lines.remove(0); // evict LRU
+            }
+            lines.push(line_addr);
+            false
+        }
+    }
+
+    fn clear(&mut self) {
+        for s in &mut self.sets {
+            s.clear();
+        }
+    }
+}
+
+/// The shared L1d/L2 + LLC model.
+pub struct CacheModel {
+    cfg: CacheConfig,
+    l1: Level,
+    l2: Level,
+    /// Deterministic counter driving the LLC-vs-memory split.
+    llc_roll: u32,
+    /// Stats.
+    pub accesses: u64,
+    pub l1_misses: u64,
+    pub l2_misses: u64,
+}
+
+impl CacheModel {
+    pub fn new(cfg: CacheConfig) -> Self {
+        CacheModel {
+            l1: Level::new(cfg.l1_bytes, cfg.l1_ways, cfg.line_bytes),
+            l2: Level::new(cfg.l2_bytes, cfg.l2_ways, cfg.line_bytes),
+            cfg,
+            llc_roll: 0,
+            accesses: 0,
+            l1_misses: 0,
+            l2_misses: 0,
+        }
+    }
+
+    /// Access one address; returns the load-to-use latency in cycles.
+    pub fn access(&mut self, addr: u64) -> u64 {
+        self.accesses += 1;
+        let line = addr & !(self.cfg.line_bytes as u64 - 1);
+        if self.l1.access(line) {
+            return self.cfg.l1_latency;
+        }
+        self.l1_misses += 1;
+        if self.l2.access(line) {
+            return self.cfg.l2_latency;
+        }
+        self.l2_misses += 1;
+        // LLC modeled statistically (deterministic rotation): the
+        // benchmarks' working sets fit, so most L2 misses hit LLC.
+        self.llc_roll = (self.llc_roll + 613) % 1000;
+        if self.llc_roll < self.cfg.llc_hit_per_mille {
+            self.cfg.llc_latency
+        } else {
+            self.cfg.mem_latency
+        }
+    }
+
+    /// Reset tags and stats (between independent measurements).
+    pub fn clear(&mut self) {
+        self.l1.clear();
+        self.l2.clear();
+        self.llc_roll = 0;
+        self.accesses = 0;
+        self.l1_misses = 0;
+        self.l2_misses = 0;
+    }
+
+    pub fn config(&self) -> &CacheConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeated_access_hits_l1() {
+        let mut c = CacheModel::new(CacheConfig::default());
+        assert!(c.access(0x1000) > c.cfg.l1_latency); // cold miss
+        assert_eq!(c.access(0x1000), c.cfg.l1_latency);
+        assert_eq!(c.access(0x1004), c.cfg.l1_latency); // same line
+        assert_eq!(c.l1_misses, 1);
+    }
+
+    #[test]
+    fn working_set_larger_than_l1_spills_to_l2() {
+        let mut c = CacheModel::new(CacheConfig::default());
+        // Touch 64 KiB (2x L1) twice; second pass should mostly hit L2.
+        for round in 0..2 {
+            for i in 0..1024u64 {
+                c.access(i * 64);
+            }
+            if round == 0 {
+                c.l1_misses = 0;
+                c.l2_misses = 0;
+            }
+        }
+        assert!(c.l1_misses > 0, "L1 cannot hold 64 KiB");
+        assert_eq!(c.l2_misses, 0, "L2 holds 64 KiB: {}", c.l2_misses);
+    }
+
+    #[test]
+    fn lru_keeps_hot_line() {
+        let cfg = CacheConfig::default();
+        let mut c = CacheModel::new(cfg);
+        let sets = cfg.l1_bytes / cfg.line_bytes / cfg.l1_ways;
+        let stride = (sets * cfg.line_bytes) as u64; // same-set addresses
+        let hot = 0u64;
+        c.access(hot);
+        // Touch ways-1 conflicting lines, re-touching hot in between.
+        for i in 1..cfg.l1_ways as u64 {
+            c.access(i * stride);
+            c.access(hot);
+        }
+        let before = c.l1_misses;
+        assert_eq!(c.access(hot), cfg.l1_latency);
+        assert_eq!(c.l1_misses, before);
+    }
+
+    #[test]
+    fn clear_resets_state() {
+        let mut c = CacheModel::new(CacheConfig::default());
+        c.access(0x40);
+        c.clear();
+        assert_eq!(c.accesses, 0);
+        assert!(c.access(0x40) > c.config().l1_latency);
+    }
+}

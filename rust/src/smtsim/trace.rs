@@ -1,0 +1,262 @@
+//! Operation traces: the IR the benchmark kernels are replayed through
+//! on the simulated SMT core.
+//!
+//! [`TraceProbe`] implements [`crate::probe::Probe`], so the *same*
+//! kernel code that runs natively also produces the trace (DESIGN.md
+//! §4.1 — no twin implementations to diverge).
+
+use crate::probe::Probe;
+
+/// Synchronization flag ids used by the runtime overhead models.
+pub mod flags {
+    /// Producer → consumer: a task is available.
+    pub const TASK_READY: u32 = 0;
+    /// Consumer → producer: the task has completed.
+    pub const TASK_DONE: u32 = 1;
+    /// Number of flags the simulator allocates.
+    pub const COUNT: usize = 4;
+}
+
+/// How a context polls while waiting on a flag (models each runtime's
+/// idle-wait mechanism — see `overhead.rs`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PollKind {
+    /// Tight load+cmp+jmp loop, no `pause`: hogs issue slots.
+    Spin,
+    /// Spin with `pause` between polls (Relic, OpenMP spin waits).
+    SpinPause,
+    /// A CAS attempt per poll (lock-less steal loops: X-OpenMP).
+    CasPoll,
+    /// A try-lock (atomic RMW pair) per poll (locked deques: LLVM/Intel
+    /// OpenMP taskwait help-polling, OpenCilk victim locks).
+    LockedPoll,
+    /// Exponentially growing `pause` sequences (oneTBB backoff).
+    Backoff,
+    /// Bounded `pause` spin, then park until woken by a futex
+    /// (Taskflow notifier; `n` = spin iterations before parking).
+    HybridPark(u32),
+    /// Park immediately; waking costs the OS wake latency (GNU OpenMP
+    /// condvar waits).
+    Park,
+}
+
+/// One architectural operation in a trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Op {
+    /// Data load (blocking, in-order) from a logical byte address.
+    Load(u64),
+    /// Dependent (pointer-chase) load: full latency exposed, plus an SMT
+    /// partitioning penalty while the sibling context is active.
+    LoadDep(u64),
+    /// Data store (fire-and-forget through the store buffer).
+    Store(u64),
+    /// `n` independent ALU micro-ops.
+    Compute(u32),
+    /// `n` dependent floating-point micro-ops (latency chain).
+    ComputeFp(u32),
+    /// Conditional branch; `true` = well-predicted.
+    Branch(bool),
+    /// Lock-prefixed read-modify-write on an address (serializing).
+    AtomicRmw(u64),
+    /// The x86 `pause` instruction: yields issue slots to the sibling.
+    Pause,
+    /// Publish a flag (store + cross-thread visibility delay).
+    SetFlag(u32),
+    /// Wait until a flag is visible, polling per [`PollKind`].
+    WaitFlag(u32, PollKind),
+    /// Fixed-cost kernel entry (futex wake syscall etc.), in cycles.
+    Syscall(u32),
+}
+
+/// A recorded operation sequence.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub ops: Vec<Op>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Rough work measure: total micro-ops (used in tests and reports).
+    pub fn uops(&self) -> u64 {
+        self.ops
+            .iter()
+            .map(|op| match op {
+                Op::Compute(n) | Op::ComputeFp(n) => *n as u64,
+                _ => 1,
+            })
+            .sum()
+    }
+
+    /// Count of memory operations (loads + stores + atomics).
+    pub fn mem_ops(&self) -> u64 {
+        self.ops
+            .iter()
+            .filter(|op| {
+                matches!(op, Op::Load(_) | Op::LoadDep(_) | Op::Store(_) | Op::AtomicRmw(_))
+            })
+            .count() as u64
+    }
+
+    /// Append another trace.
+    pub fn extend(&mut self, other: &Trace) {
+        self.ops.extend_from_slice(&other.ops);
+    }
+}
+
+/// Probe that records a [`Trace`], offsetting every address by
+/// `instance_offset` so two benchmark instances reference distinct
+/// copies of their data (the paper passes each kernel instance its own
+/// graph copy).
+pub struct TraceProbe {
+    trace: Trace,
+    instance_offset: u64,
+}
+
+impl TraceProbe {
+    pub fn new() -> Self {
+        Self::with_offset(0)
+    }
+
+    /// `instance` 0, 1, … place their data in disjoint address regions.
+    pub fn with_offset(instance: u64) -> Self {
+        TraceProbe {
+            trace: Trace::new(),
+            // Distinct 16 MiB regions; NOT a multiple of the L1/L2 way
+            // size so the two instances don't alias the same sets
+            // pathologically (matches distinct heap allocations).
+            instance_offset: instance * 0x100_F040,
+        }
+    }
+
+    /// Take the recorded trace.
+    pub fn finish(self) -> Trace {
+        self.trace
+    }
+
+    /// Ops recorded so far.
+    pub fn len(&self) -> usize {
+        self.trace.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.trace.ops.is_empty()
+    }
+}
+
+impl Default for TraceProbe {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Probe for TraceProbe {
+    #[inline]
+    fn load(&mut self, addr: u64) {
+        self.trace.ops.push(Op::Load(addr + self.instance_offset));
+    }
+    #[inline]
+    fn load_dep(&mut self, addr: u64) {
+        self.trace.ops.push(Op::LoadDep(addr + self.instance_offset));
+    }
+    #[inline]
+    fn store(&mut self, addr: u64) {
+        self.trace.ops.push(Op::Store(addr + self.instance_offset));
+    }
+    #[inline]
+    fn compute(&mut self, n: u32) {
+        // Merge adjacent computes to keep traces compact.
+        if let Some(Op::Compute(last)) = self.trace.ops.last_mut() {
+            *last += n;
+        } else {
+            self.trace.ops.push(Op::Compute(n));
+        }
+    }
+    #[inline]
+    fn compute_fp(&mut self, n: u32) {
+        if let Some(Op::ComputeFp(last)) = self.trace.ops.last_mut() {
+            *last += n;
+        } else {
+            self.trace.ops.push(Op::ComputeFp(n));
+        }
+    }
+    #[inline]
+    fn branch(&mut self, predictable: bool) {
+        self.trace.ops.push(Op::Branch(predictable));
+    }
+    #[inline]
+    fn atomic_rmw(&mut self, addr: u64) {
+        self.trace.ops.push(Op::AtomicRmw(addr + self.instance_offset));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::probe::Probe;
+
+    #[test]
+    fn records_ops_with_offset() {
+        let mut p = TraceProbe::with_offset(1);
+        p.load(0x100);
+        p.store(0x200);
+        p.compute(3);
+        p.compute(2); // merges
+        p.branch(true);
+        let t = p.finish();
+        assert_eq!(
+            t.ops,
+            vec![
+                Op::Load(0x100 + 0x100_F040),
+                Op::Store(0x200 + 0x100_F040),
+                Op::Compute(5),
+                Op::Branch(true),
+            ]
+        );
+        assert_eq!(t.uops(), 8);
+        assert_eq!(t.mem_ops(), 2);
+    }
+
+    #[test]
+    fn kernel_traces_are_deterministic() {
+        use crate::graph::{bfs, kronecker::paper_graph};
+        let g = paper_graph();
+        let mk = || {
+            let mut p = TraceProbe::new();
+            bfs::bfs(&g, 0, &mut p);
+            p.finish()
+        };
+        assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn two_instances_do_not_share_addresses() {
+        use crate::graph::{kronecker::paper_graph, tc};
+        let g = paper_graph();
+        let mut p0 = TraceProbe::with_offset(0);
+        let mut p1 = TraceProbe::with_offset(1);
+        tc::triangle_count(&g, &mut p0);
+        tc::triangle_count(&g, &mut p1);
+        let a0: std::collections::HashSet<u64> = p0
+            .finish()
+            .ops
+            .iter()
+            .filter_map(|o| match o {
+                Op::Load(a) | Op::Store(a) => Some(*a),
+                _ => None,
+            })
+            .collect();
+        let a1: std::collections::HashSet<u64> = p1
+            .finish()
+            .ops
+            .iter()
+            .filter_map(|o| match o {
+                Op::Load(a) | Op::Store(a) => Some(*a),
+                _ => None,
+            })
+            .collect();
+        assert!(a0.is_disjoint(&a1));
+    }
+}

@@ -1,0 +1,132 @@
+//! Deterministic PRNG + a small property-testing helper.
+//!
+//! The offline environment carries no `rand`/`proptest`, so the crate
+//! ships its own xorshift-based generator (used by the Kronecker graph
+//! generator, workload builders, and property tests) and a minimal
+//! property harness with input reporting on failure.
+
+/// xorshift64* — fast, deterministic, good enough for workload generation
+/// and property tests (not cryptographic).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Seeded generator; `seed` is perturbed so 0 is a valid seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.wrapping_mul(0x9E3779B97F4A7C15) | 1 }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, bound)`; `bound` must be non-zero.
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        // Multiply-shift trick (Lemire); bias negligible for our bounds.
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Run `f` over `cases` deterministic random seeds; on panic or `Err`,
+/// report the failing seed so the case can be replayed.
+pub fn check<F: Fn(&mut Rng) -> std::result::Result<(), String>>(cases: u32, f: F) {
+    for case in 0..cases {
+        let mut rng = Rng::new(0xC0FFEE ^ (case as u64) << 17);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property failed at case {case} (seed 0xC0FFEE^({case}<<17)): {msg}");
+        }
+    }
+}
+
+/// Assert two floats are close; returns Err for use inside [`check`].
+pub fn close(a: f64, b: f64, tol: f64) -> std::result::Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let (mut a, mut b) = (Rng::new(7), Rng::new(7));
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut rng = Rng::new(3);
+        for _ in 0..10_000 {
+            assert!(rng.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Rng::new(11);
+        for _ in 0..10_000 {
+            let v = rng.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(5);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn chance_rate_sane() {
+        let mut rng = Rng::new(9);
+        let hits = (0..100_000).filter(|_| rng.chance(0.25)).count();
+        assert!((20_000..30_000).contains(&hits), "hits={hits}");
+    }
+}

@@ -1,0 +1,99 @@
+//! Integration: every task runtime (Relic + the seven baseline models)
+//! must compute *identical results* to serial execution when driving
+//! real kernel pairs — scheduling must never change outputs. Also
+//! exercises failure-ish edges: zero-size graphs, repeated reuse,
+//! interleaved kernels.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use relic_smt::bench::Workload;
+use relic_smt::graph::{kronecker_graph, CsrGraph, KroneckerParams};
+use relic_smt::probe::NoProbe;
+use relic_smt::relic::Relic;
+use relic_smt::runtimes;
+
+#[test]
+fn all_runtimes_produce_serial_results_on_all_kernels() {
+    let workloads = Workload::all();
+    let expected: Vec<u64> = workloads.iter().map(|w| 2 * w.run_native()).collect();
+    for name in runtimes::FRAMEWORK_NAMES {
+        let mut rt = runtimes::by_name(name, None).unwrap();
+        for (w, want) in workloads.iter().zip(&expected) {
+            let sum = AtomicU64::new(0);
+            for _ in 0..20 {
+                sum.store(0, Ordering::SeqCst);
+                rt.run_pair(
+                    &|| {
+                        sum.fetch_add(w.run_native(), Ordering::SeqCst);
+                    },
+                    &|| {
+                        sum.fetch_add(w.run_native(), Ordering::SeqCst);
+                    },
+                );
+                assert_eq!(sum.load(Ordering::SeqCst), *want, "{name}/{}", w.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn relic_produces_serial_results_on_all_kernels() {
+    let relic = Relic::new();
+    for w in Workload::all() {
+        let want = 2 * w.run_native();
+        let sum = AtomicU64::new(0);
+        let task = || {
+            sum.fetch_add(w.run_native(), Ordering::SeqCst);
+        };
+        relic.pair(&task, &task);
+        assert_eq!(sum.load(Ordering::SeqCst), want, "relic/{}", w.name);
+    }
+}
+
+#[test]
+fn kernels_handle_degenerate_graphs() {
+    use relic_smt::graph::{bc, bfs, cc, pr, sssp, tc};
+    // Single vertex, no edges.
+    let g = CsrGraph::from_undirected_weighted(1, &[], true);
+    assert_eq!(bfs::bfs(&g, 0, &mut NoProbe), vec![0]);
+    assert_eq!(cc::shiloach_vishkin(&g, &mut NoProbe), vec![0]);
+    assert_eq!(sssp::delta_stepping(&g, 0, 64, &mut NoProbe), vec![0]);
+    assert_eq!(tc::triangle_count(&g, &mut NoProbe), 0);
+    assert_eq!(bc::brandes(&g, &mut NoProbe), vec![0.0]);
+    // Dangling mass is dropped (GAP semantics): an isolated vertex
+    // keeps only the teleport share (1 - d) / n = 0.15.
+    let scores = pr::pagerank(&g, 20, 1e-4, &mut NoProbe);
+    assert!((scores[0] - 0.15).abs() < 1e-9, "{}", scores[0]);
+    // Empty graph (0 vertices).
+    let g0 = CsrGraph::from_undirected_weighted(0, &[], true);
+    assert!(pr::pagerank(&g0, 20, 1e-4, &mut NoProbe).is_empty());
+    assert!(cc::shiloach_vishkin(&g0, &mut NoProbe).is_empty());
+    assert_eq!(tc::triangle_count(&g0, &mut NoProbe), 0);
+}
+
+#[test]
+fn runtimes_survive_interleaved_kernel_mix() {
+    // A runtime must not corrupt state when consecutive pairs run
+    // different kernels (descriptor reuse, epoch bookkeeping).
+    let g = kronecker_graph(&KroneckerParams::gap(6, 8, 3));
+    let mut rt = runtimes::by_name("opencilk", None).unwrap();
+    let total = AtomicU64::new(0);
+    for i in 0..50u32 {
+        let a = i % 3;
+        let task_a = || {
+            let v = match a {
+                0 => relic_smt::graph::bfs::checksum(&relic_smt::graph::bfs::bfs(
+                    &g, 0, &mut NoProbe,
+                )),
+                1 => relic_smt::graph::tc::triangle_count(&g, &mut NoProbe),
+                _ => relic_smt::graph::cc::checksum(&relic_smt::graph::cc::shiloach_vishkin(
+                    &g,
+                    &mut NoProbe,
+                )),
+            };
+            total.fetch_add(v, Ordering::Relaxed);
+        };
+        rt.run_pair(&task_a, &task_a);
+    }
+    assert!(total.load(Ordering::Relaxed) > 0);
+}

@@ -1,0 +1,135 @@
+//! Integration: the three-layer contract. AOT artifacts (JAX/Pallas,
+//! lowered by `make artifacts`) must load through the PJRT runtime and
+//! agree with the native Rust kernels on the paper's input graph.
+//!
+//! Skipped (with a note) when `artifacts/manifest.json` is absent.
+
+use std::path::{Path, PathBuf};
+
+use relic_smt::graph::{dense, kronecker::paper_graph};
+use relic_smt::probe::NoProbe;
+use relic_smt::runtime::GraphExecutor;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    // Tests run from the crate root.
+    for candidate in ["artifacts", "../artifacts"] {
+        let p = Path::new(candidate);
+        if p.join("manifest.json").exists() {
+            return Some(p.to_path_buf());
+        }
+    }
+    None
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(dir) => dir,
+            None => {
+                eprintln!("skipping: no artifacts (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn pagerank_roundtrip_matches_native() {
+    let dir = require_artifacts!();
+    let mut exec = GraphExecutor::new(&dir).unwrap();
+    let g = paper_graph();
+    let n = g.num_vertices();
+    let pjrt = exec
+        .execute("pagerank", n, &[dense::transition(&g), dense::uniform(n)])
+        .unwrap();
+    let native = relic_smt::graph::pr::pagerank(&g, 20, 0.0, &mut NoProbe);
+    for (v, (p, q)) in pjrt.iter().zip(&native).enumerate() {
+        assert!((*p as f64 - q).abs() < 1e-5, "vertex {v}: {p} vs {q}");
+    }
+    // Distribution property survives the stack (dangling/isolated
+    // vertices drop mass, so compare against the native sum, not 1.0).
+    let sum: f32 = pjrt.iter().sum();
+    let native_sum: f64 = native.iter().sum();
+    assert!((sum as f64 - native_sum).abs() < 1e-4, "sum {sum} vs {native_sum}");
+}
+
+#[test]
+fn bfs_and_sssp_roundtrip_match_native() {
+    let dir = require_artifacts!();
+    let mut exec = GraphExecutor::new(&dir).unwrap();
+    let g = paper_graph();
+    let n = g.num_vertices();
+    for source in [0u32, 7, 31] {
+        let pjrt = exec
+            .execute("bfs", n, &[dense::adjacency(&g), dense::one_hot(n, source)])
+            .unwrap();
+        let native = relic_smt::graph::bfs::bfs(&g, source, &mut NoProbe);
+        for (v, (p, q)) in pjrt.iter().zip(&native).enumerate() {
+            let p = if p.is_infinite() { u32::MAX } else { *p as u32 };
+            assert_eq!(p, *q, "bfs src {source} vertex {v}");
+        }
+        let pjrt = exec
+            .execute("sssp", n, &[dense::weights_inf(&g), dense::one_hot(n, source)])
+            .unwrap();
+        let native = relic_smt::graph::sssp::delta_stepping(
+            &g,
+            source,
+            relic_smt::graph::sssp::DEFAULT_DELTA,
+            &mut NoProbe,
+        );
+        for (v, (p, q)) in pjrt.iter().zip(&native).enumerate() {
+            let p = if p.is_infinite() { u32::MAX } else { *p as u32 };
+            assert_eq!(p, *q, "sssp src {source} vertex {v}");
+        }
+    }
+}
+
+#[test]
+fn cc_tc_bc_roundtrip_match_native() {
+    let dir = require_artifacts!();
+    let mut exec = GraphExecutor::new(&dir).unwrap();
+    let g = paper_graph();
+    let n = g.num_vertices();
+
+    let cc = exec.execute("cc", n, &[dense::w0(&g)]).unwrap();
+    let native_cc = relic_smt::graph::cc::shiloach_vishkin(&g, &mut NoProbe);
+    assert_eq!(
+        cc.iter().map(|v| *v as u32).collect::<Vec<_>>(),
+        native_cc
+    );
+
+    let tc = exec.execute("tc", n, &[dense::adjacency(&g)]).unwrap();
+    let native_tc = relic_smt::graph::tc::triangle_count(&g, &mut NoProbe);
+    assert_eq!(tc[0] as u64, native_tc);
+
+    let bc = exec.execute("bc", n, &[dense::adjacency(&g)]).unwrap();
+    let native_bc = relic_smt::graph::bc::brandes(&g, &mut NoProbe);
+    for (v, (p, q)) in bc.iter().zip(&native_bc).enumerate() {
+        assert!(
+            (*p as f64 - q).abs() < 1e-2,
+            "bc vertex {v}: {p} vs {q}"
+        );
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let dir = require_artifacts!();
+    let mut exec = GraphExecutor::new(&dir).unwrap();
+    let g = paper_graph();
+    let n = g.num_vertices();
+    let inputs = [dense::adjacency(&g)];
+    let t_first = std::time::Instant::now();
+    exec.execute("tc", n, &inputs).unwrap();
+    let first = t_first.elapsed();
+    let t_rest = std::time::Instant::now();
+    for _ in 0..10 {
+        exec.execute("tc", n, &inputs).unwrap();
+    }
+    let per_exec = t_rest.elapsed() / 10;
+    assert!(
+        per_exec < first,
+        "cached executions ({per_exec:?}) should beat compile+run ({first:?})"
+    );
+    assert_eq!(exec.executions, 11);
+}
