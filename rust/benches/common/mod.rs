@@ -2,6 +2,10 @@
 //! warmup + timed repetitions with mean/min/max reporting, plus the
 //! simulator-backed figure helpers every bench target uses.
 
+// Each bench binary compiles its own copy of this module and uses a
+// subset of it; the unused remainder is not dead code of the crate.
+#![allow(dead_code)]
+
 use std::time::Instant;
 
 /// Time `f` `iters` times after `warmup`; print a criterion-style line.

@@ -1,0 +1,82 @@
+//! Intra-kernel fork-join benchmark: for every paper workload, compare
+//!
+//! * **serial** — one instance on the main thread;
+//! * **pair** — the paper's protocol, two whole instances co-scheduled
+//!   on the SMT pair via `Relic::pair` (throughput: needs two requests);
+//! * **parallel_for** — one instance with its hot loops split across
+//!   the pair through `Relic::scope` (latency: one request finishes
+//!   faster — the coordinator's odd-leftover scenario).
+//!
+//! Plus a document-batch row for the JSON parser, whose single-document
+//! parse is a sequential dependence chain.
+//!
+//! Run: `cargo bench --bench parallel_for [-- --iters N]`
+//! Meaningful numbers need a host with an SMT sibling pair; elsewhere
+//! the checksum assertions still make it a correctness smoke test.
+
+mod common;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use relic_smt::bench::figures;
+use relic_smt::bench::measure;
+use relic_smt::cli::Args;
+use relic_smt::json;
+use relic_smt::relic::{affinity, Par, Relic, RelicConfig};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let iters = args.get_u64("iters", 2_000);
+    let warmup = args.get_u64("warmup", 200);
+
+    println!("host: {}", affinity::topology_summary());
+    let pair = affinity::smt_sibling_pair();
+    if pair.is_none() {
+        println!("WARNING: no SMT siblings — speedups below are not meaningful on this host.");
+    }
+    if let Some((main_cpu, _)) = pair {
+        affinity::pin_to_cpu(main_cpu);
+    }
+    let relic = Relic::with_config(RelicConfig {
+        assistant_cpu: pair.map(|p| p.1),
+        ..Default::default()
+    });
+
+    // The measurement protocol lives in figures::intra_kernel (shared
+    // with `repro intra`); it also asserts every parallel checksum
+    // equals its serial one, so this doubles as a correctness gate.
+    common::section("per-kernel: serial vs pair vs parallel_for");
+    let rows = figures::intra_kernel(&relic, iters, warmup);
+    print!("{}", figures::render_intra(&rows));
+
+    common::section("json document-batch splitting (8 widgets/iteration)");
+    let docs: Vec<&[u8]> = vec![json::WIDGET; 8];
+    let sink = AtomicU64::new(0);
+    let serial = measure(iters, warmup, || {
+        for d in &docs {
+            sink.fetch_add(
+                json::parse(d).expect("widget parses").node_count() as u64,
+                Ordering::Relaxed,
+            );
+        }
+    });
+    let par = Par::Relic(&relic);
+    let batched = measure(iters, warmup, || {
+        for r in json::parse_batch_par(&docs, &par) {
+            sink.fetch_add(r.expect("widget parses").node_count() as u64, Ordering::Relaxed);
+        }
+    });
+    std::hint::black_box(sink.load(Ordering::Relaxed));
+    println!(
+        "json-x8 {:>14.1} ns serial, {:>10.1} ns split ({:.3}x)",
+        serial.mean_ns,
+        batched.mean_ns,
+        serial.mean_ns / batched.mean_ns
+    );
+
+    let stats = relic.stats();
+    println!(
+        "\nrelic: {} tasks submitted, {} completed, {} queue-full fallbacks",
+        stats.submitted, stats.completed, stats.queue_full_events
+    );
+}

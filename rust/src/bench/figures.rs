@@ -5,7 +5,10 @@
 //! * [`fig3`] — Relic's speedups (Fig. 3);
 //! * [`fig4`] — average speedups without negative outliers (Fig. 4);
 //! * [`granularity`] — the §IV in-text serial task-time table;
-//! * [`section5_geomeans`] — the §V in-text geomeans (with degradations).
+//! * [`section5_geomeans`] — the §V in-text geomeans (with degradations);
+//! * [`intra_kernel`] — beyond the paper: serial vs `pair` (two whole
+//!   instances) vs `parallel_for` (one instance, internally fork-joined)
+//!   per kernel, wall-clock.
 //!
 //! Each function returns structured rows; [`render_table`] pretty-prints
 //! them with the paper's reference values beside ours.
@@ -210,6 +213,87 @@ pub fn granularity(cfg: &CoreConfig) -> Vec<GranularityRow> {
         .collect()
 }
 
+/// One intra-kernel comparison row (wall-clock).
+///
+/// `pair_speedup` is the paper's protocol — two whole instances, one
+/// per logical thread, against running both serially. It measures
+/// *throughput* and needs two independent requests.
+/// `parallel_for_speedup` is one instance with its hot loops
+/// fork-joined, against one serial instance. It measures *latency* of a
+/// single request — the scenario `coordinator` hits on odd batches.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntraRow {
+    pub kernel: String,
+    /// Mean serial single-instance time (ns).
+    pub serial_ns: f64,
+    pub pair_speedup: f64,
+    pub parallel_for_speedup: f64,
+}
+
+/// The intra-kernel ablation: serial vs `pair` vs `parallel_for` for
+/// every workload, on `relic` (pin the main thread and the assistant to
+/// an SMT sibling pair first for meaningful numbers). Also asserts the
+/// parallel checksums equal the serial ones — the run doubles as an
+/// end-to-end determinism check.
+pub fn intra_kernel(relic: &crate::relic::Relic, iters: u64, warmup: u64) -> Vec<IntraRow> {
+    use crate::relic::Par;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    let mut rows = Vec::new();
+    for w in Workload::all() {
+        let serial_sum = w.run_native();
+        assert_eq!(
+            w.run_native_par(&Par::Relic(relic)),
+            serial_sum,
+            "{}: parallel checksum diverges from serial",
+            w.name
+        );
+        let sink = AtomicU64::new(0);
+        let task = || {
+            sink.fetch_add(w.run_native(), Ordering::Relaxed);
+        };
+        // One serial instance (the parallel_for baseline).
+        let serial1 = super::harness::measure(iters, warmup, || task());
+        // Two serial instances (the pair baseline, paper protocol).
+        let serial2 = super::harness::measure(iters, warmup, || {
+            task();
+            task();
+        });
+        let paired = super::harness::measure(iters, warmup, || relic.pair(&task, &task));
+        let par = Par::Relic(relic);
+        let pfor = super::harness::measure(iters, warmup, || {
+            sink.fetch_add(w.run_native_par(&par), Ordering::Relaxed);
+        });
+        std::hint::black_box(sink.load(Ordering::Relaxed));
+        rows.push(IntraRow {
+            kernel: w.name.to_string(),
+            serial_ns: serial1.mean_ns,
+            pair_speedup: serial2.mean_ns / paired.mean_ns,
+            parallel_for_speedup: serial1.mean_ns / pfor.mean_ns,
+        });
+    }
+    rows
+}
+
+/// Render the intra-kernel comparison table.
+pub fn render_intra(rows: &[IntraRow]) -> String {
+    let mut out = format!(
+        "{:<8}{:>12}{:>12}{:>16}\n",
+        "kernel", "serial µs", "pair", "parallel_for"
+    );
+    for r in rows {
+        out += &format!(
+            "{:<8}{:>12.2}{:>11.3}x{:>15.3}x\n",
+            r.kernel,
+            r.serial_ns / 1000.0,
+            r.pair_speedup,
+            r.parallel_for_speedup
+        );
+    }
+    out += "(pair = 2 whole instances / 2 serial; parallel_for = 1 split instance / 1 serial)\n";
+    out
+}
+
 /// Render speedup cells as a kernel × runtime text matrix.
 pub fn render_matrix(cells: &[Cell]) -> String {
     let runtimes: Vec<&str> = {
@@ -349,6 +433,23 @@ mod tests {
                 r.micros,
                 r.paper_micros
             );
+        }
+    }
+
+    #[test]
+    fn intra_kernel_rows_cover_all_and_verify_checksums() {
+        // Tiny iteration counts: this checks plumbing + the built-in
+        // checksum assertion, not timing quality.
+        let relic = crate::relic::Relic::new();
+        let rows = intra_kernel(&relic, 3, 1);
+        assert_eq!(rows.len(), KERNEL_NAMES.len());
+        for r in &rows {
+            assert!(r.serial_ns > 0.0, "{}", r.kernel);
+            assert!(r.pair_speedup > 0.0 && r.parallel_for_speedup > 0.0, "{}", r.kernel);
+        }
+        let s = render_intra(&rows);
+        for k in KERNEL_NAMES {
+            assert!(s.contains(k), "render missing {k}");
         }
     }
 

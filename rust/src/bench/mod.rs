@@ -9,6 +9,8 @@ pub mod svg;
 pub mod sweep;
 pub mod workloads;
 
-pub use figures::{fig1, fig3, fig4, granularity, section5_geomeans, Cell, SummaryRow};
+pub use figures::{
+    fig1, fig3, fig4, granularity, intra_kernel, section5_geomeans, Cell, IntraRow, SummaryRow,
+};
 pub use harness::{geomean, measure, wallclock_speedup, Stats};
 pub use workloads::{calibrated_trace, paper_task_micros, solo_cycles, Workload, KERNEL_NAMES};

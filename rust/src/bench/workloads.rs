@@ -18,6 +18,7 @@
 use crate::graph::{bc, bfs, cc, kronecker::paper_graph, pr, sssp, tc, CsrGraph};
 use crate::json;
 use crate::probe::Probe;
+use crate::relic::Par;
 use crate::smtsim::{self, CoreConfig, Trace, TraceProbe};
 
 /// Benchmark kernel names in the paper's figure order.
@@ -64,6 +65,32 @@ impl Workload {
     /// value also defends against dead-code elimination in benches).
     pub fn run_native(&self) -> u64 {
         self.run_probed(&mut crate::probe::NoProbe)
+    }
+
+    /// Run one task instance with the kernel's hot loops fork-joined
+    /// over the SMT pair (`Par::Relic`) or plain serial (`Par::Serial`).
+    /// The parallel kernels are deterministic by construction, so the
+    /// checksum always equals [`run_native`](Self::run_native)'s.
+    ///
+    /// JSON is the exception that proves the granularity rule: one DOM
+    /// parse is a sequential dependence chain, so the single-document
+    /// workload runs serially here — document-*batch* splitting is
+    /// exercised by the coordinator and `benches/parallel_for.rs`.
+    pub fn run_native_par(&self, par: &Par) -> u64 {
+        use crate::coordinator::{run_native_kernel_par, GraphKernel};
+        match self.name {
+            "json" => json::parse_batch_par(&[self.json_doc], par)
+                .pop()
+                .expect("one result")
+                .expect("widget parses")
+                .node_count() as u64,
+            // The six graph kernels share one dispatch with the
+            // coordinator service (same source 0 as `run_native`).
+            name => {
+                let kernel = GraphKernel::parse(name).expect("graph kernel name");
+                run_native_kernel_par(kernel, &self.graph, 0, par)
+            }
+        }
     }
 
     /// Run one task instance through a probe (trace recording or no-op).
@@ -173,6 +200,44 @@ mod tests {
             let c1 = w.run_native();
             let c2 = w.run_native();
             assert_eq!(c1, c2, "{} checksum must be deterministic", w.name);
+        }
+    }
+
+    #[test]
+    fn parallel_checksums_equal_serial_on_all_workloads() {
+        // The acceptance bar for the fork-join layer: every
+        // parallelized kernel reproduces its serial checksum on the
+        // paper's 32-node Kronecker input, repeatedly.
+        let relic = crate::relic::Relic::new();
+        for w in Workload::all() {
+            let serial = w.run_native();
+            assert_eq!(w.run_native_par(&Par::Serial), serial, "{} Par::Serial", w.name);
+            for round in 0..5 {
+                assert_eq!(
+                    w.run_native_par(&Par::Relic(&relic)),
+                    serial,
+                    "{} Par::Relic round {round}",
+                    w.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_checksums_survive_queue_overflow() {
+        // A 2-slot queue forces constant submit overflow; the inline
+        // fallback must preserve every checksum.
+        let relic = crate::relic::Relic::with_config(crate::relic::RelicConfig {
+            queue_capacity: 2,
+            ..Default::default()
+        });
+        for w in Workload::all() {
+            assert_eq!(
+                w.run_native_par(&Par::Relic(&relic)),
+                w.run_native(),
+                "{} under queue pressure",
+                w.name
+            );
         }
     }
 

@@ -92,9 +92,50 @@ pub fn run_native_kernel(kernel: GraphKernel, graph: &CsrGraph, source: u32) -> 
     }
 }
 
+/// Run a kernel with its hot loops split across the SMT pair (`par`),
+/// reduced to the same checksum as [`run_native_kernel`] — the parallel
+/// kernels are deterministic by construction, so the checksums agree.
+pub fn run_native_kernel_par(
+    kernel: GraphKernel,
+    graph: &CsrGraph,
+    source: u32,
+    par: &crate::relic::Par,
+) -> u64 {
+    use crate::graph::*;
+    match kernel {
+        GraphKernel::Bc => bc::checksum(&bc::brandes_single_source_par(graph, source, par)),
+        GraphKernel::Bfs => bfs::checksum(&bfs::bfs_par(graph, source, par)),
+        GraphKernel::Cc => cc::checksum(&cc::shiloach_vishkin_par(graph, par)),
+        GraphKernel::Pr => {
+            pr::checksum(&pr::pagerank_par(graph, pr::MAX_ITERS, pr::TOLERANCE, par))
+        }
+        GraphKernel::Sssp => sssp::checksum(&sssp::delta_stepping_par(
+            graph,
+            source,
+            sssp::DEFAULT_DELTA,
+            par,
+        )),
+        GraphKernel::Tc => tc::checksum(tc::triangle_count_par(graph, par)),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn parallel_kernels_match_serial_checksums() {
+        let g = crate::graph::kronecker::paper_graph();
+        let relic = crate::relic::Relic::new();
+        let par = crate::relic::Par::Relic(&relic);
+        for k in GraphKernel::all() {
+            assert_eq!(
+                run_native_kernel_par(k, &g, 0, &par),
+                run_native_kernel(k, &g, 0),
+                "{k:?} parallel checksum must equal serial"
+            );
+        }
+    }
 
     #[test]
     fn kernel_parse_roundtrip() {

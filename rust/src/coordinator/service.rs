@@ -7,18 +7,20 @@
 //!    compiled executable and its dense-matrix packing buffers.
 //! 3. Native requests are taken two at a time and co-scheduled on the
 //!    SMT core via [`Relic::pair`] — the paper's fine-grained scenario;
-//!    a leftover odd request runs serially.
+//!    a leftover odd request runs with *intra-request* parallelism
+//!    (its kernel's hot loops fork-joined over the same SMT pair via
+//!    [`Par`]), so the assistant thread never idles through a batch.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use crate::graph::{dense, CsrGraph};
 use crate::metrics::{Counter, Histogram};
-use crate::relic::{Relic, RelicConfig};
+use crate::relic::{Par, Relic, RelicConfig};
 use crate::runtime::GraphExecutor;
 
 use super::router::{Backend, Router};
-use super::{run_native_kernel, GraphKernel};
+use super::{run_native_kernel, run_native_kernel_par, GraphKernel};
 
 /// One analytics request.
 pub struct Request {
@@ -52,6 +54,9 @@ pub struct ServiceMetrics {
     pub native_requests: Counter,
     pub pjrt_requests: Counter,
     pub relic_pairs: Counter,
+    /// Requests served with intra-request fork-join parallelism
+    /// (the odd leftover of a native batch).
+    pub intra_requests: Counter,
     pub native_latency: Histogram,
     pub pjrt_latency: Histogram,
 }
@@ -161,10 +166,19 @@ impl Coordinator {
                     });
                 }
                 (Some((idx, req)), None) => {
+                    // Odd leftover: no partner request to pair with, so
+                    // parallelize *inside* the request — fork-join the
+                    // kernel's hot loops over the same SMT pair.
                     let t0 = Instant::now();
-                    let checksum = run_native_kernel(req.kernel, &req.graph, req.source);
+                    let checksum = run_native_kernel_par(
+                        req.kernel,
+                        &req.graph,
+                        req.source,
+                        &Par::Relic(&self.relic),
+                    );
                     let latency = t0.elapsed().as_nanos() as u64;
                     self.metrics.native_requests.inc();
+                    self.metrics.intra_requests.inc();
                     self.metrics.native_latency.record(latency);
                     responses[idx] = Some(Response {
                         id: req.id,
@@ -210,9 +224,10 @@ impl Coordinator {
     /// Human-readable metrics report.
     pub fn report(&self) -> String {
         format!(
-            "native: {} reqs ({} relic pairs) {}\npjrt:   {} reqs {}",
+            "native: {} reqs ({} relic pairs, {} intra-parallel) {}\npjrt:   {} reqs {}",
             self.metrics.native_requests.get(),
             self.metrics.relic_pairs.get(),
+            self.metrics.intra_requests.get(),
             self.metrics.native_latency.summary("ns"),
             self.metrics.pjrt_requests.get(),
             self.metrics.pjrt_latency.summary("ns"),
@@ -244,8 +259,9 @@ mod tests {
             assert_eq!(r.id, i as u64);
             assert_eq!(r.backend, Backend::Native);
         }
-        // 5 requests = 2 relic pairs + 1 serial leftover.
+        // 5 requests = 2 relic pairs + 1 intra-parallel leftover.
         assert_eq!(c.metrics.relic_pairs.get(), 2);
+        assert_eq!(c.metrics.intra_requests.get(), 1);
         assert_eq!(c.metrics.native_requests.get(), 5);
         // All TC checksums identical (same graph).
         let first = &responses[0].result;
@@ -274,5 +290,21 @@ mod tests {
     fn empty_batch_is_fine() {
         let mut c = native_coordinator();
         assert!(c.process_batch(Vec::new()).is_empty());
+        assert_eq!(c.metrics.intra_requests.get(), 0);
+    }
+
+    #[test]
+    fn odd_leftover_checksum_matches_serial_for_every_kernel() {
+        // A batch of one forces the intra-parallel path; its checksum
+        // must equal the plain serial kernel's.
+        for k in GraphKernel::all() {
+            let mut c = native_coordinator();
+            let want = run_native_kernel(k, &paper_graph(), 0);
+            let responses = c.process_batch(vec![req(7, k)]);
+            assert_eq!(responses.len(), 1);
+            assert_eq!(responses[0].result, RequestResult::Native(want), "{k:?}");
+            assert_eq!(c.metrics.intra_requests.get(), 1);
+            assert_eq!(c.metrics.relic_pairs.get(), 0);
+        }
     }
 }

@@ -6,8 +6,13 @@
 //! the benchmark task and [`brandes`] the full exact variant.
 
 use crate::probe::Probe;
+use crate::relic::Par;
 
 use super::CsrGraph;
+
+/// Minimum per-level vertices per fork-join chunk in the parallel
+/// variant.
+const PAR_GRAIN: usize = 8;
 
 const SIGMA_BASE: u64 = 0x5700_0000;
 const DEPTH_BASE: u64 = 0x5800_0000;
@@ -84,6 +89,88 @@ pub fn brandes_single_source<P: Probe>(
     delta
 }
 
+/// [`brandes_single_source`] with the path-count (sigma) accumulation
+/// split across the SMT pair.
+///
+/// Structure chosen so the result is **bitwise-identical** to the
+/// serial kernel:
+/// * the BFS visit order is recomputed serially (it is the serial
+///   kernel's contract and feeds the backward pass);
+/// * sigma is *pulled* per level in parallel — each vertex sums its
+///   level-(d-1) predecessors' counts in neighbor order. Path counts
+///   are integers in `f64`, so the sum is exact and order-independent,
+///   matching the serial push-based accumulation bit for bit;
+/// * the backward dependency pass runs serially in the identical
+///   reverse visit order — its divisions are *not* order-independent,
+///   and reassociating them could flip quantized checksums.
+pub fn brandes_single_source_par(g: &CsrGraph, source: u32, par: &Par) -> Vec<f64> {
+    let n = g.num_vertices();
+    let mut depth = vec![i32::MAX; n];
+    let mut order = Vec::with_capacity(n);
+    depth[source as usize] = 0;
+    order.push(source);
+
+    // Forward BFS (serial): depth + visit order, no sigma yet.
+    let mut head = 0;
+    while head < order.len() {
+        let u = order[head];
+        head += 1;
+        let du = depth[u as usize];
+        for &v in g.neighbors(u) {
+            if depth[v as usize] == i32::MAX {
+                depth[v as usize] = du + 1;
+                order.push(v);
+            }
+        }
+    }
+
+    // Path counts per level, pulled in parallel from the level above.
+    let mut sigma = vec![0.0f64; n];
+    sigma[source as usize] = 1.0;
+    let mut vals = vec![0.0f64; n];
+    let mut lvl_start = 0;
+    while lvl_start < order.len() {
+        let d = depth[order[lvl_start] as usize];
+        let mut lvl_end = lvl_start + 1;
+        while lvl_end < order.len() && depth[order[lvl_end] as usize] == d {
+            lvl_end += 1;
+        }
+        if d > 0 {
+            let lvl = &order[lvl_start..lvl_end];
+            {
+                let (sigma, depth) = (&sigma, &depth);
+                par.map_into(&mut vals[..lvl.len()], PAR_GRAIN, |j| {
+                    let mut s = 0.0;
+                    for &u in g.neighbors(lvl[j]) {
+                        if depth[u as usize] == d - 1 {
+                            s += sigma[u as usize];
+                        }
+                    }
+                    s
+                });
+            }
+            for (j, &v) in lvl.iter().enumerate() {
+                sigma[v as usize] = vals[j];
+            }
+        }
+        lvl_start = lvl_end;
+    }
+
+    // Backward dependency accumulation: serial, the serial kernel's
+    // exact floating-point schedule.
+    let mut delta = vec![0.0f64; n];
+    for &w in order.iter().rev() {
+        let (dw, sw, deltw) = (depth[w as usize], sigma[w as usize], delta[w as usize]);
+        for &v in g.neighbors(w) {
+            if depth[v as usize] == dw - 1 {
+                delta[v as usize] += sigma[v as usize] / sw * (1.0 + deltw);
+            }
+        }
+    }
+    delta[source as usize] = 0.0;
+    delta
+}
+
 /// Exact BC: sum single-source dependencies over all sources; halved for
 /// undirected graphs (GAP convention).
 pub fn brandes<P: Probe>(g: &CsrGraph, probe: &mut P) -> Vec<f64> {
@@ -127,6 +214,44 @@ mod tests {
         for v in &bc {
             assert!((v - 0.5).abs() < 1e-12, "{bc:?}");
         }
+    }
+
+    #[test]
+    fn parallel_matches_serial_on_paper_graph_bitwise() {
+        use crate::graph::kronecker::paper_graph;
+        use crate::relic::Relic;
+        let g = paper_graph();
+        let relic = Relic::new();
+        for source in [0u32, 5, 17, 31] {
+            let serial = brandes_single_source(&g, source, &mut NoProbe);
+            for par in [Par::Serial, Par::Relic(&relic)] {
+                let got = brandes_single_source_par(&g, source, &par);
+                assert_eq!(got, serial, "bc par/serial diverge from {source}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_on_random_graphs() {
+        use crate::relic::Relic;
+        let relic = Relic::new();
+        crate::testutil::check(25, |rng| {
+            let n = rng.range(2, 48);
+            let m = rng.range(1, 3 * n);
+            let edges: Vec<(u32, u32)> = (0..m)
+                .map(|_| (rng.below(n as u64) as u32, rng.below(n as u64) as u32))
+                .collect();
+            let g = CsrGraph::from_undirected_edges(n, &edges);
+            let src = rng.below(n as u64) as u32;
+            let serial = brandes_single_source(&g, src, &mut NoProbe);
+            let got = brandes_single_source_par(&g, src, &Par::Relic(&relic));
+            for (a, b) in got.iter().zip(&serial) {
+                // Exact in practice (integer sigma); tolerance guards
+                // only pathological path-count overflow past 2^53.
+                crate::testutil::close(*a, *b, 1e-12)?;
+            }
+            Ok(())
+        });
     }
 
     #[test]

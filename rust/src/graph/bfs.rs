@@ -4,7 +4,10 @@
 //! the finest-grained kernel in the suite and the only one *no* baseline
 //! framework manages to parallelize profitably (Fig. 1).
 
+use std::sync::atomic::{AtomicU32, Ordering};
+
 use crate::probe::Probe;
+use crate::relic::Par;
 
 use super::CsrGraph;
 
@@ -12,6 +15,9 @@ use super::CsrGraph;
 const DEPTH_BASE: u64 = 0x5000_0000;
 /// Probe-address base of the worklist.
 const QUEUE_BASE: u64 = 0x5100_0000;
+
+/// Minimum frontier entries per fork-join chunk in [`bfs_par`].
+const PAR_GRAIN: usize = 16;
 
 /// BFS from `source`; returns per-vertex depth, `u32::MAX` if unreachable.
 pub fn bfs<P: Probe>(g: &CsrGraph, source: u32, probe: &mut P) -> Vec<u32> {
@@ -45,6 +51,48 @@ pub fn bfs<P: Probe>(g: &CsrGraph, source: u32, probe: &mut P) -> Vec<u32> {
         }
     }
     depth
+}
+
+/// Level-synchronous BFS with frontier expansion split across the SMT
+/// pair. Each chunk of the current frontier relaxes its vertices'
+/// neighbors, claiming unvisited vertices with a depth CAS; per-chunk
+/// next-frontier buffers are concatenated in chunk order.
+///
+/// The depth of a vertex is its BFS level — unique regardless of which
+/// chunk's CAS claims it — so the returned depths are **identical** to
+/// the serial queue BFS for any scheduling (only the intermediate
+/// frontier *order* may differ, which the result does not depend on).
+pub fn bfs_par(g: &CsrGraph, source: u32, par: &Par) -> Vec<u32> {
+    let n = g.num_vertices();
+    if n == 0 {
+        return Vec::new();
+    }
+    let depth: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(u32::MAX)).collect();
+    depth[source as usize].store(0, Ordering::Relaxed);
+    let mut frontier = vec![source];
+    let mut level = 0u32;
+    while !frontier.is_empty() {
+        let next_level = level + 1;
+        let f = &frontier;
+        let parts: Vec<Vec<u32>> = par.chunk_map(0..f.len(), PAR_GRAIN, |sub| {
+            let mut local = Vec::new();
+            for i in sub {
+                for &v in g.neighbors(f[i]) {
+                    // Claim unvisited neighbors; exactly one chunk wins.
+                    if depth[v as usize]
+                        .compare_exchange(u32::MAX, next_level, Ordering::Relaxed, Ordering::Relaxed)
+                        .is_ok()
+                    {
+                        local.push(v);
+                    }
+                }
+            }
+            local
+        });
+        frontier = parts.into_iter().flatten().collect();
+        level = next_level;
+    }
+    depth.into_iter().map(AtomicU32::into_inner).collect()
 }
 
 /// Work checksum used by the benchmark harness (sum of finite depths),
@@ -157,6 +205,28 @@ mod tests {
             let want = oracle::bfs_depths(&g, src);
             if got != want {
                 return Err(format!("bfs mismatch from {src}: {got:?} vs {want:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parallel_matches_serial_depths() {
+        use crate::relic::Relic;
+        let relic = Relic::new();
+        crate::testutil::check(30, |rng| {
+            let n = rng.range(1, 128);
+            let m = rng.range(0, 4 * n);
+            let edges: Vec<(u32, u32)> = (0..m)
+                .map(|_| (rng.below(n as u64) as u32, rng.below(n as u64) as u32))
+                .collect();
+            let g = CsrGraph::from_undirected_edges(n, &edges);
+            let src = rng.below(n as u64) as u32;
+            let serial = bfs(&g, src, &mut NoProbe);
+            for par in [Par::Serial, Par::Relic(&relic)] {
+                if bfs_par(&g, src, &par) != serial {
+                    return Err(format!("bfs par/serial diverge from {src}"));
+                }
             }
             Ok(())
         });

@@ -4,12 +4,18 @@
 //! On the paper's input this is the coarsest task (6.4 µs) and the
 //! benchmark every framework manages to accelerate (Fig. 1).
 
+use std::sync::atomic::{AtomicU32, Ordering};
+
 use crate::probe::Probe;
+use crate::relic::Par;
 
 use super::CsrGraph;
 
 const DIST_BASE: u64 = 0x5500_0000;
 const BUCKET_BASE: u64 = 0x5600_0000;
+
+/// Minimum frontier entries per fork-join chunk in [`delta_stepping_par`].
+const PAR_GRAIN: usize = 8;
 
 /// GAP's default delta for Kronecker inputs with weights in [1, 255].
 pub const DEFAULT_DELTA: u32 = 64;
@@ -79,6 +85,69 @@ pub fn delta_stepping<P: Probe>(
     dist
 }
 
+/// [`delta_stepping`] with edge relaxation split across the SMT pair.
+///
+/// Each bucket drains in *waves*: a wave's entries are chunked across
+/// the pair, relaxations use an atomic `fetch_min` on the distance, and
+/// successful same-bucket improvements form the next wave. Distances
+/// only decrease and every bucket still drains to fixpoint before the
+/// next one starts, so the result is the exact shortest-distance vector
+/// — identical to the serial kernel (which the Dijkstra oracle pins
+/// down) for any scheduling.
+pub fn delta_stepping_par(g: &CsrGraph, source: u32, delta: u32, par: &Par) -> Vec<u32> {
+    assert!(g.is_weighted(), "SSSP requires a weighted graph");
+    assert!(delta > 0);
+    let n = g.num_vertices();
+    let dist: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(u32::MAX)).collect();
+    dist[source as usize].store(0, Ordering::Relaxed);
+    let mut buckets: Vec<Vec<u32>> = vec![vec![source]];
+
+    let mut i = 0usize;
+    while i < buckets.len() {
+        let mut wave = std::mem::take(&mut buckets[i]);
+        while !wave.is_empty() {
+            let w = &wave;
+            // Relax every edge of the wave's live entries; collect the
+            // (bucket, vertex) of each successful improvement per chunk.
+            let parts: Vec<Vec<(usize, u32)>> = par.chunk_map(0..w.len(), PAR_GRAIN, |sub| {
+                let mut local: Vec<(usize, u32)> = Vec::new();
+                for idx in sub {
+                    let u = w[idx];
+                    let du = dist[u as usize].load(Ordering::Relaxed);
+                    // Stale entry: already settled into an earlier bucket.
+                    if du == u32::MAX || (du / delta) as usize != i {
+                        continue;
+                    }
+                    for (v, wt) in g.neighbors_weighted(u) {
+                        let nd = du.saturating_add(wt);
+                        if nd < dist[v as usize].fetch_min(nd, Ordering::Relaxed) {
+                            local.push(((nd / delta) as usize, v));
+                        }
+                    }
+                }
+                local
+            });
+            // Sort improvements into buckets on the main thread;
+            // same-bucket ones become the next wave (dist >= i*delta
+            // along any relaxed path, so b >= i always).
+            let mut next_wave = Vec::new();
+            for (b, v) in parts.into_iter().flatten() {
+                if b == i {
+                    next_wave.push(v);
+                } else {
+                    while buckets.len() <= b {
+                        buckets.push(Vec::new());
+                    }
+                    buckets[b].push(v);
+                }
+            }
+            wave = next_wave;
+        }
+        i += 1;
+    }
+    dist.into_iter().map(AtomicU32::into_inner).collect()
+}
+
 /// Benchmark checksum: sum of finite distances.
 pub fn checksum(dist: &[u32]) -> u64 {
     dist.iter().filter(|&&d| d != u32::MAX).map(|&d| d as u64).sum()
@@ -130,6 +199,35 @@ mod tests {
                 return Err(format!(
                     "sssp mismatch (delta {delta}, src {src}): {got:?} vs {want:?}"
                 ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parallel_matches_serial_distances() {
+        use crate::relic::Relic;
+        let relic = Relic::new();
+        crate::testutil::check(30, |rng| {
+            let n = rng.range(1, 64);
+            let m = rng.range(0, 3 * n);
+            let edges: Vec<(u32, u32, u32)> = (0..m)
+                .map(|_| {
+                    (
+                        rng.below(n as u64) as u32,
+                        rng.below(n as u64) as u32,
+                        1 + rng.below(255) as u32,
+                    )
+                })
+                .collect();
+            let g = wg(n, &edges);
+            let src = rng.below(n as u64) as u32;
+            let delta = [1u32, 8, 64][rng.below(3) as usize];
+            let serial = delta_stepping(&g, src, delta, &mut NoProbe);
+            for par in [Par::Serial, Par::Relic(&relic)] {
+                if delta_stepping_par(&g, src, delta, &par) != serial {
+                    return Err(format!("sssp par/serial diverge (delta {delta}, src {src})"));
+                }
             }
             Ok(())
         });

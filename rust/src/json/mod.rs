@@ -20,7 +20,7 @@ mod parser;
 mod value;
 
 pub use emit::to_string;
-pub use parser::{parse, parse_probed, Error};
+pub use parser::{parse, parse_batch_par, parse_probed, Error};
 pub use value::Value;
 
 /// The json.org "widget" sample document used by the paper's JSON

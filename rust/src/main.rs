@@ -8,6 +8,7 @@
 //! repro sweep --kernel tc   speedup vs task-size crossover sweep
 //! repro ablation --sweep waiting|queue-capacity|fetch-policy
 //! repro wallclock    wall-clock mode (needs an SMT host for meaning)
+//! repro intra        serial vs pair vs parallel_for per kernel (wall-clock)
 //! repro serve        run the hybrid analytics service demo
 //! repro selftest     PJRT artifact round-trip check
 //! ```
@@ -167,6 +168,25 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 println!("{:<10}{:<14}{:>10.3}", w.name, "relic", serial.mean_ns / par.mean_ns);
             }
         }
+        Some("intra") => {
+            println!("host: {}", affinity::topology_summary());
+            let pair = affinity::smt_sibling_pair();
+            if pair.is_none() {
+                println!("WARNING: no SMT siblings — wall-clock numbers are not meaningful here.\n");
+            }
+            if let Some((main_cpu, _)) = pair {
+                affinity::pin_to_cpu(main_cpu);
+            }
+            let relic = relic_smt::relic::Relic::with_config(relic_smt::relic::RelicConfig {
+                assistant_cpu: pair.map(|p| p.1),
+                ..Default::default()
+            });
+            let iters = args.get_u64("iters", 2_000);
+            let warmup = args.get_u64("warmup", 100);
+            let rows = figures::intra_kernel(&relic, iters, warmup);
+            println!("intra-kernel fork-join vs request pairing (wall-clock)\n");
+            println!("{}", figures::render_intra(&rows));
+        }
         Some("serve") => {
             let artifacts = args.get("artifacts").unwrap_or("artifacts");
             let executor = GraphExecutor::new(Path::new(artifacts)).ok();
@@ -223,7 +243,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
             println!("selftest OK");
         }
         _ => {
-            println!("usage: repro <fig1|fig3|fig4|granularity|ablation|wallclock|serve|selftest> [--options]");
+            println!("usage: repro <fig1|fig3|fig4|granularity|ablation|wallclock|intra|serve|selftest> [--options]");
             println!("see rust/src/main.rs docs for details");
         }
     }

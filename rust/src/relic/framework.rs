@@ -39,6 +39,14 @@ struct Task {
 // `data` is the submitting wrapper's obligation (see `submit`/`pair`).
 unsafe impl Send for Task {}
 
+/// Trampoline for borrowed-closure tasks (`submit_ref` / `run_batch`).
+unsafe fn call_ref<F: Fn() + Sync>(data: *const (), _arg: usize) {
+    // SAFETY: `data` was created from an `&F` by the submitting wrapper,
+    // whose contract keeps the borrow alive until a wait() completes the
+    // task.
+    (*(data as *const F))();
+}
+
 #[repr(u8)]
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum State {
@@ -99,6 +107,9 @@ pub struct Relic {
     shared: Arc<Shared>,
     submitted: Cell<u64>,
     queue_full: Cell<u64>,
+    /// True while a [`scope`](Self::scope) is active (fork-join sections
+    /// may not nest — see `relic::scope`).
+    in_scope: Cell<bool>,
     assistant: Option<JoinHandle<()>>,
 }
 
@@ -141,8 +152,34 @@ impl Relic {
             shared,
             submitted: Cell::new(0),
             queue_full: Cell::new(0),
+            in_scope: Cell::new(false),
             assistant: Some(assistant),
         }
+    }
+
+    /// Submit a raw routine/data task — the untyped core the safe
+    /// fork-join layer ([`crate::relic::Scope`]) builds on.
+    ///
+    /// The caller guarantees `data` stays valid (and unmoved) until the
+    /// task completes, and that the routine is safe to run on the
+    /// assistant thread.
+    pub(crate) fn submit_raw(
+        &self,
+        routine: unsafe fn(*const (), usize),
+        data: *const (),
+    ) -> Result<(), QueueFull> {
+        self.push(Task { routine, data, arg: 0 }).map_err(|_| QueueFull)
+    }
+
+    /// Mark this runtime as inside a fork-join scope. Returns `false`
+    /// (without changing state) when a scope is already active.
+    pub(crate) fn enter_scope(&self) -> bool {
+        !self.in_scope.replace(true)
+    }
+
+    /// Leave the fork-join scope entered with [`enter_scope`](Self::enter_scope).
+    pub(crate) fn exit_scope(&self) {
+        self.in_scope.set(false);
     }
 
     /// Submit a task as a plain function pointer + integer argument —
@@ -170,11 +207,6 @@ impl Relic {
     /// `wait()` on this thread), and must be safe to call from the
     /// assistant thread (`Sync`).
     pub unsafe fn submit_ref<F: Fn() + Sync>(&self, f: &F) -> Result<(), QueueFull> {
-        unsafe fn call_ref<F: Fn() + Sync>(data: *const (), _arg: usize) {
-            // SAFETY: data was created from &F in submit_ref; liveness is
-            // the caller's contract.
-            (*(data as *const F))();
-        }
         let task =
             Task { routine: call_ref::<F>, data: f as *const F as *const (), arg: 0 };
         self.push(task).map_err(|_| QueueFull)
@@ -198,15 +230,45 @@ impl Relic {
     /// Submit every closure in `tasks` and wait for all of them.
     /// Closures the queue cannot hold run inline on the main thread —
     /// Relic never blocks the producer on a full queue.
+    ///
+    /// Tasks are published in blocks through [`SpscQueue::push_many`],
+    /// so a batch of N pays one release store (and at most one unpark
+    /// check) per block instead of one per task.
     pub fn run_batch<F: Fn() + Sync>(&self, tasks: &[F]) {
-        for t in tasks {
-            // SAFETY: wait() below precedes the borrow's end.
-            // (push() maintains the submitted/queue-full counters.)
-            if unsafe { self.submit_ref(t) }.is_err() {
+        const BLOCK: usize = 32;
+        for chunk in tasks.chunks(BLOCK) {
+            let mut block =
+                [Task { routine: call_ref::<F>, data: std::ptr::null(), arg: 0 }; BLOCK];
+            for (slot, t) in block.iter_mut().zip(chunk) {
+                slot.data = t as *const F as *const ();
+            }
+            let pushed = self.push_batch(&block[..chunk.len()]);
+            // Overflow runs inline in submission order — Relic never
+            // blocks the producer on a full queue.
+            for t in &chunk[pushed..] {
                 t();
             }
         }
         self.wait();
+    }
+
+    /// Publish a block of tasks with one release store; returns how many
+    /// fit (a prefix of `tasks`). Counters and the parked-assistant
+    /// handshake match [`push`](Self::push), paid once per block.
+    fn push_batch(&self, tasks: &[Task]) -> usize {
+        let n = self.shared.queue.push_many(tasks);
+        if n > 0 {
+            self.submitted.set(self.submitted.get() + n as u64);
+            // Same Dekker store-load handshake as `push`.
+            std::sync::atomic::fence(Ordering::SeqCst);
+            if self.shared.parked.load(Ordering::Acquire) {
+                if let Some(h) = &self.assistant {
+                    h.thread().unpark();
+                }
+            }
+        }
+        self.queue_full.set(self.queue_full.get() + (tasks.len() - n) as u64);
+        n
     }
 
     fn push(&self, task: Task) -> Result<(), Task> {
@@ -252,6 +314,10 @@ impl Relic {
             spins += 1;
             if spins >= YIELD_THRESHOLD {
                 std::thread::yield_now();
+                // Restart the spin budget: yielding once must not turn
+                // the remainder of the wait into a yield-per-iteration
+                // loop (each yield is a scheduler round trip).
+                spins = 0;
             }
         }
     }
@@ -329,9 +395,11 @@ fn assistant_loop(shared: &Shared, policy: WaitPolicy, cpu: Option<usize>) {
                 WaitPolicy::SpinBusy => {}
                 WaitPolicy::SpinPause => {
                     std::hint::spin_loop();
-                    idle_spins = idle_spins.saturating_add(1);
+                    idle_spins += 1;
                     if idle_spins >= YIELD_THRESHOLD {
                         std::thread::yield_now();
+                        // Same spin-budget reset as `Relic::wait`.
+                        idle_spins = 0;
                     }
                 }
                 WaitPolicy::Hybrid { spins } => {

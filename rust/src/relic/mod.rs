@@ -10,6 +10,16 @@
 //!   phases can park the assistant explicitly;
 //! * CPU pinning left to the application ([`affinity`] has the helpers).
 //!
+//! On top of the paper's pairing API sits an intra-kernel fork-join
+//! layer ([`scope`] / [`parallel`]): `relic.scope(|s| s.split(..))` and
+//! `relic.parallel_for(range, grain, f)` statically split an index
+//! range into a main-thread half plus a handful of assistant chunks —
+//! stack-resident chunk descriptors, one SPSC submission per chunk,
+//! per-chunk claim/completion flags, zero heap. The [`Par`] toggle lets
+//! the GAP kernels and the JSON parser run their hot loops either
+//! serially or across the SMT pair, moving the speedup from "two
+//! requests in parallel" to "one request finishes faster".
+//!
 //! ```
 //! use relic_smt::relic::Relic;
 //! use std::sync::atomic::{AtomicU64, Ordering};
@@ -23,13 +33,23 @@
 //!     &|| { hits.fetch_add(1, Ordering::Relaxed); },
 //! );
 //! assert_eq!(hits.load(Ordering::Relaxed), 2);
+//!
+//! // …or split one loop across the pair (intra-kernel fork-join):
+//! relic.parallel_for(0..1024, 64, |_i| {
+//!     hits.fetch_add(1, Ordering::Relaxed);
+//! });
+//! assert_eq!(hits.load(Ordering::Relaxed), 2 + 1024);
 //! ```
 
 pub mod affinity;
 mod framework;
+pub mod parallel;
+pub mod scope;
 mod spsc;
 pub mod wait;
 
 pub use framework::{QueueFull, Relic, RelicConfig, RelicStats, DEFAULT_QUEUE_CAPACITY};
+pub use parallel::{Par, DEFAULT_GRAIN};
+pub use scope::{Scope, MAX_ASSIST_CHUNKS, MAX_CHUNK_SLOTS};
 pub use spsc::SpscQueue;
 pub use wait::WaitPolicy;

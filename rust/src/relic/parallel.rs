@@ -1,0 +1,315 @@
+//! Data-parallel helpers over [`Relic::scope`]: the `Par` toggle the
+//! GAP kernels and the JSON parser take to run their hot loops on both
+//! logical threads of the SMT pair.
+//!
+//! [`Par`] is deliberately an enum, not a trait object: kernels accept
+//! `&Par` and stay monomorphic, `Par::Serial` compiles to the plain
+//! loop, and `Par::Relic` routes chunks through the fork-join scope.
+//! All helpers are *deterministic by construction* where the paper's
+//! checksums require it:
+//!
+//! * [`Par::map_into`] writes disjoint slice elements — bitwise equal to
+//!   the serial loop regardless of scheduling;
+//! * [`Par::reduce`] combines per-chunk partials in fixed chunk order —
+//!   exact for integer monoids (the checksum kind), and fixed-shape
+//!   (chunk boundaries depend only on the range and grain) for floats;
+//! * [`Par::chunk_map`] concatenates per-chunk outputs in chunk order.
+//!
+//! ```
+//! use relic_smt::relic::{Par, Relic};
+//!
+//! let relic = Relic::new();
+//! let par = Par::Relic(&relic);
+//! let mut squares = vec![0u64; 100];
+//! par.map_into(&mut squares, 8, |i| (i * i) as u64);
+//! assert_eq!(squares[7], 49);
+//! let total = par.reduce(0..100, 8, 0u64, |i| i as u64, |a, b| a + b);
+//! assert_eq!(total, 99 * 100 / 2);
+//! // The parallel_for convenience on the runtime itself:
+//! use std::sync::atomic::{AtomicU64, Ordering};
+//! let n = AtomicU64::new(0);
+//! relic.parallel_for(0..1000, 64, |_i| {
+//!     n.fetch_add(1, Ordering::Relaxed);
+//! });
+//! assert_eq!(n.load(Ordering::Relaxed), 1000);
+//! ```
+
+use std::ops::Range;
+
+use super::framework::Relic;
+use super::scope::MAX_CHUNK_SLOTS;
+
+/// Default minimum indices per chunk: with the paper's ~0.1 µs/iteration
+/// kernel loops this keeps every chunk well above Relic's ~70 ns
+/// submit+dispatch cost.
+pub const DEFAULT_GRAIN: usize = 16;
+
+/// How a kernel's internal loops execute.
+pub enum Par<'r> {
+    /// Plain serial loops on the calling thread (the baseline).
+    Serial,
+    /// Fork-join over the SMT pair through a [`Relic`] runtime.
+    Relic(&'r Relic),
+}
+
+/// Raw slice base pointer that may cross to the assistant thread.
+/// Soundness rests on the chunk disjointness `Scope::split` guarantees:
+/// no element is touched by more than one chunk.
+struct RawSlice<T>(*mut T);
+
+// SAFETY: only ever used to access disjoint elements from the two
+// threads of one scope; T itself crosses threads, hence T: Send.
+unsafe impl<T: Send> Send for RawSlice<T> {}
+unsafe impl<T: Send> Sync for RawSlice<T> {}
+
+impl<'r> Par<'r> {
+    /// Build from an optional runtime reference.
+    pub fn from_relic(relic: Option<&'r Relic>) -> Self {
+        match relic {
+            Some(r) => Par::Relic(r),
+            None => Par::Serial,
+        }
+    }
+
+    /// True when loops actually fan out to the assistant.
+    pub fn is_parallel(&self) -> bool {
+        matches!(self, Par::Relic(_))
+    }
+
+    /// Call `f(i)` for every `i` in `range`, chunks of at least `grain`.
+    /// Shared-state effects inside `f` must be thread-safe (atomics).
+    pub fn for_each_index<F: Fn(usize) + Sync>(&self, range: Range<usize>, grain: usize, f: F) {
+        match self {
+            Par::Serial => {
+                for i in range {
+                    f(i);
+                }
+            }
+            Par::Relic(relic) => relic.scope(|s| {
+                s.split(range, grain, |sub| {
+                    for i in sub {
+                        f(i);
+                    }
+                });
+            }),
+        }
+    }
+
+    /// `out[i] = f(i)` for every element — the scatter/pull-loop shape.
+    /// `f` may read any shared data except `out` itself.
+    pub fn map_into<T, F>(&self, out: &mut [T], grain: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        match self {
+            Par::Serial => {
+                for (i, slot) in out.iter_mut().enumerate() {
+                    *slot = f(i);
+                }
+            }
+            Par::Relic(relic) => {
+                let n = out.len();
+                let base = RawSlice(out.as_mut_ptr());
+                relic.scope(|s| {
+                    s.split(0..n, grain, |sub| {
+                        for i in sub {
+                            // SAFETY: chunks are disjoint and in-bounds
+                            // (`sub ⊆ 0..n`); RawSlice's contract.
+                            unsafe { *base.0.add(i) = f(i) };
+                        }
+                    });
+                });
+            }
+        }
+    }
+
+    /// Fold `f(i)` over `range` with `combine`, parallel by chunk.
+    /// Each chunk folds serially in index order into a private slot;
+    /// slots are combined in ascending chunk order on the main thread.
+    /// `identity` must be neutral for `combine`.
+    pub fn reduce<T, F, C>(
+        &self,
+        range: Range<usize>,
+        grain: usize,
+        identity: T,
+        f: F,
+        combine: C,
+    ) -> T
+    where
+        T: Copy + Send,
+        F: Fn(usize) -> T + Sync,
+        C: Fn(T, T) -> T + Sync,
+    {
+        match self {
+            Par::Serial => {
+                let mut acc = identity;
+                for i in range {
+                    acc = combine(acc, f(i));
+                }
+                acc
+            }
+            Par::Relic(relic) => {
+                let mut partials = [identity; MAX_CHUNK_SLOTS];
+                let slots = RawSlice(partials.as_mut_ptr());
+                relic.scope(|s| {
+                    s.split_indexed(range, grain, |ci, sub| {
+                        let mut acc = identity;
+                        for i in sub {
+                            acc = combine(acc, f(i));
+                        }
+                        // SAFETY: `ci < MAX_CHUNK_SLOTS` (scope contract)
+                        // and each chunk owns its slot exclusively.
+                        unsafe { *slots.0.add(ci) = acc };
+                    });
+                });
+                let mut acc = identity;
+                for p in partials {
+                    acc = combine(acc, p);
+                }
+                acc
+            }
+        }
+    }
+
+    /// Run `f` once per chunk of `range` and collect the per-chunk
+    /// outputs in ascending chunk order (i.e. range order). The frontier
+    /// shape: each chunk gathers into its own buffer, the main thread
+    /// concatenates. The returned `Vec` is the only allocation.
+    pub fn chunk_map<T, F>(&self, range: Range<usize>, grain: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(Range<usize>) -> T + Sync,
+    {
+        match self {
+            Par::Serial => {
+                if range.is_empty() {
+                    Vec::new()
+                } else {
+                    vec![f(range)]
+                }
+            }
+            Par::Relic(relic) => {
+                let mut outputs: [Option<T>; MAX_CHUNK_SLOTS] = std::array::from_fn(|_| None);
+                let slots = RawSlice(outputs.as_mut_ptr());
+                relic.scope(|s| {
+                    s.split_indexed(range, grain, |ci, sub| {
+                        let v = f(sub);
+                        // SAFETY: `ci < MAX_CHUNK_SLOTS`, chunk-private.
+                        unsafe { *slots.0.add(ci) = Some(v) };
+                    });
+                });
+                outputs.into_iter().flatten().collect()
+            }
+        }
+    }
+}
+
+impl Relic {
+    /// Convenience fork-join loop: statically split `range` across the
+    /// SMT pair and call `f(i)` for every index, chunks of at least
+    /// `grain`. Zero-allocation; equivalent to
+    /// `Par::Relic(self).for_each_index(range, grain, f)`.
+    pub fn parallel_for<F: Fn(usize) + Sync>(&self, range: Range<usize>, grain: usize, f: F) {
+        Par::Relic(self).for_each_index(range, grain, f);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn for_each_index_serial_and_parallel_agree() {
+        let relic = Relic::new();
+        for par in [Par::Serial, Par::Relic(&relic)] {
+            let sum = AtomicU64::new(0);
+            par.for_each_index(5..500, 16, |i| {
+                sum.fetch_add(i as u64, Ordering::Relaxed);
+            });
+            let want: u64 = (5..500).sum();
+            assert_eq!(sum.load(Ordering::Relaxed), want);
+        }
+    }
+
+    #[test]
+    fn map_into_matches_serial_bitwise() {
+        let relic = Relic::new();
+        let n = 777;
+        let mut serial = vec![0.0f64; n];
+        Par::Serial.map_into(&mut serial, 8, |i| (i as f64).sqrt());
+        let mut parallel = vec![0.0f64; n];
+        Par::Relic(&relic).map_into(&mut parallel, 8, |i| (i as f64).sqrt());
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn reduce_exact_for_integer_sums() {
+        let relic = Relic::new();
+        for n in [0usize, 1, 9, 100, 4096] {
+            let serial = Par::Serial.reduce(0..n, 32, 0u64, |i| i as u64 * 3, |a, b| a + b);
+            let par = Par::Relic(&relic).reduce(0..n, 32, 0u64, |i| i as u64 * 3, |a, b| a + b);
+            assert_eq!(serial, par, "n={n}");
+        }
+    }
+
+    #[test]
+    fn reduce_max_monoid() {
+        let relic = Relic::new();
+        let got = Par::Relic(&relic).reduce(
+            0..1000,
+            16,
+            0u64,
+            |i| ((i * 2654435761) % 1009) as u64,
+            |a, b| a.max(b),
+        );
+        let want = Par::Serial.reduce(
+            0..1000,
+            16,
+            0u64,
+            |i| ((i * 2654435761) % 1009) as u64,
+            |a, b| a.max(b),
+        );
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn chunk_map_preserves_range_order() {
+        let relic = Relic::new();
+        for par in [Par::Serial, Par::Relic(&relic)] {
+            let chunks = par.chunk_map(0..100, 4, |sub| sub.collect::<Vec<usize>>());
+            let flat: Vec<usize> = chunks.into_iter().flatten().collect();
+            assert_eq!(flat, (0..100).collect::<Vec<usize>>());
+        }
+        assert!(Par::Serial.chunk_map(3..3, 4, |s| s.len()).is_empty());
+        assert!(Par::Relic(&relic).chunk_map(3..3, 4, |s| s.len()).is_empty());
+    }
+
+    #[test]
+    fn parallel_for_convenience_covers_range() {
+        let relic = Relic::new();
+        let hits = AtomicU64::new(0);
+        relic.parallel_for(0..10_000, 64, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 10_000);
+    }
+
+    #[test]
+    fn from_relic_toggles() {
+        let relic = Relic::new();
+        assert!(!Par::from_relic(None).is_parallel());
+        assert!(Par::from_relic(Some(&relic)).is_parallel());
+    }
+
+    #[test]
+    fn grain_zero_is_treated_as_one() {
+        let relic = Relic::new();
+        let sum = AtomicU64::new(0);
+        relic.parallel_for(0..64, 0, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 63 * 64 / 2);
+    }
+}

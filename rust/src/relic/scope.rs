@@ -1,0 +1,451 @@
+//! Intra-kernel fork-join on the SMT pair: `Relic::scope` + range
+//! splitting.
+//!
+//! The paper's benchmarks pair two *whole* kernel instances on the two
+//! logical threads. This layer moves the parallelism *inside* one
+//! kernel: a [`Scope`] statically splits an index range into a
+//! main-thread half and a handful of assistant chunks — the
+//! "worksharing tasks" idea of Maroñas et al. (arXiv:2004.03258),
+//! amortizing per-task overhead by collapsing a loop into O(1) chunk
+//! tasks rather than one task per iteration.
+//!
+//! Design constraints, matching the rest of Relic:
+//! * **zero allocation** — chunk descriptors live on the caller's stack
+//!   and travel through the SPSC queue as raw pointers;
+//! * **no nesting** — Relic has one assistant and no work stealing, so
+//!   a scope inside a scope could only deadlock or serialize; nesting
+//!   is rejected at runtime (and mostly prevented at compile time:
+//!   chunk bodies must be `Sync`, which a captured `&Relic` is not);
+//! * **never block the producer** — if the SPSC queue is full the
+//!   chunk runs inline on the main thread;
+//! * **help, don't idle** — after finishing its own half the main
+//!   thread *claims* assistant chunks that have not started yet
+//!   (claim-flag CAS) and runs them inline, so a descheduled assistant
+//!   degrades to serial execution instead of a stall.
+//!
+//! ```
+//! use relic_smt::relic::Relic;
+//! use std::sync::atomic::{AtomicU64, Ordering};
+//!
+//! let relic = Relic::new();
+//! let hits = AtomicU64::new(0);
+//! relic.scope(|s| {
+//!     s.split(0..1000, 64, |sub| {
+//!         hits.fetch_add(sub.len() as u64, Ordering::Relaxed);
+//!     });
+//! });
+//! assert_eq!(hits.load(Ordering::Relaxed), 1000);
+//! ```
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use super::framework::Relic;
+
+/// Maximum number of assistant-side chunks one `split` produces. Small
+/// by design: chunks exist only so the queue-overflow fallback and the
+/// main thread's help-claiming stay reasonably granular — more chunks
+/// would just add submit/claim overhead on µs-scale loops.
+pub const MAX_ASSIST_CHUNKS: usize = 8;
+
+/// Total chunk-index slots a single `split_indexed` can touch: the
+/// assistant chunks plus the main thread's half.
+pub const MAX_CHUNK_SLOTS: usize = MAX_ASSIST_CHUNKS + 1;
+
+/// Spin iterations between yields while waiting on chunk completion
+/// (mirrors the framework's degraded-host escape hatch).
+const YIELD_THRESHOLD: u32 = 10_000;
+
+/// One stack-resident chunk of a split range.
+///
+/// `claimed` decides *who* runs the chunk (assistant task vs helping
+/// main thread); `done` records that its body finished. Both are needed:
+/// a chunk the main thread claimed still has its queue task pending, and
+/// the final [`Relic::wait`] in `scope` keeps this struct alive until
+/// the assistant has popped (and skipped) that task.
+struct ChunkDesc<F> {
+    lo: usize,
+    hi: usize,
+    index: usize,
+    body: *const F,
+    claimed: AtomicBool,
+    done: AtomicBool,
+    /// Set when the body panicked on the assistant thread; the main
+    /// thread re-raises after the join so the panic surfaces instead of
+    /// hanging the completion spin (the payload itself stays on the
+    /// assistant — crossing it over would need an allocation slot).
+    panicked: AtomicBool,
+}
+
+/// Assistant-side trampoline: claim the chunk, run the body, mark done.
+/// A chunk the main thread already claimed (help path) is skipped — the
+/// pop itself still counts toward the completion counter.
+unsafe fn run_chunk<F: Fn(usize, Range<usize>) + Sync>(data: *const (), _arg: usize) {
+    // SAFETY: `data` points at a ChunkDesc<F> kept alive by the
+    // `split_indexed` stack frame until `Relic::wait` confirms this task
+    // was consumed; `F: Sync` makes the shared `&F` call sound.
+    let c = &*(data as *const ChunkDesc<F>);
+    if c.claimed.compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire).is_ok() {
+        // A panicking body must still complete the chunk protocol —
+        // letting it unwind would kill the assistant thread with `done`
+        // unset and the completion counter forever short, hanging the
+        // main thread silently.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            (*c.body)(c.index, c.lo..c.hi);
+        }));
+        if result.is_err() {
+            c.panicked.store(true, Ordering::Release);
+        }
+        c.done.store(true, Ordering::Release);
+    }
+}
+
+/// An active fork-join section on a [`Relic`] runtime.
+///
+/// Created by [`Relic::scope`]; not `Send`/`Sync` (it borrows the
+/// non-`Sync` runtime), so only the main thread can split ranges —
+/// Relic's single-producer rule extends to the fork-join layer by
+/// construction.
+pub struct Scope<'r> {
+    relic: &'r Relic,
+}
+
+/// Drop guard: even if a chunk body panics on the main thread, every
+/// task submitted to the assistant must be consumed before the chunk
+/// descriptors' stack frame dies.
+struct WaitGuard<'r>(&'r Relic);
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        self.0.wait();
+    }
+}
+
+/// Clears the scope-active flag on exit, unwinding included.
+struct ScopeGuard<'r>(&'r Relic);
+
+impl Drop for ScopeGuard<'_> {
+    fn drop(&mut self) {
+        self.0.wait();
+        self.0.exit_scope();
+    }
+}
+
+impl Relic {
+    /// Open a fork-join scope: `f` receives a [`Scope`] whose
+    /// [`split`](Scope::split) / [`split_indexed`](Scope::split_indexed)
+    /// run range chunks on both SMT threads and return only when every
+    /// chunk finished. All submitted work is drained before `scope`
+    /// returns.
+    ///
+    /// # Panics
+    /// Panics if called while another scope is active on this runtime —
+    /// Relic has a single assistant and no recursive task submission
+    /// (paper §VI), so nested fork-join cannot make progress in general.
+    pub fn scope<R>(&self, f: impl FnOnce(&Scope<'_>) -> R) -> R {
+        assert!(
+            self.enter_scope(),
+            "Relic::scope may not be nested: the runtime has one assistant and \
+             no recursive task submission (restructure as a single flat split)"
+        );
+        let guard = ScopeGuard(self);
+        let out = f(&Scope { relic: self });
+        drop(guard);
+        out
+    }
+}
+
+impl<'r> Scope<'r> {
+    /// Run `body` over every disjoint subrange of `range`, splitting
+    /// statically: the back half runs on the calling (main) thread, the
+    /// front half is cut into at most [`MAX_ASSIST_CHUNKS`] chunks of at
+    /// least `grain` indices each and offered to the assistant. Returns
+    /// once the whole range has been processed.
+    ///
+    /// Ranges shorter than `2 * grain` run entirely on the main thread —
+    /// below that, submit-plus-wait overhead exceeds the work.
+    pub fn split<F: Fn(Range<usize>) + Sync>(&self, range: Range<usize>, grain: usize, body: F) {
+        self.split_indexed(range, grain, |_, sub| body(sub));
+    }
+
+    /// [`split`](Self::split), but `body` also receives the chunk index
+    /// (`0..` assistant chunks front-to-back, then the main half) —
+    /// always `< `[`MAX_CHUNK_SLOTS`]. The reduction helpers in
+    /// [`crate::relic::parallel`] use the index to give each chunk a
+    /// private output slot without allocation.
+    pub fn split_indexed<F>(&self, range: Range<usize>, grain: usize, body: F)
+    where
+        F: Fn(usize, Range<usize>) + Sync,
+    {
+        let (lo, hi) = (range.start, range.end);
+        let len = hi.saturating_sub(lo);
+        if len == 0 {
+            return;
+        }
+        let grain = grain.max(1);
+        if len < 2 * grain {
+            body(0, lo..hi);
+            return;
+        }
+
+        // Static split: assistant gets the front half (submitted first so
+        // it starts while the main thread works), main gets the back.
+        let mid = lo + len / 2;
+        let half = mid - lo;
+        let k = (half / grain).clamp(1, MAX_ASSIST_CHUNKS);
+
+        // Chunk descriptors on the stack — the zero-allocation invariant.
+        // Slots beyond `k` are born claimed+done so they are inert.
+        let chunks: [ChunkDesc<F>; MAX_ASSIST_CHUNKS] = std::array::from_fn(|i| {
+            let (c_lo, c_hi) = if i < k {
+                (lo + half * i / k, lo + half * (i + 1) / k)
+            } else {
+                (mid, mid)
+            };
+            ChunkDesc {
+                lo: c_lo,
+                hi: c_hi,
+                index: i,
+                body: &body as *const F,
+                claimed: AtomicBool::new(i >= k),
+                done: AtomicBool::new(i >= k),
+                panicked: AtomicBool::new(false),
+            }
+        });
+
+        // From here on, every early exit (including a panicking body)
+        // must drain the queue before `chunks` goes out of scope.
+        let guard = WaitGuard(self.relic);
+
+        for c in &chunks[..k] {
+            let data = c as *const ChunkDesc<F> as *const ();
+            if self.relic.submit_raw(run_chunk::<F>, data).is_err() {
+                // Queue full: the producer never blocks — claim and run
+                // the chunk inline right away.
+                if claim(c) {
+                    body(c.index, c.lo..c.hi);
+                    c.done.store(true, Ordering::Release);
+                }
+            }
+        }
+
+        // The main thread's half.
+        body(k, mid..hi);
+
+        // Help: claim chunks the assistant has not started, back to
+        // front (the assistant drains the queue front to back, so the
+        // two meet in the middle instead of racing for the same chunk).
+        for c in chunks[..k].iter().rev() {
+            if claim(c) {
+                body(c.index, c.lo..c.hi);
+                c.done.store(true, Ordering::Release);
+            }
+        }
+
+        // Spin on the per-chunk completion flags (they flip as each
+        // chunk's body returns)…
+        let mut spins = 0u32;
+        for c in &chunks[..k] {
+            while !c.done.load(Ordering::Acquire) {
+                std::hint::spin_loop();
+                spins += 1;
+                if spins >= YIELD_THRESHOLD {
+                    std::thread::yield_now();
+                    spins = 0;
+                }
+            }
+        }
+        // …then make sure the assistant consumed every submitted task
+        // (a claimed-and-skipped chunk is done before its queue entry is
+        // popped); the descriptors must outlive their queue entries.
+        drop(guard);
+
+        // Re-raise an assistant-side body panic on the main thread: the
+        // join is complete, so this propagates like a serial loop panic
+        // instead of hanging or being swallowed.
+        if chunks[..k].iter().any(|c| c.panicked.load(Ordering::Acquire)) {
+            panic!("Relic scope: chunk body panicked on the assistant thread");
+        }
+    }
+
+    /// The runtime this scope runs on.
+    pub fn relic(&self) -> &'r Relic {
+        self.relic
+    }
+}
+
+/// Try to claim a chunk for execution on the calling thread.
+fn claim<F>(c: &ChunkDesc<F>) -> bool {
+    c.claimed.compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire).is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::relic::RelicConfig;
+    use std::sync::atomic::{AtomicU64, AtomicUsize};
+
+    #[test]
+    fn split_covers_every_index_exactly_once() {
+        let relic = Relic::new();
+        for n in [0usize, 1, 2, 3, 7, 64, 1000] {
+            let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            relic.scope(|s| {
+                s.split(0..n, 4, |sub| {
+                    for i in sub {
+                        counts[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            });
+            for (i, c) in counts.iter().enumerate() {
+                assert_eq!(c.load(Ordering::Relaxed), 1, "index {i} of n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_indexed_stays_under_slot_bound() {
+        let relic = Relic::new();
+        let max_seen = AtomicUsize::new(0);
+        relic.scope(|s| {
+            s.split_indexed(0..10_000, 1, |ci, _| {
+                max_seen.fetch_max(ci, Ordering::Relaxed);
+            });
+        });
+        assert!(max_seen.load(Ordering::Relaxed) < MAX_CHUNK_SLOTS);
+    }
+
+    #[test]
+    fn tiny_ranges_run_on_main_as_one_chunk() {
+        let relic = Relic::new();
+        let before = relic.stats().submitted;
+        let sum = AtomicU64::new(0);
+        relic.scope(|s| {
+            s.split(10..13, 16, |sub| {
+                for i in sub {
+                    sum.fetch_add(i as u64, Ordering::Relaxed);
+                }
+            });
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 10 + 11 + 12);
+        assert_eq!(relic.stats().submitted, before, "no tasks for a sub-grain range");
+    }
+
+    #[test]
+    fn queue_overflow_falls_back_inline() {
+        let relic = Relic::with_config(RelicConfig {
+            queue_capacity: 2,
+            ..RelicConfig::default()
+        });
+        let sum = AtomicU64::new(0);
+        // Many splits back to back; with capacity 2 some submissions
+        // must overflow and run inline — nothing may be lost.
+        relic.scope(|s| {
+            for _ in 0..50 {
+                s.split(0..64, 1, |sub| {
+                    for i in sub {
+                        sum.fetch_add(i as u64 + 1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 50 * (64 * 65 / 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "may not be nested")]
+    fn nested_scope_is_rejected() {
+        let relic = Relic::new();
+        relic.scope(|_| {
+            relic.scope(|_| {});
+        });
+    }
+
+    #[test]
+    fn scope_usable_again_after_nesting_panic() {
+        let relic = Relic::new();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            relic.scope(|_| relic.scope(|_| ()));
+        }));
+        assert!(caught.is_err());
+        // The inner panic unwound through the outer scope's guard; the
+        // runtime must be reusable.
+        let n = AtomicU64::new(0);
+        relic.scope(|s| {
+            s.split(0..100, 8, |sub| {
+                n.fetch_add(sub.len() as u64, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn chunk_body_panic_propagates_and_runtime_survives() {
+        let relic = Relic::new();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            relic.scope(|s| {
+                s.split(0..1000, 1, |sub| {
+                    // The front half goes to the assistant; whichever
+                    // thread claims a front chunk panics.
+                    if sub.start < 500 {
+                        panic!("boom");
+                    }
+                });
+            });
+        }));
+        assert!(caught.is_err(), "chunk panic must not be swallowed");
+        // The join still completed: the runtime remains serviceable.
+        let n = AtomicU64::new(0);
+        relic.scope(|s| {
+            s.split(0..64, 4, |sub| {
+                n.fetch_add(sub.len() as u64, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 64);
+        let stats = relic.stats();
+        assert_eq!(stats.submitted, stats.completed);
+    }
+
+    #[test]
+    fn scope_returns_closure_value_and_mixes_with_pair() {
+        let relic = Relic::new();
+        let sum = AtomicU64::new(0);
+        let got = relic.scope(|s| {
+            s.split(0..256, 16, |sub| {
+                for i in sub {
+                    sum.fetch_add(i as u64, Ordering::Relaxed);
+                }
+            });
+            42u32
+        });
+        assert_eq!(got, 42);
+        assert_eq!(sum.load(Ordering::Relaxed), 255 * 256 / 2);
+        // The plain pair API still works on the same runtime afterwards.
+        let hits = AtomicU64::new(0);
+        relic.pair(
+            || {
+                hits.fetch_add(1, Ordering::Relaxed);
+            },
+            &|| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            },
+        );
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn repeated_scopes_reuse_the_runtime() {
+        let relic = Relic::new();
+        let total = AtomicU64::new(0);
+        for _ in 0..200 {
+            relic.scope(|s| {
+                s.split(0..128, 8, |sub| {
+                    total.fetch_add(sub.len() as u64, Ordering::Relaxed);
+                });
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 200 * 128);
+        let stats = relic.stats();
+        assert_eq!(stats.submitted, stats.completed, "scope drains all tasks");
+    }
+}
