@@ -1,0 +1,69 @@
+//! Pool-throughput benchmark: batch throughput of the sharded engine
+//! (`RelicPool` of pinned pair-shards) across shard counts.
+//!
+//! For each shard count the same mixed-kernel request batch (on the
+//! paper graph) runs through `Engine::submit`/`Engine::drain`; the
+//! sweep verifies every response checksum against the single-pair
+//! kernels, so this doubles as the pool-vs-single-pair equivalence
+//! check. A preamble times the parallel Kronecker generator
+//! (`kronecker_graph_par`, `--scale S` to grow it) over this process's
+//! own Relic pair and asserts it bit-identical to the serial one.
+//!
+//! Run: `cargo bench --bench pool_throughput [-- --shards 1,2,4
+//! --requests N --reps R --scale S --no-pin]`
+//! Meaningful scaling needs one idle physical core per shard; elsewhere
+//! the checksum assertions still make it a correctness smoke test.
+
+mod common;
+
+use relic_smt::bench::figures;
+use relic_smt::cli::Args;
+use relic_smt::coordinator::EngineConfig;
+use relic_smt::graph::kronecker::{kronecker_graph, kronecker_graph_par, KroneckerParams};
+use relic_smt::graph::kronecker::{PAPER_EDGE_FACTOR, PAPER_SEED};
+use relic_smt::relic::{affinity, pool, Par, PoolConfig, Relic};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let requests = args.get_u64("requests", 96) as usize;
+    let reps = args.get_u64("reps", 3);
+    let scale = args.get_u64("scale", 5) as u32;
+    let pin = !args.flag("no-pin");
+    let shard_counts = args.sweep_list("shards", &[1, 2, 4]).expect("--shards");
+
+    println!("host: {}", affinity::topology_summary());
+    let pairs = pool::physical_core_pairs();
+    println!("physical core pairs: {pairs:?}");
+    if pairs.len() < *shard_counts.iter().max().unwrap_or(&1) {
+        println!(
+            "WARNING: sweep asks for more shards than detected core pairs — \
+             the surplus shards run unpinned and scaling flattens."
+        );
+    }
+
+    common::section("parallel Kronecker generation (satellite check)");
+    let params = KroneckerParams::gap(scale, PAPER_EDGE_FACTOR, PAPER_SEED);
+    let relic = Relic::new();
+    let t0 = std::time::Instant::now();
+    let serial = kronecker_graph(&params);
+    let t_serial = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let parallel = kronecker_graph_par(&params, &Par::Relic(&relic));
+    let t_par = t0.elapsed();
+    assert_eq!(serial, parallel, "parallel generator must be bit-identical");
+    println!(
+        "scale {scale}: {} vertices / {} edges; serial {t_serial:?}, \
+         parallel {t_par:?} (bit-identical)",
+        serial.num_vertices(),
+        serial.num_edges()
+    );
+    drop(relic);
+
+    common::section("batch throughput vs shard count");
+    let template = EngineConfig {
+        pool: PoolConfig { pin, ..PoolConfig::default() },
+        ..EngineConfig::default()
+    };
+    let rows = figures::pool_scaling(&template, &shard_counts, requests, reps);
+    print!("{}", figures::render_pool_scaling(&rows));
+}

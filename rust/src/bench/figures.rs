@@ -8,7 +8,10 @@
 //! * [`section5_geomeans`] — the §V in-text geomeans (with degradations);
 //! * [`intra_kernel`] — beyond the paper: serial vs `pair` (two whole
 //!   instances) vs `parallel_for` (one instance, internally fork-joined)
-//!   per kernel, wall-clock.
+//!   per kernel, wall-clock;
+//! * [`pool_scaling`] — beyond the paper: batch throughput of the
+//!   sharded engine vs shard count, with built-in pool-vs-single-pair
+//!   checksum verification.
 //!
 //! Each function returns structured rows; [`render_table`] pretty-prints
 //! them with the paper's reference values beside ours.
@@ -275,6 +278,151 @@ pub fn intra_kernel(relic: &crate::relic::Relic, iters: u64, warmup: u64) -> Vec
     rows
 }
 
+/// One pool-scaling measurement: batch throughput at a shard count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolScalingRow {
+    pub shards: usize,
+    pub requests: usize,
+    /// Mean wall time to process the whole batch (ms).
+    pub batch_ms: f64,
+    /// Requests per second at that batch time.
+    pub throughput_rps: f64,
+    /// Batch-time speedup relative to the 1-shard row (or the first
+    /// row measured when 1 is not in the sweep).
+    pub speedup: f64,
+    /// Admission backpressure stalls observed across the whole run.
+    pub backpressure_stalls: u64,
+}
+
+/// The pool-scaling sweep: process the same mixed-kernel batch on the
+/// paper graph through a [`crate::coordinator::Engine`] at each shard
+/// count, verifying along the way that every response's checksum equals
+/// the plain single-pair kernel's — the run doubles as the
+/// pool-vs-single-pair equivalence check. `template` carries
+/// pin/channel/batch knobs; its shard count is overridden per row.
+///
+/// Meaningful *scaling* numbers need one idle physical core per shard;
+/// elsewhere the sweep still measures and still verifies checksums.
+pub fn pool_scaling(
+    template: &crate::coordinator::EngineConfig,
+    shard_counts: &[usize],
+    requests: usize,
+    reps: u64,
+) -> Vec<PoolScalingRow> {
+    use crate::coordinator::{
+        run_native_kernel, Engine, GraphKernel, Request, RequestResult,
+    };
+    use crate::graph::kronecker::paper_graph;
+
+    let graph = paper_graph();
+    let kernels = GraphKernel::all();
+    let plan: Vec<(GraphKernel, u32)> = (0..requests)
+        .map(|i| (kernels[i % kernels.len()], (i % 32) as u32))
+        .collect();
+    let expected: Vec<u64> = plan
+        .iter()
+        .map(|&(k, source)| run_native_kernel(k, &graph, source))
+        .collect();
+
+    let reps = reps.max(1);
+    let mut rows = Vec::new();
+    for &shards in shard_counts {
+        let mut config = template.clone();
+        config.pool.shards = Some(shards.max(1));
+        let mut engine = Engine::new(config);
+        let make_batch = || -> Vec<Request> {
+            plan.iter()
+                .enumerate()
+                .map(|(i, &(kernel, source))| Request {
+                    id: i as u64,
+                    kernel,
+                    graph: graph.clone(),
+                    source,
+                })
+                .collect()
+        };
+        // Untimed warmup rep: Engine::new returns while shard threads
+        // are still pinning and building their Relic pairs; without
+        // this the first timed rep absorbs that one-time startup cost
+        // and skews the 1-shard baseline every speedup divides by.
+        let warm = engine.process_batch(make_batch());
+        assert_eq!(warm.len(), requests);
+        let mut total_ns = 0u128;
+        for _ in 0..reps {
+            let batch = make_batch();
+            let t0 = std::time::Instant::now();
+            let responses = engine.process_batch(batch);
+            total_ns += t0.elapsed().as_nanos();
+            assert_eq!(responses.len(), requests);
+            for (i, r) in responses.iter().enumerate() {
+                assert_eq!(
+                    r.result,
+                    RequestResult::Native(expected[i]),
+                    "pool checksum diverged from single-pair at shards={shards}, request {i}"
+                );
+            }
+        }
+        let batch_ms = total_ns as f64 / reps as f64 / 1e6;
+        rows.push(PoolScalingRow {
+            shards: shards.max(1),
+            requests,
+            batch_ms,
+            throughput_rps: if batch_ms > 0.0 { requests as f64 / (batch_ms / 1e3) } else { 0.0 },
+            speedup: 1.0,
+            backpressure_stalls: engine.pool_snapshot().backpressure_stalls,
+        });
+    }
+    let base_ms = rows
+        .iter()
+        .find(|r| r.shards == 1)
+        .or_else(|| rows.first())
+        .map(|r| r.batch_ms)
+        .unwrap_or(0.0);
+    for r in &mut rows {
+        r.speedup = if r.batch_ms > 0.0 { base_ms / r.batch_ms } else { 0.0 };
+    }
+    rows
+}
+
+/// Render the pool-scaling table.
+pub fn render_pool_scaling(rows: &[PoolScalingRow]) -> String {
+    let mut out = format!(
+        "{:<8}{:>10}{:>12}{:>14}{:>10}{:>10}\n",
+        "shards", "requests", "batch ms", "req/s", "speedup", "stalls"
+    );
+    for r in rows {
+        out += &format!(
+            "{:<8}{:>10}{:>12.3}{:>14.0}{:>9.3}x{:>10}\n",
+            r.shards, r.requests, r.batch_ms, r.throughput_rps, r.speedup, r.backpressure_stalls
+        );
+    }
+    out += "(speedup = batch time vs the 1-shard row; \
+            checksums verified against the single-pair kernels)\n";
+    out
+}
+
+/// Serialize pool-scaling rows to JSON for plotting.
+pub fn pool_rows_to_json(rows: &[PoolScalingRow]) -> String {
+    use crate::json::Value;
+    let arr = rows
+        .iter()
+        .map(|r| {
+            Value::Object(vec![
+                ("shards".into(), Value::Number(r.shards as f64)),
+                ("requests".into(), Value::Number(r.requests as f64)),
+                ("batch_ms".into(), Value::Number(r.batch_ms)),
+                ("throughput_rps".into(), Value::Number(r.throughput_rps)),
+                ("speedup".into(), Value::Number(r.speedup)),
+                (
+                    "backpressure_stalls".into(),
+                    Value::Number(r.backpressure_stalls as f64),
+                ),
+            ])
+        })
+        .collect();
+    crate::json::to_string(&Value::Array(arr))
+}
+
 /// Render the intra-kernel comparison table.
 pub fn render_intra(rows: &[IntraRow]) -> String {
     let mut out = format!(
@@ -451,6 +599,35 @@ mod tests {
         for k in KERNEL_NAMES {
             assert!(s.contains(k), "render missing {k}");
         }
+    }
+
+    #[test]
+    fn pool_scaling_verifies_and_renders() {
+        // Tiny sweep: plumbing + the built-in checksum equivalence, not
+        // timing quality. Unpinned so affinity-restricted CI works.
+        let template = crate::coordinator::EngineConfig {
+            pool: crate::relic::PoolConfig {
+                pin: false,
+                ..crate::relic::PoolConfig::default()
+            },
+            ..crate::coordinator::EngineConfig::default()
+        };
+        let rows = pool_scaling(&template, &[1, 2], 8, 1);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].shards, 1);
+        assert_eq!(rows[1].shards, 2);
+        for r in &rows {
+            assert!(r.batch_ms > 0.0);
+            assert!(r.throughput_rps > 0.0);
+            assert!(r.speedup > 0.0);
+        }
+        assert!((rows[0].speedup - 1.0).abs() < 1e-12, "1-shard row is the baseline");
+        let s = render_pool_scaling(&rows);
+        assert!(s.contains("shards"));
+        assert!(s.contains("req/s"));
+        let json = pool_rows_to_json(&rows);
+        assert!(json.contains("\"shards\""));
+        assert!(json.contains("\"throughput_rps\""));
     }
 
     #[test]

@@ -10,7 +10,8 @@ pub mod sweep;
 pub mod workloads;
 
 pub use figures::{
-    fig1, fig3, fig4, granularity, intra_kernel, section5_geomeans, Cell, IntraRow, SummaryRow,
+    fig1, fig3, fig4, granularity, intra_kernel, pool_scaling, render_pool_scaling,
+    section5_geomeans, Cell, IntraRow, PoolScalingRow, SummaryRow,
 };
 pub use harness::{geomean, measure, wallclock_speedup, Stats};
 pub use workloads::{calibrated_trace, paper_task_micros, solo_cycles, Workload, KERNEL_NAMES};

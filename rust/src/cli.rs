@@ -62,6 +62,22 @@ impl Args {
             None => false,
         }
     }
+
+    /// Parse `--key` as a sweep list of positive counts (cpulist
+    /// syntax: `"1,2,4"`, ranges like `"1-4"`); `default` when the
+    /// option is absent or empty. Errors on an unparsable value rather
+    /// than silently sweeping nothing. Shared by the `repro pool`
+    /// command and the pool-throughput bench.
+    pub fn sweep_list(&self, key: &str, default: &[usize]) -> anyhow::Result<Vec<usize>> {
+        match self.get(key) {
+            Some(list) if !list.is_empty() => {
+                let counts = crate::relic::affinity::parse_cpulist(list);
+                anyhow::ensure!(!counts.is_empty(), "cannot parse --{key} {list:?}");
+                Ok(counts.into_iter().map(|c| c.max(1)).collect())
+            }
+            _ => Ok(default.to_vec()),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -95,5 +111,20 @@ mod tests {
         let a = parse("x");
         assert_eq!(a.get_u64("n", 7), 7);
         assert_eq!(a.get_f64("r", 1.5), 1.5);
+    }
+
+    #[test]
+    fn sweep_list_parses_defaults_and_rejects_garbage() {
+        let a = parse("pool --shards 1,2,4");
+        assert_eq!(a.sweep_list("shards", &[8]).unwrap(), vec![1, 2, 4]);
+        let a = parse("pool --shards 1-3");
+        assert_eq!(a.sweep_list("shards", &[8]).unwrap(), vec![1, 2, 3]);
+        let a = parse("pool");
+        assert_eq!(a.sweep_list("shards", &[1, 2]).unwrap(), vec![1, 2]);
+        // Zero clamps to one (a zero-shard pool cannot exist).
+        let a = parse("pool --shards 0,2");
+        assert_eq!(a.sweep_list("shards", &[1]).unwrap(), vec![1, 2]);
+        let a = parse("pool --shards nope");
+        assert!(a.sweep_list("shards", &[1]).is_err());
     }
 }

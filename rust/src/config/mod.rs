@@ -191,6 +191,54 @@ impl ExperimentConfig {
     }
 }
 
+/// Sharded-engine configuration (section `[pool]`; defaults mirror
+/// `relic::pool`'s).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolSettings {
+    /// Shard count; 0 = auto (one shard per detected physical core).
+    pub shards: usize,
+    /// Pin shard threads to SMT sibling pairs.
+    pub pin: bool,
+    /// Per-shard bounded admission-channel depth.
+    pub channel_capacity: usize,
+    /// Maximum requests per batch handed to a shard's coordinator.
+    pub max_batch: usize,
+}
+
+impl Default for PoolSettings {
+    fn default() -> Self {
+        PoolSettings { shards: 0, pin: true, channel_capacity: 64, max_batch: 32 }
+    }
+}
+
+impl PoolSettings {
+    /// Overlay values from a raw config (section `[pool]`).
+    pub fn from_raw(raw: &RawConfig) -> Self {
+        let d = Self::default();
+        PoolSettings {
+            shards: raw.get_int("pool.shards").map(|v| v.max(0) as usize).unwrap_or(d.shards),
+            pin: raw.get_bool("pool.pin").unwrap_or(d.pin),
+            channel_capacity: raw
+                .get_int("pool.channel_capacity")
+                .map(|v| v.max(1) as usize)
+                .unwrap_or(d.channel_capacity),
+            max_batch: raw
+                .get_int("pool.max_batch")
+                .map(|v| v.max(1) as usize)
+                .unwrap_or(d.max_batch),
+        }
+    }
+
+    /// The shard count as the pool layer wants it (`None` = auto).
+    pub fn shard_count_hint(&self) -> Option<usize> {
+        if self.shards == 0 {
+            None
+        } else {
+            Some(self.shards)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -236,6 +284,26 @@ mod tests {
         let c = ExperimentConfig::from_raw(&raw);
         assert_eq!(c.iterations, 10);
         assert_eq!(c.scale, 5); // default preserved
+    }
+
+    #[test]
+    fn pool_settings_overlay_and_hint() {
+        let d = PoolSettings::default();
+        assert_eq!(d.shard_count_hint(), None, "0 means auto");
+        let raw = RawConfig::parse(
+            "[pool]\nshards = 4\npin = false\nchannel_capacity = 8\nmax_batch = 2\n",
+        )
+        .unwrap();
+        let s = PoolSettings::from_raw(&raw);
+        assert_eq!(s, PoolSettings { shards: 4, pin: false, channel_capacity: 8, max_batch: 2 });
+        assert_eq!(s.shard_count_hint(), Some(4));
+        // Partial overlay keeps defaults; degenerate values are clamped.
+        let raw = RawConfig::parse("[pool]\nchannel_capacity = 0\n").unwrap();
+        let s = PoolSettings::from_raw(&raw);
+        assert_eq!(s.shards, 0);
+        assert!(s.pin);
+        assert_eq!(s.channel_capacity, 1);
+        assert_eq!(s.max_batch, 32);
     }
 
     #[test]

@@ -1,0 +1,326 @@
+//! The sharded service engine: admission over a [`RelicPool`] of
+//! pair-shards.
+//!
+//! [`Coordinator::process_batch`] is synchronous on one embedded SMT
+//! pair — the paper's single-core scope. [`Engine`] scales it out while
+//! keeping that coordinator *unchanged* as each shard's inner loop:
+//!
+//! * [`Engine::submit`] tags each [`Request`] with a sequence number
+//!   and dispatches it to the least-loaded shard (bounded per-shard
+//!   channel, blocking backpressure — see [`crate::relic::pool`]);
+//! * every shard thread owns a native-only `Coordinator`; its drained
+//!   batches go through `process_batch`, so request pairing and the
+//!   odd-leftover intra-request fork-join still happen per shard;
+//! * [`Engine::drain`] collects the responses of everything submitted
+//!   since the last drain and returns them in submission order;
+//! * per-shard [`ServiceMetrics`] plus the pool's admission counters
+//!   aggregate into one service-level [`Engine::report`].
+//!
+//! Shards run the native kernels only: PJRT executors hold process-wide
+//! device state and are not replicated per shard — coarse offload stays
+//! on the single-pair [`Coordinator`] path (`repro serve` without
+//! `--shards`).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::config::PoolSettings;
+use crate::relic::pool::{discover_placements, PoolConfig, PoolSnapshot, RelicPool};
+use crate::relic::RelicConfig;
+
+use super::router::{Router, RouterConfig};
+use super::service::{Coordinator, Request, Response, ServiceMetrics};
+
+/// Engine configuration: pool sizing/placement plus routing.
+#[derive(Debug, Clone, Default)]
+pub struct EngineConfig {
+    pub pool: PoolConfig,
+    pub router: RouterConfig,
+}
+
+impl EngineConfig {
+    /// Default configuration with an explicit shard count (`None` = one
+    /// shard per detected physical core).
+    pub fn with_shards(shards: Option<usize>) -> Self {
+        EngineConfig {
+            pool: PoolConfig { shards, ..PoolConfig::default() },
+            ..EngineConfig::default()
+        }
+    }
+
+    /// Build from the `[pool]` section of a config file.
+    pub fn from_settings(s: &PoolSettings) -> Self {
+        EngineConfig {
+            pool: PoolConfig {
+                shards: s.shard_count_hint(),
+                pin: s.pin,
+                channel_capacity: s.channel_capacity,
+                max_batch: s.max_batch,
+            },
+            router: RouterConfig::default(),
+        }
+    }
+}
+
+/// A request tagged with its admission sequence number.
+struct Sequenced {
+    seq: u64,
+    req: Request,
+}
+
+/// The sharded analytics engine.
+pub struct Engine {
+    pool: RelicPool<Sequenced>,
+    responses: Receiver<(u64, Response)>,
+    /// Responses received but not yet handed out by `drain`.
+    collected: Vec<(u64, Response)>,
+    /// Requests submitted since the last completed `drain`.
+    pending: usize,
+    next_seq: u64,
+    shard_metrics: Vec<Arc<ServiceMetrics>>,
+}
+
+impl Engine {
+    /// Spawn the engine: discover placements, then one shard per
+    /// placement, each building its own native-only [`Coordinator`]
+    /// (and with it its Relic pair) on the shard thread.
+    pub fn new(config: EngineConfig) -> Self {
+        let placements = discover_placements(config.pool.shards, config.pool.pin);
+        let shard_metrics: Vec<Arc<ServiceMetrics>> =
+            placements.iter().map(|_| Arc::new(ServiceMetrics::default())).collect();
+        let (tx, rx): (Sender<(u64, Response)>, _) = channel();
+        let factory = {
+            let shard_metrics = shard_metrics.clone();
+            let router_cfg = config.router.clone();
+            move |p: &crate::relic::ShardPlacement| {
+                Coordinator::with_config(
+                    Router::new(router_cfg.clone(), None),
+                    None,
+                    RelicConfig { assistant_cpu: p.assistant_cpu, ..RelicConfig::default() },
+                    Arc::clone(&shard_metrics[p.shard]),
+                )
+            }
+        };
+        let handler = move |coord: &mut Coordinator, batch: Vec<Sequenced>| {
+            let seqs: Vec<u64> = batch.iter().map(|s| s.seq).collect();
+            let reqs: Vec<Request> = batch.into_iter().map(|s| s.req).collect();
+            for (seq, resp) in seqs.into_iter().zip(coord.process_batch(reqs)) {
+                // A send can only fail when the engine (receiver) is
+                // already gone — the shard is being torn down anyway.
+                let _ = tx.send((seq, resp));
+            }
+        };
+        let pool = RelicPool::with_placements(placements, &config.pool, factory, handler);
+        Engine {
+            pool,
+            responses: rx,
+            collected: Vec::new(),
+            pending: 0,
+            next_seq: 0,
+            shard_metrics,
+        }
+    }
+
+    /// Number of shards serving requests.
+    pub fn shard_count(&self) -> usize {
+        self.pool.shard_count()
+    }
+
+    /// Dispatch one request to the least-loaded shard. Returns the
+    /// shard it went to. Blocks only under backpressure (the chosen
+    /// shard's bounded channel is full).
+    pub fn submit(&mut self, req: Request) -> usize {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.pending += 1;
+        self.pool.submit(Sequenced { seq, req })
+    }
+
+    /// Wait for every response to the requests submitted since the last
+    /// drain and return them **in submission order**.
+    ///
+    /// # Panics
+    /// Panics if a shard thread dies (its handler panicked) while
+    /// responses are outstanding — the alternative is waiting forever
+    /// for responses the dead shard can no longer send.
+    pub fn drain(&mut self) -> Vec<Response> {
+        use std::sync::mpsc::RecvTimeoutError;
+        while self.collected.len() < self.pending {
+            match self.responses.recv_timeout(std::time::Duration::from_millis(50)) {
+                Ok(item) => self.collected.push(item),
+                Err(RecvTimeoutError::Timeout) => {
+                    let dead = self.pool.dead_shards();
+                    assert!(
+                        dead.is_empty(),
+                        "engine shard(s) {dead:?} died with {} responses outstanding",
+                        self.pending - self.collected.len()
+                    );
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    panic!(
+                        "every engine shard died with {} responses outstanding",
+                        self.pending - self.collected.len()
+                    );
+                }
+            }
+        }
+        self.pending = 0;
+        let mut out = std::mem::take(&mut self.collected);
+        out.sort_by_key(|(seq, _)| *seq);
+        out.into_iter().map(|(_, resp)| resp).collect()
+    }
+
+    /// Drop-in replacement for [`Coordinator::process_batch`]: submit
+    /// the whole batch, then drain — responses in request order.
+    pub fn process_batch(&mut self, requests: Vec<Request>) -> Vec<Response> {
+        for req in requests {
+            self.submit(req);
+        }
+        self.drain()
+    }
+
+    /// Pool-level admission counters and per-shard occupancy.
+    pub fn pool_snapshot(&self) -> PoolSnapshot {
+        self.pool.snapshot()
+    }
+
+    /// Metrics of one shard's coordinator.
+    pub fn shard_metrics(&self, shard: usize) -> &ServiceMetrics {
+        &self.shard_metrics[shard]
+    }
+
+    /// Service-level metrics: every shard's [`ServiceMetrics`] folded
+    /// into one aggregate.
+    pub fn aggregated_metrics(&self) -> ServiceMetrics {
+        let agg = ServiceMetrics::default();
+        for m in &self.shard_metrics {
+            agg.merge_from(m);
+        }
+        agg
+    }
+
+    /// Human-readable report: pool counters, one line per shard, and
+    /// the aggregated service metrics.
+    pub fn report(&self) -> String {
+        let snap = self.pool.snapshot();
+        let mut out = format!(
+            "pool: {} shards, {} dispatched, {} backpressure stalls\n",
+            snap.shards, snap.dispatched, snap.backpressure_stalls
+        );
+        for (i, m) in self.shard_metrics.iter().enumerate() {
+            let p = self.pool.placement(i);
+            let cpus = match (p.main_cpu, p.assistant_cpu) {
+                (Some(a), Some(b)) => format!("cpus {a}+{b}"),
+                _ => "unpinned".into(),
+            };
+            out += &format!(
+                "shard {i} [{cpus}]: {} reqs ({} pairs, {} intra), {} served\n",
+                m.native_requests.get(),
+                m.relic_pairs.get(),
+                m.intra_requests.get(),
+                snap.occupancy[i],
+            );
+        }
+        let agg = self.aggregated_metrics();
+        out += &format!(
+            "total: {} native reqs {}\n",
+            agg.native_requests.get(),
+            agg.native_latency.summary("ns"),
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_native_kernel, Backend, GraphKernel, RequestResult};
+    use crate::graph::kronecker::paper_graph;
+
+    fn engine(shards: usize) -> Engine {
+        // Unpinned in tests: CI containers may refuse affinity calls.
+        Engine::new(EngineConfig {
+            pool: PoolConfig { shards: Some(shards), pin: false, ..PoolConfig::default() },
+            ..EngineConfig::default()
+        })
+    }
+
+    fn req(id: u64, kernel: GraphKernel) -> Request {
+        Request { id, kernel, graph: paper_graph(), source: 0 }
+    }
+
+    #[test]
+    fn responses_in_submission_order_with_correct_checksums() {
+        let mut e = engine(3);
+        let kernels = GraphKernel::all();
+        let expected: Vec<u64> =
+            kernels.iter().map(|&k| run_native_kernel(k, &paper_graph(), 0)).collect();
+        for round in 0..3 {
+            for (i, &k) in kernels.iter().enumerate() {
+                e.submit(req((round * 10 + i) as u64, k));
+            }
+            let responses = e.drain();
+            assert_eq!(responses.len(), kernels.len());
+            for (i, r) in responses.iter().enumerate() {
+                assert_eq!(r.id, (round * 10 + i) as u64, "submission order");
+                assert_eq!(r.backend, Backend::Native);
+                assert_eq!(
+                    r.result,
+                    RequestResult::Native(expected[i]),
+                    "round {round} kernel {:?}",
+                    kernels[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_matches_single_pair_coordinator() {
+        let mut single = Coordinator::with_parts(
+            Router::new(RouterConfig::default(), None),
+            None,
+        );
+        let mixed = |n: u64| -> Vec<Request> {
+            (0..n).map(|i| req(i, GraphKernel::all()[i as usize % 6])).collect()
+        };
+        let reqs = mixed(7);
+        let want = single.process_batch(mixed(7));
+        let mut e = engine(1);
+        let got = e.process_batch(reqs);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.id, w.id);
+            assert_eq!(g.backend, w.backend);
+            assert_eq!(g.result, w.result);
+        }
+        assert_eq!(e.aggregated_metrics().native_requests.get(), 7);
+    }
+
+    #[test]
+    fn metrics_aggregate_across_shards() {
+        let mut e = engine(2);
+        let n = 24;
+        for i in 0..n {
+            e.submit(req(i, GraphKernel::Tc));
+        }
+        let responses = e.drain();
+        assert_eq!(responses.len(), n as usize);
+        let agg = e.aggregated_metrics();
+        assert_eq!(agg.native_requests.get(), n);
+        assert_eq!(agg.native_latency.count(), n, "one latency sample per request");
+        let snap = e.pool_snapshot();
+        assert_eq!(snap.dispatched, n);
+        assert_eq!(snap.occupancy.iter().sum::<u64>(), n);
+        let report = e.report();
+        assert!(report.contains("pool: 2 shards"));
+        assert!(report.contains("shard 0"));
+        assert!(report.contains("total:"));
+    }
+
+    #[test]
+    fn empty_drain_is_fine() {
+        let mut e = engine(2);
+        assert!(e.drain().is_empty());
+        assert!(e.process_batch(Vec::new()).is_empty());
+    }
+}

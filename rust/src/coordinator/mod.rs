@@ -9,15 +9,21 @@
 //!   on kernel kind and graph size vs the artifact manifest;
 //! * [`service`] — the request loop: batches compatible PJRT requests,
 //!   pairs fine-grained native requests onto Relic, records latency and
-//!   throughput metrics.
+//!   throughput metrics;
+//! * [`engine`] — the machine-scale layer: [`Engine::submit`] /
+//!   [`Engine::drain`] over a [`crate::relic::RelicPool`] of pinned
+//!   pair-shards, each shard running an unchanged single-pair
+//!   [`Coordinator`] as its inner loop.
 //!
 //! See `examples/hybrid_pjrt.rs` for the end-to-end driver.
 
+pub mod engine;
 pub mod router;
 pub mod service;
 
+pub use engine::{Engine, EngineConfig};
 pub use router::{Backend, Router, RouterConfig};
-pub use service::{Coordinator, Request, RequestResult, Response};
+pub use service::{Coordinator, Request, RequestResult, Response, ServiceMetrics};
 
 use crate::graph::CsrGraph;
 

@@ -12,6 +12,7 @@
 //!    [`Par`]), so the assistant thread never idles through a batch.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::graph::{dense, CsrGraph};
@@ -61,24 +62,48 @@ pub struct ServiceMetrics {
     pub pjrt_latency: Histogram,
 }
 
+impl ServiceMetrics {
+    /// Fold another instance into this one — the pool aggregates its
+    /// per-shard metrics into a service-level view with this.
+    pub fn merge_from(&self, other: &ServiceMetrics) {
+        self.native_requests.add(other.native_requests.get());
+        self.pjrt_requests.add(other.pjrt_requests.get());
+        self.relic_pairs.add(other.relic_pairs.get());
+        self.intra_requests.add(other.intra_requests.get());
+        self.native_latency.merge_from(&other.native_latency);
+        self.pjrt_latency.merge_from(&other.pjrt_latency);
+    }
+}
+
 /// The hybrid analytics coordinator.
+///
+/// Metrics live behind an `Arc` so a pool shard's owner (the
+/// [`super::Engine`] admission thread) can keep a handle and aggregate
+/// across shards while each coordinator records from its own thread.
 pub struct Coordinator {
     router: Router,
     executor: Option<GraphExecutor>,
     relic: Relic,
-    pub metrics: ServiceMetrics,
+    pub metrics: Arc<ServiceMetrics>,
 }
 
 impl Coordinator {
     /// Build from parts (router already configured against the
     /// manifest; `executor: None` → everything native).
     pub fn with_parts(router: Router, executor: Option<GraphExecutor>) -> Self {
-        Coordinator {
-            router,
-            executor,
-            relic: Relic::with_config(RelicConfig::default()),
-            metrics: ServiceMetrics::default(),
-        }
+        Self::with_config(router, executor, RelicConfig::default(), Arc::default())
+    }
+
+    /// Full-control constructor: explicit Relic configuration (a pool
+    /// shard pins the assistant to its SMT sibling here) and a shared
+    /// metrics handle.
+    pub fn with_config(
+        router: Router,
+        executor: Option<GraphExecutor>,
+        relic: RelicConfig,
+        metrics: Arc<ServiceMetrics>,
+    ) -> Self {
+        Coordinator { router, executor, relic: Relic::with_config(relic), metrics }
     }
 
     /// Pre-compile every available PJRT executable so first-request
@@ -151,6 +176,11 @@ impl Coordinator {
                     let latency = t0.elapsed().as_nanos() as u64;
                     self.metrics.relic_pairs.inc();
                     self.metrics.native_requests.add(2);
+                    // One latency sample *per request*: the pair shares
+                    // one wall-time measurement, but recording it once
+                    // would weight a paired request half as much as a
+                    // solo one and under-count the histogram.
+                    self.metrics.native_latency.record(latency);
                     self.metrics.native_latency.record(latency);
                     responses[ia] = Some(Response {
                         id: ra.id,
@@ -263,6 +293,8 @@ mod tests {
         assert_eq!(c.metrics.relic_pairs.get(), 2);
         assert_eq!(c.metrics.intra_requests.get(), 1);
         assert_eq!(c.metrics.native_requests.get(), 5);
+        // One latency sample per request, paired or not.
+        assert_eq!(c.metrics.native_latency.count(), 5);
         // All TC checksums identical (same graph).
         let first = &responses[0].result;
         assert!(responses.iter().all(|r| r.result == *first));

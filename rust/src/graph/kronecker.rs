@@ -8,6 +8,7 @@
 //! symmetrizes and deduplicates. The seed below is chosen so the
 //! resulting graph has exactly the paper's 157 undirected edges.
 
+use crate::relic::Par;
 use crate::testutil::Rng;
 
 use super::CsrGraph;
@@ -44,33 +45,79 @@ impl KroneckerParams {
     }
 }
 
-/// Generate a Kronecker graph per `params`.
+/// Minimum edge samples per parallel chunk. Each chunk pays one RNG
+/// jump-ahead (~10⁵ bit ops, see [`Rng::jumped`]) to find its place in
+/// the serial stream, so chunks must hold enough edges (scale+1 draws
+/// each) to amortize it.
+const PAR_GRAIN: usize = 16_384;
+
+/// Draw one R-MAT edge sample: `scale` quadrant picks plus a weight —
+/// exactly `scale + 1` RNG draws, which is what makes the stream
+/// position of any edge index computable for [`kronecker_graph_par`].
+#[inline]
+fn sample_edge(params: &KroneckerParams, rng: &mut Rng) -> (u32, u32, u32) {
+    let (mut u, mut v) = (0u32, 0u32);
+    for _ in 0..params.scale {
+        u <<= 1;
+        v <<= 1;
+        let r = rng.f64();
+        if r < params.a {
+            // top-left: no bits set
+        } else if r < params.a + params.b {
+            v |= 1;
+        } else if r < params.a + params.b + params.c {
+            u |= 1;
+        } else {
+            u |= 1;
+            v |= 1;
+        }
+    }
+    let w = 1 + rng.below(255) as u32;
+    (u, v, w)
+}
+
+/// Generate a Kronecker graph per `params` (serial).
 pub fn kronecker_graph(params: &KroneckerParams) -> CsrGraph {
+    kronecker_graph_par(params, &Par::Serial)
+}
+
+/// [`kronecker_graph`] with edge sampling fork-joined over the SMT pair.
+///
+/// Every edge consumes exactly `scale + 1` RNG draws, so a chunk
+/// starting at edge index `i` seeds its private generator
+/// deterministically from the index — [`Rng::jumped`] fast-forwards the
+/// base seed by `i * (scale + 1)` draws. Each chunk therefore
+/// reproduces its exact slice of the serial stream and the edge list is
+/// **bit-identical to the serial generator's** regardless of how the
+/// range is split (`Par::Serial` is literally the one-chunk case). The
+/// label permutation that follows is O(n) and stays on the main thread.
+pub fn kronecker_graph_par(params: &KroneckerParams, par: &Par) -> CsrGraph {
     let n = 1usize << params.scale;
     let m = n * params.edge_factor as usize;
-    let mut rng = Rng::new(params.seed);
-    let mut edges = Vec::with_capacity(m);
-    for _ in 0..m {
-        let (mut u, mut v) = (0u32, 0u32);
-        for _ in 0..params.scale {
-            u <<= 1;
-            v <<= 1;
-            let r = rng.f64();
-            if r < params.a {
-                // top-left: no bits set
-            } else if r < params.a + params.b {
-                v |= 1;
-            } else if r < params.a + params.b + params.c {
-                u |= 1;
-            } else {
-                u |= 1;
-                v |= 1;
-            }
+    let draws_per_edge = params.scale as u64 + 1;
+    let base = Rng::new(params.seed);
+    let mut chunks = par.chunk_map(0..m, PAR_GRAIN, |sub| {
+        let mut rng = base.jumped(sub.start as u64 * draws_per_edge);
+        let mut out = Vec::with_capacity(sub.len());
+        for _ in sub {
+            out.push(sample_edge(params, &mut rng));
         }
-        let w = 1 + rng.below(255) as u32;
-        edges.push((u, v, w));
-    }
-    // GAP permutes vertex labels so degree doesn't correlate with id.
+        out
+    });
+    let mut edges: Vec<(u32, u32, u32)> = if chunks.len() == 1 {
+        // Single chunk (serial mode or a sub-grain range): take the
+        // buffer as-is instead of copying m edges into a second Vec.
+        chunks.pop().expect("one chunk")
+    } else {
+        let mut edges = Vec::with_capacity(m);
+        for c in chunks {
+            edges.extend(c);
+        }
+        edges
+    };
+    // GAP permutes vertex labels so degree doesn't correlate with id;
+    // resume the serial stream right where edge sampling left it.
+    let mut rng = base.jumped(m as u64 * draws_per_edge);
     let mut perm: Vec<u32> = (0..n as u32).collect();
     rng.shuffle(&mut perm);
     for e in &mut edges {
@@ -118,6 +165,20 @@ mod tests {
     fn generator_is_deterministic() {
         let p = KroneckerParams::gap(6, 8, 42);
         assert_eq!(kronecker_graph(&p), kronecker_graph(&p));
+    }
+
+    #[test]
+    fn parallel_generation_bit_identical_to_serial() {
+        let relic = crate::relic::Relic::new();
+        // Scale 12 × edge factor 16 = 65536 samples: enough to split
+        // into several assistant chunks above PAR_GRAIN; scale 5 is the
+        // single-chunk (sub-grain) degenerate case.
+        for (scale, ef, seed) in [(5u32, 16u32, PAPER_SEED), (12, 16, 7)] {
+            let p = KroneckerParams::gap(scale, ef, seed);
+            let serial = kronecker_graph(&p);
+            let parallel = kronecker_graph_par(&p, &Par::Relic(&relic));
+            assert_eq!(serial, parallel, "scale {scale} ef {ef} seed {seed}");
+        }
     }
 
     #[test]

@@ -32,4 +32,4 @@ pub mod sssp;
 pub mod tc;
 
 pub use csr::CsrGraph;
-pub use kronecker::{kronecker_graph, paper_graph, KroneckerParams};
+pub use kronecker::{kronecker_graph, kronecker_graph_par, paper_graph, KroneckerParams};

@@ -24,7 +24,9 @@
 //!   Pallas graph kernels (`artifacts/*.hlo.txt`).
 //! * [`coordinator`] — the hybrid analytics service: coarse graph
 //!   analytics offloaded to PJRT executables, fine-grained subtasks run
-//!   through Relic, as motivated in the paper's §VI-A.
+//!   through Relic, as motivated in the paper's §VI-A; its
+//!   [`coordinator::Engine`] scales the service across every physical
+//!   core via a [`relic::RelicPool`] of pinned pair-shards.
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results.

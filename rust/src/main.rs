@@ -10,18 +10,27 @@
 //! repro wallclock    wall-clock mode (needs an SMT host for meaning)
 //! repro intra        serial vs pair vs parallel_for per kernel (wall-clock)
 //! repro serve        run the hybrid analytics service demo
+//!                    (--shards N runs the sharded engine; N=0 → auto)
+//! repro pool         pool-scaling sweep: throughput vs shard count,
+//!                    with pool-vs-single-pair checksum verification
+//!                    (--shards 1,2,4 --requests N --reps R)
 //! repro selftest     PJRT artifact round-trip check
 //! ```
 //!
 //! Common options: `--out results` writes figure JSON/text files;
-//! `--iters N` (wallclock); `--artifacts DIR`.
+//! `--iters N` (wallclock); `--artifacts DIR`; `--config FILE` loads
+//! `[pool]` settings for serve/pool (CLI flags override); `--no-pin`
+//! disables CPU pinning.
 
 use std::path::Path;
 
 use relic_smt::bench::{self, figures};
 use relic_smt::bench::ablation;
 use relic_smt::cli::Args;
-use relic_smt::coordinator::{Coordinator, GraphKernel, Request, Router, RouterConfig};
+use relic_smt::config::{PoolSettings, RawConfig};
+use relic_smt::coordinator::{
+    Coordinator, Engine, EngineConfig, GraphKernel, Request, Router, RouterConfig,
+};
 use relic_smt::graph::kronecker::paper_graph;
 use relic_smt::relic::affinity;
 use relic_smt::runtime::{GraphExecutor, Manifest};
@@ -188,17 +197,6 @@ fn run(args: &Args) -> anyhow::Result<()> {
             println!("{}", figures::render_intra(&rows));
         }
         Some("serve") => {
-            let artifacts = args.get("artifacts").unwrap_or("artifacts");
-            let executor = GraphExecutor::new(Path::new(artifacts)).ok();
-            let manifest = Manifest::load(Path::new(artifacts)).ok();
-            if executor.is_none() {
-                println!("(no artifacts at {artifacts}; all requests run natively)");
-            }
-            let router = Router::new(RouterConfig::default(), manifest.as_ref());
-            let mut coord = Coordinator::with_parts(router, executor);
-            let t_warm = std::time::Instant::now();
-            coord.warmup();
-            println!("executable warmup: {:?}", t_warm.elapsed());
             let n_req = args.get_u64("requests", 64) as usize;
             let kernels = GraphKernel::all();
             let requests: Vec<Request> = (0..n_req)
@@ -209,11 +207,60 @@ fn run(args: &Args) -> anyhow::Result<()> {
                     source: (i % 32) as u32,
                 })
                 .collect();
-            let t0 = std::time::Instant::now();
-            let responses = coord.process_batch(requests);
-            let dt = t0.elapsed();
-            println!("processed {} requests in {:?}", responses.len(), dt);
-            println!("{}", coord.report());
+            if let Some(shards_arg) = args.get("shards") {
+                // Sharded engine: one pinned Relic pair per shard, all
+                // requests native (PJRT offload stays on the
+                // single-pair path below).
+                anyhow::ensure!(
+                    shards_arg.is_empty() || shards_arg.parse::<usize>().is_ok(),
+                    "serve --shards takes a single integer (got {shards_arg:?}); \
+                     sweeps belong to `repro pool`"
+                );
+                let settings = pool_settings(args)?;
+                let mut engine = Engine::new(EngineConfig::from_settings(&settings));
+                println!(
+                    "host: {}; engine: {} shards",
+                    affinity::topology_summary(),
+                    engine.shard_count()
+                );
+                let t0 = std::time::Instant::now();
+                let responses = engine.process_batch(requests);
+                let dt = t0.elapsed();
+                println!("processed {} requests in {:?}", responses.len(), dt);
+                println!("{}", engine.report());
+            } else {
+                let artifacts = args.get("artifacts").unwrap_or("artifacts");
+                let executor = GraphExecutor::new(Path::new(artifacts)).ok();
+                let manifest = Manifest::load(Path::new(artifacts)).ok();
+                if executor.is_none() {
+                    println!("(no artifacts at {artifacts}; all requests run natively)");
+                }
+                let router = Router::new(RouterConfig::default(), manifest.as_ref());
+                let mut coord = Coordinator::with_parts(router, executor);
+                let t_warm = std::time::Instant::now();
+                coord.warmup();
+                println!("executable warmup: {:?}", t_warm.elapsed());
+                let t0 = std::time::Instant::now();
+                let responses = coord.process_batch(requests);
+                let dt = t0.elapsed();
+                println!("processed {} requests in {:?}", responses.len(), dt);
+                println!("{}", coord.report());
+            }
+        }
+        Some("pool") => {
+            let settings = pool_settings(args)?;
+            let shard_counts = args.sweep_list("shards", &[1, 2, 4])?;
+            let requests = args.get_u64("requests", 96) as usize;
+            let reps = args.get_u64("reps", 3);
+            println!("host: {}", affinity::topology_summary());
+            let template = EngineConfig::from_settings(&settings);
+            println!(
+                "pool-scaling sweep: shard counts {shard_counts:?}, \
+                 {requests} requests, {reps} reps\n"
+            );
+            let rows = figures::pool_scaling(&template, &shard_counts, requests, reps);
+            println!("{}", figures::render_pool_scaling(&rows));
+            write_out(args, "pool_scaling.json", &figures::pool_rows_to_json(&rows))?;
         }
         Some("selftest") => {
             let artifacts = args.get("artifacts").unwrap_or("artifacts");
@@ -243,11 +290,35 @@ fn run(args: &Args) -> anyhow::Result<()> {
             println!("selftest OK");
         }
         _ => {
-            println!("usage: repro <fig1|fig3|fig4|granularity|ablation|wallclock|intra|serve|selftest> [--options]");
+            println!(
+                "usage: repro <fig1|fig3|fig4|granularity|ablation|wallclock|intra\
+                 |serve|pool|selftest> [--options]"
+            );
             println!("see rust/src/main.rs docs for details");
         }
     }
     Ok(())
+}
+
+/// `[pool]` settings: config file first (`--config PATH`), then CLI
+/// overrides (`--shards N`, `--no-pin`, `--channel-capacity N`,
+/// `--max-batch N`). A `--shards` value that is not a single integer
+/// (the `pool` command's sweep list) leaves the file/default value.
+fn pool_settings(args: &Args) -> anyhow::Result<PoolSettings> {
+    let mut s = match args.get("config") {
+        Some(path) => PoolSettings::from_raw(&RawConfig::load(Path::new(path))?),
+        None => PoolSettings::default(),
+    };
+    if let Some(Ok(n)) = args.get("shards").map(|v| v.parse::<usize>()) {
+        s.shards = n;
+    }
+    if args.flag("no-pin") {
+        s.pin = false;
+    }
+    s.channel_capacity =
+        args.get_u64("channel-capacity", s.channel_capacity as u64).max(1) as usize;
+    s.max_batch = args.get_u64("max-batch", s.max_batch as u64).max(1) as usize;
+    Ok(s)
 }
 
 fn write_out(args: &Args, name: &str, content: &str) -> anyhow::Result<()> {

@@ -108,6 +108,23 @@ impl Histogram {
         self.max()
     }
 
+    /// Fold another histogram into this one (bucket-wise addition) —
+    /// how the pool aggregates shard-local latency histograms into one
+    /// service-level view. Concurrent recording on `other` may be
+    /// partially visible (relaxed snapshot), which is fine for
+    /// reporting.
+    pub fn merge_from(&self, other: &Histogram) {
+        for (mine, theirs) in self.buckets.iter().zip(&other.buckets) {
+            let c = theirs.load(Ordering::Relaxed);
+            if c > 0 {
+                mine.fetch_add(c, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max.fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
     /// p50/p90/p99/max snapshot, formatted for logs.
     pub fn summary(&self, unit: &str) -> String {
         format!(
@@ -164,6 +181,26 @@ mod tests {
         assert!(p99 <= h.max());
         // Log-bucketed: p50 of uniform 100..100_000 is within its 2x bucket.
         assert!((25_000..100_000).contains(&p50), "p50={p50}");
+    }
+
+    #[test]
+    fn merge_combines_shard_histograms() {
+        let (a, b) = (Histogram::new(), Histogram::new());
+        for v in 1..=100u64 {
+            a.record(v);
+        }
+        for v in 1000..=1100u64 {
+            b.record(v);
+        }
+        let agg = Histogram::new();
+        agg.merge_from(&a);
+        agg.merge_from(&b);
+        assert_eq!(agg.count(), a.count() + b.count());
+        assert_eq!(agg.max(), 1100);
+        let expected_mean = (a.mean() * a.count() as f64 + b.mean() * b.count() as f64)
+            / agg.count() as f64;
+        assert!((agg.mean() - expected_mean).abs() < 1e-9);
+        assert!(agg.percentile(0.99) >= agg.percentile(0.5));
     }
 
     #[test]

@@ -51,22 +51,32 @@ pub fn parse_cpulist(s: &str) -> Vec<usize> {
     out
 }
 
+/// Read every online CPU's `thread_siblings_list` from sysfs — the one
+/// raw topology scan shared by [`smt_sibling_pair`] (first pair) and
+/// `relic::pool` (all physical-core pairs). Empty on hosts without the
+/// sysfs topology tree.
+pub fn sibling_lists() -> Vec<String> {
+    let mut out = Vec::new();
+    for cpu in 0..num_cpus() {
+        let path =
+            format!("/sys/devices/system/cpu/cpu{cpu}/topology/thread_siblings_list");
+        if let Ok(text) = fs::read_to_string(&path) {
+            out.push(text);
+        }
+    }
+    out
+}
+
 /// Find a pair of logical CPUs that are SMT siblings of one physical
 /// core, from sysfs. `None` when the host has no SMT (the common case in
 /// CI containers — callers fall back to unpinned threads or the
 /// simulator; see DESIGN.md §2).
 pub fn smt_sibling_pair() -> Option<(usize, usize)> {
-    for cpu in 0..num_cpus() {
-        let path =
-            format!("/sys/devices/system/cpu/cpu{cpu}/topology/thread_siblings_list");
-        if let Ok(text) = fs::read_to_string(&path) {
-            let cpus = parse_cpulist(&text);
-            if cpus.len() >= 2 {
-                return Some((cpus[0], cpus[1]));
-            }
-        }
-    }
-    None
+    sibling_lists()
+        .iter()
+        .map(|text| parse_cpulist(text))
+        .find(|cpus| cpus.len() >= 2)
+        .map(|cpus| (cpus[0], cpus[1]))
 }
 
 /// Describe the host topology for logs/reports.

@@ -19,6 +19,14 @@ use super::wait::WaitPolicy;
 /// Queue capacity used in the paper (§VI-A).
 pub const DEFAULT_QUEUE_CAPACITY: usize = 128;
 
+/// Smallest publish block [`Relic::run_batch`] uses: batches up to this
+/// size are published with a single release store (the PR 1 behavior).
+pub const MIN_BATCH_BLOCK: usize = 32;
+
+/// Largest publish block [`Relic::run_batch`] uses (half the paper's
+/// queue capacity, so one block never monopolizes the queue).
+pub const MAX_BATCH_BLOCK: usize = 64;
+
 /// Spin iterations before a waiting thread starts yielding its
 /// timeslice — a degraded-host escape hatch, unreachable during
 /// µs-scale waits on a real SMT pair.
@@ -233,12 +241,18 @@ impl Relic {
     ///
     /// Tasks are published in blocks through [`SpscQueue::push_many`],
     /// so a batch of N pays one release store (and at most one unpark
-    /// check) per block instead of one per task.
+    /// check) per block instead of one per task. The block size scales
+    /// with the batch (~¼ of it) instead of a fixed constant: batches
+    /// up to [`MIN_BATCH_BLOCK`] publish in a single store, larger ones
+    /// split into a few blocks so the assistant starts draining while
+    /// later blocks are still being published — capped at
+    /// [`MAX_BATCH_BLOCK`] to bound the stack block and stay well under
+    /// the queue capacity.
     pub fn run_batch<F: Fn() + Sync>(&self, tasks: &[F]) {
-        const BLOCK: usize = 32;
-        for chunk in tasks.chunks(BLOCK) {
-            let mut block =
-                [Task { routine: call_ref::<F>, data: std::ptr::null(), arg: 0 }; BLOCK];
+        let block_len = tasks.len().div_ceil(4).clamp(MIN_BATCH_BLOCK, MAX_BATCH_BLOCK);
+        for chunk in tasks.chunks(block_len) {
+            let mut block = [Task { routine: call_ref::<F>, data: std::ptr::null(), arg: 0 };
+                MAX_BATCH_BLOCK];
             for (slot, t) in block.iter_mut().zip(chunk) {
                 slot.data = t as *const F as *const ();
             }
@@ -482,6 +496,27 @@ mod tests {
             .collect();
         relic.run_batch(&tasks);
         assert_eq!(sum.load(Ordering::SeqCst), 199 * 200 / 2);
+    }
+
+    #[test]
+    fn run_batch_block_sizing_covers_all_lengths() {
+        // Lengths straddling the sizing breakpoints: single-store
+        // batches (≤ MIN_BATCH_BLOCK), ~len/4 blocks in between, and
+        // the MAX_BATCH_BLOCK cap (≥ 256).
+        let relic = Relic::new();
+        for n in [0usize, 1, 3, 4, 5, 31, 32, 33, 255, 256, 257, 500] {
+            let sum = AtomicUsize::new(0);
+            let tasks: Vec<_> = (0..n)
+                .map(|i| {
+                    let sum = &sum;
+                    move || {
+                        sum.fetch_add(i + 1, Ordering::SeqCst);
+                    }
+                })
+                .collect();
+            relic.run_batch(&tasks);
+            assert_eq!(sum.load(Ordering::SeqCst), n * (n + 1) / 2, "n={n}");
+        }
     }
 
     #[test]

@@ -20,6 +20,13 @@
 //! serially or across the SMT pair, moving the speedup from "two
 //! requests in parallel" to "one request finishes faster".
 //!
+//! Beyond one core, [`pool`] replicates the paper's pair as the unit of
+//! scheduling: a [`RelicPool`] spawns one pinned shard per physical
+//! core (each shard's main thread owning its own [`Relic`]), with
+//! bounded per-shard admission channels, least-loaded routing, and
+//! backpressure — multi-core scaling without ever widening the SPSC
+//! queue to MPMC.
+//!
 //! ```
 //! use relic_smt::relic::Relic;
 //! use std::sync::atomic::{AtomicU64, Ordering};
@@ -44,12 +51,17 @@
 pub mod affinity;
 mod framework;
 pub mod parallel;
+pub mod pool;
 pub mod scope;
 mod spsc;
 pub mod wait;
 
-pub use framework::{QueueFull, Relic, RelicConfig, RelicStats, DEFAULT_QUEUE_CAPACITY};
+pub use framework::{
+    QueueFull, Relic, RelicConfig, RelicStats, DEFAULT_QUEUE_CAPACITY, MAX_BATCH_BLOCK,
+    MIN_BATCH_BLOCK,
+};
 pub use parallel::{Par, DEFAULT_GRAIN};
+pub use pool::{PoolConfig, PoolSnapshot, RelicPool, ShardPlacement};
 pub use scope::{Scope, MAX_ASSIST_CHUNKS, MAX_CHUNK_SLOTS};
 pub use spsc::SpscQueue;
 pub use wait::WaitPolicy;

@@ -62,6 +62,60 @@ impl Rng {
             xs.swap(i, j);
         }
     }
+
+    /// A clone of this generator fast-forwarded by `steps` draws, in
+    /// O(64² · log steps) bit operations instead of O(steps).
+    ///
+    /// The xorshift64 state transition is linear over GF(2) (the `*`
+    /// output multiplier perturbs each draw, not the state), so
+    /// advancing N draws is applying the N-th power of the 64×64 step
+    /// matrix. This is what lets the Kronecker generator hand each
+    /// chunk of edge indices its exact position in the serial stream —
+    /// parallel generation stays bit-identical to the serial one.
+    pub fn jumped(&self, steps: u64) -> Rng {
+        Rng { state: jump_state(self.state, steps) }
+    }
+}
+
+/// One xorshift64 state transition (the linear part of [`Rng::next_u64`]).
+#[inline]
+fn xorshift_step(mut x: u64) -> u64 {
+    x ^= x >> 12;
+    x ^= x << 25;
+    x ^= x >> 27;
+    x
+}
+
+/// Apply a GF(2) linear map (columns = images of basis vectors) to `x`.
+#[inline]
+fn mat_apply(m: &[u64; 64], mut x: u64) -> u64 {
+    let mut out = 0;
+    while x != 0 {
+        out ^= m[x.trailing_zeros() as usize];
+        x &= x - 1;
+    }
+    out
+}
+
+/// Compose two GF(2) linear maps: `(a ∘ b)(x) = a(b(x))`.
+fn mat_mul(a: &[u64; 64], b: &[u64; 64]) -> [u64; 64] {
+    std::array::from_fn(|i| mat_apply(a, b[i]))
+}
+
+/// State after `steps` xorshift64 transitions, via square-and-multiply
+/// on the step matrix.
+fn jump_state(state: u64, steps: u64) -> u64 {
+    let mut m: [u64; 64] = std::array::from_fn(|i| xorshift_step(1u64 << i));
+    let mut acc: [u64; 64] = std::array::from_fn(|i| 1u64 << i);
+    let mut k = steps;
+    while k != 0 {
+        if k & 1 == 1 {
+            acc = mat_mul(&m, &acc);
+        }
+        m = mat_mul(&m, &m);
+        k >>= 1;
+    }
+    mat_apply(&acc, state)
 }
 
 /// Run `f` over `cases` deterministic random seeds; on panic or `Err`,
@@ -121,6 +175,34 @@ mod tests {
         let mut sorted = xs.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn jumped_matches_sequential_stepping() {
+        for (seed, steps) in [(1u64, 0u64), (7, 1), (7, 2), (42, 63), (42, 1000), (9, 123_457)] {
+            let mut stepped = Rng::new(seed);
+            for _ in 0..steps {
+                stepped.next_u64();
+            }
+            let mut jumped = Rng::new(seed).jumped(steps);
+            for i in 0..16 {
+                assert_eq!(
+                    stepped.next_u64(),
+                    jumped.next_u64(),
+                    "seed {seed} steps {steps} draw {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn jumps_compose_additively() {
+        let base = Rng::new(0xDEAD);
+        let mut once = base.jumped(1500);
+        let mut twice = base.jumped(1000).jumped(500);
+        for _ in 0..8 {
+            assert_eq!(once.next_u64(), twice.next_u64());
+        }
     }
 
     #[test]

@@ -1,0 +1,151 @@
+//! Integration: the sharded engine (`RelicPool` of pair-shards) is
+//! behaviorally equivalent to the single-pair coordinator — same
+//! checksums, complete and ordered responses under backpressure, sane
+//! topology parsing.
+
+use relic_smt::coordinator::{
+    run_native_kernel, Backend, Coordinator, Engine, EngineConfig, GraphKernel, Request,
+    RequestResult, Router, RouterConfig,
+};
+use relic_smt::graph::kronecker::paper_graph;
+use relic_smt::relic::pool::{
+    discover_placements, fallback_pairs, sibling_pairs_from_lists, PoolConfig,
+};
+
+/// Unpinned engine: CI containers may refuse affinity syscalls.
+fn engine(shards: usize, channel_capacity: usize, max_batch: usize) -> Engine {
+    Engine::new(EngineConfig {
+        pool: PoolConfig {
+            shards: Some(shards),
+            pin: false,
+            channel_capacity,
+            max_batch,
+        },
+        ..EngineConfig::default()
+    })
+}
+
+fn req(id: u64, kernel: GraphKernel, source: u32) -> Request {
+    Request { id, kernel, graph: paper_graph(), source }
+}
+
+/// Mixed batch cycling every kernel over several sources.
+fn mixed_batch(n: usize) -> Vec<Request> {
+    let kernels = GraphKernel::all();
+    (0..n)
+        .map(|i| req(i as u64, kernels[i % kernels.len()], (i % 8) as u32))
+        .collect()
+}
+
+#[test]
+fn pool_checksums_equal_single_pair_for_every_kernel() {
+    let g = paper_graph();
+    let n = 36; // 6 per kernel, mixed sources
+    let expected: Vec<u64> = mixed_batch(n)
+        .iter()
+        .map(|r| run_native_kernel(r.kernel, &g, r.source))
+        .collect();
+    for shards in [1usize, 2, 3] {
+        let mut e = engine(shards, 64, 32);
+        let responses = e.process_batch(mixed_batch(n));
+        assert_eq!(responses.len(), n);
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.id, i as u64, "submission order at shards={shards}");
+            assert_eq!(r.backend, Backend::Native);
+            assert_eq!(
+                r.result,
+                RequestResult::Native(expected[i]),
+                "shards={shards} request {i}: pool checksum != single-pair"
+            );
+        }
+    }
+}
+
+#[test]
+fn one_shard_degenerates_to_single_pair_coordinator() {
+    let mut single =
+        Coordinator::with_parts(Router::new(RouterConfig::default(), None), None);
+    let want = single.process_batch(mixed_batch(13));
+    let mut e = engine(1, 64, 32);
+    let got = e.process_batch(mixed_batch(13));
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.id, w.id);
+        assert_eq!(g.backend, w.backend);
+        assert_eq!(g.result, w.result);
+    }
+    // All work landed on the one shard, every request natively served.
+    let agg = e.aggregated_metrics();
+    assert_eq!(agg.native_requests.get(), 13);
+    let snap = e.pool_snapshot();
+    assert_eq!(snap.shards, 1);
+    assert_eq!(snap.occupancy, vec![13]);
+}
+
+#[test]
+fn backpressure_drops_nothing_and_preserves_order() {
+    // Capacity-1 channel + 1-request batches force admission stalls.
+    let g = paper_graph();
+    let mut e = engine(1, 1, 1);
+    let n = 48;
+    let expected: Vec<u64> = mixed_batch(n)
+        .iter()
+        .map(|r| run_native_kernel(r.kernel, &g, r.source))
+        .collect();
+    for r in mixed_batch(n) {
+        e.submit(r);
+    }
+    let responses = e.drain();
+    assert_eq!(responses.len(), n, "no request dropped under backpressure");
+    for (i, r) in responses.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "no reordering under backpressure");
+        assert_eq!(r.result, RequestResult::Native(expected[i]));
+    }
+    let snap = e.pool_snapshot();
+    assert_eq!(snap.dispatched, n as u64);
+    assert!(
+        snap.backpressure_stalls > 0,
+        "a capacity-1 channel fed 48 µs-scale kernels must stall at least once"
+    );
+}
+
+#[test]
+fn repeated_submit_drain_cycles_accumulate_metrics() {
+    let mut e = engine(2, 64, 32);
+    for round in 0..5u64 {
+        for i in 0..6u64 {
+            e.submit(req(round * 6 + i, GraphKernel::Bfs, 0));
+        }
+        let responses = e.drain();
+        assert_eq!(responses.len(), 6);
+    }
+    let agg = e.aggregated_metrics();
+    assert_eq!(agg.native_requests.get(), 30);
+    assert_eq!(agg.native_latency.count(), 30, "one latency sample per request");
+    assert_eq!(e.pool_snapshot().occupancy.iter().sum::<u64>(), 30);
+}
+
+#[test]
+fn topology_fixtures_parse_like_sysfs() {
+    // i7-8700-style 6-core/12-thread layout: siblings (i, i+6), each
+    // pair listed from both CPUs.
+    let lists: Vec<String> = (0..12)
+        .map(|cpu| format!("{},{}\n", cpu % 6, cpu % 6 + 6))
+        .collect();
+    let pairs = sibling_pairs_from_lists(lists.iter().map(String::as_str));
+    assert_eq!(pairs, (0..6).map(|i| (i, i + 6)).collect::<Vec<_>>());
+
+    // Adjacent numbering in range form ("0-1"), as some hosts report.
+    let pairs = sibling_pairs_from_lists(["0-1", "0-1", "2-3", "2-3"]);
+    assert_eq!(pairs, vec![(0, 1), (2, 3)]);
+
+    // SMT off: every list is a singleton — fallback pairing kicks in.
+    let none = sibling_pairs_from_lists(["0", "1", "2", "3"]);
+    assert!(none.is_empty());
+    assert_eq!(fallback_pairs(4), vec![(0, 1), (2, 3)]);
+
+    // Placement honors explicit shard counts even without topology.
+    let placements = discover_placements(Some(2), false);
+    assert_eq!(placements.len(), 2);
+    assert!(placements.iter().all(|p| p.main_cpu.is_none()));
+}
