@@ -111,8 +111,12 @@ fn validate(artifacts: &str) -> anyhow::Result<()> {
     // SSSP distances.
     let pjrt_sssp =
         exec.execute("sssp", n, &[dense::weights_inf(&g), dense::one_hot(n, 0)])?;
-    let native_sssp =
-        relic_smt::graph::sssp::delta_stepping(&g, 0, relic_smt::graph::sssp::DEFAULT_DELTA, &mut NoProbe);
+    let native_sssp = relic_smt::graph::sssp::delta_stepping(
+        &g,
+        0,
+        relic_smt::graph::sssp::DEFAULT_DELTA,
+        &mut NoProbe,
+    );
     for (v, (p, nn)) in pjrt_sssp.iter().zip(&native_sssp).enumerate() {
         let p = if p.is_infinite() { u32::MAX } else { *p as u32 };
         anyhow::ensure!(p == *nn, "sssp diverges at vertex {v}: {p} vs {nn}");

@@ -17,7 +17,8 @@ use relic_smt::relic::Relic;
 fn documents(n: usize) -> Vec<Vec<u8>> {
     (0..n)
         .map(|i| {
-            let widget = String::from_utf8_lossy(json::WIDGET).replace("500", &format!("{}", 100 + (i % 900)));
+            let widget = String::from_utf8_lossy(json::WIDGET)
+                .replace("500", &format!("{}", 100 + (i % 900)));
             widget.into_bytes()
         })
         .collect()

@@ -22,7 +22,7 @@ use relic_smt::bench::figures;
 use relic_smt::bench::measure;
 use relic_smt::cli::Args;
 use relic_smt::json;
-use relic_smt::relic::{affinity, Par, Relic, RelicConfig};
+use relic_smt::relic::{affinity, Par, Relic, RelicConfig, Schedule};
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
@@ -45,8 +45,10 @@ fn main() {
     // The measurement protocol lives in figures::intra_kernel (shared
     // with `repro intra`); it also asserts every parallel checksum
     // equals its serial one, so this doubles as a correctness gate.
+    // Static is this bench's subject (PR 1's split); the schedule
+    // ablation lives in `cargo bench --bench schedule`.
     common::section("per-kernel: serial vs pair vs parallel_for");
-    let rows = figures::intra_kernel(&relic, iters, warmup);
+    let rows = figures::intra_kernel(&relic, Schedule::Static, iters, warmup);
     print!("{}", figures::render_intra(&rows));
 
     common::section("json document-batch splitting (8 widgets/iteration)");
@@ -74,9 +76,5 @@ fn main() {
         serial.mean_ns / batched.mean_ns
     );
 
-    let stats = relic.stats();
-    println!(
-        "\nrelic: {} tasks submitted, {} completed, {} queue-full fallbacks",
-        stats.submitted, stats.completed, stats.queue_full_events
-    );
+    println!("\nrelic: {}", relic.stats().report());
 }

@@ -1,0 +1,99 @@
+//! Schedule ablation: Static vs Dynamic vs EdgeBalanced chunk
+//! assignment for every GAP kernel on a *skewed* Kronecker graph — the
+//! input class where PR 1's static split load-imbalances (the thread
+//! that draws the hub vertices finishes last while its sibling idles).
+//!
+//! Every parallel measurement first asserts its checksum equals the
+//! serial kernel's, so the run doubles as a determinism gate for all
+//! three schedules on a non-toy graph.
+//!
+//! Run: `cargo bench --bench schedule
+//!       [-- --iters N --warmup N --scale S --edge-factor K --seed X]`
+//! Meaningful speedups need a host with an SMT sibling pair; expected
+//! there: Dynamic and EdgeBalanced beat Static on at least tc and bc
+//! (the hub-dominated kernels) — record the table in EXPERIMENTS.md
+//! §Scheduling.
+
+mod common;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use relic_smt::bench::measure;
+use relic_smt::cli::Args;
+use relic_smt::coordinator::{run_native_kernel, run_native_kernel_par, GraphKernel};
+use relic_smt::graph::kronecker::{kronecker_graph, KroneckerParams};
+use relic_smt::relic::{affinity, Par, Relic, RelicConfig, Schedule};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let iters = args.get_u64("iters", 200);
+    let warmup = args.get_u64("warmup", 20);
+    let scale = args.get_u64("scale", 10) as u32;
+    let edge_factor = args.get_u64("edge-factor", 8) as u32;
+    let seed = args.get_u64("seed", 7);
+
+    println!("host: {}", affinity::topology_summary());
+    let pair = affinity::smt_sibling_pair();
+    if pair.is_none() {
+        println!("WARNING: no SMT siblings — speedups below are not meaningful on this host.");
+    }
+    if let Some((main_cpu, _)) = pair {
+        affinity::pin_to_cpu(main_cpu);
+    }
+    let relic = Relic::with_config(RelicConfig {
+        assistant_cpu: pair.map(|p| p.1),
+        ..Default::default()
+    });
+
+    let g = kronecker_graph(&KroneckerParams::gap(scale, edge_factor, seed));
+    let n = g.num_vertices();
+    let avg = g.num_directed_edges() as f64 / n.max(1) as f64;
+    let max_deg = (0..n as u32).map(|v| g.degree(v)).max().unwrap_or(0);
+    println!(
+        "graph: scale {scale}, {} vertices, {} undirected edges, \
+         max degree {} ({:.1}x the average {:.1})",
+        n,
+        g.num_edges(),
+        max_deg,
+        max_deg as f64 / avg.max(1e-9),
+        avg
+    );
+
+    common::section("per-kernel schedule ablation (speedup vs serial)");
+    println!(
+        "{:<8}{:>12}{:>10}{:>10}{:>15}",
+        "kernel", "serial µs", "static", "dynamic", "edge-balanced"
+    );
+    let sink = AtomicU64::new(0);
+    for kernel in GraphKernel::all() {
+        let want = run_native_kernel(kernel, &g, 0);
+        let serial = measure(iters, warmup, || {
+            sink.fetch_add(run_native_kernel(kernel, &g, 0), Ordering::Relaxed);
+        });
+        let mut speedups = [0.0f64; 3];
+        for (si, schedule) in Schedule::all().into_iter().enumerate() {
+            let par = Par::Relic(&relic).with_schedule(schedule);
+            assert_eq!(
+                run_native_kernel_par(kernel, &g, 0, &par),
+                want,
+                "{kernel:?} checksum diverges from serial under {}",
+                schedule.name()
+            );
+            let timed = measure(iters, warmup, || {
+                sink.fetch_add(run_native_kernel_par(kernel, &g, 0, &par), Ordering::Relaxed);
+            });
+            speedups[si] = serial.mean_ns / timed.mean_ns;
+        }
+        println!(
+            "{:<8}{:>12.2}{:>9.3}x{:>9.3}x{:>14.3}x",
+            format!("{kernel:?}").to_lowercase(),
+            serial.mean_ns / 1000.0,
+            speedups[0],
+            speedups[1],
+            speedups[2]
+        );
+    }
+    std::hint::black_box(sink.load(Ordering::Relaxed));
+
+    println!("\nrelic: {}", relic.stats().report());
+}

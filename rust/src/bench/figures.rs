@@ -235,21 +235,29 @@ pub struct IntraRow {
 
 /// The intra-kernel ablation: serial vs `pair` vs `parallel_for` for
 /// every workload, on `relic` (pin the main thread and the assistant to
-/// an SMT sibling pair first for meaningful numbers). Also asserts the
-/// parallel checksums equal the serial ones — the run doubles as an
-/// end-to-end determinism check.
-pub fn intra_kernel(relic: &crate::relic::Relic, iters: u64, warmup: u64) -> Vec<IntraRow> {
+/// an SMT sibling pair first for meaningful numbers). The fork-join
+/// loops run under `schedule` (`repro intra --schedule dynamic`
+/// selects); also asserts the parallel checksums equal the serial ones
+/// — the run doubles as an end-to-end determinism check per schedule.
+pub fn intra_kernel(
+    relic: &crate::relic::Relic,
+    schedule: crate::relic::Schedule,
+    iters: u64,
+    warmup: u64,
+) -> Vec<IntraRow> {
     use crate::relic::Par;
     use std::sync::atomic::{AtomicU64, Ordering};
 
+    let par = Par::Relic(relic).with_schedule(schedule);
     let mut rows = Vec::new();
     for w in Workload::all() {
         let serial_sum = w.run_native();
         assert_eq!(
-            w.run_native_par(&Par::Relic(relic)),
+            w.run_native_par(&par),
             serial_sum,
-            "{}: parallel checksum diverges from serial",
-            w.name
+            "{}: parallel checksum diverges from serial under {}",
+            w.name,
+            schedule.name()
         );
         let sink = AtomicU64::new(0);
         let task = || {
@@ -263,7 +271,6 @@ pub fn intra_kernel(relic: &crate::relic::Relic, iters: u64, warmup: u64) -> Vec
             task();
         });
         let paired = super::harness::measure(iters, warmup, || relic.pair(&task, &task));
-        let par = Par::Relic(relic);
         let pfor = super::harness::measure(iters, warmup, || {
             sink.fetch_add(w.run_native_par(&par), Ordering::Relaxed);
         });
@@ -587,17 +594,23 @@ mod tests {
     #[test]
     fn intra_kernel_rows_cover_all_and_verify_checksums() {
         // Tiny iteration counts: this checks plumbing + the built-in
-        // checksum assertion, not timing quality.
+        // checksum assertion (for every schedule), not timing quality.
         let relic = crate::relic::Relic::new();
-        let rows = intra_kernel(&relic, 3, 1);
-        assert_eq!(rows.len(), KERNEL_NAMES.len());
-        for r in &rows {
-            assert!(r.serial_ns > 0.0, "{}", r.kernel);
-            assert!(r.pair_speedup > 0.0 && r.parallel_for_speedup > 0.0, "{}", r.kernel);
-        }
-        let s = render_intra(&rows);
-        for k in KERNEL_NAMES {
-            assert!(s.contains(k), "render missing {k}");
+        for schedule in crate::relic::Schedule::all() {
+            let rows = intra_kernel(&relic, schedule, 3, 1);
+            assert_eq!(rows.len(), KERNEL_NAMES.len());
+            for r in &rows {
+                assert!(r.serial_ns > 0.0, "{} ({schedule})", r.kernel);
+                assert!(
+                    r.pair_speedup > 0.0 && r.parallel_for_speedup > 0.0,
+                    "{} ({schedule})",
+                    r.kernel
+                );
+            }
+            let s = render_intra(&rows);
+            for k in KERNEL_NAMES {
+                assert!(s.contains(k), "render missing {k}");
+            }
         }
     }
 

@@ -49,8 +49,9 @@ pub fn grouped_bars(title: &str, cells: &[Cell]) -> String {
     let y_of = |v: f64| MARGIN_TOP + PLOT_H * (1.0 - v / max_v);
 
     let mut svg = format!(
-        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{width:.0}" height="{height:.0}" font-family="sans-serif" font-size="11">"#
+        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{width:.0}" height="{height:.0}" "#
     );
+    svg += r#"font-family="sans-serif" font-size="11">"#;
     svg += &format!(
         r#"<text x="{:.0}" y="16" font-size="13" font-weight="bold">{}</text>"#,
         MARGIN_L,
@@ -83,8 +84,11 @@ pub fn grouped_bars(title: &str, cells: &[Cell]) -> String {
                 let h = MARGIN_TOP + PLOT_H - y;
                 let color = COLORS[ri % COLORS.len()];
                 svg += &format!(
-                    r#"<rect x="{x:.1}" y="{y:.1}" width="{:.1}" height="{h:.1}" fill="{color}"><title>{}/{}: {:.3}</title></rect>"#,
-                    BAR_W - 2.0,
+                    r#"<rect x="{x:.1}" y="{y:.1}" width="{:.1}" height="{h:.1}" fill="{color}">"#,
+                    BAR_W - 2.0
+                );
+                svg += &format!(
+                    r#"<title>{}/{}: {:.3}</title></rect>"#,
                     esc(kernel),
                     esc(rt),
                     c.speedup
@@ -93,9 +97,10 @@ pub fn grouped_bars(title: &str, cells: &[Cell]) -> String {
                 if let Some(p) = c.paper {
                     let py = y_of(p);
                     svg += &format!(
-                        r##"<line x1="{x:.1}" y1="{py:.1}" x2="{:.1}" y2="{py:.1}" stroke="#000" stroke-width="2"/>"##,
+                        r##"<line x1="{x:.1}" y1="{py:.1}" x2="{:.1}" y2="{py:.1}" "##,
                         x + BAR_W - 2.0
                     );
+                    svg += r##"stroke="#000" stroke-width="2"/>"##;
                 }
             }
         }

@@ -207,18 +207,23 @@ mod tests {
     fn parallel_checksums_equal_serial_on_all_workloads() {
         // The acceptance bar for the fork-join layer: every
         // parallelized kernel reproduces its serial checksum on the
-        // paper's 32-node Kronecker input, repeatedly.
+        // paper's 32-node Kronecker input, repeatedly, under every
+        // chunk-assignment schedule.
         let relic = crate::relic::Relic::new();
         for w in Workload::all() {
             let serial = w.run_native();
             assert_eq!(w.run_native_par(&Par::Serial), serial, "{} Par::Serial", w.name);
-            for round in 0..5 {
-                assert_eq!(
-                    w.run_native_par(&Par::Relic(&relic)),
-                    serial,
-                    "{} Par::Relic round {round}",
-                    w.name
-                );
+            for schedule in crate::relic::Schedule::all() {
+                let par = Par::Relic(&relic).with_schedule(schedule);
+                for round in 0..5 {
+                    assert_eq!(
+                        w.run_native_par(&par),
+                        serial,
+                        "{} under {} round {round}",
+                        w.name,
+                        schedule.name()
+                    );
+                }
             }
         }
     }

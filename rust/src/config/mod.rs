@@ -239,6 +239,55 @@ impl PoolSettings {
     }
 }
 
+/// Fork-join runtime configuration (section `[relic]`; defaults mirror
+/// [`crate::relic::RelicConfig`]). Pinning stays a CLI/topology concern,
+/// so only the portable knobs live here.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RelicSettings {
+    /// SPSC queue capacity (paper: 128).
+    pub queue_capacity: usize,
+    /// Default chunk-assignment schedule for `Par::Relic` loops:
+    /// `"static"`, `"dynamic"` or `"edge-balanced"`.
+    pub schedule: crate::relic::Schedule,
+}
+
+impl Default for RelicSettings {
+    fn default() -> Self {
+        RelicSettings {
+            queue_capacity: crate::relic::DEFAULT_QUEUE_CAPACITY,
+            schedule: crate::relic::Schedule::Static,
+        }
+    }
+}
+
+impl RelicSettings {
+    /// Overlay values from a raw config (section `[relic]`). Degenerate
+    /// values are clamped; an unrecognized schedule name keeps the
+    /// default (matching the other sections' lenient overlay style).
+    pub fn from_raw(raw: &RawConfig) -> Self {
+        let d = Self::default();
+        RelicSettings {
+            queue_capacity: raw
+                .get_int("relic.queue_capacity")
+                .map(|v| v.max(1) as usize)
+                .unwrap_or(d.queue_capacity),
+            schedule: raw
+                .get_str("relic.schedule")
+                .and_then(crate::relic::Schedule::parse)
+                .unwrap_or(d.schedule),
+        }
+    }
+
+    /// Materialize as a runtime config (CPU pinning left to the caller).
+    pub fn to_relic_config(&self) -> crate::relic::RelicConfig {
+        crate::relic::RelicConfig {
+            queue_capacity: self.queue_capacity,
+            schedule: self.schedule,
+            ..Default::default()
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -304,6 +353,30 @@ mod tests {
         assert!(s.pin);
         assert_eq!(s.channel_capacity, 1);
         assert_eq!(s.max_batch, 32);
+    }
+
+    #[test]
+    fn relic_settings_overlay_and_materialize() {
+        use crate::relic::Schedule;
+        let d = RelicSettings::default();
+        assert_eq!(d.schedule, Schedule::Static);
+        assert_eq!(d.queue_capacity, crate::relic::DEFAULT_QUEUE_CAPACITY);
+        let raw =
+            RawConfig::parse("[relic]\nschedule = \"dynamic\"\nqueue_capacity = 8\n").unwrap();
+        let s = RelicSettings::from_raw(&raw);
+        assert_eq!(s.schedule, Schedule::Dynamic);
+        assert_eq!(s.queue_capacity, 8);
+        let rc = s.to_relic_config();
+        assert_eq!(rc.schedule, Schedule::Dynamic);
+        assert_eq!(rc.queue_capacity, 8);
+        // Unknown schedule name and degenerate capacity keep/clamp.
+        let raw = RawConfig::parse("[relic]\nschedule = \"nope\"\nqueue_capacity = 0\n").unwrap();
+        let s = RelicSettings::from_raw(&raw);
+        assert_eq!(s.schedule, Schedule::Static);
+        assert_eq!(s.queue_capacity, 1);
+        // Edge-balanced round-trips through its config spelling.
+        let raw = RawConfig::parse("[relic]\nschedule = \"edge-balanced\"\n").unwrap();
+        assert_eq!(RelicSettings::from_raw(&raw).schedule, Schedule::EdgeBalanced);
     }
 
     #[test]

@@ -6,8 +6,9 @@
 //! the benchmark task and [`brandes`] the full exact variant.
 
 use crate::probe::Probe;
-use crate::relic::Par;
+use crate::relic::{Par, Schedule};
 
+use super::csr::balanced_boundary;
 use super::CsrGraph;
 
 /// Minimum per-level vertices per fork-join chunk in the parallel
@@ -103,8 +104,15 @@ pub fn brandes_single_source<P: Probe>(
 /// * the backward dependency pass runs serially in the identical
 ///   reverse visit order — its divisions are *not* order-independent,
 ///   and reassociating them could flip quantized checksums.
+///
+/// Under [`Schedule::EdgeBalanced`] each level's pull chunks are
+/// balanced by the level vertices' degrees (a per-level prefix over one
+/// reused buffer), so a hub on the level no longer strands its whole
+/// neighbor scan in one chunk.
 pub fn brandes_single_source_par(g: &CsrGraph, source: u32, par: &Par) -> Vec<f64> {
     let n = g.num_vertices();
+    let edge_balanced = par.schedule() == Schedule::EdgeBalanced;
+    let mut level_work: Vec<u64> = Vec::new();
     let mut depth = vec![i32::MAX; n];
     let mut order = Vec::with_capacity(n);
     depth[source as usize] = 0;
@@ -137,17 +145,28 @@ pub fn brandes_single_source_par(g: &CsrGraph, source: u32, par: &Par) -> Vec<f6
         }
         if d > 0 {
             let lvl = &order[lvl_start..lvl_end];
+            // Levels that fit one grain take the serial fast path and
+            // never read the prefix — skip building it for them.
+            if edge_balanced && lvl.len() > PAR_GRAIN {
+                g.degree_prefix_into(lvl, &mut level_work);
+            }
             {
                 let (sigma, depth) = (&sigma, &depth);
-                par.map_into(&mut vals[..lvl.len()], PAR_GRAIN, |j| {
-                    let mut s = 0.0;
-                    for &u in g.neighbors(lvl[j]) {
-                        if depth[u as usize] == d - 1 {
-                            s += sigma[u as usize];
+                let level_work = &level_work;
+                par.map_into_by(
+                    &mut vals[..lvl.len()],
+                    PAR_GRAIN,
+                    |i, k| balanced_boundary(level_work, 0, lvl.len(), i, k),
+                    |j| {
+                        let mut s = 0.0;
+                        for &u in g.neighbors(lvl[j]) {
+                            if depth[u as usize] == d - 1 {
+                                s += sigma[u as usize];
+                            }
                         }
-                    }
-                    s
-                });
+                        s
+                    },
+                );
             }
             for (j, &v) in lvl.iter().enumerate() {
                 sigma[v as usize] = vals[j];
@@ -224,9 +243,19 @@ mod tests {
         let relic = Relic::new();
         for source in [0u32, 5, 17, 31] {
             let serial = brandes_single_source(&g, source, &mut NoProbe);
-            for par in [Par::Serial, Par::Relic(&relic)] {
+            for par in [
+                Par::Serial,
+                Par::Relic(&relic),
+                Par::Relic(&relic).with_schedule(Schedule::Dynamic),
+                Par::Relic(&relic).with_schedule(Schedule::EdgeBalanced),
+            ] {
                 let got = brandes_single_source_par(&g, source, &par);
-                assert_eq!(got, serial, "bc par/serial diverge from {source}");
+                assert_eq!(
+                    got,
+                    serial,
+                    "bc {}/serial diverge from {source}",
+                    par.schedule().name()
+                );
             }
         }
     }

@@ -7,8 +7,9 @@
 use std::sync::atomic::{AtomicU32, Ordering};
 
 use crate::probe::Probe;
-use crate::relic::Par;
+use crate::relic::{Par, Schedule};
 
+use super::csr::balanced_boundary;
 use super::CsrGraph;
 
 /// Probe-address base of the depth array.
@@ -62,6 +63,13 @@ pub fn bfs<P: Probe>(g: &CsrGraph, source: u32, probe: &mut P) -> Vec<u32> {
 /// chunk's CAS claims it — so the returned depths are **identical** to
 /// the serial queue BFS for any scheduling (only the intermediate
 /// frontier *order* may differ, which the result does not depend on).
+/// Under [`Schedule::EdgeBalanced`] frontier chunks are balanced by
+/// their vertices' degrees (a per-level prefix over one reused buffer)
+/// so a hub on a multi-chunk frontier no longer serializes the level.
+/// (Frontiers that fit a single grain still take the tiny-range serial
+/// fast path — chunk *count* comes from the vertex count, so a lone
+/// hub on a tiny frontier is not split; the fast path matters more on
+/// the many near-empty levels real BFS runs see.)
 pub fn bfs_par(g: &CsrGraph, source: u32, par: &Par) -> Vec<u32> {
     let n = g.num_vertices();
     if n == 0 {
@@ -69,26 +77,45 @@ pub fn bfs_par(g: &CsrGraph, source: u32, par: &Par) -> Vec<u32> {
     }
     let depth: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(u32::MAX)).collect();
     depth[source as usize].store(0, Ordering::Relaxed);
+    let edge_balanced = par.schedule() == Schedule::EdgeBalanced;
+    let mut frontier_work: Vec<u64> = Vec::new();
     let mut frontier = vec![source];
     let mut level = 0u32;
     while !frontier.is_empty() {
         let next_level = level + 1;
         let f = &frontier;
-        let parts: Vec<Vec<u32>> = par.chunk_map(0..f.len(), PAR_GRAIN, |sub| {
-            let mut local = Vec::new();
-            for i in sub {
-                for &v in g.neighbors(f[i]) {
-                    // Claim unvisited neighbors; exactly one chunk wins.
-                    if depth[v as usize]
-                        .compare_exchange(u32::MAX, next_level, Ordering::Relaxed, Ordering::Relaxed)
-                        .is_ok()
-                    {
-                        local.push(v);
+        // Frontiers that fit one grain take the serial fast path and
+        // never read the prefix — skip building it for them.
+        if edge_balanced && f.len() > PAR_GRAIN {
+            g.degree_prefix_into(f, &mut frontier_work);
+        }
+        let frontier_work = &frontier_work;
+        let parts: Vec<Vec<u32>> = par.chunk_map_by(
+            0..f.len(),
+            PAR_GRAIN,
+            |i, k| balanced_boundary(frontier_work, 0, f.len(), i, k),
+            |sub| {
+                let mut local = Vec::new();
+                for i in sub {
+                    for &v in g.neighbors(f[i]) {
+                        // Claim unvisited neighbors; exactly one chunk
+                        // wins the CAS.
+                        if depth[v as usize]
+                            .compare_exchange(
+                                u32::MAX,
+                                next_level,
+                                Ordering::Relaxed,
+                                Ordering::Relaxed,
+                            )
+                            .is_ok()
+                        {
+                            local.push(v);
+                        }
                     }
                 }
-            }
-            local
-        });
+                local
+            },
+        );
         frontier = parts.into_iter().flatten().collect();
         level = next_level;
     }
@@ -223,9 +250,17 @@ mod tests {
             let g = CsrGraph::from_undirected_edges(n, &edges);
             let src = rng.below(n as u64) as u32;
             let serial = bfs(&g, src, &mut NoProbe);
-            for par in [Par::Serial, Par::Relic(&relic)] {
+            for par in [
+                Par::Serial,
+                Par::Relic(&relic),
+                Par::Relic(&relic).with_schedule(Schedule::Dynamic),
+                Par::Relic(&relic).with_schedule(Schedule::EdgeBalanced),
+            ] {
                 if bfs_par(&g, src, &par) != serial {
-                    return Err(format!("bfs par/serial diverge from {src}"));
+                    return Err(format!(
+                        "bfs {}/serial diverge from {src}",
+                        par.schedule().name()
+                    ));
                 }
             }
             Ok(())

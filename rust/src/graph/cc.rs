@@ -77,6 +77,10 @@ pub fn shiloach_vishkin<P: Probe>(g: &CsrGraph, probe: &mut P) -> Vec<u32> {
 /// component's minimum id (labels start at the vertex id, only ever
 /// decrease, and never leave the component), so the returned labels are
 /// identical to the serial kernel's.
+///
+/// The hook sweep's per-vertex cost is the degree, so under
+/// `Schedule::EdgeBalanced` its chunks bisect the CSR offsets; the
+/// compress sweep is ~O(1) per vertex and keeps uniform chunks.
 pub fn shiloach_vishkin_par(g: &CsrGraph, par: &Par) -> Vec<u32> {
     let n = g.num_vertices();
     let comp: Vec<AtomicU32> = (0..n as u32).map(AtomicU32::new).collect();
@@ -85,7 +89,7 @@ pub fn shiloach_vishkin_par(g: &CsrGraph, par: &Par) -> Vec<u32> {
         // Hook sweep: for every edge (u, v) with comp[u] < comp[v], pull
         // the label of vertex `comp[v]` down toward comp[u]. The scope
         // barrier after the sweep publishes all writes to the next phase.
-        par.for_each_index(0..n, PAR_GRAIN, |u| {
+        par.for_each_index_by(0..n, PAR_GRAIN, |i, k| g.edge_balanced_boundary(0, n, i, k), |u| {
             let cu = comp[u].load(Ordering::Relaxed);
             for &v in g.neighbors(u as u32) {
                 let cv = comp[v as usize].load(Ordering::Relaxed);
@@ -135,7 +139,7 @@ mod tests {
 
     #[test]
     fn parallel_matches_serial_labels() {
-        use crate::relic::Relic;
+        use crate::relic::{Relic, Schedule};
         let relic = Relic::new();
         crate::testutil::check(30, |rng| {
             let n = rng.range(1, 96);
@@ -145,10 +149,18 @@ mod tests {
                 .collect();
             let g = CsrGraph::from_undirected_edges(n, &edges);
             let serial = shiloach_vishkin(&g, &mut NoProbe);
-            for par in [Par::Serial, Par::Relic(&relic)] {
+            for par in [
+                Par::Serial,
+                Par::Relic(&relic),
+                Par::Relic(&relic).with_schedule(Schedule::Dynamic),
+                Par::Relic(&relic).with_schedule(Schedule::EdgeBalanced),
+            ] {
                 let got = shiloach_vishkin_par(&g, &par);
                 if got != serial {
-                    return Err(format!("cc par/serial diverge: {got:?} vs {serial:?}"));
+                    return Err(format!(
+                        "cc {}/serial diverge: {got:?} vs {serial:?}",
+                        par.schedule().name()
+                    ));
                 }
             }
             Ok(())

@@ -25,7 +25,8 @@ impl CsrGraph {
     /// Build from an undirected edge list; self-loops and duplicate edges
     /// are removed, each remaining edge appears in both endpoint lists.
     pub fn from_undirected_edges(n: usize, edges: &[(u32, u32)]) -> Self {
-        Self::from_undirected_weighted(n, &edges.iter().map(|&(u, v)| (u, v, 1)).collect::<Vec<_>>(), false)
+        let weighted: Vec<(u32, u32, u32)> = edges.iter().map(|&(u, v)| (u, v, 1)).collect();
+        Self::from_undirected_weighted(n, &weighted, false)
     }
 
     /// Weighted variant; `keep_weights=false` drops the weight array.
@@ -143,6 +144,113 @@ impl CsrGraph {
     pub fn num_directed_edges(&self) -> usize {
         self.targets.len()
     }
+
+    /// Start vertex of chunk `i` of `k` over the vertex range `lo..hi`,
+    /// bisecting the offsets array so every chunk carries ~equal work —
+    /// a vertex's work being its degree plus one (the `+1` keeps
+    /// edge-free stretches splittable instead of collapsing into one
+    /// chunk). Monotone in `i`, with `i == 0 → lo` and `i >= k → hi`,
+    /// and a pure function of the graph and its arguments — the
+    /// edge-balanced schedules stay deterministic by construction.
+    ///
+    /// This is the degree-aware boundary function the
+    /// [`Schedule::EdgeBalanced`](crate::relic::Schedule) kernel loops
+    /// feed to [`Par::map_into_by`](crate::relic::Par::map_into_by) and
+    /// friends: on skewed (power-law) graphs a uniform vertex split
+    /// strands the hub vertices' edges in one chunk, while this one
+    /// narrows chunks around the hubs.
+    pub fn edge_balanced_boundary(&self, lo: usize, hi: usize, i: usize, k: usize) -> usize {
+        debug_assert!(lo <= hi && hi < self.offsets.len());
+        if i == 0 || lo >= hi || k == 0 {
+            return lo.min(hi);
+        }
+        if i >= k {
+            return hi;
+        }
+        // Cumulative work of the vertices in `lo..v`: strictly
+        // increasing in v, so the bisection is well-defined.
+        let base = self.offsets[lo] as u64;
+        bisect_share(|v| (self.offsets[v] as u64 - base) + (v - lo) as u64, lo, hi, i, k)
+    }
+
+    /// Fill `buf` with the cumulative degree prefix of a worklist
+    /// (`buf[j]` = Σ of `degree + 1` over `items[..j]`), the weight
+    /// array the frontier loops (bfs/sssp waves, bc levels) feed to
+    /// [`balanced_boundary`]. The `+1` per item keeps zero-degree
+    /// stretches splittable. Reuses `buf`'s capacity across calls.
+    pub fn degree_prefix_into(&self, items: &[u32], buf: &mut Vec<u64>) {
+        buf.clear();
+        buf.reserve(items.len() + 1);
+        buf.push(0);
+        let mut total = 0u64;
+        for &v in items {
+            total += self.degree(v) as u64 + 1;
+            buf.push(total);
+        }
+    }
+
+    /// Cumulative triangle-counting work, for feeding
+    /// [`balanced_boundary`]: entry `u + 1` accumulates, over vertices
+    /// `<= u`, one unit per vertex plus the merge-intersection length
+    /// `deg(u) + deg(v)` of every rank-ordered neighbor `v > u` (the
+    /// wedge scan `tc` actually performs). Unlike plain degrees, this
+    /// captures that a hub's intersections also walk its *neighbors'*
+    /// lists.
+    pub fn cumulative_wedge_work(&self) -> Vec<u64> {
+        let n = self.num_vertices();
+        let mut cum = Vec::with_capacity(n + 1);
+        cum.push(0u64);
+        let mut total = 0u64;
+        for u in 0..n as u32 {
+            let du = self.degree(u) as u64;
+            let mut work = 1u64;
+            for &v in self.neighbors(u) {
+                if v > u {
+                    work += du + self.degree(v) as u64;
+                }
+            }
+            total += work;
+            cum.push(total);
+        }
+        cum
+    }
+}
+
+/// Start index of chunk `i` of `k` over `lo..hi` for an explicit
+/// cumulative-work prefix (`cum[j]` = total work of items `< j`, so
+/// `cum.len()` must exceed `hi`): the first index whose cumulative work
+/// reaches the `i/k`-th share. Monotone in `i`, `i == 0 → lo`,
+/// `i >= k → hi`. The frontier loops (bfs/sssp levels, bc's per-level
+/// sigma pull, tc's wedge-balanced reduce) build their prefix over the
+/// current worklist and pass this as the boundary function.
+pub fn balanced_boundary(cum: &[u64], lo: usize, hi: usize, i: usize, k: usize) -> usize {
+    if i == 0 || lo >= hi || k == 0 {
+        return lo.min(hi);
+    }
+    if i >= k {
+        return hi;
+    }
+    debug_assert!(hi < cum.len());
+    bisect_share(|v| cum[v] - cum[lo], lo, hi, i, k)
+}
+
+/// Shared core of the boundary functions: the first index in `lo..=hi`
+/// whose cumulative `work` (monotone, `work(lo) == 0`) reaches the
+/// `i/k`-th share of `work(hi)`. Callers handle the `i == 0` /
+/// `i >= k` / empty-range early-outs.
+fn bisect_share(work: impl Fn(usize) -> u64, lo: usize, hi: usize, i: usize, k: usize) -> usize {
+    let total = work(hi);
+    let target = ((total as u128 * i as u128) / k as u128) as u64;
+    let (mut a, mut b) = (lo, hi);
+    while a < b {
+        let mid = (a + b) / 2;
+        if work(mid) < target {
+            a = mid + 1;
+        } else {
+            b = mid;
+        }
+    }
+    a
 }
 
 #[cfg(test)]
@@ -191,6 +299,105 @@ mod tests {
         assert!(g.is_weighted());
         let n1: Vec<_> = g.neighbors_weighted(1).collect();
         assert_eq!(n1, vec![(0, 7), (2, 3)]);
+    }
+
+    #[test]
+    fn edge_balanced_boundaries_cover_and_stay_monotone() {
+        crate::testutil::check(40, |rng| {
+            let n = rng.range(1, 60);
+            let m = rng.range(0, 4 * n);
+            let edges: Vec<(u32, u32)> = (0..m)
+                .map(|_| (rng.below(n as u64) as u32, rng.below(n as u64) as u32))
+                .collect();
+            let g = CsrGraph::from_undirected_edges(n, &edges);
+            for k in [1usize, 2, 5, 9] {
+                let mut prev = 0usize;
+                if g.edge_balanced_boundary(0, n, 0, k) != 0 {
+                    return Err("boundary 0 must be the range start".into());
+                }
+                if g.edge_balanced_boundary(0, n, k, k) != n {
+                    return Err("boundary k must be the range end".into());
+                }
+                for i in 0..=k {
+                    let b = g.edge_balanced_boundary(0, n, i, k);
+                    if b < prev || b > n {
+                        return Err(format!("non-monotone boundary {b} at i={i} k={k}"));
+                    }
+                    prev = b;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn edge_balanced_narrows_chunks_around_hubs() {
+        // Star graph: vertex 0 holds half of all directed edges, so the
+        // first of two balanced chunks must stop well before n/2.
+        let n = 64u32;
+        let edges: Vec<(u32, u32)> = (1..n).map(|v| (0, v)).collect();
+        let g = CsrGraph::from_undirected_edges(n as usize, &edges);
+        let mid = g.edge_balanced_boundary(0, n as usize, 1, 2);
+        // Uniform splitting would put the boundary at 32; edge work
+        // (63 hub edges + the per-vertex unit) pulls it down to ~17.
+        assert!(
+            mid < n as usize / 2,
+            "hub chunk must be narrower than uniform, got boundary {mid} of {n}"
+        );
+    }
+
+    #[test]
+    fn balanced_boundary_prefix_properties() {
+        // Quadratic weights: later items heavier, boundaries must lean
+        // left; plus coverage/monotonicity over the whole range.
+        let n = 100usize;
+        let mut cum = vec![0u64];
+        for i in 0..n {
+            cum.push(cum[i] + 1 + (i as u64) * (i as u64));
+        }
+        for k in [1usize, 3, 7] {
+            assert_eq!(balanced_boundary(&cum, 0, n, 0, k), 0);
+            assert_eq!(balanced_boundary(&cum, 0, n, k, k), n);
+            let mut prev = 0;
+            for i in 0..=k {
+                let b = balanced_boundary(&cum, 0, n, i, k);
+                assert!(b >= prev && b <= n, "i={i} k={k} b={b}");
+                prev = b;
+            }
+        }
+        // Half the quadratic mass sits past ~n/2^(1/3) ≈ 79.
+        let half = balanced_boundary(&cum, 0, n, 1, 2);
+        assert!(half > n / 2, "quadratic weights must push the midpoint right, got {half}");
+        // Zero-weight degenerate: everything lands in the last chunk,
+        // but boundaries stay ordered and in range.
+        let flat = vec![0u64; n + 1];
+        for i in 0..=4 {
+            let b = balanced_boundary(&flat, 0, n, i, 4);
+            assert!(b <= n);
+        }
+    }
+
+    #[test]
+    fn degree_prefix_reuses_buffer_and_counts_degrees() {
+        let g = diamond();
+        let mut buf = vec![99u64; 8]; // stale content must be discarded
+        g.degree_prefix_into(&[1, 0, 3], &mut buf);
+        // Degrees: 1 → 3, 0 → 2, 3 → 2; +1 each.
+        assert_eq!(buf, vec![0, 4, 7, 10]);
+        g.degree_prefix_into(&[], &mut buf);
+        assert_eq!(buf, vec![0]);
+    }
+
+    #[test]
+    fn cumulative_wedge_work_is_monotone_and_counts_wedges() {
+        let g = diamond();
+        let cum = g.cumulative_wedge_work();
+        assert_eq!(cum.len(), g.num_vertices() + 1);
+        assert_eq!(cum[0], 0);
+        assert!(cum.windows(2).all(|w| w[0] < w[1]), "strictly increasing: {cum:?}");
+        // An edgeless graph still accrues one unit per vertex.
+        let empty = CsrGraph::from_undirected_edges(5, &[]);
+        assert_eq!(empty.cumulative_wedge_work(), vec![0, 1, 2, 3, 4, 5]);
     }
 
     #[test]

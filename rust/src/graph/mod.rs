@@ -31,5 +31,5 @@ pub mod pr;
 pub mod sssp;
 pub mod tc;
 
-pub use csr::CsrGraph;
+pub use csr::{balanced_boundary, CsrGraph};
 pub use kronecker::{kronecker_graph, kronecker_graph_par, paper_graph, KroneckerParams};

@@ -76,13 +76,17 @@ pub fn pagerank<P: Probe>(
 /// pair (`Par::Relic`) — the paper's fine-grained scenario moved inside
 /// one request.
 ///
-/// Produces **bitwise-identical** scores to the serial kernel: the
-/// per-vertex neighbor sums run in the same order (chunking only
-/// partitions the outer loop), the pull phase writes a separate buffer
-/// (so the parallel version is the same Jacobi step the serial kernel
-/// computes — in-place updates never feed the same iteration), and the
-/// convergence error is accumulated serially in vertex order so no
-/// floating-point addition is reassociated.
+/// Produces **bitwise-identical** scores to the serial kernel under
+/// every [`crate::relic::Schedule`]: the per-vertex neighbor sums run
+/// in the same order (chunking only partitions the outer loop), the
+/// pull phase writes a separate buffer (so the parallel version is the
+/// same Jacobi step the serial kernel computes — in-place updates never
+/// feed the same iteration), and the convergence error is accumulated
+/// serially in vertex order so no floating-point addition is
+/// reassociated. Under `Schedule::EdgeBalanced` the pull loop's chunk
+/// boundaries bisect the CSR offsets so each chunk pulls ~the same
+/// number of edges — the scatter loop is O(1) per vertex and keeps
+/// uniform chunks.
 pub fn pagerank_par(g: &CsrGraph, max_iters: u32, tolerance: f64, par: &Par) -> Vec<f64> {
     let n = g.num_vertices();
     if n == 0 {
@@ -106,16 +110,23 @@ pub fn pagerank_par(g: &CsrGraph, max_iters: u32, tolerance: f64, par: &Par) -> 
                 }
             });
         }
-        // Pull phase into the next buffer (disjoint writes per vertex).
+        // Pull phase into the next buffer (disjoint writes per vertex);
+        // per-vertex cost is the degree, so the edge-balanced schedule
+        // bisects the offsets array instead of counting vertices.
         {
             let outgoing = &outgoing;
-            par.map_into(&mut next, PAR_GRAIN, |u| {
-                let mut incoming = 0.0;
-                for &v in g.neighbors(u as u32) {
-                    incoming += outgoing[v as usize];
-                }
-                base + DAMPING * incoming
-            });
+            par.map_into_by(
+                &mut next,
+                PAR_GRAIN,
+                |i, k| g.edge_balanced_boundary(0, n, i, k),
+                |u| {
+                    let mut incoming = 0.0;
+                    for &v in g.neighbors(u as u32) {
+                        incoming += outgoing[v as usize];
+                    }
+                    base + DAMPING * incoming
+                },
+            );
         }
         // Convergence error: serial, in vertex order — the identical
         // float-add sequence as the serial kernel's accumulation.
@@ -169,7 +180,7 @@ mod tests {
 
     #[test]
     fn parallel_matches_serial_bitwise() {
-        use crate::relic::Relic;
+        use crate::relic::{Relic, Schedule};
         let relic = Relic::new();
         crate::testutil::check(20, |rng| {
             let n = rng.range(1, 80);
@@ -179,10 +190,18 @@ mod tests {
                 .collect();
             let g = CsrGraph::from_undirected_edges(n, &edges);
             let serial = pagerank(&g, MAX_ITERS, TOLERANCE, &mut NoProbe);
-            for par in [Par::Serial, Par::Relic(&relic)] {
+            for par in [
+                Par::Serial,
+                Par::Relic(&relic),
+                Par::Relic(&relic).with_schedule(Schedule::Dynamic),
+                Par::Relic(&relic).with_schedule(Schedule::EdgeBalanced),
+            ] {
                 let got = pagerank_par(&g, MAX_ITERS, TOLERANCE, &par);
                 if got != serial {
-                    return Err(format!("pr par/serial diverge on n={n} m={m}"));
+                    return Err(format!(
+                        "pr {}/serial diverge on n={n} m={m}",
+                        par.schedule().name()
+                    ));
                 }
             }
             Ok(())

@@ -7,8 +7,9 @@
 use std::sync::atomic::{AtomicU32, Ordering};
 
 use crate::probe::Probe;
-use crate::relic::Par;
+use crate::relic::{Par, Schedule};
 
+use super::csr::balanced_boundary;
 use super::CsrGraph;
 
 const DIST_BASE: u64 = 0x5500_0000;
@@ -75,7 +76,8 @@ pub fn delta_stepping<P: Probe>(
                         probe.store(BUCKET_BASE + frontier.len() as u64 * 4);
                     } else {
                         buckets[b].push(v);
-                        probe.store(BUCKET_BASE + (b as u64) * 0x1000 + buckets[b].len() as u64 * 4);
+                        let slot = (b as u64) * 0x1000 + buckets[b].len() as u64 * 4;
+                        probe.store(BUCKET_BASE + slot);
                     }
                 }
             }
@@ -93,13 +95,17 @@ pub fn delta_stepping<P: Probe>(
 /// only decrease and every bucket still drains to fixpoint before the
 /// next one starts, so the result is the exact shortest-distance vector
 /// — identical to the serial kernel (which the Dijkstra oracle pins
-/// down) for any scheduling.
+/// down) for any scheduling. Under [`Schedule::EdgeBalanced`] wave
+/// chunks are balanced by their entries' degrees (a per-wave prefix
+/// over one reused buffer).
 pub fn delta_stepping_par(g: &CsrGraph, source: u32, delta: u32, par: &Par) -> Vec<u32> {
     assert!(g.is_weighted(), "SSSP requires a weighted graph");
     assert!(delta > 0);
     let n = g.num_vertices();
     let dist: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(u32::MAX)).collect();
     dist[source as usize].store(0, Ordering::Relaxed);
+    let edge_balanced = par.schedule() == Schedule::EdgeBalanced;
+    let mut wave_work: Vec<u64> = Vec::new();
     let mut buckets: Vec<Vec<u32>> = vec![vec![source]];
 
     let mut i = 0usize;
@@ -107,26 +113,37 @@ pub fn delta_stepping_par(g: &CsrGraph, source: u32, delta: u32, par: &Par) -> V
         let mut wave = std::mem::take(&mut buckets[i]);
         while !wave.is_empty() {
             let w = &wave;
+            // Waves that fit one grain take the serial fast path and
+            // never read the prefix — skip building it for them.
+            if edge_balanced && w.len() > PAR_GRAIN {
+                g.degree_prefix_into(w, &mut wave_work);
+            }
+            let wave_work = &wave_work;
             // Relax every edge of the wave's live entries; collect the
             // (bucket, vertex) of each successful improvement per chunk.
-            let parts: Vec<Vec<(usize, u32)>> = par.chunk_map(0..w.len(), PAR_GRAIN, |sub| {
-                let mut local: Vec<(usize, u32)> = Vec::new();
-                for idx in sub {
-                    let u = w[idx];
-                    let du = dist[u as usize].load(Ordering::Relaxed);
-                    // Stale entry: already settled into an earlier bucket.
-                    if du == u32::MAX || (du / delta) as usize != i {
-                        continue;
-                    }
-                    for (v, wt) in g.neighbors_weighted(u) {
-                        let nd = du.saturating_add(wt);
-                        if nd < dist[v as usize].fetch_min(nd, Ordering::Relaxed) {
-                            local.push(((nd / delta) as usize, v));
+            let parts: Vec<Vec<(usize, u32)>> = par.chunk_map_by(
+                0..w.len(),
+                PAR_GRAIN,
+                |ci, k| balanced_boundary(wave_work, 0, w.len(), ci, k),
+                |sub| {
+                    let mut local: Vec<(usize, u32)> = Vec::new();
+                    for idx in sub {
+                        let u = w[idx];
+                        let du = dist[u as usize].load(Ordering::Relaxed);
+                        // Stale entry: settled into an earlier bucket.
+                        if du == u32::MAX || (du / delta) as usize != i {
+                            continue;
+                        }
+                        for (v, wt) in g.neighbors_weighted(u) {
+                            let nd = du.saturating_add(wt);
+                            if nd < dist[v as usize].fetch_min(nd, Ordering::Relaxed) {
+                                local.push(((nd / delta) as usize, v));
+                            }
                         }
                     }
-                }
-                local
-            });
+                    local
+                },
+            );
             // Sort improvements into buckets on the main thread;
             // same-bucket ones become the next wave (dist >= i*delta
             // along any relaxed path, so b >= i always).
@@ -224,9 +241,17 @@ mod tests {
             let src = rng.below(n as u64) as u32;
             let delta = [1u32, 8, 64][rng.below(3) as usize];
             let serial = delta_stepping(&g, src, delta, &mut NoProbe);
-            for par in [Par::Serial, Par::Relic(&relic)] {
+            for par in [
+                Par::Serial,
+                Par::Relic(&relic),
+                Par::Relic(&relic).with_schedule(Schedule::Dynamic),
+                Par::Relic(&relic).with_schedule(Schedule::EdgeBalanced),
+            ] {
                 if delta_stepping_par(&g, src, delta, &par) != serial {
-                    return Err(format!("sssp par/serial diverge (delta {delta}, src {src})"));
+                    return Err(format!(
+                        "sssp {}/serial diverge (delta {delta}, src {src})",
+                        par.schedule().name()
+                    ));
                 }
             }
             Ok(())

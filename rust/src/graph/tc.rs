@@ -4,9 +4,9 @@
 //! A task on the paper's input runs in ~1.3 µs.
 
 use crate::probe::{NoProbe, Probe};
-use crate::relic::Par;
+use crate::relic::{Par, Schedule};
 
-use super::csr::TARGETS_BASE;
+use super::csr::{balanced_boundary, TARGETS_BASE};
 use super::CsrGraph;
 
 /// Minimum vertices per fork-join chunk. Small, because per-vertex
@@ -59,13 +59,40 @@ fn intersect_above<P: Probe>(a: &[u32], b: &[u32], lo: u32, probe: &mut P) -> u6
 
 /// [`triangle_count`] with the per-vertex outer loop split across the
 /// SMT pair: each chunk counts its vertices' triangles independently
-/// and the partials are summed — an exact integer reduction, so the
-/// count is identical to serial for any chunking.
+/// and the partials are summed in ascending chunk order — an exact
+/// integer reduction, so the count is identical to serial for any
+/// chunking and any [`Schedule`].
+///
+/// Triangle work is the most skewed of the GAP kernels (a hub's
+/// intersections walk its neighbors' lists too), so under
+/// `Schedule::EdgeBalanced` the reduce grain derives from *cumulative
+/// wedge counts* ([`CsrGraph::cumulative_wedge_work`]) instead of
+/// vertex counts — the one allocation this costs happens once per
+/// call, outside the scope hot path.
 pub fn triangle_count_par(g: &CsrGraph, par: &Par) -> u64 {
+    // Graphs that fit one grain take the serial fast path and never
+    // read the wedge prefix — skip building it for them. Callers that
+    // count on the same graph repeatedly can amortize the scan through
+    // [`triangle_count_par_with_wedges`].
+    let wedges = if par.schedule() == Schedule::EdgeBalanced && g.num_vertices() > PAR_GRAIN {
+        g.cumulative_wedge_work()
+    } else {
+        Vec::new()
+    };
+    triangle_count_par_with_wedges(g, par, &wedges)
+}
+
+/// [`triangle_count_par`] with a precomputed
+/// [`CsrGraph::cumulative_wedge_work`] prefix, so repeated counts on
+/// one graph pay the O(V+E) wedge scan once instead of per call. The
+/// prefix is only read under `Schedule::EdgeBalanced` (pass `&[]`
+/// otherwise).
+pub fn triangle_count_par_with_wedges(g: &CsrGraph, par: &Par, wedges: &[u64]) -> u64 {
     let n = g.num_vertices();
-    par.reduce(
+    par.reduce_by(
         0..n,
         PAR_GRAIN,
+        |i, k| balanced_boundary(wedges, 0, n, i, k),
         0u64,
         |u| {
             let u = u as u32;
@@ -120,10 +147,24 @@ mod tests {
                 .collect();
             let g = CsrGraph::from_undirected_edges(n, &edges);
             let serial = triangle_count(&g, &mut NoProbe);
-            for par in [Par::Serial, Par::Relic(&relic)] {
+            for par in [
+                Par::Serial,
+                Par::Relic(&relic),
+                Par::Relic(&relic).with_schedule(Schedule::Dynamic),
+                Par::Relic(&relic).with_schedule(Schedule::EdgeBalanced),
+            ] {
                 if triangle_count_par(&g, &par) != serial {
-                    return Err(format!("tc par/serial diverge on n={n} m={m}"));
+                    return Err(format!(
+                        "tc {}/serial diverge on n={n} m={m}",
+                        par.schedule().name()
+                    ));
                 }
+            }
+            // The amortizing variant must agree with the one-shot one.
+            let wedges = g.cumulative_wedge_work();
+            let eb = Par::Relic(&relic).with_schedule(Schedule::EdgeBalanced);
+            if triangle_count_par_with_wedges(&g, &eb, &wedges) != serial {
+                return Err(format!("tc precomputed-wedges diverge on n={n} m={m}"));
             }
             Ok(())
         });

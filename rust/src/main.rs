@@ -8,7 +8,9 @@
 //! repro sweep --kernel tc   speedup vs task-size crossover sweep
 //! repro ablation --sweep waiting|queue-capacity|fetch-policy
 //! repro wallclock    wall-clock mode (needs an SMT host for meaning)
-//! repro intra        serial vs pair vs parallel_for per kernel (wall-clock)
+//! repro intra        serial vs pair vs parallel_for per kernel (wall-clock;
+//!                    --schedule static|dynamic|edge-balanced picks the
+//!                    fork-join chunk assignment, --config reads [relic])
 //! repro serve        run the hybrid analytics service demo
 //!                    (--shards N runs the sharded engine; N=0 → auto)
 //! repro pool         pool-scaling sweep: throughput vs shard count,
@@ -27,7 +29,7 @@ use std::path::Path;
 use relic_smt::bench::{self, figures};
 use relic_smt::bench::ablation;
 use relic_smt::cli::Args;
-use relic_smt::config::{PoolSettings, RawConfig};
+use relic_smt::config::{PoolSettings, RawConfig, RelicSettings};
 use relic_smt::coordinator::{
     Coordinator, Engine, EngineConfig, GraphKernel, Request, Router, RouterConfig,
 };
@@ -143,7 +145,10 @@ fn run(args: &Args) -> anyhow::Result<()> {
         Some("wallclock") => {
             println!("host: {}", affinity::topology_summary());
             if affinity::smt_sibling_pair().is_none() {
-                println!("WARNING: no SMT siblings — wall-clock numbers are not meaningful here; sim mode (fig1/fig3/fig4) is authoritative.\n");
+                println!(
+                    "WARNING: no SMT siblings — wall-clock numbers are not meaningful \
+                     here; sim mode (fig1/fig3/fig4) is authoritative.\n"
+                );
             }
             let iters = args.get_u64("iters", 2_000);
             let warmup = args.get_u64("warmup", 100);
@@ -181,20 +186,28 @@ fn run(args: &Args) -> anyhow::Result<()> {
             println!("host: {}", affinity::topology_summary());
             let pair = affinity::smt_sibling_pair();
             if pair.is_none() {
-                println!("WARNING: no SMT siblings — wall-clock numbers are not meaningful here.\n");
+                println!(
+                    "WARNING: no SMT siblings — wall-clock numbers are not \
+                     meaningful here.\n"
+                );
             }
             if let Some((main_cpu, _)) = pair {
                 affinity::pin_to_cpu(main_cpu);
             }
-            let relic = relic_smt::relic::Relic::with_config(relic_smt::relic::RelicConfig {
-                assistant_cpu: pair.map(|p| p.1),
-                ..Default::default()
-            });
+            let settings = relic_settings(args)?;
+            let schedule = settings.schedule;
+            let mut relic_config = settings.to_relic_config();
+            relic_config.assistant_cpu = pair.map(|p| p.1);
+            let relic = relic_smt::relic::Relic::with_config(relic_config);
             let iters = args.get_u64("iters", 2_000);
             let warmup = args.get_u64("warmup", 100);
-            let rows = figures::intra_kernel(&relic, iters, warmup);
-            println!("intra-kernel fork-join vs request pairing (wall-clock)\n");
+            let rows = figures::intra_kernel(&relic, schedule, iters, warmup);
+            println!(
+                "intra-kernel fork-join vs request pairing (wall-clock, {} schedule)\n",
+                schedule.name()
+            );
             println!("{}", figures::render_intra(&rows));
+            println!("relic: {}", relic.stats().report());
         }
         Some("serve") => {
             let n_req = args.get_u64("requests", 64) as usize;
@@ -298,6 +311,21 @@ fn run(args: &Args) -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+/// `[relic]` settings: config file first (`--config PATH`), then the
+/// `--schedule static|dynamic|edge-balanced` CLI override.
+fn relic_settings(args: &Args) -> anyhow::Result<RelicSettings> {
+    let mut s = match args.get("config") {
+        Some(path) => RelicSettings::from_raw(&RawConfig::load(Path::new(path))?),
+        None => RelicSettings::default(),
+    };
+    if let Some(name) = args.get("schedule") {
+        s.schedule = relic_smt::relic::Schedule::parse(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown --schedule {name:?} (static|dynamic|edge-balanced)")
+        })?;
+    }
+    Ok(s)
 }
 
 /// `[pool]` settings: config file first (`--config PATH`), then CLI

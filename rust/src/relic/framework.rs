@@ -13,6 +13,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use super::affinity::pin_to_cpu;
+use super::parallel::Schedule;
 use super::spsc::SpscQueue;
 use super::wait::WaitPolicy;
 
@@ -84,6 +85,10 @@ pub struct RelicConfig {
     /// Pin the assistant thread to this logical CPU (the application is
     /// expected to pin the main thread itself — paper §VI-B).
     pub assistant_cpu: Option<usize>,
+    /// Default chunk-assignment schedule for the fork-join helpers:
+    /// every [`crate::relic::Par::Relic`] loop that does not pick a
+    /// schedule per loop (`Par::with_schedule`) uses this one.
+    pub schedule: Schedule,
 }
 
 impl Default for RelicConfig {
@@ -92,6 +97,7 @@ impl Default for RelicConfig {
             queue_capacity: DEFAULT_QUEUE_CAPACITY,
             wait_policy: WaitPolicy::SpinPause,
             assistant_cpu: None,
+            schedule: Schedule::Static,
         }
     }
 }
@@ -105,6 +111,32 @@ pub struct RelicStats {
     pub completed: u64,
     /// `submit` calls that found the queue full.
     pub queue_full_events: u64,
+    /// Fork-join chunks the main thread ran through the claim path:
+    /// static-split chunks it claimed back from the assistant plus
+    /// dynamic chunks it claimed from the shared cursor. High values
+    /// relative to the chunk volume mean the assistant contributed
+    /// little — load imbalance made measurable (ISSUE 3).
+    pub helped_chunks: u64,
+    /// Fork-join chunks that ran inline on the main thread because the
+    /// SPSC queue was full when their task (or their wave's task) was
+    /// submitted.
+    pub inline_fallback: u64,
+}
+
+impl RelicStats {
+    /// One-line human-readable report, shared by `repro intra` and the
+    /// fork-join benches so every surface prints the same fields.
+    pub fn report(&self) -> String {
+        format!(
+            "{} tasks submitted, {} completed, {} queue-full events, \
+             {} helped chunks (main-thread claims), {} inline-fallback chunks",
+            self.submitted,
+            self.completed,
+            self.queue_full_events,
+            self.helped_chunks,
+            self.inline_fallback
+        )
+    }
 }
 
 /// The Relic runtime handle, owned by the main thread.
@@ -115,9 +147,13 @@ pub struct Relic {
     shared: Arc<Shared>,
     submitted: Cell<u64>,
     queue_full: Cell<u64>,
+    helped: Cell<u64>,
+    inline_fallback: Cell<u64>,
     /// True while a [`scope`](Self::scope) is active (fork-join sections
     /// may not nest — see `relic::scope`).
     in_scope: Cell<bool>,
+    /// Default schedule for fork-join loops (from [`RelicConfig`]).
+    schedule: Schedule,
     assistant: Option<JoinHandle<()>>,
 }
 
@@ -160,9 +196,30 @@ impl Relic {
             shared,
             submitted: Cell::new(0),
             queue_full: Cell::new(0),
+            helped: Cell::new(0),
+            inline_fallback: Cell::new(0),
             in_scope: Cell::new(false),
+            schedule: config.schedule,
             assistant: Some(assistant),
         }
+    }
+
+    /// The schedule [`crate::relic::Par::Relic`] loops use when none is
+    /// set per loop (see [`RelicConfig::schedule`]).
+    pub fn default_schedule(&self) -> Schedule {
+        self.schedule
+    }
+
+    /// Record one fork-join chunk the main thread ran through the claim
+    /// path (scope-layer bookkeeping; main thread only).
+    pub(crate) fn note_helped(&self) {
+        self.helped.set(self.helped.get() + 1);
+    }
+
+    /// Record `chunks` fork-join chunks that ran inline because the
+    /// SPSC queue was full at submit time (main thread only).
+    pub(crate) fn note_inline_fallback(&self, chunks: u64) {
+        self.inline_fallback.set(self.inline_fallback.get() + chunks);
     }
 
     /// Submit a raw routine/data task — the untyped core the safe
@@ -357,6 +414,8 @@ impl Relic {
             submitted: self.submitted.get(),
             completed: self.shared.completed.load(Ordering::Acquire),
             queue_full_events: self.queue_full.get(),
+            helped_chunks: self.helped.get(),
+            inline_fallback: self.inline_fallback.get(),
         }
     }
 }

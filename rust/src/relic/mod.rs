@@ -12,11 +12,16 @@
 //!
 //! On top of the paper's pairing API sits an intra-kernel fork-join
 //! layer ([`scope`] / [`parallel`]): `relic.scope(|s| s.split(..))` and
-//! `relic.parallel_for(range, grain, f)` statically split an index
-//! range into a main-thread half plus a handful of assistant chunks —
-//! stack-resident chunk descriptors, one SPSC submission per chunk,
-//! per-chunk claim/completion flags, zero heap. The [`Par`] toggle lets
-//! the GAP kernels and the JSON parser run their hot loops either
+//! `relic.parallel_for(range, grain, f)` split an index range across
+//! the pair — stack-resident chunk descriptors, per-chunk
+//! claim/completion flags, zero heap. A [`Schedule`] picks how chunks
+//! are *assigned*: `Static` (PR 1's half + ≤8 assistant chunks),
+//! `Dynamic` (self-scheduled from a shared atomic cursor — whichever
+//! thread is free claims the next chunk), or `EdgeBalanced` (dynamic
+//! claiming over work-balanced boundaries bisected from the CSR
+//! offsets). Chunk boundaries stay pure functions of the inputs, so
+//! results are deterministic under every schedule. The [`Par`] toggle
+//! lets the GAP kernels and the JSON parser run their hot loops either
 //! serially or across the SMT pair, moving the speedup from "two
 //! requests in parallel" to "one request finishes faster".
 //!
@@ -60,8 +65,8 @@ pub use framework::{
     QueueFull, Relic, RelicConfig, RelicStats, DEFAULT_QUEUE_CAPACITY, MAX_BATCH_BLOCK,
     MIN_BATCH_BLOCK,
 };
-pub use parallel::{Par, DEFAULT_GRAIN};
+pub use parallel::{Par, Schedule, DEFAULT_GRAIN};
 pub use pool::{PoolConfig, PoolSnapshot, RelicPool, ShardPlacement};
-pub use scope::{Scope, MAX_ASSIST_CHUNKS, MAX_CHUNK_SLOTS};
+pub use scope::{dyn_chunk_count, Scope, MAX_ASSIST_CHUNKS, MAX_CHUNK_SLOTS, MAX_DYN_CHUNKS};
 pub use spsc::SpscQueue;
 pub use wait::WaitPolicy;

@@ -5,18 +5,26 @@
 //! [`Par`] is deliberately an enum, not a trait object: kernels accept
 //! `&Par` and stay monomorphic, `Par::Serial` compiles to the plain
 //! loop, and `Par::Relic` routes chunks through the fork-join scope.
-//! All helpers are *deterministic by construction* where the paper's
-//! checksums require it:
+//! A [`Schedule`] decides how chunks are *assigned* to the pair —
+//! statically (PR 1), self-scheduled from a shared cursor, or
+//! self-scheduled over work-balanced boundaries — without changing what
+//! any chunk computes. All helpers are *deterministic by construction*
+//! where the paper's checksums require it:
 //!
 //! * [`Par::map_into`] writes disjoint slice elements — bitwise equal to
 //!   the serial loop regardless of scheduling;
-//! * [`Par::reduce`] combines per-chunk partials in fixed chunk order —
-//!   exact for integer monoids (the checksum kind), and fixed-shape
-//!   (chunk boundaries depend only on the range and grain) for floats;
+//! * [`Par::reduce`] combines per-chunk partials in ascending chunk
+//!   order — exact for integer monoids (the checksum kind), and
+//!   fixed-shape (chunk boundaries depend only on the range, grain and
+//!   schedule, never on timing) for floats;
 //! * [`Par::chunk_map`] concatenates per-chunk outputs in chunk order.
 //!
+//! Every helper runs serially — without even entering a scope — when
+//! the range fits a single grain: a 4-element loop should not pay the
+//! submit/wait handshake.
+//!
 //! ```
-//! use relic_smt::relic::{Par, Relic};
+//! use relic_smt::relic::{Par, Relic, Schedule};
 //!
 //! let relic = Relic::new();
 //! let par = Par::Relic(&relic);
@@ -25,6 +33,9 @@
 //! assert_eq!(squares[7], 49);
 //! let total = par.reduce(0..100, 8, 0u64, |i| i as u64, |a, b| a + b);
 //! assert_eq!(total, 99 * 100 / 2);
+//! // Opt a loop into self-scheduling (same result, balanced work):
+//! let dynamic = par.with_schedule(Schedule::Dynamic);
+//! assert_eq!(dynamic.reduce(0..100, 8, 0u64, |i| i as u64, |a, b| a + b), total);
 //! // The parallel_for convenience on the runtime itself:
 //! use std::sync::atomic::{AtomicU64, Ordering};
 //! let n = AtomicU64::new(0);
@@ -37,25 +48,90 @@
 use std::ops::Range;
 
 use super::framework::Relic;
-use super::scope::MAX_CHUNK_SLOTS;
+use super::scope::{dyn_chunk_count, MAX_CHUNK_SLOTS};
 
 /// Default minimum indices per chunk: with the paper's ~0.1 µs/iteration
 /// kernel loops this keeps every chunk well above Relic's ~70 ns
 /// submit+dispatch cost.
 pub const DEFAULT_GRAIN: usize = 16;
 
+/// How a `Par::Relic` loop's chunks are assigned to the SMT pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Schedule {
+    /// PR 1's static partition: a main-thread half plus ≤8 assistant
+    /// chunks. Lowest overhead (one join per split); imbalances on
+    /// skewed inputs where one half holds the hub vertices.
+    #[default]
+    Static,
+    /// Self-scheduled: chunk boundaries are still a pure function of
+    /// `(range, grain)`, but assignment is claimed from a shared atomic
+    /// cursor by whichever thread is free
+    /// ([`crate::relic::Scope::split_dynamic`]).
+    Dynamic,
+    /// [`Schedule::Dynamic`] claiming over *work-balanced* boundaries —
+    /// e.g. equal edge counts bisected from the CSR offsets array.
+    /// Helpers without weight information (the plain, non-`_by` entry
+    /// points) degrade to `Dynamic`.
+    EdgeBalanced,
+}
+
+impl Schedule {
+    /// Parse a CLI/config name.
+    pub fn parse(s: &str) -> Option<Schedule> {
+        Some(match s {
+            "static" => Schedule::Static,
+            "dynamic" => Schedule::Dynamic,
+            "edge" | "edge-balanced" | "edgebalanced" => Schedule::EdgeBalanced,
+            _ => return None,
+        })
+    }
+
+    /// Canonical display name (round-trips through [`parse`](Self::parse)).
+    pub fn name(self) -> &'static str {
+        match self {
+            Schedule::Static => "static",
+            Schedule::Dynamic => "dynamic",
+            Schedule::EdgeBalanced => "edge-balanced",
+        }
+    }
+
+    /// All schedules, in ablation order.
+    pub fn all() -> [Schedule; 3] {
+        [Schedule::Static, Schedule::Dynamic, Schedule::EdgeBalanced]
+    }
+}
+
+impl std::fmt::Display for Schedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// How a kernel's internal loops execute.
+#[derive(Clone, Copy)]
 pub enum Par<'r> {
     /// Plain serial loops on the calling thread (the baseline).
     Serial,
-    /// Fork-join over the SMT pair through a [`Relic`] runtime.
+    /// Fork-join over the SMT pair through a [`Relic`] runtime, using
+    /// the runtime's configured default [`Schedule`].
     Relic(&'r Relic),
+    /// Fork-join with an explicit per-loop schedule (built by
+    /// [`Par::with_schedule`]; overrides the runtime default).
+    Scheduled(&'r Relic, Schedule),
 }
 
 /// Raw slice base pointer that may cross to the assistant thread.
-/// Soundness rests on the chunk disjointness `Scope::split` guarantees:
-/// no element is touched by more than one chunk.
+/// Soundness rests on the chunk disjointness the scope splitters
+/// guarantee: no element is touched by more than one chunk at a time.
 struct RawSlice<T>(*mut T);
+
+impl<T> Clone for RawSlice<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<T> Copy for RawSlice<T> {}
 
 // SAFETY: only ever used to access disjoint elements from the two
 // threads of one scope; T itself crosses threads, hence T: Send.
@@ -73,25 +149,107 @@ impl<'r> Par<'r> {
 
     /// True when loops actually fan out to the assistant.
     pub fn is_parallel(&self) -> bool {
-        matches!(self, Par::Relic(_))
+        !matches!(self, Par::Serial)
+    }
+
+    /// This `Par` with an explicit chunk-assignment schedule. Serial
+    /// stays serial — the schedule only governs parallel execution.
+    pub fn with_schedule(self, schedule: Schedule) -> Par<'r> {
+        match self {
+            Par::Serial => Par::Serial,
+            Par::Relic(r) | Par::Scheduled(r, _) => Par::Scheduled(r, schedule),
+        }
+    }
+
+    /// The schedule parallel loops run under ([`Schedule::Static`] for
+    /// `Par::Serial`, whose loops have no chunks to assign).
+    pub fn schedule(&self) -> Schedule {
+        match self {
+            Par::Serial => Schedule::Static,
+            Par::Relic(r) => r.default_schedule(),
+            Par::Scheduled(_, s) => *s,
+        }
+    }
+
+    /// This `Par` as an *unweighted* helper must run it: edge-balanced
+    /// needs per-chunk work information the plain (non-`_by`) entry
+    /// points don't have, so it degrades to plain self-scheduling.
+    fn degrade_unweighted(&self) -> Par<'r> {
+        match self.schedule() {
+            Schedule::EdgeBalanced => self.with_schedule(Schedule::Dynamic),
+            _ => *self,
+        }
+    }
+
+    /// The runtime + schedule a loop of `len` indices should use.
+    /// `None` means run serially: no runtime, or the tiny-range fast
+    /// path — a range that fits one grain would pay the submit/wait
+    /// handshake for nothing.
+    fn plan_for(&self, len: usize, grain: usize) -> Option<(&'r Relic, Schedule)> {
+        if len <= grain.max(1) {
+            return None;
+        }
+        match *self {
+            Par::Serial => None,
+            Par::Relic(r) => Some((r, r.default_schedule())),
+            Par::Scheduled(r, s) => Some((r, s)),
+        }
     }
 
     /// Call `f(i)` for every `i` in `range`, chunks of at least `grain`.
     /// Shared-state effects inside `f` must be thread-safe (atomics).
     pub fn for_each_index<F: Fn(usize) + Sync>(&self, range: Range<usize>, grain: usize, f: F) {
-        match self {
-            Par::Serial => {
+        match self.plan_for(range.len(), grain) {
+            None => {
                 for i in range {
                     f(i);
                 }
             }
-            Par::Relic(relic) => relic.scope(|s| {
+            Some((relic, Schedule::Static)) => relic.scope(|s| {
                 s.split(range, grain, |sub| {
                     for i in sub {
                         f(i);
                     }
                 });
             }),
+            Some((relic, _)) => relic.scope(|s| {
+                s.split_dynamic(range, grain, |sub| {
+                    for i in sub {
+                        f(i);
+                    }
+                });
+            }),
+        }
+    }
+
+    /// [`for_each_index`](Self::for_each_index) with work-balanced chunk
+    /// boundaries: under [`Schedule::EdgeBalanced`], chunk `i` of `k`
+    /// covers `bound(i, k)..bound(i + 1, k)` (monotone; typically a CSR
+    /// bisection like [`crate::graph::CsrGraph::edge_balanced_boundary`]).
+    /// Other schedules ignore `bound`.
+    pub fn for_each_index_by<F, B>(&self, range: Range<usize>, grain: usize, bound: B, f: F)
+    where
+        F: Fn(usize) + Sync,
+        B: Fn(usize, usize) -> usize,
+    {
+        match self.plan_for(range.len(), grain) {
+            Some((relic, Schedule::EdgeBalanced)) => {
+                let k = dyn_chunk_count(range.len(), grain);
+                relic.scope(|s| {
+                    s.split_dynamic_by(
+                        range,
+                        k,
+                        bound,
+                        |_, sub| {
+                            for i in sub {
+                                f(i);
+                            }
+                        },
+                        |_| {},
+                    );
+                });
+            }
+            _ => self.for_each_index(range, grain, f),
         }
     }
 
@@ -102,31 +260,69 @@ impl<'r> Par<'r> {
         T: Send,
         F: Fn(usize) -> T + Sync,
     {
-        match self {
-            Par::Serial => {
+        let n = out.len();
+        match self.plan_for(n, grain) {
+            None => {
                 for (i, slot) in out.iter_mut().enumerate() {
                     *slot = f(i);
                 }
             }
-            Par::Relic(relic) => {
-                let n = out.len();
+            Some((relic, sched)) => {
                 let base = RawSlice(out.as_mut_ptr());
+                // SAFETY (both arms): chunks are disjoint and in-bounds
+                // (`sub ⊆ 0..n`); RawSlice's contract.
                 relic.scope(|s| {
-                    s.split(0..n, grain, |sub| {
+                    let body = |sub: Range<usize>| {
                         for i in sub {
-                            // SAFETY: chunks are disjoint and in-bounds
-                            // (`sub ⊆ 0..n`); RawSlice's contract.
                             unsafe { *base.0.add(i) = f(i) };
                         }
-                    });
+                    };
+                    match sched {
+                        Schedule::Static => s.split(0..n, grain, body),
+                        _ => s.split_dynamic(0..n, grain, body),
+                    }
                 });
             }
         }
     }
 
+    /// [`map_into`](Self::map_into) with work-balanced chunk boundaries
+    /// under [`Schedule::EdgeBalanced`] (other schedules ignore
+    /// `bound`). The boundary function spans `0..out.len()`.
+    pub fn map_into_by<T, F, B>(&self, out: &mut [T], grain: usize, bound: B, f: F)
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+        B: Fn(usize, usize) -> usize,
+    {
+        let n = out.len();
+        match self.plan_for(n, grain) {
+            Some((relic, Schedule::EdgeBalanced)) => {
+                let base = RawSlice(out.as_mut_ptr());
+                let k = dyn_chunk_count(n, grain);
+                relic.scope(|s| {
+                    s.split_dynamic_by(
+                        0..n,
+                        k,
+                        bound,
+                        |_, sub| {
+                            for i in sub {
+                                // SAFETY: disjoint in-bounds chunks.
+                                unsafe { *base.0.add(i) = f(i) };
+                            }
+                        },
+                        |_| {},
+                    );
+                });
+            }
+            _ => self.map_into(out, grain, f),
+        }
+    }
+
     /// Fold `f(i)` over `range` with `combine`, parallel by chunk.
     /// Each chunk folds serially in index order into a private slot;
-    /// slots are combined in ascending chunk order on the main thread.
+    /// slots are combined in ascending chunk order on the main thread
+    /// (wave by wave under the self-scheduled modes — still ascending).
     /// `identity` must be neutral for `combine`.
     pub fn reduce<T, F, C>(
         &self,
@@ -137,79 +333,165 @@ impl<'r> Par<'r> {
         combine: C,
     ) -> T
     where
-        T: Copy + Send,
+        T: Copy + Send + Sync,
         F: Fn(usize) -> T + Sync,
         C: Fn(T, T) -> T + Sync,
     {
-        match self {
-            Par::Serial => {
-                let mut acc = identity;
-                for i in range {
-                    acc = combine(acc, f(i));
-                }
-                acc
+        // The dummy bound below is unreachable: degrade_unweighted
+        // guarantees the EdgeBalanced path is never taken from here.
+        self.degrade_unweighted().reduce_by(range, grain, |_, _| 0, identity, f, combine)
+    }
+
+    /// [`reduce`](Self::reduce) with work-balanced chunk boundaries
+    /// under [`Schedule::EdgeBalanced`] (other schedules ignore
+    /// `bound`).
+    pub fn reduce_by<T, F, C, B>(
+        &self,
+        range: Range<usize>,
+        grain: usize,
+        bound: B,
+        identity: T,
+        f: F,
+        combine: C,
+    ) -> T
+    where
+        T: Copy + Send + Sync,
+        F: Fn(usize) -> T + Sync,
+        C: Fn(T, T) -> T + Sync,
+        B: Fn(usize, usize) -> usize,
+    {
+        let Some((relic, sched)) = self.plan_for(range.len(), grain) else {
+            let mut acc = identity;
+            for i in range {
+                acc = combine(acc, f(i));
             }
-            Par::Relic(relic) => {
-                let mut partials = [identity; MAX_CHUNK_SLOTS];
-                let slots = RawSlice(partials.as_mut_ptr());
-                relic.scope(|s| {
-                    s.split_indexed(range, grain, |ci, sub| {
-                        let mut acc = identity;
-                        for i in sub {
-                            acc = combine(acc, f(i));
-                        }
-                        // SAFETY: `ci < MAX_CHUNK_SLOTS` (scope contract)
-                        // and each chunk owns its slot exclusively.
-                        unsafe { *slots.0.add(ci) = acc };
-                    });
+            return acc;
+        };
+        if sched == Schedule::Static {
+            let mut partials = [identity; MAX_CHUNK_SLOTS];
+            let slots = RawSlice(partials.as_mut_ptr());
+            relic.scope(|s| {
+                s.split_indexed(range, grain, |ci, sub| {
+                    let mut acc = identity;
+                    for i in sub {
+                        acc = combine(acc, f(i));
+                    }
+                    // SAFETY: `ci < MAX_CHUNK_SLOTS` (scope contract)
+                    // and each chunk owns its slot exclusively.
+                    unsafe { *slots.0.add(ci) = acc };
                 });
-                let mut acc = identity;
-                for p in partials {
-                    acc = combine(acc, p);
-                }
-                acc
+            });
+            let mut acc = identity;
+            for p in partials {
+                acc = combine(acc, p);
             }
+            return acc;
         }
+        // Self-scheduled: per-wave slots, drained in ascending chunk
+        // order after each wave joins and before any slot is reused.
+        let mut partials = [identity; MAX_CHUNK_SLOTS];
+        let slots = RawSlice(partials.as_mut_ptr());
+        let mut acc = identity;
+        {
+            let combine = &combine;
+            let body = |ci: usize, sub: Range<usize>| {
+                let mut a = identity;
+                for i in sub {
+                    a = combine(a, f(i));
+                }
+                // SAFETY: `ci < MAX_CHUNK_SLOTS`, exclusive per wave.
+                unsafe { *slots.0.add(ci) = a };
+            };
+            let acc_ref = &mut acc;
+            let wave_done = |n: usize| {
+                for slot in 0..n {
+                    // SAFETY: the wave joined; its chunks wrote these.
+                    *acc_ref = combine(*acc_ref, unsafe { *slots.0.add(slot) });
+                }
+            };
+            let k = dyn_chunk_count(range.len(), grain);
+            relic.scope(|s| match sched {
+                Schedule::EdgeBalanced => s.split_dynamic_by(range, k, bound, body, wave_done),
+                _ => s.split_dynamic_indexed(range, grain, body, wave_done),
+            });
+        }
+        acc
     }
 
     /// Run `f` once per chunk of `range` and collect the per-chunk
     /// outputs in ascending chunk order (i.e. range order). The frontier
     /// shape: each chunk gathers into its own buffer, the main thread
-    /// concatenates. The returned `Vec` is the only allocation.
+    /// concatenates. The returned `Vec` (plus the per-chunk outputs
+    /// themselves) is the only allocation.
     pub fn chunk_map<T, F>(&self, range: Range<usize>, grain: usize, f: F) -> Vec<T>
     where
         T: Send,
         F: Fn(Range<usize>) -> T + Sync,
     {
-        match self {
-            Par::Serial => {
-                if range.is_empty() {
-                    Vec::new()
-                } else {
-                    vec![f(range)]
-                }
-            }
-            Par::Relic(relic) => {
-                let mut outputs: [Option<T>; MAX_CHUNK_SLOTS] = std::array::from_fn(|_| None);
-                let slots = RawSlice(outputs.as_mut_ptr());
-                relic.scope(|s| {
-                    s.split_indexed(range, grain, |ci, sub| {
-                        let v = f(sub);
-                        // SAFETY: `ci < MAX_CHUNK_SLOTS`, chunk-private.
-                        unsafe { *slots.0.add(ci) = Some(v) };
-                    });
+        // The dummy bound below is unreachable: degrade_unweighted
+        // guarantees the EdgeBalanced path is never taken from here.
+        self.degrade_unweighted().chunk_map_by(range, grain, |_, _| 0, f)
+    }
+
+    /// [`chunk_map`](Self::chunk_map) with work-balanced chunk
+    /// boundaries under [`Schedule::EdgeBalanced`] (other schedules
+    /// ignore `bound`).
+    pub fn chunk_map_by<T, F, B>(&self, range: Range<usize>, grain: usize, bound: B, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(Range<usize>) -> T + Sync,
+        B: Fn(usize, usize) -> usize,
+    {
+        let Some((relic, sched)) = self.plan_for(range.len(), grain) else {
+            return if range.is_empty() { Vec::new() } else { vec![f(range)] };
+        };
+        if sched == Schedule::Static {
+            let mut outputs: [Option<T>; MAX_CHUNK_SLOTS] = std::array::from_fn(|_| None);
+            let slots = RawSlice(outputs.as_mut_ptr());
+            relic.scope(|s| {
+                s.split_indexed(range, grain, |ci, sub| {
+                    let v = f(sub);
+                    // SAFETY: `ci < MAX_CHUNK_SLOTS`, chunk-private.
+                    unsafe { *slots.0.add(ci) = Some(v) };
                 });
-                outputs.into_iter().flatten().collect()
-            }
+            });
+            return outputs.into_iter().flatten().collect();
         }
+        // Self-scheduled: drain the wave's slots in ascending chunk
+        // order after each join, before the slots are reused.
+        let mut outputs: [Option<T>; MAX_CHUNK_SLOTS] = std::array::from_fn(|_| None);
+        let slots = RawSlice(outputs.as_mut_ptr());
+        let mut all: Vec<T> = Vec::new();
+        {
+            let body = |ci: usize, sub: Range<usize>| {
+                let v = f(sub);
+                // SAFETY: `ci < MAX_CHUNK_SLOTS`, exclusive per wave.
+                unsafe { *slots.0.add(ci) = Some(v) };
+            };
+            let all_ref = &mut all;
+            let wave_done = |n: usize| {
+                for slot in 0..n {
+                    // SAFETY: the wave joined; its chunks wrote these.
+                    if let Some(v) = unsafe { (*slots.0.add(slot)).take() } {
+                        all_ref.push(v);
+                    }
+                }
+            };
+            let k = dyn_chunk_count(range.len(), grain);
+            relic.scope(|s| match sched {
+                Schedule::EdgeBalanced => s.split_dynamic_by(range, k, bound, body, wave_done),
+                _ => s.split_dynamic_indexed(range, grain, body, wave_done),
+            });
+        }
+        all
     }
 }
 
 impl Relic {
-    /// Convenience fork-join loop: statically split `range` across the
-    /// SMT pair and call `f(i)` for every index, chunks of at least
-    /// `grain`. Zero-allocation; equivalent to
-    /// `Par::Relic(self).for_each_index(range, grain, f)`.
+    /// Convenience fork-join loop: split `range` across the SMT pair
+    /// (under this runtime's default schedule) and call `f(i)` for
+    /// every index, chunks of at least `grain`. Zero-allocation;
+    /// equivalent to `Par::Relic(self).for_each_index(range, grain, f)`.
     pub fn parallel_for<F: Fn(usize) + Sync>(&self, range: Range<usize>, grain: usize, f: F) {
         Par::Relic(self).for_each_index(range, grain, f);
     }
@@ -218,18 +500,29 @@ impl Relic {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::relic::RelicConfig;
     use std::sync::atomic::{AtomicU64, Ordering};
 
+    /// The parallel plans worth exercising in every helper test.
+    fn plans(relic: &Relic) -> [Par<'_>; 4] {
+        [
+            Par::Serial,
+            Par::Relic(relic),
+            Par::Relic(relic).with_schedule(Schedule::Dynamic),
+            Par::Relic(relic).with_schedule(Schedule::EdgeBalanced),
+        ]
+    }
+
     #[test]
-    fn for_each_index_serial_and_parallel_agree() {
+    fn for_each_index_all_schedules_agree() {
         let relic = Relic::new();
-        for par in [Par::Serial, Par::Relic(&relic)] {
+        for par in plans(&relic) {
             let sum = AtomicU64::new(0);
             par.for_each_index(5..500, 16, |i| {
                 sum.fetch_add(i as u64, Ordering::Relaxed);
             });
             let want: u64 = (5..500).sum();
-            assert_eq!(sum.load(Ordering::Relaxed), want);
+            assert_eq!(sum.load(Ordering::Relaxed), want, "{}", par.schedule().name());
         }
     }
 
@@ -239,9 +532,25 @@ mod tests {
         let n = 777;
         let mut serial = vec![0.0f64; n];
         Par::Serial.map_into(&mut serial, 8, |i| (i as f64).sqrt());
-        let mut parallel = vec![0.0f64; n];
-        Par::Relic(&relic).map_into(&mut parallel, 8, |i| (i as f64).sqrt());
-        assert_eq!(serial, parallel);
+        for par in plans(&relic) {
+            let mut parallel = vec![0.0f64; n];
+            par.map_into(&mut parallel, 8, |i| (i as f64).sqrt());
+            assert_eq!(serial, parallel, "{}", par.schedule().name());
+        }
+    }
+
+    #[test]
+    fn map_into_by_uses_balanced_bounds() {
+        let relic = Relic::new();
+        let n = 500;
+        let mut want = vec![0u64; n];
+        Par::Serial.map_into(&mut want, 8, |i| i as u64 * 3);
+        for par in plans(&relic) {
+            let mut got = vec![0u64; n];
+            // Quadratically skewed boundaries exercise uneven chunks.
+            par.map_into_by(&mut got, 8, |i, k| n * i * i / (k * k), |i| i as u64 * 3);
+            assert_eq!(got, want, "{}", par.schedule().name());
+        }
     }
 
     #[test]
@@ -249,21 +558,34 @@ mod tests {
         let relic = Relic::new();
         for n in [0usize, 1, 9, 100, 4096] {
             let serial = Par::Serial.reduce(0..n, 32, 0u64, |i| i as u64 * 3, |a, b| a + b);
-            let par = Par::Relic(&relic).reduce(0..n, 32, 0u64, |i| i as u64 * 3, |a, b| a + b);
-            assert_eq!(serial, par, "n={n}");
+            for par in plans(&relic) {
+                let got = par.reduce(0..n, 32, 0u64, |i| i as u64 * 3, |a, b| a + b);
+                assert_eq!(serial, got, "n={n} {}", par.schedule().name());
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_by_balanced_bounds_exact() {
+        let relic = Relic::new();
+        let n = 3000usize;
+        let want = Par::Serial.reduce(0..n, 16, 0u64, |i| (i * i) as u64, |a, b| a + b);
+        for par in plans(&relic) {
+            let got = par.reduce_by(
+                0..n,
+                16,
+                |i, k| n * i * i / (k * k),
+                0u64,
+                |i| (i * i) as u64,
+                |a, b| a + b,
+            );
+            assert_eq!(got, want, "{}", par.schedule().name());
         }
     }
 
     #[test]
     fn reduce_max_monoid() {
         let relic = Relic::new();
-        let got = Par::Relic(&relic).reduce(
-            0..1000,
-            16,
-            0u64,
-            |i| ((i * 2654435761) % 1009) as u64,
-            |a, b| a.max(b),
-        );
         let want = Par::Serial.reduce(
             0..1000,
             16,
@@ -271,19 +593,55 @@ mod tests {
             |i| ((i * 2654435761) % 1009) as u64,
             |a, b| a.max(b),
         );
-        assert_eq!(got, want);
+        for par in plans(&relic) {
+            let got = par.reduce(
+                0..1000,
+                16,
+                0u64,
+                |i| ((i * 2654435761) % 1009) as u64,
+                |a, b| a.max(b),
+            );
+            assert_eq!(got, want, "{}", par.schedule().name());
+        }
+    }
+
+    #[test]
+    fn dynamic_float_reduce_is_deterministic() {
+        // The fixed chunk shape must make the float combination tree
+        // identical run to run, whichever thread claims which chunk.
+        let relic = Relic::new();
+        let par = Par::Relic(&relic).with_schedule(Schedule::Dynamic);
+        let first = par.reduce(0..5000, 7, 0.0f64, |i| (i as f64).sqrt(), |a, b| a + b);
+        for round in 0..20 {
+            let again = par.reduce(0..5000, 7, 0.0f64, |i| (i as f64).sqrt(), |a, b| a + b);
+            assert_eq!(first.to_bits(), again.to_bits(), "round {round}");
+        }
     }
 
     #[test]
     fn chunk_map_preserves_range_order() {
         let relic = Relic::new();
-        for par in [Par::Serial, Par::Relic(&relic)] {
+        for par in plans(&relic) {
             let chunks = par.chunk_map(0..100, 4, |sub| sub.collect::<Vec<usize>>());
             let flat: Vec<usize> = chunks.into_iter().flatten().collect();
-            assert_eq!(flat, (0..100).collect::<Vec<usize>>());
+            assert_eq!(flat, (0..100).collect::<Vec<usize>>(), "{}", par.schedule().name());
+            assert!(par.chunk_map(3..3, 4, |s| s.len()).is_empty());
         }
-        assert!(Par::Serial.chunk_map(3..3, 4, |s| s.len()).is_empty());
-        assert!(Par::Relic(&relic).chunk_map(3..3, 4, |s| s.len()).is_empty());
+    }
+
+    #[test]
+    fn chunk_map_by_preserves_range_order_across_waves() {
+        let relic = Relic::new();
+        for par in plans(&relic) {
+            // Grain 1 over 1000 indices forces the MAX_DYN_CHUNKS cap
+            // and multiple waves under the self-scheduled modes.
+            let chunks =
+                par.chunk_map_by(0..1000, 1, |i, k| 1000 * i * i / (k * k), |sub| {
+                    sub.collect::<Vec<usize>>()
+                });
+            let flat: Vec<usize> = chunks.into_iter().flatten().collect();
+            assert_eq!(flat, (0..1000).collect::<Vec<usize>>(), "{}", par.schedule().name());
+        }
     }
 
     #[test]
@@ -301,6 +659,75 @@ mod tests {
         let relic = Relic::new();
         assert!(!Par::from_relic(None).is_parallel());
         assert!(Par::from_relic(Some(&relic)).is_parallel());
+    }
+
+    #[test]
+    fn with_schedule_overrides_and_serial_stays_serial() {
+        let relic = Relic::new();
+        assert_eq!(Par::Relic(&relic).schedule(), Schedule::Static);
+        let dynamic = Par::Relic(&relic).with_schedule(Schedule::Dynamic);
+        assert_eq!(dynamic.schedule(), Schedule::Dynamic);
+        assert_eq!(
+            dynamic.with_schedule(Schedule::EdgeBalanced).schedule(),
+            Schedule::EdgeBalanced,
+            "with_schedule replaces an earlier override"
+        );
+        assert!(!Par::Serial.with_schedule(Schedule::Dynamic).is_parallel());
+    }
+
+    #[test]
+    fn relic_config_sets_the_default_schedule() {
+        let relic = Relic::with_config(RelicConfig {
+            schedule: Schedule::Dynamic,
+            ..RelicConfig::default()
+        });
+        assert_eq!(Par::Relic(&relic).schedule(), Schedule::Dynamic);
+        // Per-loop override still wins.
+        let par = Par::Relic(&relic).with_schedule(Schedule::Static);
+        assert_eq!(par.schedule(), Schedule::Static);
+        // And the configured default actually drives the helpers.
+        let sum = AtomicU64::new(0);
+        Par::Relic(&relic).for_each_index(0..1000, 8, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn schedule_parse_roundtrip() {
+        for s in Schedule::all() {
+            assert_eq!(Schedule::parse(s.name()), Some(s));
+        }
+        assert_eq!(Schedule::parse("edge"), Some(Schedule::EdgeBalanced));
+        assert_eq!(Schedule::parse("nope"), None);
+        assert_eq!(Schedule::default(), Schedule::Static);
+    }
+
+    #[test]
+    fn tiny_ranges_skip_the_scope_entirely() {
+        let relic = Relic::new();
+        for schedule in Schedule::all() {
+            let par = Par::Relic(&relic).with_schedule(schedule);
+            let before = relic.stats().submitted;
+            let sum = AtomicU64::new(0);
+            par.for_each_index(0..8, 8, |i| {
+                sum.fetch_add(i as u64, Ordering::Relaxed);
+            });
+            let mut out = vec![0u64; 8];
+            par.map_into(&mut out, 8, |i| i as u64);
+            let red = par.reduce(0..8, 8, 0u64, |i| i as u64, |a, b| a + b);
+            let chunks = par.chunk_map(0..8, 8, |sub| sub.len());
+            assert_eq!(sum.load(Ordering::Relaxed), 28);
+            assert_eq!(out[7], 7);
+            assert_eq!(red, 28);
+            assert_eq!(chunks, vec![8]);
+            assert_eq!(
+                relic.stats().submitted,
+                before,
+                "{}: a range that fits one grain must not submit",
+                schedule.name()
+            );
+        }
     }
 
     #[test]

@@ -9,6 +9,21 @@
 //! amortizing per-task overhead by collapsing a loop into O(1) chunk
 //! tasks rather than one task per iteration.
 //!
+//! Two execution modes share the zero-allocation machinery:
+//!
+//! * **static** ([`Scope::split`] / [`Scope::split_indexed`]) — the
+//!   PR 1 partition: back half on the main thread, front half cut into
+//!   ≤ [`MAX_ASSIST_CHUNKS`] assistant chunks. Cheapest (one submit per
+//!   chunk, one join), but on skewed inputs the thread that draws the
+//!   hub vertices finishes last while its sibling idles.
+//! * **self-scheduled** ([`Scope::split_dynamic`] /
+//!   [`Scope::split_dynamic_by`]) — chunk *boundaries* stay a pure
+//!   function of the inputs (determinism by construction survives), but
+//!   chunk *assignment* is claimed from a shared atomic cursor by
+//!   whichever thread is free, in waves of at most [`MAX_CHUNK_SLOTS`]
+//!   chunks so per-chunk output slots stay stack-resident and
+//!   reductions can combine partials in ascending chunk-index order.
+//!
 //! Design constraints, matching the rest of Relic:
 //! * **zero allocation** — chunk descriptors live on the caller's stack
 //!   and travel through the SPSC queue as raw pointers;
@@ -38,7 +53,7 @@
 //! ```
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
 use super::framework::Relic;
 
@@ -49,8 +64,24 @@ use super::framework::Relic;
 pub const MAX_ASSIST_CHUNKS: usize = 8;
 
 /// Total chunk-index slots a single `split_indexed` can touch: the
-/// assistant chunks plus the main thread's half.
+/// assistant chunks plus the main thread's half. Also the wave size of
+/// the self-scheduled mode, so one slot array serves both.
 pub const MAX_CHUNK_SLOTS: usize = MAX_ASSIST_CHUNKS + 1;
+
+/// Upper bound on chunks one [`Scope::split_dynamic`] produces: four
+/// waves of [`MAX_CHUNK_SLOTS`]. Enough that a hub-heavy chunk is at
+/// most ~3% of the loop, few enough that the per-wave submit + join
+/// overhead stays negligible next to µs-scale kernel loops.
+pub const MAX_DYN_CHUNKS: usize = 4 * MAX_CHUNK_SLOTS;
+
+/// Number of self-scheduled chunks a dynamic split of `len` indices at
+/// `grain` uses: every chunk carries at least `grain` indices, capped
+/// at [`MAX_DYN_CHUNKS`]. Pure in `(len, grain)` — chunk shape, and
+/// therefore every reduction's combination tree, is run-to-run
+/// deterministic.
+pub fn dyn_chunk_count(len: usize, grain: usize) -> usize {
+    (len / grain.max(1)).clamp(1, MAX_DYN_CHUNKS)
+}
 
 /// Spin iterations between yields while waiting on chunk completion
 /// (mirrors the framework's degraded-host escape hatch).
@@ -222,6 +253,7 @@ impl<'r> Scope<'r> {
             if self.relic.submit_raw(run_chunk::<F>, data).is_err() {
                 // Queue full: the producer never blocks — claim and run
                 // the chunk inline right away.
+                self.relic.note_inline_fallback(1);
                 if claim(c) {
                     body(c.index, c.lo..c.hi);
                     c.done.store(true, Ordering::Release);
@@ -237,6 +269,7 @@ impl<'r> Scope<'r> {
         // two meet in the middle instead of racing for the same chunk).
         for c in chunks[..k].iter().rev() {
             if claim(c) {
+                self.relic.note_helped();
                 body(c.index, c.lo..c.hi);
                 c.done.store(true, Ordering::Release);
             }
@@ -277,6 +310,222 @@ impl<'r> Scope<'r> {
 /// Try to claim a chunk for execution on the calling thread.
 fn claim<F>(c: &ChunkDesc<F>) -> bool {
     c.claimed.compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire).is_ok()
+}
+
+/// One stack-resident self-scheduled wave: up to [`MAX_CHUNK_SLOTS`]
+/// chunks whose assignment both threads claim from `cursor`.
+///
+/// Chunk boundaries are *precomputed* on the main thread into a stack
+/// array (`bounds[s]..bounds[s+1]` is chunk `s`, enforced monotone), so
+/// disjointness never depends on the caller's boundary closure — two
+/// threads can never receive overlapping subranges, even for a
+/// misbehaving bound. Kept alive by the `split_dynamic_by` stack frame
+/// until the wave's queue task is consumed (same `WaitGuard` discipline
+/// as the static chunk descriptors).
+struct DynWave<F> {
+    /// Next unclaimed wave slot; `fetch_add` is the claim.
+    cursor: AtomicUsize,
+    /// Chunks whose body has returned (or unwound on the assistant).
+    done: AtomicUsize,
+    /// Set when a body panicked on the assistant thread.
+    panicked: AtomicBool,
+    /// Chunks in this wave (≤ [`MAX_CHUNK_SLOTS`]).
+    wave_len: usize,
+    /// The wave's `wave_len + 1` monotone chunk boundaries, on the
+    /// `split_dynamic_by` stack frame.
+    bounds: *const usize,
+    body: *const F,
+}
+
+impl<F: Fn(usize, Range<usize>) + Sync> DynWave<F> {
+    /// Run the body of wave slot `slot` on the calling thread and mark
+    /// it done.
+    ///
+    /// # Safety
+    /// `bounds` and `body` must still be alive (guaranteed by the
+    /// `split_dynamic_by` frame until the wave joins).
+    unsafe fn run_slot(&self, slot: usize) {
+        let lo = *self.bounds.add(slot);
+        let hi = *self.bounds.add(slot + 1);
+        (*self.body)(slot, lo..hi);
+        self.done.fetch_add(1, Ordering::Release);
+    }
+}
+
+/// Assistant-side trampoline for a dynamic wave: claim chunks from the
+/// shared cursor until it drains. A panicking body still completes the
+/// chunk protocol (flag + done count) so the main thread's join cannot
+/// hang — mirroring the static `run_chunk`.
+unsafe fn run_dyn_wave<F: Fn(usize, Range<usize>) + Sync>(data: *const (), _arg: usize) {
+    // SAFETY: `data` points at a DynWave kept alive by the
+    // `split_dynamic_by` stack frame until `Relic::wait` confirms this
+    // task was consumed; `F: Sync` makes the shared body call sound.
+    let wave = &*(data as *const DynWave<F>);
+    loop {
+        let slot = wave.cursor.fetch_add(1, Ordering::AcqRel);
+        if slot >= wave.wave_len {
+            break;
+        }
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| wave.run_slot(slot)));
+        if result.is_err() {
+            wave.panicked.store(true, Ordering::Release);
+            wave.done.fetch_add(1, Ordering::Release);
+        }
+    }
+}
+
+impl<'r> Scope<'r> {
+    /// Self-scheduled variant of [`split`](Self::split): chunk
+    /// boundaries are still fixed by `(range, grain)` (see
+    /// [`dyn_chunk_count`]), but chunk *assignment* is claimed from a
+    /// shared atomic cursor by whichever thread is free — the thread
+    /// that draws a hub chunk no longer strands its sibling. Returns
+    /// once the whole range has been processed.
+    pub fn split_dynamic<F: Fn(Range<usize>) + Sync>(
+        &self,
+        range: Range<usize>,
+        grain: usize,
+        body: F,
+    ) {
+        self.split_dynamic_indexed(range, grain, |_, sub| body(sub), |_| {});
+    }
+
+    /// [`split_dynamic`](Self::split_dynamic), but `body` also receives
+    /// its wave-slot index (`< `[`MAX_CHUNK_SLOTS`], exclusive to the
+    /// chunk within its wave) and `wave_done(n)` runs on the main
+    /// thread after each wave of `n` chunks joins — before any slot is
+    /// reused — so reductions can drain per-chunk slots in ascending
+    /// chunk-index order.
+    pub fn split_dynamic_indexed<F, W>(
+        &self,
+        range: Range<usize>,
+        grain: usize,
+        body: F,
+        wave_done: W,
+    ) where
+        F: Fn(usize, Range<usize>) + Sync,
+        W: FnMut(usize),
+    {
+        let lo = range.start;
+        let len = range.end.saturating_sub(lo);
+        if len == 0 {
+            return;
+        }
+        let k = dyn_chunk_count(len, grain);
+        self.split_dynamic_by(
+            range,
+            k,
+            move |i, k| lo + ((len as u128 * i as u128) / k as u128) as usize,
+            body,
+            wave_done,
+        );
+    }
+
+    /// The self-scheduled core with caller-provided chunk boundaries:
+    /// chunk `i` of `n_chunks` covers `bound(i, n) .. bound(i+1, n)`
+    /// (`bound(0, n)` and `bound(n, n)` are ignored — the first and
+    /// last chunk are pinned to the range ends). The edge-balanced
+    /// kernel schedules pass a CSR-offset bisection here so every chunk
+    /// carries ~equal *edge* work.
+    ///
+    /// `bound` is evaluated only on the main thread, and its outputs
+    /// are forced monotone (running max, clamped into the range) before
+    /// any chunk runs — chunks are disjoint by construction, so a buggy
+    /// boundary function can skew the balance but can never hand two
+    /// threads overlapping subranges.
+    ///
+    /// Waves of at most [`MAX_CHUNK_SLOTS`] chunks run back to back;
+    /// `wave_done` fires on the main thread after each wave joins. All
+    /// bookkeeping lives on this stack frame — the zero-allocation
+    /// invariant holds in this mode too.
+    pub fn split_dynamic_by<B, F, W>(
+        &self,
+        range: Range<usize>,
+        n_chunks: usize,
+        bound: B,
+        body: F,
+        mut wave_done: W,
+    ) where
+        B: Fn(usize, usize) -> usize,
+        F: Fn(usize, Range<usize>) + Sync,
+        W: FnMut(usize),
+    {
+        let (lo, hi) = (range.start, range.end);
+        if hi <= lo {
+            return;
+        }
+        let k = n_chunks.max(1);
+        if k == 1 {
+            body(0, lo..hi);
+            wave_done(1);
+            return;
+        }
+
+        let mut wave_base = 0usize;
+        // Start of the next chunk, carried across waves so coverage is
+        // contiguous (and disjoint) whatever `bound` returns.
+        let mut next_lo = lo;
+        while wave_base < k {
+            let wave_len = (k - wave_base).min(MAX_CHUNK_SLOTS);
+            // Precompute the wave's boundaries, forced monotone.
+            let mut bounds = [hi; MAX_CHUNK_SLOTS + 1];
+            bounds[0] = next_lo;
+            for s in 1..=wave_len {
+                let i = wave_base + s;
+                bounds[s] = if i >= k { hi } else { bound(i, k).clamp(bounds[s - 1], hi) };
+            }
+            next_lo = bounds[wave_len];
+            let wave = DynWave {
+                cursor: AtomicUsize::new(0),
+                done: AtomicUsize::new(0),
+                panicked: AtomicBool::new(false),
+                wave_len,
+                bounds: bounds.as_ptr(),
+                body: &body as *const F,
+            };
+            // Every exit below (including a panicking main-thread body)
+            // must drain the queue before `wave` goes out of scope.
+            let guard = WaitGuard(self.relic);
+            let data = &wave as *const DynWave<F> as *const ();
+            let offered = self.relic.submit_raw(run_dyn_wave::<F>, data).is_ok();
+            if !offered {
+                // Queue full: the whole wave self-schedules onto the
+                // main thread alone — never block the producer.
+                self.relic.note_inline_fallback(wave_len as u64);
+            }
+            // Claim chunks alongside the assistant until the cursor
+            // drains; the claim *is* the load balancing.
+            loop {
+                let slot = wave.cursor.fetch_add(1, Ordering::AcqRel);
+                if slot >= wave_len {
+                    break;
+                }
+                // SAFETY: `bounds`/`body` outlive this frame's loop.
+                unsafe { wave.run_slot(slot) };
+                if offered {
+                    self.relic.note_helped();
+                }
+            }
+            // Join: the assistant may still be inside its last claim.
+            let mut spins = 0u32;
+            while wave.done.load(Ordering::Acquire) < wave_len {
+                std::hint::spin_loop();
+                spins += 1;
+                if spins >= YIELD_THRESHOLD {
+                    std::thread::yield_now();
+                    spins = 0;
+                }
+            }
+            // The wave's queue task must be consumed before `wave` dies.
+            drop(guard);
+            if wave.panicked.load(Ordering::Acquire) {
+                panic!("Relic scope: chunk body panicked on the assistant thread");
+            }
+            wave_done(wave_len);
+            wave_base += wave_len;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -431,6 +680,210 @@ mod tests {
             },
         );
         assert_eq!(hits.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn dyn_chunk_count_bounds() {
+        assert_eq!(dyn_chunk_count(0, 16), 1);
+        assert_eq!(dyn_chunk_count(15, 16), 1);
+        assert_eq!(dyn_chunk_count(32, 16), 2);
+        assert_eq!(dyn_chunk_count(100, 16), 6, "chunks never dip below the grain");
+        assert_eq!(dyn_chunk_count(1_000_000, 1), MAX_DYN_CHUNKS);
+        assert_eq!(dyn_chunk_count(64, 0), MAX_DYN_CHUNKS.min(64), "grain 0 behaves as 1");
+    }
+
+    #[test]
+    fn split_dynamic_covers_every_index_exactly_once() {
+        let relic = Relic::new();
+        // Sizes straddling the wave boundaries: single chunk, one wave,
+        // several waves, and the MAX_DYN_CHUNKS cap.
+        for n in [0usize, 1, 2, 7, 9, 64, 100, 1000, 10_000] {
+            for grain in [1usize, 4, 64] {
+                let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                relic.scope(|s| {
+                    s.split_dynamic(0..n, grain, |sub| {
+                        for i in sub {
+                            counts[i].fetch_add(1, Ordering::Relaxed);
+                        }
+                    });
+                });
+                for (i, c) in counts.iter().enumerate() {
+                    assert_eq!(c.load(Ordering::Relaxed), 1, "index {i} of n={n} grain={grain}");
+                }
+            }
+        }
+        let stats = relic.stats();
+        assert_eq!(stats.submitted, stats.completed, "every wave task consumed");
+    }
+
+    #[test]
+    fn split_dynamic_indexed_slots_stay_wave_local_and_waves_ascend() {
+        let relic = Relic::new();
+        let max_slot = AtomicUsize::new(0);
+        let mut wave_sizes = Vec::new();
+        relic.scope(|s| {
+            s.split_dynamic_indexed(
+                0..10_000,
+                1,
+                |slot, _| {
+                    max_slot.fetch_max(slot, Ordering::Relaxed);
+                },
+                |n| wave_sizes.push(n),
+            );
+        });
+        assert!(max_slot.load(Ordering::Relaxed) < MAX_CHUNK_SLOTS);
+        // 10_000 indices at grain 1 cap at MAX_DYN_CHUNKS chunks: four
+        // full waves, joined in order.
+        assert_eq!(wave_sizes.iter().sum::<usize>(), MAX_DYN_CHUNKS);
+        assert!(wave_sizes.iter().all(|&n| n <= MAX_CHUNK_SLOTS));
+    }
+
+    #[test]
+    fn split_dynamic_by_respects_custom_boundaries() {
+        let relic = Relic::new();
+        let n = 1000usize;
+        // Quadratically skewed boundaries: early chunks narrow, late
+        // chunks wide — still a disjoint cover of the range.
+        let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        relic.scope(|s| {
+            s.split_dynamic_by(
+                0..n,
+                12,
+                |i, k| n * i * i / (k * k),
+                |_, sub| {
+                    for i in sub {
+                        counts[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                },
+                |_| {},
+            );
+        });
+        for (i, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn split_dynamic_by_tames_non_monotone_bounds() {
+        // A buggy (non-monotone) boundary function may skew the balance
+        // but must never produce overlapping chunks — overlap would
+        // hand two threads the same `map_into` elements (a data race
+        // reachable from safe code). Coverage must stay exactly-once.
+        let relic = Relic::new();
+        let n = 500usize;
+        let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        relic.scope(|s| {
+            s.split_dynamic_by(
+                0..n,
+                12,
+                |i, k| if i % 2 == 0 { n * i / k } else { n - n * i / k },
+                |_, sub| {
+                    for i in sub {
+                        counts[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                },
+                |_| {},
+            );
+        });
+        for (i, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn split_dynamic_queue_overflow_falls_back_inline() {
+        let relic = Relic::with_config(RelicConfig {
+            queue_capacity: 2,
+            ..RelicConfig::default()
+        });
+        let sum = AtomicU64::new(0);
+        relic.scope(|s| {
+            for _ in 0..50 {
+                s.split_dynamic(0..64, 1, |sub| {
+                    for i in sub {
+                        sum.fetch_add(i as u64 + 1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 50 * (64 * 65 / 2));
+    }
+
+    #[test]
+    fn split_dynamic_body_panic_propagates_and_runtime_survives() {
+        let relic = Relic::new();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            relic.scope(|s| {
+                s.split_dynamic(0..1000, 1, |sub| {
+                    if sub.start >= 500 {
+                        panic!("boom");
+                    }
+                });
+            });
+        }));
+        assert!(caught.is_err(), "dynamic chunk panic must not be swallowed");
+        let n = AtomicU64::new(0);
+        relic.scope(|s| {
+            s.split_dynamic(0..64, 4, |sub| {
+                n.fetch_add(sub.len() as u64, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 64);
+        let stats = relic.stats();
+        assert_eq!(stats.submitted, stats.completed);
+    }
+
+    #[test]
+    fn helped_chunks_counted_when_main_claims() {
+        // Park the assistant behind a task that spins on a gate: the
+        // main thread must claim at least the first chunk itself.
+        static GATE: AtomicBool = AtomicBool::new(false);
+        fn gated(_: usize) {
+            while !GATE.load(Ordering::Acquire) {
+                std::hint::spin_loop();
+            }
+        }
+        let relic = Relic::new();
+        relic.submit(gated, 0).unwrap();
+        let sum = AtomicU64::new(0);
+        relic.scope(|s| {
+            s.split_dynamic(0..1000, 10, |sub| {
+                GATE.store(true, Ordering::Release);
+                sum.fetch_add(sub.len() as u64, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 1000);
+        assert!(relic.stats().helped_chunks >= 1, "main-thread claims must be counted");
+    }
+
+    #[test]
+    fn inline_fallback_counted_when_queue_is_full() {
+        static GATE: AtomicBool = AtomicBool::new(false);
+        fn gated(_: usize) {
+            while !GATE.load(Ordering::Acquire) {
+                std::hint::spin_loop();
+            }
+        }
+        let relic = Relic::with_config(RelicConfig {
+            queue_capacity: 2,
+            ..RelicConfig::default()
+        });
+        // One gated task occupies the assistant; two more fill the
+        // 2-slot queue, so the first wave's submit must fail.
+        for _ in 0..3 {
+            while relic.submit(gated, 0).is_err() {
+                std::thread::yield_now();
+            }
+        }
+        let sum = AtomicU64::new(0);
+        relic.scope(|s| {
+            s.split_dynamic(0..360, 10, |sub| {
+                GATE.store(true, Ordering::Release);
+                sum.fetch_add(sub.len() as u64, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 360);
+        assert!(relic.stats().inline_fallback >= 1, "queue-full waves must be counted");
     }
 
     #[test]

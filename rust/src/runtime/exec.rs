@@ -25,8 +25,9 @@ pub struct GraphExecutor {
 impl GraphExecutor {
     /// Create a CPU-PJRT executor over an artifacts directory.
     pub fn new(artifacts_dir: &Path) -> Result<Self> {
-        let manifest = Manifest::load(artifacts_dir)
-            .with_context(|| format!("loading manifest from {artifacts_dir:?} (run `make artifacts`)"))?;
+        let manifest = Manifest::load(artifacts_dir).with_context(|| {
+            format!("loading manifest from {artifacts_dir:?} (run `make artifacts`)")
+        })?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(GraphExecutor { client, manifest, cache: HashMap::new(), executions: 0 })
     }

@@ -93,7 +93,13 @@ fn granularity_matches_paper_within_tolerance() {
     let cfg = CoreConfig::default();
     for row in figures::granularity(&cfg) {
         let rel = (row.micros - row.paper_micros).abs() / row.paper_micros;
-        assert!(rel < 0.08, "{}: {:.2}µs vs paper {:.2}µs", row.kernel, row.micros, row.paper_micros);
+        assert!(
+            rel < 0.08,
+            "{}: {:.2}µs vs paper {:.2}µs",
+            row.kernel,
+            row.micros,
+            row.paper_micros
+        );
     }
 }
 

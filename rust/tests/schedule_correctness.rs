@@ -1,0 +1,166 @@
+//! Scheduling regression tests (ISSUE 3): on a *power-law* Kronecker
+//! fixture — the degree distribution where static splitting actually
+//! imbalances — every kernel's checksum under `Schedule::Dynamic` and
+//! `Schedule::EdgeBalanced` must be bitwise-equal to `Par::Serial`,
+//! the dynamic float reduce must be a single bit pattern across 100
+//! runs, and the scope must never be entered for sub-grain ranges.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use relic_smt::coordinator::{run_native_kernel, run_native_kernel_par, GraphKernel};
+use relic_smt::graph::kronecker::{kronecker_graph, KroneckerParams};
+use relic_smt::graph::CsrGraph;
+use relic_smt::relic::{Par, Relic, RelicConfig, Schedule};
+
+/// The skewed fixture: R-MAT is power-law-ish by construction, and at
+/// scale 9 the graph is big enough that every kernel loop splits into
+/// many chunks while the whole suite still runs in test time.
+fn skewed_graph() -> CsrGraph {
+    kronecker_graph(&KroneckerParams::gap(9, 8, 7))
+}
+
+#[test]
+fn fixture_is_power_law_skewed() {
+    let g = skewed_graph();
+    let n = g.num_vertices();
+    let avg = g.num_directed_edges() as f64 / n as f64;
+    let max = (0..n as u32).map(|v| g.degree(v)).max().unwrap() as f64;
+    assert!(
+        max > 4.0 * avg,
+        "fixture lost its skew (max degree {max}, avg {avg}) — these tests \
+         would no longer exercise imbalanced chunks"
+    );
+}
+
+#[test]
+fn dynamic_and_edge_balanced_checksums_equal_serial_on_skewed_graph() {
+    let g = skewed_graph();
+    let relic = Relic::new();
+    for kernel in GraphKernel::all() {
+        let want = run_native_kernel(kernel, &g, 3);
+        assert_eq!(
+            run_native_kernel_par(kernel, &g, 3, &Par::Serial),
+            want,
+            "{kernel:?} Par::Serial"
+        );
+        for schedule in [Schedule::Dynamic, Schedule::EdgeBalanced] {
+            let par = Par::Relic(&relic).with_schedule(schedule);
+            for round in 0..3 {
+                assert_eq!(
+                    run_native_kernel_par(kernel, &g, 3, &par),
+                    want,
+                    "{kernel:?} under {} (round {round})",
+                    schedule.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dynamic_checksums_survive_queue_overflow_on_skewed_graph() {
+    // A 2-slot queue forces wave submissions to overflow constantly;
+    // the inline fallback must preserve every checksum.
+    let g = skewed_graph();
+    let relic = Relic::with_config(RelicConfig {
+        queue_capacity: 2,
+        ..RelicConfig::default()
+    });
+    for kernel in GraphKernel::all() {
+        let want = run_native_kernel(kernel, &g, 0);
+        for schedule in [Schedule::Dynamic, Schedule::EdgeBalanced] {
+            let par = Par::Relic(&relic).with_schedule(schedule);
+            assert_eq!(
+                run_native_kernel_par(kernel, &g, 0, &par),
+                want,
+                "{kernel:?} under {} with queue pressure",
+                schedule.name()
+            );
+        }
+    }
+    let stats = relic.stats();
+    assert_eq!(stats.submitted, stats.completed, "all wave tasks drained");
+}
+
+#[test]
+fn dynamic_float_reduce_yields_a_single_bit_pattern_across_100_runs() {
+    let relic = Relic::new();
+    let par = Par::Relic(&relic).with_schedule(Schedule::Dynamic);
+    let mut seen = HashSet::new();
+    for _ in 0..100 {
+        let v = par.reduce(0..5000, 7, 0.0f64, |i| (i as f64).sqrt(), |a, b| a + b);
+        seen.insert(v.to_bits());
+    }
+    assert_eq!(
+        seen.len(),
+        1,
+        "dynamic reduce must not depend on which thread claims which chunk"
+    );
+}
+
+#[test]
+fn edge_balanced_float_reduce_yields_a_single_bit_pattern_across_100_runs() {
+    let relic = Relic::new();
+    let par = Par::Relic(&relic).with_schedule(Schedule::EdgeBalanced);
+    let n = 5000usize;
+    let mut seen = HashSet::new();
+    for _ in 0..100 {
+        // A skewed (quadratic) boundary stands in for the CSR bisection.
+        let v = par.reduce_by(
+            0..n,
+            7,
+            |i, k| n * i * i / (k * k),
+            0.0f64,
+            |i| (i as f64).sqrt(),
+            |a, b| a + b,
+        );
+        seen.insert(v.to_bits());
+    }
+    assert_eq!(seen.len(), 1, "edge-balanced reduce must be run-to-run deterministic");
+}
+
+#[test]
+fn tiny_ranges_never_enter_a_scope() {
+    let relic = Relic::new();
+    for schedule in Schedule::all() {
+        let par = Par::Relic(&relic).with_schedule(schedule);
+        let before = relic.stats().submitted;
+        let sum = AtomicU64::new(0);
+        par.for_each_index(0..4, 16, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        let mut out = [0u64; 4];
+        par.map_into(&mut out, 16, |i| i as u64 * 2);
+        let red = par.reduce(0..4, 16, 0u64, |i| i as u64, |a, b| a + b);
+        let chunks = par.chunk_map(0..4, 16, |sub| sub.len());
+        assert_eq!(sum.load(Ordering::Relaxed), 6);
+        assert_eq!(out, [0, 2, 4, 6]);
+        assert_eq!(red, 6);
+        assert_eq!(chunks, vec![4]);
+        assert_eq!(
+            relic.stats().submitted,
+            before,
+            "{}: a 4-element loop must not pay the submit/wait handshake",
+            schedule.name()
+        );
+    }
+}
+
+#[test]
+fn scheduling_counters_are_exposed_and_consistent() {
+    let relic = Relic::new();
+    let par = Par::Relic(&relic).with_schedule(Schedule::Dynamic);
+    let sum = AtomicU64::new(0);
+    par.for_each_index(0..100_000, 64, |i| {
+        sum.fetch_add(i as u64 & 1, Ordering::Relaxed);
+    });
+    let stats = relic.stats();
+    assert_eq!(sum.load(Ordering::Relaxed), 50_000);
+    assert_eq!(stats.submitted, stats.completed);
+    // Whatever the interleaving, the counters never exceed the chunk
+    // volume of the loop (MAX_DYN_CHUNKS chunks for one dynamic split).
+    let max_chunks = relic_smt::relic::MAX_DYN_CHUNKS as u64;
+    assert!(stats.helped_chunks <= max_chunks, "helped {}", stats.helped_chunks);
+    assert!(stats.inline_fallback <= max_chunks, "inline {}", stats.inline_fallback);
+}
