@@ -20,8 +20,8 @@ use std::time::Instant;
 
 use relic_smt::cli::Args;
 use relic_smt::coordinator::{
-    run_native_kernel, Backend, Coordinator, GraphKernel, Request, RequestResult, Router,
-    RouterConfig,
+    run_native_kernel, Backend, Coordinator, Deadline, GraphKernel, Request, RequestResult,
+    Router, RouterConfig,
 };
 use relic_smt::graph::{kronecker_graph, KroneckerParams};
 use relic_smt::probe::NoProbe;
@@ -60,6 +60,7 @@ fn main() -> anyhow::Result<()> {
                 kernel: kernels[rng.range(0, kernels.len())],
                 source: rng.below(g.num_vertices() as u64) as u32,
                 graph: g,
+                deadline: Deadline::none(),
             }
         })
         .collect();

@@ -1,0 +1,78 @@
+//! Admission benchmark: open-loop arrival sweep over the engine's
+//! three front doors — blocking `submit` (PR 2's counted
+//! backpressure), non-blocking `try_submit` (QueueFull bounces are
+//! dropped, open-loop style), and `submit_or_park` (producer sleeps on
+//! the shard's drain signal) — plus shed-rate vs offered load when a
+//! deadline and shed policy are set.
+//!
+//! The default channel capacity is deliberately small (8) so the
+//! high-load rows actually exercise full channels; every completed
+//! response is checksum-verified against the single-pair kernels
+//! inside `figures::admission_sweep`, so the run doubles as a
+//! correctness smoke test for all three paths.
+//!
+//! Run: `cargo bench --bench admission [-- --offered 32,128,512
+//! --reps R --shards N --channel-capacity C --deadline-ms D
+//! --shed never|past-deadline|load-factor[:F] --service-estimate-us U
+//! --no-pin]`
+//! Meaningful throughput numbers need one idle physical core per
+//! shard; elsewhere the verdict reconciliation still gates.
+
+mod common;
+
+use relic_smt::bench::figures;
+use relic_smt::cli::Args;
+use relic_smt::coordinator::{AdmissionConfig, EngineConfig, ShedPolicy};
+use relic_smt::relic::{affinity, PoolConfig};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let offered = args.sweep_list("offered", &[32, 128, 512]).expect("--offered");
+    let reps = args.get_u64("reps", 3);
+    let shards = args.get_u64("shards", 0) as usize; // 0 = auto
+    let capacity = args.get_u64("channel-capacity", 8).max(1) as usize;
+    let deadline_ms = args.get_u64("deadline-ms", 0);
+    let pin = !args.flag("no-pin");
+    let shed_name = args.get("shed").unwrap_or("never");
+    let shed = ShedPolicy::parse(shed_name)
+        .expect("--shed never|past-deadline|load-factor[:F]");
+
+    println!("host: {}", affinity::topology_summary());
+    common::section(&format!(
+        "open-loop admission sweep (capacity {capacity}, shed {shed_name}, \
+         deadline {deadline_ms} ms)"
+    ));
+    let template = EngineConfig {
+        pool: PoolConfig {
+            shards: if shards == 0 { None } else { Some(shards) },
+            pin,
+            channel_capacity: capacity,
+            ..PoolConfig::default()
+        },
+        admission: AdmissionConfig {
+            shed,
+            service_estimate_ns: args.get_u64("service-estimate-us", 0).saturating_mul(1_000),
+        },
+        ..EngineConfig::default()
+    };
+    let deadline = if deadline_ms > 0 {
+        Some(std::time::Duration::from_millis(deadline_ms))
+    } else {
+        None
+    };
+    let rows = figures::admission_sweep(&template, &offered, deadline, reps);
+    print!("{}", figures::render_admission(&rows));
+
+    common::section("shed rate vs offered load");
+    for r in &rows {
+        let total = r.offered as u64 * r.reps;
+        println!(
+            "{:<10} offered {:>6}: shed {:>5.1}%, bounced {:>5.1}%, parked {:>4}",
+            r.mode,
+            r.offered,
+            100.0 * r.shed as f64 / total.max(1) as f64,
+            100.0 * r.rejected as f64 / total.max(1) as f64,
+            r.parked,
+        );
+    }
+}

@@ -316,16 +316,11 @@ pub fn pool_scaling(
     requests: usize,
     reps: u64,
 ) -> Vec<PoolScalingRow> {
-    use crate::coordinator::{
-        run_native_kernel, Engine, GraphKernel, Request, RequestResult,
-    };
+    use crate::coordinator::{run_native_kernel, Deadline, Engine, Request, RequestResult};
     use crate::graph::kronecker::paper_graph;
 
     let graph = paper_graph();
-    let kernels = GraphKernel::all();
-    let plan: Vec<(GraphKernel, u32)> = (0..requests)
-        .map(|i| (kernels[i % kernels.len()], (i % 32) as u32))
-        .collect();
+    let plan = super::workloads::mixed_request_plan(requests);
     let expected: Vec<u64> = plan
         .iter()
         .map(|&(k, source)| run_native_kernel(k, &graph, source))
@@ -345,6 +340,7 @@ pub fn pool_scaling(
                     kernel,
                     graph: graph.clone(),
                     source,
+                    deadline: Deadline::none(),
                 })
                 .collect()
         };
@@ -389,6 +385,230 @@ pub fn pool_scaling(
         r.speedup = if r.batch_ms > 0.0 { base_ms / r.batch_ms } else { 0.0 };
     }
     rows
+}
+
+/// One admission-sweep measurement: one submit mode at one offered
+/// load.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionRow {
+    /// Submit flavor: `"blocking"`, `"try"` or `"park"`.
+    pub mode: String,
+    /// Requests offered per rep.
+    pub offered: usize,
+    pub reps: u64,
+    /// Verdict counts across all reps.
+    pub accepted: u64,
+    /// `QueueFull` bounces (the open-loop `try` driver drops them).
+    pub rejected: u64,
+    pub shed: u64,
+    /// Accepted submissions that had to park for channel capacity.
+    pub parked: u64,
+    /// Accepted requests that completed past their deadline.
+    pub deadline_misses: u64,
+    pub completed: u64,
+    /// Mean wall time to offer + drain one rep (ms).
+    pub batch_ms: f64,
+    /// Completed requests per second.
+    pub throughput_rps: f64,
+}
+
+/// The three admission front doors the sweep compares.
+pub const ADMISSION_MODES: [&str; 3] = ["blocking", "try", "park"];
+
+/// The admission sweep: drive an open-loop burst of `offered` requests
+/// through each submit flavor at each offered load, measuring verdicts
+/// (accept / queue-full / shed), parks, deadline misses, and
+/// completion throughput. `deadline` stamps every request (`None` =
+/// deadline-less, nothing sheds); the template's `admission` section
+/// picks the shed policy.
+///
+/// Built-in correctness gates (the sweep doubles as a smoke test):
+/// every response's checksum must equal the single-pair kernel's, and
+/// the verdicts must reconcile — `accepted + rejected + shed ==
+/// offered × reps` and `completed == accepted`, i.e. nothing is ever
+/// silently dropped, on any path.
+pub fn admission_sweep(
+    template: &crate::coordinator::EngineConfig,
+    offered_loads: &[usize],
+    deadline: Option<std::time::Duration>,
+    reps: u64,
+) -> Vec<AdmissionRow> {
+    use crate::coordinator::{
+        run_native_kernel, Admission, Deadline, Engine, Request, RequestResult,
+    };
+    use crate::graph::kronecker::paper_graph;
+
+    let graph = paper_graph();
+    let max_load = offered_loads.iter().copied().max().unwrap_or(0);
+    let plan = super::workloads::mixed_request_plan(max_load);
+    let expected: Vec<u64> = plan
+        .iter()
+        .map(|&(k, source)| run_native_kernel(k, &graph, source))
+        .collect();
+
+    let reps = reps.max(1);
+    let mut rows = Vec::new();
+    for &offered in offered_loads {
+        for mode in ADMISSION_MODES {
+            // A fresh engine per row keeps the verdict counters
+            // attributable to exactly this (mode, load) cell.
+            let mut engine = Engine::new(template.clone());
+            let make_req = |i: usize| Request {
+                id: i as u64,
+                kernel: plan[i].0,
+                graph: graph.clone(),
+                source: plan[i].1,
+                deadline: match deadline {
+                    Some(d) => Deadline::within(d),
+                    None => Deadline::none(),
+                },
+            };
+            // Untimed deadline-less warmup: absorbs shard spawn/pin
+            // cost without touching the verdict counters (deadline-less
+            // requests are never shed).
+            for i in 0..offered.min(8) {
+                let _ = engine.submit(Request { deadline: Deadline::none(), ..make_req(i) });
+            }
+            engine.drain();
+            let warm_metrics = engine.aggregated_metrics();
+            let warm_completed = warm_metrics.native_requests.get();
+
+            let mut rejected = 0u64;
+            let mut completed = 0u64;
+            let mut total_ns = 0u128;
+            for _ in 0..reps {
+                let t0 = std::time::Instant::now();
+                for i in 0..offered {
+                    let verdict = match mode {
+                        "blocking" => engine.submit(make_req(i)),
+                        "try" => engine.try_submit(make_req(i)),
+                        "park" => engine.submit_or_park(make_req(i)),
+                        _ => unreachable!(),
+                    };
+                    if let Admission::QueueFull { .. } = verdict {
+                        rejected += 1;
+                    }
+                }
+                let responses = engine.drain();
+                total_ns += t0.elapsed().as_nanos();
+                for r in &responses {
+                    assert_eq!(
+                        r.result,
+                        RequestResult::Native(expected[r.id as usize]),
+                        "admission sweep checksum diverged (mode {mode}, request {})",
+                        r.id
+                    );
+                }
+                completed += responses.len() as u64;
+            }
+            let agg = engine.aggregated_metrics();
+            let shed = agg.admission.shed_requests.get();
+            let accepted = (offered as u64 * reps) - rejected - shed;
+            assert_eq!(
+                completed,
+                accepted,
+                "mode {mode}, load {offered}: every accepted request must complete"
+            );
+            assert_eq!(
+                agg.native_requests.get(),
+                warm_completed + completed,
+                "mode {mode}, load {offered}: served == completed (+ warmup)"
+            );
+            let batch_ms = total_ns as f64 / reps as f64 / 1e6;
+            rows.push(AdmissionRow {
+                mode: mode.to_string(),
+                offered,
+                reps,
+                accepted,
+                rejected,
+                shed,
+                parked: agg.admission.parked_submits.get(),
+                deadline_misses: agg.admission.deadline_misses.get(),
+                completed,
+                batch_ms,
+                throughput_rps: if total_ns > 0 {
+                    completed as f64 / (total_ns as f64 / 1e9)
+                } else {
+                    0.0
+                },
+            });
+        }
+    }
+    rows
+}
+
+/// Render the admission-sweep table.
+pub fn render_admission(rows: &[AdmissionRow]) -> String {
+    let mut out = format!(
+        "{:<10}{:>9}{:>10}{:>9}{:>7}{:>8}{:>8}{:>11}{:>12}\n",
+        "mode", "offered", "accepted", "rejected", "shed", "parked", "misses", "batch ms",
+        "req/s"
+    );
+    for r in rows {
+        out += &format!(
+            "{:<10}{:>9}{:>10}{:>9}{:>7}{:>8}{:>8}{:>11.3}{:>12.0}\n",
+            r.mode,
+            r.offered,
+            r.accepted,
+            r.rejected,
+            r.shed,
+            r.parked,
+            r.deadline_misses,
+            r.batch_ms,
+            r.throughput_rps,
+        );
+    }
+    out += "(accepted + rejected + shed = offered; completed checksums verified \
+            against the single-pair kernels)\n";
+    out
+}
+
+/// Serialize admission-sweep rows to JSON for the perf trajectory.
+pub fn admission_rows_to_json(rows: &[AdmissionRow]) -> String {
+    use crate::json::Value;
+    let arr = rows
+        .iter()
+        .map(|r| {
+            Value::Object(vec![
+                ("mode".into(), Value::String(r.mode.clone())),
+                ("offered".into(), Value::Number(r.offered as f64)),
+                ("reps".into(), Value::Number(r.reps as f64)),
+                ("accepted".into(), Value::Number(r.accepted as f64)),
+                ("rejected".into(), Value::Number(r.rejected as f64)),
+                ("shed".into(), Value::Number(r.shed as f64)),
+                ("parked".into(), Value::Number(r.parked as f64)),
+                (
+                    "deadline_misses".into(),
+                    Value::Number(r.deadline_misses as f64),
+                ),
+                ("completed".into(), Value::Number(r.completed as f64)),
+                ("batch_ms".into(), Value::Number(r.batch_ms)),
+                ("throughput_rps".into(), Value::Number(r.throughput_rps)),
+            ])
+        })
+        .collect();
+    crate::json::to_string(&Value::Array(arr))
+}
+
+/// Serialize intra-kernel rows to JSON (the nightly bench workflow
+/// archives these as the fork-join perf trajectory).
+pub fn intra_rows_to_json(rows: &[IntraRow]) -> String {
+    use crate::json::Value;
+    let arr = rows
+        .iter()
+        .map(|r| {
+            Value::Object(vec![
+                ("kernel".into(), Value::String(r.kernel.clone())),
+                ("serial_ns".into(), Value::Number(r.serial_ns)),
+                ("pair_speedup".into(), Value::Number(r.pair_speedup)),
+                (
+                    "parallel_for_speedup".into(),
+                    Value::Number(r.parallel_for_speedup),
+                ),
+            ])
+        })
+        .collect();
+    crate::json::to_string(&Value::Array(arr))
 }
 
 /// Render the pool-scaling table.
@@ -641,6 +861,76 @@ mod tests {
         let json = pool_rows_to_json(&rows);
         assert!(json.contains("\"shards\""));
         assert!(json.contains("\"throughput_rps\""));
+    }
+
+    #[test]
+    fn admission_sweep_reconciles_and_renders() {
+        // Deep channels + tiny loads: every mode accepts everything, so
+        // the reconciliation asserts inside the sweep do the heavy
+        // lifting. Unpinned so affinity-restricted CI works.
+        let template = crate::coordinator::EngineConfig {
+            pool: crate::relic::PoolConfig {
+                shards: Some(2),
+                pin: false,
+                ..crate::relic::PoolConfig::default()
+            },
+            ..crate::coordinator::EngineConfig::default()
+        };
+        let rows = admission_sweep(&template, &[4, 8], None, 1);
+        assert_eq!(rows.len(), 2 * ADMISSION_MODES.len());
+        for r in &rows {
+            assert_eq!(r.accepted, r.offered as u64, "{}: deep channels accept all", r.mode);
+            assert_eq!(r.completed, r.accepted);
+            assert_eq!(r.shed, 0);
+            assert_eq!(r.deadline_misses, 0, "deadline-less requests never miss");
+            assert!(r.batch_ms > 0.0);
+        }
+        let s = render_admission(&rows);
+        for mode in ADMISSION_MODES {
+            assert!(s.contains(mode), "render missing {mode}");
+        }
+        let json = admission_rows_to_json(&rows);
+        assert!(json.contains("\"mode\""));
+        assert!(json.contains("\"throughput_rps\""));
+    }
+
+    #[test]
+    fn admission_sweep_sheds_under_always_overloaded_policy() {
+        // LoadFactor(-1) reads as "always overloaded": every deadlined
+        // request sheds, deterministically, on every submit flavor.
+        let template = crate::coordinator::EngineConfig {
+            pool: crate::relic::PoolConfig {
+                shards: Some(1),
+                pin: false,
+                ..crate::relic::PoolConfig::default()
+            },
+            admission: crate::coordinator::AdmissionConfig {
+                shed: crate::coordinator::ShedPolicy::LoadFactor(-1.0),
+                service_estimate_ns: 0,
+            },
+            ..crate::coordinator::EngineConfig::default()
+        };
+        let rows =
+            admission_sweep(&template, &[6], Some(std::time::Duration::from_secs(3600)), 1);
+        for r in &rows {
+            assert_eq!(r.shed, r.offered as u64, "{}: all deadlined requests shed", r.mode);
+            assert_eq!(r.accepted, 0);
+            assert_eq!(r.completed, 0);
+        }
+    }
+
+    #[test]
+    fn intra_rows_serialize_to_json() {
+        let rows = vec![IntraRow {
+            kernel: "tc".into(),
+            serial_ns: 1234.5,
+            pair_speedup: 1.4,
+            parallel_for_speedup: 1.2,
+        }];
+        let json = intra_rows_to_json(&rows);
+        assert!(json.contains("\"kernel\""));
+        assert!(json.contains("\"pair_speedup\""));
+        assert!(json.contains("tc"));
     }
 
     #[test]

@@ -139,6 +139,16 @@ impl Workload {
     }
 }
 
+/// The service-bench request plan: `n` requests cycling the six graph
+/// kernels over 32 sources. [`crate::bench::figures::pool_scaling`]
+/// and [`crate::bench::figures::admission_sweep`] share this plan, so
+/// their throughput rows measure the same workload and stay
+/// comparable.
+pub fn mixed_request_plan(n: usize) -> Vec<(crate::coordinator::GraphKernel, u32)> {
+    let kernels = crate::coordinator::GraphKernel::all();
+    (0..n).map(|i| (kernels[i % kernels.len()], (i % 32) as u32)).collect()
+}
+
 type TraceCache = std::sync::Mutex<std::collections::HashMap<(&'static str, u64), Trace>>;
 
 fn trace_cache() -> &'static TraceCache {
@@ -244,6 +254,18 @@ mod tests {
                 w.name
             );
         }
+    }
+
+    #[test]
+    fn mixed_request_plan_cycles_kernels_and_sources() {
+        use crate::coordinator::GraphKernel;
+        let plan = mixed_request_plan(14);
+        assert_eq!(plan.len(), 14);
+        assert_eq!(plan[0].0, GraphKernel::all()[0]);
+        assert_eq!(plan[6].0, plan[0].0, "six kernels cycle");
+        assert_eq!(plan[0].1, 0);
+        assert_eq!(plan[13].1, 13, "sources walk 0..32");
+        assert!(mixed_request_plan(0).is_empty());
     }
 
     #[test]

@@ -239,6 +239,76 @@ impl PoolSettings {
     }
 }
 
+/// Admission-control configuration (section `[admission]`; defaults
+/// mirror [`crate::coordinator::AdmissionConfig`]: admit everything,
+/// no service estimate). The serve CLI's `--shed`, `--deadline-ms` and
+/// `--service-estimate-us` flags override these.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionSettings {
+    /// Shed policy spelling: `"never"`, `"past-deadline"`,
+    /// `"load-factor"` or `"load-factor:0.75"`.
+    pub shed: String,
+    /// Per-request service-time estimate in microseconds (0 = slack
+    /// estimation disabled; only already-expired deadlines shed).
+    pub service_estimate_us: u64,
+    /// Default deadline the serve/admission CLI stamps on generated
+    /// requests, in milliseconds (0 = no deadline).
+    pub deadline_ms: u64,
+}
+
+impl Default for AdmissionSettings {
+    fn default() -> Self {
+        AdmissionSettings { shed: "never".into(), service_estimate_us: 0, deadline_ms: 0 }
+    }
+}
+
+impl AdmissionSettings {
+    /// Overlay values from a raw config (section `[admission]`). An
+    /// unrecognized shed spelling keeps the default, matching the other
+    /// sections' lenient overlay style.
+    pub fn from_raw(raw: &RawConfig) -> Self {
+        let d = Self::default();
+        AdmissionSettings {
+            shed: raw
+                .get_str("admission.shed")
+                .filter(|s| crate::coordinator::ShedPolicy::parse(s).is_some())
+                .unwrap_or(&d.shed)
+                .to_string(),
+            service_estimate_us: raw
+                .get_int("admission.service_estimate_us")
+                .map(|v| v.max(0) as u64)
+                .unwrap_or(d.service_estimate_us),
+            deadline_ms: raw
+                .get_int("admission.deadline_ms")
+                .map(|v| v.max(0) as u64)
+                .unwrap_or(d.deadline_ms),
+        }
+    }
+
+    /// The parsed shed policy (the spelling is validated on overlay, so
+    /// this only falls back to `Never` for a hand-built struct).
+    pub fn shed_policy(&self) -> crate::coordinator::ShedPolicy {
+        crate::coordinator::ShedPolicy::parse(&self.shed).unwrap_or_default()
+    }
+
+    /// Materialize as the engine's runtime admission config.
+    pub fn to_config(&self) -> crate::coordinator::AdmissionConfig {
+        crate::coordinator::AdmissionConfig {
+            shed: self.shed_policy(),
+            service_estimate_ns: self.service_estimate_us.saturating_mul(1_000),
+        }
+    }
+
+    /// The default request deadline as a duration (`None` when 0).
+    pub fn deadline(&self) -> Option<std::time::Duration> {
+        if self.deadline_ms == 0 {
+            None
+        } else {
+            Some(std::time::Duration::from_millis(self.deadline_ms))
+        }
+    }
+}
+
 /// Fork-join runtime configuration (section `[relic]`; defaults mirror
 /// [`crate::relic::RelicConfig`]). Pinning stays a CLI/topology concern,
 /// so only the portable knobs live here.
@@ -353,6 +423,35 @@ mod tests {
         assert!(s.pin);
         assert_eq!(s.channel_capacity, 1);
         assert_eq!(s.max_batch, 32);
+    }
+
+    #[test]
+    fn admission_settings_overlay_and_materialize() {
+        use crate::coordinator::ShedPolicy;
+        let d = AdmissionSettings::default();
+        assert_eq!(d.shed_policy(), ShedPolicy::Never);
+        assert_eq!(d.deadline(), None);
+        assert_eq!(d.to_config().service_estimate_ns, 0);
+        let raw = RawConfig::parse(
+            "[admission]\nshed = \"load-factor:0.75\"\nservice_estimate_us = 40\n\
+             deadline_ms = 250\n",
+        )
+        .unwrap();
+        let s = AdmissionSettings::from_raw(&raw);
+        assert_eq!(s.shed_policy(), ShedPolicy::LoadFactor(0.75));
+        assert_eq!(s.to_config().service_estimate_ns, 40_000);
+        assert_eq!(s.deadline(), Some(std::time::Duration::from_millis(250)));
+        // Unknown spelling and negative values keep/clamp defaults.
+        let raw =
+            RawConfig::parse("[admission]\nshed = \"nope\"\ndeadline_ms = -3\n").unwrap();
+        let s = AdmissionSettings::from_raw(&raw);
+        assert_eq!(s.shed, "never");
+        assert_eq!(s.deadline_ms, 0);
+        // Partial overlay keeps defaults elsewhere.
+        let raw = RawConfig::parse("[admission]\nshed = \"past-deadline\"\n").unwrap();
+        let s = AdmissionSettings::from_raw(&raw);
+        assert_eq!(s.shed_policy(), ShedPolicy::PastDeadline);
+        assert_eq!(s.service_estimate_us, 0);
     }
 
     #[test]

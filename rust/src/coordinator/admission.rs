@@ -1,0 +1,340 @@
+//! Admission control for the sharded engine: deadlines, shed policy,
+//! and the admission verdict every submit path returns.
+//!
+//! The engine's front door decides, per request, one of three fates:
+//!
+//! * **Accepted** — the request is routed to a shard and *will* be
+//!   served (accepted requests are never dropped and never reordered
+//!   within their shard);
+//! * **QueueFull** — the non-blocking path found the routed shard's
+//!   bounded channel full; the request comes back to the caller
+//!   untouched, to retry, park, or redirect;
+//! * **Shed** — the configured [`ShedPolicy`] decided the request can
+//!   no longer meet its [`Deadline`] (or the pool is past its load
+//!   threshold), so serving it would waste shard time that on-time
+//!   requests need. Shedding happens **at admission, never inside a
+//!   shard**: once a request crosses the channel it is part of the
+//!   shard's FIFO and dropping it there would break the no-drop /
+//!   no-reorder invariant the whole engine is built on — and would
+//!   waste the queue slot it already consumed. Every shed is counted
+//!   ([`crate::metrics::AdmissionMetrics`]); nothing is dropped
+//!   silently.
+//!
+//! Deadline-less requests are *never* shed under any policy — a
+//! deadline is an explicit contract that lateness has zero value, and
+//! only requests that opted into that contract are eligible for
+//! shedding.
+
+use std::time::{Duration, Instant};
+
+/// When a request stops being worth serving. `Deadline::none()` (the
+/// default) means "serve whenever" — such requests are never shed and
+/// never count as deadline misses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Deadline(Option<Instant>);
+
+impl Deadline {
+    /// No deadline: never shed, never late.
+    pub const fn none() -> Self {
+        Deadline(None)
+    }
+
+    /// Absolute deadline.
+    pub const fn at(instant: Instant) -> Self {
+        Deadline(Some(instant))
+    }
+
+    /// Deadline `budget` from now.
+    pub fn within(budget: Duration) -> Self {
+        Deadline(Some(Instant::now() + budget))
+    }
+
+    /// The absolute instant, if bounded.
+    pub fn instant(&self) -> Option<Instant> {
+        self.0
+    }
+
+    /// True when no deadline was set.
+    pub fn is_none(&self) -> bool {
+        self.0.is_none()
+    }
+
+    /// Remaining slack at `now`: `None` = unbounded, `Some(0)` = past
+    /// due.
+    pub fn slack_at(&self, now: Instant) -> Option<Duration> {
+        self.0.map(|d| d.saturating_duration_since(now))
+    }
+
+    /// True when the deadline exists and has passed at `now`.
+    pub fn is_past(&self, now: Instant) -> bool {
+        matches!(self.0, Some(d) if d <= now)
+    }
+}
+
+/// What the engine does with requests that cannot (or should not) be
+/// served in time. Applies only to requests carrying a [`Deadline`].
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum ShedPolicy {
+    /// Admit everything; admission degenerates to PR 2's counted
+    /// blocking backpressure.
+    #[default]
+    Never,
+    /// Shed requests that can no longer meet their deadline: already
+    /// expired at admission, or (when the engine carries a service-time
+    /// estimate) with less slack than the estimated wait on the best
+    /// shard.
+    PastDeadline,
+    /// [`PastDeadline`](ShedPolicy::PastDeadline), plus shed *every*
+    /// deadlined request while the pool's load factor exceeds the
+    /// threshold — overload protection that keeps queueing delay from
+    /// pushing the whole deadlined population past due.
+    LoadFactor(f32),
+}
+
+impl ShedPolicy {
+    /// Parse a CLI/config spelling: `never`, `past-deadline`,
+    /// `load-factor` (default threshold 0.9) or `load-factor:0.75`.
+    pub fn parse(s: &str) -> Option<ShedPolicy> {
+        match s {
+            "never" => Some(ShedPolicy::Never),
+            "past-deadline" => Some(ShedPolicy::PastDeadline),
+            "load-factor" => Some(ShedPolicy::LoadFactor(DEFAULT_LOAD_FACTOR)),
+            _ => {
+                let threshold = s.strip_prefix("load-factor:")?;
+                threshold.parse::<f32>().ok().map(ShedPolicy::LoadFactor)
+            }
+        }
+    }
+
+    /// Display name (round-trips through [`parse`](Self::parse)).
+    pub fn name(&self) -> String {
+        match self {
+            ShedPolicy::Never => "never".into(),
+            ShedPolicy::PastDeadline => "past-deadline".into(),
+            ShedPolicy::LoadFactor(f) => format!("load-factor:{f}"),
+        }
+    }
+}
+
+/// Default overload threshold for `ShedPolicy::LoadFactor`.
+pub const DEFAULT_LOAD_FACTOR: f32 = 0.9;
+
+/// Why a request was shed at admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The deadline had already expired when the request arrived.
+    PastDeadline,
+    /// Remaining slack is smaller than the estimated wait on the least
+    /// loaded shard — it would miss even if admitted right now.
+    SlackExhausted,
+    /// Pool load factor above the policy threshold.
+    Overload,
+}
+
+/// Engine-level admission knobs (the `[admission]` config section and
+/// the `serve --shed` / `--service-estimate-us` flags materialize
+/// here).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AdmissionConfig {
+    /// What to do with requests that cannot meet their deadline.
+    pub shed: ShedPolicy,
+    /// Per-request service-time estimate in nanoseconds, used for
+    /// least-slack routing and the `SlackExhausted` shed decision.
+    /// `0` (the default) disables the estimate: only already-expired
+    /// deadlines shed, which keeps admission decisions independent of
+    /// queue depth — and therefore deterministic — unless the operator
+    /// opts in with a measured estimate.
+    pub service_estimate_ns: u64,
+}
+
+/// The verdict of one submit. `QueueFull` and `Shed` hand the request
+/// back so the caller can retry, downgrade, or account for it — the
+/// engine never consumes a request it did not accept.
+#[derive(Debug)]
+#[must_use = "an un-accepted verdict carries the request back — dropping it loses the request"]
+pub enum Admission {
+    /// Queued on `shard`; a response is guaranteed (in submission
+    /// order) from the next [`super::Engine::drain`].
+    Accepted {
+        shard: usize,
+        /// True when the parked path had to wait for the shard's
+        /// consumer to free channel capacity before the request fit.
+        parked: bool,
+    },
+    /// Non-blocking admission found the routed shard's channel full.
+    QueueFull { rejected: super::Request },
+    /// The shed policy refused the request (counted, never silent).
+    Shed {
+        reason: ShedReason,
+        request: super::Request,
+    },
+}
+
+impl Admission {
+    /// The shard an accepted request went to.
+    pub fn shard(&self) -> Option<usize> {
+        match self {
+            Admission::Accepted { shard, .. } => Some(*shard),
+            _ => None,
+        }
+    }
+
+    pub fn is_accepted(&self) -> bool {
+        matches!(self, Admission::Accepted { .. })
+    }
+
+    pub fn is_queue_full(&self) -> bool {
+        matches!(self, Admission::QueueFull { .. })
+    }
+
+    pub fn shed_reason(&self) -> Option<ShedReason> {
+        match self {
+            Admission::Shed { reason, .. } => Some(*reason),
+            _ => None,
+        }
+    }
+}
+
+/// The shed decision, pure in its inputs so every submit flavor
+/// (blocking, try, parked) applies exactly the same policy:
+///
+/// * `est_wait` — estimated time until a request admitted *now* to the
+///   best shard would complete (queue depth × service estimate,
+///   including the request's own service time);
+/// * `load_factor` — fraction of total admission capacity in use.
+///
+/// Returns `None` to admit. `ShedPolicy::Never` and deadline-less
+/// requests always admit.
+pub fn shed_decision(
+    policy: ShedPolicy,
+    deadline: Deadline,
+    now: Instant,
+    est_wait: Duration,
+    load_factor: f32,
+) -> Option<ShedReason> {
+    let slack = match (policy, deadline.slack_at(now)) {
+        (ShedPolicy::Never, _) | (_, None) => return None,
+        (_, Some(slack)) => slack,
+    };
+    if slack.is_zero() {
+        return Some(ShedReason::PastDeadline);
+    }
+    if est_wait > slack {
+        return Some(ShedReason::SlackExhausted);
+    }
+    if let ShedPolicy::LoadFactor(threshold) = policy {
+        if load_factor > threshold {
+            return Some(ShedReason::Overload);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadline_slack_and_expiry() {
+        let now = Instant::now();
+        let none = Deadline::none();
+        assert!(none.is_none());
+        assert_eq!(none.slack_at(now), None);
+        assert!(!none.is_past(now));
+
+        let d = Deadline::at(now + Duration::from_millis(5));
+        assert_eq!(d.slack_at(now), Some(Duration::from_millis(5)));
+        assert!(!d.is_past(now));
+        assert!(d.is_past(now + Duration::from_millis(5)));
+        assert_eq!(d.slack_at(now + Duration::from_secs(1)), Some(Duration::ZERO));
+
+        let past = Deadline::at(now);
+        assert!(past.is_past(now));
+        // `within` lands in the future.
+        assert!(!Deadline::within(Duration::from_secs(60)).is_past(Instant::now()));
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [
+            ShedPolicy::Never,
+            ShedPolicy::PastDeadline,
+            ShedPolicy::LoadFactor(0.75),
+        ] {
+            assert_eq!(ShedPolicy::parse(&p.name()), Some(p), "{}", p.name());
+        }
+        assert_eq!(
+            ShedPolicy::parse("load-factor"),
+            Some(ShedPolicy::LoadFactor(DEFAULT_LOAD_FACTOR))
+        );
+        assert_eq!(ShedPolicy::parse("nope"), None);
+        assert_eq!(ShedPolicy::parse("load-factor:x"), None);
+        assert_eq!(ShedPolicy::default(), ShedPolicy::Never);
+    }
+
+    #[test]
+    fn never_and_deadline_less_always_admit() {
+        let now = Instant::now();
+        let expired = Deadline::at(now);
+        // Never admits even an expired deadline under full load.
+        assert_eq!(
+            shed_decision(ShedPolicy::Never, expired, now, Duration::from_secs(9), 2.0),
+            None
+        );
+        // Deadline-less requests admit under every policy.
+        for policy in [
+            ShedPolicy::PastDeadline,
+            ShedPolicy::LoadFactor(0.0),
+        ] {
+            assert_eq!(
+                shed_decision(policy, Deadline::none(), now, Duration::from_secs(9), 2.0),
+                None,
+                "{}",
+                policy.name()
+            );
+        }
+    }
+
+    #[test]
+    fn shed_reasons_in_priority_order() {
+        let now = Instant::now();
+        let live = Deadline::at(now + Duration::from_millis(10));
+        let expired = Deadline::at(now - Duration::from_millis(1));
+        let policy = ShedPolicy::LoadFactor(0.5);
+        // Expired beats everything.
+        assert_eq!(
+            shed_decision(policy, expired, now, Duration::ZERO, 0.0),
+            Some(ShedReason::PastDeadline)
+        );
+        // Slack smaller than the estimated wait.
+        assert_eq!(
+            shed_decision(policy, live, now, Duration::from_millis(11), 0.0),
+            Some(ShedReason::SlackExhausted)
+        );
+        // Slack fits but the pool is overloaded.
+        assert_eq!(
+            shed_decision(policy, live, now, Duration::from_millis(1), 0.6),
+            Some(ShedReason::Overload)
+        );
+        // Under threshold with slack to spare: admit.
+        assert_eq!(shed_decision(policy, live, now, Duration::from_millis(1), 0.4), None);
+        // PastDeadline ignores load factor entirely.
+        assert_eq!(
+            shed_decision(ShedPolicy::PastDeadline, live, now, Duration::from_millis(1), 0.99),
+            None
+        );
+    }
+
+    #[test]
+    fn est_wait_equal_to_slack_admits() {
+        // The boundary goes to the request: est_wait must *exceed*
+        // slack to shed, so a zero estimate (the default) never
+        // triggers SlackExhausted.
+        let now = Instant::now();
+        let d = Deadline::at(now + Duration::from_millis(2));
+        assert_eq!(
+            shed_decision(ShedPolicy::PastDeadline, d, now, Duration::from_millis(2), 0.0),
+            None
+        );
+    }
+}

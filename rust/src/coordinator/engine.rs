@@ -5,16 +5,33 @@
 //! pair — the paper's single-core scope. [`Engine`] scales it out while
 //! keeping that coordinator *unchanged* as each shard's inner loop:
 //!
-//! * [`Engine::submit`] tags each [`Request`] with a sequence number
-//!   and dispatches it to the least-loaded shard (bounded per-shard
-//!   channel, blocking backpressure — see [`crate::relic::pool`]);
+//! * every [`Request`] that passes admission is tagged with a sequence
+//!   number and dispatched to the shard with the least estimated wait
+//!   (bounded per-shard channel — see [`crate::relic::pool`] and
+//!   [`super::router::pick_shard`]);
+//! * the **front door** comes in three flavors sharing one admission
+//!   gate (shed policy + routing + slack accounting):
+//!   [`Engine::submit`] blocks on a full channel (PR 2's counted
+//!   backpressure, bit-for-bit under
+//!   [`ShedPolicy::Never`](super::admission::ShedPolicy::Never)),
+//!   [`Engine::try_submit`] returns [`Admission::QueueFull`] with the
+//!   request instead of waiting, and [`Engine::submit_or_park`] parks
+//!   the producer on the shard's drain signal until its consumer frees
+//!   capacity;
+//! * the gate **sheds at admission, never inside shards**: a request
+//!   that can no longer meet its [`Deadline`](super::admission::Deadline)
+//!   (or arrives over the load-factor threshold) is refused up front — once accepted it is
+//!   part of a shard's FIFO and will be served, so "accepted requests
+//!   are never dropped and never reordered per shard" stays an
+//!   invariant rather than a best effort. Every shed is counted in
+//!   [`crate::metrics::AdmissionMetrics`];
 //! * every shard thread owns a native-only `Coordinator`; its drained
 //!   batches go through `process_batch`, so request pairing and the
 //!   odd-leftover intra-request fork-join still happen per shard;
-//! * [`Engine::drain`] collects the responses of everything submitted
+//! * [`Engine::drain`] collects the responses of everything *accepted*
 //!   since the last drain and returns them in submission order;
-//! * per-shard [`ServiceMetrics`] plus the pool's admission counters
-//!   aggregate into one service-level [`Engine::report`].
+//! * per-shard [`ServiceMetrics`] plus the engine's own admission-side
+//!   counters aggregate into one service-level [`Engine::report`].
 //!
 //! Shards run the native kernels only: PJRT executors hold process-wide
 //! device state and are not replicated per shard — coarse offload stays
@@ -23,19 +40,23 @@
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
+use std::time::Instant;
 
-use crate::config::PoolSettings;
+use crate::config::{AdmissionSettings, PoolSettings};
 use crate::relic::pool::{discover_placements, PoolConfig, PoolSnapshot, RelicPool};
 use crate::relic::RelicConfig;
 
-use super::router::{Router, RouterConfig};
+use super::admission::{shed_decision, Admission, AdmissionConfig, ShedReason};
+use super::router::{pick_shard, Router, RouterConfig};
 use super::service::{Coordinator, Request, Response, ServiceMetrics};
 
-/// Engine configuration: pool sizing/placement plus routing.
+/// Engine configuration: pool sizing/placement, routing, and admission
+/// control.
 #[derive(Debug, Clone, Default)]
 pub struct EngineConfig {
     pub pool: PoolConfig,
     pub router: RouterConfig,
+    pub admission: AdmissionConfig,
 }
 
 impl EngineConfig {
@@ -48,16 +69,18 @@ impl EngineConfig {
         }
     }
 
-    /// Build from the `[pool]` section of a config file.
-    pub fn from_settings(s: &PoolSettings) -> Self {
+    /// Build from the `[pool]` and `[admission]` sections of a config
+    /// file.
+    pub fn from_settings(pool: &PoolSettings, admission: &AdmissionSettings) -> Self {
         EngineConfig {
             pool: PoolConfig {
-                shards: s.shard_count_hint(),
-                pin: s.pin,
-                channel_capacity: s.channel_capacity,
-                max_batch: s.max_batch,
+                shards: pool.shard_count_hint(),
+                pin: pool.pin,
+                channel_capacity: pool.channel_capacity,
+                max_batch: pool.max_batch,
             },
             router: RouterConfig::default(),
+            admission: admission.to_config(),
         }
     }
 }
@@ -74,10 +97,16 @@ pub struct Engine {
     responses: Receiver<(u64, Response)>,
     /// Responses received but not yet handed out by `drain`.
     collected: Vec<(u64, Response)>,
-    /// Requests submitted since the last completed `drain`.
+    /// Requests accepted since the last completed `drain`.
     pending: usize,
     next_seq: u64,
+    admission: AdmissionConfig,
     shard_metrics: Vec<Arc<ServiceMetrics>>,
+    /// Admission-side counters (shed, parked, slack): recorded here on
+    /// the submit path, merged with the shard-side metrics (which carry
+    /// the completion-side deadline misses) in
+    /// [`aggregated_metrics`](Self::aggregated_metrics).
+    admission_metrics: Arc<ServiceMetrics>,
 }
 
 impl Engine {
@@ -117,7 +146,9 @@ impl Engine {
             collected: Vec::new(),
             pending: 0,
             next_seq: 0,
+            admission: config.admission,
             shard_metrics,
+            admission_metrics: Arc::new(ServiceMetrics::default()),
         }
     }
 
@@ -126,18 +157,108 @@ impl Engine {
         self.pool.shard_count()
     }
 
-    /// Dispatch one request to the least-loaded shard. Returns the
-    /// shard it went to. Blocks only under backpressure (the chosen
-    /// shard's bounded channel is full).
-    pub fn submit(&mut self, req: Request) -> usize {
-        let seq = self.next_seq;
-        self.next_seq += 1;
-        self.pending += 1;
-        self.pool.submit(Sequenced { seq, req })
+    /// The configured admission knobs.
+    pub fn admission_config(&self) -> AdmissionConfig {
+        self.admission
     }
 
-    /// Wait for every response to the requests submitted since the last
-    /// drain and return them **in submission order**.
+    /// The shared admission gate: route the request to the shard with
+    /// the least estimated wait and apply the shed policy against the
+    /// request's deadline. `Ok` = (destination shard, request, slack
+    /// remaining in ns for a deadlined request); `Err` = the counted
+    /// [`Admission::Shed`] verdict, request included. The slack rides
+    /// along unrecorded: only [`accepted`](Self::accepted) samples it,
+    /// so a `QueueFull` bounce-and-retry cannot double-count one
+    /// request in the accepted-slack histogram.
+    fn admission_gate(&mut self, req: Request) -> Result<(usize, Request, Option<u64>), Admission> {
+        let now = Instant::now();
+        let (shard, est_wait) =
+            pick_shard(self.pool.depths_iter(), self.admission.service_estimate_ns);
+        if let Some(reason) = shed_decision(
+            self.admission.shed,
+            req.deadline,
+            now,
+            est_wait,
+            self.pool.load_factor(),
+        ) {
+            let m = &self.admission_metrics.admission;
+            m.shed_requests.inc();
+            match reason {
+                ShedReason::PastDeadline => m.shed_past_deadline.inc(),
+                ShedReason::SlackExhausted => m.shed_slack_exhausted.inc(),
+                ShedReason::Overload => m.shed_overload.inc(),
+            }
+            return Err(Admission::Shed { reason, request: req });
+        }
+        let slack_ns = req.deadline.slack_at(now).map(|s| s.as_nanos() as u64);
+        Ok((shard, req, slack_ns))
+    }
+
+    /// Bookkeeping for a request the pool definitely queued — this is
+    /// the one place the accepted-slack histogram is fed.
+    fn accepted(&mut self, shard: usize, parked: bool, slack_ns: Option<u64>) -> Admission {
+        self.next_seq += 1;
+        self.pending += 1;
+        if let Some(slack) = slack_ns {
+            self.admission_metrics.admission.slack_at_admission.record(slack);
+        }
+        Admission::Accepted { shard, parked }
+    }
+
+    /// Dispatch one request, blocking when the routed shard's channel
+    /// is full (counted backpressure — PR 2's behavior, which
+    /// [`ShedPolicy::Never`](super::admission::ShedPolicy::Never)
+    /// preserves bit-for-bit since the gate then admits everything
+    /// unconditionally).
+    pub fn submit(&mut self, req: Request) -> Admission {
+        let (shard, req, slack_ns) = match self.admission_gate(req) {
+            Ok(routed) => routed,
+            Err(shed) => return shed,
+        };
+        self.pool.submit_to(shard, Sequenced { seq: self.next_seq, req });
+        self.accepted(shard, false, slack_ns)
+    }
+
+    /// Non-blocking dispatch: a full channel returns
+    /// [`Admission::QueueFull`] with the request instead of waiting, so
+    /// an open-loop caller can retry, redirect, or drop it — the
+    /// engine counts the rejection but takes no ownership.
+    pub fn try_submit(&mut self, req: Request) -> Admission {
+        let (shard, req, slack_ns) = match self.admission_gate(req) {
+            Ok(routed) => routed,
+            Err(shed) => return shed,
+        };
+        match self.pool.try_submit_to(shard, Sequenced { seq: self.next_seq, req }) {
+            Ok(()) => self.accepted(shard, false, slack_ns),
+            Err(bounced) => {
+                self.admission_metrics.admission.queue_full_rejections.inc();
+                Admission::QueueFull { rejected: bounced.req }
+            }
+        }
+    }
+
+    /// Dispatch with a parked producer: when the routed shard's channel
+    /// is full, register on the shard's drain signal and sleep until
+    /// its consumer frees capacity (no spinning, no lost wakeups — see
+    /// [`crate::relic::pool`] for the protocol). Accepted requests
+    /// report whether they had to park.
+    pub fn submit_or_park(&mut self, req: Request) -> Admission {
+        let (shard, req, slack_ns) = match self.admission_gate(req) {
+            Ok(routed) => routed,
+            Err(shed) => return shed,
+        };
+        let parked = self.pool.submit_or_park_to(shard, Sequenced { seq: self.next_seq, req });
+        if parked {
+            self.admission_metrics.admission.parked_submits.inc();
+        }
+        self.accepted(shard, parked, slack_ns)
+    }
+
+    /// Wait for every response to the requests accepted since the last
+    /// drain and return them **in submission order**. Shed and
+    /// queue-full requests were never queued, so they are not waited
+    /// for — the counters in [`Self::aggregated_metrics`] account for
+    /// them.
     ///
     /// # Panics
     /// Panics if a shard thread dies (its handler panicked) while
@@ -171,10 +292,16 @@ impl Engine {
     }
 
     /// Drop-in replacement for [`Coordinator::process_batch`]: submit
-    /// the whole batch, then drain — responses in request order.
+    /// the whole batch (blocking admission), then drain. Responses come
+    /// back in request order for every *accepted* request; under a shed
+    /// policy the result can be shorter than the input (shed requests
+    /// are counted, never silently missing).
     pub fn process_batch(&mut self, requests: Vec<Request>) -> Vec<Response> {
         for req in requests {
-            self.submit(req);
+            // Verdict intentionally discarded: blocking admission never
+            // returns QueueFull, and a Shed verdict is already counted
+            // — batch callers read the shortfall from the metrics.
+            let _ = self.submit(req);
         }
         self.drain()
     }
@@ -184,28 +311,40 @@ impl Engine {
         self.pool.snapshot()
     }
 
+    /// Fraction of total admission-channel capacity in use right now.
+    pub fn load_factor(&self) -> f32 {
+        self.pool.load_factor()
+    }
+
     /// Metrics of one shard's coordinator.
     pub fn shard_metrics(&self, shard: usize) -> &ServiceMetrics {
         &self.shard_metrics[shard]
     }
 
-    /// Service-level metrics: every shard's [`ServiceMetrics`] folded
-    /// into one aggregate.
+    /// Service-level metrics: every shard's [`ServiceMetrics`] plus the
+    /// engine's admission-side counters folded into one aggregate.
     pub fn aggregated_metrics(&self) -> ServiceMetrics {
         let agg = ServiceMetrics::default();
         for m in &self.shard_metrics {
             agg.merge_from(m);
         }
+        agg.merge_from(&self.admission_metrics);
         agg
     }
 
-    /// Human-readable report: pool counters, one line per shard, and
-    /// the aggregated service metrics.
+    /// Human-readable report: pool counters, the admission verdicts,
+    /// one line per shard, and the aggregated service metrics.
     pub fn report(&self) -> String {
         let snap = self.pool.snapshot();
         let mut out = format!(
-            "pool: {} shards, {} dispatched, {} backpressure stalls\n",
-            snap.shards, snap.dispatched, snap.backpressure_stalls
+            "pool: {} shards, {} dispatched, {} backpressure stalls, {} parked\n",
+            snap.shards, snap.dispatched, snap.backpressure_stalls, snap.parked_submits
+        );
+        let agg = self.aggregated_metrics();
+        out += &format!(
+            "admission: policy {}, {}\n",
+            self.admission.shed.name(),
+            agg.admission.summary()
         );
         for (i, m) in self.shard_metrics.iter().enumerate() {
             let p = self.pool.placement(i);
@@ -221,7 +360,6 @@ impl Engine {
                 snap.occupancy[i],
             );
         }
-        let agg = self.aggregated_metrics();
         out += &format!(
             "total: {} native reqs {}\n",
             agg.native_requests.get(),
@@ -234,8 +372,11 @@ impl Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{run_native_kernel, Backend, GraphKernel, RequestResult};
+    use crate::coordinator::{
+        run_native_kernel, Backend, Deadline, GraphKernel, RequestResult, ShedPolicy,
+    };
     use crate::graph::kronecker::paper_graph;
+    use std::time::Duration;
 
     fn engine(shards: usize) -> Engine {
         // Unpinned in tests: CI containers may refuse affinity calls.
@@ -245,8 +386,26 @@ mod tests {
         })
     }
 
+    fn engine_with_admission(shards: usize, admission: AdmissionConfig) -> Engine {
+        Engine::new(EngineConfig {
+            pool: PoolConfig { shards: Some(shards), pin: false, ..PoolConfig::default() },
+            admission,
+            ..EngineConfig::default()
+        })
+    }
+
     fn req(id: u64, kernel: GraphKernel) -> Request {
-        Request { id, kernel, graph: paper_graph(), source: 0 }
+        Request {
+            id,
+            kernel,
+            graph: paper_graph(),
+            source: 0,
+            deadline: Deadline::none(),
+        }
+    }
+
+    fn req_due(id: u64, kernel: GraphKernel, deadline: Deadline) -> Request {
+        Request { deadline, ..req(id, kernel) }
     }
 
     #[test]
@@ -257,7 +416,8 @@ mod tests {
             kernels.iter().map(|&k| run_native_kernel(k, &paper_graph(), 0)).collect();
         for round in 0..3 {
             for (i, &k) in kernels.iter().enumerate() {
-                e.submit(req((round * 10 + i) as u64, k));
+                let verdict = e.submit(req((round * 10 + i) as u64, k));
+                assert!(verdict.is_accepted(), "Never policy accepts everything");
             }
             let responses = e.drain();
             assert_eq!(responses.len(), kernels.len());
@@ -301,7 +461,7 @@ mod tests {
         let mut e = engine(2);
         let n = 24;
         for i in 0..n {
-            e.submit(req(i, GraphKernel::Tc));
+            let _ = e.submit(req(i, GraphKernel::Tc));
         }
         let responses = e.drain();
         assert_eq!(responses.len(), n as usize);
@@ -313,6 +473,7 @@ mod tests {
         assert_eq!(snap.occupancy.iter().sum::<u64>(), n);
         let report = e.report();
         assert!(report.contains("pool: 2 shards"));
+        assert!(report.contains("admission: policy never"));
         assert!(report.contains("shard 0"));
         assert!(report.contains("total:"));
     }
@@ -322,5 +483,117 @@ mod tests {
         let mut e = engine(2);
         assert!(e.drain().is_empty());
         assert!(e.process_batch(Vec::new()).is_empty());
+    }
+
+    #[test]
+    fn try_submit_accepts_when_capacity_exists() {
+        let mut e = engine(2);
+        for i in 0..4 {
+            // Channels are deep (64) and requests tiny: all accepted.
+            let verdict = e.try_submit(req(i, GraphKernel::Bfs));
+            assert!(verdict.is_accepted(), "request {i}");
+            assert!(verdict.shard().is_some());
+        }
+        assert_eq!(e.drain().len(), 4);
+        assert_eq!(e.aggregated_metrics().admission.queue_full_rejections.get(), 0);
+    }
+
+    #[test]
+    fn past_deadline_policy_sheds_expired_requests_only() {
+        let mut e = engine_with_admission(
+            1,
+            AdmissionConfig { shed: ShedPolicy::PastDeadline, service_estimate_ns: 0 },
+        );
+        let expired = Deadline::at(Instant::now());
+        let generous = Deadline::within(Duration::from_secs(3600));
+        let verdict = e.submit(req_due(0, GraphKernel::Bfs, expired));
+        assert_eq!(verdict.shed_reason(), Some(ShedReason::PastDeadline));
+        assert!(matches!(verdict, Admission::Shed { request, .. } if request.id == 0),
+            "the shed request comes back to the caller");
+        assert!(e.submit(req_due(1, GraphKernel::Bfs, generous)).is_accepted());
+        assert!(e.submit(req(2, GraphKernel::Bfs)).is_accepted(), "deadline-less never sheds");
+        let responses = e.drain();
+        assert_eq!(responses.len(), 2, "only accepted requests produce responses");
+        assert_eq!(responses[0].id, 1);
+        assert_eq!(responses[1].id, 2);
+        let agg = e.aggregated_metrics();
+        assert_eq!(agg.admission.shed_requests.get(), 1);
+        assert_eq!(agg.admission.shed_past_deadline.get(), 1);
+        assert_eq!(agg.admission.deadline_misses.get(), 0, "shed ≠ miss");
+        // Reconciliation: submitted (3) = completed (2) + shed (1).
+        assert_eq!(agg.native_requests.get() + agg.admission.shed_requests.get(), 3);
+    }
+
+    #[test]
+    fn slack_exhausted_sheds_when_estimate_exceeds_deadline() {
+        // A 10-second-per-request estimate makes any sub-second
+        // deadline unmeetable even on an idle pool (the estimate
+        // includes the request's own service time).
+        let mut e = engine_with_admission(
+            1,
+            AdmissionConfig {
+                shed: ShedPolicy::PastDeadline,
+                service_estimate_ns: 10_000_000_000,
+            },
+        );
+        let deadline = Deadline::within(Duration::from_millis(100));
+        let verdict = e.submit(req_due(0, GraphKernel::Bfs, deadline));
+        assert_eq!(verdict.shed_reason(), Some(ShedReason::SlackExhausted));
+        // A deadline beyond the estimate is admitted.
+        assert!(e
+            .submit(req_due(1, GraphKernel::Bfs, Deadline::within(Duration::from_secs(3600))))
+            .is_accepted());
+        assert_eq!(e.drain().len(), 1);
+        assert_eq!(e.aggregated_metrics().admission.shed_slack_exhausted.get(), 1);
+    }
+
+    #[test]
+    fn load_factor_policy_sheds_deadlined_requests_under_overload() {
+        // A negative threshold reads as "always overloaded":
+        // deterministic overload shedding without racing the shards.
+        let mut e = engine_with_admission(
+            2,
+            AdmissionConfig { shed: ShedPolicy::LoadFactor(-1.0), service_estimate_ns: 0 },
+        );
+        let generous = Deadline::within(Duration::from_secs(3600));
+        let verdict = e.submit(req_due(0, GraphKernel::Bfs, generous));
+        assert_eq!(verdict.shed_reason(), Some(ShedReason::Overload));
+        // Deadline-less traffic rides through overload untouched.
+        assert!(e.submit(req(1, GraphKernel::Bfs)).is_accepted());
+        assert_eq!(e.drain().len(), 1);
+        let agg = e.aggregated_metrics();
+        assert_eq!(agg.admission.shed_overload.get(), 1);
+        assert_eq!(agg.admission.shed_requests.get(), 1);
+    }
+
+    #[test]
+    fn submit_or_park_accepts_and_reports_slack() {
+        let mut e = engine(1);
+        let verdict = e.submit_or_park(req_due(
+            0,
+            GraphKernel::Bfs,
+            Deadline::within(Duration::from_secs(3600)),
+        ));
+        assert!(matches!(verdict, Admission::Accepted { parked: false, .. }),
+            "an empty channel admits without parking");
+        assert_eq!(e.drain().len(), 1);
+        let agg = e.aggregated_metrics();
+        assert_eq!(agg.admission.slack_at_admission.count(), 1);
+        assert_eq!(agg.admission.parked_submits.get(), 0);
+    }
+
+    #[test]
+    fn never_policy_reports_no_admission_activity() {
+        let mut e = engine(1);
+        for i in 0..6 {
+            let _ = e.submit(req(i, GraphKernel::Cc));
+        }
+        e.drain();
+        let agg = e.aggregated_metrics();
+        assert_eq!(agg.admission.shed_requests.get(), 0);
+        assert_eq!(agg.admission.parked_submits.get(), 0);
+        assert_eq!(agg.admission.queue_full_rejections.get(), 0);
+        assert_eq!(agg.admission.slack_at_admission.count(), 0);
+        assert!(e.report().contains("shed=0"));
     }
 }

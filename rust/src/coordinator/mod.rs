@@ -6,23 +6,31 @@
 //!
 //! Components:
 //! * [`router`] — per-request backend decision (PJRT vs native) based
-//!   on kernel kind and graph size vs the artifact manifest;
+//!   on kernel kind and graph size vs the artifact manifest, plus the
+//!   least-wait shard pick ([`router::pick_shard`]);
 //! * [`service`] — the request loop: batches compatible PJRT requests,
 //!   pairs fine-grained native requests onto Relic, records latency and
 //!   throughput metrics;
+//! * [`admission`] — deadlines, the shed policy, and the
+//!   [`Admission`] verdict every engine submit path returns;
 //! * [`engine`] — the machine-scale layer: [`Engine::submit`] /
+//!   [`Engine::try_submit`] / [`Engine::submit_or_park`] /
 //!   [`Engine::drain`] over a [`crate::relic::RelicPool`] of pinned
 //!   pair-shards, each shard running an unchanged single-pair
 //!   [`Coordinator`] as its inner loop.
 //!
 //! See `examples/hybrid_pjrt.rs` for the end-to-end driver.
 
+pub mod admission;
 pub mod engine;
 pub mod router;
 pub mod service;
 
+pub use admission::{
+    shed_decision, Admission, AdmissionConfig, Deadline, ShedPolicy, ShedReason,
+};
 pub use engine::{Engine, EngineConfig};
-pub use router::{Backend, Router, RouterConfig};
+pub use router::{pick_shard, Backend, Router, RouterConfig};
 pub use service::{Coordinator, Request, RequestResult, Response, ServiceMetrics};
 
 use crate::graph::CsrGraph;

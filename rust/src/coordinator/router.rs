@@ -1,4 +1,5 @@
-//! Request routing: PJRT offload vs native execution.
+//! Request routing: PJRT offload vs native execution, plus the
+//! shard-selection rule the sharded [`super::Engine`] admits with.
 //!
 //! Policy (configurable): kernels whose artifact exists for the
 //! request's graph size AND whose dense formulation amortizes the
@@ -6,6 +7,13 @@
 //! runs natively. Fine-grained native requests are additionally marked
 //! pairable so the service can co-schedule two of them on the SMT core
 //! through Relic.
+//!
+//! Shard selection ([`pick_shard`]) minimizes *estimated wait* rather
+//! than raw queue depth: with a per-request service-time estimate the
+//! router can tell the admission layer how long a request admitted now
+//! would sit, which is what the least-slack shed decision compares
+//! against a deadline's remaining slack. With the estimate disabled
+//! (0, the default) it degenerates to exactly PR 2's least-loaded rule.
 
 use super::GraphKernel;
 use crate::runtime::Manifest;
@@ -67,6 +75,39 @@ impl Router {
     }
 }
 
+/// Pick the shard a new request should be admitted to, returning the
+/// shard index and the estimated wait for a request admitted to it
+/// right now. Takes the per-shard depths as an iterator so the hot
+/// submit path can feed it straight from the pool's atomics without
+/// allocating.
+///
+/// The estimate is `(depth + 1) × service_estimate_ns`: everything
+/// already queued or in processing on the shard, *plus the request's
+/// own service time* — "can this deadline still be met" must include
+/// actually running the request. With `service_estimate_ns == 0` every
+/// estimate is zero and the rule is exactly PR 2's least-loaded pick
+/// (ties to the lowest index), so `ShedPolicy::Never` engines route
+/// bit-for-bit as before.
+///
+/// # Panics
+/// Panics on an empty `depths` iterator (a pool always has ≥ 1 shard).
+pub fn pick_shard<I>(depths: I, service_estimate_ns: u64) -> (usize, std::time::Duration)
+where
+    I: IntoIterator<Item = usize>,
+{
+    let mut best = None;
+    let mut best_depth = usize::MAX;
+    for (i, d) in depths.into_iter().enumerate() {
+        if best.is_none() || d < best_depth {
+            best = Some(i);
+            best_depth = d;
+        }
+    }
+    let best = best.expect("pick_shard needs at least one shard");
+    let est_ns = (best_depth as u64).saturating_add(1).saturating_mul(service_estimate_ns);
+    (best, std::time::Duration::from_nanos(est_ns))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,6 +152,20 @@ mod tests {
         let r = Router::new(RouterConfig { pjrt_min_n: 64, pjrt_enabled: true }, Some(&m));
         assert_eq!(r.route(GraphKernel::Pr, 32), Backend::Native);
         assert_eq!(r.route(GraphKernel::Tc, 64), Backend::Pjrt);
+    }
+
+    #[test]
+    fn pick_shard_is_least_loaded_with_wait_estimate() {
+        use std::time::Duration;
+        // Ties go low; zero estimate means zero wait (PR 2 rule).
+        assert_eq!(pick_shard([0, 0, 0], 0), (0, Duration::ZERO));
+        assert_eq!(pick_shard([3, 1, 1], 0), (1, Duration::ZERO));
+        // The estimate covers the queue *and* the request itself.
+        assert_eq!(pick_shard([3, 2, 5], 1_000), (1, Duration::from_nanos(3_000)));
+        assert_eq!(pick_shard([0], 250), (0, Duration::from_nanos(250)));
+        // Saturates instead of overflowing on absurd inputs.
+        let (_, wait) = pick_shard([usize::MAX], u64::MAX);
+        assert_eq!(wait, Duration::from_nanos(u64::MAX));
     }
 
     #[test]

@@ -16,19 +16,25 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::graph::{dense, CsrGraph};
-use crate::metrics::{Counter, Histogram};
+use crate::metrics::{AdmissionMetrics, Counter, Histogram};
 use crate::relic::{Par, Relic, RelicConfig};
 use crate::runtime::GraphExecutor;
 
+use super::admission::Deadline;
 use super::router::{Backend, Router};
 use super::{run_native_kernel, run_native_kernel_par, GraphKernel};
 
 /// One analytics request.
+#[derive(Debug)]
 pub struct Request {
     pub id: u64,
     pub kernel: GraphKernel,
     pub graph: CsrGraph,
     pub source: u32,
+    /// When this request stops being worth serving.
+    /// [`Deadline::none()`] (the `Default`) opts out of deadline
+    /// accounting and shedding entirely.
+    pub deadline: Deadline,
 }
 
 /// Result payload of a processed request.
@@ -60,6 +66,11 @@ pub struct ServiceMetrics {
     pub intra_requests: Counter,
     pub native_latency: Histogram,
     pub pjrt_latency: Histogram,
+    /// Admission-control counters. The engine records the
+    /// admission-side events (shed, parked, slack) into its own
+    /// instance; the coordinator records completion-side events
+    /// (deadline misses) per shard; aggregation merges both.
+    pub admission: AdmissionMetrics,
 }
 
 impl ServiceMetrics {
@@ -72,6 +83,40 @@ impl ServiceMetrics {
         self.intra_requests.add(other.intra_requests.get());
         self.native_latency.merge_from(&other.native_latency);
         self.pjrt_latency.merge_from(&other.pjrt_latency);
+        self.admission.merge_from(&other.admission);
+    }
+
+    /// Completion accounting for exactly one request: a request
+    /// counter bump, one latency sample, and — when the request
+    /// carried a deadline that `now` has passed — one deadline miss.
+    ///
+    /// Every execution path (PJRT, Relic-paired, odd-leftover
+    /// intra-parallel, and the PJRT→native fallback) must fund the
+    /// histograms through here: recording inline per-path is how the
+    /// paired path once double-weighted solo requests and the
+    /// intra-parallel path missed deadline accounting, and what keeps
+    /// `Engine::report`'s per-shard aggregation meaningful is that
+    /// "one completion = one sample" holds on every path.
+    pub fn record_completion(
+        &self,
+        backend: Backend,
+        latency_ns: u64,
+        deadline: Deadline,
+        now: Instant,
+    ) {
+        match backend {
+            Backend::Native => {
+                self.native_requests.inc();
+                self.native_latency.record(latency_ns);
+            }
+            Backend::Pjrt => {
+                self.pjrt_requests.inc();
+                self.pjrt_latency.record(latency_ns);
+            }
+        }
+        if deadline.is_past(now) {
+            self.admission.deadline_misses.inc();
+        }
     }
 }
 
@@ -139,9 +184,9 @@ impl Coordinator {
         for (idx, req) in pjrt_queue {
             let t0 = Instant::now();
             let result = self.execute_pjrt(&req);
-            let latency = t0.elapsed().as_nanos() as u64;
-            self.metrics.pjrt_requests.inc();
-            self.metrics.pjrt_latency.record(latency);
+            let done = Instant::now();
+            let latency = done.duration_since(t0).as_nanos() as u64;
+            self.metrics.record_completion(Backend::Pjrt, latency, req.deadline, done);
             responses[idx] = Some(Response {
                 id: req.id,
                 backend: Backend::Pjrt,
@@ -173,15 +218,16 @@ impl Coordinator {
                         },
                         &task_b,
                     );
-                    let latency = t0.elapsed().as_nanos() as u64;
+                    let done = Instant::now();
+                    let latency = done.duration_since(t0).as_nanos() as u64;
                     self.metrics.relic_pairs.inc();
-                    self.metrics.native_requests.add(2);
-                    // One latency sample *per request*: the pair shares
-                    // one wall-time measurement, but recording it once
+                    // One completion *per request*: the pair shares one
+                    // wall-time measurement, but recording it once
                     // would weight a paired request half as much as a
-                    // solo one and under-count the histogram.
-                    self.metrics.native_latency.record(latency);
-                    self.metrics.native_latency.record(latency);
+                    // solo one and under-count the histogram — and each
+                    // request's own deadline decides its miss.
+                    self.metrics.record_completion(Backend::Native, latency, ra.deadline, done);
+                    self.metrics.record_completion(Backend::Native, latency, rb.deadline, done);
                     responses[ia] = Some(Response {
                         id: ra.id,
                         backend: Backend::Native,
@@ -206,10 +252,10 @@ impl Coordinator {
                         req.source,
                         &Par::Relic(&self.relic),
                     );
-                    let latency = t0.elapsed().as_nanos() as u64;
-                    self.metrics.native_requests.inc();
+                    let done = Instant::now();
+                    let latency = done.duration_since(t0).as_nanos() as u64;
                     self.metrics.intra_requests.inc();
-                    self.metrics.native_latency.record(latency);
+                    self.metrics.record_completion(Backend::Native, latency, req.deadline, done);
                     responses[idx] = Some(Response {
                         id: req.id,
                         backend: Backend::Native,
@@ -253,7 +299,7 @@ impl Coordinator {
 
     /// Human-readable metrics report.
     pub fn report(&self) -> String {
-        format!(
+        let mut out = format!(
             "native: {} reqs ({} relic pairs, {} intra-parallel) {}\npjrt:   {} reqs {}",
             self.metrics.native_requests.get(),
             self.metrics.relic_pairs.get(),
@@ -261,7 +307,12 @@ impl Coordinator {
             self.metrics.native_latency.summary("ns"),
             self.metrics.pjrt_requests.get(),
             self.metrics.pjrt_latency.summary("ns"),
-        )
+        );
+        let misses = self.metrics.admission.deadline_misses.get();
+        if misses > 0 {
+            out += &format!("\ndeadline misses: {misses}");
+        }
+        out
     }
 }
 
@@ -276,7 +327,13 @@ mod tests {
     }
 
     fn req(id: u64, kernel: GraphKernel) -> Request {
-        Request { id, kernel, graph: paper_graph(), source: 0 }
+        Request {
+            id,
+            kernel,
+            graph: paper_graph(),
+            source: 0,
+            deadline: Deadline::none(),
+        }
     }
 
     #[test]
@@ -316,6 +373,39 @@ mod tests {
         for (resp, want) in responses.iter().zip(&serial) {
             assert_eq!(resp.result, RequestResult::Native(*want));
         }
+    }
+
+    #[test]
+    fn deadline_misses_recorded_on_every_native_path() {
+        use std::time::Duration;
+        // Already-expired deadlines: the paired path (requests 0+1) and
+        // the odd intra-parallel leftover (request 2) must each record
+        // exactly one miss — and one latency sample — per request.
+        let mut c = native_coordinator();
+        let mut reqs: Vec<Request> = (0..3).map(|i| req(i, GraphKernel::Bfs)).collect();
+        for r in &mut reqs {
+            r.deadline = Deadline::at(Instant::now());
+        }
+        let responses = c.process_batch(reqs);
+        assert_eq!(responses.len(), 3);
+        assert_eq!(c.metrics.admission.deadline_misses.get(), 3);
+        assert_eq!(c.metrics.native_latency.count(), 3);
+        assert!(c.report().contains("deadline misses: 3"));
+
+        // Generous deadlines: no misses, and the report stays quiet.
+        let mut c = native_coordinator();
+        let mut reqs: Vec<Request> = (0..3).map(|i| req(i, GraphKernel::Bfs)).collect();
+        for r in &mut reqs {
+            r.deadline = Deadline::within(Duration::from_secs(3600));
+        }
+        c.process_batch(reqs);
+        assert_eq!(c.metrics.admission.deadline_misses.get(), 0);
+        assert!(!c.report().contains("deadline misses"));
+
+        // No deadline at all: never a miss.
+        let mut c = native_coordinator();
+        c.process_batch(vec![req(0, GraphKernel::Bfs)]);
+        assert_eq!(c.metrics.admission.deadline_misses.get(), 0);
     }
 
     #[test]

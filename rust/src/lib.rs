@@ -26,7 +26,10 @@
 //!   analytics offloaded to PJRT executables, fine-grained subtasks run
 //!   through Relic, as motivated in the paper's §VI-A; its
 //!   [`coordinator::Engine`] scales the service across every physical
-//!   core via a [`relic::RelicPool`] of pinned pair-shards.
+//!   core via a [`relic::RelicPool`] of pinned pair-shards, behind a
+//!   deadline-aware admission gate ([`coordinator::admission`]:
+//!   non-blocking and parked submits, least-slack routing, counted
+//!   work shedding).
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results.

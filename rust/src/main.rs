@@ -12,26 +12,33 @@
 //!                    --schedule static|dynamic|edge-balanced picks the
 //!                    fork-join chunk assignment, --config reads [relic])
 //! repro serve        run the hybrid analytics service demo
-//!                    (--shards N runs the sharded engine; N=0 → auto)
+//!                    (--shards N runs the sharded engine; N=0 → auto;
+//!                    --deadline-ms D stamps deadlines, --shed POLICY
+//!                    sheds requests that cannot meet them)
 //! repro pool         pool-scaling sweep: throughput vs shard count,
 //!                    with pool-vs-single-pair checksum verification
 //!                    (--shards 1,2,4 --requests N --reps R)
+//! repro admission    admission sweep: blocking vs try_submit vs
+//!                    submit_or_park across offered loads, with
+//!                    shed/park/miss accounting (--offered 16,64,256
+//!                    --deadline-ms D --shed POLICY --reps R)
 //! repro selftest     PJRT artifact round-trip check
 //! ```
 //!
 //! Common options: `--out results` writes figure JSON/text files;
 //! `--iters N` (wallclock); `--artifacts DIR`; `--config FILE` loads
-//! `[pool]` settings for serve/pool (CLI flags override); `--no-pin`
-//! disables CPU pinning.
+//! `[pool]`/`[admission]` settings for serve/pool/admission (CLI flags
+//! override); `--no-pin` disables CPU pinning.
 
 use std::path::Path;
 
 use relic_smt::bench::{self, figures};
 use relic_smt::bench::ablation;
 use relic_smt::cli::Args;
-use relic_smt::config::{PoolSettings, RawConfig, RelicSettings};
+use relic_smt::config::{AdmissionSettings, PoolSettings, RawConfig, RelicSettings};
 use relic_smt::coordinator::{
-    Coordinator, Engine, EngineConfig, GraphKernel, Request, Router, RouterConfig,
+    Coordinator, Deadline, Engine, EngineConfig, GraphKernel, Request, Router, RouterConfig,
+    ShedPolicy,
 };
 use relic_smt::graph::kronecker::paper_graph;
 use relic_smt::relic::affinity;
@@ -208,9 +215,12 @@ fn run(args: &Args) -> anyhow::Result<()> {
             );
             println!("{}", figures::render_intra(&rows));
             println!("relic: {}", relic.stats().report());
+            write_out(args, "intra.json", &figures::intra_rows_to_json(&rows))?;
         }
         Some("serve") => {
             let n_req = args.get_u64("requests", 64) as usize;
+            let admission = admission_settings(args)?;
+            let deadline = admission.deadline();
             let kernels = GraphKernel::all();
             let requests: Vec<Request> = (0..n_req)
                 .map(|i| Request {
@@ -218,6 +228,10 @@ fn run(args: &Args) -> anyhow::Result<()> {
                     kernel: kernels[i % kernels.len()],
                     graph: paper_graph(),
                     source: (i % 32) as u32,
+                    deadline: match deadline {
+                        Some(d) => Deadline::within(d),
+                        None => Deadline::none(),
+                    },
                 })
                 .collect();
             if let Some(shards_arg) = args.get("shards") {
@@ -230,16 +244,23 @@ fn run(args: &Args) -> anyhow::Result<()> {
                      sweeps belong to `repro pool`"
                 );
                 let settings = pool_settings(args)?;
-                let mut engine = Engine::new(EngineConfig::from_settings(&settings));
+                let mut engine = Engine::new(EngineConfig::from_settings(&settings, &admission));
                 println!(
-                    "host: {}; engine: {} shards",
+                    "host: {}; engine: {} shards; shed policy {}; deadline {:?}",
                     affinity::topology_summary(),
-                    engine.shard_count()
+                    engine.shard_count(),
+                    admission.shed,
+                    deadline,
                 );
                 let t0 = std::time::Instant::now();
+                let offered = requests.len();
                 let responses = engine.process_batch(requests);
                 let dt = t0.elapsed();
-                println!("processed {} requests in {:?}", responses.len(), dt);
+                println!(
+                    "processed {} of {offered} requests in {dt:?} \
+                     (the difference, if any, was shed — see below)",
+                    responses.len()
+                );
                 println!("{}", engine.report());
             } else {
                 let artifacts = args.get("artifacts").unwrap_or("artifacts");
@@ -266,7 +287,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
             let requests = args.get_u64("requests", 96) as usize;
             let reps = args.get_u64("reps", 3);
             println!("host: {}", affinity::topology_summary());
-            let template = EngineConfig::from_settings(&settings);
+            let template = EngineConfig::from_settings(&settings, &admission_settings(args)?);
             println!(
                 "pool-scaling sweep: shard counts {shard_counts:?}, \
                  {requests} requests, {reps} reps\n"
@@ -274,6 +295,27 @@ fn run(args: &Args) -> anyhow::Result<()> {
             let rows = figures::pool_scaling(&template, &shard_counts, requests, reps);
             println!("{}", figures::render_pool_scaling(&rows));
             write_out(args, "pool_scaling.json", &figures::pool_rows_to_json(&rows))?;
+        }
+        Some("admission") => {
+            let settings = pool_settings(args)?;
+            let admission = admission_settings(args)?;
+            let offered = args.sweep_list("offered", &[16, 64, 256])?;
+            let reps = args.get_u64("reps", 3);
+            println!("host: {}", affinity::topology_summary());
+            let template = EngineConfig::from_settings(&settings, &admission);
+            println!(
+                "admission sweep: offered loads {offered:?}, {reps} reps, shed policy {}, \
+                 deadline {:?}, {} shard(s)\n",
+                admission.shed,
+                admission.deadline(),
+                settings
+                    .shard_count_hint()
+                    .map(|n| n.to_string())
+                    .unwrap_or_else(|| "auto".into()),
+            );
+            let rows = figures::admission_sweep(&template, &offered, admission.deadline(), reps);
+            println!("{}", figures::render_admission(&rows));
+            write_out(args, "admission.json", &figures::admission_rows_to_json(&rows))?;
         }
         Some("selftest") => {
             let artifacts = args.get("artifacts").unwrap_or("artifacts");
@@ -305,7 +347,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         _ => {
             println!(
                 "usage: repro <fig1|fig3|fig4|granularity|ablation|wallclock|intra\
-                 |serve|pool|selftest> [--options]"
+                 |serve|pool|admission|selftest> [--options]"
             );
             println!("see rust/src/main.rs docs for details");
         }
@@ -325,6 +367,26 @@ fn relic_settings(args: &Args) -> anyhow::Result<RelicSettings> {
             anyhow::anyhow!("unknown --schedule {name:?} (static|dynamic|edge-balanced)")
         })?;
     }
+    Ok(s)
+}
+
+/// `[admission]` settings: config file first (`--config PATH`), then
+/// CLI overrides (`--shed never|past-deadline|load-factor[:F]`,
+/// `--deadline-ms N`, `--service-estimate-us N`).
+fn admission_settings(args: &Args) -> anyhow::Result<AdmissionSettings> {
+    let mut s = match args.get("config") {
+        Some(path) => AdmissionSettings::from_raw(&RawConfig::load(Path::new(path))?),
+        None => AdmissionSettings::default(),
+    };
+    if let Some(name) = args.get("shed") {
+        anyhow::ensure!(
+            ShedPolicy::parse(name).is_some(),
+            "unknown --shed {name:?} (never|past-deadline|load-factor[:F])"
+        );
+        s.shed = name.to_string();
+    }
+    s.deadline_ms = args.get_u64("deadline-ms", s.deadline_ms);
+    s.service_estimate_us = args.get_u64("service-estimate-us", s.service_estimate_us);
     Ok(s)
 }
 

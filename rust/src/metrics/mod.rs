@@ -139,6 +139,70 @@ impl Histogram {
     }
 }
 
+/// Admission-control counters: every request the engine's front door
+/// turned away or delayed, plus how much slack deadlined requests
+/// arrived with. Shed and parked events are engine-side (recorded at
+/// admission); deadline misses are shard-side (recorded at completion)
+/// — [`AdmissionMetrics::merge_from`] folds both into one service view.
+#[derive(Debug, Default)]
+pub struct AdmissionMetrics {
+    /// Requests refused by the shed policy (counted per
+    /// [`crate::coordinator::ShedReason`] below; never silent).
+    pub shed_requests: Counter,
+    /// Shed because the deadline had already expired at admission.
+    pub shed_past_deadline: Counter,
+    /// Shed because remaining slack was below the estimated wait.
+    pub shed_slack_exhausted: Counter,
+    /// Shed by the load-factor overload threshold.
+    pub shed_overload: Counter,
+    /// Accepted requests that completed after their deadline.
+    pub deadline_misses: Counter,
+    /// Submissions that parked on a shard's drain signal (full channel)
+    /// before being accepted.
+    pub parked_submits: Counter,
+    /// Non-blocking submissions bounced with `QueueFull`.
+    pub queue_full_rejections: Counter,
+    /// Slack remaining at admission (ns) for accepted deadlined
+    /// requests — the input distribution deadline-aware routing works
+    /// with.
+    pub slack_at_admission: Histogram,
+}
+
+impl AdmissionMetrics {
+    /// Fold another instance into this one (same merge semantics as
+    /// [`Histogram::merge_from`]).
+    pub fn merge_from(&self, other: &AdmissionMetrics) {
+        self.shed_requests.add(other.shed_requests.get());
+        self.shed_past_deadline.add(other.shed_past_deadline.get());
+        self.shed_slack_exhausted.add(other.shed_slack_exhausted.get());
+        self.shed_overload.add(other.shed_overload.get());
+        self.deadline_misses.add(other.deadline_misses.get());
+        self.parked_submits.add(other.parked_submits.get());
+        self.queue_full_rejections.add(other.queue_full_rejections.get());
+        self.slack_at_admission.merge_from(&other.slack_at_admission);
+    }
+
+    /// One-line report (`shed=... parked=... misses=...` plus the slack
+    /// distribution when any deadlined request was admitted).
+    pub fn summary(&self) -> String {
+        let mut out = format!(
+            "shed={} (past-deadline={} slack={} overload={}) parked={} \
+             queue-full={} deadline-misses={}",
+            self.shed_requests.get(),
+            self.shed_past_deadline.get(),
+            self.shed_slack_exhausted.get(),
+            self.shed_overload.get(),
+            self.parked_submits.get(),
+            self.queue_full_rejections.get(),
+            self.deadline_misses.get(),
+        );
+        if self.slack_at_admission.count() > 0 {
+            out += &format!("; slack {}", self.slack_at_admission.summary("ns"));
+        }
+        out
+    }
+}
+
 /// Wall-clock stopwatch recording into a [`Histogram`] on drop.
 pub struct Timer<'a> {
     hist: &'a Histogram,
@@ -208,6 +272,33 @@ mod tests {
         let h = Histogram::new();
         assert_eq!(h.percentile(0.99), 0);
         assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn admission_metrics_merge_and_summary() {
+        let a = AdmissionMetrics::default();
+        a.shed_requests.add(3);
+        a.shed_past_deadline.add(2);
+        a.shed_slack_exhausted.inc();
+        a.parked_submits.add(5);
+        a.slack_at_admission.record(1000);
+        let b = AdmissionMetrics::default();
+        b.deadline_misses.add(4);
+        b.queue_full_rejections.add(7);
+        let agg = AdmissionMetrics::default();
+        agg.merge_from(&a);
+        agg.merge_from(&b);
+        assert_eq!(agg.shed_requests.get(), 3);
+        assert_eq!(agg.shed_past_deadline.get(), 2);
+        assert_eq!(agg.shed_slack_exhausted.get(), 1);
+        assert_eq!(agg.deadline_misses.get(), 4);
+        assert_eq!(agg.parked_submits.get(), 5);
+        assert_eq!(agg.queue_full_rejections.get(), 7);
+        assert_eq!(agg.slack_at_admission.count(), 1);
+        let s = agg.summary();
+        assert!(s.contains("shed=3"));
+        assert!(s.contains("deadline-misses=4"));
+        assert!(s.contains("slack "), "slack histogram line present: {s}");
     }
 
     #[test]

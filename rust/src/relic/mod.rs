@@ -29,8 +29,10 @@
 //! scheduling: a [`RelicPool`] spawns one pinned shard per physical
 //! core (each shard's main thread owning its own [`Relic`]), with
 //! bounded per-shard admission channels, least-loaded routing, and
-//! backpressure — multi-core scaling without ever widening the SPSC
-//! queue to MPMC.
+//! three admission flavors — blocking backpressure, non-blocking
+//! `try_submit_to`, and `submit_or_park_to` (the producer sleeps on the
+//! shard's drain signal until its consumer frees capacity) — multi-core
+//! scaling without ever widening the SPSC queue to MPMC.
 //!
 //! ```
 //! use relic_smt::relic::Relic;

@@ -22,10 +22,26 @@
 //!   created on, and only ever submitted to from, its shard thread, so
 //!   the single-producer invariant holds *by construction*;
 //! * an **admission layer**: items are dispatched to shards over
-//!   per-shard bounded channels with least-loaded routing; when the
-//!   chosen shard's channel is full the submitter blocks on that same
-//!   channel (backpressure — counted, never dropped, never reordered
-//!   within a shard);
+//!   per-shard bounded channels with least-loaded routing, through
+//!   three flavors sharing the same counters and ordering guarantees:
+//!   [`RelicPool::submit_to`] blocks on the full channel (backpressure
+//!   — counted, never dropped, never reordered within a shard),
+//!   [`RelicPool::try_submit_to`] returns the item on a full channel
+//!   instead of waiting, and [`RelicPool::submit_or_park_to`] parks the
+//!   producer on the shard's **drain signal** — a condvar the shard's
+//!   consumer notifies every time it frees channel capacity — so a
+//!   stalled producer sleeps until woken instead of spinning on
+//!   `try_send`.
+//!
+//!   The waker protocol is lost-wakeup-free by construction: the
+//!   producer re-checks `try_send` *while holding the signal lock*
+//!   before every wait, and the consumer can only notify under that
+//!   same lock, so capacity freed between the producer's failed check
+//!   and its wait still produces a wakeup. A full channel
+//!   also implies the consumer has items to drain, so the notify that
+//!   releases the producer is always coming — and a parked producer
+//!   still times out periodically to detect a dead (panicked) shard
+//!   rather than waiting forever;
 //! * a shard's inner loop drains its channel into small batches, so a
 //!   batch handler built on `Coordinator::process_batch` still gets to
 //!   pair requests two-at-a-time and run the odd leftover with
@@ -39,8 +55,9 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::metrics::Counter;
 
@@ -155,6 +172,34 @@ pub struct PoolStats {
     /// Submissions that found the chosen shard's channel full and had
     /// to block (backpressure events; the item is still delivered).
     pub backpressure_stalls: Counter,
+    /// Submissions that found the channel full and parked on the
+    /// shard's drain signal (the item is still delivered).
+    pub parked_submits: Counter,
+}
+
+/// How long a parked producer sleeps between dead-shard checks. Pure
+/// liveness insurance: the normal wakeup is the consumer's notify.
+const PARK_CHECK_INTERVAL: Duration = Duration::from_millis(50);
+
+/// The consumer-to-producer wakeup slot of one shard: a condvar parked
+/// producers wait on. The mutex guards no data — it exists to order
+/// the producer's full-channel check against the consumer's notify
+/// (the classic lost-wakeup-free Mutex+Condvar shape; producers re-run
+/// `try_send` under the lock before every wait).
+#[derive(Debug, Default)]
+struct DrainSignal {
+    lock: Mutex<()>,
+    drained: Condvar,
+}
+
+impl DrainSignal {
+    /// Consumer side: capacity was freed — wake every parked producer.
+    /// Taking the lock first is what closes the lost-wakeup window
+    /// (see the module docs).
+    fn notify(&self) {
+        let _guard = self.lock.lock().expect("drain signal poisoned");
+        self.drained.notify_all();
+    }
 }
 
 /// Point-in-time view of the pool (see [`RelicPool::snapshot`]).
@@ -163,6 +208,7 @@ pub struct PoolSnapshot {
     pub shards: usize,
     pub dispatched: u64,
     pub backpressure_stalls: u64,
+    pub parked_submits: u64,
     /// Items completed per shard (shard occupancy over the run).
     pub occupancy: Vec<u64>,
     /// Items queued or in processing per shard right now.
@@ -178,6 +224,8 @@ struct ShardInfo {
     depth: Arc<AtomicUsize>,
     /// Items the shard has finished.
     completed: Arc<Counter>,
+    /// Wakes producers parked on this shard's full channel.
+    signal: Arc<DrainSignal>,
 }
 
 /// A pool of pair-shards processing items of type `I`.
@@ -186,6 +234,8 @@ pub struct RelicPool<I: Send + 'static> {
     shards: Vec<ShardInfo>,
     joins: Vec<JoinHandle<()>>,
     stats: PoolStats,
+    /// Per-shard admission-channel bound (for load-factor reporting).
+    channel_capacity: usize,
 }
 
 impl<I: Send + 'static> RelicPool<I> {
@@ -228,6 +278,7 @@ impl<I: Send + 'static> RelicPool<I> {
             let (tx, rx) = sync_channel::<I>(capacity);
             let depth = Arc::new(AtomicUsize::new(0));
             let completed = Arc::new(Counter::new());
+            let signal = Arc::new(DrainSignal::default());
             let join = std::thread::Builder::new()
                 .name(format!("relic-shard-{}", placement.shard))
                 .spawn({
@@ -235,17 +286,27 @@ impl<I: Send + 'static> RelicPool<I> {
                     let handler = handler.clone();
                     let depth = Arc::clone(&depth);
                     let completed = Arc::clone(&completed);
+                    let signal = Arc::clone(&signal);
                     let placement = placement.clone();
                     move || {
-                        shard_loop(rx, &placement, factory, handler, &depth, &completed, max_batch)
+                        shard_loop(
+                            rx, &placement, factory, handler, &depth, &completed, &signal,
+                            max_batch,
+                        )
                     }
                 })
                 .expect("failed to spawn relic pool shard");
             senders.push(tx);
-            shards.push(ShardInfo { placement, depth, completed });
+            shards.push(ShardInfo { placement, depth, completed, signal });
             joins.push(join);
         }
-        RelicPool { senders, shards, joins, stats: PoolStats::default() }
+        RelicPool {
+            senders,
+            shards,
+            joins,
+            stats: PoolStats::default(),
+            channel_capacity: capacity,
+        }
     }
 
     /// Number of shards.
@@ -302,6 +363,102 @@ impl<I: Send + 'static> RelicPool<I> {
         }
     }
 
+    /// Non-blocking dispatch to a specific shard. `Ok(())` means the
+    /// item is queued (counted, same FIFO guarantees as
+    /// [`submit_to`](Self::submit_to)); a full channel hands the item
+    /// back unchanged and counts nothing, so the caller can retry,
+    /// park, or shed it without losing it.
+    pub fn try_submit_to(&self, shard: usize, item: I) -> Result<(), I> {
+        // Depth goes up *before* the send so a concurrent consumer
+        // finishing the item can never decrement first (which would
+        // wrap the unsigned depth and wreck least-loaded routing).
+        self.shards[shard].depth.fetch_add(1, Ordering::AcqRel);
+        match self.senders[shard].try_send(item) {
+            Ok(()) => {
+                self.stats.dispatched.inc();
+                Ok(())
+            }
+            Err(TrySendError::Full(item)) => {
+                self.shards[shard].depth.fetch_sub(1, Ordering::AcqRel);
+                Err(item)
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                panic!("relic pool shard thread died");
+            }
+        }
+    }
+
+    /// Dispatch to a specific shard, parking on the shard's drain
+    /// signal when the channel is full: the producer sleeps until the
+    /// consumer frees capacity instead of spinning or blocking inside
+    /// the channel. Returns `true` when it had to park (counted in
+    /// [`PoolStats::parked_submits`]). Delivery is guaranteed: a parked
+    /// producer can only end by enqueueing the item or by panicking on
+    /// a dead shard.
+    pub fn submit_or_park_to(&self, shard: usize, item: I) -> bool {
+        self.shards[shard].depth.fetch_add(1, Ordering::AcqRel);
+        self.stats.dispatched.inc();
+        let mut item = match self.senders[shard].try_send(item) {
+            Ok(()) => return false,
+            Err(TrySendError::Full(item)) => item,
+            Err(TrySendError::Disconnected(_)) => panic!("relic pool shard thread died"),
+        };
+        self.stats.parked_submits.inc();
+        let signal = &self.shards[shard].signal;
+        let mut guard = signal.lock.lock().expect("drain signal poisoned");
+        loop {
+            // Re-check under the lock: the consumer cannot get the lock
+            // to notify between this failure and the wait below, so a
+            // wakeup for freed capacity is never lost.
+            match self.senders[shard].try_send(item) {
+                Ok(()) => return true,
+                Err(TrySendError::Full(it)) => item = it,
+                Err(TrySendError::Disconnected(_)) => panic!("relic pool shard thread died"),
+            }
+            let (g, timeout) = signal
+                .drained
+                .wait_timeout(guard, PARK_CHECK_INTERVAL)
+                .expect("drain signal poisoned");
+            guard = g;
+            if timeout.timed_out() {
+                assert!(
+                    !self.joins[shard].is_finished(),
+                    "relic pool shard {shard} died with a producer parked on it"
+                );
+            }
+        }
+    }
+
+    /// Items queued or in processing on one shard right now.
+    pub fn depth(&self, shard: usize) -> usize {
+        self.shards[shard].depth.load(Ordering::Acquire)
+    }
+
+    /// Per-shard depths (the least-loaded / least-slack routing input).
+    pub fn depths(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.depth.load(Ordering::Acquire)).collect()
+    }
+
+    /// [`depths`](Self::depths) without the allocation — what the
+    /// engine's per-request routing reads.
+    pub fn depths_iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.shards.iter().map(|s| s.depth.load(Ordering::Acquire))
+    }
+
+    /// Per-shard admission-channel bound.
+    pub fn channel_capacity(&self) -> usize {
+        self.channel_capacity
+    }
+
+    /// Fraction of total admission capacity currently claimed. Depth
+    /// counts items *in processing* as well as queued, so sustained
+    /// overload reads above 1.0 — the load-factor shed policy treats
+    /// its threshold as "queued work per queue slot", not a percentage.
+    pub fn load_factor(&self) -> f32 {
+        let total: usize = self.shards.iter().map(|s| s.depth.load(Ordering::Acquire)).sum();
+        total as f32 / (self.shards.len() * self.channel_capacity) as f32
+    }
+
     /// Admission counters.
     pub fn stats(&self) -> &PoolStats {
         &self.stats
@@ -326,6 +483,7 @@ impl<I: Send + 'static> RelicPool<I> {
             shards: self.shards.len(),
             dispatched: self.stats.dispatched.get(),
             backpressure_stalls: self.stats.backpressure_stalls.get(),
+            parked_submits: self.stats.parked_submits.get(),
             occupancy: self.shards.iter().map(|s| s.completed.get()).collect(),
             in_flight: self.shards.iter().map(|s| s.depth.load(Ordering::Acquire)).collect(),
         }
@@ -349,6 +507,7 @@ impl<I: Send + 'static> Drop for RelicPool<I> {
 /// load the handler sees multi-request batches (so a
 /// `Coordinator`-backed handler still pairs requests on the SMT core),
 /// while a lone request is processed immediately.
+#[allow(clippy::too_many_arguments)]
 fn shard_loop<I, S, F, H>(
     rx: Receiver<I>,
     placement: &ShardPlacement,
@@ -356,6 +515,7 @@ fn shard_loop<I, S, F, H>(
     handler: H,
     depth: &AtomicUsize,
     completed: &Counter,
+    signal: &DrainSignal,
     max_batch: usize,
 ) where
     F: Fn(&ShardPlacement) -> S,
@@ -378,6 +538,10 @@ fn shard_loop<I, S, F, H>(
                 Err(_) => break,
             }
         }
+        // Every recv above freed a channel slot: wake parked producers
+        // *before* the (potentially long) handler call, so admission
+        // refills the queue while this batch is being processed.
+        signal.notify();
         let n = batch.len();
         handler(&mut state, batch);
         depth.fetch_sub(n, Ordering::AcqRel);
@@ -526,6 +690,146 @@ mod tests {
             gate_tx.send(()).unwrap();
         }
         drop(pool);
+    }
+
+    /// A 1-shard pool whose handler consumes one gate token per item,
+    /// so tests can hold the channel deterministically full.
+    fn gated_pool(
+        capacity: usize,
+    ) -> (RelicPool<u64>, mpsc::Sender<()>, mpsc::Receiver<u64>) {
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let (out_tx, out_rx) = mpsc::channel::<u64>();
+        let gate = Arc::new(std::sync::Mutex::new(gate_rx));
+        let pool = RelicPool::<u64>::with_placements(
+            discover_placements(Some(1), false),
+            &PoolConfig {
+                shards: Some(1),
+                pin: false,
+                channel_capacity: capacity,
+                max_batch: 1,
+            },
+            |_: &ShardPlacement| (),
+            move |_: &mut (), batch: Vec<u64>| {
+                for item in batch {
+                    gate.lock().unwrap().recv().unwrap();
+                    out_tx.send(item).unwrap();
+                }
+            },
+        );
+        (pool, gate_tx, out_rx)
+    }
+
+    #[test]
+    fn try_submit_returns_item_on_full_channel() {
+        let (pool, gate_tx, out_rx) = gated_pool(2);
+        // Fill: one item may be held by the shard (blocked on the
+        // gate), two sit in the capacity-2 channel. Stuff until full.
+        let mut queued = 0u64;
+        let mut bounced = None;
+        for i in 0..64u64 {
+            match pool.try_submit_to(0, i) {
+                Ok(()) => queued += 1,
+                Err(item) => {
+                    bounced = Some(item);
+                    break;
+                }
+            }
+        }
+        let bounced = bounced.expect("a bounded channel must fill");
+        assert_eq!(bounced, queued, "the bounced item comes back unchanged");
+        assert!(queued >= 2, "at least the channel capacity was accepted");
+        // Depth only counts accepted items (the bounce was rolled back).
+        assert_eq!(pool.depth(0), queued as usize);
+        assert_eq!(pool.stats().dispatched.get(), queued);
+        // Release everything; nothing was dropped, order preserved.
+        for _ in 0..queued {
+            gate_tx.send(()).unwrap();
+        }
+        drop(pool);
+        let got: Vec<u64> = out_rx.iter().collect();
+        assert_eq!(got, (0..queued).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parked_submit_delivers_after_drain() {
+        let (pool, gate_tx, out_rx) = gated_pool(1);
+        let pool = Arc::new(pool);
+        // Fill the capacity-1 channel (plus the item the shard holds).
+        let mut queued = 0u64;
+        while pool.try_submit_to(0, queued).is_ok() {
+            queued += 1;
+        }
+        // Park a producer on the full channel from another thread.
+        let parked = {
+            let pool = Arc::clone(&pool);
+            std::thread::spawn(move || pool.submit_or_park_to(0, queued))
+        };
+        // Release the gate: the consumer drains, notifies, and the
+        // parked producer must deliver. (One token per item, items
+        // 0..=queued.)
+        for _ in 0..=queued {
+            gate_tx.send(()).unwrap();
+        }
+        assert!(parked.join().unwrap(), "producer reported parking");
+        assert_eq!(pool.stats().parked_submits.get(), 1);
+        let pool = Arc::try_unwrap(pool).unwrap_or_else(|_| panic!("sole owner"));
+        drop(pool);
+        let got: Vec<u64> = out_rx.iter().collect();
+        assert_eq!(got, (0..=queued).collect::<Vec<_>>(), "FIFO, parked item included");
+    }
+
+    #[test]
+    fn parked_producer_never_loses_wakeup_under_churn() {
+        // Capacity-1 stress loop: every submit races the consumer's
+        // drain-notify. A lost wakeup deadlocks this test (bounded by
+        // the park path's dead-shard timeout assertions, it would still
+        // hang — CI's timeout is the net).
+        let (tx, rx) = mpsc::channel::<u64>();
+        let pool = RelicPool::<u64>::with_placements(
+            discover_placements(Some(1), false),
+            &PoolConfig {
+                shards: Some(1),
+                pin: false,
+                channel_capacity: 1,
+                max_batch: 1,
+            },
+            |_: &ShardPlacement| (),
+            move |_: &mut (), batch: Vec<u64>| {
+                for item in batch {
+                    tx.send(item).unwrap();
+                }
+            },
+        );
+        let n = 2000u64;
+        for i in 0..n {
+            pool.submit_or_park_to(0, i);
+        }
+        assert!(
+            pool.stats().parked_submits.get() > 0,
+            "a capacity-1 channel under a tight submit loop must park at least once"
+        );
+        drop(pool);
+        let got: Vec<u64> = rx.iter().collect();
+        assert_eq!(got, (0..n).collect::<Vec<_>>(), "FIFO, nothing dropped");
+    }
+
+    #[test]
+    fn depths_and_load_factor_track_in_flight_items() {
+        let (pool, gate_tx, out_rx) = gated_pool(4);
+        assert_eq!(pool.depths(), vec![0]);
+        assert_eq!(pool.load_factor(), 0.0);
+        assert_eq!(pool.channel_capacity(), 4);
+        for i in 0..4u64 {
+            pool.submit_to(0, i);
+        }
+        // All four are queued or held at the gate.
+        assert_eq!(pool.depth(0), 4);
+        assert!((pool.load_factor() - 1.0).abs() < f32::EPSILON);
+        for _ in 0..4 {
+            gate_tx.send(()).unwrap();
+        }
+        drop(pool);
+        assert_eq!(out_rx.iter().count(), 4);
     }
 
     #[test]

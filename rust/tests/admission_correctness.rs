@@ -1,0 +1,264 @@
+//! Integration: the admission-controlled engine keeps the sharded
+//! engine's core invariant — accepted requests are never dropped and
+//! never reordered — across every submit flavor (blocking, try,
+//! parked) and every shed policy, and its counters reconcile exactly
+//! with what was submitted and completed.
+
+use std::time::{Duration, Instant};
+
+use relic_smt::coordinator::{
+    run_native_kernel, Admission, AdmissionConfig, Coordinator, Deadline, Engine, EngineConfig,
+    GraphKernel, Request, Router, RouterConfig, ShedPolicy,
+};
+use relic_smt::graph::kronecker::paper_graph;
+use relic_smt::relic::PoolConfig;
+
+/// Unpinned engine: CI containers may refuse affinity syscalls.
+fn engine(
+    shards: usize,
+    channel_capacity: usize,
+    max_batch: usize,
+    admission: AdmissionConfig,
+) -> Engine {
+    Engine::new(EngineConfig {
+        pool: PoolConfig {
+            shards: Some(shards),
+            pin: false,
+            channel_capacity,
+            max_batch,
+        },
+        admission,
+        ..EngineConfig::default()
+    })
+}
+
+fn req(id: u64, kernel: GraphKernel, source: u32) -> Request {
+    Request {
+        id,
+        kernel,
+        graph: paper_graph(),
+        source,
+        deadline: Deadline::none(),
+    }
+}
+
+/// Mixed batch cycling every kernel over several sources.
+fn mixed_batch(n: usize) -> Vec<Request> {
+    let kernels = GraphKernel::all();
+    (0..n)
+        .map(|i| req(i as u64, kernels[i % kernels.len()], (i % 8) as u32))
+        .collect()
+}
+
+#[test]
+fn never_policy_degenerates_to_pr2_blocking_behavior() {
+    // Same capacity-1 backpressure regime as PR 2's test, explicit
+    // ShedPolicy::Never: identical responses to the single-pair
+    // coordinator, zero admission activity, stalls still counted.
+    let mut single = Coordinator::with_parts(Router::new(RouterConfig::default(), None), None);
+    let want = single.process_batch(mixed_batch(24));
+    let mut e = engine(1, 1, 1, AdmissionConfig { shed: ShedPolicy::Never, ..Default::default() });
+    let got = e.process_batch(mixed_batch(24));
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.id, w.id);
+        assert_eq!(g.backend, w.backend);
+        assert_eq!(g.result, w.result);
+    }
+    let agg = e.aggregated_metrics();
+    assert_eq!(agg.admission.shed_requests.get(), 0);
+    assert_eq!(agg.admission.parked_submits.get(), 0);
+    assert_eq!(agg.admission.queue_full_rejections.get(), 0);
+    assert_eq!(agg.admission.deadline_misses.get(), 0);
+    assert_eq!(agg.admission.slack_at_admission.count(), 0);
+    assert!(
+        e.pool_snapshot().backpressure_stalls > 0,
+        "capacity-1 blocking admission still counts its stalls"
+    );
+}
+
+#[test]
+fn accepted_requests_never_dropped_or_reordered_under_queuefull_churn() {
+    // Capacity-1 channels on 2 shards + an open-loop try_submit driver:
+    // most submissions bounce at least once; every bounced request is
+    // retried (bounded) and then parked, so everything is eventually
+    // accepted — and must come back complete, in order, with correct
+    // checksums.
+    let g = paper_graph();
+    let n = 96usize;
+    let expected: Vec<u64> = mixed_batch(n)
+        .iter()
+        .map(|r| run_native_kernel(r.kernel, &g, r.source))
+        .collect();
+    let mut e = engine(2, 1, 1, AdmissionConfig::default());
+    let mut bounces = 0u64;
+    for mut r in mixed_batch(n) {
+        let id = r.id;
+        let mut attempts = 0;
+        loop {
+            match e.try_submit(r) {
+                Admission::Accepted { .. } => break,
+                Admission::QueueFull { rejected } => {
+                    bounces += 1;
+                    attempts += 1;
+                    assert_eq!(rejected.id, id, "bounced request comes back unchanged");
+                    if attempts > 64 {
+                        // Guaranteed-progress fallback: park until the
+                        // shard frees capacity.
+                        assert!(e.submit_or_park(rejected).is_accepted());
+                        break;
+                    }
+                    r = rejected;
+                    std::thread::yield_now();
+                }
+                Admission::Shed { .. } => unreachable!("Never policy cannot shed"),
+            }
+        }
+    }
+    let responses = e.drain();
+    assert_eq!(responses.len(), n, "every accepted request completes");
+    for (i, r) in responses.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "acceptance order preserved");
+        assert_eq!(
+            r.result,
+            relic_smt::coordinator::RequestResult::Native(expected[i]),
+            "request {i} checksum"
+        );
+    }
+    let agg = e.aggregated_metrics();
+    assert_eq!(agg.admission.queue_full_rejections.get(), bounces);
+    assert!(
+        bounces > 0,
+        "capacity-1 channels under an open-loop driver must bounce at least once"
+    );
+}
+
+#[test]
+fn shed_and_miss_counters_reconcile_with_submitted_minus_completed() {
+    let mut e = engine(
+        1,
+        64,
+        32,
+        AdmissionConfig { shed: ShedPolicy::PastDeadline, ..Default::default() },
+    );
+    let submitted = 30usize;
+    let mut shed_ids = Vec::new();
+    for (i, mut r) in mixed_batch(submitted).into_iter().enumerate() {
+        // Every third request arrives already expired.
+        r.deadline = if i % 3 == 0 {
+            Deadline::at(Instant::now())
+        } else {
+            Deadline::within(Duration::from_secs(3600))
+        };
+        match e.submit(r) {
+            Admission::Shed { request, .. } => shed_ids.push(request.id),
+            verdict => assert!(verdict.is_accepted()),
+        }
+    }
+    let responses = e.drain();
+    let agg = e.aggregated_metrics();
+    // Reconciliation: submitted = completed + shed, exactly.
+    assert_eq!(shed_ids.len(), submitted.div_ceil(3), "every third request shed");
+    assert_eq!(responses.len() + shed_ids.len(), submitted);
+    assert_eq!(agg.admission.shed_requests.get(), shed_ids.len() as u64);
+    assert_eq!(agg.admission.shed_past_deadline.get(), shed_ids.len() as u64);
+    assert_eq!(agg.native_requests.get(), responses.len() as u64);
+    assert_eq!(
+        agg.native_latency.count(),
+        responses.len() as u64,
+        "one latency sample per completed request"
+    );
+    // The generous deadlines were met: no misses; slack recorded for
+    // every accepted (deadlined) request.
+    assert_eq!(agg.admission.deadline_misses.get(), 0);
+    assert_eq!(agg.admission.slack_at_admission.count(), responses.len() as u64);
+    // Shed requests produce no response, and the survivors keep order.
+    for pair in responses.windows(2) {
+        assert!(pair[0].id < pair[1].id, "shedding must not reorder survivors");
+    }
+    for r in &responses {
+        assert!(!shed_ids.contains(&r.id), "shed request {} must not complete", r.id);
+    }
+}
+
+#[test]
+fn deadline_misses_count_late_completions() {
+    // Never-policy engine: expired deadlines are still admitted, so
+    // every completion is late — misses == completions, and shed == 0.
+    let mut e = engine(1, 64, 32, AdmissionConfig::default());
+    let n = 12usize;
+    for mut r in mixed_batch(n) {
+        r.deadline = Deadline::at(Instant::now());
+        assert!(e.submit(r).is_accepted());
+    }
+    let responses = e.drain();
+    assert_eq!(responses.len(), n);
+    let agg = e.aggregated_metrics();
+    assert_eq!(agg.admission.deadline_misses.get(), n as u64);
+    assert_eq!(agg.admission.shed_requests.get(), 0);
+}
+
+#[test]
+fn parked_producer_always_wakes_under_capacity_1_stress() {
+    // The lost-wakeup stress: a tight submit_or_park loop against
+    // capacity-1 channels. Requests are pre-built so the producer is
+    // strictly faster than the µs-scale kernels draining the channel —
+    // parking is guaranteed, and a lost wakeup would hang the test.
+    let g = paper_graph();
+    let n = 200usize;
+    let expected: Vec<u64> = mixed_batch(n)
+        .iter()
+        .map(|r| run_native_kernel(r.kernel, &g, r.source))
+        .collect();
+    let mut e = engine(1, 1, 1, AdmissionConfig::default());
+    let requests = mixed_batch(n);
+    for r in requests {
+        assert!(e.submit_or_park(r).is_accepted(), "park path always accepts");
+    }
+    let responses = e.drain();
+    assert_eq!(responses.len(), n, "nothing lost across park/wake cycles");
+    for (i, r) in responses.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "FIFO preserved through parking");
+        assert_eq!(
+            r.result,
+            relic_smt::coordinator::RequestResult::Native(expected[i])
+        );
+    }
+    let agg = e.aggregated_metrics();
+    let snap = e.pool_snapshot();
+    assert!(
+        agg.admission.parked_submits.get() > 0,
+        "a capacity-1 channel under a pre-built burst must park at least once"
+    );
+    assert_eq!(
+        agg.admission.parked_submits.get(),
+        snap.parked_submits,
+        "engine- and pool-level park counters agree"
+    );
+}
+
+#[test]
+fn queue_full_hands_the_request_back_intact() {
+    let mut e = engine(1, 1, 1, AdmissionConfig::default());
+    // Drive try_submit until one bounces; the bounce must carry the
+    // same request (id intact), and resubmitting it must succeed.
+    let mut bounced = None;
+    for i in 0..10_000u64 {
+        match e.try_submit(req(i, GraphKernel::Bfs, 0)) {
+            Admission::QueueFull { rejected } => {
+                assert_eq!(rejected.id, i, "bounced request comes back unchanged");
+                bounced = Some(rejected);
+                break;
+            }
+            verdict => assert!(verdict.is_accepted()),
+        }
+    }
+    let bounced = bounced.expect("capacity-1 channel must fill within 10k submits");
+    assert!(e.submit_or_park(bounced).is_accepted());
+    let responses = e.drain();
+    assert!(!responses.is_empty());
+    // Acceptance order: strictly increasing ids, no duplicates.
+    for pair in responses.windows(2) {
+        assert!(pair[0].id < pair[1].id);
+    }
+}

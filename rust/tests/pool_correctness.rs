@@ -4,8 +4,8 @@
 //! topology parsing.
 
 use relic_smt::coordinator::{
-    run_native_kernel, Backend, Coordinator, Engine, EngineConfig, GraphKernel, Request,
-    RequestResult, Router, RouterConfig,
+    run_native_kernel, Backend, Coordinator, Deadline, Engine, EngineConfig, GraphKernel,
+    Request, RequestResult, Router, RouterConfig,
 };
 use relic_smt::graph::kronecker::paper_graph;
 use relic_smt::relic::pool::{
@@ -26,7 +26,13 @@ fn engine(shards: usize, channel_capacity: usize, max_batch: usize) -> Engine {
 }
 
 fn req(id: u64, kernel: GraphKernel, source: u32) -> Request {
-    Request { id, kernel, graph: paper_graph(), source }
+    Request {
+        id,
+        kernel,
+        graph: paper_graph(),
+        source,
+        deadline: Deadline::none(),
+    }
 }
 
 /// Mixed batch cycling every kernel over several sources.
@@ -93,7 +99,7 @@ fn backpressure_drops_nothing_and_preserves_order() {
         .map(|r| run_native_kernel(r.kernel, &g, r.source))
         .collect();
     for r in mixed_batch(n) {
-        e.submit(r);
+        let _ = e.submit(r);
     }
     let responses = e.drain();
     assert_eq!(responses.len(), n, "no request dropped under backpressure");
@@ -114,7 +120,7 @@ fn repeated_submit_drain_cycles_accumulate_metrics() {
     let mut e = engine(2, 64, 32);
     for round in 0..5u64 {
         for i in 0..6u64 {
-            e.submit(req(round * 6 + i, GraphKernel::Bfs, 0));
+            let _ = e.submit(req(round * 6 + i, GraphKernel::Bfs, 0));
         }
         let responses = e.drain();
         assert_eq!(responses.len(), 6);
