@@ -1,0 +1,159 @@
+#!/usr/bin/env python3
+"""Diff two nightly BENCH_* JSON artifact directories and flag perf
+regressions.
+
+Usage:
+    python3 python/bench_diff.py OLD_DIR NEW_DIR [--threshold 10]
+
+OLD_DIR / NEW_DIR are two `bench-results/` trees as uploaded by
+`.github/workflows/bench.yml` (the files may sit at any depth — `gh run
+download` nests them under the artifact name; the first match by file
+name wins). Rows are matched *structurally* by key fields, so JSON
+arrays that changed order still diff correctly:
+
+    pool_scaling.json   keyed by (shards)          throughput_rps, speedup
+    admission.json      keyed by (mode, offered)   throughput_rps
+    intra.json          keyed by (kernel)          pair_speedup,
+                                                   parallel_for_speedup
+
+Every metric is higher-is-better. A metric that drops by more than
+--threshold percent (default 10) counts as a regression; the script
+prints one line per compared metric and exits non-zero when any
+regression was found. Missing files, unmatched rows, or zero baselines
+are reported and skipped — a partial artifact must not fake a pass on
+data it does not have, but also must not fail the diff outright
+(bench.yml runs this as a soft-fail step; see ARCHITECTURE.md §CI).
+
+Stdlib-only by design: the CI image and the dev container carry no
+third-party Python packages.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+# file name -> (key fields, higher-is-better metric fields)
+SPECS = {
+    "pool_scaling.json": (("shards",), ("throughput_rps", "speedup")),
+    "admission.json": (("mode", "offered"), ("throughput_rps",)),
+    "intra.json": (("kernel",), ("pair_speedup", "parallel_for_speedup")),
+}
+
+
+def find_file(root, name):
+    """First file called `name` anywhere under `root`, or None."""
+    direct = root / name
+    if direct.is_file():
+        return direct
+    matches = sorted(root.rglob(name))
+    return matches[0] if matches else None
+
+
+def load_rows(path):
+    """Parse a JSON array of objects; None (with a note) on anything else."""
+    try:
+        data = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as err:
+        print(f"note: cannot read {path}: {err}", file=sys.stderr)
+        return None
+    if not isinstance(data, list) or not all(isinstance(r, dict) for r in data):
+        print(f"note: {path} is not a JSON array of objects", file=sys.stderr)
+        return None
+    return data
+
+
+def index_rows(rows, key_fields):
+    """Map key-tuple -> row. Rows missing a key field are skipped."""
+    indexed = {}
+    for row in rows:
+        try:
+            key = tuple(row[f] for f in key_fields)
+        except KeyError:
+            continue
+        indexed[key] = row
+    return indexed
+
+
+def diff_file(name, old_path, new_path, threshold):
+    """Compare one artifact file; return the number of regressions."""
+    key_fields, metrics = SPECS[name]
+    old_rows = load_rows(old_path)
+    new_rows = load_rows(new_path)
+    if old_rows is None or new_rows is None:
+        return 0
+    old_by_key = index_rows(old_rows, key_fields)
+    new_by_key = index_rows(new_rows, key_fields)
+    regressions = 0
+    for key in sorted(old_by_key, key=repr):
+        if key not in new_by_key:
+            print(f"note: {name}: row {key} missing from the new run", file=sys.stderr)
+            continue
+        old_row, new_row = old_by_key[key], new_by_key[key]
+        label = ", ".join(f"{f}={v}" for f, v in zip(key_fields, key))
+        for metric in metrics:
+            old_val, new_val = old_row.get(metric), new_row.get(metric)
+            if not isinstance(old_val, (int, float)) or not isinstance(
+                new_val, (int, float)
+            ):
+                continue
+            if old_val <= 0:
+                print(f"note: {name} [{label}] {metric}: zero baseline, skipped",
+                      file=sys.stderr)
+                continue
+            change_pct = (new_val - old_val) / old_val * 100.0
+            verdict = "ok"
+            if change_pct < -threshold:
+                verdict = "REGRESSION"
+                regressions += 1
+            print(
+                f"{name} [{label}] {metric}: "
+                f"{old_val:.3g} -> {new_val:.3g} ({change_pct:+.1f}%) {verdict}"
+            )
+    return regressions
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(
+        description="diff two nightly bench JSON artifact directories"
+    )
+    parser.add_argument("old_dir", type=Path, help="baseline bench-results tree")
+    parser.add_argument("new_dir", type=Path, help="candidate bench-results tree")
+    parser.add_argument(
+        "--threshold",
+        type=float,
+        default=10.0,
+        help="regression threshold in percent (default: 10)",
+    )
+    args = parser.parse_args(argv)
+
+    for d in (args.old_dir, args.new_dir):
+        if not d.is_dir():
+            print(f"note: {d} is not a directory; nothing to diff", file=sys.stderr)
+            return 0
+
+    regressions = 0
+    compared = 0
+    for name in SPECS:
+        old_path = find_file(args.old_dir, name)
+        new_path = find_file(args.new_dir, name)
+        if old_path is None or new_path is None:
+            missing = "old" if old_path is None else "new"
+            print(f"note: {name} absent from the {missing} run, skipped",
+                  file=sys.stderr)
+            continue
+        compared += 1
+        regressions += diff_file(name, old_path, new_path, args.threshold)
+
+    if compared == 0:
+        print("note: no comparable artifact files found", file=sys.stderr)
+        return 0
+    if regressions:
+        print(f"{regressions} metric(s) regressed beyond {args.threshold}%")
+        return 1
+    print(f"no regression beyond {args.threshold}% across {compared} file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

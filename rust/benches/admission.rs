@@ -14,7 +14,13 @@
 //! Run: `cargo bench --bench admission [-- --offered 32,128,512
 //! --reps R --shards N --channel-capacity C --deadline-ms D
 //! --shed never|past-deadline|load-factor[:F] --service-estimate-us U
-//! --no-pin]`
+//! --ema-alpha A --edf --no-pin]`
+//!
+//! `--ema-alpha A` turns on the measured per-shard service-time EMA
+//! (the static `--service-estimate-us` knob becomes its seed/floor);
+//! `--edf` spreads the deadlines, serves each batch
+//! earliest-deadline-first, and prints the FIFO baseline's miss count
+//! alongside (see EXPERIMENTS.md §Routing-and-EDF).
 //! Meaningful throughput numbers need one idle physical core per
 //! shard; elsewhere the verdict reconciliation still gates.
 
@@ -36,11 +42,14 @@ fn main() {
     let shed_name = args.get("shed").unwrap_or("never");
     let shed = ShedPolicy::parse(shed_name)
         .expect("--shed never|past-deadline|load-factor[:F]");
+    let ema_alpha = args.get_f64("ema-alpha", 0.0).clamp(0.0, 1.0);
+    let edf = args.flag("edf");
 
     println!("host: {}", affinity::topology_summary());
     common::section(&format!(
         "open-loop admission sweep (capacity {capacity}, shed {shed_name}, \
-         deadline {deadline_ms} ms)"
+         deadline {deadline_ms} ms, ema alpha {ema_alpha}, edf {})",
+        if edf { "on" } else { "off" },
     ));
     let template = EngineConfig {
         pool: PoolConfig {
@@ -52,6 +61,8 @@ fn main() {
         admission: AdmissionConfig {
             shed,
             service_estimate_ns: args.get_u64("service-estimate-us", 0).saturating_mul(1_000),
+            ema_alpha,
+            edf,
         },
         ..EngineConfig::default()
     };

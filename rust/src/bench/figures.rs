@@ -410,6 +410,18 @@ pub struct AdmissionRow {
     pub batch_ms: f64,
     /// Completed requests per second.
     pub throughput_rps: f64,
+    /// Whether this row ran with EDF batch ordering (and therefore the
+    /// deadline spread and the FIFO baseline below).
+    pub edf: bool,
+    /// Deadline misses of the FIFO-baseline engine fed the identical
+    /// request stream — only distinct from `deadline_misses` when `edf`
+    /// is set; equal to it otherwise.
+    pub fifo_misses: u64,
+    /// Post-run measured service-time estimate (sample-weighted mean
+    /// EMA across shards and kernel classes), in µs. 0 when
+    /// measurement is off — the EMA-convergence column: stable values
+    /// across loads mean the estimator has settled.
+    pub ema_us: f64,
 }
 
 /// The three admission front doors the sweep compares.
@@ -427,6 +439,16 @@ pub const ADMISSION_MODES: [&str; 3] = ["blocking", "try", "park"];
 /// the verdicts must reconcile — `accepted + rejected + shed ==
 /// offered × reps` and `completed == accepted`, i.e. nothing is ever
 /// silently dropped, on any path.
+///
+/// With `template.admission.edf` set the sweep becomes the
+/// **Routing-and-EDF protocol** (EXPERIMENTS.md): request deadlines are
+/// spread over a fixed weight cycle (tight deadlines arriving *behind*
+/// loose ones — the inversion EDF exists to fix; FIFO serves them in
+/// arrival order and eats the misses), and every row additionally runs
+/// a FIFO-baseline engine — identical config except `edf = false` — on
+/// the identical request stream, reporting its misses in
+/// [`AdmissionRow::fifo_misses`] so the EDF win is a column, not an
+/// anecdote.
 pub fn admission_sweep(
     template: &crate::coordinator::EngineConfig,
     offered_loads: &[usize],
@@ -446,6 +468,12 @@ pub fn admission_sweep(
         .map(|&(k, source)| run_native_kernel(k, &graph, source))
         .collect();
 
+    let edf = template.admission.edf;
+    // Deadline-spread weights (quarters of the base deadline) for the
+    // EDF protocol: 2×, ½×, 1×, ¼× — every fourth request is tight and
+    // arrives behind a loose one.
+    const SPREAD: [u32; 4] = [8, 2, 4, 1];
+
     let reps = reps.max(1);
     let mut rows = Vec::new();
     for &offered in offered_loads {
@@ -459,6 +487,7 @@ pub fn admission_sweep(
                 graph: graph.clone(),
                 source: plan[i].1,
                 deadline: match deadline {
+                    Some(d) if edf => Deadline::within(d * SPREAD[i % SPREAD.len()] / 4),
                     Some(d) => Deadline::within(d),
                     None => Deadline::none(),
                 },
@@ -514,6 +543,36 @@ pub fn admission_sweep(
                 warm_completed + completed,
                 "mode {mode}, load {offered}: served == completed (+ warmup)"
             );
+            let deadline_misses = agg.admission.deadline_misses.get();
+            // FIFO baseline for the EDF protocol: same config, same
+            // stream, edf off — its misses are the row's comparison
+            // column. Run after the timed loop so the timing columns
+            // stay attributable to the EDF engine alone. Deadline-less
+            // streams skip it: their miss count is 0 by definition.
+            let fifo_misses = if edf && deadline.is_some() {
+                let mut baseline_cfg = template.clone();
+                baseline_cfg.admission.edf = false;
+                let mut baseline = Engine::new(baseline_cfg);
+                for i in 0..offered.min(8) {
+                    let _ =
+                        baseline.submit(Request { deadline: Deadline::none(), ..make_req(i) });
+                }
+                baseline.drain();
+                for _ in 0..reps {
+                    for i in 0..offered {
+                        let _ = match mode {
+                            "blocking" => baseline.submit(make_req(i)),
+                            "try" => baseline.try_submit(make_req(i)),
+                            "park" => baseline.submit_or_park(make_req(i)),
+                            _ => unreachable!(),
+                        };
+                    }
+                    baseline.drain();
+                }
+                baseline.aggregated_metrics().admission.deadline_misses.get()
+            } else {
+                deadline_misses
+            };
             let batch_ms = total_ns as f64 / reps as f64 / 1e6;
             rows.push(AdmissionRow {
                 mode: mode.to_string(),
@@ -523,7 +582,7 @@ pub fn admission_sweep(
                 rejected,
                 shed,
                 parked: agg.admission.parked_submits.get(),
-                deadline_misses: agg.admission.deadline_misses.get(),
+                deadline_misses,
                 completed,
                 batch_ms,
                 throughput_rps: if total_ns > 0 {
@@ -531,35 +590,46 @@ pub fn admission_sweep(
                 } else {
                     0.0
                 },
+                edf,
+                fifo_misses,
+                ema_us: agg.service_estimator.mean_estimate_ns() as f64 / 1e3,
             });
         }
     }
     rows
 }
 
-/// Render the admission-sweep table.
+/// Render the admission-sweep table. Every row carries the measured
+/// mean service-time EMA column (`ema µs` — 0.0 with measurement off;
+/// stable across loads once the estimator has converged); rows
+/// produced under the EDF protocol additionally grow the FIFO
+/// baseline's miss column (`fifo`) next to EDF's.
 pub fn render_admission(rows: &[AdmissionRow]) -> String {
+    let edf = rows.iter().any(|r| r.edf);
     let mut out = format!(
-        "{:<10}{:>9}{:>10}{:>9}{:>7}{:>8}{:>8}{:>11}{:>12}\n",
-        "mode", "offered", "accepted", "rejected", "shed", "parked", "misses", "batch ms",
-        "req/s"
+        "{:<10}{:>9}{:>10}{:>9}{:>7}{:>8}{:>8}",
+        "mode", "offered", "accepted", "rejected", "shed", "parked", "misses"
     );
+    if edf {
+        out += &format!("{:>7}", "fifo");
+    }
+    out += &format!("{:>9}{:>11}{:>12}\n", "ema µs", "batch ms", "req/s");
     for r in rows {
         out += &format!(
-            "{:<10}{:>9}{:>10}{:>9}{:>7}{:>8}{:>8}{:>11.3}{:>12.0}\n",
-            r.mode,
-            r.offered,
-            r.accepted,
-            r.rejected,
-            r.shed,
-            r.parked,
-            r.deadline_misses,
-            r.batch_ms,
-            r.throughput_rps,
+            "{:<10}{:>9}{:>10}{:>9}{:>7}{:>8}{:>8}",
+            r.mode, r.offered, r.accepted, r.rejected, r.shed, r.parked, r.deadline_misses,
         );
+        if edf {
+            out += &format!("{:>7}", r.fifo_misses);
+        }
+        out += &format!("{:>9.1}{:>11.3}{:>12.0}\n", r.ema_us, r.batch_ms, r.throughput_rps);
     }
     out += "(accepted + rejected + shed = offered; completed checksums verified \
             against the single-pair kernels)\n";
+    if edf {
+        out += "(edf protocol: spread deadlines; `misses` = EDF engine, `fifo` = \
+                FIFO baseline on the identical stream)\n";
+    }
     out
 }
 
@@ -584,6 +654,9 @@ pub fn admission_rows_to_json(rows: &[AdmissionRow]) -> String {
                 ("completed".into(), Value::Number(r.completed as f64)),
                 ("batch_ms".into(), Value::Number(r.batch_ms)),
                 ("throughput_rps".into(), Value::Number(r.throughput_rps)),
+                ("edf".into(), Value::Bool(r.edf)),
+                ("fifo_misses".into(), Value::Number(r.fifo_misses as f64)),
+                ("ema_us".into(), Value::Number(r.ema_us)),
             ])
         })
         .collect();
@@ -906,7 +979,7 @@ mod tests {
             },
             admission: crate::coordinator::AdmissionConfig {
                 shed: crate::coordinator::ShedPolicy::LoadFactor(-1.0),
-                service_estimate_ns: 0,
+                ..Default::default()
             },
             ..crate::coordinator::EngineConfig::default()
         };
@@ -917,6 +990,61 @@ mod tests {
             assert_eq!(r.accepted, 0);
             assert_eq!(r.completed, 0);
         }
+    }
+
+    #[test]
+    fn admission_sweep_edf_protocol_adds_baseline_and_ema_columns() {
+        // EDF + measured EMA: the sweep runs the FIFO baseline per row
+        // and surfaces the estimator readout. Generous deadlines keep
+        // the run deterministic (no misses on either engine) while the
+        // columns and reconciliation are exercised end to end.
+        let template = crate::coordinator::EngineConfig {
+            pool: crate::relic::PoolConfig {
+                shards: Some(1),
+                pin: false,
+                ..crate::relic::PoolConfig::default()
+            },
+            admission: crate::coordinator::AdmissionConfig {
+                ema_alpha: 0.5,
+                edf: true,
+                ..Default::default()
+            },
+            ..crate::coordinator::EngineConfig::default()
+        };
+        let rows =
+            admission_sweep(&template, &[6], Some(std::time::Duration::from_secs(3600)), 1);
+        assert_eq!(rows.len(), ADMISSION_MODES.len());
+        for r in &rows {
+            assert!(r.edf);
+            assert_eq!(r.completed, r.offered as u64);
+            assert_eq!(r.deadline_misses, 0, "hour-scale deadlines cannot miss");
+            assert_eq!(r.fifo_misses, 0, "baseline cannot miss either");
+            assert!(r.ema_us > 0.0, "measured EMA converged to a real latency");
+        }
+        let s = render_admission(&rows);
+        assert!(s.contains("fifo"), "baseline column rendered: {s}");
+        assert!(s.contains("ema µs"), "EMA column rendered: {s}");
+        assert!(s.contains("edf protocol"), "legend explains the columns: {s}");
+        let json = admission_rows_to_json(&rows);
+        assert!(json.contains("\"fifo_misses\""));
+        assert!(json.contains("\"ema_us\""));
+        assert!(json.contains("\"edf\""));
+        // Non-EDF rows keep the compact table (no baseline column).
+        let plain = admission_sweep(
+            &crate::coordinator::EngineConfig {
+                pool: crate::relic::PoolConfig {
+                    shards: Some(1),
+                    pin: false,
+                    ..crate::relic::PoolConfig::default()
+                },
+                ..crate::coordinator::EngineConfig::default()
+            },
+            &[4],
+            None,
+            1,
+        );
+        assert!(plain.iter().all(|r| !r.edf && r.fifo_misses == r.deadline_misses));
+        assert!(!render_admission(&plain).contains("edf protocol"));
     }
 
     #[test]

@@ -241,16 +241,27 @@ impl PoolSettings {
 
 /// Admission-control configuration (section `[admission]`; defaults
 /// mirror [`crate::coordinator::AdmissionConfig`]: admit everything,
-/// no service estimate). The serve CLI's `--shed`, `--deadline-ms` and
-/// `--service-estimate-us` flags override these.
+/// no service estimate, no measurement, FIFO batches). The serve CLI's
+/// `--shed`, `--deadline-ms`, `--service-estimate-us`, `--ema-alpha`
+/// and `--edf` flags override these.
 #[derive(Debug, Clone, PartialEq)]
 pub struct AdmissionSettings {
     /// Shed policy spelling: `"never"`, `"past-deadline"`,
     /// `"load-factor"` or `"load-factor:0.75"`.
     pub shed: String,
     /// Per-request service-time estimate in microseconds (0 = slack
-    /// estimation disabled; only already-expired deadlines shed).
+    /// estimation disabled; only already-expired deadlines shed). With
+    /// `ema_alpha > 0` this seeds and floors the measured EMA instead
+    /// of being the estimate itself.
     pub service_estimate_us: u64,
+    /// EMA weight of the measured per-shard service-time estimator
+    /// (`[0, 1]`; 0 = measurement off, the static knob is
+    /// authoritative).
+    pub ema_alpha: f64,
+    /// Serve deadline-carrying requests earliest-deadline-first within
+    /// each shard batch (deadline-less requests keep FIFO order among
+    /// themselves; false = pure FIFO).
+    pub edf: bool,
     /// Default deadline the serve/admission CLI stamps on generated
     /// requests, in milliseconds (0 = no deadline).
     pub deadline_ms: u64,
@@ -258,7 +269,13 @@ pub struct AdmissionSettings {
 
 impl Default for AdmissionSettings {
     fn default() -> Self {
-        AdmissionSettings { shed: "never".into(), service_estimate_us: 0, deadline_ms: 0 }
+        AdmissionSettings {
+            shed: "never".into(),
+            service_estimate_us: 0,
+            ema_alpha: 0.0,
+            edf: false,
+            deadline_ms: 0,
+        }
     }
 }
 
@@ -278,6 +295,11 @@ impl AdmissionSettings {
                 .get_int("admission.service_estimate_us")
                 .map(|v| v.max(0) as u64)
                 .unwrap_or(d.service_estimate_us),
+            ema_alpha: raw
+                .get_float("admission.ema_alpha")
+                .map(|v| v.clamp(0.0, 1.0))
+                .unwrap_or(d.ema_alpha),
+            edf: raw.get_bool("admission.edf").unwrap_or(d.edf),
             deadline_ms: raw
                 .get_int("admission.deadline_ms")
                 .map(|v| v.max(0) as u64)
@@ -296,6 +318,8 @@ impl AdmissionSettings {
         crate::coordinator::AdmissionConfig {
             shed: self.shed_policy(),
             service_estimate_ns: self.service_estimate_us.saturating_mul(1_000),
+            ema_alpha: self.ema_alpha.clamp(0.0, 1.0),
+            edf: self.edf,
         }
     }
 
@@ -432,15 +456,26 @@ mod tests {
         assert_eq!(d.shed_policy(), ShedPolicy::Never);
         assert_eq!(d.deadline(), None);
         assert_eq!(d.to_config().service_estimate_ns, 0);
+        assert_eq!(d.to_config().ema_alpha, 0.0, "measurement off by default");
+        assert!(!d.to_config().edf, "FIFO batches by default");
         let raw = RawConfig::parse(
             "[admission]\nshed = \"load-factor:0.75\"\nservice_estimate_us = 40\n\
-             deadline_ms = 250\n",
+             deadline_ms = 250\nema_alpha = 0.25\nedf = true\n",
         )
         .unwrap();
         let s = AdmissionSettings::from_raw(&raw);
         assert_eq!(s.shed_policy(), ShedPolicy::LoadFactor(0.75));
         assert_eq!(s.to_config().service_estimate_ns, 40_000);
         assert_eq!(s.deadline(), Some(std::time::Duration::from_millis(250)));
+        assert_eq!(s.to_config().ema_alpha, 0.25);
+        assert!(s.to_config().edf);
+        // Out-of-range alpha clamps on overlay (and again on
+        // materialization, for hand-built structs).
+        let raw = RawConfig::parse("[admission]\nema_alpha = 3.5\n").unwrap();
+        assert_eq!(AdmissionSettings::from_raw(&raw).ema_alpha, 1.0);
+        // An integer alpha parses through the int→float coercion.
+        let raw = RawConfig::parse("[admission]\nema_alpha = 1\n").unwrap();
+        assert_eq!(AdmissionSettings::from_raw(&raw).ema_alpha, 1.0);
         // Unknown spelling and negative values keep/clamp defaults.
         let raw =
             RawConfig::parse("[admission]\nshed = \"nope\"\ndeadline_ms = -3\n").unwrap();

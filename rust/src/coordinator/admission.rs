@@ -73,6 +73,34 @@ impl Deadline {
 
 /// What the engine does with requests that cannot (or should not) be
 /// served in time. Applies only to requests carrying a [`Deadline`].
+///
+/// # Examples
+///
+/// Policies parse from their CLI/config spelling, and the pure
+/// [`shed_decision`] applies them:
+///
+/// ```
+/// use relic_smt::coordinator::{shed_decision, Deadline, ShedPolicy, ShedReason};
+/// use std::time::{Duration, Instant};
+///
+/// let policy = ShedPolicy::parse("load-factor:0.8").unwrap();
+/// assert_eq!(policy, ShedPolicy::LoadFactor(0.8));
+///
+/// let now = Instant::now();
+/// // An already-expired deadline sheds…
+/// assert_eq!(
+///     shed_decision(policy, Deadline::at(now), now, Duration::ZERO, 0.0),
+///     Some(ShedReason::PastDeadline),
+/// );
+/// // …an on-time one admits below the load threshold…
+/// let live = Deadline::within(Duration::from_secs(60));
+/// assert_eq!(shed_decision(policy, live, now, Duration::ZERO, 0.5), None);
+/// // …and a deadline-less request is never shed, even overloaded.
+/// assert_eq!(
+///     shed_decision(policy, Deadline::none(), now, Duration::from_secs(9), 2.0),
+///     None,
+/// );
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub enum ShedPolicy {
     /// Admit everything; admission degenerates to PR 2's counted
@@ -132,19 +160,61 @@ pub enum ShedReason {
 }
 
 /// Engine-level admission knobs (the `[admission]` config section and
-/// the `serve --shed` / `--service-estimate-us` flags materialize
-/// here).
+/// the `serve --shed` / `--service-estimate-us` / `--ema-alpha` /
+/// `--edf` flags materialize here).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct AdmissionConfig {
     /// What to do with requests that cannot meet their deadline.
     pub shed: ShedPolicy,
-    /// Per-request service-time estimate in nanoseconds, used for
-    /// least-slack routing and the `SlackExhausted` shed decision.
-    /// `0` (the default) disables the estimate: only already-expired
-    /// deadlines shed, which keeps admission decisions independent of
-    /// queue depth — and therefore deterministic — unless the operator
-    /// opts in with a measured estimate.
+    /// Per-request service-time estimate in nanoseconds. With
+    /// measurement off (`ema_alpha == 0`) this is the estimate, used
+    /// verbatim for least-slack routing and the `SlackExhausted` shed
+    /// decision; with measurement on it seeds and floors each shard's
+    /// per-kernel-class EMA ([`crate::metrics::ServiceEstimator`]).
+    /// `0` (the default) disables the static estimate: only
+    /// already-expired deadlines shed, which keeps admission decisions
+    /// independent of queue depth — and therefore deterministic —
+    /// unless the operator opts in.
     pub service_estimate_ns: u64,
+    /// EMA weight for the measured service-time estimator, in `[0, 1]`.
+    /// `0` (the default) disables measurement entirely — the engine
+    /// behaves bit-for-bit like the static-knob PR 4 front door. Values
+    /// around `0.1 ..= 0.5` track drift while smoothing noise.
+    pub ema_alpha: f64,
+    /// Serve deadline-carrying requests earliest-deadline-first within
+    /// each drained shard batch ([`edf_order`]). Off (the default), a
+    /// batch is processed in FIFO order — bit-for-bit PR 4. Accepted
+    /// requests are never dropped either way, and response collection
+    /// order (submission order) is unaffected; EDF only changes which
+    /// request runs first inside a batch, i.e. who eats the queueing
+    /// delay.
+    pub edf: bool,
+}
+
+/// The earliest-deadline-first processing order of one batch: returns
+/// the indices of `deadlines` in the order the requests should run.
+///
+/// Deadline-carrying requests come first, soonest deadline first (ties
+/// keep arrival order); deadline-less requests follow **in their
+/// original FIFO order** — in EDF terms their deadline is infinite, and
+/// keeping them FIFO among themselves preserves the engine's
+/// fairness-among-equals guarantee. Pure in its inputs so the ordering
+/// rule is testable without a running engine; with no deadlines present
+/// the result is the identity permutation, which is how `edf = true`
+/// stays bit-for-bit FIFO on deadline-less traffic.
+pub fn edf_order<I>(deadlines: I) -> Vec<usize>
+where
+    I: IntoIterator<Item = Deadline>,
+{
+    let ds: Vec<Deadline> = deadlines.into_iter().collect();
+    let mut order: Vec<usize> = (0..ds.len()).collect();
+    order.sort_by(|&a, &b| match (ds[a].instant(), ds[b].instant()) {
+        (Some(x), Some(y)) => x.cmp(&y).then(a.cmp(&b)),
+        (Some(_), None) => std::cmp::Ordering::Less,
+        (None, Some(_)) => std::cmp::Ordering::Greater,
+        (None, None) => a.cmp(&b),
+    });
+    order
 }
 
 /// The verdict of one submit. `QueueFull` and `Shed` hand the request
@@ -323,6 +393,61 @@ mod tests {
             shed_decision(ShedPolicy::PastDeadline, live, now, Duration::from_millis(1), 0.99),
             None
         );
+    }
+
+    #[test]
+    fn edf_order_sorts_deadlines_and_keeps_deadline_less_fifo() {
+        let now = Instant::now();
+        let at = |ms: u64| Deadline::at(now + Duration::from_millis(ms));
+        // Mixed batch: [loose, none, tight, none, middle].
+        let order = edf_order([at(30), Deadline::none(), at(5), Deadline::none(), at(10)]);
+        // Deadlined EDF first (tight, middle, loose), then the
+        // deadline-less two in arrival order.
+        assert_eq!(order, vec![2, 4, 0, 1, 3]);
+        // All deadline-less: identity (bit-for-bit FIFO).
+        let order = edf_order(std::iter::repeat(Deadline::none()).take(4));
+        assert_eq!(order, vec![0, 1, 2, 3]);
+        // Equal deadlines keep arrival order (stable ties).
+        assert_eq!(edf_order([at(7), at(7), at(7)]), vec![0, 1, 2]);
+        // Degenerate batches.
+        assert!(edf_order([]).is_empty());
+        assert_eq!(edf_order([Deadline::none()]), vec![0]);
+    }
+
+    #[test]
+    fn edf_order_is_a_permutation_preserving_deadline_less_order() {
+        crate::testutil::check(50, |rng| {
+            let now = Instant::now();
+            let n = (rng.below(12) + 1) as usize;
+            let ds: Vec<Deadline> = (0..n)
+                .map(|_| {
+                    if rng.below(3) == 0 {
+                        Deadline::none()
+                    } else {
+                        Deadline::at(now + Duration::from_micros(rng.below(1_000)))
+                    }
+                })
+                .collect();
+            let order = edf_order(ds.clone());
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            if sorted != (0..n).collect::<Vec<_>>() {
+                return Err(format!("not a permutation: {order:?}"));
+            }
+            // Deadline-less requests never swap relative to each other.
+            let none_positions: Vec<usize> =
+                order.iter().copied().filter(|&i| ds[i].is_none()).collect();
+            if none_positions.windows(2).any(|w| w[0] > w[1]) {
+                return Err(format!("deadline-less reordered: {none_positions:?}"));
+            }
+            // Deadlined requests are non-decreasing in deadline.
+            let instants: Vec<_> =
+                order.iter().filter_map(|&i| ds[i].instant()).collect();
+            if instants.windows(2).any(|w| w[0] > w[1]) {
+                return Err("deadlines out of order".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -8,7 +8,17 @@
 //! * every [`Request`] that passes admission is tagged with a sequence
 //!   number and dispatched to the shard with the least estimated wait
 //!   (bounded per-shard channel — see [`crate::relic::pool`] and
-//!   [`super::router::pick_shard`]);
+//!   [`super::router::pick_shard`]). The wait estimate is *measured*:
+//!   each shard's [`ServiceMetrics`] carries a per-kernel-class
+//!   service-time EMA ([`crate::metrics::ServiceEstimator`]) fed by
+//!   `record_completion` and read lock-free at admission, with the
+//!   static `service_estimate_ns` knob as its seed/floor (`ema_alpha
+//!   == 0` keeps the knob authoritative — the PR 4 behavior);
+//! * with `edf` enabled each shard serves the deadline-carrying
+//!   requests of a drained batch earliest-deadline-first
+//!   ([`super::admission::edf_order`]) while deadline-less requests
+//!   keep FIFO order among themselves — response order and the no-drop
+//!   guarantee are unchanged;
 //! * the **front door** comes in three flavors sharing one admission
 //!   gate (shed policy + routing + slack accounting):
 //!   [`Engine::submit`] blocks on a full channel (PR 2's counted
@@ -117,17 +127,27 @@ impl Engine {
         let placements = discover_placements(config.pool.shards, config.pool.pin);
         let shard_metrics: Vec<Arc<ServiceMetrics>> =
             placements.iter().map(|_| Arc::new(ServiceMetrics::default())).collect();
+        // Arm each shard's service-time estimator before any traffic:
+        // the static knob seeds/floors the EMA, `ema_alpha == 0` keeps
+        // it a pass-through for that knob (PR 4 semantics).
+        for m in &shard_metrics {
+            m.service_estimator
+                .configure(config.admission.ema_alpha, config.admission.service_estimate_ns);
+        }
         let (tx, rx): (Sender<(u64, Response)>, _) = channel();
         let factory = {
             let shard_metrics = shard_metrics.clone();
             let router_cfg = config.router.clone();
+            let edf = config.admission.edf;
             move |p: &crate::relic::ShardPlacement| {
-                Coordinator::with_config(
+                let mut coordinator = Coordinator::with_config(
                     Router::new(router_cfg.clone(), None),
                     None,
                     RelicConfig { assistant_cpu: p.assistant_cpu, ..RelicConfig::default() },
                     Arc::clone(&shard_metrics[p.shard]),
-                )
+                );
+                coordinator.set_edf(edf);
+                coordinator
             }
         };
         let handler = move |coord: &mut Coordinator, batch: Vec<Sequenced>| {
@@ -172,8 +192,16 @@ impl Engine {
     /// request in the accepted-slack histogram.
     fn admission_gate(&mut self, req: Request) -> Result<(usize, Request, Option<u64>), Admission> {
         let now = Instant::now();
-        let (shard, est_wait) =
-            pick_shard(self.pool.depths_iter(), self.admission.service_estimate_ns);
+        // Route on the measured wait: each shard's depth × its live EMA
+        // for this request's kernel class (the static knob is the EMA's
+        // floor, so an unmeasured engine routes exactly as before).
+        let class = req.kernel.class();
+        let (shard, est_wait) = pick_shard(
+            self.shard_metrics
+                .iter()
+                .zip(self.pool.depths_iter())
+                .map(|(m, depth)| (depth, m.service_estimator.estimate_ns(class))),
+        );
         if let Some(reason) = shed_decision(
             self.admission.shed,
             req.deadline,
@@ -210,6 +238,32 @@ impl Engine {
     /// [`ShedPolicy::Never`](super::admission::ShedPolicy::Never)
     /// preserves bit-for-bit since the gate then admits everything
     /// unconditionally).
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use relic_smt::coordinator::{Deadline, Engine, EngineConfig, GraphKernel, Request};
+    /// use relic_smt::graph::kronecker::paper_graph;
+    /// use relic_smt::relic::PoolConfig;
+    ///
+    /// // One unpinned shard keeps the example portable — CI containers
+    /// // may deny CPU-affinity calls.
+    /// let mut engine = Engine::new(EngineConfig {
+    ///     pool: PoolConfig { shards: Some(1), pin: false, ..PoolConfig::default() },
+    ///     ..EngineConfig::default()
+    /// });
+    /// let verdict = engine.submit(Request {
+    ///     id: 7,
+    ///     kernel: GraphKernel::Tc,
+    ///     graph: paper_graph(),
+    ///     source: 0,
+    ///     deadline: Deadline::none(),
+    /// });
+    /// assert!(verdict.is_accepted());
+    /// let responses = engine.drain();
+    /// assert_eq!(responses.len(), 1);
+    /// assert_eq!(responses[0].id, 7);
+    /// ```
     pub fn submit(&mut self, req: Request) -> Admission {
         let (shard, req, slack_ns) = match self.admission_gate(req) {
             Ok(routed) => routed,
@@ -333,7 +387,9 @@ impl Engine {
     }
 
     /// Human-readable report: pool counters, the admission verdicts,
-    /// one line per shard, and the aggregated service metrics.
+    /// the slack-at-admission distribution, the measured service-time
+    /// EMAs (per shard and aggregated), one line per shard, and the
+    /// aggregated service metrics.
     pub fn report(&self) -> String {
         let snap = self.pool.snapshot();
         let mut out = format!(
@@ -346,6 +402,28 @@ impl Engine {
             self.admission.shed.name(),
             agg.admission.summary()
         );
+        // Slack and the estimator readout are always surfaced — an
+        // operator tuning deadlines needs to see "nothing deadlined
+        // yet" as much as the distribution itself.
+        let slack = &agg.admission.slack_at_admission;
+        out += &format!(
+            "slack at admission: {}\n",
+            if slack.count() > 0 {
+                slack.summary("ns")
+            } else {
+                "(no deadlined requests admitted)".into()
+            }
+        );
+        out += &format!(
+            "service estimate: {} (floor {} µs{})\n",
+            if self.admission.ema_alpha > 0.0 {
+                format!("measured ema, alpha {:.2}", self.admission.ema_alpha)
+            } else {
+                "static knob (ema off)".into()
+            },
+            self.admission.service_estimate_ns / 1_000,
+            if self.admission.edf { ", edf on" } else { "" },
+        );
         for (i, m) in self.shard_metrics.iter().enumerate() {
             let p = self.pool.placement(i);
             let cpus = match (p.main_cpu, p.assistant_cpu) {
@@ -353,19 +431,45 @@ impl Engine {
                 _ => "unpinned".into(),
             };
             out += &format!(
-                "shard {i} [{cpus}]: {} reqs ({} pairs, {} intra), {} served\n",
+                "shard {i} [{cpus}]: {} reqs ({} pairs, {} intra), {} served, \
+                 ema {}\n",
                 m.native_requests.get(),
                 m.relic_pairs.get(),
                 m.intra_requests.get(),
                 snap.occupancy[i],
+                ema_summary(&m.service_estimator),
             );
         }
         out += &format!(
-            "total: {} native reqs {}\n",
+            "total: {} native reqs {}; ema {}\n",
             agg.native_requests.get(),
             agg.native_latency.summary("ns"),
+            ema_summary(&agg.service_estimator),
         );
         out
+    }
+}
+
+/// Per-kernel-class EMA readout for reports: `kernel=µs/samples` for
+/// every measured class, or a placeholder while nothing (or no alpha)
+/// has been measured.
+fn ema_summary(estimator: &crate::metrics::ServiceEstimator) -> String {
+    let mut parts = Vec::new();
+    for kernel in super::GraphKernel::all() {
+        let class = kernel.class();
+        let n = estimator.samples(class);
+        if n > 0 {
+            parts.push(format!(
+                "{}={:.1}µs/{n}",
+                kernel.artifact_name(),
+                estimator.estimate_ns(class) as f64 / 1e3,
+            ));
+        }
+    }
+    if parts.is_empty() {
+        "(unmeasured)".into()
+    } else {
+        parts.join(" ")
     }
 }
 
@@ -502,7 +606,7 @@ mod tests {
     fn past_deadline_policy_sheds_expired_requests_only() {
         let mut e = engine_with_admission(
             1,
-            AdmissionConfig { shed: ShedPolicy::PastDeadline, service_estimate_ns: 0 },
+            AdmissionConfig { shed: ShedPolicy::PastDeadline, ..Default::default() },
         );
         let expired = Deadline::at(Instant::now());
         let generous = Deadline::within(Duration::from_secs(3600));
@@ -534,6 +638,7 @@ mod tests {
             AdmissionConfig {
                 shed: ShedPolicy::PastDeadline,
                 service_estimate_ns: 10_000_000_000,
+                ..Default::default()
             },
         );
         let deadline = Deadline::within(Duration::from_millis(100));
@@ -553,7 +658,7 @@ mod tests {
         // deterministic overload shedding without racing the shards.
         let mut e = engine_with_admission(
             2,
-            AdmissionConfig { shed: ShedPolicy::LoadFactor(-1.0), service_estimate_ns: 0 },
+            AdmissionConfig { shed: ShedPolicy::LoadFactor(-1.0), ..Default::default() },
         );
         let generous = Deadline::within(Duration::from_secs(3600));
         let verdict = e.submit(req_due(0, GraphKernel::Bfs, generous));
@@ -580,6 +685,78 @@ mod tests {
         let agg = e.aggregated_metrics();
         assert_eq!(agg.admission.slack_at_admission.count(), 1);
         assert_eq!(agg.admission.parked_submits.get(), 0);
+    }
+
+    #[test]
+    fn measured_ema_feeds_routing_and_report() {
+        let mut e = engine_with_admission(
+            2,
+            AdmissionConfig { ema_alpha: 0.5, ..Default::default() },
+        );
+        let n = 12;
+        for i in 0..n {
+            assert!(e.submit(req(i, GraphKernel::Tc)).is_accepted());
+        }
+        assert_eq!(e.drain().len(), n as usize);
+        let agg = e.aggregated_metrics();
+        let est = &agg.service_estimator;
+        assert!(est.is_measuring());
+        assert_eq!(est.samples(GraphKernel::Tc.class()), n, "one EMA sample per request");
+        assert!(est.estimate_ns(GraphKernel::Tc.class()) > 0);
+        assert_eq!(est.samples(GraphKernel::Pr.class()), 0);
+        let report = e.report();
+        assert!(report.contains("measured ema, alpha 0.50"), "{report}");
+        assert!(report.contains("tc="), "per-kernel readout present: {report}");
+        // Routing still works after estimates become non-zero: a fresh
+        // submit must land on *a* shard without panicking and drain.
+        assert!(e.submit(req(99, GraphKernel::Tc)).is_accepted());
+        assert_eq!(e.drain().len(), 1);
+    }
+
+    #[test]
+    fn edf_engine_reconciles_and_reports() {
+        use std::time::Duration;
+        let mut e = engine_with_admission(
+            1,
+            AdmissionConfig { edf: true, ema_alpha: 0.25, ..Default::default() },
+        );
+        // Generous, *descending* deadlines: any multi-request batch the
+        // shard drains is EDF-reordered, but nothing can miss or shed.
+        let n = 10u64;
+        for i in 0..n {
+            let d = Deadline::within(Duration::from_secs(7200 - 60 * i));
+            assert!(e.submit(req_due(i, GraphKernel::Bfs, d)).is_accepted());
+        }
+        let responses = e.drain();
+        assert_eq!(responses.len(), n as usize, "no-drop invariant under EDF");
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.id, i as u64, "submission-order responses under EDF");
+        }
+        let agg = e.aggregated_metrics();
+        assert_eq!(agg.native_requests.get(), n);
+        assert_eq!(agg.admission.shed_requests.get(), 0);
+        assert_eq!(agg.admission.deadline_misses.get(), 0);
+        assert!(e.report().contains("edf on"), "report names the mode");
+    }
+
+    #[test]
+    fn default_config_is_static_knob_fifo() {
+        // The PR 4 degeneracy the acceptance criteria pin: defaults
+        // carry no alpha and no EDF, so nothing measured, nothing
+        // reordered.
+        let d = AdmissionConfig::default();
+        assert_eq!(d.ema_alpha, 0.0);
+        assert!(!d.edf);
+        let mut e = engine(2);
+        for i in 0..8 {
+            let _ = e.submit(req(i, GraphKernel::Sssp));
+        }
+        e.drain();
+        let agg = e.aggregated_metrics();
+        assert!(!agg.service_estimator.is_measuring());
+        assert_eq!(agg.service_estimator.mean_estimate_ns(), 0);
+        assert_eq!(agg.admission.edf_reorders.get(), 0);
+        assert!(e.report().contains("static knob (ema off)"));
     }
 
     #[test]

@@ -11,8 +11,9 @@
 //! * [`service`] — the request loop: batches compatible PJRT requests,
 //!   pairs fine-grained native requests onto Relic, records latency and
 //!   throughput metrics;
-//! * [`admission`] — deadlines, the shed policy, and the
-//!   [`Admission`] verdict every engine submit path returns;
+//! * [`admission`] — deadlines, the shed policy, the
+//!   [`Admission`] verdict every engine submit path returns, and the
+//!   [`edf_order`] earliest-deadline-first batch ordering rule;
 //! * [`engine`] — the machine-scale layer: [`Engine::submit`] /
 //!   [`Engine::try_submit`] / [`Engine::submit_or_park`] /
 //!   [`Engine::drain`] over a [`crate::relic::RelicPool`] of pinned
@@ -27,7 +28,7 @@ pub mod router;
 pub mod service;
 
 pub use admission::{
-    shed_decision, Admission, AdmissionConfig, Deadline, ShedPolicy, ShedReason,
+    edf_order, shed_decision, Admission, AdmissionConfig, Deadline, ShedPolicy, ShedReason,
 };
 pub use engine::{Engine, EngineConfig};
 pub use router::{pick_shard, Backend, Router, RouterConfig};
@@ -56,6 +57,21 @@ impl GraphKernel {
             GraphKernel::Pr => "pagerank",
             GraphKernel::Sssp => "sssp",
             GraphKernel::Tc => "tc",
+        }
+    }
+
+    /// Service-class index for [`crate::metrics::ServiceEstimator`]:
+    /// a dense, stable `0..SERVICE_CLASSES` mapping (one EMA lane per
+    /// kernel kind — service time varies far more across kernels than
+    /// within one kernel at a fixed graph size).
+    pub fn class(self) -> usize {
+        match self {
+            GraphKernel::Bc => 0,
+            GraphKernel::Bfs => 1,
+            GraphKernel::Cc => 2,
+            GraphKernel::Pr => 3,
+            GraphKernel::Sssp => 4,
+            GraphKernel::Tc => 5,
         }
     }
 
@@ -149,6 +165,20 @@ mod tests {
                 "{k:?} parallel checksum must equal serial"
             );
         }
+    }
+
+    #[test]
+    fn kernel_classes_are_dense_and_cover_service_classes() {
+        // The estimator sizes its EMA lanes by this constant; every
+        // kernel must map to a distinct in-range class.
+        let mut seen = [false; crate::metrics::SERVICE_CLASSES];
+        for k in GraphKernel::all() {
+            let c = k.class();
+            assert!(c < crate::metrics::SERVICE_CLASSES, "{k:?} class {c} out of range");
+            assert!(!seen[c], "{k:?} shares class {c}");
+            seen[c] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "every class is used");
     }
 
     #[test]

@@ -9,11 +9,15 @@
 //! through Relic.
 //!
 //! Shard selection ([`pick_shard`]) minimizes *estimated wait* rather
-//! than raw queue depth: with a per-request service-time estimate the
-//! router can tell the admission layer how long a request admitted now
-//! would sit, which is what the least-slack shed decision compares
-//! against a deadline's remaining slack. With the estimate disabled
-//! (0, the default) it degenerates to exactly PR 2's least-loaded rule.
+//! than raw queue depth: with a per-shard, per-kernel-class
+//! service-time estimate (the measured EMA each shard's
+//! [`crate::metrics::ServiceEstimator`] maintains, floored by the
+//! static `[admission] service_estimate_us` knob) the router can tell
+//! the admission layer how long a request admitted now would sit,
+//! which is what the least-slack shed decision compares against a
+//! deadline's remaining slack. With the estimates disabled (alpha 0,
+//! floor 0 — the default) it degenerates to exactly PR 2's
+//! least-loaded rule.
 
 use super::GraphKernel;
 use crate::runtime::Manifest;
@@ -77,35 +81,49 @@ impl Router {
 
 /// Pick the shard a new request should be admitted to, returning the
 /// shard index and the estimated wait for a request admitted to it
-/// right now. Takes the per-shard depths as an iterator so the hot
-/// submit path can feed it straight from the pool's atomics without
-/// allocating.
+/// right now. Takes one `(depth, service_estimate_ns)` pair per shard
+/// as an iterator so the hot submit path can feed it straight from the
+/// pool's atomics and the per-shard EMA readouts without allocating —
+/// `service_estimate_ns` is each shard's *measured* per-request
+/// estimate for the request's kernel class
+/// ([`crate::metrics::ServiceEstimator::estimate_ns`]), which falls
+/// back to the static `[admission] service_estimate_us` knob (the
+/// EMA's floor) until samples arrive.
 ///
-/// The estimate is `(depth + 1) × service_estimate_ns`: everything
-/// already queued or in processing on the shard, *plus the request's
-/// own service time* — "can this deadline still be met" must include
-/// actually running the request. With `service_estimate_ns == 0` every
-/// estimate is zero and the rule is exactly PR 2's least-loaded pick
-/// (ties to the lowest index), so `ShedPolicy::Never` engines route
-/// bit-for-bit as before.
+/// A shard's estimated wait is `(depth + 1) × service_estimate_ns`:
+/// everything already queued or in processing on it, *plus the
+/// request's own service time* — "can this deadline still be met" must
+/// include actually running the request. The pick minimizes that wait;
+/// ties break to the smaller depth, then the lowest index. With every
+/// estimate 0 (no EMA samples, floor 0 — the default) all waits are
+/// zero and the rule is exactly PR 2's least-loaded pick, so
+/// `ShedPolicy::Never` engines route bit-for-bit as before; with one
+/// uniform static estimate the wait ordering is the depth ordering, so
+/// PR 4 routing is also preserved bit-for-bit. Divergence begins only
+/// once per-shard EMAs actually differ — the measured case.
 ///
 /// # Panics
-/// Panics on an empty `depths` iterator (a pool always has ≥ 1 shard).
-pub fn pick_shard<I>(depths: I, service_estimate_ns: u64) -> (usize, std::time::Duration)
+/// Panics on an empty iterator (a pool always has ≥ 1 shard).
+pub fn pick_shard<I>(shards: I) -> (usize, std::time::Duration)
 where
-    I: IntoIterator<Item = usize>,
+    I: IntoIterator<Item = (usize, u64)>,
 {
-    let mut best = None;
-    let mut best_depth = usize::MAX;
-    for (i, d) in depths.into_iter().enumerate() {
-        if best.is_none() || d < best_depth {
-            best = Some(i);
-            best_depth = d;
+    // (index, est wait ns, depth) of the best shard so far.
+    let mut best: Option<(usize, u64, usize)> = None;
+    for (i, (depth, est_ns)) in shards.into_iter().enumerate() {
+        let wait = (depth as u64).saturating_add(1).saturating_mul(est_ns);
+        let better = match best {
+            None => true,
+            Some((_, best_wait, best_depth)) => {
+                wait < best_wait || (wait == best_wait && depth < best_depth)
+            }
+        };
+        if better {
+            best = Some((i, wait, depth));
         }
     }
-    let best = best.expect("pick_shard needs at least one shard");
-    let est_ns = (best_depth as u64).saturating_add(1).saturating_mul(service_estimate_ns);
-    (best, std::time::Duration::from_nanos(est_ns))
+    let (i, wait, _) = best.expect("pick_shard needs at least one shard");
+    (i, std::time::Duration::from_nanos(wait))
 }
 
 #[cfg(test)]
@@ -154,18 +172,45 @@ mod tests {
         assert_eq!(r.route(GraphKernel::Tc, 64), Backend::Pjrt);
     }
 
+    /// One uniform estimate for every shard (the static-knob shape).
+    fn uniform(depths: &[usize], est_ns: u64) -> Vec<(usize, u64)> {
+        depths.iter().map(|&d| (d, est_ns)).collect()
+    }
+
     #[test]
     fn pick_shard_is_least_loaded_with_wait_estimate() {
         use std::time::Duration;
-        // Ties go low; zero estimate means zero wait (PR 2 rule).
-        assert_eq!(pick_shard([0, 0, 0], 0), (0, Duration::ZERO));
-        assert_eq!(pick_shard([3, 1, 1], 0), (1, Duration::ZERO));
+        // Ties go low; zero estimates mean zero wait (PR 2 rule).
+        assert_eq!(pick_shard(uniform(&[0, 0, 0], 0)), (0, Duration::ZERO));
+        assert_eq!(pick_shard(uniform(&[3, 1, 1], 0)), (1, Duration::ZERO));
         // The estimate covers the queue *and* the request itself.
-        assert_eq!(pick_shard([3, 2, 5], 1_000), (1, Duration::from_nanos(3_000)));
-        assert_eq!(pick_shard([0], 250), (0, Duration::from_nanos(250)));
+        assert_eq!(
+            pick_shard(uniform(&[3, 2, 5], 1_000)),
+            (1, Duration::from_nanos(3_000))
+        );
+        assert_eq!(pick_shard(uniform(&[0], 250)), (0, Duration::from_nanos(250)));
         // Saturates instead of overflowing on absurd inputs.
-        let (_, wait) = pick_shard([usize::MAX], u64::MAX);
+        let (_, wait) = pick_shard([(usize::MAX, u64::MAX)]);
         assert_eq!(wait, Duration::from_nanos(u64::MAX));
+    }
+
+    #[test]
+    fn pick_shard_measured_estimates_beat_raw_depth() {
+        use std::time::Duration;
+        // Shard 0 is deeper but measured 10× faster for this class:
+        // 4 × 100 ns = 400 ns beats 1 × 10 µs.
+        assert_eq!(
+            pick_shard([(3, 100), (0, 10_000)]),
+            (0, Duration::from_nanos(400))
+        );
+        // Equal waits tie-break to the smaller depth, then the index:
+        // (1+1)×500 == (0+1)×1000 → shard 1 (depth 0) wins.
+        assert_eq!(
+            pick_shard([(1, 500), (0, 1_000)]),
+            (1, Duration::from_nanos(1_000))
+        );
+        // A zero-estimate shard (no samples, no floor) reads as free.
+        assert_eq!(pick_shard([(5, 1_000), (9, 0)]), (1, Duration::ZERO));
     }
 
     #[test]

@@ -16,11 +16,11 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::graph::{dense, CsrGraph};
-use crate::metrics::{AdmissionMetrics, Counter, Histogram};
+use crate::metrics::{AdmissionMetrics, Counter, Histogram, ServiceEstimator};
 use crate::relic::{Par, Relic, RelicConfig};
 use crate::runtime::GraphExecutor;
 
-use super::admission::Deadline;
+use super::admission::{edf_order, Deadline};
 use super::router::{Backend, Router};
 use super::{run_native_kernel, run_native_kernel_par, GraphKernel};
 
@@ -69,8 +69,14 @@ pub struct ServiceMetrics {
     /// Admission-control counters. The engine records the
     /// admission-side events (shed, parked, slack) into its own
     /// instance; the coordinator records completion-side events
-    /// (deadline misses) per shard; aggregation merges both.
+    /// (deadline misses, EDF reorders) per shard; aggregation merges
+    /// both.
     pub admission: AdmissionMetrics,
+    /// Measured per-kernel-class service times: an EMA fed one sample
+    /// per completion (from the owning shard's thread only), read
+    /// lock-free by the engine's router. Inert until the engine
+    /// configures a non-zero `ema_alpha`.
+    pub service_estimator: ServiceEstimator,
 }
 
 impl ServiceMetrics {
@@ -84,11 +90,13 @@ impl ServiceMetrics {
         self.native_latency.merge_from(&other.native_latency);
         self.pjrt_latency.merge_from(&other.pjrt_latency);
         self.admission.merge_from(&other.admission);
+        self.service_estimator.merge_from(&other.service_estimator);
     }
 
     /// Completion accounting for exactly one request: a request
-    /// counter bump, one latency sample, and — when the request
-    /// carried a deadline that `now` has passed — one deadline miss.
+    /// counter bump, one latency sample, one service-time EMA sample
+    /// for the request's kernel class, and — when the request carried
+    /// a deadline that `now` has passed — one deadline miss.
     ///
     /// Every execution path (PJRT, Relic-paired, odd-leftover
     /// intra-parallel, and the PJRT→native fallback) must fund the
@@ -96,9 +104,12 @@ impl ServiceMetrics {
     /// paired path once double-weighted solo requests and the
     /// intra-parallel path missed deadline accounting, and what keeps
     /// `Engine::report`'s per-shard aggregation meaningful is that
-    /// "one completion = one sample" holds on every path.
+    /// "one completion = one sample" holds on every path. The same
+    /// single-funnel rule is what makes the EMA trustworthy enough to
+    /// route on.
     pub fn record_completion(
         &self,
+        kernel: GraphKernel,
         backend: Backend,
         latency_ns: u64,
         deadline: Deadline,
@@ -114,6 +125,7 @@ impl ServiceMetrics {
                 self.pjrt_latency.record(latency_ns);
             }
         }
+        self.service_estimator.record(kernel.class(), latency_ns);
         if deadline.is_past(now) {
             self.admission.deadline_misses.inc();
         }
@@ -129,6 +141,9 @@ pub struct Coordinator {
     router: Router,
     executor: Option<GraphExecutor>,
     relic: Relic,
+    /// Serve deadline-carrying requests earliest-deadline-first within
+    /// each batch (see [`Coordinator::set_edf`]). Off by default.
+    edf: bool,
     pub metrics: Arc<ServiceMetrics>,
 }
 
@@ -148,7 +163,25 @@ impl Coordinator {
         relic: RelicConfig,
         metrics: Arc<ServiceMetrics>,
     ) -> Self {
-        Coordinator { router, executor, relic: Relic::with_config(relic), metrics }
+        Coordinator {
+            router,
+            executor,
+            relic: Relic::with_config(relic),
+            edf: false,
+            metrics,
+        }
+    }
+
+    /// Enable/disable earliest-deadline-first ordering within each
+    /// processed batch ([`crate::coordinator::edf_order`]): deadlined
+    /// requests run soonest-deadline-first, deadline-less requests keep
+    /// their FIFO order among themselves (and a batch with no deadlines
+    /// is processed bit-for-bit as with EDF off). Responses are still
+    /// *returned* in request order — EDF moves queueing delay onto the
+    /// requests with the most slack, it never drops or re-answers
+    /// anything.
+    pub fn set_edf(&mut self, edf: bool) {
+        self.edf = edf;
     }
 
     /// Pre-compile every available PJRT executable so first-request
@@ -164,7 +197,10 @@ impl Coordinator {
         }
     }
 
-    /// Process a batch of requests, returning responses in request order.
+    /// Process a batch of requests, returning responses in request
+    /// order. With [`set_edf`](Self::set_edf) enabled, the *processing*
+    /// order of the native queue is [`edf_order`]; the response order
+    /// is unchanged.
     pub fn process_batch(&mut self, requests: Vec<Request>) -> Vec<Response> {
         let mut responses: Vec<Option<Response>> = Vec::new();
         let mut native_queue: Vec<(usize, Request)> = Vec::new();
@@ -179,6 +215,39 @@ impl Coordinator {
             }
         }
 
+        // EDF: re-permute the native queue so the soonest deadlines run
+        // first. `promoted[response idx]` marks deadlined requests that
+        // moved *ahead* of their FIFO slot — if such a request then
+        // completes on time, that is (an upper bound on) a miss the
+        // reorder prevented, counted at its completion below. The Vec
+        // stays empty (no allocation on the shard hot path) unless a
+        // batch was actually reordered; `was_promoted` reads empty as
+        // all-false.
+        let mut promoted: Vec<bool> = Vec::new();
+        if self.edf
+            && native_queue.len() > 1
+            && native_queue.iter().any(|(_, r)| !r.deadline.is_none())
+        {
+            let order = edf_order(native_queue.iter().map(|(_, r)| r.deadline));
+            if order.iter().enumerate().any(|(pos, &from)| pos != from) {
+                self.metrics.admission.edf_reorders.inc();
+                promoted = vec![false; responses.len()];
+                for (pos, &from) in order.iter().enumerate() {
+                    let (ridx, req) = &native_queue[from];
+                    if pos < from && !req.deadline.is_none() {
+                        promoted[*ridx] = true;
+                    }
+                }
+                let mut slots: Vec<Option<(usize, Request)>> =
+                    native_queue.into_iter().map(Some).collect();
+                native_queue = order
+                    .iter()
+                    .map(|&from| slots[from].take().expect("edf_order is a permutation"))
+                    .collect();
+            }
+        }
+        let was_promoted = |idx: usize| promoted.get(idx).copied().unwrap_or(false);
+
         // PJRT batches grouped by (kernel, n): executable + packing reuse.
         pjrt_queue.sort_by_key(|(_, r)| (r.kernel.artifact_name(), r.graph.num_vertices()));
         for (idx, req) in pjrt_queue {
@@ -186,7 +255,7 @@ impl Coordinator {
             let result = self.execute_pjrt(&req);
             let done = Instant::now();
             let latency = done.duration_since(t0).as_nanos() as u64;
-            self.metrics.record_completion(Backend::Pjrt, latency, req.deadline, done);
+            self.metrics.record_completion(req.kernel, Backend::Pjrt, latency, req.deadline, done);
             responses[idx] = Some(Response {
                 id: req.id,
                 backend: Backend::Pjrt,
@@ -226,8 +295,16 @@ impl Coordinator {
                     // would weight a paired request half as much as a
                     // solo one and under-count the histogram — and each
                     // request's own deadline decides its miss.
-                    self.metrics.record_completion(Backend::Native, latency, ra.deadline, done);
-                    self.metrics.record_completion(Backend::Native, latency, rb.deadline, done);
+                    self.metrics
+                        .record_completion(ra.kernel, Backend::Native, latency, ra.deadline, done);
+                    self.metrics
+                        .record_completion(rb.kernel, Backend::Native, latency, rb.deadline, done);
+                    if was_promoted(ia) && !ra.deadline.is_past(done) {
+                        self.metrics.admission.deadline_misses_avoided.inc();
+                    }
+                    if was_promoted(ib) && !rb.deadline.is_past(done) {
+                        self.metrics.admission.deadline_misses_avoided.inc();
+                    }
                     responses[ia] = Some(Response {
                         id: ra.id,
                         backend: Backend::Native,
@@ -255,7 +332,11 @@ impl Coordinator {
                     let done = Instant::now();
                     let latency = done.duration_since(t0).as_nanos() as u64;
                     self.metrics.intra_requests.inc();
-                    self.metrics.record_completion(Backend::Native, latency, req.deadline, done);
+                    self.metrics
+                        .record_completion(req.kernel, Backend::Native, latency, req.deadline, done);
+                    if was_promoted(idx) && !req.deadline.is_past(done) {
+                        self.metrics.admission.deadline_misses_avoided.inc();
+                    }
                     responses[idx] = Some(Response {
                         id: req.id,
                         backend: Backend::Native,
@@ -406,6 +487,72 @@ mod tests {
         let mut c = native_coordinator();
         c.process_batch(vec![req(0, GraphKernel::Bfs)]);
         assert_eq!(c.metrics.admission.deadline_misses.get(), 0);
+    }
+
+    #[test]
+    fn edf_reorders_batches_and_counts_promotions() {
+        use std::time::Duration;
+        let mut c = native_coordinator();
+        c.set_edf(true);
+        // FIFO order is [loose, tight]: EDF must run tight first. Both
+        // deadlines are generous, so the promoted request completes on
+        // time and counts as an avoided miss (the counter's contract).
+        let mut reqs: Vec<Request> = (0..2).map(|i| req(i, GraphKernel::Tc)).collect();
+        reqs[0].deadline = Deadline::within(Duration::from_secs(7200));
+        reqs[1].deadline = Deadline::within(Duration::from_secs(3600));
+        let want = run_native_kernel(GraphKernel::Tc, &paper_graph(), 0);
+        let responses = c.process_batch(reqs);
+        // Responses stay in submission order with correct checksums.
+        assert_eq!(responses.len(), 2);
+        assert_eq!(responses[0].id, 0);
+        assert_eq!(responses[1].id, 1);
+        for r in &responses {
+            assert_eq!(r.result, RequestResult::Native(want));
+        }
+        assert_eq!(c.metrics.admission.edf_reorders.get(), 1);
+        assert_eq!(c.metrics.admission.deadline_misses_avoided.get(), 1);
+        assert_eq!(c.metrics.admission.deadline_misses.get(), 0);
+        assert_eq!(c.metrics.native_requests.get(), 2);
+    }
+
+    #[test]
+    fn edf_is_inert_without_deadlines_or_when_disabled() {
+        use std::time::Duration;
+        // Deadline-less traffic under EDF: the identity permutation —
+        // no reorder recorded, same pairing structure as EDF off.
+        let mut on = native_coordinator();
+        on.set_edf(true);
+        let mut off = native_coordinator();
+        let mk = || (0..5).map(|i| req(i, GraphKernel::Bfs)).collect::<Vec<_>>();
+        let got_on = on.process_batch(mk());
+        let got_off = off.process_batch(mk());
+        assert_eq!(on.metrics.admission.edf_reorders.get(), 0);
+        assert_eq!(on.metrics.relic_pairs.get(), off.metrics.relic_pairs.get());
+        assert_eq!(on.metrics.intra_requests.get(), off.metrics.intra_requests.get());
+        for (a, b) in got_on.iter().zip(&got_off) {
+            assert_eq!((a.id, &a.result), (b.id, &b.result));
+        }
+        // EDF disabled ignores deadline skew entirely.
+        let mut c = native_coordinator();
+        let mut reqs: Vec<Request> = (0..2).map(|i| req(i, GraphKernel::Cc)).collect();
+        reqs[0].deadline = Deadline::within(Duration::from_secs(7200));
+        reqs[1].deadline = Deadline::within(Duration::from_secs(3600));
+        c.process_batch(reqs);
+        assert_eq!(c.metrics.admission.edf_reorders.get(), 0);
+        assert_eq!(c.metrics.admission.deadline_misses_avoided.get(), 0);
+    }
+
+    #[test]
+    fn record_completion_feeds_the_service_estimator() {
+        let c = native_coordinator();
+        c.metrics.service_estimator.configure(0.5, 0);
+        let mut c = c;
+        let reqs = (0..4).map(|i| req(i, GraphKernel::Pr)).collect();
+        c.process_batch(reqs);
+        let est = &c.metrics.service_estimator;
+        assert_eq!(est.samples(GraphKernel::Pr.class()), 4, "one EMA sample per request");
+        assert!(est.estimate_ns(GraphKernel::Pr.class()) > 0, "measured a real latency");
+        assert_eq!(est.samples(GraphKernel::Tc.class()), 0, "other classes untouched");
     }
 
     #[test]

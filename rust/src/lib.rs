@@ -28,9 +28,18 @@
 //!   [`coordinator::Engine`] scales the service across every physical
 //!   core via a [`relic::RelicPool`] of pinned pair-shards, behind a
 //!   deadline-aware admission gate ([`coordinator::admission`]:
-//!   non-blocking and parked submits, least-slack routing, counted
-//!   work shedding).
+//!   non-blocking and parked submits, counted work shedding). The
+//!   engine is *self-measuring*: each shard maintains a
+//!   per-kernel-class service-time EMA
+//!   ([`metrics::ServiceEstimator`]) that drives least-estimated-wait
+//!   routing, and can serve deadline-carrying requests
+//!   earliest-deadline-first within each batch
+//!   ([`coordinator::edf_order`]).
 //!
+//! **Start with `ARCHITECTURE.md`** (repo root) for the module map,
+//! the request lifecycle from `submit` to `record_completion`, and the
+//! three invariants every PR must preserve (per-shard FIFO among
+//! equals, no drop after accept, bitwise-deterministic checksums).
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
 

@@ -14,14 +14,20 @@
 //! repro serve        run the hybrid analytics service demo
 //!                    (--shards N runs the sharded engine; N=0 → auto;
 //!                    --deadline-ms D stamps deadlines, --shed POLICY
-//!                    sheds requests that cannot meet them)
+//!                    sheds requests that cannot meet them,
+//!                    --ema-alpha A measures per-shard service times,
+//!                    --edf serves batches earliest-deadline-first)
 //! repro pool         pool-scaling sweep: throughput vs shard count,
 //!                    with pool-vs-single-pair checksum verification
 //!                    (--shards 1,2,4 --requests N --reps R)
 //! repro admission    admission sweep: blocking vs try_submit vs
 //!                    submit_or_park across offered loads, with
 //!                    shed/park/miss accounting (--offered 16,64,256
-//!                    --deadline-ms D --shed POLICY --reps R)
+//!                    --deadline-ms D --shed POLICY --reps R);
+//!                    --edf spreads deadlines, serves each engine
+//!                    batch earliest-deadline-first and prints the
+//!                    FIFO-baseline miss column next to EDF's;
+//!                    --ema-alpha A adds the measured-EMA column
 //! repro selftest     PJRT artifact round-trip check
 //! ```
 //!
@@ -246,11 +252,14 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 let settings = pool_settings(args)?;
                 let mut engine = Engine::new(EngineConfig::from_settings(&settings, &admission));
                 println!(
-                    "host: {}; engine: {} shards; shed policy {}; deadline {:?}",
+                    "host: {}; engine: {} shards; shed policy {}; deadline {:?}; \
+                     ema alpha {}; edf {}",
                     affinity::topology_summary(),
                     engine.shard_count(),
                     admission.shed,
                     deadline,
+                    admission.ema_alpha,
+                    if admission.edf { "on" } else { "off" },
                 );
                 let t0 = std::time::Instant::now();
                 let offered = requests.len();
@@ -271,6 +280,11 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 }
                 let router = Router::new(RouterConfig::default(), manifest.as_ref());
                 let mut coord = Coordinator::with_parts(router, executor);
+                coord.set_edf(admission.edf);
+                // The single-pair path has no Engine to arm the
+                // estimator, so --ema-alpha is honored here directly.
+                let adm = admission.to_config();
+                coord.metrics.service_estimator.configure(adm.ema_alpha, adm.service_estimate_ns);
                 let t_warm = std::time::Instant::now();
                 coord.warmup();
                 println!("executable warmup: {:?}", t_warm.elapsed());
@@ -305,9 +319,11 @@ fn run(args: &Args) -> anyhow::Result<()> {
             let template = EngineConfig::from_settings(&settings, &admission);
             println!(
                 "admission sweep: offered loads {offered:?}, {reps} reps, shed policy {}, \
-                 deadline {:?}, {} shard(s)\n",
+                 deadline {:?}, ema alpha {}, edf {}, {} shard(s)\n",
                 admission.shed,
                 admission.deadline(),
+                admission.ema_alpha,
+                if admission.edf { "on (FIFO baseline alongside)" } else { "off" },
                 settings
                     .shard_count_hint()
                     .map(|n| n.to_string())
@@ -372,7 +388,9 @@ fn relic_settings(args: &Args) -> anyhow::Result<RelicSettings> {
 
 /// `[admission]` settings: config file first (`--config PATH`), then
 /// CLI overrides (`--shed never|past-deadline|load-factor[:F]`,
-/// `--deadline-ms N`, `--service-estimate-us N`).
+/// `--deadline-ms N`, `--service-estimate-us N`, `--ema-alpha A`,
+/// `--edf` / `--no-edf` — the latter lets the CLI A/B the FIFO
+/// baseline against a config file that sets `edf = true`).
 fn admission_settings(args: &Args) -> anyhow::Result<AdmissionSettings> {
     let mut s = match args.get("config") {
         Some(path) => AdmissionSettings::from_raw(&RawConfig::load(Path::new(path))?),
@@ -387,6 +405,13 @@ fn admission_settings(args: &Args) -> anyhow::Result<AdmissionSettings> {
     }
     s.deadline_ms = args.get_u64("deadline-ms", s.deadline_ms);
     s.service_estimate_us = args.get_u64("service-estimate-us", s.service_estimate_us);
+    s.ema_alpha = args.get_f64("ema-alpha", s.ema_alpha).clamp(0.0, 1.0);
+    if args.flag("edf") {
+        s.edf = true;
+    }
+    if args.flag("no-edf") {
+        s.edf = false;
+    }
     Ok(s)
 }
 

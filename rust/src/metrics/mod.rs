@@ -1,8 +1,9 @@
-//! Lightweight metrics: counters, gauges, and streaming histograms with
-//! percentile queries — used by the coordinator service and the
-//! benchmark harness (latency/throughput reporting in the E2E example).
+//! Lightweight metrics: counters, gauges, streaming histograms with
+//! percentile queries, and the online service-time estimator — used by
+//! the coordinator service and the benchmark harness
+//! (latency/throughput reporting in the E2E example).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
 /// Monotonic counter (thread-safe).
 #[derive(Debug, Default)]
@@ -139,6 +140,187 @@ impl Histogram {
     }
 }
 
+/// Number of service classes the estimator tracks. The coordinator
+/// maps each [`crate::coordinator::GraphKernel`] to one class
+/// (`GraphKernel::class()`), so this matches the kernel count — pinned
+/// by a test in `coordinator`.
+pub const SERVICE_CLASSES: usize = 6;
+
+/// Fixed-point fractional bits of the EMA state and the alpha weight.
+const FP_SHIFT: u32 = 16;
+
+/// Largest sample the estimator accepts, in ns (~19.5 h). Keeps the
+/// Q48.16 fixed-point arithmetic below comfortably inside `u64`.
+const MAX_SAMPLE_NS: u64 = 1 << 46;
+
+/// Per-class online service-time estimator: a fixed-point exponential
+/// moving average of completion latencies, one lane per service class
+/// (the coordinator's kernel kinds).
+///
+/// This is what turns the engine's `service_estimate_ns` from a static
+/// config knob into a *measured* quantity: each pool shard owns one
+/// estimator (inside its [`crate::coordinator::ServiceMetrics`]),
+/// [`crate::coordinator::ServiceMetrics::record_completion`] feeds it
+/// one sample per finished request from the shard thread, and the
+/// router reads [`estimate_ns`](Self::estimate_ns) on every admission
+/// without allocating.
+///
+/// Concurrency: single-writer, multi-reader. Each shard's estimator is
+/// only ever written from that shard's thread (one `record` per
+/// completion), while the engine's admission thread reads it
+/// concurrently — so plain relaxed atomic loads/stores are sufficient
+/// and every operation is wait-free. Readers may observe an estimate
+/// that lags the newest sample by one update; routing is advisory, so
+/// that is harmless.
+///
+/// Determinism: `alpha == 0` (the default) disables measurement
+/// entirely — `record` is a no-op and [`estimate_ns`](Self::estimate_ns)
+/// returns the configured floor, i.e. exactly the static
+/// `service_estimate_ns` behavior of PR 4 (and `floor == 0` keeps the
+/// router's least-loaded degeneracy).
+#[derive(Debug)]
+pub struct ServiceEstimator {
+    /// EMA weight of a new sample, in Q0.16 fixed point (0 ..= 65536).
+    alpha_fp: AtomicU32,
+    /// Lower bound (and pre-measurement seed) of every estimate, in ns
+    /// — the old static `service_estimate_ns` knob.
+    floor_ns: AtomicU64,
+    /// Per-class EMA state in Q48.16 fixed point (ns × 2^16).
+    ema_fp: [AtomicU64; SERVICE_CLASSES],
+    /// Per-class sample counts (first sample snaps the EMA to it).
+    samples: [AtomicU64; SERVICE_CLASSES],
+}
+
+impl Default for ServiceEstimator {
+    fn default() -> Self {
+        ServiceEstimator {
+            alpha_fp: AtomicU32::new(0),
+            floor_ns: AtomicU64::new(0),
+            ema_fp: std::array::from_fn(|_| AtomicU64::new(0)),
+            samples: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl ServiceEstimator {
+    /// Set the EMA weight (`alpha`, clamped to `[0, 1]`; 0 disables
+    /// measurement) and the floor/seed in ns, and seed every class's
+    /// EMA with the floor. The engine calls this once per shard at
+    /// build time, before any sample is recorded.
+    pub fn configure(&self, alpha: f64, floor_ns: u64) {
+        let alpha_fp = (alpha.clamp(0.0, 1.0) * (1u64 << FP_SHIFT) as f64).round() as u32;
+        self.alpha_fp.store(alpha_fp, Ordering::Relaxed);
+        let floor_ns = floor_ns.min(MAX_SAMPLE_NS);
+        self.floor_ns.store(floor_ns, Ordering::Relaxed);
+        for ema in &self.ema_fp {
+            ema.store(floor_ns << FP_SHIFT, Ordering::Relaxed);
+        }
+    }
+
+    /// True when a non-zero alpha was configured (samples move the
+    /// estimate); false means the estimator is a pass-through for the
+    /// static floor.
+    pub fn is_measuring(&self) -> bool {
+        self.alpha_fp.load(Ordering::Relaxed) > 0
+    }
+
+    /// The configured EMA weight as a float (for reports).
+    pub fn alpha(&self) -> f64 {
+        self.alpha_fp.load(Ordering::Relaxed) as f64 / (1u64 << FP_SHIFT) as f64
+    }
+
+    /// The configured floor/seed in ns.
+    pub fn floor_ns(&self) -> u64 {
+        self.floor_ns.load(Ordering::Relaxed)
+    }
+
+    /// Record one completion latency for `class`. No-op when alpha is 0
+    /// or `class` is out of range. The first sample of a class replaces
+    /// the seed outright (a measurement beats a guess); later samples
+    /// move the EMA by `alpha × (sample − ema)` in fixed point.
+    pub fn record(&self, class: usize, latency_ns: u64) {
+        let alpha = self.alpha_fp.load(Ordering::Relaxed) as u64;
+        if alpha == 0 || class >= SERVICE_CLASSES {
+            return;
+        }
+        let sample_fp = latency_ns.min(MAX_SAMPLE_NS) << FP_SHIFT;
+        // Single-writer: the count is also only advanced from here.
+        let seen = self.samples[class].fetch_add(1, Ordering::Relaxed);
+        if seen == 0 {
+            self.ema_fp[class].store(sample_fp, Ordering::Relaxed);
+            return;
+        }
+        let old = self.ema_fp[class].load(Ordering::Relaxed) as i128;
+        let delta = ((sample_fp as i128 - old) * alpha as i128) >> FP_SHIFT;
+        let new = (old + delta).max(0) as u64;
+        self.ema_fp[class].store(new, Ordering::Relaxed);
+    }
+
+    /// Current estimate for `class` in ns: the EMA, never below the
+    /// configured floor. An out-of-range class reads as the floor.
+    pub fn estimate_ns(&self, class: usize) -> u64 {
+        let floor = self.floor_ns.load(Ordering::Relaxed);
+        if class >= SERVICE_CLASSES {
+            return floor;
+        }
+        (self.ema_fp[class].load(Ordering::Relaxed) >> FP_SHIFT).max(floor)
+    }
+
+    /// Samples recorded for `class`.
+    pub fn samples(&self, class: usize) -> u64 {
+        if class >= SERVICE_CLASSES {
+            return 0;
+        }
+        self.samples[class].load(Ordering::Relaxed)
+    }
+
+    /// Sample-weighted mean estimate across every measured class, in ns
+    /// (the one-number "how expensive is a request here" readout used
+    /// by reports and the admission sweep's EMA-convergence column).
+    /// Falls back to the floor when nothing was measured yet.
+    pub fn mean_estimate_ns(&self) -> u64 {
+        let mut weighted: u128 = 0;
+        let mut total: u128 = 0;
+        for class in 0..SERVICE_CLASSES {
+            let n = self.samples[class].load(Ordering::Relaxed) as u128;
+            if n > 0 {
+                weighted += self.estimate_ns(class) as u128 * n;
+                total += n;
+            }
+        }
+        if total == 0 {
+            self.floor_ns.load(Ordering::Relaxed)
+        } else {
+            (weighted / total) as u64
+        }
+    }
+
+    /// Fold another estimator into this one for reporting: per class,
+    /// the merged EMA is the sample-weighted mean; alpha and floor take
+    /// the max (aggregates are read-only views, never recorded into).
+    pub fn merge_from(&self, other: &ServiceEstimator) {
+        self.alpha_fp.fetch_max(other.alpha_fp.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.floor_ns.fetch_max(other.floor_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        for class in 0..SERVICE_CLASSES {
+            let n_other = other.samples[class].load(Ordering::Relaxed);
+            if n_other == 0 {
+                continue;
+            }
+            let n_mine = self.samples[class].load(Ordering::Relaxed);
+            let e_other = other.ema_fp[class].load(Ordering::Relaxed);
+            let merged = if n_mine == 0 {
+                e_other
+            } else {
+                let e_mine = self.ema_fp[class].load(Ordering::Relaxed);
+                ((e_mine as u128 * n_mine as u128 + e_other as u128 * n_other as u128)
+                    / (n_mine as u128 + n_other as u128)) as u64
+            };
+            self.ema_fp[class].store(merged, Ordering::Relaxed);
+            self.samples[class].store(n_mine + n_other, Ordering::Relaxed);
+        }
+    }
+}
+
 /// Admission-control counters: every request the engine's front door
 /// turned away or delayed, plus how much slack deadlined requests
 /// arrived with. Shed and parked events are engine-side (recorded at
@@ -162,6 +344,13 @@ pub struct AdmissionMetrics {
     pub parked_submits: Counter,
     /// Non-blocking submissions bounced with `QueueFull`.
     pub queue_full_rejections: Counter,
+    /// Shard batches whose EDF processing order differed from FIFO
+    /// (recorded by the coordinator when `edf` is enabled).
+    pub edf_reorders: Counter,
+    /// Deadlined requests that EDF promoted ahead of their FIFO slot
+    /// *and* that then completed on time — an upper bound on misses the
+    /// reordering prevented (the FIFO counterfactual is not replayed).
+    pub deadline_misses_avoided: Counter,
     /// Slack remaining at admission (ns) for accepted deadlined
     /// requests — the input distribution deadline-aware routing works
     /// with.
@@ -179,6 +368,8 @@ impl AdmissionMetrics {
         self.deadline_misses.add(other.deadline_misses.get());
         self.parked_submits.add(other.parked_submits.get());
         self.queue_full_rejections.add(other.queue_full_rejections.get());
+        self.edf_reorders.add(other.edf_reorders.get());
+        self.deadline_misses_avoided.add(other.deadline_misses_avoided.get());
         self.slack_at_admission.merge_from(&other.slack_at_admission);
     }
 
@@ -196,6 +387,13 @@ impl AdmissionMetrics {
             self.queue_full_rejections.get(),
             self.deadline_misses.get(),
         );
+        if self.edf_reorders.get() > 0 {
+            out += &format!(
+                "; edf reorders={} misses-avoided={}",
+                self.edf_reorders.get(),
+                self.deadline_misses_avoided.get(),
+            );
+        }
         if self.slack_at_admission.count() > 0 {
             out += &format!("; slack {}", self.slack_at_admission.summary("ns"));
         }
@@ -299,6 +497,97 @@ mod tests {
         assert!(s.contains("shed=3"));
         assert!(s.contains("deadline-misses=4"));
         assert!(s.contains("slack "), "slack histogram line present: {s}");
+    }
+
+    #[test]
+    fn estimator_default_is_inert_static_passthrough() {
+        let e = ServiceEstimator::default();
+        assert!(!e.is_measuring());
+        assert_eq!(e.estimate_ns(0), 0);
+        e.record(0, 10_000);
+        assert_eq!(e.samples(0), 0, "alpha 0: record is a no-op");
+        assert_eq!(e.estimate_ns(0), 0, "zero estimate keeps least-loaded routing");
+        // A floor without an alpha reproduces the static knob exactly.
+        e.configure(0.0, 7_500);
+        e.record(2, 1_000_000);
+        assert_eq!(e.estimate_ns(2), 7_500);
+        assert_eq!(e.mean_estimate_ns(), 7_500);
+        assert!(!e.is_measuring());
+    }
+
+    #[test]
+    fn estimator_first_sample_snaps_then_ema_converges() {
+        let e = ServiceEstimator::default();
+        e.configure(0.5, 2_000);
+        assert!(e.is_measuring());
+        assert!((e.alpha() - 0.5).abs() < 1e-6);
+        assert_eq!(e.estimate_ns(3), 2_000, "seeded with the floor before any sample");
+        e.record(3, 4_000);
+        assert_eq!(e.estimate_ns(3), 4_000, "first sample replaces the seed");
+        // Constant 10 µs service time: alpha 0.5 halves the error each
+        // sample, so 20 samples land within a nanosecond.
+        for _ in 0..20 {
+            e.record(3, 10_000);
+        }
+        let est = e.estimate_ns(3);
+        assert!((9_999..=10_001).contains(&est), "est={est}");
+        assert_eq!(e.samples(3), 21);
+        // Other classes stay at the seed; estimates never sink below
+        // the floor.
+        assert_eq!(e.estimate_ns(0), 2_000);
+        for _ in 0..30 {
+            e.record(3, 100);
+        }
+        assert_eq!(e.estimate_ns(3), 2_000, "floor bounds the readout from below");
+    }
+
+    #[test]
+    fn estimator_merge_weights_by_samples() {
+        let (a, b) = (ServiceEstimator::default(), ServiceEstimator::default());
+        a.configure(1.0, 0);
+        b.configure(1.0, 0);
+        // alpha = 1: the EMA is just the last sample.
+        a.record(0, 1_000);
+        b.record(0, 4_000);
+        b.record(0, 4_000);
+        b.record(0, 4_000);
+        let agg = ServiceEstimator::default();
+        agg.merge_from(&a);
+        agg.merge_from(&b);
+        assert_eq!(agg.samples(0), 4);
+        // Weighted mean (1×1000 + 3×4000) / 4 = 3250.
+        let est = agg.estimate_ns(0);
+        assert!((3_249..=3_251).contains(&est), "est={est}");
+        assert_eq!(agg.mean_estimate_ns(), est);
+    }
+
+    #[test]
+    fn estimator_handles_extreme_inputs() {
+        let e = ServiceEstimator::default();
+        e.configure(2.0, u64::MAX); // both clamp
+        assert!((e.alpha() - 1.0).abs() < 1e-6);
+        e.record(1, u64::MAX);
+        assert!(e.estimate_ns(1) >= e.floor_ns());
+        // Out-of-range classes neither panic nor record.
+        e.record(SERVICE_CLASSES + 3, 10);
+        assert_eq!(e.samples(SERVICE_CLASSES + 3), 0);
+        assert_eq!(e.estimate_ns(SERVICE_CLASSES + 3), e.floor_ns());
+    }
+
+    #[test]
+    fn admission_metrics_edf_counters_merge_and_render() {
+        let a = AdmissionMetrics::default();
+        a.edf_reorders.add(2);
+        a.deadline_misses_avoided.inc();
+        let agg = AdmissionMetrics::default();
+        agg.merge_from(&a);
+        assert_eq!(agg.edf_reorders.get(), 2);
+        assert_eq!(agg.deadline_misses_avoided.get(), 1);
+        let s = agg.summary();
+        assert!(s.contains("edf reorders=2"), "{s}");
+        assert!(s.contains("misses-avoided=1"), "{s}");
+        // Without reorders the summary stays quiet about EDF.
+        assert!(!AdmissionMetrics::default().summary().contains("edf"), "quiet by default");
     }
 
     #[test]

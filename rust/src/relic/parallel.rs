@@ -56,6 +56,21 @@ use super::scope::{dyn_chunk_count, MAX_CHUNK_SLOTS};
 pub const DEFAULT_GRAIN: usize = 16;
 
 /// How a `Par::Relic` loop's chunks are assigned to the SMT pair.
+///
+/// # Example
+///
+/// Schedules round-trip through their CLI/config spelling and attach
+/// to a [`Par`] per loop:
+///
+/// ```
+/// use relic_smt::relic::Schedule;
+///
+/// let s = Schedule::parse("edge-balanced").unwrap();
+/// assert_eq!(s, Schedule::EdgeBalanced);
+/// assert_eq!(Schedule::parse(s.name()), Some(s), "name round-trips");
+/// assert_eq!(Schedule::parse("nope"), None);
+/// assert_eq!(Schedule::default(), Schedule::Static, "PR 1's partition is the default");
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Schedule {
     /// PR 1's static partition: a main-thread half plus ≤8 assistant
@@ -108,6 +123,28 @@ impl std::fmt::Display for Schedule {
 }
 
 /// How a kernel's internal loops execute.
+///
+/// # Example
+///
+/// The same loop body, serial and forked over the SMT pair, produces
+/// bitwise-identical output — the determinism the paper's checksums
+/// rest on:
+///
+/// ```
+/// use relic_smt::relic::{Par, Relic, Schedule};
+///
+/// let body = |i: usize| (i * i) as u64;
+/// let mut serial = vec![0u64; 64];
+/// Par::Serial.map_into(&mut serial, 8, body);
+///
+/// let relic = Relic::new();
+/// let mut forked = vec![0u64; 64];
+/// Par::Relic(&relic).with_schedule(Schedule::Dynamic).map_into(&mut forked, 8, body);
+///
+/// assert_eq!(serial, forked);
+/// assert!(!Par::Serial.is_parallel());
+/// assert!(Par::Relic(&relic).is_parallel());
+/// ```
 #[derive(Clone, Copy)]
 pub enum Par<'r> {
     /// Plain serial loops on the calling thread (the baseline).

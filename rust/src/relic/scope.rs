@@ -169,6 +169,27 @@ impl Relic {
     /// chunk finished. All submitted work is drained before `scope`
     /// returns.
     ///
+    /// # Example
+    ///
+    /// Sum a range across the SMT pair; chunks are disjoint, so each
+    /// accumulates into a shared atomic:
+    ///
+    /// ```
+    /// use relic_smt::relic::Relic;
+    /// use std::sync::atomic::{AtomicU64, Ordering};
+    ///
+    /// let relic = Relic::new();
+    /// let sum = AtomicU64::new(0);
+    /// relic.scope(|s| {
+    ///     s.split(0..1000, 64, |chunk| {
+    ///         let part: u64 = chunk.map(|i| i as u64).sum();
+    ///         sum.fetch_add(part, Ordering::Relaxed);
+    ///     });
+    /// });
+    /// // Every index processed exactly once: 0 + 1 + … + 999.
+    /// assert_eq!(sum.load(Ordering::Relaxed), 499_500);
+    /// ```
+    ///
     /// # Panics
     /// Panics if called while another scope is active on this runtime —
     /// Relic has a single assistant and no recursive task submission

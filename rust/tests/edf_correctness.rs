@@ -1,0 +1,293 @@
+//! Integration: the self-measuring engine (per-shard service-time EMA
+//! routing + EDF batch ordering) preserves every PR 4 guarantee.
+//!
+//! The acceptance contract pinned here:
+//! * with `edf = false` and `ema_alpha = 0` the engine is bit-for-bit
+//!   PR 4 (same responses, same counters, zero estimator/EDF activity);
+//! * the EMA converges to a known synthetic service time within a
+//!   bounded number of samples, and the engine-level estimator fills
+//!   from real completions;
+//! * EDF never reorders deadline-less requests relative to each other;
+//! * counter reconciliation still holds under EDF + shedding:
+//!   submitted = completed + shed.
+
+use std::time::{Duration, Instant};
+
+use relic_smt::coordinator::{
+    edf_order, run_native_kernel, AdmissionConfig, Coordinator, Deadline, Engine, EngineConfig,
+    GraphKernel, Request, Router, RouterConfig, ShedPolicy,
+};
+use relic_smt::graph::kronecker::paper_graph;
+use relic_smt::metrics::ServiceEstimator;
+use relic_smt::relic::PoolConfig;
+
+/// Unpinned engine: CI containers may refuse affinity syscalls.
+fn engine(
+    shards: usize,
+    channel_capacity: usize,
+    max_batch: usize,
+    admission: AdmissionConfig,
+) -> Engine {
+    Engine::new(EngineConfig {
+        pool: PoolConfig {
+            shards: Some(shards),
+            pin: false,
+            channel_capacity,
+            max_batch,
+        },
+        admission,
+        ..EngineConfig::default()
+    })
+}
+
+fn req(id: u64, kernel: GraphKernel, source: u32) -> Request {
+    Request {
+        id,
+        kernel,
+        graph: paper_graph(),
+        source,
+        deadline: Deadline::none(),
+    }
+}
+
+/// Mixed batch cycling every kernel over several sources.
+fn mixed_batch(n: usize) -> Vec<Request> {
+    let kernels = GraphKernel::all();
+    (0..n)
+        .map(|i| req(i as u64, kernels[i % kernels.len()], (i % 8) as u32))
+        .collect()
+}
+
+#[test]
+fn ema_converges_to_synthetic_service_time_within_bounded_samples() {
+    // Synthetic stream: a constant 25 µs service time. With alpha 0.25
+    // the EMA's error shrinks by 3/4 per sample, so 40 samples bring a
+    // 100× initial error under 0.1%.
+    let est = ServiceEstimator::default();
+    est.configure(0.25, 0);
+    est.record(0, 250); // deliberately far-off first sample (snaps)
+    for _ in 0..40 {
+        est.record(0, 25_000);
+    }
+    let got = est.estimate_ns(0);
+    assert!(
+        (24_900..=25_100).contains(&got),
+        "EMA must converge to the synthetic 25 µs service time, got {got} ns"
+    );
+    // A shifted workload re-converges: the estimator tracks drift.
+    for _ in 0..40 {
+        est.record(0, 100_000);
+    }
+    let got = est.estimate_ns(0);
+    assert!((99_000..=101_000).contains(&got), "EMA tracks drift, got {got} ns");
+}
+
+#[test]
+fn engine_level_ema_fills_from_real_completions() {
+    let mut e = engine(
+        2,
+        64,
+        8,
+        AdmissionConfig { ema_alpha: 0.5, ..Default::default() },
+    );
+    let n = 24;
+    for r in mixed_batch(n) {
+        assert!(e.submit(r).is_accepted());
+    }
+    assert_eq!(e.drain().len(), n);
+    let agg = e.aggregated_metrics();
+    let est = &agg.service_estimator;
+    let mut samples = 0;
+    for k in GraphKernel::all() {
+        samples += est.samples(k.class());
+        assert!(
+            est.estimate_ns(k.class()) > 0,
+            "{k:?}: every exercised class has a measured estimate"
+        );
+    }
+    assert_eq!(samples, n as u64, "exactly one EMA sample per completion");
+    assert!(est.mean_estimate_ns() > 0);
+}
+
+#[test]
+fn edf_never_reorders_deadline_less_requests_among_themselves() {
+    // Ordering-rule level: under arbitrary deadline mixes, the
+    // deadline-less subsequence of the EDF order is exactly its FIFO
+    // subsequence (exhaustive over every deadline/none pattern of a
+    // 6-request batch).
+    let now = Instant::now();
+    for mask in 0u32..(1 << 6) {
+        let deadlines: Vec<Deadline> = (0..6)
+            .map(|i| {
+                if mask & (1 << i) != 0 {
+                    // Descending deadlines so EDF genuinely reorders.
+                    Deadline::at(now + Duration::from_millis(100 - 10 * i as u64))
+                } else {
+                    Deadline::none()
+                }
+            })
+            .collect();
+        let order = edf_order(deadlines.clone());
+        let none_positions: Vec<usize> = order
+            .iter()
+            .copied()
+            .filter(|&i| deadlines[i].is_none())
+            .collect();
+        assert!(
+            none_positions.windows(2).all(|w| w[0] < w[1]),
+            "mask {mask:#b}: deadline-less requests reordered: {none_positions:?}"
+        );
+    }
+
+    // Engine level: an all-deadline-less run under EDF produces the
+    // identical responses and pairing metrics as FIFO — EDF on
+    // deadline-less traffic is the identity.
+    let mut fifo = engine(1, 64, 8, AdmissionConfig::default());
+    let mut edf = engine(
+        1,
+        64,
+        8,
+        AdmissionConfig { edf: true, ..Default::default() },
+    );
+    let want = fifo.process_batch(mixed_batch(18));
+    let got = edf.process_batch(mixed_batch(18));
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.id, w.id);
+        assert_eq!(g.backend, w.backend);
+        assert_eq!(g.result, w.result);
+    }
+    let agg = edf.aggregated_metrics();
+    assert_eq!(agg.admission.edf_reorders.get(), 0, "no deadlines → no reorders");
+    assert_eq!(agg.admission.deadline_misses_avoided.get(), 0);
+}
+
+#[test]
+fn edf_off_and_alpha_zero_is_bit_for_bit_pr4() {
+    // The acceptance pin: explicit {edf: false, ema_alpha: 0} equals
+    // both the default-config engine and the single-pair coordinator —
+    // same responses (ids, backends, checksums), same counters, and
+    // zero estimator/EDF state. Capacity 1 keeps the PR 2/PR 4
+    // backpressure regime in the loop.
+    let n = 24;
+    let mut single = Coordinator::with_parts(Router::new(RouterConfig::default(), None), None);
+    let want = single.process_batch(mixed_batch(n));
+
+    let explicit = AdmissionConfig {
+        shed: ShedPolicy::Never,
+        service_estimate_ns: 0,
+        ema_alpha: 0.0,
+        edf: false,
+    };
+    assert_eq!(explicit, AdmissionConfig::default(), "the PR 4 shape IS the default");
+
+    let mut e = engine(1, 1, 1, explicit);
+    let got = e.process_batch(mixed_batch(n));
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.id, w.id);
+        assert_eq!(g.backend, w.backend);
+        assert_eq!(g.result, w.result);
+    }
+    let agg = e.aggregated_metrics();
+    assert_eq!(agg.native_requests.get(), n as u64);
+    assert_eq!(agg.admission.shed_requests.get(), 0);
+    assert_eq!(agg.admission.edf_reorders.get(), 0);
+    assert_eq!(agg.admission.deadline_misses_avoided.get(), 0);
+    assert!(!agg.service_estimator.is_measuring(), "alpha 0 never measures");
+    for k in GraphKernel::all() {
+        assert_eq!(agg.service_estimator.samples(k.class()), 0);
+        assert_eq!(agg.service_estimator.estimate_ns(k.class()), 0, "{k:?}");
+    }
+}
+
+#[test]
+fn static_estimate_still_floors_the_measured_engine() {
+    // ema_alpha > 0 with a static floor: before any Bc completion the
+    // Bc estimate reads the floor; the floor also never lets measured
+    // estimates sink below it (shedding stays conservative).
+    let mut e = engine(
+        1,
+        64,
+        8,
+        AdmissionConfig {
+            service_estimate_ns: 50_000,
+            ema_alpha: 0.5,
+            ..Default::default()
+        },
+    );
+    let agg = e.aggregated_metrics();
+    assert_eq!(
+        agg.service_estimator.estimate_ns(GraphKernel::Bc.class()),
+        50_000,
+        "unmeasured class reads the seed/floor"
+    );
+    for i in 0..6 {
+        assert!(e.submit(req(i, GraphKernel::Tc, 0)).is_accepted());
+    }
+    assert_eq!(e.drain().len(), 6);
+    let agg = e.aggregated_metrics();
+    assert!(
+        agg.service_estimator.estimate_ns(GraphKernel::Tc.class()) >= 50_000,
+        "estimates never sink below the configured floor"
+    );
+}
+
+#[test]
+fn edf_with_shedding_reconciles_submitted_completed_shed() {
+    // EDF + PastDeadline shedding + deadline skew: everything still
+    // reconciles — submitted = completed + shed — and nothing accepted
+    // is lost or reordered in the response stream.
+    let mut e = engine(
+        2,
+        64,
+        8,
+        AdmissionConfig {
+            shed: ShedPolicy::PastDeadline,
+            edf: true,
+            ema_alpha: 0.25,
+            ..Default::default()
+        },
+    );
+    let n = 30usize;
+    let g = paper_graph();
+    let kernels = GraphKernel::all();
+    let mut submitted = 0u64;
+    for i in 0..n {
+        let mut r = req(i as u64, kernels[i % kernels.len()], (i % 8) as u32);
+        r.deadline = if i % 5 == 4 {
+            // Every fifth request arrives already expired → shed.
+            Deadline::at(Instant::now() - Duration::from_millis(1))
+        } else {
+            // Generous, non-monotone deadlines exercise EDF ordering.
+            Deadline::within(Duration::from_secs(3600 + ((7 * i) % 11) as u64 * 60))
+        };
+        let _ = e.submit(r);
+        submitted += 1;
+    }
+    let responses = e.drain();
+    let agg = e.aggregated_metrics();
+    let shed = agg.admission.shed_requests.get();
+    assert_eq!(shed, (n / 5) as u64, "exactly the expired requests shed");
+    assert_eq!(
+        responses.len() as u64 + shed,
+        submitted,
+        "submitted = completed + shed"
+    );
+    assert_eq!(agg.native_requests.get(), responses.len() as u64);
+    // Responses come back in submission order with correct checksums.
+    let mut last_id = None;
+    for r in &responses {
+        if let Some(prev) = last_id {
+            assert!(prev < r.id, "response order: {prev} before {}", r.id);
+        }
+        last_id = Some(r.id);
+        let i = r.id as usize;
+        let want = run_native_kernel(kernels[i % kernels.len()], &g, (i % 8) as u32);
+        assert_eq!(
+            r.result,
+            relic_smt::coordinator::RequestResult::Native(want),
+            "request {i} checksum"
+        );
+    }
+}
