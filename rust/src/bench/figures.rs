@@ -663,6 +663,239 @@ pub fn admission_rows_to_json(rows: &[AdmissionRow]) -> String {
     crate::json::to_string(&Value::Array(arr))
 }
 
+/// One fault-recovery scenario: a fixed scripted failure injected into
+/// a fresh supervised engine fed a deterministic request stream, with
+/// the recovery counters as columns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultRow {
+    /// Scenario name (see [`FAULT_SCENARIOS`]).
+    pub scenario: String,
+    /// Requests offered — all admitted (blocking, deadline-less).
+    pub offered: usize,
+    /// Responses that completed with a verified checksum.
+    pub ok: u64,
+    /// Responses carrying a typed `Failed` result.
+    pub failed: u64,
+    /// Kernel panics caught and contained.
+    pub panics: u64,
+    /// Watchdog quarantine trips (stuck/dead shards).
+    pub trips: u64,
+    /// Dead shards respawned.
+    pub restarts: u64,
+    /// Quarantined shards' queued requests re-routed to survivors.
+    pub redirected: u64,
+    /// Requests served inline because every shard was quarantined.
+    pub degraded: u64,
+    /// Lost responses synthesized as `Failed(ResponseLost)`.
+    pub lost: u64,
+    /// Wall time to offer + drain the stream (ms) — the degraded /
+    /// recovering throughput column.
+    pub batch_ms: f64,
+}
+
+/// The scripted failures the fault sweep drills, one engine each.
+pub const FAULT_SCENARIOS: [&str; 6] = ["baseline", "panic", "stall", "kill", "drop", "all-down"];
+
+/// The fault-recovery sweep (EXPERIMENTS.md §Fault-recovery protocol):
+/// for each [`FAULT_SCENARIOS`] entry, build a fresh engine with the
+/// supervisor forced on, arm exactly one scripted failure, drive the
+/// same deterministic mixed request stream through blocking submits,
+/// and drain.
+///
+/// Built-in gates (the sweep doubles as the CI fault smoke, failing
+/// loudly when a recovery path breaks):
+/// * **no-drop invariant** — every scenario returns exactly one
+///   response per submitted request;
+/// * surviving (non-`Failed`) checksums equal the single-pair
+///   kernels';
+/// * per-scenario recovery counters fired: `panic` catches exactly one
+///   panic and fails exactly that request; `stall` trips the watchdog
+///   and still completes everything; `kill` respawns the dead shard
+///   and completes everything; `drop` synthesizes exactly one
+///   `ResponseLost`; `all-down` serves every request inline; and
+///   `baseline` keeps every recovery counter at zero.
+///
+/// Only the stall scenario runs a tight (40 ms) watchdog — it must
+/// out-pace the scripted 200 ms stall. Every other scenario keeps a
+/// lax stuck-after so a legitimately slow batch (the heartbeat bumps
+/// once per batch, *before* the handler runs) can never read as a
+/// spurious `Stuck` and dirty the baseline's counters. The template's
+/// other knobs — shard count, pinning, channel depth — are honored as
+/// given.
+pub fn fault_sweep(template: &crate::coordinator::EngineConfig, offered: usize) -> Vec<FaultRow> {
+    use crate::coordinator::{
+        run_native_kernel, Deadline, Engine, GraphKernel, Request, RequestResult,
+    };
+    use crate::graph::kronecker::paper_graph;
+    use crate::relic::FaultPlan;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let graph = paper_graph();
+    // Enough requests that every kernel kind (the panic target
+    // included) appears in the stream and every shard sees work.
+    let offered = offered.max(12);
+    let plan = super::workloads::mixed_request_plan(offered);
+    let expected: Vec<u64> =
+        plan.iter().map(|&(k, s)| run_native_kernel(k, &graph, s)).collect();
+    let tight = Duration::from_millis(40);
+    let lax = Duration::from_secs(2);
+    let target = GraphKernel::Tc.artifact_name();
+    let scenarios: [(&str, Option<FaultPlan>, Duration); 6] = [
+        ("baseline", None, lax),
+        ("panic", Some(FaultPlan::new().with_panic_on(target, 1)), lax),
+        ("stall", Some(FaultPlan::new().with_stall(0, 1, tight * 5)), tight),
+        ("kill", Some(FaultPlan::new().with_kill(0, 1)), lax),
+        ("drop", Some(FaultPlan::new().with_drop_response(0, 1)), lax),
+        ("all-down", None, lax),
+    ];
+
+    let mut rows = Vec::new();
+    for (name, fault, stuck_after) in scenarios {
+        let mut cfg = template.clone();
+        cfg.supervisor.enabled = true;
+        cfg.supervisor.stuck_after = stuck_after;
+        cfg.pool.fault = fault.map(Arc::new);
+        let mut engine = Engine::new(cfg);
+        if name == "all-down" {
+            for s in 0..engine.shard_count() {
+                engine.set_quarantined(s, true);
+            }
+        }
+        let t0 = std::time::Instant::now();
+        for (i, &(kernel, source)) in plan.iter().enumerate() {
+            let verdict = engine.submit(Request {
+                id: i as u64,
+                kernel,
+                graph: graph.clone(),
+                source,
+                deadline: Deadline::none(),
+            });
+            assert!(
+                verdict.is_accepted(),
+                "{name}: blocking deadline-less submits always admit"
+            );
+        }
+        let responses = engine.drain();
+        let batch_ms = t0.elapsed().as_nanos() as f64 / 1e6;
+        assert_eq!(
+            responses.len(),
+            offered,
+            "{name}: the no-drop invariant — one response per submitted request"
+        );
+        let mut ok = 0u64;
+        let mut failed = 0u64;
+        for r in &responses {
+            if r.result.is_ok() {
+                assert_eq!(
+                    r.result,
+                    RequestResult::Native(expected[r.id as usize]),
+                    "{name}: surviving checksum diverged (request {})",
+                    r.id
+                );
+                ok += 1;
+            } else {
+                failed += 1;
+            }
+        }
+        let agg = engine.aggregated_metrics();
+        let row = FaultRow {
+            scenario: name.to_string(),
+            offered,
+            ok,
+            failed,
+            panics: agg.fault.panics_caught.get(),
+            trips: agg.fault.watchdog_trips.get(),
+            restarts: agg.fault.shard_restarts.get(),
+            redirected: agg.fault.redirected_requests.get(),
+            degraded: agg.fault.degraded_requests.get(),
+            lost: agg.fault.responses_lost.get(),
+            batch_ms,
+        };
+        match name {
+            "baseline" => {
+                assert_eq!(row.failed, 0, "baseline fails nothing");
+                assert!(agg.fault.is_quiet(), "baseline recovery counters stay zero");
+            }
+            "panic" => {
+                assert_eq!(row.panics, 1, "exactly one injected panic is caught");
+                assert_eq!(row.failed, 1, "exactly the panicking request fails typed");
+            }
+            "stall" => {
+                assert!(row.trips >= 1, "the watchdog quarantines the stalled shard");
+                assert_eq!(row.failed, 0, "stall recovery completes everything");
+            }
+            "kill" => {
+                assert!(row.restarts >= 1, "the dead shard is respawned");
+                assert_eq!(row.failed, 0, "kill recovery completes everything");
+            }
+            "drop" => {
+                assert_eq!(row.lost, 1, "the dropped response synthesizes as lost");
+                assert_eq!(row.failed, 1, "exactly the lost request fails typed");
+            }
+            "all-down" => {
+                assert_eq!(row.degraded, offered as u64, "all-down serves inline");
+                assert_eq!(row.failed, 0, "degraded mode fails nothing");
+            }
+            _ => unreachable!(),
+        }
+        rows.push(row);
+    }
+    rows
+}
+
+/// Render the fault-sweep table with its gate legend.
+pub fn render_faults(rows: &[FaultRow]) -> String {
+    let mut out = format!(
+        "{:<10}{:>9}{:>6}{:>8}{:>8}{:>7}{:>10}{:>12}{:>10}{:>6}{:>11}\n",
+        "scenario", "offered", "ok", "failed", "panics", "trips", "restarts", "redirected",
+        "degraded", "lost", "batch ms"
+    );
+    for r in rows {
+        out += &format!(
+            "{:<10}{:>9}{:>6}{:>8}{:>8}{:>7}{:>10}{:>12}{:>10}{:>6}{:>11.1}\n",
+            r.scenario,
+            r.offered,
+            r.ok,
+            r.failed,
+            r.panics,
+            r.trips,
+            r.restarts,
+            r.redirected,
+            r.degraded,
+            r.lost,
+            r.batch_ms,
+        );
+    }
+    out += "(gates passed: one response per submitted request in every scenario; \
+            surviving checksums verified; each scenario's recovery counters fired)\n";
+    out
+}
+
+/// Serialize fault-sweep rows to JSON for the recovery trajectory.
+pub fn fault_rows_to_json(rows: &[FaultRow]) -> String {
+    use crate::json::Value;
+    let arr = rows
+        .iter()
+        .map(|r| {
+            Value::Object(vec![
+                ("scenario".into(), Value::String(r.scenario.clone())),
+                ("offered".into(), Value::Number(r.offered as f64)),
+                ("ok".into(), Value::Number(r.ok as f64)),
+                ("failed".into(), Value::Number(r.failed as f64)),
+                ("panics".into(), Value::Number(r.panics as f64)),
+                ("trips".into(), Value::Number(r.trips as f64)),
+                ("restarts".into(), Value::Number(r.restarts as f64)),
+                ("redirected".into(), Value::Number(r.redirected as f64)),
+                ("degraded".into(), Value::Number(r.degraded as f64)),
+                ("lost".into(), Value::Number(r.lost as f64)),
+                ("batch_ms".into(), Value::Number(r.batch_ms)),
+            ])
+        })
+        .collect();
+    crate::json::to_string(&Value::Array(arr))
+}
+
 /// Serialize intra-kernel rows to JSON (the nightly bench workflow
 /// archives these as the fork-join perf trajectory).
 pub fn intra_rows_to_json(rows: &[IntraRow]) -> String {
@@ -1045,6 +1278,38 @@ mod tests {
         );
         assert!(plain.iter().all(|r| !r.edf && r.fifo_misses == r.deadline_misses));
         assert!(!render_admission(&plain).contains("edf protocol"));
+    }
+
+    #[test]
+    fn fault_sweep_runs_every_scenario_and_renders() {
+        // The sweep's own gates (no-drop invariant, checksums, recovery
+        // counters per scenario) are the real assertions; this test
+        // drives them at the smallest deterministic size. Unpinned so
+        // affinity-restricted CI works.
+        let template = crate::coordinator::EngineConfig {
+            pool: crate::relic::PoolConfig {
+                shards: Some(2),
+                pin: false,
+                ..crate::relic::PoolConfig::default()
+            },
+            ..crate::coordinator::EngineConfig::default()
+        };
+        let rows = fault_sweep(&template, 12);
+        assert_eq!(rows.len(), FAULT_SCENARIOS.len());
+        for (r, name) in rows.iter().zip(FAULT_SCENARIOS) {
+            assert_eq!(r.scenario, name);
+            assert_eq!(r.ok + r.failed, r.offered as u64, "{name}: ok + failed = offered");
+            assert!(r.batch_ms > 0.0);
+        }
+        let s = render_faults(&rows);
+        for name in FAULT_SCENARIOS {
+            assert!(s.contains(name), "render missing {name}");
+        }
+        assert!(s.contains("gates passed"));
+        let json = fault_rows_to_json(&rows);
+        assert!(json.contains("\"scenario\""));
+        assert!(json.contains("\"restarts\""));
+        assert!(json.contains("all-down"));
     }
 
     #[test]

@@ -203,11 +203,21 @@ pub struct PoolSettings {
     pub channel_capacity: usize,
     /// Maximum requests per batch handed to a shard's coordinator.
     pub max_batch: usize,
+    /// How long a parked producer sleeps between dead-shard checks, in
+    /// milliseconds (liveness insurance for `submit_or_park`; the
+    /// normal wakeup is the consumer's drain notify).
+    pub park_timeout_ms: u64,
 }
 
 impl Default for PoolSettings {
     fn default() -> Self {
-        PoolSettings { shards: 0, pin: true, channel_capacity: 64, max_batch: 32 }
+        PoolSettings {
+            shards: 0,
+            pin: true,
+            channel_capacity: 64,
+            max_batch: 32,
+            park_timeout_ms: 50,
+        }
     }
 }
 
@@ -226,6 +236,10 @@ impl PoolSettings {
                 .get_int("pool.max_batch")
                 .map(|v| v.max(1) as usize)
                 .unwrap_or(d.max_batch),
+            park_timeout_ms: raw
+                .get_int("pool.park_timeout_ms")
+                .map(|v| v.max(1) as u64)
+                .unwrap_or(d.park_timeout_ms),
         }
     }
 
@@ -333,6 +347,170 @@ impl AdmissionSettings {
     }
 }
 
+/// Shard-watchdog configuration (section `[supervisor]`; defaults
+/// mirror [`crate::relic::SupervisorConfig`]: enabled, 200 ms
+/// stuck-detection, 3 restarts per shard with 25 ms base backoff).
+/// `enabled = false` restores the pre-supervision failure semantics
+/// exactly (dead shards are fatal to `Engine::drain`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SupervisorSettings {
+    /// Master switch for panic containment + quarantine + respawn.
+    pub enabled: bool,
+    /// Heartbeat staleness (with pending work) before a shard counts as
+    /// stuck, in milliseconds.
+    pub stuck_after_ms: u64,
+    /// Restart budget per shard; beyond it a dead shard stays
+    /// quarantined and the engine degrades around it.
+    pub max_restarts: u32,
+    /// First respawn backoff in milliseconds; doubles per restart.
+    pub backoff_ms: u64,
+}
+
+impl Default for SupervisorSettings {
+    fn default() -> Self {
+        let d = crate::relic::SupervisorConfig::default();
+        SupervisorSettings {
+            enabled: d.enabled,
+            stuck_after_ms: d.stuck_after.as_millis() as u64,
+            max_restarts: d.max_restarts,
+            backoff_ms: d.backoff_base.as_millis() as u64,
+        }
+    }
+}
+
+impl SupervisorSettings {
+    /// Overlay values from a raw config (section `[supervisor]`).
+    pub fn from_raw(raw: &RawConfig) -> Self {
+        let d = Self::default();
+        SupervisorSettings {
+            enabled: raw.get_bool("supervisor.enabled").unwrap_or(d.enabled),
+            stuck_after_ms: raw
+                .get_int("supervisor.stuck_after_ms")
+                .map(|v| v.max(1) as u64)
+                .unwrap_or(d.stuck_after_ms),
+            max_restarts: raw
+                .get_int("supervisor.max_restarts")
+                .map(|v| v.max(0) as u32)
+                .unwrap_or(d.max_restarts),
+            backoff_ms: raw
+                .get_int("supervisor.backoff_ms")
+                .map(|v| v.max(0) as u64)
+                .unwrap_or(d.backoff_ms),
+        }
+    }
+
+    /// Materialize as the pool's runtime supervisor config.
+    pub fn to_config(&self) -> crate::relic::SupervisorConfig {
+        crate::relic::SupervisorConfig {
+            enabled: self.enabled,
+            stuck_after: std::time::Duration::from_millis(self.stuck_after_ms),
+            max_restarts: self.max_restarts,
+            backoff_base: std::time::Duration::from_millis(self.backoff_ms),
+        }
+    }
+}
+
+/// Deterministic fault-injection configuration (section `[fault]`;
+/// everything defaults to *off* and [`FaultSettings::plan`] returns
+/// `None` then, so the compiled-in hooks cost one `Option` branch).
+/// `nth` counters are 1-based ("fire on the nth matching event"); a
+/// shard index of -1 (the default) disables that injection. This is a
+/// chaos-testing/repro tool — see `repro faults` and the
+/// `tests/fault_tolerance.rs` suite.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultSettings {
+    /// Kernel artifact name whose nth native execution panics
+    /// (empty = off).
+    pub panic_kernel: String,
+    /// Which matching execution panics (1-based).
+    pub panic_nth: u64,
+    /// Shard whose nth batch stalls (-1 = off).
+    pub stall_shard: i64,
+    pub stall_nth: u64,
+    /// Stall duration in milliseconds.
+    pub stall_ms: u64,
+    /// Shard whose nth response is dropped (-1 = off).
+    pub drop_shard: i64,
+    pub drop_nth: u64,
+    /// Shard whose thread exits on its nth batch (-1 = off). The batch
+    /// is requeued first, so no request is lost — only the thread.
+    pub kill_shard: i64,
+    pub kill_nth: u64,
+}
+
+impl Default for FaultSettings {
+    fn default() -> Self {
+        FaultSettings {
+            panic_kernel: String::new(),
+            panic_nth: 1,
+            stall_shard: -1,
+            stall_nth: 1,
+            stall_ms: 0,
+            drop_shard: -1,
+            drop_nth: 1,
+            kill_shard: -1,
+            kill_nth: 1,
+        }
+    }
+}
+
+impl FaultSettings {
+    /// Overlay values from a raw config (section `[fault]`).
+    pub fn from_raw(raw: &RawConfig) -> Self {
+        let d = Self::default();
+        let nth = |key: &str, dflt: u64| raw.get_int(key).map(|v| v.max(1) as u64).unwrap_or(dflt);
+        let shard = |key: &str, dflt: i64| raw.get_int(key).map(|v| v.max(-1)).unwrap_or(dflt);
+        FaultSettings {
+            panic_kernel: raw
+                .get_str("fault.panic_kernel")
+                .unwrap_or(&d.panic_kernel)
+                .to_string(),
+            panic_nth: nth("fault.panic_nth", d.panic_nth),
+            stall_shard: shard("fault.stall_shard", d.stall_shard),
+            stall_nth: nth("fault.stall_nth", d.stall_nth),
+            stall_ms: raw.get_int("fault.stall_ms").map(|v| v.max(0) as u64).unwrap_or(d.stall_ms),
+            drop_shard: shard("fault.drop_shard", d.drop_shard),
+            drop_nth: nth("fault.drop_nth", d.drop_nth),
+            kill_shard: shard("fault.kill_shard", d.kill_shard),
+            kill_nth: nth("fault.kill_nth", d.kill_nth),
+        }
+    }
+
+    /// True when no injection is armed.
+    pub fn is_empty(&self) -> bool {
+        self.panic_kernel.is_empty()
+            && self.stall_shard < 0
+            && self.drop_shard < 0
+            && self.kill_shard < 0
+    }
+
+    /// Materialize as the runtime fault plan (`None` when nothing is
+    /// armed — the zero-cost default).
+    pub fn plan(&self) -> Option<std::sync::Arc<crate::relic::FaultPlan>> {
+        if self.is_empty() {
+            return None;
+        }
+        let mut plan = crate::relic::FaultPlan::new();
+        if !self.panic_kernel.is_empty() {
+            plan = plan.with_panic_on(&self.panic_kernel, self.panic_nth);
+        }
+        if self.stall_shard >= 0 {
+            plan = plan.with_stall(
+                self.stall_shard as usize,
+                self.stall_nth,
+                std::time::Duration::from_millis(self.stall_ms),
+            );
+        }
+        if self.drop_shard >= 0 {
+            plan = plan.with_drop_response(self.drop_shard as usize, self.drop_nth);
+        }
+        if self.kill_shard >= 0 {
+            plan = plan.with_kill(self.kill_shard as usize, self.kill_nth);
+        }
+        Some(std::sync::Arc::new(plan))
+    }
+}
+
 /// Fork-join runtime configuration (section `[relic]`; defaults mirror
 /// [`crate::relic::RelicConfig`]). Pinning stays a CLI/topology concern,
 /// so only the portable knobs live here.
@@ -434,19 +612,92 @@ mod tests {
         let d = PoolSettings::default();
         assert_eq!(d.shard_count_hint(), None, "0 means auto");
         let raw = RawConfig::parse(
-            "[pool]\nshards = 4\npin = false\nchannel_capacity = 8\nmax_batch = 2\n",
+            "[pool]\nshards = 4\npin = false\nchannel_capacity = 8\nmax_batch = 2\n\
+             park_timeout_ms = 10\n",
         )
         .unwrap();
         let s = PoolSettings::from_raw(&raw);
-        assert_eq!(s, PoolSettings { shards: 4, pin: false, channel_capacity: 8, max_batch: 2 });
+        assert_eq!(
+            s,
+            PoolSettings {
+                shards: 4,
+                pin: false,
+                channel_capacity: 8,
+                max_batch: 2,
+                park_timeout_ms: 10,
+            }
+        );
         assert_eq!(s.shard_count_hint(), Some(4));
         // Partial overlay keeps defaults; degenerate values are clamped.
-        let raw = RawConfig::parse("[pool]\nchannel_capacity = 0\n").unwrap();
+        let raw = RawConfig::parse("[pool]\nchannel_capacity = 0\npark_timeout_ms = 0\n").unwrap();
         let s = PoolSettings::from_raw(&raw);
         assert_eq!(s.shards, 0);
         assert!(s.pin);
         assert_eq!(s.channel_capacity, 1);
         assert_eq!(s.max_batch, 32);
+        assert_eq!(s.park_timeout_ms, 1, "a zero park timeout would spin");
+    }
+
+    #[test]
+    fn supervisor_settings_overlay_and_materialize() {
+        let d = SupervisorSettings::default();
+        assert!(d.enabled, "supervision is on by default");
+        assert_eq!(d.stuck_after_ms, 200);
+        assert_eq!(d.max_restarts, 3);
+        assert_eq!(d.backoff_ms, 25);
+        let raw = RawConfig::parse(
+            "[supervisor]\nenabled = false\nstuck_after_ms = 50\nmax_restarts = 0\n\
+             backoff_ms = 5\n",
+        )
+        .unwrap();
+        let s = SupervisorSettings::from_raw(&raw);
+        assert!(!s.enabled);
+        let c = s.to_config();
+        assert!(!c.enabled);
+        assert_eq!(c.stuck_after, std::time::Duration::from_millis(50));
+        assert_eq!(c.max_restarts, 0, "a zero budget (quarantine only) is legal");
+        assert_eq!(c.backoff_base, std::time::Duration::from_millis(5));
+        // Partial overlay keeps defaults elsewhere.
+        let raw = RawConfig::parse("[supervisor]\nmax_restarts = 9\n").unwrap();
+        let s = SupervisorSettings::from_raw(&raw);
+        assert!(s.enabled);
+        assert_eq!(s.max_restarts, 9);
+        assert_eq!(s.stuck_after_ms, 200);
+    }
+
+    #[test]
+    fn fault_settings_default_off_and_plan_builds() {
+        let d = FaultSettings::default();
+        assert!(d.is_empty(), "no injection armed by default");
+        assert!(d.plan().is_none(), "empty settings cost nothing at runtime");
+        let raw = RawConfig::parse(
+            "[fault]\npanic_kernel = \"tc\"\npanic_nth = 2\nstall_shard = 1\nstall_ms = 30\n\
+             kill_shard = 0\n",
+        )
+        .unwrap();
+        let s = FaultSettings::from_raw(&raw);
+        assert!(!s.is_empty());
+        assert_eq!(s.panic_kernel, "tc");
+        assert_eq!(s.panic_nth, 2);
+        assert_eq!(s.stall_shard, 1);
+        assert_eq!(s.kill_shard, 0);
+        assert_eq!(s.drop_shard, -1, "unset injections stay off");
+        let plan = s.plan().expect("armed settings build a plan");
+        assert!(!plan.is_empty());
+        // The plan carries exactly the armed injections: the second TC
+        // execution panics, shard 1's first batch stalls 30 ms, shard
+        // 0's first batch kills its thread, nothing drops responses.
+        assert!(!plan.should_panic("tc"), "nth = 2: first TC execution passes");
+        assert!(plan.should_panic("tc"), "second one fires");
+        assert_eq!(plan.stall_duration(1), Some(std::time::Duration::from_millis(30)));
+        assert!(plan.should_kill(0));
+        assert!(!plan.should_drop_response(0));
+        // Degenerate values clamp: nth floors at 1, shards at -1.
+        let raw = RawConfig::parse("[fault]\ndrop_shard = -7\ndrop_nth = 0\n").unwrap();
+        let s = FaultSettings::from_raw(&raw);
+        assert_eq!(s.drop_shard, -1);
+        assert_eq!(s.drop_nth, 1);
+        assert!(s.is_empty());
     }
 
     #[test]

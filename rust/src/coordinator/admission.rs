@@ -1,11 +1,15 @@
 //! Admission control for the sharded engine: deadlines, shed policy,
 //! and the admission verdict every submit path returns.
 //!
-//! The engine's front door decides, per request, one of three fates:
+//! The engine's front door decides, per request, one of four fates:
 //!
 //! * **Accepted** — the request is routed to a shard and *will* be
 //!   served (accepted requests are never dropped and never reordered
 //!   within their shard);
+//! * **Degraded** — every shard is quarantined (see
+//!   [`crate::relic::Supervisor`]), so the request was served *inline*
+//!   on the submitting thread instead of being refused — the engine
+//!   keeps answering, just without parallelism;
 //! * **QueueFull** — the non-blocking path found the routed shard's
 //!   bounded channel full; the request comes back to the caller
 //!   untouched, to retry, park, or redirect;
@@ -238,10 +242,18 @@ pub enum Admission {
         reason: ShedReason,
         request: super::Request,
     },
+    /// Every shard was quarantined, so the engine served the request
+    /// *inline* on the submitting thread (serial native execution) —
+    /// graceful degradation instead of a routing panic. The response is
+    /// already complete and comes back from the next
+    /// [`super::Engine::drain`] in submission order like any other;
+    /// [`crate::metrics::FaultMetrics::degraded_requests`] counts it.
+    Degraded,
 }
 
 impl Admission {
-    /// The shard an accepted request went to.
+    /// The shard an accepted request went to (`None` for degraded
+    /// inline execution — no shard was involved).
     pub fn shard(&self) -> Option<usize> {
         match self {
             Admission::Accepted { shard, .. } => Some(*shard),
@@ -249,8 +261,17 @@ impl Admission {
         }
     }
 
+    /// True when the engine took ownership and a response is guaranteed
+    /// from the next drain — queued on a shard, or already served
+    /// inline by the degraded path.
     pub fn is_accepted(&self) -> bool {
-        matches!(self, Admission::Accepted { .. })
+        matches!(self, Admission::Accepted { .. } | Admission::Degraded)
+    }
+
+    /// True when the request was served inline because no shard was
+    /// available.
+    pub fn is_degraded(&self) -> bool {
+        matches!(self, Admission::Degraded)
     }
 
     pub fn is_queue_full(&self) -> bool {

@@ -43,30 +43,68 @@
 //! * per-shard [`ServiceMetrics`] plus the engine's own admission-side
 //!   counters aggregate into one service-level [`Engine::report`].
 //!
+//! # Failure domains
+//!
+//! Each shard is a failure domain (see `ARCHITECTURE.md` §Failure
+//! domains & recovery). Three containment layers keep a fault from
+//! taking the engine down, and a driven watchdog recovers the shard:
+//!
+//! * **per-request** — the coordinator catches kernel panics and
+//!   answers [`RequestResult::Failed`] instead of unwinding
+//!   ([`Coordinator::set_fault`] injects them deterministically);
+//! * **per-batch** — the shard handler wraps `process_batch` in
+//!   `catch_unwind`, so a coordinator-level panic answers the whole
+//!   batch with typed failures rather than killing the thread silently;
+//! * **per-shard** — the pool's thread loop is the backstop
+//!   ([`crate::relic::pool`]); a shard that dies anyway is detected by
+//!   the [`Supervisor`], quarantined (routing skips it), its queued
+//!   requests are stolen and re-routed exactly once, and the thread is
+//!   respawned within a restart budget.
+//!
+//! With *every* shard quarantined the engine degrades to inline serial
+//! execution at the gate ([`Admission::Degraded`]) — answers keep
+//! coming, just without parallelism. Responses that are genuinely lost
+//! (a fault dropped them, or a shard died past its budget) are
+//! synthesized as [`FaultKind::ResponseLost`] once the pool is
+//! provably idle, so the no-drop invariant — every accepted request
+//! gets exactly one response — holds even under injected chaos.
+//! `supervisor.enabled = false` removes all of this: dead shards are
+//! fatal again, bit-for-bit the PR 5 engine.
+//!
 //! Shards run the native kernels only: PJRT executors hold process-wide
 //! device state and are not replicated per shard — coarse offload stays
 //! on the single-pair [`Coordinator`] path (`repro serve` without
 //! `--shards`).
 
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use crate::config::{AdmissionSettings, PoolSettings};
-use crate::relic::pool::{discover_placements, PoolConfig, PoolSnapshot, RelicPool};
-use crate::relic::RelicConfig;
+use crate::config::{AdmissionSettings, PoolSettings, SupervisorSettings};
+use crate::relic::pool::{
+    discover_placements, PoolConfig, PoolSnapshot, RelicPool, Supervisor, SupervisorConfig,
+};
+use crate::relic::{FaultKind, RelicConfig};
 
 use super::admission::{shed_decision, Admission, AdmissionConfig, ShedReason};
 use super::router::{pick_shard, Router, RouterConfig};
-use super::service::{Coordinator, Request, Response, ServiceMetrics};
+use super::service::{Coordinator, Request, RequestResult, Response, ServiceMetrics};
+use super::{run_native_kernel, Backend};
 
-/// Engine configuration: pool sizing/placement, routing, and admission
-/// control.
+/// Engine configuration: pool sizing/placement, routing, admission
+/// control, and the shard watchdog.
 #[derive(Debug, Clone, Default)]
 pub struct EngineConfig {
     pub pool: PoolConfig,
     pub router: RouterConfig,
     pub admission: AdmissionConfig,
+    /// Watchdog policy. `enabled` defaults to true; no-fault traffic
+    /// never reaches the supervisor (it runs only on drain timeouts),
+    /// so the degenerate cost is zero. `enabled = false` restores the
+    /// PR 5 failure semantics exactly.
+    pub supervisor: SupervisorConfig,
 }
 
 impl EngineConfig {
@@ -79,18 +117,27 @@ impl EngineConfig {
         }
     }
 
-    /// Build from the `[pool]` and `[admission]` sections of a config
-    /// file.
-    pub fn from_settings(pool: &PoolSettings, admission: &AdmissionSettings) -> Self {
+    /// Build from the `[pool]`, `[admission]`, and `[supervisor]`
+    /// sections of a config file (the `[fault]` plan is injected
+    /// separately via `pool.fault` — it is a test/repro tool, not an
+    /// operating mode).
+    pub fn from_settings(
+        pool: &PoolSettings,
+        admission: &AdmissionSettings,
+        supervisor: &SupervisorSettings,
+    ) -> Self {
         EngineConfig {
             pool: PoolConfig {
                 shards: pool.shard_count_hint(),
                 pin: pool.pin,
                 channel_capacity: pool.channel_capacity,
                 max_batch: pool.max_batch,
+                park_timeout: Duration::from_millis(pool.park_timeout_ms),
+                fault: None,
             },
             router: RouterConfig::default(),
             admission: admission.to_config(),
+            supervisor: supervisor.to_config(),
         }
     }
 }
@@ -99,6 +146,14 @@ impl EngineConfig {
 struct Sequenced {
     seq: u64,
     req: Request,
+}
+
+/// Per-shard state owned by the shard thread: the coordinator plus the
+/// shard's own index (the fault hooks and the panic backstop need to
+/// know *which* failure domain they are in).
+struct ShardState {
+    coord: Coordinator,
+    shard: usize,
 }
 
 /// The sharded analytics engine.
@@ -110,11 +165,20 @@ pub struct Engine {
     /// Requests accepted since the last completed `drain`.
     pending: usize,
     next_seq: u64,
+    /// seq → request id for everything accepted but not yet answered —
+    /// what the recovery paths consult to synthesize typed failure
+    /// responses for requests that can no longer complete.
+    in_flight: BTreeMap<u64, u64>,
     admission: AdmissionConfig,
+    /// The shard watchdog (`None` = supervision off, PR 5 semantics).
+    /// Driven from the drain-timeout path, never from a thread of its
+    /// own — a healthy engine pays nothing for it.
+    supervisor: Option<Supervisor>,
     shard_metrics: Vec<Arc<ServiceMetrics>>,
-    /// Admission-side counters (shed, parked, slack): recorded here on
-    /// the submit path, merged with the shard-side metrics (which carry
-    /// the completion-side deadline misses) in
+    /// Admission-side counters (shed, parked, slack) plus the engine's
+    /// fault/recovery counters: recorded here on the submit and
+    /// recovery paths, merged with the shard-side metrics (which carry
+    /// the completion-side deadline misses and contained panics) in
     /// [`aggregated_metrics`](Self::aggregated_metrics).
     admission_metrics: Arc<ServiceMetrics>,
 }
@@ -134,29 +198,71 @@ impl Engine {
             m.service_estimator
                 .configure(config.admission.ema_alpha, config.admission.service_estimate_ns);
         }
+        let supervisor = if config.supervisor.enabled {
+            Some(Supervisor::new(config.supervisor.clone(), placements.len()))
+        } else {
+            None
+        };
         let (tx, rx): (Sender<(u64, Response)>, _) = channel();
         let factory = {
             let shard_metrics = shard_metrics.clone();
             let router_cfg = config.router.clone();
             let edf = config.admission.edf;
+            let fault = config.pool.fault.clone();
             move |p: &crate::relic::ShardPlacement| {
-                let mut coordinator = Coordinator::with_config(
+                let mut coord = Coordinator::with_config(
                     Router::new(router_cfg.clone(), None),
                     None,
                     RelicConfig { assistant_cpu: p.assistant_cpu, ..RelicConfig::default() },
                     Arc::clone(&shard_metrics[p.shard]),
                 );
-                coordinator.set_edf(edf);
-                coordinator
+                coord.set_edf(edf);
+                coord.set_fault(fault.clone());
+                ShardState { coord, shard: p.shard }
             }
         };
-        let handler = move |coord: &mut Coordinator, batch: Vec<Sequenced>| {
-            let seqs: Vec<u64> = batch.iter().map(|s| s.seq).collect();
-            let reqs: Vec<Request> = batch.into_iter().map(|s| s.req).collect();
-            for (seq, resp) in seqs.into_iter().zip(coord.process_batch(reqs)) {
-                // A send can only fail when the engine (receiver) is
-                // already gone — the shard is being torn down anyway.
-                let _ = tx.send((seq, resp));
+        let handler = {
+            let shard_metrics = shard_metrics.clone();
+            let fault = config.pool.fault.clone();
+            move |state: &mut ShardState, batch: Vec<Sequenced>| {
+                let ids: Vec<(u64, u64)> = batch.iter().map(|s| (s.seq, s.req.id)).collect();
+                let reqs: Vec<Request> = batch.into_iter().map(|s| s.req).collect();
+                match catch_unwind(AssertUnwindSafe(|| state.coord.process_batch(reqs))) {
+                    Ok(responses) => {
+                        for ((seq, _), resp) in ids.into_iter().zip(responses) {
+                            if fault
+                                .as_deref()
+                                .is_some_and(|p| p.should_drop_response(state.shard))
+                            {
+                                // Injected response loss: the engine's
+                                // idle sweep answers the orphaned seq.
+                                continue;
+                            }
+                            // A send can only fail when the engine
+                            // (receiver) is already gone — the shard is
+                            // being torn down anyway.
+                            let _ = tx.send((seq, resp));
+                        }
+                    }
+                    Err(_) => {
+                        // Batch-level containment: the coordinator
+                        // panicked *outside* its per-request catch.
+                        // Answer every request in the batch with a
+                        // typed failure instead of hanging the drain.
+                        shard_metrics[state.shard].fault.panics_caught.inc();
+                        for (seq, id) in ids {
+                            let _ = tx.send((
+                                seq,
+                                Response {
+                                    id,
+                                    backend: Backend::Native,
+                                    result: RequestResult::Failed(FaultKind::Panic),
+                                    latency_ns: 0,
+                                },
+                            ));
+                        }
+                    }
+                }
             }
         };
         let pool = RelicPool::with_placements(placements, &config.pool, factory, handler);
@@ -166,7 +272,9 @@ impl Engine {
             collected: Vec::new(),
             pending: 0,
             next_seq: 0,
+            in_flight: BTreeMap::new(),
             admission: config.admission,
+            supervisor,
             shard_metrics,
             admission_metrics: Arc::new(ServiceMetrics::default()),
         }
@@ -182,26 +290,56 @@ impl Engine {
         self.admission
     }
 
-    /// The shared admission gate: route the request to the shard with
-    /// the least estimated wait and apply the shed policy against the
-    /// request's deadline. `Ok` = (destination shard, request, slack
-    /// remaining in ns for a deadlined request); `Err` = the counted
-    /// [`Admission::Shed`] verdict, request included. The slack rides
-    /// along unrecorded: only [`accepted`](Self::accepted) samples it,
-    /// so a `QueueFull` bounce-and-retry cannot double-count one
-    /// request in the accepted-slack histogram.
+    /// Whether the shard watchdog is active.
+    pub fn supervisor_enabled(&self) -> bool {
+        self.supervisor.is_some()
+    }
+
+    /// Shards currently quarantined (skipped by routing).
+    pub fn quarantined_count(&self) -> usize {
+        self.pool.quarantined_count()
+    }
+
+    /// Manually quarantine (`true`) or release (`false`) a shard — the
+    /// operator override behind the fault sweep's all-down scenario.
+    /// Manual quarantines are *not* auto-released by the supervisor;
+    /// release them the same way.
+    pub fn set_quarantined(&self, shard: usize, quarantined: bool) {
+        self.pool.set_quarantined(shard, quarantined);
+    }
+
+    /// The shared admission gate: route the request to the
+    /// non-quarantined shard with the least estimated wait and apply
+    /// the shed policy against the request's deadline. `Ok` =
+    /// (destination shard, request, slack remaining in ns for a
+    /// deadlined request); `Err` = a finished verdict — the counted
+    /// [`Admission::Shed`] (request included), or
+    /// [`Admission::Degraded`] when every shard is quarantined and the
+    /// request was served inline. The slack rides along unrecorded:
+    /// only [`accepted`](Self::accepted) samples it, so a `QueueFull`
+    /// bounce-and-retry cannot double-count one request in the
+    /// accepted-slack histogram.
     fn admission_gate(&mut self, req: Request) -> Result<(usize, Request, Option<u64>), Admission> {
         let now = Instant::now();
         // Route on the measured wait: each shard's depth × its live EMA
         // for this request's kernel class (the static knob is the EMA's
         // floor, so an unmeasured engine routes exactly as before).
+        // Quarantined shards are not candidates; with the supervisor
+        // off nothing is ever quarantined, so the filter is inert.
         let class = req.kernel.class();
-        let (shard, est_wait) = pick_shard(
+        let routed = pick_shard(
             self.shard_metrics
                 .iter()
                 .zip(self.pool.depths_iter())
-                .map(|(m, depth)| (depth, m.service_estimator.estimate_ns(class))),
+                .enumerate()
+                .filter(|(shard, _)| !self.pool.is_quarantined(*shard))
+                .map(|(shard, (m, depth))| (shard, depth, m.service_estimator.estimate_ns(class))),
         );
+        let est_wait = match routed {
+            Ok((_, wait)) => wait,
+            // Inline execution starts immediately: no queue wait.
+            Err(_) => Duration::ZERO,
+        };
         if let Some(reason) = shed_decision(
             self.admission.shed,
             req.deadline,
@@ -219,18 +357,162 @@ impl Engine {
             return Err(Admission::Shed { reason, request: req });
         }
         let slack_ns = req.deadline.slack_at(now).map(|s| s.as_nanos() as u64);
-        Ok((shard, req, slack_ns))
+        match routed {
+            Ok((shard, _)) => Ok((shard, req, slack_ns)),
+            Err(_) => Err(self.degrade(req, slack_ns)),
+        }
     }
 
     /// Bookkeeping for a request the pool definitely queued — this is
     /// the one place the accepted-slack histogram is fed.
-    fn accepted(&mut self, shard: usize, parked: bool, slack_ns: Option<u64>) -> Admission {
+    fn accepted(
+        &mut self,
+        shard: usize,
+        parked: bool,
+        slack_ns: Option<u64>,
+        id: u64,
+    ) -> Admission {
+        self.in_flight.insert(self.next_seq, id);
         self.next_seq += 1;
         self.pending += 1;
         if let Some(slack) = slack_ns {
             self.admission_metrics.admission.slack_at_admission.record(slack);
         }
         Admission::Accepted { shard, parked }
+    }
+
+    /// Graceful degradation at the gate: every shard is quarantined, so
+    /// serve the request inline (serial native execution) instead of
+    /// refusing it. The response joins `collected` directly and comes
+    /// back from the next drain in submission order like any other.
+    fn degrade(&mut self, req: Request, slack_ns: Option<u64>) -> Admission {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.pending += 1;
+        if let Some(slack) = slack_ns {
+            self.admission_metrics.admission.slack_at_admission.record(slack);
+        }
+        self.serve_inline(Sequenced { seq, req });
+        Admission::Degraded
+    }
+
+    /// Serial inline service for a request no shard can take: run the
+    /// kernel on the calling thread, record completion on the engine's
+    /// own metrics, and complete the sequence slot.
+    fn serve_inline(&mut self, sq: Sequenced) {
+        let Sequenced { seq, req } = sq;
+        let start = Instant::now();
+        let sum = run_native_kernel(req.kernel, &req.graph, req.source);
+        let latency_ns = start.elapsed().as_nanos() as u64;
+        self.admission_metrics.record_completion(
+            req.kernel,
+            Backend::Native,
+            latency_ns,
+            req.deadline,
+            Instant::now(),
+        );
+        self.admission_metrics.fault.degraded_requests.inc();
+        self.in_flight.remove(&seq);
+        self.collected.push((
+            seq,
+            Response {
+                id: req.id,
+                backend: Backend::Native,
+                result: RequestResult::Native(sum),
+                latency_ns,
+            },
+        ));
+    }
+
+    /// Re-route an accepted-but-unprocessed request stolen from a
+    /// quarantined shard: try the healthiest remaining shard, fall back
+    /// to inline service. At-most-once is structural — the item was
+    /// stolen from the queue *before* any consumer could pop it, so
+    /// exactly one of {healthy shard, inline} executes it.
+    fn reroute(&mut self, sq: Sequenced) {
+        let class = sq.req.kernel.class();
+        let retry = pick_shard(
+            self.shard_metrics
+                .iter()
+                .zip(self.pool.depths_iter())
+                .enumerate()
+                .filter(|(shard, _)| {
+                    !self.pool.is_quarantined(*shard) && !self.pool.shard_dead(*shard)
+                })
+                .map(|(shard, (m, depth))| (shard, depth, m.service_estimator.estimate_ns(class))),
+        );
+        match retry {
+            Ok((shard, _)) => match self.pool.try_submit_to(shard, sq) {
+                Ok(()) => self.admission_metrics.fault.redirected_requests.inc(),
+                // The fallback shard is full: serve inline rather than
+                // block the drain loop on a queue we are draining.
+                Err(bounced) => self.serve_inline(bounced),
+            },
+            Err(_) => self.serve_inline(sq),
+        }
+    }
+
+    /// One recovery pass, called when `drain` times out waiting with
+    /// the supervisor enabled: classify shards, steal + re-route the
+    /// queued work of quarantined ones, respawn dead ones, and — once
+    /// the pool is provably idle for two consecutive passes — synthesize
+    /// [`FaultKind::ResponseLost`] failures for sequences that can no
+    /// longer be answered. Returns the updated idle-pass streak.
+    fn recover(&mut self, idle_passes: u32) -> u32 {
+        let verdict = self
+            .supervisor
+            .as_mut()
+            .expect("recover is only called with a supervisor")
+            .check(&self.pool);
+        let fm = &self.admission_metrics.fault;
+        fm.shard_restarts.add(verdict.restarted as u64);
+        fm.watchdog_trips.add(verdict.trips as u64);
+        for spent in &verdict.released {
+            fm.quarantine_ns.record(spent.as_nanos() as u64);
+        }
+        for sq in verdict.redirected {
+            self.reroute(sq);
+        }
+        // Idle = nothing queued and nothing in processing anywhere
+        // (depth decrements only after a batch's responses are sent),
+        // so whatever is still unanswered can never arrive. Two
+        // consecutive idle passes plus a final non-blocking sweep of
+        // the channel close the race with a batch finishing between
+        // the depth read and now.
+        if self.pool.depths_iter().sum::<usize>() > 0 {
+            return 0;
+        }
+        if idle_passes + 1 < 2 {
+            return idle_passes + 1;
+        }
+        while let Ok((seq, resp)) = self.responses.try_recv() {
+            self.in_flight.remove(&seq);
+            self.collected.push((seq, resp));
+        }
+        if self.collected.len() < self.pending {
+            self.synthesize_lost();
+        }
+        0
+    }
+
+    /// Answer every still-unanswered sequence with a typed
+    /// [`FaultKind::ResponseLost`] failure — the no-drop invariant's
+    /// last line of defense.
+    fn synthesize_lost(&mut self) {
+        let fm = &self.admission_metrics.fault;
+        for (&seq, &id) in &self.in_flight {
+            fm.responses_lost.inc();
+            self.collected.push((
+                seq,
+                Response {
+                    id,
+                    backend: Backend::Native,
+                    result: RequestResult::Failed(FaultKind::ResponseLost),
+                    latency_ns: 0,
+                },
+            ));
+        }
+        self.in_flight.clear();
     }
 
     /// Dispatch one request, blocking when the routed shard's channel
@@ -267,10 +549,11 @@ impl Engine {
     pub fn submit(&mut self, req: Request) -> Admission {
         let (shard, req, slack_ns) = match self.admission_gate(req) {
             Ok(routed) => routed,
-            Err(shed) => return shed,
+            Err(verdict) => return verdict,
         };
+        let id = req.id;
         self.pool.submit_to(shard, Sequenced { seq: self.next_seq, req });
-        self.accepted(shard, false, slack_ns)
+        self.accepted(shard, false, slack_ns, id)
     }
 
     /// Non-blocking dispatch: a full channel returns
@@ -280,10 +563,11 @@ impl Engine {
     pub fn try_submit(&mut self, req: Request) -> Admission {
         let (shard, req, slack_ns) = match self.admission_gate(req) {
             Ok(routed) => routed,
-            Err(shed) => return shed,
+            Err(verdict) => return verdict,
         };
+        let id = req.id;
         match self.pool.try_submit_to(shard, Sequenced { seq: self.next_seq, req }) {
-            Ok(()) => self.accepted(shard, false, slack_ns),
+            Ok(()) => self.accepted(shard, false, slack_ns, id),
             Err(bounced) => {
                 self.admission_metrics.admission.queue_full_rejections.inc();
                 Admission::QueueFull { rejected: bounced.req }
@@ -296,16 +580,62 @@ impl Engine {
     /// its consumer frees capacity (no spinning, no lost wakeups — see
     /// [`crate::relic::pool`] for the protocol). Accepted requests
     /// report whether they had to park.
+    ///
+    /// If the shard's thread dies while the producer is parked, the
+    /// pool reports it ([`crate::relic::ShardDead`]) instead of
+    /// retrying forever: with the supervisor on the request is
+    /// re-routed to a healthy shard (or served inline), with it off the
+    /// dead shard is fatal — PR 5's semantics, now with a diagnosis
+    /// instead of a hang.
+    ///
+    /// # Panics
+    /// With supervision disabled, panics if the routed shard's thread
+    /// is found dead while parked.
     pub fn submit_or_park(&mut self, req: Request) -> Admission {
         let (shard, req, slack_ns) = match self.admission_gate(req) {
             Ok(routed) => routed,
-            Err(shed) => return shed,
+            Err(verdict) => return verdict,
         };
-        let parked = self.pool.submit_or_park_to(shard, Sequenced { seq: self.next_seq, req });
-        if parked {
-            self.admission_metrics.admission.parked_submits.inc();
+        let id = req.id;
+        match self.pool.submit_or_park_to(shard, Sequenced { seq: self.next_seq, req }) {
+            Ok(parked) => {
+                if parked {
+                    self.admission_metrics.admission.parked_submits.inc();
+                }
+                self.accepted(shard, parked, slack_ns, id)
+            }
+            Err(dead) => {
+                assert!(
+                    self.supervisor.is_some(),
+                    "shard {} died with a parked producer waiting (supervision off)",
+                    dead.shard
+                );
+                // Quarantine immediately — the next supervisor pass
+                // classifies it properly and maybe respawns it — then
+                // fall back for this request: another shard, or inline.
+                self.pool.set_quarantined(dead.shard, true);
+                self.admission_metrics.fault.watchdog_trips.inc();
+                let sq = dead.item;
+                let retry = pick_shard(
+                    self.shard_metrics
+                        .iter()
+                        .zip(self.pool.depths_iter())
+                        .enumerate()
+                        .filter(|(s, _)| !self.pool.is_quarantined(*s) && !self.pool.shard_dead(*s))
+                        .map(|(s, (m, depth))| {
+                            (s, depth, m.service_estimator.estimate_ns(sq.req.kernel.class()))
+                        }),
+                );
+                match retry {
+                    Ok((other, _)) => {
+                        self.pool.submit_to(other, sq);
+                        self.admission_metrics.fault.redirected_requests.inc();
+                        self.accepted(other, false, slack_ns, id)
+                    }
+                    Err(_) => self.degrade(sq.req, slack_ns),
+                }
+            }
         }
-        self.accepted(shard, parked, slack_ns)
     }
 
     /// Wait for every response to the requests accepted since the last
@@ -314,32 +644,61 @@ impl Engine {
     /// for — the counters in [`Self::aggregated_metrics`] account for
     /// them.
     ///
+    /// With the supervisor enabled, waiting never hangs on a fault:
+    /// each timeout tick runs one recovery pass (quarantine, steal +
+    /// re-route, respawn), and sequences that provably cannot be
+    /// answered come back as [`RequestResult::Failed`].
+    ///
     /// # Panics
-    /// Panics if a shard thread dies (its handler panicked) while
-    /// responses are outstanding — the alternative is waiting forever
-    /// for responses the dead shard can no longer send.
+    /// With supervision disabled only: panics if a shard thread dies
+    /// while responses are outstanding — the alternative is waiting
+    /// forever for responses the dead shard can no longer send.
     pub fn drain(&mut self) -> Vec<Response> {
         use std::sync::mpsc::RecvTimeoutError;
+        // Tick fast enough that a tight `stuck_after` (tests, repro
+        // sweeps) is honored promptly, but never busier than 20 Hz.
+        let tick = match &self.supervisor {
+            Some(sup) => (sup.config().stuck_after / 2)
+                .clamp(Duration::from_millis(5), Duration::from_millis(50)),
+            None => Duration::from_millis(50),
+        };
+        let mut idle_passes = 0u32;
         while self.collected.len() < self.pending {
-            match self.responses.recv_timeout(std::time::Duration::from_millis(50)) {
-                Ok(item) => self.collected.push(item),
+            match self.responses.recv_timeout(tick) {
+                Ok((seq, resp)) => {
+                    self.in_flight.remove(&seq);
+                    idle_passes = 0;
+                    self.collected.push((seq, resp));
+                }
                 Err(RecvTimeoutError::Timeout) => {
-                    let dead = self.pool.dead_shards();
-                    assert!(
-                        dead.is_empty(),
-                        "engine shard(s) {dead:?} died with {} responses outstanding",
-                        self.pending - self.collected.len()
-                    );
+                    if self.supervisor.is_some() {
+                        idle_passes = self.recover(idle_passes);
+                    } else {
+                        let dead = self.pool.dead_shards();
+                        assert!(
+                            dead.is_empty(),
+                            "engine shard(s) {dead:?} died with {} responses outstanding",
+                            self.pending - self.collected.len()
+                        );
+                    }
                 }
                 Err(RecvTimeoutError::Disconnected) => {
-                    panic!(
-                        "every engine shard died with {} responses outstanding",
-                        self.pending - self.collected.len()
-                    );
+                    // Every sender is gone. With the supervisor on this
+                    // is a recovery path (answer what remains as lost);
+                    // without it, the PR 5 hard failure.
+                    if self.supervisor.is_some() {
+                        self.synthesize_lost();
+                    } else {
+                        panic!(
+                            "every engine shard died with {} responses outstanding",
+                            self.pending - self.collected.len()
+                        );
+                    }
                 }
             }
         }
         self.pending = 0;
+        self.in_flight.clear();
         let mut out = std::mem::take(&mut self.collected);
         out.sort_by_key(|(seq, _)| *seq);
         out.into_iter().map(|(_, resp)| resp).collect()
@@ -388,8 +747,9 @@ impl Engine {
 
     /// Human-readable report: pool counters, the admission verdicts,
     /// the slack-at-admission distribution, the measured service-time
-    /// EMAs (per shard and aggregated), one line per shard, and the
-    /// aggregated service metrics.
+    /// EMAs (per shard and aggregated), the supervisor / fault-recovery
+    /// counters (when active), one line per shard, and the aggregated
+    /// service metrics.
     pub fn report(&self) -> String {
         let snap = self.pool.snapshot();
         let mut out = format!(
@@ -424,6 +784,18 @@ impl Engine {
             self.admission.service_estimate_ns / 1_000,
             if self.admission.edf { ", edf on" } else { "" },
         );
+        if let Some(sup) = &self.supervisor {
+            let sc = sup.config();
+            out += &format!(
+                "supervisor: on (stuck-after {:?}, restart budget {}), {} quarantined now\n",
+                sc.stuck_after,
+                sc.max_restarts,
+                self.pool.quarantined_count()
+            );
+        }
+        if !agg.fault.is_quiet() {
+            out += &format!("faults: {}\n", agg.fault.summary());
+        }
         for (i, m) in self.shard_metrics.iter().enumerate() {
             let p = self.pool.placement(i);
             let cpus = match (p.main_cpu, p.assistant_cpu) {
@@ -480,6 +852,7 @@ mod tests {
         run_native_kernel, Backend, Deadline, GraphKernel, RequestResult, ShedPolicy,
     };
     use crate::graph::kronecker::paper_graph;
+    use crate::relic::FaultPlan;
     use std::time::Duration;
 
     fn engine(shards: usize) -> Engine {
@@ -494,6 +867,24 @@ mod tests {
         Engine::new(EngineConfig {
             pool: PoolConfig { shards: Some(shards), pin: false, ..PoolConfig::default() },
             admission,
+            ..EngineConfig::default()
+        })
+    }
+
+    /// Engine with a fault plan and a fast watchdog (tests should not
+    /// wait out production timeouts).
+    fn chaos_engine(shards: usize, fault: Arc<FaultPlan>) -> Engine {
+        Engine::new(EngineConfig {
+            pool: PoolConfig {
+                shards: Some(shards),
+                pin: false,
+                fault: Some(fault),
+                ..PoolConfig::default()
+            },
+            supervisor: SupervisorConfig {
+                stuck_after: Duration::from_millis(40),
+                ..SupervisorConfig::default()
+            },
             ..EngineConfig::default()
         })
     }
@@ -580,6 +971,11 @@ mod tests {
         assert!(report.contains("admission: policy never"));
         assert!(report.contains("shard 0"));
         assert!(report.contains("total:"));
+        // Supervision is on by default and nothing went wrong: the
+        // supervisor line shows, the fault line stays silent.
+        assert!(report.contains("supervisor: on"), "{report}");
+        assert!(!report.contains("faults:"), "{report}");
+        assert!(agg.fault.is_quiet());
     }
 
     #[test]
@@ -772,5 +1168,141 @@ mod tests {
         assert_eq!(agg.admission.queue_full_rejections.get(), 0);
         assert_eq!(agg.admission.slack_at_admission.count(), 0);
         assert!(e.report().contains("shed=0"));
+    }
+
+    #[test]
+    fn injected_kernel_panic_is_contained_end_to_end() {
+        // Panic on the only TC request in the mix: exactly that request
+        // fails, every other request completes, nothing is dropped, and
+        // the engine keeps serving afterwards.
+        let fault = Arc::new(FaultPlan::new().with_panic_on("tc", 1));
+        let mut e = chaos_engine(2, fault);
+        let kernels = [GraphKernel::Bfs, GraphKernel::Tc, GraphKernel::Bfs, GraphKernel::Cc];
+        for (i, &k) in kernels.iter().enumerate() {
+            assert!(e.submit(req(i as u64, k)).is_accepted());
+        }
+        let responses = e.drain();
+        assert_eq!(responses.len(), 4, "no-drop invariant under a contained panic");
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.id, i as u64, "submission order preserved");
+            if i == 1 {
+                assert_eq!(r.result, RequestResult::Failed(FaultKind::Panic));
+            } else {
+                assert!(r.result.is_ok(), "request {i} unaffected: {:?}", r.result);
+            }
+        }
+        let agg = e.aggregated_metrics();
+        assert_eq!(agg.fault.panics_caught.get(), 1);
+        // Reconciliation: submitted = completed + failed.
+        assert_eq!(agg.native_requests.get(), 3);
+        // The engine is still alive: a follow-up TC request succeeds
+        // (the injection was one-shot).
+        assert!(e.submit(req(9, GraphKernel::Tc)).is_accepted());
+        let follow_up = e.drain();
+        assert_eq!(follow_up.len(), 1);
+        assert!(follow_up[0].result.is_ok());
+    }
+
+    #[test]
+    fn all_shards_quarantined_degrades_to_inline_serial() {
+        let mut e = engine(2);
+        e.pool.set_quarantined(0, true);
+        e.pool.set_quarantined(1, true);
+        assert_eq!(e.quarantined_count(), 2);
+        let expected = run_native_kernel(GraphKernel::Bfs, &paper_graph(), 0);
+        let n = 3u64;
+        for i in 0..n {
+            let verdict = e.submit(req(i, GraphKernel::Bfs));
+            assert!(verdict.is_degraded(), "all-quarantined serves inline");
+            assert!(verdict.is_accepted(), "degraded still owes a response");
+            assert_eq!(verdict.shard(), None);
+        }
+        let responses = e.drain();
+        assert_eq!(responses.len(), n as usize);
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.result, RequestResult::Native(expected), "checksum-equal to serial");
+        }
+        let agg = e.aggregated_metrics();
+        assert_eq!(agg.fault.degraded_requests.get(), n);
+        assert_eq!(agg.native_requests.get(), n, "degraded requests count as completions");
+        assert!(e.report().contains("degraded=3"), "{}", e.report());
+        // Releasing one shard restores normal routing.
+        e.pool.set_quarantined(0, false);
+        let verdict = e.submit(req(99, GraphKernel::Bfs));
+        assert_eq!(verdict.shard(), Some(0));
+        assert_eq!(e.drain().len(), 1);
+    }
+
+    #[test]
+    fn killed_shard_is_respawned_and_every_request_answered() {
+        // Kill shard 0's thread on its first batch. The batch is
+        // requeued before the thread exits, the supervisor quarantines
+        // + respawns, stolen work is re-routed, and every submitted
+        // request still gets a successful response.
+        let fault = Arc::new(FaultPlan::new().with_kill(0, 1));
+        let mut e = chaos_engine(2, fault);
+        let n = 8u64;
+        let expected = run_native_kernel(GraphKernel::Bfs, &paper_graph(), 0);
+        for i in 0..n {
+            assert!(e.submit(req(i, GraphKernel::Bfs)).is_accepted());
+        }
+        let responses = e.drain();
+        assert_eq!(responses.len(), n as usize, "no request lost to the kill");
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.result, RequestResult::Native(expected));
+        }
+        let agg = e.aggregated_metrics();
+        assert!(agg.fault.shard_restarts.get() >= 1, "the dead shard was respawned");
+        assert!(agg.fault.watchdog_trips.get() >= 1, "the watchdog tripped");
+        // Follow-up traffic runs on the respawned pool.
+        assert!(e.submit(req(100, GraphKernel::Bfs)).is_accepted());
+        assert_eq!(e.drain().len(), 1);
+    }
+
+    #[test]
+    fn dropped_response_is_synthesized_as_lost() {
+        // Drop the first response on shard 0 (single shard: fully
+        // deterministic). The drain's idle sweep must answer the
+        // orphaned sequence with a typed ResponseLost failure instead
+        // of hanging.
+        let fault = Arc::new(FaultPlan::new().with_drop_response(0, 1));
+        let mut e = chaos_engine(1, fault);
+        for i in 0..3u64 {
+            assert!(e.submit(req(i, GraphKernel::Bfs)).is_accepted());
+        }
+        let responses = e.drain();
+        assert_eq!(responses.len(), 3, "no-drop even when a response is lost");
+        let lost: Vec<u64> = responses
+            .iter()
+            .filter(|r| r.result == RequestResult::Failed(FaultKind::ResponseLost))
+            .map(|r| r.id)
+            .collect();
+        assert_eq!(lost.len(), 1, "exactly the dropped response is synthesized");
+        let agg = e.aggregated_metrics();
+        assert_eq!(agg.fault.responses_lost.get(), 1);
+        // The engine remains usable.
+        assert!(e.submit(req(9, GraphKernel::Cc)).is_accepted());
+        assert_eq!(e.drain().len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "died")]
+    fn supervisor_off_keeps_dead_shards_fatal() {
+        // PR 5's failure semantics, pinned: with supervision disabled a
+        // killed shard makes drain panic instead of recovering.
+        let mut e = Engine::new(EngineConfig {
+            pool: PoolConfig {
+                shards: Some(1),
+                pin: false,
+                fault: Some(Arc::new(FaultPlan::new().with_kill(0, 1))),
+                ..PoolConfig::default()
+            },
+            supervisor: SupervisorConfig { enabled: false, ..SupervisorConfig::default() },
+            ..EngineConfig::default()
+        });
+        let _ = e.submit(req(0, GraphKernel::Bfs));
+        let _ = e.drain();
     }
 }

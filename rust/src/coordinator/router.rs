@@ -79,16 +79,41 @@ impl Router {
     }
 }
 
+/// Routing failed: there is no shard a request could be admitted to.
+///
+/// Reachable only when every shard is quarantined (or the candidate
+/// iterator is otherwise empty) — the seam the engine's graceful
+/// degradation hangs off: instead of the old empty-iterator panic,
+/// [`pick_shard`] hands the admission layer a typed error it can turn
+/// into inline serial execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteError {
+    /// Every shard was excluded from the candidate set.
+    NoShardsAvailable,
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::NoShardsAvailable => write!(f, "no shards available for routing"),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
 /// Pick the shard a new request should be admitted to, returning the
 /// shard index and the estimated wait for a request admitted to it
-/// right now. Takes one `(depth, service_estimate_ns)` pair per shard
-/// as an iterator so the hot submit path can feed it straight from the
-/// pool's atomics and the per-shard EMA readouts without allocating —
-/// `service_estimate_ns` is each shard's *measured* per-request
-/// estimate for the request's kernel class
-/// ([`crate::metrics::ServiceEstimator::estimate_ns`]), which falls
-/// back to the static `[admission] service_estimate_us` knob (the
-/// EMA's floor) until samples arrive.
+/// right now. Takes one `(shard, depth, service_estimate_ns)` triple
+/// per *candidate* shard as an iterator so the hot submit path can
+/// feed it straight from the pool's atomics and the per-shard EMA
+/// readouts without allocating — carrying the shard index explicitly
+/// lets the engine filter quarantined shards out of the candidate set
+/// while the survivors keep their true indices. `service_estimate_ns`
+/// is each shard's *measured* per-request estimate for the request's
+/// kernel class ([`crate::metrics::ServiceEstimator::estimate_ns`]),
+/// which falls back to the static `[admission] service_estimate_us`
+/// knob (the EMA's floor) until samples arrive.
 ///
 /// A shard's estimated wait is `(depth + 1) × service_estimate_ns`:
 /// everything already queued or in processing on it, *plus the
@@ -102,15 +127,16 @@ impl Router {
 /// PR 4 routing is also preserved bit-for-bit. Divergence begins only
 /// once per-shard EMAs actually differ — the measured case.
 ///
-/// # Panics
-/// Panics on an empty iterator (a pool always has ≥ 1 shard).
-pub fn pick_shard<I>(shards: I) -> (usize, std::time::Duration)
+/// An empty candidate set returns [`RouteError::NoShardsAvailable`]
+/// instead of panicking (it used to) — all-shards-quarantined is a
+/// recoverable state, not a bug.
+pub fn pick_shard<I>(shards: I) -> Result<(usize, std::time::Duration), RouteError>
 where
-    I: IntoIterator<Item = (usize, u64)>,
+    I: IntoIterator<Item = (usize, usize, u64)>,
 {
     // (index, est wait ns, depth) of the best shard so far.
     let mut best: Option<(usize, u64, usize)> = None;
-    for (i, (depth, est_ns)) in shards.into_iter().enumerate() {
+    for (shard, depth, est_ns) in shards {
         let wait = (depth as u64).saturating_add(1).saturating_mul(est_ns);
         let better = match best {
             None => true,
@@ -119,11 +145,11 @@ where
             }
         };
         if better {
-            best = Some((i, wait, depth));
+            best = Some((shard, wait, depth));
         }
     }
-    let (i, wait, _) = best.expect("pick_shard needs at least one shard");
-    (i, std::time::Duration::from_nanos(wait))
+    let (shard, wait, _) = best.ok_or(RouteError::NoShardsAvailable)?;
+    Ok((shard, std::time::Duration::from_nanos(wait)))
 }
 
 #[cfg(test)]
@@ -172,25 +198,26 @@ mod tests {
         assert_eq!(r.route(GraphKernel::Tc, 64), Backend::Pjrt);
     }
 
-    /// One uniform estimate for every shard (the static-knob shape).
-    fn uniform(depths: &[usize], est_ns: u64) -> Vec<(usize, u64)> {
-        depths.iter().map(|&d| (d, est_ns)).collect()
+    /// One uniform estimate for every shard (the static-knob shape),
+    /// with shard indices 0..n.
+    fn uniform(depths: &[usize], est_ns: u64) -> Vec<(usize, usize, u64)> {
+        depths.iter().enumerate().map(|(i, &d)| (i, d, est_ns)).collect()
     }
 
     #[test]
     fn pick_shard_is_least_loaded_with_wait_estimate() {
         use std::time::Duration;
         // Ties go low; zero estimates mean zero wait (PR 2 rule).
-        assert_eq!(pick_shard(uniform(&[0, 0, 0], 0)), (0, Duration::ZERO));
-        assert_eq!(pick_shard(uniform(&[3, 1, 1], 0)), (1, Duration::ZERO));
+        assert_eq!(pick_shard(uniform(&[0, 0, 0], 0)), Ok((0, Duration::ZERO)));
+        assert_eq!(pick_shard(uniform(&[3, 1, 1], 0)), Ok((1, Duration::ZERO)));
         // The estimate covers the queue *and* the request itself.
         assert_eq!(
             pick_shard(uniform(&[3, 2, 5], 1_000)),
-            (1, Duration::from_nanos(3_000))
+            Ok((1, Duration::from_nanos(3_000)))
         );
-        assert_eq!(pick_shard(uniform(&[0], 250)), (0, Duration::from_nanos(250)));
+        assert_eq!(pick_shard(uniform(&[0], 250)), Ok((0, Duration::from_nanos(250))));
         // Saturates instead of overflowing on absurd inputs.
-        let (_, wait) = pick_shard([(usize::MAX, u64::MAX)]);
+        let (_, wait) = pick_shard([(0, usize::MAX, u64::MAX)]).unwrap();
         assert_eq!(wait, Duration::from_nanos(u64::MAX));
     }
 
@@ -200,17 +227,34 @@ mod tests {
         // Shard 0 is deeper but measured 10× faster for this class:
         // 4 × 100 ns = 400 ns beats 1 × 10 µs.
         assert_eq!(
-            pick_shard([(3, 100), (0, 10_000)]),
-            (0, Duration::from_nanos(400))
+            pick_shard([(0, 3, 100), (1, 0, 10_000)]),
+            Ok((0, Duration::from_nanos(400)))
         );
         // Equal waits tie-break to the smaller depth, then the index:
         // (1+1)×500 == (0+1)×1000 → shard 1 (depth 0) wins.
         assert_eq!(
-            pick_shard([(1, 500), (0, 1_000)]),
-            (1, Duration::from_nanos(1_000))
+            pick_shard([(0, 1, 500), (1, 0, 1_000)]),
+            Ok((1, Duration::from_nanos(1_000)))
         );
         // A zero-estimate shard (no samples, no floor) reads as free.
-        assert_eq!(pick_shard([(5, 1_000), (9, 0)]), (1, Duration::ZERO));
+        assert_eq!(pick_shard([(0, 5, 1_000), (1, 9, 0)]), Ok((1, Duration::ZERO)));
+    }
+
+    #[test]
+    fn pick_shard_keeps_true_indices_and_errors_when_empty() {
+        use std::time::Duration;
+        // A quarantine-filtered candidate set: shards 0 and 2 are out.
+        // The survivors keep their true indices.
+        assert_eq!(
+            pick_shard([(1, 2, 100), (3, 1, 100)]),
+            Ok((3, Duration::from_nanos(200)))
+        );
+        // Everything quarantined → typed error, not a panic.
+        assert_eq!(pick_shard(std::iter::empty()), Err(RouteError::NoShardsAvailable));
+        assert_eq!(
+            RouteError::NoShardsAvailable.to_string(),
+            "no shards available for routing"
+        );
     }
 
     #[test]

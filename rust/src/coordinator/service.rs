@@ -11,13 +11,14 @@
 //!    (its kernel's hot loops fork-joined over the same SMT pair via
 //!    [`Par`]), so the assistant thread never idles through a batch.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::graph::{dense, CsrGraph};
-use crate::metrics::{AdmissionMetrics, Counter, Histogram, ServiceEstimator};
-use crate::relic::{Par, Relic, RelicConfig};
+use crate::metrics::{AdmissionMetrics, Counter, FaultMetrics, Histogram, ServiceEstimator};
+use crate::relic::{FaultKind, FaultPlan, Par, Relic, RelicConfig};
 use crate::runtime::GraphExecutor;
 
 use super::admission::{edf_order, Deadline};
@@ -44,6 +45,18 @@ pub enum RequestResult {
     Native(u64),
     /// Output vector from the PJRT kernel (scores, depths, …).
     Pjrt(Vec<f32>),
+    /// The request did not complete; the typed cause says why (a
+    /// contained kernel panic, a dead shard, a lost response). The
+    /// no-drop invariant still holds: a failed request gets exactly
+    /// one response, like any other.
+    Failed(FaultKind),
+}
+
+impl RequestResult {
+    /// True for any completed (non-failed) result.
+    pub fn is_ok(&self) -> bool {
+        !matches!(self, RequestResult::Failed(_))
+    }
 }
 
 /// Response with latency/backends for reporting.
@@ -77,6 +90,12 @@ pub struct ServiceMetrics {
     /// lock-free by the engine's router. Inert until the engine
     /// configures a non-zero `ema_alpha`.
     pub service_estimator: ServiceEstimator,
+    /// Fault-isolation counters: the coordinator records contained
+    /// kernel panics per shard; the engine records supervisor activity
+    /// (restarts, redirects, quarantine time, degraded requests) into
+    /// its own instance; aggregation merges both. All-zero in a
+    /// healthy run.
+    pub fault: FaultMetrics,
 }
 
 impl ServiceMetrics {
@@ -91,6 +110,7 @@ impl ServiceMetrics {
         self.pjrt_latency.merge_from(&other.pjrt_latency);
         self.admission.merge_from(&other.admission);
         self.service_estimator.merge_from(&other.service_estimator);
+        self.fault.merge_from(&other.fault);
     }
 
     /// Completion accounting for exactly one request: a request
@@ -144,6 +164,10 @@ pub struct Coordinator {
     /// Serve deadline-carrying requests earliest-deadline-first within
     /// each batch (see [`Coordinator::set_edf`]). Off by default.
     edf: bool,
+    /// Deterministic fault injection (`None` = no faults). Consulted
+    /// inside the containment wrapper, so an injected panic exercises
+    /// exactly the path a real kernel panic takes.
+    fault: Option<Arc<FaultPlan>>,
     pub metrics: Arc<ServiceMetrics>,
 }
 
@@ -168,8 +192,15 @@ impl Coordinator {
             executor,
             relic: Relic::with_config(relic),
             edf: false,
+            fault: None,
             metrics,
         }
+    }
+
+    /// Install (or clear) a deterministic fault-injection plan. `None`
+    /// — the default — costs one branch per kernel execution.
+    pub fn set_fault(&mut self, fault: Option<Arc<FaultPlan>>) {
+        self.fault = fault;
     }
 
     /// Enable/disable earliest-deadline-first ordering within each
@@ -265,6 +296,28 @@ impl Coordinator {
         }
 
         // Native requests: pair onto the SMT core through Relic.
+        //
+        // Panic containment: every kernel execution runs inside
+        // `catch_unwind`, *inside* the task closure handed to Relic —
+        // a panicking kernel therefore still completes the pair / scope
+        // protocol normally (the Relic machinery never sees the
+        // unwind), and the poisoned request becomes a typed
+        // `RequestResult::Failed(FaultKind::Panic)` response instead of
+        // killing the shard thread. Fault injection fires inside the
+        // same wrapper, so an injected panic takes exactly the real
+        // panic's path.
+        let plan = self.fault.clone();
+        let contained = |kernel: GraphKernel, graph: &CsrGraph, source: u32| -> Result<u64, ()> {
+            catch_unwind(AssertUnwindSafe(|| {
+                if let Some(p) = plan.as_deref() {
+                    if p.should_panic(kernel.artifact_name()) {
+                        panic!("injected fault: panic on {}", kernel.artifact_name());
+                    }
+                }
+                run_native_kernel(kernel, graph, source)
+            }))
+            .map_err(|_| ())
+        };
         let mut iter = native_queue.into_iter();
         loop {
             match (iter.next(), iter.next()) {
@@ -272,18 +325,16 @@ impl Coordinator {
                     let t0 = Instant::now();
                     let out_a = AtomicU64::new(0);
                     let out_b = AtomicU64::new(0);
-                    let task_b = || {
-                        out_b.store(
-                            run_native_kernel(rb.kernel, &rb.graph, rb.source),
-                            Ordering::Release,
-                        );
+                    let fail_a = AtomicBool::new(false);
+                    let fail_b = AtomicBool::new(false);
+                    let task_b = || match contained(rb.kernel, &rb.graph, rb.source) {
+                        Ok(sum) => out_b.store(sum, Ordering::Release),
+                        Err(()) => fail_b.store(true, Ordering::Release),
                     };
                     self.relic.pair(
-                        || {
-                            out_a.store(
-                                run_native_kernel(ra.kernel, &ra.graph, ra.source),
-                                Ordering::Release,
-                            );
+                        || match contained(ra.kernel, &ra.graph, ra.source) {
+                            Ok(sum) => out_a.store(sum, Ordering::Release),
+                            Err(()) => fail_a.store(true, Ordering::Release),
                         },
                         &task_b,
                     );
@@ -294,53 +345,86 @@ impl Coordinator {
                     // wall-time measurement, but recording it once
                     // would weight a paired request half as much as a
                     // solo one and under-count the histogram — and each
-                    // request's own deadline decides its miss.
-                    self.metrics
-                        .record_completion(ra.kernel, Backend::Native, latency, ra.deadline, done);
-                    self.metrics
-                        .record_completion(rb.kernel, Backend::Native, latency, rb.deadline, done);
-                    if was_promoted(ia) && !ra.deadline.is_past(done) {
-                        self.metrics.admission.deadline_misses_avoided.inc();
+                    // request's own deadline decides its miss. Failed
+                    // requests skip the funnel: their "latency" is not
+                    // a service-time sample and a panic is not a
+                    // deadline miss.
+                    for (idx, req, out, failed) in [
+                        (ia, &ra, &out_a, &fail_a),
+                        (ib, &rb, &out_b, &fail_b),
+                    ] {
+                        let result = if failed.load(Ordering::Acquire) {
+                            self.metrics.fault.panics_caught.inc();
+                            RequestResult::Failed(FaultKind::Panic)
+                        } else {
+                            self.metrics.record_completion(
+                                req.kernel,
+                                Backend::Native,
+                                latency,
+                                req.deadline,
+                                done,
+                            );
+                            if was_promoted(idx) && !req.deadline.is_past(done) {
+                                self.metrics.admission.deadline_misses_avoided.inc();
+                            }
+                            RequestResult::Native(out.load(Ordering::Acquire))
+                        };
+                        responses[idx] = Some(Response {
+                            id: req.id,
+                            backend: Backend::Native,
+                            result,
+                            latency_ns: latency,
+                        });
                     }
-                    if was_promoted(ib) && !rb.deadline.is_past(done) {
-                        self.metrics.admission.deadline_misses_avoided.inc();
-                    }
-                    responses[ia] = Some(Response {
-                        id: ra.id,
-                        backend: Backend::Native,
-                        result: RequestResult::Native(out_a.load(Ordering::Acquire)),
-                        latency_ns: latency,
-                    });
-                    responses[ib] = Some(Response {
-                        id: rb.id,
-                        backend: Backend::Native,
-                        result: RequestResult::Native(out_b.load(Ordering::Acquire)),
-                        latency_ns: latency,
-                    });
                 }
                 (Some((idx, req)), None) => {
                     // Odd leftover: no partner request to pair with, so
                     // parallelize *inside* the request — fork-join the
-                    // kernel's hot loops over the same SMT pair.
+                    // kernel's hot loops over the same SMT pair. The
+                    // scope protocol re-raises an assistant-side panic
+                    // on this thread *after* the chunk protocol
+                    // completes, so catching here leaves the Relic pair
+                    // healthy.
                     let t0 = Instant::now();
-                    let checksum = run_native_kernel_par(
-                        req.kernel,
-                        &req.graph,
-                        req.source,
-                        &Par::Relic(&self.relic),
-                    );
+                    let outcome = catch_unwind(AssertUnwindSafe(|| {
+                        if let Some(p) = plan.as_deref() {
+                            if p.should_panic(req.kernel.artifact_name()) {
+                                panic!("injected fault: panic on {}", req.kernel.artifact_name());
+                            }
+                        }
+                        run_native_kernel_par(
+                            req.kernel,
+                            &req.graph,
+                            req.source,
+                            &Par::Relic(&self.relic),
+                        )
+                    }));
                     let done = Instant::now();
                     let latency = done.duration_since(t0).as_nanos() as u64;
-                    self.metrics.intra_requests.inc();
-                    self.metrics
-                        .record_completion(req.kernel, Backend::Native, latency, req.deadline, done);
-                    if was_promoted(idx) && !req.deadline.is_past(done) {
-                        self.metrics.admission.deadline_misses_avoided.inc();
-                    }
+                    let result = match outcome {
+                        Ok(checksum) => {
+                            self.metrics.intra_requests.inc();
+                            self.metrics.record_completion(
+                                req.kernel,
+                                Backend::Native,
+                                latency,
+                                req.deadline,
+                                done,
+                            );
+                            if was_promoted(idx) && !req.deadline.is_past(done) {
+                                self.metrics.admission.deadline_misses_avoided.inc();
+                            }
+                            RequestResult::Native(checksum)
+                        }
+                        Err(_) => {
+                            self.metrics.fault.panics_caught.inc();
+                            RequestResult::Failed(FaultKind::Panic)
+                        }
+                    };
                     responses[idx] = Some(Response {
                         id: req.id,
                         backend: Backend::Native,
-                        result: RequestResult::Native(checksum),
+                        result,
                         latency_ns: latency,
                     });
                     break;
@@ -560,6 +644,74 @@ mod tests {
         let mut c = native_coordinator();
         assert!(c.process_batch(Vec::new()).is_empty());
         assert_eq!(c.metrics.intra_requests.get(), 0);
+    }
+
+    #[test]
+    fn injected_panic_is_contained_in_the_paired_path() {
+        // 4 requests = 2 relic pairs; the lone TC request (id 1, paired
+        // with id 0) panics — targeting the only TC keeps the trip
+        // deterministic even though pair members run concurrently. The
+        // batch must still answer all 4, the partner's checksum must be
+        // untouched, and the panic is counted — not propagated.
+        let mut c = native_coordinator();
+        c.set_fault(Some(Arc::new(FaultPlan::new().with_panic_on("tc", 1))));
+        let want = run_native_kernel(GraphKernel::Bfs, &paper_graph(), 0);
+        let kernels = [GraphKernel::Bfs, GraphKernel::Tc, GraphKernel::Bfs, GraphKernel::Bfs];
+        let responses = c.process_batch(
+            kernels.iter().enumerate().map(|(i, &k)| req(i as u64, k)).collect(),
+        );
+        assert_eq!(responses.len(), 4);
+        let failed: Vec<u64> = responses
+            .iter()
+            .filter(|r| !r.result.is_ok())
+            .map(|r| r.id)
+            .collect();
+        assert_eq!(failed, vec![1], "exactly the poisoned request failed");
+        assert_eq!(responses[1].result, RequestResult::Failed(FaultKind::Panic));
+        for r in responses.iter().filter(|r| r.result.is_ok()) {
+            assert_eq!(r.result, RequestResult::Native(want), "partners unharmed");
+        }
+        assert_eq!(c.metrics.fault.panics_caught.get(), 1);
+        // Failed requests skip the completion funnel.
+        assert_eq!(c.metrics.native_requests.get(), 3);
+        assert_eq!(c.metrics.native_latency.count(), 3);
+        assert_eq!(c.metrics.relic_pairs.get(), 2);
+        // The pair survives: a follow-up batch works normally.
+        let again = c.process_batch(vec![req(9, GraphKernel::Bfs)]);
+        assert_eq!(again[0].result, RequestResult::Native(want));
+    }
+
+    #[test]
+    fn injected_panic_is_contained_in_the_intra_parallel_path() {
+        // A batch of one forces the odd-leftover fork-join path.
+        let mut c = native_coordinator();
+        c.set_fault(Some(Arc::new(FaultPlan::new().with_panic_on("tc", 1))));
+        let responses = c.process_batch(vec![req(0, GraphKernel::Tc)]);
+        assert_eq!(responses.len(), 1);
+        assert_eq!(responses[0].result, RequestResult::Failed(FaultKind::Panic));
+        assert_eq!(c.metrics.fault.panics_caught.get(), 1);
+        assert_eq!(c.metrics.intra_requests.get(), 0, "failures are not completions");
+        // The relic pair still works for the next request.
+        let want = run_native_kernel(GraphKernel::Tc, &paper_graph(), 0);
+        let again = c.process_batch(vec![req(1, GraphKernel::Tc)]);
+        assert_eq!(again[0].result, RequestResult::Native(want));
+        assert_eq!(c.metrics.intra_requests.get(), 1);
+    }
+
+    #[test]
+    fn no_fault_plan_changes_nothing() {
+        // A coordinator with no plan (and one with an empty plan) is
+        // bit-for-bit the degenerate PR 5 coordinator.
+        let mut plain = native_coordinator();
+        let mut empty = native_coordinator();
+        empty.set_fault(Some(Arc::new(FaultPlan::new())));
+        let a = plain.process_batch((0..5).map(|i| req(i, GraphKernel::Pr)).collect());
+        let b = empty.process_batch((0..5).map(|i| req(i, GraphKernel::Pr)).collect());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.id, &x.result), (y.id, &y.result));
+        }
+        assert!(plain.metrics.fault.is_quiet());
+        assert!(empty.metrics.fault.is_quiet());
     }
 
     #[test]

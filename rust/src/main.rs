@@ -16,7 +16,10 @@
 //!                    --deadline-ms D stamps deadlines, --shed POLICY
 //!                    sheds requests that cannot meet them,
 //!                    --ema-alpha A measures per-shard service times,
-//!                    --edf serves batches earliest-deadline-first)
+//!                    --edf serves batches earliest-deadline-first,
+//!                    --supervisor / --no-supervisor arms the shard
+//!                    watchdog, --fault-* flags inject one scripted
+//!                    failure for recovery drills)
 //! repro pool         pool-scaling sweep: throughput vs shard count,
 //!                    with pool-vs-single-pair checksum verification
 //!                    (--shards 1,2,4 --requests N --reps R)
@@ -28,20 +31,28 @@
 //!                    batch earliest-deadline-first and prints the
 //!                    FIFO-baseline miss column next to EDF's;
 //!                    --ema-alpha A adds the measured-EMA column
+//! repro faults       fault-recovery sweep: one scripted failure per
+//!                    scenario (panic, stall, kill, drop, all-down)
+//!                    against a supervised engine, asserting the
+//!                    no-drop invariant and per-scenario recovery
+//!                    counters (--requests N --shards N)
 //! repro selftest     PJRT artifact round-trip check
 //! ```
 //!
 //! Common options: `--out results` writes figure JSON/text files;
 //! `--iters N` (wallclock); `--artifacts DIR`; `--config FILE` loads
-//! `[pool]`/`[admission]` settings for serve/pool/admission (CLI flags
-//! override); `--no-pin` disables CPU pinning.
+//! `[pool]`/`[admission]`/`[supervisor]`/`[fault]` settings for
+//! serve/pool/admission/faults (CLI flags override); `--no-pin`
+//! disables CPU pinning.
 
 use std::path::Path;
 
 use relic_smt::bench::{self, figures};
 use relic_smt::bench::ablation;
 use relic_smt::cli::Args;
-use relic_smt::config::{AdmissionSettings, PoolSettings, RawConfig, RelicSettings};
+use relic_smt::config::{
+    AdmissionSettings, FaultSettings, PoolSettings, RawConfig, RelicSettings, SupervisorSettings,
+};
 use relic_smt::coordinator::{
     Coordinator, Deadline, Engine, EngineConfig, GraphKernel, Request, Router, RouterConfig,
     ShedPolicy,
@@ -250,16 +261,23 @@ fn run(args: &Args) -> anyhow::Result<()> {
                      sweeps belong to `repro pool`"
                 );
                 let settings = pool_settings(args)?;
-                let mut engine = Engine::new(EngineConfig::from_settings(&settings, &admission));
+                let supervisor = supervisor_settings(args)?;
+                let fault = fault_settings(args)?;
+                let mut engine_cfg =
+                    EngineConfig::from_settings(&settings, &admission, &supervisor);
+                engine_cfg.pool.fault = fault.plan();
+                let mut engine = Engine::new(engine_cfg);
                 println!(
                     "host: {}; engine: {} shards; shed policy {}; deadline {:?}; \
-                     ema alpha {}; edf {}",
+                     ema alpha {}; edf {}; supervisor {}{}",
                     affinity::topology_summary(),
                     engine.shard_count(),
                     admission.shed,
                     deadline,
                     admission.ema_alpha,
                     if admission.edf { "on" } else { "off" },
+                    if engine.supervisor_enabled() { "on" } else { "off" },
+                    if fault.is_empty() { "" } else { "; fault injection armed" },
                 );
                 let t0 = std::time::Instant::now();
                 let offered = requests.len();
@@ -301,7 +319,11 @@ fn run(args: &Args) -> anyhow::Result<()> {
             let requests = args.get_u64("requests", 96) as usize;
             let reps = args.get_u64("reps", 3);
             println!("host: {}", affinity::topology_summary());
-            let template = EngineConfig::from_settings(&settings, &admission_settings(args)?);
+            let template = EngineConfig::from_settings(
+                &settings,
+                &admission_settings(args)?,
+                &supervisor_settings(args)?,
+            );
             println!(
                 "pool-scaling sweep: shard counts {shard_counts:?}, \
                  {requests} requests, {reps} reps\n"
@@ -313,10 +335,11 @@ fn run(args: &Args) -> anyhow::Result<()> {
         Some("admission") => {
             let settings = pool_settings(args)?;
             let admission = admission_settings(args)?;
+            let supervisor = supervisor_settings(args)?;
             let offered = args.sweep_list("offered", &[16, 64, 256])?;
             let reps = args.get_u64("reps", 3);
             println!("host: {}", affinity::topology_summary());
-            let template = EngineConfig::from_settings(&settings, &admission);
+            let template = EngineConfig::from_settings(&settings, &admission, &supervisor);
             println!(
                 "admission sweep: offered loads {offered:?}, {reps} reps, shed policy {}, \
                  deadline {:?}, ema alpha {}, edf {}, {} shard(s)\n",
@@ -332,6 +355,25 @@ fn run(args: &Args) -> anyhow::Result<()> {
             let rows = figures::admission_sweep(&template, &offered, admission.deadline(), reps);
             println!("{}", figures::render_admission(&rows));
             write_out(args, "admission.json", &figures::admission_rows_to_json(&rows))?;
+        }
+        Some("faults") => {
+            let settings = pool_settings(args)?;
+            let admission = admission_settings(args)?;
+            let supervisor = supervisor_settings(args)?;
+            let requests = args.get_u64("requests", 48) as usize;
+            println!("host: {}", affinity::topology_summary());
+            let template = EngineConfig::from_settings(&settings, &admission, &supervisor);
+            println!(
+                "fault-recovery sweep: {requests} requests per scenario, {} shard(s), \
+                 supervisor forced on\n",
+                settings
+                    .shard_count_hint()
+                    .map(|n| n.to_string())
+                    .unwrap_or_else(|| "auto".into()),
+            );
+            let rows = figures::fault_sweep(&template, requests);
+            println!("{}", figures::render_faults(&rows));
+            write_out(args, "faults.json", &figures::fault_rows_to_json(&rows))?;
         }
         Some("selftest") => {
             let artifacts = args.get("artifacts").unwrap_or("artifacts");
@@ -363,7 +405,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         _ => {
             println!(
                 "usage: repro <fig1|fig3|fig4|granularity|ablation|wallclock|intra\
-                 |serve|pool|admission|selftest> [--options]"
+                 |serve|pool|admission|faults|selftest> [--options]"
             );
             println!("see rust/src/main.rs docs for details");
         }
@@ -417,8 +459,9 @@ fn admission_settings(args: &Args) -> anyhow::Result<AdmissionSettings> {
 
 /// `[pool]` settings: config file first (`--config PATH`), then CLI
 /// overrides (`--shards N`, `--no-pin`, `--channel-capacity N`,
-/// `--max-batch N`). A `--shards` value that is not a single integer
-/// (the `pool` command's sweep list) leaves the file/default value.
+/// `--max-batch N`, `--park-timeout-ms N`). A `--shards` value that is
+/// not a single integer (the `pool` command's sweep list) leaves the
+/// file/default value.
 fn pool_settings(args: &Args) -> anyhow::Result<PoolSettings> {
     let mut s = match args.get("config") {
         Some(path) => PoolSettings::from_raw(&RawConfig::load(Path::new(path))?),
@@ -433,6 +476,62 @@ fn pool_settings(args: &Args) -> anyhow::Result<PoolSettings> {
     s.channel_capacity =
         args.get_u64("channel-capacity", s.channel_capacity as u64).max(1) as usize;
     s.max_batch = args.get_u64("max-batch", s.max_batch as u64).max(1) as usize;
+    s.park_timeout_ms = args.get_u64("park-timeout-ms", s.park_timeout_ms).max(1);
+    Ok(s)
+}
+
+/// `[supervisor]` settings: config file first (`--config PATH`), then
+/// CLI overrides (`--supervisor` / `--no-supervisor` — the flag pair
+/// lets the CLI A/B against a config file that disables the watchdog —
+/// `--stuck-after-ms N`, `--max-restarts N`, `--backoff-ms N`).
+fn supervisor_settings(args: &Args) -> anyhow::Result<SupervisorSettings> {
+    let mut s = match args.get("config") {
+        Some(path) => SupervisorSettings::from_raw(&RawConfig::load(Path::new(path))?),
+        None => SupervisorSettings::default(),
+    };
+    if args.flag("supervisor") {
+        s.enabled = true;
+    }
+    if args.flag("no-supervisor") {
+        s.enabled = false;
+    }
+    s.stuck_after_ms = args.get_u64("stuck-after-ms", s.stuck_after_ms).max(1);
+    s.max_restarts = args.get_u64("max-restarts", s.max_restarts as u64) as u32;
+    s.backoff_ms = args.get_u64("backoff-ms", s.backoff_ms);
+    Ok(s)
+}
+
+/// `[fault]` settings: config file first (`--config PATH`), then the
+/// CLI injection flags (`--fault-panic-kernel K --fault-panic-nth N`,
+/// `--fault-stall-shard S --fault-stall-ms D`, `--fault-drop-shard S`,
+/// `--fault-kill-shard S`, each shard flag with its own `-nth`).
+/// Everything defaults to off; `serve` arms the resulting plan only
+/// when at least one injection is configured.
+fn fault_settings(args: &Args) -> anyhow::Result<FaultSettings> {
+    let mut s = match args.get("config") {
+        Some(path) => FaultSettings::from_raw(&RawConfig::load(Path::new(path))?),
+        None => FaultSettings::default(),
+    };
+    if let Some(kernel) = args.get("fault-panic-kernel") {
+        s.panic_kernel = kernel.to_string();
+    }
+    s.panic_nth = args.get_u64("fault-panic-nth", s.panic_nth).max(1);
+    let shard_flag = |name: &str, current: i64| -> anyhow::Result<i64> {
+        match args.get(name) {
+            Some(v) => v
+                .parse::<i64>()
+                .map(|n| n.max(-1))
+                .map_err(|_| anyhow::anyhow!("--{name} takes a shard index (got {v:?})")),
+            None => Ok(current),
+        }
+    };
+    s.stall_shard = shard_flag("fault-stall-shard", s.stall_shard)?;
+    s.stall_nth = args.get_u64("fault-stall-nth", s.stall_nth).max(1);
+    s.stall_ms = args.get_u64("fault-stall-ms", s.stall_ms);
+    s.drop_shard = shard_flag("fault-drop-shard", s.drop_shard)?;
+    s.drop_nth = args.get_u64("fault-drop-nth", s.drop_nth).max(1);
+    s.kill_shard = shard_flag("fault-kill-shard", s.kill_shard)?;
+    s.kill_nth = args.get_u64("fault-kill-nth", s.kill_nth).max(1);
     Ok(s)
 }
 

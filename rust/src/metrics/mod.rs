@@ -401,6 +401,77 @@ impl AdmissionMetrics {
     }
 }
 
+/// Fault-isolation counters: everything the containment, supervision,
+/// and degradation layers did. Panics-caught is shard-side (recorded by
+/// the coordinator's containment wrapper); the rest is engine-side
+/// (recorded when the supervisor's verdicts are applied) —
+/// [`FaultMetrics::merge_from`] folds both into one service view. In a
+/// healthy run every counter is zero and [`FaultMetrics::is_quiet`]
+/// keeps reports free of fault noise.
+#[derive(Debug, Default)]
+pub struct FaultMetrics {
+    /// Kernel panics caught and converted into typed failure responses.
+    pub panics_caught: Counter,
+    /// Dead shard threads respawned by the supervisor.
+    pub shard_restarts: Counter,
+    /// Queued-but-unprocessed requests stolen off quarantined shards
+    /// and re-routed to healthy ones.
+    pub redirected_requests: Counter,
+    /// Watchdog classifications that put a shard into quarantine.
+    pub watchdog_trips: Counter,
+    /// Requests executed inline (serial) because no healthy shard was
+    /// available.
+    pub degraded_requests: Counter,
+    /// Responses synthesized because the original never arrived.
+    pub responses_lost: Counter,
+    /// Time shards spent quarantined before release (ns).
+    pub quarantine_ns: Histogram,
+}
+
+impl FaultMetrics {
+    /// Fold another instance into this one (same merge semantics as
+    /// [`Histogram::merge_from`]).
+    pub fn merge_from(&self, other: &FaultMetrics) {
+        self.panics_caught.add(other.panics_caught.get());
+        self.shard_restarts.add(other.shard_restarts.get());
+        self.redirected_requests.add(other.redirected_requests.get());
+        self.watchdog_trips.add(other.watchdog_trips.get());
+        self.degraded_requests.add(other.degraded_requests.get());
+        self.responses_lost.add(other.responses_lost.get());
+        self.quarantine_ns.merge_from(&other.quarantine_ns);
+    }
+
+    /// True when nothing fault-related happened (the healthy-run
+    /// degenerate case) — reports stay silent then.
+    pub fn is_quiet(&self) -> bool {
+        self.panics_caught.get() == 0
+            && self.shard_restarts.get() == 0
+            && self.redirected_requests.get() == 0
+            && self.watchdog_trips.get() == 0
+            && self.degraded_requests.get() == 0
+            && self.responses_lost.get() == 0
+            && self.quarantine_ns.count() == 0
+    }
+
+    /// One-line report of the recovery activity.
+    pub fn summary(&self) -> String {
+        let mut out = format!(
+            "panics-caught={} restarts={} redirected={} watchdog-trips={} \
+             degraded={} responses-lost={}",
+            self.panics_caught.get(),
+            self.shard_restarts.get(),
+            self.redirected_requests.get(),
+            self.watchdog_trips.get(),
+            self.degraded_requests.get(),
+            self.responses_lost.get(),
+        );
+        if self.quarantine_ns.count() > 0 {
+            out += &format!("; quarantine {}", self.quarantine_ns.summary("ns"));
+        }
+        out
+    }
+}
+
 /// Wall-clock stopwatch recording into a [`Histogram`] on drop.
 pub struct Timer<'a> {
     hist: &'a Histogram,
@@ -588,6 +659,36 @@ mod tests {
         assert!(s.contains("misses-avoided=1"), "{s}");
         // Without reorders the summary stays quiet about EDF.
         assert!(!AdmissionMetrics::default().summary().contains("edf"), "quiet by default");
+    }
+
+    #[test]
+    fn fault_metrics_merge_quietness_and_summary() {
+        let quiet = FaultMetrics::default();
+        assert!(quiet.is_quiet());
+        let a = FaultMetrics::default();
+        a.panics_caught.add(2);
+        a.shard_restarts.inc();
+        a.quarantine_ns.record(5_000);
+        let b = FaultMetrics::default();
+        b.redirected_requests.add(4);
+        b.watchdog_trips.inc();
+        b.degraded_requests.add(3);
+        b.responses_lost.inc();
+        let agg = FaultMetrics::default();
+        agg.merge_from(&a);
+        agg.merge_from(&b);
+        assert!(!agg.is_quiet());
+        assert_eq!(agg.panics_caught.get(), 2);
+        assert_eq!(agg.shard_restarts.get(), 1);
+        assert_eq!(agg.redirected_requests.get(), 4);
+        assert_eq!(agg.watchdog_trips.get(), 1);
+        assert_eq!(agg.degraded_requests.get(), 3);
+        assert_eq!(agg.responses_lost.get(), 1);
+        assert_eq!(agg.quarantine_ns.count(), 1);
+        let s = agg.summary();
+        assert!(s.contains("panics-caught=2"), "{s}");
+        assert!(s.contains("restarts=1"), "{s}");
+        assert!(s.contains("quarantine "), "{s}");
     }
 
     #[test]

@@ -1,0 +1,217 @@
+//! **Deterministic fault injection** — the chaos hooks behind the
+//! engine's fault-isolation layer.
+//!
+//! A [`FaultPlan`] is a small, config-driven script of failures to
+//! inject into an otherwise healthy pool: *panic on the nth request of
+//! a kernel* (exercises panic containment in the coordinator), *stall
+//! the nth batch of a shard* (exercises the watchdog's `Stuck`
+//! classification and queue redirect), *drop the nth response of a
+//! shard* (exercises the engine's lost-response sweeper), and *kill a
+//! shard's thread on its nth batch* (exercises supervised respawn).
+//!
+//! The plan is compiled in but **default-off and zero-cost when
+//! disabled**: every hook lives behind an `Option<Arc<FaultPlan>>`
+//! that is `None` in production paths, so the disabled cost is one
+//! branch per batch. Each injection point is a one-shot `nth` counter
+//! (fire exactly when the counter reaches its target), which keeps
+//! chaos tests and the `repro faults` sweep deterministic: the same
+//! plan against the same request stream trips at the same points.
+//!
+//! Nothing in this module executes faults by itself — the pool's shard
+//! loop, the engine's batch handler, and the coordinator's kernel
+//! paths each consult the plan at their own seam (see
+//! `ARCHITECTURE.md` §Failure domains & recovery for the map).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Why a request failed instead of completing — the typed cause
+/// carried by `RequestResult::Failed`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The kernel panicked; the panic was caught and contained.
+    Panic,
+    /// The shard thread died while the request was in flight.
+    ShardDead,
+    /// The request was executed but its response never arrived
+    /// (detected by the engine's idle sweeper).
+    ResponseLost,
+}
+
+impl FaultKind {
+    /// Stable lower-case name for reports and JSON artifacts.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Panic => "panic",
+            FaultKind::ShardDead => "shard-dead",
+            FaultKind::ResponseLost => "response-lost",
+        }
+    }
+}
+
+/// One-shot occurrence counter: `fire` returns `true` exactly once,
+/// when the `target`-th observation arrives (1-based).
+#[derive(Debug)]
+struct Nth {
+    target: u64,
+    seen: AtomicU64,
+}
+
+impl Nth {
+    fn new(target: u64) -> Self {
+        Nth { target: target.max(1), seen: AtomicU64::new(0) }
+    }
+
+    fn fire(&self) -> bool {
+        self.seen.fetch_add(1, Ordering::AcqRel) + 1 == self.target
+    }
+}
+
+/// A shard-scoped one-shot trigger.
+#[derive(Debug)]
+struct ShardNth {
+    shard: usize,
+    nth: Nth,
+}
+
+impl ShardNth {
+    fn fire(&self, shard: usize) -> bool {
+        shard == self.shard && self.nth.fire()
+    }
+}
+
+/// A deterministic script of failures to inject. Build with the
+/// `with_*` constructors; all injections default to off.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    /// Panic inside kernel execution on the nth request of a kernel
+    /// (matched by `GraphKernel::artifact_name`).
+    panic_on: Option<(String, Nth)>,
+    /// Sleep the shard thread for a duration before its nth batch.
+    stall: Option<(ShardNth, Duration)>,
+    /// Suppress the shard's nth response send.
+    drop_response: Option<ShardNth>,
+    /// Exit the shard thread before its nth batch (the batch is
+    /// requeued, so no item is lost — only the thread).
+    kill: Option<ShardNth>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no faults). Prefer `Option::None` over an empty
+    /// plan on hot paths.
+    pub fn new() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Panic on the `nth` (1-based) request of `kernel` (artifact
+    /// name, e.g. `"bfs"`).
+    pub fn with_panic_on(mut self, kernel: &str, nth: u64) -> Self {
+        self.panic_on = Some((kernel.to_string(), Nth::new(nth)));
+        self
+    }
+
+    /// Stall shard `shard` for `duration` before its `nth` batch.
+    pub fn with_stall(mut self, shard: usize, nth: u64, duration: Duration) -> Self {
+        self.stall = Some((ShardNth { shard, nth: Nth::new(nth) }, duration));
+        self
+    }
+
+    /// Drop the `nth` response sent by shard `shard`.
+    pub fn with_drop_response(mut self, shard: usize, nth: u64) -> Self {
+        self.drop_response = Some(ShardNth { shard, nth: Nth::new(nth) });
+        self
+    }
+
+    /// Kill shard `shard`'s thread before its `nth` batch.
+    pub fn with_kill(mut self, shard: usize, nth: u64) -> Self {
+        self.kill = Some(ShardNth { shard, nth: Nth::new(nth) });
+        self
+    }
+
+    /// True when the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.panic_on.is_none()
+            && self.stall.is_none()
+            && self.drop_response.is_none()
+            && self.kill.is_none()
+    }
+
+    /// Coordinator hook: should this request of `kernel` panic?
+    pub fn should_panic(&self, kernel: &str) -> bool {
+        match &self.panic_on {
+            Some((name, nth)) if name == kernel => nth.fire(),
+            _ => false,
+        }
+    }
+
+    /// Shard-loop hook: how long (if at all) should this batch stall?
+    pub fn stall_duration(&self, shard: usize) -> Option<Duration> {
+        match &self.stall {
+            Some((target, dur)) if target.fire(shard) => Some(*dur),
+            _ => None,
+        }
+    }
+
+    /// Engine-handler hook: should this response be suppressed?
+    pub fn should_drop_response(&self, shard: usize) -> bool {
+        matches!(&self.drop_response, Some(target) if target.fire(shard))
+    }
+
+    /// Shard-loop hook: should the thread exit before this batch?
+    pub fn should_kill(&self, shard: usize) -> bool {
+        matches!(&self.kill, Some(target) if target.fire(shard))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_injects_nothing() {
+        let plan = FaultPlan::new();
+        assert!(plan.is_empty());
+        for _ in 0..8 {
+            assert!(!plan.should_panic("bfs"));
+            assert!(plan.stall_duration(0).is_none());
+            assert!(!plan.should_drop_response(0));
+            assert!(!plan.should_kill(0));
+        }
+    }
+
+    #[test]
+    fn panic_fires_exactly_once_on_the_nth_matching_request() {
+        let plan = FaultPlan::new().with_panic_on("bfs", 3);
+        assert!(!plan.is_empty());
+        // Non-matching kernels never consume the counter.
+        assert!(!plan.should_panic("pagerank"));
+        assert!(!plan.should_panic("bfs")); // 1st
+        assert!(!plan.should_panic("bfs")); // 2nd
+        assert!(plan.should_panic("bfs")); // 3rd: fire
+        assert!(!plan.should_panic("bfs")); // one-shot
+    }
+
+    #[test]
+    fn shard_faults_fire_once_on_their_shard_only() {
+        let plan = FaultPlan::new()
+            .with_stall(1, 2, Duration::from_millis(5))
+            .with_drop_response(0, 1)
+            .with_kill(2, 1);
+        assert!(plan.stall_duration(0).is_none()); // wrong shard
+        assert!(plan.stall_duration(1).is_none()); // 1st batch
+        assert_eq!(plan.stall_duration(1), Some(Duration::from_millis(5)));
+        assert!(plan.stall_duration(1).is_none()); // one-shot
+        assert!(plan.should_drop_response(0));
+        assert!(!plan.should_drop_response(0));
+        assert!(!plan.should_kill(0));
+        assert!(plan.should_kill(2));
+        assert!(!plan.should_kill(2));
+    }
+
+    #[test]
+    fn nth_zero_clamps_to_first() {
+        let plan = FaultPlan::new().with_panic_on("tc", 0);
+        assert!(plan.should_panic("tc"));
+        assert!(!plan.should_panic("tc"));
+    }
+}

@@ -28,11 +28,16 @@
 //! Beyond one core, [`pool`] replicates the paper's pair as the unit of
 //! scheduling: a [`RelicPool`] spawns one pinned shard per physical
 //! core (each shard's main thread owning its own [`Relic`]), with
-//! bounded per-shard admission channels, least-loaded routing, and
+//! bounded per-shard admission queues, least-loaded routing, and
 //! three admission flavors — blocking backpressure, non-blocking
 //! `try_submit_to`, and `submit_or_park_to` (the producer sleeps on the
 //! shard's drain signal until its consumer frees capacity) — multi-core
-//! scaling without ever widening the SPSC queue to MPMC.
+//! scaling without ever widening the SPSC queue to MPMC. A
+//! [`pool::Supervisor`] watchdog plus the deterministic [`fault`]
+//! injection hooks make each shard a *failure domain*: panics are
+//! contained, stuck or dead shards are quarantined and respawned, and
+//! their queued work is redirected (see `ARCHITECTURE.md` §Failure
+//! domains & recovery).
 //!
 //! ```
 //! use relic_smt::relic::Relic;
@@ -56,6 +61,7 @@
 //! ```
 
 pub mod affinity;
+pub mod fault;
 mod framework;
 pub mod parallel;
 pub mod pool;
@@ -63,12 +69,16 @@ pub mod scope;
 mod spsc;
 pub mod wait;
 
+pub use fault::{FaultKind, FaultPlan};
 pub use framework::{
     QueueFull, Relic, RelicConfig, RelicStats, DEFAULT_QUEUE_CAPACITY, MAX_BATCH_BLOCK,
     MIN_BATCH_BLOCK,
 };
 pub use parallel::{Par, Schedule, DEFAULT_GRAIN};
-pub use pool::{PoolConfig, PoolSnapshot, RelicPool, ShardPlacement};
+pub use pool::{
+    PoolConfig, PoolSnapshot, RelicPool, ShardDead, ShardHealth, ShardPlacement, Supervisor,
+    SupervisorConfig, SupervisorVerdict,
+};
 pub use scope::{dyn_chunk_count, Scope, MAX_ASSIST_CHUNKS, MAX_CHUNK_SLOTS, MAX_DYN_CHUNKS};
 pub use spsc::SpscQueue;
 pub use wait::WaitPolicy;

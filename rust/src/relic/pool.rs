@@ -22,27 +22,28 @@
 //!   created on, and only ever submitted to from, its shard thread, so
 //!   the single-producer invariant holds *by construction*;
 //! * an **admission layer**: items are dispatched to shards over
-//!   per-shard bounded channels with least-loaded routing, through
-//!   three flavors sharing the same counters and ordering guarantees:
-//!   [`RelicPool::submit_to`] blocks on the full channel (backpressure
-//!   — counted, never dropped, never reordered within a shard),
-//!   [`RelicPool::try_submit_to`] returns the item on a full channel
-//!   instead of waiting, and [`RelicPool::submit_or_park_to`] parks the
-//!   producer on the shard's **drain signal** — a condvar the shard's
-//!   consumer notifies every time it frees channel capacity — so a
-//!   stalled producer sleeps until woken instead of spinning on
-//!   `try_send`.
-//!
-//!   The waker protocol is lost-wakeup-free by construction: the
-//!   producer re-checks `try_send` *while holding the signal lock*
-//!   before every wait, and the consumer can only notify under that
-//!   same lock, so capacity freed between the producer's failed check
-//!   and its wait still produces a wakeup. A full channel
-//!   also implies the consumer has items to drain, so the notify that
-//!   releases the producer is always coming — and a parked producer
-//!   still times out periodically to detect a dead (panicked) shard
-//!   rather than waiting forever;
-//! * a shard's inner loop drains its channel into small batches, so a
+//!   per-shard bounded [`ShardQueue`]s with least-loaded routing,
+//!   through three flavors sharing the same counters and ordering
+//!   guarantees: [`RelicPool::submit_to`] blocks on the full queue
+//!   (backpressure — counted, never dropped, never reordered within a
+//!   shard), [`RelicPool::try_submit_to`] returns the item on a full
+//!   queue instead of waiting, and [`RelicPool::submit_or_park_to`]
+//!   parks the producer on the queue's `not_full` condvar until the
+//!   shard's consumer frees capacity. A parked producer still times out
+//!   every [`PoolConfig::park_timeout`] to check for a dead shard — and
+//!   reports [`ShardDead`] (handing the item back for re-routing)
+//!   instead of waiting forever or panicking;
+//! * a **fault-isolation layer**: the queue is a `Mutex<VecDeque>`
+//!   rather than a channel precisely so it *outlives the shard thread*.
+//!   A panicked handler is caught (the thread survives), a dead thread
+//!   leaves its queued items stealable, and a [`Supervisor`] watchdog
+//!   classifies shards [`ShardHealth::Healthy`]/`Stuck`/`Dead` from
+//!   per-shard heartbeats, quarantines misbehaving shards, steals their
+//!   queued-but-unprocessed items for redirection (at-most-once by
+//!   queue mutual exclusion: an item is either popped by the consumer
+//!   or stolen, never both), and respawns dead shards onto the *same*
+//!   queue up to a restart budget with exponential backoff;
+//! * a shard's inner loop drains its queue into small batches, so a
 //!   batch handler built on `Coordinator::process_batch` still gets to
 //!   pair requests two-at-a-time and run the odd leftover with
 //!   intra-request fork-join — the paper's fine-grained scenario is
@@ -53,21 +54,27 @@
 //! [`crate::coordinator::Engine`] instantiates it with
 //! `I = sequenced Request`, `S = Coordinator`.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::metrics::Counter;
 
 use super::affinity::{num_cpus, parse_cpulist, pin_to_cpu, sibling_lists};
+use super::fault::FaultPlan;
 
-/// Default bound of each shard's admission channel.
+/// Default bound of each shard's admission queue.
 pub const DEFAULT_CHANNEL_CAPACITY: usize = 64;
 
 /// Default maximum items a shard's inner loop hands its batch handler.
 pub const DEFAULT_MAX_BATCH: usize = 32;
+
+/// Default interval at which a parked producer wakes to check for a
+/// dead shard (overridable via [`PoolConfig::park_timeout`]).
+pub const DEFAULT_PARK_TIMEOUT: Duration = Duration::from_millis(50);
 
 /// Pool sizing and placement knobs.
 #[derive(Debug, Clone)]
@@ -77,10 +84,17 @@ pub struct PoolConfig {
     /// Pin shard main threads (and their Relic assistants) to sibling
     /// pairs. Disable on hosts where affinity calls are denied.
     pub pin: bool,
-    /// Per-shard bounded channel depth (admission backpressure point).
+    /// Per-shard bounded queue depth (admission backpressure point).
     pub channel_capacity: usize,
     /// Maximum items per batch handed to the shard's inner loop.
     pub max_batch: usize,
+    /// How long a parked producer sleeps between dead-shard checks.
+    /// Pure liveness insurance: the normal wakeup is the consumer's
+    /// notify.
+    pub park_timeout: Duration,
+    /// Deterministic fault-injection plan (`None` = no faults; the
+    /// disabled cost is one branch per batch).
+    pub fault: Option<Arc<FaultPlan>>,
 }
 
 impl Default for PoolConfig {
@@ -90,6 +104,8 @@ impl Default for PoolConfig {
             pin: true,
             channel_capacity: DEFAULT_CHANNEL_CAPACITY,
             max_batch: DEFAULT_MAX_BATCH,
+            park_timeout: DEFAULT_PARK_TIMEOUT,
+            fault: None,
         }
     }
 }
@@ -169,36 +185,187 @@ pub fn discover_placements(want: Option<usize>, pin: bool) -> Vec<ShardPlacement
 pub struct PoolStats {
     /// Items routed to a shard.
     pub dispatched: Counter,
-    /// Submissions that found the chosen shard's channel full and had
+    /// Submissions that found the chosen shard's queue full and had
     /// to block (backpressure events; the item is still delivered).
     pub backpressure_stalls: Counter,
-    /// Submissions that found the channel full and parked on the
-    /// shard's drain signal (the item is still delivered).
+    /// Submissions that found the queue full and parked on the
+    /// shard's `not_full` condvar (the item is still delivered unless
+    /// the shard dies, which is reported, not dropped).
     pub parked_submits: Counter,
 }
 
-/// How long a parked producer sleeps between dead-shard checks. Pure
-/// liveness insurance: the normal wakeup is the consumer's notify.
-const PARK_CHECK_INTERVAL: Duration = Duration::from_millis(50);
-
-/// The consumer-to-producer wakeup slot of one shard: a condvar parked
-/// producers wait on. The mutex guards no data — it exists to order
-/// the producer's full-channel check against the consumer's notify
-/// (the classic lost-wakeup-free Mutex+Condvar shape; producers re-run
-/// `try_send` under the lock before every wait).
-#[derive(Debug, Default)]
-struct DrainSignal {
-    lock: Mutex<()>,
-    drained: Condvar,
+/// A parked submission failed because the shard's thread exited; the
+/// item is handed back untouched so the caller can re-route it.
+#[derive(Debug)]
+pub struct ShardDead<I> {
+    /// The shard whose thread died.
+    pub shard: usize,
+    /// The undelivered item.
+    pub item: I,
 }
 
-impl DrainSignal {
-    /// Consumer side: capacity was freed — wake every parked producer.
-    /// Taking the lock first is what closes the lost-wakeup window
-    /// (see the module docs).
-    fn notify(&self) {
-        let _guard = self.lock.lock().expect("drain signal poisoned");
-        self.drained.notify_all();
+/// The bounded, stealable admission queue of one shard.
+///
+/// Deliberately a `Mutex<VecDeque>` + two condvars instead of a
+/// channel: a channel's receiver dies with its thread (destroying
+/// queued items), while this queue is owned by the *pool*, outlives
+/// any particular shard thread, and supports the supervisor's
+/// `steal_all` with at-most-once semantics by plain mutual exclusion.
+/// Admission is not the hot path (kernel execution is), so the lock
+/// never shows up in profiles — the SPSC fast path inside each shard's
+/// Relic pair is untouched.
+#[derive(Debug)]
+struct ShardQueue<I> {
+    capacity: usize,
+    inner: Mutex<QueueInner<I>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+#[derive(Debug)]
+struct QueueInner<I> {
+    items: VecDeque<I>,
+    closed: bool,
+}
+
+impl<I> ShardQueue<I> {
+    fn new(capacity: usize) -> Self {
+        ShardQueue {
+            capacity,
+            inner: Mutex::new(QueueInner {
+                items: VecDeque::with_capacity(capacity),
+                closed: false,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        }
+    }
+
+    /// Enqueue without blocking; a full (or closed) queue hands the
+    /// item back unchanged.
+    fn try_push(&self, item: I) -> Result<(), I> {
+        let mut inner = self.inner.lock().expect("shard queue poisoned");
+        if inner.closed || inner.items.len() >= self.capacity {
+            return Err(item);
+        }
+        inner.items.push_back(item);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Enqueue, waiting for capacity. Returns the item only if the
+    /// queue is closed while waiting.
+    fn push_blocking(&self, item: I) -> Result<(), I> {
+        let mut inner = self.inner.lock().expect("shard queue poisoned");
+        while inner.items.len() >= self.capacity {
+            if inner.closed {
+                return Err(item);
+            }
+            inner = self.not_full.wait(inner).expect("shard queue poisoned");
+        }
+        if inner.closed {
+            return Err(item);
+        }
+        inner.items.push_back(item);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Enqueue, parking until capacity frees. Wakes every `timeout` to
+    /// run `give_up` (the dead-shard check); when it returns true the
+    /// item is handed back instead of waiting forever. Lost-wakeup-free
+    /// by construction: the full check and the wait share one mutex
+    /// with the consumer's notify.
+    fn push_parked<F: Fn() -> bool>(
+        &self,
+        item: I,
+        timeout: Duration,
+        give_up: F,
+    ) -> Result<(), I> {
+        let mut inner = self.inner.lock().expect("shard queue poisoned");
+        loop {
+            if inner.closed {
+                return Err(item);
+            }
+            if inner.items.len() < self.capacity {
+                inner.items.push_back(item);
+                drop(inner);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            let (guard, wait) = self
+                .not_full
+                .wait_timeout(inner, timeout)
+                .expect("shard queue poisoned");
+            inner = guard;
+            if wait.timed_out() && give_up() {
+                return Err(item);
+            }
+        }
+    }
+
+    /// Consumer side: block for the first item, then drain up to `max`
+    /// without waiting. Returns false when the queue is closed and
+    /// empty (the shard loop's exit condition). Every pop frees
+    /// capacity, so parked producers are notified *before* the handler
+    /// runs — admission refills the queue while the batch is processed.
+    fn pop_batch(&self, max: usize, out: &mut Vec<I>) -> bool {
+        let mut inner = self.inner.lock().expect("shard queue poisoned");
+        loop {
+            if !inner.items.is_empty() {
+                while out.len() < max {
+                    match inner.items.pop_front() {
+                        Some(item) => out.push(item),
+                        None => break,
+                    }
+                }
+                drop(inner);
+                self.not_full.notify_all();
+                return true;
+            }
+            if inner.closed {
+                return false;
+            }
+            inner = self.not_empty.wait(inner).expect("shard queue poisoned");
+        }
+    }
+
+    /// Put a popped batch back at the *front* of the queue, preserving
+    /// FIFO order (used by the kill fault so a dying thread loses no
+    /// items).
+    fn requeue_front(&self, items: Vec<I>) {
+        let mut inner = self.inner.lock().expect("shard queue poisoned");
+        for item in items.into_iter().rev() {
+            inner.items.push_front(item);
+        }
+        drop(inner);
+        self.not_empty.notify_one();
+    }
+
+    /// Supervisor side: take every queued-but-unprocessed item. Mutual
+    /// exclusion with `pop_batch` makes redirection at-most-once: an
+    /// item is either popped by the consumer or stolen here, never
+    /// both.
+    fn steal_all(&self) -> Vec<I> {
+        let mut inner = self.inner.lock().expect("shard queue poisoned");
+        let items: Vec<I> = inner.items.drain(..).collect();
+        drop(inner);
+        if !items.is_empty() {
+            self.not_full.notify_all();
+        }
+        items
+    }
+
+    /// Close the queue: producers get their items back, consumers
+    /// drain what remains and exit.
+    fn close(&self) {
+        let mut inner = self.inner.lock().expect("shard queue poisoned");
+        inner.closed = true;
+        drop(inner);
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
     }
 }
 
@@ -215,27 +382,43 @@ pub struct PoolSnapshot {
     pub in_flight: Vec<usize>,
 }
 
-/// Per-shard bookkeeping kept on the admission side.
-struct ShardInfo {
+/// Per-shard bookkeeping kept on the admission side. The queue, the
+/// counters, and the respawn closure all outlive the shard *thread*,
+/// which is the whole point: a dead thread is a replaceable part.
+struct Shard<I: Send + 'static> {
     placement: ShardPlacement,
+    queue: Arc<ShardQueue<I>>,
     /// Items queued or being processed (incremented at submit,
     /// decremented by the shard after each batch) — the least-loaded
     /// routing signal.
     depth: Arc<AtomicUsize>,
     /// Items the shard has finished.
     completed: Arc<Counter>,
-    /// Wakes producers parked on this shard's full channel.
-    signal: Arc<DrainSignal>,
+    /// Bumped by the shard loop once per batch — the supervisor's
+    /// liveness signal.
+    heartbeat: Arc<AtomicU64>,
+    /// Handler panics caught at the thread level (the engine's own
+    /// containment normally fires first; this is the backstop).
+    handler_panics: Arc<Counter>,
+    /// Quarantined shards are skipped by routing until the supervisor
+    /// clears them.
+    quarantined: AtomicBool,
+    /// The current thread, if any (`None` transiently during respawn).
+    handle: Mutex<Option<JoinHandle<()>>>,
+    /// Spawns a fresh thread on the same queue (factory/handler
+    /// clones live in here; `Mutex` because they need not be `Sync`).
+    respawn: Mutex<Box<dyn FnMut() -> JoinHandle<()> + Send>>,
+    /// Times this shard has been respawned.
+    restarts: AtomicU32,
 }
 
 /// A pool of pair-shards processing items of type `I`.
 pub struct RelicPool<I: Send + 'static> {
-    senders: Vec<SyncSender<I>>,
-    shards: Vec<ShardInfo>,
-    joins: Vec<JoinHandle<()>>,
+    shards: Vec<Shard<I>>,
     stats: PoolStats,
-    /// Per-shard admission-channel bound (for load-factor reporting).
+    /// Per-shard admission-queue bound (for load-factor reporting).
     channel_capacity: usize,
+    park_timeout: Duration,
 }
 
 impl<I: Send + 'static> RelicPool<I> {
@@ -271,41 +454,60 @@ impl<I: Send + 'static> RelicPool<I> {
         assert!(!placements.is_empty(), "RelicPool needs at least one shard");
         let max_batch = config.max_batch.max(1);
         let capacity = config.channel_capacity.max(1);
-        let mut senders = Vec::with_capacity(placements.len());
         let mut shards = Vec::with_capacity(placements.len());
-        let mut joins = Vec::with_capacity(placements.len());
         for placement in placements {
-            let (tx, rx) = sync_channel::<I>(capacity);
+            let queue = Arc::new(ShardQueue::new(capacity));
             let depth = Arc::new(AtomicUsize::new(0));
             let completed = Arc::new(Counter::new());
-            let signal = Arc::new(DrainSignal::default());
-            let join = std::thread::Builder::new()
-                .name(format!("relic-shard-{}", placement.shard))
-                .spawn({
-                    let factory = factory.clone();
-                    let handler = handler.clone();
-                    let depth = Arc::clone(&depth);
-                    let completed = Arc::clone(&completed);
-                    let signal = Arc::clone(&signal);
-                    let placement = placement.clone();
-                    move || {
-                        shard_loop(
-                            rx, &placement, factory, handler, &depth, &completed, &signal,
-                            max_batch,
-                        )
-                    }
+            let heartbeat = Arc::new(AtomicU64::new(0));
+            let handler_panics = Arc::new(Counter::new());
+            // One closure both spawns the initial thread and respawns
+            // replacements: every thread of this shard runs the same
+            // loop on the same queue.
+            let mut respawn: Box<dyn FnMut() -> JoinHandle<()> + Send> = {
+                let queue = Arc::clone(&queue);
+                let depth = Arc::clone(&depth);
+                let completed = Arc::clone(&completed);
+                let heartbeat = Arc::clone(&heartbeat);
+                let handler_panics = Arc::clone(&handler_panics);
+                let factory = factory.clone();
+                let handler = handler.clone();
+                let placement = placement.clone();
+                let fault = config.fault.clone();
+                Box::new(move || {
+                    spawn_shard_thread(
+                        placement.clone(),
+                        Arc::clone(&queue),
+                        Arc::clone(&depth),
+                        Arc::clone(&completed),
+                        Arc::clone(&heartbeat),
+                        Arc::clone(&handler_panics),
+                        factory.clone(),
+                        handler.clone(),
+                        max_batch,
+                        fault.clone(),
+                    )
                 })
-                .expect("failed to spawn relic pool shard");
-            senders.push(tx);
-            shards.push(ShardInfo { placement, depth, completed, signal });
-            joins.push(join);
+            };
+            let handle = respawn();
+            shards.push(Shard {
+                placement,
+                queue,
+                depth,
+                completed,
+                heartbeat,
+                handler_panics,
+                quarantined: AtomicBool::new(false),
+                handle: Mutex::new(Some(handle)),
+                respawn: Mutex::new(respawn),
+                restarts: AtomicU32::new(0),
+            });
         }
         RelicPool {
-            senders,
             shards,
-            joins,
             stats: PoolStats::default(),
             channel_capacity: capacity,
+            park_timeout: config.park_timeout,
         }
     }
 
@@ -319,24 +521,31 @@ impl<I: Send + 'static> RelicPool<I> {
         &self.shards[shard].placement
     }
 
-    /// The shard with the fewest items queued or in processing (ties go
-    /// to the lowest index).
+    /// The non-quarantined shard with the fewest items queued or in
+    /// processing (ties go to the lowest index). Falls back to the
+    /// global least-loaded shard when everything is quarantined, so
+    /// raw-pool callers keep the old total behavior.
     pub fn least_loaded(&self) -> usize {
-        let mut best = 0;
-        let mut best_depth = usize::MAX;
+        let mut best = None;
+        let mut best_any = (0, usize::MAX);
         for (i, s) in self.shards.iter().enumerate() {
             let d = s.depth.load(Ordering::Acquire);
-            if d < best_depth {
-                best = i;
-                best_depth = d;
+            if d < best_any.1 {
+                best_any = (i, d);
+            }
+            if s.quarantined.load(Ordering::Acquire) {
+                continue;
+            }
+            if best.is_none_or(|(_, bd)| d < bd) {
+                best = Some((i, d));
             }
         }
-        best
+        best.unwrap_or(best_any).0
     }
 
     /// Dispatch `item` to the least-loaded shard; returns the shard
     /// index it went to. Blocks (and counts a backpressure stall) when
-    /// that shard's channel is full — items are never dropped, and
+    /// that shard's queue is full — items are never dropped, and
     /// per-shard FIFO order is preserved.
     pub fn submit(&self, item: I) -> usize {
         let shard = self.least_loaded();
@@ -349,82 +558,68 @@ impl<I: Send + 'static> RelicPool<I> {
     pub fn submit_to(&self, shard: usize, item: I) {
         self.shards[shard].depth.fetch_add(1, Ordering::AcqRel);
         self.stats.dispatched.inc();
-        match self.senders[shard].try_send(item) {
+        match self.shards[shard].queue.try_push(item) {
             Ok(()) => {}
-            Err(TrySendError::Full(item)) => {
+            Err(item) => {
                 self.stats.backpressure_stalls.inc();
-                self.senders[shard]
-                    .send(item)
-                    .expect("relic pool shard thread died");
-            }
-            Err(TrySendError::Disconnected(_)) => {
-                panic!("relic pool shard thread died");
+                self.shards[shard]
+                    .queue
+                    .push_blocking(item)
+                    .unwrap_or_else(|_| panic!("relic pool shard {shard} queue closed"));
             }
         }
     }
 
     /// Non-blocking dispatch to a specific shard. `Ok(())` means the
     /// item is queued (counted, same FIFO guarantees as
-    /// [`submit_to`](Self::submit_to)); a full channel hands the item
+    /// [`submit_to`](Self::submit_to)); a full queue hands the item
     /// back unchanged and counts nothing, so the caller can retry,
     /// park, or shed it without losing it.
     pub fn try_submit_to(&self, shard: usize, item: I) -> Result<(), I> {
-        // Depth goes up *before* the send so a concurrent consumer
+        // Depth goes up *before* the push so a concurrent consumer
         // finishing the item can never decrement first (which would
         // wrap the unsigned depth and wreck least-loaded routing).
         self.shards[shard].depth.fetch_add(1, Ordering::AcqRel);
-        match self.senders[shard].try_send(item) {
+        match self.shards[shard].queue.try_push(item) {
             Ok(()) => {
                 self.stats.dispatched.inc();
                 Ok(())
             }
-            Err(TrySendError::Full(item)) => {
+            Err(item) => {
                 self.shards[shard].depth.fetch_sub(1, Ordering::AcqRel);
                 Err(item)
-            }
-            Err(TrySendError::Disconnected(_)) => {
-                panic!("relic pool shard thread died");
             }
         }
     }
 
-    /// Dispatch to a specific shard, parking on the shard's drain
-    /// signal when the channel is full: the producer sleeps until the
-    /// consumer frees capacity instead of spinning or blocking inside
-    /// the channel. Returns `true` when it had to park (counted in
-    /// [`PoolStats::parked_submits`]). Delivery is guaranteed: a parked
-    /// producer can only end by enqueueing the item or by panicking on
-    /// a dead shard.
-    pub fn submit_or_park_to(&self, shard: usize, item: I) -> bool {
+    /// Dispatch to a specific shard, parking on the queue's `not_full`
+    /// condvar when it is full: the producer sleeps until the consumer
+    /// frees capacity instead of spinning or blocking inside the
+    /// queue. Returns `Ok(true)` when it had to park (counted in
+    /// [`PoolStats::parked_submits`]), `Ok(false)` on immediate
+    /// delivery, and [`ShardDead`] — with the item handed back for
+    /// re-routing — when the shard's thread is found dead on a park
+    /// timeout ([`PoolConfig::park_timeout`]).
+    pub fn submit_or_park_to(&self, shard: usize, item: I) -> Result<bool, ShardDead<I>> {
         self.shards[shard].depth.fetch_add(1, Ordering::AcqRel);
-        self.stats.dispatched.inc();
-        let mut item = match self.senders[shard].try_send(item) {
-            Ok(()) => return false,
-            Err(TrySendError::Full(item)) => item,
-            Err(TrySendError::Disconnected(_)) => panic!("relic pool shard thread died"),
+        let item = match self.shards[shard].queue.try_push(item) {
+            Ok(()) => {
+                self.stats.dispatched.inc();
+                return Ok(false);
+            }
+            Err(item) => item,
         };
         self.stats.parked_submits.inc();
-        let signal = &self.shards[shard].signal;
-        let mut guard = signal.lock.lock().expect("drain signal poisoned");
-        loop {
-            // Re-check under the lock: the consumer cannot get the lock
-            // to notify between this failure and the wait below, so a
-            // wakeup for freed capacity is never lost.
-            match self.senders[shard].try_send(item) {
-                Ok(()) => return true,
-                Err(TrySendError::Full(it)) => item = it,
-                Err(TrySendError::Disconnected(_)) => panic!("relic pool shard thread died"),
+        match self.shards[shard].queue.push_parked(item, self.park_timeout, || {
+            self.shard_dead(shard)
+        }) {
+            Ok(()) => {
+                self.stats.dispatched.inc();
+                Ok(true)
             }
-            let (g, timeout) = signal
-                .drained
-                .wait_timeout(guard, PARK_CHECK_INTERVAL)
-                .expect("drain signal poisoned");
-            guard = g;
-            if timeout.timed_out() {
-                assert!(
-                    !self.joins[shard].is_finished(),
-                    "relic pool shard {shard} died with a producer parked on it"
-                );
+            Err(item) => {
+                self.shards[shard].depth.fetch_sub(1, Ordering::AcqRel);
+                Err(ShardDead { shard, item })
             }
         }
     }
@@ -445,7 +640,7 @@ impl<I: Send + 'static> RelicPool<I> {
         self.shards.iter().map(|s| s.depth.load(Ordering::Acquire))
     }
 
-    /// Per-shard admission-channel bound.
+    /// Per-shard admission-queue bound.
     pub fn channel_capacity(&self) -> usize {
         self.channel_capacity
     }
@@ -464,17 +659,84 @@ impl<I: Send + 'static> RelicPool<I> {
         &self.stats
     }
 
-    /// Shards whose threads have exited. While the pool is alive the
-    /// channels are open, so a finished shard thread can only mean its
-    /// handler (or factory) panicked — responses routed to it are lost.
-    /// Admission layers poll this instead of blocking forever on them.
+    /// Whether shard `i`'s thread has exited (panicked factory, a
+    /// double fault past handler containment, or an injected kill).
+    /// Its queue survives — items are stealable and the shard is
+    /// respawnable.
+    pub fn shard_dead(&self, shard: usize) -> bool {
+        self.shards[shard]
+            .handle
+            .lock()
+            .expect("shard handle poisoned")
+            .as_ref()
+            .is_none_or(|h| h.is_finished())
+    }
+
+    /// Shards whose threads have exited. Admission layers poll this
+    /// (or run a [`Supervisor`]) instead of blocking forever on them.
     pub fn dead_shards(&self) -> Vec<usize> {
-        self.joins
+        (0..self.shards.len()).filter(|&i| self.shard_dead(i)).collect()
+    }
+
+    /// The shard-loop liveness counter (bumped once per batch).
+    pub fn heartbeat(&self, shard: usize) -> u64 {
+        self.shards[shard].heartbeat.load(Ordering::Acquire)
+    }
+
+    /// Handler panics caught at the thread level, across all shards.
+    pub fn handler_panics(&self) -> u64 {
+        self.shards.iter().map(|s| s.handler_panics.get()).sum()
+    }
+
+    /// Whether routing should skip shard `i`.
+    pub fn is_quarantined(&self, shard: usize) -> bool {
+        self.shards[shard].quarantined.load(Ordering::Acquire)
+    }
+
+    /// Mark or clear quarantine on shard `i` (supervisor's decision;
+    /// quarantined shards get no new traffic but keep draining).
+    pub fn set_quarantined(&self, shard: usize, quarantined: bool) {
+        self.shards[shard].quarantined.store(quarantined, Ordering::Release);
+    }
+
+    /// Number of shards currently quarantined.
+    pub fn quarantined_count(&self) -> usize {
+        self.shards
             .iter()
-            .enumerate()
-            .filter(|(_, j)| j.is_finished())
-            .map(|(i, _)| i)
-            .collect()
+            .filter(|s| s.quarantined.load(Ordering::Acquire))
+            .count()
+    }
+
+    /// Times shard `i` has been respawned.
+    pub fn restarts(&self, shard: usize) -> u32 {
+        self.shards[shard].restarts.load(Ordering::Acquire)
+    }
+
+    /// Take every queued-but-unprocessed item off shard `i` for
+    /// redirection. At-most-once: the queue's mutex means an item is
+    /// either stolen here or popped by the consumer, never both.
+    pub fn steal_queued(&self, shard: usize) -> Vec<I> {
+        let items = self.shards[shard].queue.steal_all();
+        if !items.is_empty() {
+            self.shards[shard].depth.fetch_sub(items.len(), Ordering::AcqRel);
+        }
+        items
+    }
+
+    /// Replace a dead shard thread with a fresh one on the same queue.
+    /// No-op (returns false) while the current thread is still alive.
+    pub fn respawn_shard(&self, shard: usize) -> bool {
+        let s = &self.shards[shard];
+        let mut handle = s.handle.lock().expect("shard handle poisoned");
+        if handle.as_ref().is_some_and(|h| !h.is_finished()) {
+            return false;
+        }
+        if let Some(old) = handle.take() {
+            let _ = old.join();
+        }
+        *handle = Some((s.respawn.lock().expect("shard respawn poisoned"))());
+        s.restarts.fetch_add(1, Ordering::AcqRel);
+        true
     }
 
     /// Point-in-time counters for reporting.
@@ -492,31 +754,82 @@ impl<I: Send + 'static> RelicPool<I> {
 
 impl<I: Send + 'static> Drop for RelicPool<I> {
     fn drop(&mut self) {
-        // Closing the channels ends each shard loop after it drains its
+        // Closing the queues ends each shard loop after it drains its
         // remaining items; joining flushes all in-flight work.
-        self.senders.clear();
-        for j in self.joins.drain(..) {
-            let _ = j.join();
+        for s in &self.shards {
+            s.queue.close();
+        }
+        for s in &self.shards {
+            if let Some(h) = s.handle.lock().expect("shard handle poisoned").take() {
+                let _ = h.join();
+            }
         }
     }
 }
 
-/// A shard's inner loop: pin, build state, then drain the channel in
-/// small batches. Blocking on the first item of a batch and
-/// `try_recv`-draining the rest gives natural micro-batching — under
-/// load the handler sees multi-request batches (so a
-/// `Coordinator`-backed handler still pairs requests on the SMT core),
-/// while a lone request is processed immediately.
+/// Spawn one shard thread running [`shard_loop`] on the given queue.
+#[allow(clippy::too_many_arguments)]
+fn spawn_shard_thread<I, S, F, H>(
+    placement: ShardPlacement,
+    queue: Arc<ShardQueue<I>>,
+    depth: Arc<AtomicUsize>,
+    completed: Arc<Counter>,
+    heartbeat: Arc<AtomicU64>,
+    handler_panics: Arc<Counter>,
+    factory: F,
+    handler: H,
+    max_batch: usize,
+    fault: Option<Arc<FaultPlan>>,
+) -> JoinHandle<()>
+where
+    I: Send + 'static,
+    S: 'static,
+    F: Fn(&ShardPlacement) -> S + Send + 'static,
+    H: Fn(&mut S, Vec<I>) + Send + 'static,
+{
+    std::thread::Builder::new()
+        .name(format!("relic-shard-{}", placement.shard))
+        .spawn(move || {
+            shard_loop(
+                &queue,
+                &placement,
+                factory,
+                handler,
+                &depth,
+                &completed,
+                &heartbeat,
+                &handler_panics,
+                max_batch,
+                fault.as_deref(),
+            )
+        })
+        .expect("failed to spawn relic pool shard")
+}
+
+/// A shard's inner loop: pin, build state, then drain the queue in
+/// small batches. Blocking on the first item of a batch and draining
+/// the rest without waiting gives natural micro-batching — under load
+/// the handler sees multi-request batches (so a `Coordinator`-backed
+/// handler still pairs requests on the SMT core), while a lone request
+/// is processed immediately.
+///
+/// Fault isolation: a panicking handler is caught (`catch_unwind`) and
+/// counted; the batch's depth/completed accounting still runs, so the
+/// admission layer above can reconcile and synthesize failure
+/// responses. The injected-kill fault requeues its batch before
+/// exiting, so even a dying thread loses no items.
 #[allow(clippy::too_many_arguments)]
 fn shard_loop<I, S, F, H>(
-    rx: Receiver<I>,
+    queue: &ShardQueue<I>,
     placement: &ShardPlacement,
     factory: F,
     handler: H,
     depth: &AtomicUsize,
     completed: &Counter,
-    signal: &DrainSignal,
+    heartbeat: &AtomicU64,
+    handler_panics: &Counter,
     max_batch: usize,
+    fault: Option<&FaultPlan>,
 ) where
     F: Fn(&ShardPlacement) -> S,
     H: Fn(&mut S, Vec<I>),
@@ -526,26 +839,209 @@ fn shard_loop<I, S, F, H>(
     }
     let mut state = factory(placement);
     loop {
-        let first = match rx.recv() {
-            Ok(item) => item,
-            Err(_) => break,
-        };
         let mut batch = Vec::with_capacity(max_batch);
-        batch.push(first);
-        while batch.len() < max_batch {
-            match rx.try_recv() {
-                Ok(item) => batch.push(item),
-                Err(_) => break,
+        if !queue.pop_batch(max_batch, &mut batch) {
+            break;
+        }
+        if let Some(plan) = fault {
+            if plan.should_kill(placement.shard) {
+                // Injected thread death: put the batch back (FIFO
+                // intact) and exit. The supervisor will steal and
+                // respawn.
+                queue.requeue_front(batch);
+                return;
+            }
+            if let Some(stall) = plan.stall_duration(placement.shard) {
+                // Injected wedge: the heartbeat goes stale while depth
+                // stays up, which is exactly the watchdog's Stuck
+                // signature.
+                std::thread::sleep(stall);
             }
         }
-        // Every recv above freed a channel slot: wake parked producers
-        // *before* the (potentially long) handler call, so admission
-        // refills the queue while this batch is being processed.
-        signal.notify();
+        heartbeat.fetch_add(1, Ordering::Release);
         let n = batch.len();
-        handler(&mut state, batch);
+        if catch_unwind(AssertUnwindSafe(|| handler(&mut state, batch))).is_err() {
+            handler_panics.inc();
+        }
         depth.fetch_sub(n, Ordering::AcqRel);
         completed.add(n as u64);
+    }
+}
+
+/// How the watchdog reads one shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardHealth {
+    /// Heartbeat advancing (or idle with an empty queue).
+    Healthy,
+    /// Thread alive but its heartbeat has been stale for longer than
+    /// [`SupervisorConfig::stuck_after`] while work is pending.
+    Stuck,
+    /// Thread exited.
+    Dead,
+}
+
+/// Watchdog and recovery policy knobs.
+#[derive(Debug, Clone)]
+pub struct SupervisorConfig {
+    /// Master switch. Off = PR 5 behavior exactly: no quarantine, no
+    /// respawn, dead shards are fatal to the admission layer above.
+    pub enabled: bool,
+    /// Heartbeat staleness (with pending work) before a live shard is
+    /// classified [`ShardHealth::Stuck`] and quarantined.
+    pub stuck_after: Duration,
+    /// Restart budget per shard; beyond it a dead shard stays
+    /// quarantined and the engine degrades around it.
+    pub max_restarts: u32,
+    /// First respawn backoff; doubles per restart of that shard.
+    pub backoff_base: Duration,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            enabled: true,
+            stuck_after: Duration::from_millis(200),
+            max_restarts: 3,
+            backoff_base: Duration::from_millis(25),
+        }
+    }
+}
+
+/// What one [`Supervisor::check`] pass decided.
+#[derive(Debug)]
+pub struct SupervisorVerdict<I> {
+    /// Per-shard classification this pass.
+    pub health: Vec<ShardHealth>,
+    /// Items stolen from quarantined shards; the caller must re-route
+    /// them (at-most-once is already guaranteed — they were never
+    /// popped by a consumer).
+    pub redirected: Vec<I>,
+    /// Shards respawned this pass.
+    pub restarted: usize,
+    /// Shards newly quarantined this pass (watchdog trips).
+    pub trips: usize,
+    /// Time spent in quarantine by each shard released this pass.
+    pub released: Vec<Duration>,
+}
+
+/// Per-shard watchdog memory.
+#[derive(Debug, Clone)]
+struct BeatState {
+    last_beat: u64,
+    changed_at: Instant,
+    quarantined_since: Option<Instant>,
+    next_restart_at: Option<Instant>,
+}
+
+/// The pool's watchdog: classifies shards from heartbeats and thread
+/// liveness, quarantines `Stuck`/`Dead` shards (stealing their queued
+/// items for redirection), respawns dead shards within a restart
+/// budget (exponential backoff), and releases recovered shards.
+///
+/// The supervisor is *driven*, not threaded: the admission layer calls
+/// [`check`](Supervisor::check) from its drain-timeout path, so with a
+/// healthy pool the supervisor costs nothing on the hot path.
+#[derive(Debug)]
+pub struct Supervisor {
+    config: SupervisorConfig,
+    beats: Vec<BeatState>,
+}
+
+impl Supervisor {
+    /// A supervisor for a pool of `shards` shards.
+    pub fn new(config: SupervisorConfig, shards: usize) -> Self {
+        let now = Instant::now();
+        Supervisor {
+            config,
+            beats: vec![
+                BeatState {
+                    last_beat: 0,
+                    changed_at: now,
+                    quarantined_since: None,
+                    next_restart_at: None,
+                };
+                shards
+            ],
+        }
+    }
+
+    /// The active policy.
+    pub fn config(&self) -> &SupervisorConfig {
+        &self.config
+    }
+
+    /// One watchdog pass over `pool`: classify, quarantine, steal,
+    /// respawn, release. Call this from the admission layer's idle /
+    /// timeout path.
+    pub fn check<I: Send + 'static>(&mut self, pool: &RelicPool<I>) -> SupervisorVerdict<I> {
+        let now = Instant::now();
+        let mut verdict = SupervisorVerdict {
+            health: Vec::with_capacity(pool.shard_count()),
+            redirected: Vec::new(),
+            restarted: 0,
+            trips: 0,
+            released: Vec::new(),
+        };
+        for shard in 0..pool.shard_count() {
+            let beat = pool.heartbeat(shard);
+            let state = &mut self.beats[shard];
+            if beat != state.last_beat {
+                state.last_beat = beat;
+                state.changed_at = now;
+            }
+            let health = if pool.shard_dead(shard) {
+                ShardHealth::Dead
+            } else if pool.depth(shard) > 0
+                && now.duration_since(state.changed_at) >= self.config.stuck_after
+            {
+                ShardHealth::Stuck
+            } else {
+                ShardHealth::Healthy
+            };
+            verdict.health.push(health);
+            match health {
+                ShardHealth::Healthy => {
+                    if let Some(since) = state.quarantined_since.take() {
+                        pool.set_quarantined(shard, false);
+                        state.next_restart_at = None;
+                        verdict.released.push(now.duration_since(since));
+                    }
+                }
+                ShardHealth::Stuck | ShardHealth::Dead => {
+                    if state.quarantined_since.is_none() {
+                        state.quarantined_since = Some(now);
+                        pool.set_quarantined(shard, true);
+                        verdict.trips += 1;
+                    }
+                    verdict.redirected.extend(pool.steal_queued(shard));
+                    if health == ShardHealth::Dead {
+                        let restarts = pool.restarts(shard);
+                        let backoff_over =
+                            state.next_restart_at.is_none_or(|t| now >= t);
+                        if restarts < self.config.max_restarts
+                            && backoff_over
+                            && pool.respawn_shard(shard)
+                        {
+                            verdict.restarted += 1;
+                            // Exponential backoff for the *next*
+                            // respawn of this shard.
+                            let exp = restarts.min(10);
+                            state.next_restart_at =
+                                Some(now + self.config.backoff_base * (1u32 << exp));
+                            // Fresh thread, fresh liveness baseline;
+                            // release it immediately — its queue is
+                            // intact and it can take traffic.
+                            state.changed_at = now;
+                            pool.set_quarantined(shard, false);
+                            if let Some(since) = state.quarantined_since.take() {
+                                verdict.released.push(now.duration_since(since));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        verdict
     }
 }
 
@@ -638,10 +1134,11 @@ mod tests {
                 pin: false,
                 channel_capacity: 1,
                 max_batch: 1,
+                ..PoolConfig::default()
             },
             |_: &ShardPlacement| (),
             move |_: &mut (), batch: Vec<u64>| {
-                // Slow consumer: force the capacity-1 channel to fill.
+                // Slow consumer: force the capacity-1 queue to fill.
                 std::thread::sleep(Duration::from_millis(1));
                 for item in batch {
                     tx.send(item).unwrap();
@@ -652,7 +1149,7 @@ mod tests {
             pool.submit(i);
         }
         let stalls = pool.stats().backpressure_stalls.get();
-        assert!(stalls > 0, "capacity-1 channel must have stalled at least once");
+        assert!(stalls > 0, "capacity-1 queue must have stalled at least once");
         drop(pool);
         let got: Vec<u64> = rx.iter().collect();
         assert_eq!(got, (0..32).collect::<Vec<_>>(), "FIFO, nothing dropped");
@@ -693,7 +1190,7 @@ mod tests {
     }
 
     /// A 1-shard pool whose handler consumes one gate token per item,
-    /// so tests can hold the channel deterministically full.
+    /// so tests can hold the queue deterministically full.
     fn gated_pool(
         capacity: usize,
     ) -> (RelicPool<u64>, mpsc::Sender<()>, mpsc::Receiver<u64>) {
@@ -707,6 +1204,7 @@ mod tests {
                 pin: false,
                 channel_capacity: capacity,
                 max_batch: 1,
+                ..PoolConfig::default()
             },
             |_: &ShardPlacement| (),
             move |_: &mut (), batch: Vec<u64>| {
@@ -723,7 +1221,7 @@ mod tests {
     fn try_submit_returns_item_on_full_channel() {
         let (pool, gate_tx, out_rx) = gated_pool(2);
         // Fill: one item may be held by the shard (blocked on the
-        // gate), two sit in the capacity-2 channel. Stuff until full.
+        // gate), two sit in the capacity-2 queue. Stuff until full.
         let mut queued = 0u64;
         let mut bounced = None;
         for i in 0..64u64 {
@@ -735,9 +1233,9 @@ mod tests {
                 }
             }
         }
-        let bounced = bounced.expect("a bounded channel must fill");
+        let bounced = bounced.expect("a bounded queue must fill");
         assert_eq!(bounced, queued, "the bounced item comes back unchanged");
-        assert!(queued >= 2, "at least the channel capacity was accepted");
+        assert!(queued >= 2, "at least the queue capacity was accepted");
         // Depth only counts accepted items (the bounce was rolled back).
         assert_eq!(pool.depth(0), queued as usize);
         assert_eq!(pool.stats().dispatched.get(), queued);
@@ -754,12 +1252,12 @@ mod tests {
     fn parked_submit_delivers_after_drain() {
         let (pool, gate_tx, out_rx) = gated_pool(1);
         let pool = Arc::new(pool);
-        // Fill the capacity-1 channel (plus the item the shard holds).
+        // Fill the capacity-1 queue (plus the item the shard holds).
         let mut queued = 0u64;
         while pool.try_submit_to(0, queued).is_ok() {
             queued += 1;
         }
-        // Park a producer on the full channel from another thread.
+        // Park a producer on the full queue from another thread.
         let parked = {
             let pool = Arc::clone(&pool);
             std::thread::spawn(move || pool.submit_or_park_to(0, queued))
@@ -770,7 +1268,10 @@ mod tests {
         for _ in 0..=queued {
             gate_tx.send(()).unwrap();
         }
-        assert!(parked.join().unwrap(), "producer reported parking");
+        assert!(
+            parked.join().unwrap().expect("shard is alive"),
+            "producer reported parking"
+        );
         assert_eq!(pool.stats().parked_submits.get(), 1);
         let pool = Arc::try_unwrap(pool).unwrap_or_else(|_| panic!("sole owner"));
         drop(pool);
@@ -782,7 +1283,7 @@ mod tests {
     fn parked_producer_never_loses_wakeup_under_churn() {
         // Capacity-1 stress loop: every submit races the consumer's
         // drain-notify. A lost wakeup deadlocks this test (bounded by
-        // the park path's dead-shard timeout assertions, it would still
+        // the park path's dead-shard timeout checks, it would still
         // hang — CI's timeout is the net).
         let (tx, rx) = mpsc::channel::<u64>();
         let pool = RelicPool::<u64>::with_placements(
@@ -792,6 +1293,7 @@ mod tests {
                 pin: false,
                 channel_capacity: 1,
                 max_batch: 1,
+                ..PoolConfig::default()
             },
             |_: &ShardPlacement| (),
             move |_: &mut (), batch: Vec<u64>| {
@@ -802,11 +1304,11 @@ mod tests {
         );
         let n = 2000u64;
         for i in 0..n {
-            pool.submit_or_park_to(0, i);
+            pool.submit_or_park_to(0, i).expect("shard is alive");
         }
         assert!(
             pool.stats().parked_submits.get() > 0,
-            "a capacity-1 channel under a tight submit loop must park at least once"
+            "a capacity-1 queue under a tight submit loop must park at least once"
         );
         drop(pool);
         let got: Vec<u64> = rx.iter().collect();
@@ -855,5 +1357,179 @@ mod tests {
             assert!(std::time::Instant::now() < deadline, "pool never drained");
             std::thread::yield_now();
         }
+    }
+
+    #[test]
+    fn handler_panic_is_contained_and_the_shard_survives() {
+        let (tx, rx) = mpsc::channel::<u64>();
+        let pool = RelicPool::<u64>::with_placements(
+            discover_placements(Some(1), false),
+            &PoolConfig {
+                shards: Some(1),
+                pin: false,
+                channel_capacity: 8,
+                max_batch: 1,
+                ..PoolConfig::default()
+            },
+            |_: &ShardPlacement| (),
+            move |_: &mut (), batch: Vec<u64>| {
+                for item in batch {
+                    if item == 3 {
+                        panic!("poisoned item");
+                    }
+                    tx.send(item).unwrap();
+                }
+            },
+        );
+        for i in 0..8u64 {
+            pool.submit_to(0, i);
+        }
+        // Wait for the shard to chew through everything.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while pool.depth(0) > 0 {
+            assert!(std::time::Instant::now() < deadline, "shard never drained");
+            std::thread::yield_now();
+        }
+        assert!(!pool.shard_dead(0), "panic must not kill the shard thread");
+        assert_eq!(pool.handler_panics(), 1);
+        drop(pool);
+        let got: Vec<u64> = rx.iter().collect();
+        assert_eq!(got, vec![0, 1, 2, 4, 5, 6, 7], "only the poisoned item is missing");
+    }
+
+    #[test]
+    fn steal_queued_takes_only_unprocessed_items_and_fixes_depth() {
+        let (pool, gate_tx, out_rx) = gated_pool(8);
+        for i in 0..6u64 {
+            pool.submit_to(0, i);
+        }
+        // The shard holds item 0 at the gate; give it a beat to pop it
+        // so the steal below can't race the first pop.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while pool.depth(0) == 6 && pool.heartbeat(0) == 0 {
+            assert!(std::time::Instant::now() < deadline, "shard never started");
+            std::thread::yield_now();
+        }
+        let stolen = pool.steal_queued(0);
+        // Item 0 was popped (at the gate); everything else is stolen.
+        assert_eq!(stolen, vec![1, 2, 3, 4, 5]);
+        assert_eq!(pool.depth(0), 1, "depth drops by the stolen count");
+        gate_tx.send(()).unwrap();
+        drop(pool);
+        assert_eq!(out_rx.iter().collect::<Vec<_>>(), vec![0]);
+    }
+
+    #[test]
+    fn supervisor_respawns_a_killed_shard_and_work_completes() {
+        let (tx, rx) = mpsc::channel::<u64>();
+        let fault = Arc::new(FaultPlan::new().with_kill(0, 1));
+        let pool = RelicPool::<u64>::with_placements(
+            discover_placements(Some(1), false),
+            &PoolConfig {
+                shards: Some(1),
+                pin: false,
+                channel_capacity: 16,
+                max_batch: 4,
+                fault: Some(fault),
+                ..PoolConfig::default()
+            },
+            |_: &ShardPlacement| (),
+            move |_: &mut (), batch: Vec<u64>| {
+                for item in batch {
+                    tx.send(item).unwrap();
+                }
+            },
+        );
+        let mut supervisor = Supervisor::new(
+            SupervisorConfig {
+                backoff_base: Duration::from_millis(1),
+                ..SupervisorConfig::default()
+            },
+            pool.shard_count(),
+        );
+        for i in 0..8u64 {
+            pool.submit_to(0, i);
+        }
+        // The first batch trips the kill (requeued, thread exits); the
+        // supervisor must steal + respawn until everything drains.
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        let mut restarts = 0usize;
+        while pool.depth(0) > 0 {
+            assert!(std::time::Instant::now() < deadline, "pool never recovered");
+            let verdict = supervisor.check(&pool);
+            restarts += verdict.restarted;
+            // Single-shard pool: redirect back onto the (respawned)
+            // shard itself.
+            for item in verdict.redirected {
+                pool.submit_to(0, item);
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(restarts >= 1, "the dead shard must have been respawned");
+        assert_eq!(pool.restarts(0), restarts as u32);
+        assert!(!pool.shard_dead(0));
+        drop(pool);
+        let mut got: Vec<u64> = rx.iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..8).collect::<Vec<_>>(), "every item processed exactly once");
+    }
+
+    #[test]
+    fn parked_submit_reports_shard_dead_instead_of_hanging() {
+        // A shard that dies before its first batch, with a full queue:
+        // the parked producer must get the item back with ShardDead.
+        let fault = Arc::new(FaultPlan::new().with_kill(0, 1));
+        let pool = RelicPool::<u64>::with_placements(
+            discover_placements(Some(1), false),
+            &PoolConfig {
+                shards: Some(1),
+                pin: false,
+                channel_capacity: 2,
+                max_batch: 1,
+                park_timeout: Duration::from_millis(5),
+                fault: Some(fault),
+            },
+            |_: &ShardPlacement| (),
+            |_: &mut (), _batch: Vec<u64>| {},
+        );
+        // First submit wakes the shard, which requeues and dies.
+        pool.submit_to(0, 0);
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while !pool.shard_dead(0) {
+            assert!(std::time::Instant::now() < deadline, "kill fault never fired");
+            std::thread::yield_now();
+        }
+        // Fill the remaining capacity, then park on the full queue.
+        pool.submit_to(0, 1);
+        let err = pool
+            .submit_or_park_to(0, 2)
+            .expect_err("parking on a dead shard must fail");
+        assert_eq!(err.shard, 0);
+        assert_eq!(err.item, 2);
+        assert_eq!(pool.depth(0), 2, "the failed park rolled its depth back");
+        // The queued items are still stealable — nothing was lost.
+        assert_eq!(pool.steal_queued(0), vec![0, 1]);
+    }
+
+    #[test]
+    fn quarantine_steers_least_loaded_routing_away() {
+        let pool = RelicPool::<u64>::with_placements(
+            discover_placements(Some(2), false),
+            &PoolConfig { shards: Some(2), pin: false, ..PoolConfig::default() },
+            |_: &ShardPlacement| (),
+            |_: &mut (), _batch: Vec<u64>| {},
+        );
+        assert_eq!(pool.quarantined_count(), 0);
+        pool.set_quarantined(0, true);
+        assert!(pool.is_quarantined(0));
+        assert_eq!(pool.quarantined_count(), 1);
+        // Shard 0 is idle (depth 0) but quarantined: routing must pick
+        // shard 1 regardless.
+        assert_eq!(pool.least_loaded(), 1);
+        // Everything quarantined: fall back to the global minimum.
+        pool.set_quarantined(1, true);
+        assert_eq!(pool.least_loaded(), 0);
+        pool.set_quarantined(0, false);
+        assert_eq!(pool.quarantined_count(), 1);
     }
 }

@@ -26,6 +26,7 @@ fn engine(
             pin: false,
             channel_capacity,
             max_batch,
+            ..PoolConfig::default()
         },
         admission,
         ..EngineConfig::default()
@@ -111,7 +112,7 @@ fn accepted_requests_never_dropped_or_reordered_under_queuefull_churn() {
                     r = rejected;
                     std::thread::yield_now();
                 }
-                Admission::Shed { .. } => unreachable!("Never policy cannot shed"),
+                _ => unreachable!("Never policy cannot shed, healthy shards cannot degrade"),
             }
         }
     }

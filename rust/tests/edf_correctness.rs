@@ -34,6 +34,7 @@ fn engine(
             pin: false,
             channel_capacity,
             max_batch,
+            ..PoolConfig::default()
         },
         admission,
         ..EngineConfig::default()

@@ -1,0 +1,233 @@
+//! Integration: fault isolation end to end. Scripted failures —
+//! kernel panics, killed shard threads, wedged shards, every shard
+//! quarantined at once — must stay contained inside their failure
+//! domain while the engine keeps its core invariant: every submitted
+//! request gets exactly one response, executed at most once, in
+//! acceptance order. The degenerate cases (no faults, supervisor on or
+//! off) must be bitwise-identical to the pre-supervision engine.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use relic_smt::coordinator::{
+    run_native_kernel, Coordinator, Deadline, Engine, EngineConfig, GraphKernel, Request,
+    RequestResult, Router, RouterConfig,
+};
+use relic_smt::graph::kronecker::paper_graph;
+use relic_smt::relic::{FaultKind, FaultPlan, PoolConfig, SupervisorConfig};
+
+/// Unpinned supervised engine (CI containers may refuse affinity
+/// syscalls) with an optional fault plan and a test-scale watchdog.
+fn chaos_engine(shards: usize, fault: Option<Arc<FaultPlan>>, stuck_after_ms: u64) -> Engine {
+    Engine::new(EngineConfig {
+        pool: PoolConfig {
+            shards: Some(shards),
+            pin: false,
+            fault,
+            ..PoolConfig::default()
+        },
+        supervisor: SupervisorConfig {
+            stuck_after: Duration::from_millis(stuck_after_ms),
+            ..SupervisorConfig::default()
+        },
+        ..EngineConfig::default()
+    })
+}
+
+/// Mixed stream cycling every kernel over several sources.
+fn mixed_batch(n: usize) -> Vec<Request> {
+    let kernels = GraphKernel::all();
+    (0..n)
+        .map(|i| Request {
+            id: i as u64,
+            kernel: kernels[i % kernels.len()],
+            graph: paper_graph(),
+            source: (i % 8) as u32,
+            deadline: Deadline::none(),
+        })
+        .collect()
+}
+
+/// Serial checksums for [`mixed_batch`], indexed by request id.
+fn expected_checksums(n: usize) -> Vec<u64> {
+    let g = paper_graph();
+    mixed_batch(n).iter().map(|r| run_native_kernel(r.kernel, &g, r.source)).collect()
+}
+
+#[test]
+fn contained_panic_fails_one_request_and_reconciles() {
+    // The injected panic targets the stream's first TC execution.
+    // Exactly that request fails typed; its pair partner, its batch,
+    // and its shard all survive, and the books balance: submitted =
+    // ok + failed, with one completion recorded per ok request.
+    let n = 24usize;
+    let fault = Arc::new(FaultPlan::new().with_panic_on("tc", 1));
+    // Production-scale watchdog: this test exercises containment, not
+    // the supervisor, and must not trip it.
+    let mut e = chaos_engine(2, Some(fault), 200);
+    let want = expected_checksums(n);
+    for r in mixed_batch(n) {
+        assert!(e.submit(r).is_accepted());
+    }
+    let responses = e.drain();
+    assert_eq!(responses.len(), n, "one response per submitted request");
+    let mut failed = 0u64;
+    for (i, r) in responses.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "acceptance order preserved through the failure");
+        match r.result {
+            RequestResult::Failed(kind) => {
+                assert_eq!(kind, FaultKind::Panic);
+                failed += 1;
+            }
+            _ => assert_eq!(r.result, RequestResult::Native(want[i])),
+        }
+    }
+    assert_eq!(failed, 1, "exactly the panicking request fails");
+    let agg = e.aggregated_metrics();
+    assert_eq!(agg.fault.panics_caught.get(), 1);
+    assert_eq!(agg.native_requests.get(), n as u64 - 1, "failures are not completions");
+    assert_eq!(agg.native_latency.count(), n as u64 - 1);
+    // The engine is still healthy: the one-shot fault is spent.
+    let again = e.process_batch(mixed_batch(n));
+    assert_eq!(again.len(), n);
+    assert!(again.iter().all(|r| r.result.is_ok()), "the fault was one-shot");
+}
+
+#[test]
+fn killed_shard_is_respawned_and_nothing_is_lost_or_duplicated() {
+    // Shard 0's thread exits before its first batch (the batch is
+    // requeued on the way out). The watchdog must classify it Dead,
+    // quarantine it, steal + redirect its queue, and respawn it within
+    // the restart budget — with every request executed exactly once.
+    let n = 16usize;
+    let fault = Arc::new(FaultPlan::new().with_kill(0, 1));
+    let mut e = chaos_engine(2, Some(fault), 40);
+    let want = expected_checksums(n);
+    for r in mixed_batch(n) {
+        assert!(e.submit(r).is_accepted());
+    }
+    let responses = e.drain();
+    assert_eq!(responses.len(), n, "a dead shard loses no requests");
+    for (i, r) in responses.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "order survives steal + redirect");
+        assert_eq!(r.result, RequestResult::Native(want[i]), "request {i} checksum");
+    }
+    let agg = e.aggregated_metrics();
+    assert!(agg.fault.shard_restarts.get() >= 1, "the dead shard was respawned");
+    assert!(agg.fault.watchdog_trips.get() >= 1, "death was detected by the watchdog");
+    assert_eq!(agg.native_requests.get(), n as u64, "each request executed exactly once");
+    // The respawned shard serves follow-up traffic.
+    let again = e.process_batch(mixed_batch(8));
+    assert_eq!(again.len(), 8);
+    assert!(again.iter().all(|r| r.result.is_ok()));
+}
+
+#[test]
+fn stalled_shard_is_quarantined_and_queued_work_redirected_at_most_once() {
+    // Shard 0 wedges for 300 ms on its first batch — far past the
+    // 40 ms stuck-after. The watchdog quarantines it and steals its
+    // queued-but-unprocessed requests for redirection. The stolen set
+    // and the stalled batch are disjoint by queue mutual exclusion, so
+    // when the stall clears and the batch completes, every request has
+    // executed exactly once.
+    let n = 24usize;
+    let fault = Arc::new(FaultPlan::new().with_stall(0, 1, Duration::from_millis(300)));
+    let mut e = chaos_engine(2, Some(fault), 40);
+    let want = expected_checksums(n);
+    for r in mixed_batch(n) {
+        assert!(e.submit(r).is_accepted());
+    }
+    let responses = e.drain();
+    assert_eq!(responses.len(), n, "a wedged shard loses no requests");
+    for (i, r) in responses.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "no duplicates, no reordering");
+        assert_eq!(r.result, RequestResult::Native(want[i]), "request {i} checksum");
+    }
+    let agg = e.aggregated_metrics();
+    assert!(agg.fault.watchdog_trips.get() >= 1, "the stall tripped the watchdog");
+    assert_eq!(
+        agg.native_requests.get(),
+        n as u64,
+        "steal/redirect is at-most-once: exactly one execution per request"
+    );
+    assert_eq!(agg.fault.panics_caught.get(), 0);
+    assert_eq!(agg.fault.responses_lost.get(), 0);
+}
+
+#[test]
+fn all_shards_quarantined_degrades_to_inline_serial_with_identical_results() {
+    // Every shard quarantined at once: the engine must keep answering
+    // by running requests inline, serially, on the admission thread —
+    // and the responses must match the single-pair coordinator's
+    // result-for-result.
+    let n = 12usize;
+    let mut single = Coordinator::with_parts(Router::new(RouterConfig::default(), None), None);
+    let want = single.process_batch(mixed_batch(n));
+    let mut e = chaos_engine(2, None, 200);
+    for s in 0..e.shard_count() {
+        e.set_quarantined(s, true);
+    }
+    assert_eq!(e.quarantined_count(), 2);
+    for r in mixed_batch(n) {
+        let verdict = e.submit(r);
+        assert!(verdict.is_degraded(), "all-quarantined must degrade");
+        assert!(verdict.is_accepted(), "degraded requests still owe a response");
+        assert_eq!(verdict.shard(), None, "no shard owns an inline request");
+    }
+    let responses = e.drain();
+    assert_eq!(responses.len(), n);
+    for (got, expect) in responses.iter().zip(&want) {
+        assert_eq!(got.id, expect.id);
+        assert_eq!(got.backend, expect.backend);
+        assert_eq!(got.result, expect.result, "degraded mode is checksum-identical");
+    }
+    let agg = e.aggregated_metrics();
+    assert_eq!(agg.fault.degraded_requests.get(), n as u64);
+    assert_eq!(agg.native_requests.get(), n as u64, "inline completions are recorded");
+    // Releasing one shard restores normal sharded service.
+    e.set_quarantined(0, false);
+    let again = e.process_batch(mixed_batch(6));
+    assert_eq!(again.len(), 6);
+    assert!(again.iter().all(|r| r.result.is_ok()));
+    assert_eq!(e.aggregated_metrics().fault.degraded_requests.get(), n as u64);
+}
+
+#[test]
+fn no_faults_is_bitwise_identical_with_supervisor_on_or_off() {
+    // The degeneracy ladder: with no fault plan, a supervised engine,
+    // an unsupervised engine, and the single-pair coordinator must all
+    // produce identical (id, backend, result) streams — supervision is
+    // pure insurance, invisible until something actually fails.
+    let n = 24usize;
+    let mut single = Coordinator::with_parts(Router::new(RouterConfig::default(), None), None);
+    let want = single.process_batch(mixed_batch(n));
+    let mut supervised = chaos_engine(1, None, 200);
+    let mut unsupervised = Engine::new(EngineConfig {
+        pool: PoolConfig { shards: Some(1), pin: false, ..PoolConfig::default() },
+        supervisor: SupervisorConfig { enabled: false, ..SupervisorConfig::default() },
+        ..EngineConfig::default()
+    });
+    assert!(supervised.supervisor_enabled());
+    assert!(!unsupervised.supervisor_enabled());
+    let a = supervised.process_batch(mixed_batch(n));
+    let b = unsupervised.process_batch(mixed_batch(n));
+    assert_eq!(a.len(), want.len());
+    assert_eq!(b.len(), want.len());
+    for ((x, y), expect) in a.iter().zip(&b).zip(&want) {
+        assert_eq!(x.id, expect.id);
+        assert_eq!(y.id, expect.id);
+        assert_eq!(x.backend, expect.backend);
+        assert_eq!(y.backend, expect.backend);
+        assert_eq!(x.result, expect.result);
+        assert_eq!(y.result, expect.result);
+    }
+    // No recovery machinery fired on either engine, and only the
+    // supervised engine advertises its watchdog.
+    for e in [&supervised, &unsupervised] {
+        let agg = e.aggregated_metrics();
+        assert!(agg.fault.is_quiet(), "healthy runs leave every fault counter at zero");
+    }
+    assert!(supervised.report().contains("supervisor: on"));
+    assert!(!unsupervised.report().contains("supervisor:"));
+    assert!(!supervised.report().contains("faults:"), "quiet counters stay out of reports");
+}

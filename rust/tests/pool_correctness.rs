@@ -20,6 +20,7 @@ fn engine(shards: usize, channel_capacity: usize, max_batch: usize) -> Engine {
             pin: false,
             channel_capacity,
             max_batch,
+            ..PoolConfig::default()
         },
         ..EngineConfig::default()
     })
