@@ -15,6 +15,8 @@ arrays that changed order still diff correctly:
     admission.json      keyed by (mode, offered)   throughput_rps
     intra.json          keyed by (kernel)          pair_speedup,
                                                    parallel_for_speedup
+    cross_shard.json    keyed by (kernel,          speedup_vs_pair,
+                                  max_borrow)      speedup_vs_serial
 
 Every metric is higher-is-better. A metric that drops by more than
 --threshold percent (default 10) counts as a regression; the script
@@ -38,6 +40,10 @@ SPECS = {
     "pool_scaling.json": (("shards",), ("throughput_rps", "speedup")),
     "admission.json": (("mode", "offered"), ("throughput_rps",)),
     "intra.json": (("kernel",), ("pair_speedup", "parallel_for_speedup")),
+    "cross_shard.json": (
+        ("kernel", "max_borrow"),
+        ("speedup_vs_pair", "speedup_vs_serial"),
+    ),
 }
 
 

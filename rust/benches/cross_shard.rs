@@ -1,0 +1,52 @@
+//! Cross-shard cooperative-parallelism benchmark: one whale request
+//! borrowing idle SMT pair-shards through the lease broker.
+//!
+//! Reuses the `repro whale` sweep (`figures::whale_sweep`): for PR and
+//! BC on a Kronecker graph, measure serial, single-pair fork-join (the
+//! 2-thread ceiling), and the engine at borrow caps {0, B}. Every
+//! engine response is asserted bitwise equal to the serial checksum —
+//! the bench doubles as the cross-shard determinism gate, and the
+//! `max_borrow = 0` rows are the degeneracy anchor (no broker at all).
+//!
+//! Run: `cargo bench --bench cross_shard [-- --shards N --max-borrow B
+//! --scale S --reps R --no-pin]`
+//! The headline claim (`vs pair > 1` at borrow > 0) needs >= 2 idle
+//! physical core pairs; elsewhere the checksum gate still runs.
+
+mod common;
+
+use relic_smt::bench::figures;
+use relic_smt::cli::Args;
+use relic_smt::coordinator::EngineConfig;
+use relic_smt::relic::{affinity, pool, PoolConfig};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let shards = args.get_u64("shards", 2).max(1) as usize;
+    let scale = args.get_u64("scale", 10) as u32;
+    let reps = args.get_u64("reps", 3);
+    let cap = args.get_u64("max-borrow", (shards - 1) as u64) as usize;
+    let pin = !args.flag("no-pin");
+
+    println!("host: {}", affinity::topology_summary());
+    let pairs = pool::physical_core_pairs();
+    println!("physical core pairs: {pairs:?}");
+    if pairs.len() < shards {
+        println!(
+            "WARNING: fewer detected core pairs than shards — borrowed shards \
+             share cores with the owner and the vs-pair speedup flattens."
+        );
+    }
+
+    common::section("whale-scaling: serial vs pair vs borrowing engine");
+    let mut borrows = vec![0usize];
+    if cap > 0 {
+        borrows.push(cap);
+    }
+    let template = EngineConfig {
+        pool: PoolConfig { pin, ..PoolConfig::default() },
+        ..EngineConfig::default()
+    };
+    let rows = figures::whale_sweep(&template, shards, &borrows, scale, reps);
+    print!("{}", figures::render_whale(&rows));
+}

@@ -956,6 +956,167 @@ pub fn pool_rows_to_json(rows: &[PoolScalingRow]) -> String {
     crate::json::to_string(&Value::Array(arr))
 }
 
+/// One whale-scaling measurement: one oversized request at one borrow
+/// cap (see `EXPERIMENTS.md` §Whale-scaling protocol).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WhaleRow {
+    pub kernel: String,
+    pub shards: usize,
+    pub max_borrow: usize,
+    /// Mean serial single-instance time (ns).
+    pub serial_ns: f64,
+    /// Mean single-pair fork-join time (ns) — the 2-thread ceiling a
+    /// borrowing engine has to beat.
+    pub pair_ns: f64,
+    /// Mean engine latency of the whale request (ns), submit to drain.
+    pub engine_ns: f64,
+    pub speedup_vs_serial: f64,
+    pub speedup_vs_pair: f64,
+    /// Whether every engine response matched the serial checksum. The
+    /// sweep also *asserts* this, so a false value never reaches the
+    /// output — the field keeps the gate visible in the archived JSON.
+    pub checksum_ok: bool,
+}
+
+/// The whale-scaling sweep: one big request per rep through an engine
+/// at each borrow cap, against two baselines measured on the calling
+/// thread — serial, and single-pair fork-join (the 2-thread ceiling).
+/// `max_borrow = 0` rows are the degeneracy anchor (no broker at all);
+/// higher caps let the request borrow idle shards, so on an otherwise
+/// idle ≥2-shard SMT host `speedup_vs_pair > 1` is the tentpole claim.
+/// Every engine response is asserted bitwise equal to the serial
+/// checksum — the sweep doubles as the cross-shard determinism gate.
+pub fn whale_sweep(
+    template: &crate::coordinator::EngineConfig,
+    shards: usize,
+    max_borrows: &[usize],
+    scale: u32,
+    reps: u64,
+) -> Vec<WhaleRow> {
+    use crate::coordinator::{
+        run_native_kernel, run_native_kernel_par, Deadline, Engine, GraphKernel, Request,
+        RequestResult,
+    };
+    use crate::graph::kronecker::{kronecker_graph, KroneckerParams, PAPER_SEED};
+    use crate::relic::{Par, Relic};
+
+    let graph = kronecker_graph(&KroneckerParams::gap(scale, 16, PAPER_SEED));
+    let reps = reps.max(1);
+    // PageRank and BC: the two kernels whose hot loops are wide and
+    // regular enough for a whale to profit from extra pair-shards.
+    let kernels = [GraphKernel::Pr, GraphKernel::Bc];
+    let mut rows = Vec::new();
+    for kernel in kernels {
+        let expected = run_native_kernel(kernel, &graph, 0);
+        let mut serial_total = 0u128;
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            assert_eq!(run_native_kernel(kernel, &graph, 0), expected);
+            serial_total += t0.elapsed().as_nanos();
+        }
+        let serial_ns = serial_total as f64 / reps as f64;
+        let relic = Relic::new();
+        let par = Par::Relic(&relic);
+        // Untimed warmup doubles as the pair-path checksum gate.
+        assert_eq!(run_native_kernel_par(kernel, &graph, 0, &par), expected);
+        let mut pair_total = 0u128;
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            assert_eq!(run_native_kernel_par(kernel, &graph, 0, &par), expected);
+            pair_total += t0.elapsed().as_nanos();
+        }
+        let pair_ns = pair_total as f64 / reps as f64;
+        drop(relic);
+        for &max_borrow in max_borrows {
+            let mut config = template.clone();
+            config.pool.shards = Some(shards.max(1));
+            config.max_borrow = max_borrow;
+            let mut engine = Engine::new(config);
+            let make_req = |id: u64| Request {
+                id,
+                kernel,
+                graph: graph.clone(),
+                source: 0,
+                deadline: Deadline::none(),
+            };
+            // Untimed warmup rep (shard spawn, pinning, first-touch).
+            let warm = engine.process_batch(vec![make_req(0)]);
+            assert_eq!(warm.len(), 1);
+            let mut engine_total = 0u128;
+            for rep in 0..reps {
+                let t0 = std::time::Instant::now();
+                let responses = engine.process_batch(vec![make_req(rep + 1)]);
+                engine_total += t0.elapsed().as_nanos();
+                assert_eq!(responses.len(), 1);
+                assert_eq!(
+                    responses[0].result,
+                    RequestResult::Native(expected),
+                    "whale checksum diverged: kernel={kernel:?} max_borrow={max_borrow}"
+                );
+            }
+            let engine_ns = engine_total as f64 / reps as f64;
+            rows.push(WhaleRow {
+                kernel: kernel.artifact_name().to_string(),
+                shards: shards.max(1),
+                max_borrow,
+                serial_ns,
+                pair_ns,
+                engine_ns,
+                speedup_vs_serial: if engine_ns > 0.0 { serial_ns / engine_ns } else { 0.0 },
+                speedup_vs_pair: if engine_ns > 0.0 { pair_ns / engine_ns } else { 0.0 },
+                checksum_ok: true,
+            });
+        }
+    }
+    rows
+}
+
+/// Render the whale-scaling table.
+pub fn render_whale(rows: &[WhaleRow]) -> String {
+    let mut out = format!(
+        "{:<8}{:>8}{:>8}{:>12}{:>12}{:>12}{:>11}{:>9}\n",
+        "kernel", "shards", "borrow", "serial ms", "pair ms", "engine ms", "vs serial", "vs pair"
+    );
+    for r in rows {
+        out += &format!(
+            "{:<8}{:>8}{:>8}{:>12.3}{:>12.3}{:>12.3}{:>10.3}x{:>8.3}x\n",
+            r.kernel,
+            r.shards,
+            r.max_borrow,
+            r.serial_ns / 1e6,
+            r.pair_ns / 1e6,
+            r.engine_ns / 1e6,
+            r.speedup_vs_serial,
+            r.speedup_vs_pair,
+        );
+    }
+    out += "(vs pair > 1 at borrow > 0 = the whale beat the 2-thread single-pair ceiling; \
+            checksums asserted bitwise against serial)\n";
+    out
+}
+
+/// Serialize whale-scaling rows to JSON for the nightly trend diff.
+pub fn whale_rows_to_json(rows: &[WhaleRow]) -> String {
+    use crate::json::Value;
+    let arr = rows
+        .iter()
+        .map(|r| {
+            Value::Object(vec![
+                ("kernel".into(), Value::String(r.kernel.clone())),
+                ("shards".into(), Value::Number(r.shards as f64)),
+                ("max_borrow".into(), Value::Number(r.max_borrow as f64)),
+                ("serial_ns".into(), Value::Number(r.serial_ns)),
+                ("pair_ns".into(), Value::Number(r.pair_ns)),
+                ("engine_ns".into(), Value::Number(r.engine_ns)),
+                ("speedup_vs_serial".into(), Value::Number(r.speedup_vs_serial)),
+                ("speedup_vs_pair".into(), Value::Number(r.speedup_vs_pair)),
+                ("checksum_ok".into(), Value::Bool(r.checksum_ok)),
+            ])
+        })
+        .collect();
+    crate::json::to_string(&Value::Array(arr))
+}
+
 /// Render the intra-kernel comparison table.
 pub fn render_intra(rows: &[IntraRow]) -> String {
     let mut out = format!(
@@ -1337,5 +1498,26 @@ mod tests {
         let s = render_matrix(&cells);
         assert!(s.contains("bc"));
         assert!(s.contains("1.500(1.36)"));
+    }
+
+    #[test]
+    fn whale_sweep_small_graph_checksums_and_degenerate_row() {
+        // Unpinned, tiny scale, one rep: the correctness shape of the
+        // sweep (both kernels × both borrow caps, all checksums
+        // asserted inside), not a performance claim.
+        let template = crate::coordinator::EngineConfig {
+            pool: crate::relic::PoolConfig { pin: false, ..Default::default() },
+            ..Default::default()
+        };
+        let rows = whale_sweep(&template, 2, &[0, 1], 6, 1);
+        assert_eq!(rows.len(), 4, "pr/bc × borrow {{0,1}}");
+        assert!(rows.iter().all(|r| r.checksum_ok));
+        assert!(rows.iter().all(|r| r.serial_ns > 0.0 && r.engine_ns > 0.0));
+        assert_eq!(rows.iter().filter(|r| r.max_borrow == 0).count(), 2);
+        let s = render_whale(&rows);
+        assert!(s.contains("vs pair"));
+        let json = whale_rows_to_json(&rows);
+        assert!(json.contains("\"speedup_vs_pair\""));
+        assert!(json.contains("\"checksum_ok\""));
     }
 }

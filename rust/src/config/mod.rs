@@ -207,6 +207,10 @@ pub struct PoolSettings {
     /// milliseconds (liveness insurance for `submit_or_park`; the
     /// normal wakeup is the consumer's drain notify).
     pub park_timeout_ms: u64,
+    /// Maximum queue depth at which a shard is still offered to a
+    /// whale request for cross-shard borrowing (0 = truly idle shards
+    /// only; read only with `[relic] max_borrow > 0`).
+    pub offer_depth: usize,
 }
 
 impl Default for PoolSettings {
@@ -217,6 +221,7 @@ impl Default for PoolSettings {
             channel_capacity: 64,
             max_batch: 32,
             park_timeout_ms: 50,
+            offer_depth: 0,
         }
     }
 }
@@ -240,6 +245,10 @@ impl PoolSettings {
                 .get_int("pool.park_timeout_ms")
                 .map(|v| v.max(1) as u64)
                 .unwrap_or(d.park_timeout_ms),
+            offer_depth: raw
+                .get_int("pool.offer_depth")
+                .map(|v| v.max(0) as usize)
+                .unwrap_or(d.offer_depth),
         }
     }
 
@@ -364,6 +373,9 @@ pub struct SupervisorSettings {
     pub max_restarts: u32,
     /// First respawn backoff in milliseconds; doubles per restart.
     pub backoff_ms: u64,
+    /// Cap on concurrent degraded inline executions (0 = auto: one per
+    /// shard, i.e. one per physical core the pool discovered).
+    pub degraded_max_inflight: usize,
 }
 
 impl Default for SupervisorSettings {
@@ -374,6 +386,7 @@ impl Default for SupervisorSettings {
             stuck_after_ms: d.stuck_after.as_millis() as u64,
             max_restarts: d.max_restarts,
             backoff_ms: d.backoff_base.as_millis() as u64,
+            degraded_max_inflight: d.degraded_max_inflight,
         }
     }
 }
@@ -396,6 +409,10 @@ impl SupervisorSettings {
                 .get_int("supervisor.backoff_ms")
                 .map(|v| v.max(0) as u64)
                 .unwrap_or(d.backoff_ms),
+            degraded_max_inflight: raw
+                .get_int("supervisor.degraded_max_inflight")
+                .map(|v| v.max(0) as usize)
+                .unwrap_or(d.degraded_max_inflight),
         }
     }
 
@@ -406,6 +423,7 @@ impl SupervisorSettings {
             stuck_after: std::time::Duration::from_millis(self.stuck_after_ms),
             max_restarts: self.max_restarts,
             backoff_base: std::time::Duration::from_millis(self.backoff_ms),
+            degraded_max_inflight: self.degraded_max_inflight,
         }
     }
 }
@@ -521,6 +539,10 @@ pub struct RelicSettings {
     /// Default chunk-assignment schedule for `Par::Relic` loops:
     /// `"static"`, `"dynamic"` or `"edge-balanced"`.
     pub schedule: crate::relic::Schedule,
+    /// Maximum idle sibling shards one whale request may borrow for its
+    /// parallel loops (0 = cross-shard borrowing off — the engine
+    /// builds no lease broker at all).
+    pub max_borrow: usize,
 }
 
 impl Default for RelicSettings {
@@ -528,6 +550,7 @@ impl Default for RelicSettings {
         RelicSettings {
             queue_capacity: crate::relic::DEFAULT_QUEUE_CAPACITY,
             schedule: crate::relic::Schedule::Static,
+            max_borrow: 0,
         }
     }
 }
@@ -547,6 +570,10 @@ impl RelicSettings {
                 .get_str("relic.schedule")
                 .and_then(crate::relic::Schedule::parse)
                 .unwrap_or(d.schedule),
+            max_borrow: raw
+                .get_int("relic.max_borrow")
+                .map(|v| v.max(0) as usize)
+                .unwrap_or(d.max_borrow),
         }
     }
 
@@ -613,7 +640,7 @@ mod tests {
         assert_eq!(d.shard_count_hint(), None, "0 means auto");
         let raw = RawConfig::parse(
             "[pool]\nshards = 4\npin = false\nchannel_capacity = 8\nmax_batch = 2\n\
-             park_timeout_ms = 10\n",
+             park_timeout_ms = 10\noffer_depth = 2\n",
         )
         .unwrap();
         let s = PoolSettings::from_raw(&raw);
@@ -625,6 +652,7 @@ mod tests {
                 channel_capacity: 8,
                 max_batch: 2,
                 park_timeout_ms: 10,
+                offer_depth: 2,
             }
         );
         assert_eq!(s.shard_count_hint(), Some(4));
@@ -636,6 +664,7 @@ mod tests {
         assert_eq!(s.channel_capacity, 1);
         assert_eq!(s.max_batch, 32);
         assert_eq!(s.park_timeout_ms, 1, "a zero park timeout would spin");
+        assert_eq!(s.offer_depth, 0, "whales borrow truly idle shards only by default");
     }
 
     #[test]
@@ -645,9 +674,10 @@ mod tests {
         assert_eq!(d.stuck_after_ms, 200);
         assert_eq!(d.max_restarts, 3);
         assert_eq!(d.backoff_ms, 25);
+        assert_eq!(d.degraded_max_inflight, 0, "0 = one inline permit per shard");
         let raw = RawConfig::parse(
             "[supervisor]\nenabled = false\nstuck_after_ms = 50\nmax_restarts = 0\n\
-             backoff_ms = 5\n",
+             backoff_ms = 5\ndegraded_max_inflight = 3\n",
         )
         .unwrap();
         let s = SupervisorSettings::from_raw(&raw);
@@ -657,6 +687,7 @@ mod tests {
         assert_eq!(c.stuck_after, std::time::Duration::from_millis(50));
         assert_eq!(c.max_restarts, 0, "a zero budget (quarantine only) is legal");
         assert_eq!(c.backoff_base, std::time::Duration::from_millis(5));
+        assert_eq!(c.degraded_max_inflight, 3);
         // Partial overlay keeps defaults elsewhere.
         let raw = RawConfig::parse("[supervisor]\nmax_restarts = 9\n").unwrap();
         let s = SupervisorSettings::from_raw(&raw);
@@ -746,11 +777,15 @@ mod tests {
         let d = RelicSettings::default();
         assert_eq!(d.schedule, Schedule::Static);
         assert_eq!(d.queue_capacity, crate::relic::DEFAULT_QUEUE_CAPACITY);
-        let raw =
-            RawConfig::parse("[relic]\nschedule = \"dynamic\"\nqueue_capacity = 8\n").unwrap();
+        assert_eq!(d.max_borrow, 0, "cross-shard borrowing off by default");
+        let raw = RawConfig::parse(
+            "[relic]\nschedule = \"dynamic\"\nqueue_capacity = 8\nmax_borrow = 2\n",
+        )
+        .unwrap();
         let s = RelicSettings::from_raw(&raw);
         assert_eq!(s.schedule, Schedule::Dynamic);
         assert_eq!(s.queue_capacity, 8);
+        assert_eq!(s.max_borrow, 2);
         let rc = s.to_relic_config();
         assert_eq!(rc.schedule, Schedule::Dynamic);
         assert_eq!(rc.queue_capacity, 8);

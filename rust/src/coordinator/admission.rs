@@ -9,7 +9,10 @@
 //! * **Degraded** — every shard is quarantined (see
 //!   [`crate::relic::Supervisor`]), so the request was served *inline*
 //!   on the submitting thread instead of being refused — the engine
-//!   keeps answering, just without parallelism;
+//!   keeps answering, just without parallelism. Inline executions are
+//!   capped by a counting semaphore (`[supervisor]
+//!   degraded_max_inflight`) so a thundering herd of degraded callers
+//!   cannot oversubscribe the cores the shards were pinned to;
 //! * **QueueFull** — the non-blocking path found the routed shard's
 //!   bounded channel full; the request comes back to the caller
 //!   untouched, to retry, park, or redirect;

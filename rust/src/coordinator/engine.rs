@@ -8,7 +8,9 @@
 //! * every [`Request`] that passes admission is tagged with a sequence
 //!   number and dispatched to the shard with the least estimated wait
 //!   (bounded per-shard channel — see [`crate::relic::pool`] and
-//!   [`super::router::pick_shard`]). The wait estimate is *measured*:
+//!   [`super::router::pick_shard_leased`], which also steers small
+//!   requests away from shards currently lent to a whale). The wait
+//!   estimate is *measured*:
 //!   each shard's [`ServiceMetrics`] carries a per-kernel-class
 //!   service-time EMA ([`crate::metrics::ServiceEstimator`]) fed by
 //!   `record_completion` and read lock-free at admission, with the
@@ -38,6 +40,15 @@
 //! * every shard thread owns a native-only `Coordinator`; its drained
 //!   batches go through `process_batch`, so request pairing and the
 //!   odd-leftover intra-request fork-join still happen per shard;
+//! * with `max_borrow > 0` the engine builds a
+//!   [`LeaseBroker`] and idle shards serve **cross-shard leases**
+//!   between queue polls: one whale request fans its parallel loops out
+//!   to `2 × (1 + borrowed)` hardware threads, bitwise-identically to
+//!   the single-pair result, and a borrowed shard returns to its own
+//!   queue at the next chunk boundary the moment real work arrives (see
+//!   `ARCHITECTURE.md` §Cross-shard cooperation). `max_borrow = 0` (the
+//!   default) constructs none of this — the pre-borrowing data path,
+//!   structurally;
 //! * [`Engine::drain`] collects the responses of everything *accepted*
 //!   since the last drain and returns them in submission order;
 //! * per-shard [`ServiceMetrics`] plus the engine's own admission-side
@@ -79,17 +90,18 @@
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::{AdmissionSettings, PoolSettings, SupervisorSettings};
 use crate::relic::pool::{
-    discover_placements, PoolConfig, PoolSnapshot, RelicPool, Supervisor, SupervisorConfig,
+    discover_placements, IdleHook, PoolConfig, PoolSnapshot, RelicPool, Supervisor,
+    SupervisorConfig,
 };
-use crate::relic::{FaultKind, RelicConfig};
+use crate::relic::{CrossCtx, FaultKind, LeaseBroker, LeaseStats, RelicConfig};
 
 use super::admission::{shed_decision, Admission, AdmissionConfig, ShedReason};
-use super::router::{pick_shard, Router, RouterConfig};
+use super::router::{pick_shard_leased, Router, RouterConfig};
 use super::service::{Coordinator, Request, RequestResult, Response, ServiceMetrics};
 use super::{run_native_kernel, Backend};
 
@@ -105,6 +117,14 @@ pub struct EngineConfig {
     /// so the degenerate cost is zero. `enabled = false` restores the
     /// PR 5 failure semantics exactly.
     pub supervisor: SupervisorConfig,
+    /// Cross-shard borrowing: how many idle sibling shards one whale
+    /// request may borrow for its parallel loops (`[relic] max_borrow`).
+    /// `0` (the default) builds no [`LeaseBroker`] at all — bit-for-bit
+    /// the pre-borrowing engine.
+    pub max_borrow: usize,
+    /// Maximum queue depth at which a shard is still offered to a whale
+    /// (`[pool] offer_depth`). Only read when `max_borrow > 0`.
+    pub offer_depth: usize,
 }
 
 impl EngineConfig {
@@ -138,6 +158,10 @@ impl EngineConfig {
             router: RouterConfig::default(),
             admission: admission.to_config(),
             supervisor: supervisor.to_config(),
+            // `[relic] max_borrow` is not part of these three sections;
+            // the CLI overlays it after this call (serve / repro whale).
+            max_borrow: 0,
+            offer_depth: pool.offer_depth,
         }
     }
 }
@@ -154,6 +178,44 @@ struct Sequenced {
 struct ShardState {
     coord: Coordinator,
     shard: usize,
+}
+
+/// Counting semaphore bounding concurrent [`Admission::Degraded`]
+/// inline executions. With every shard quarantined, each submitting
+/// thread runs its kernel on its own stack; unbounded, a burst of
+/// degraded traffic would oversubscribe the very cores the shards were
+/// pinned to. The cap defaults to one permit per shard
+/// ([`SupervisorConfig::degraded_max_inflight`] `= 0`), i.e. the
+/// physical-core count the pool discovered.
+struct DegradedGate {
+    permits: Mutex<usize>,
+    freed: Condvar,
+}
+
+impl DegradedGate {
+    fn new(permits: usize) -> Self {
+        DegradedGate { permits: Mutex::new(permits.max(1)), freed: Condvar::new() }
+    }
+
+    /// Block until a permit is free, run `f`, release the permit (also
+    /// on panic — the guard is a `Drop`).
+    fn run<R>(&self, f: impl FnOnce() -> R) -> R {
+        let mut permits = self.permits.lock().expect("degraded gate poisoned");
+        while *permits == 0 {
+            permits = self.freed.wait(permits).expect("degraded gate poisoned");
+        }
+        *permits -= 1;
+        drop(permits);
+        struct Release<'a>(&'a DegradedGate);
+        impl Drop for Release<'_> {
+            fn drop(&mut self) {
+                *self.0.permits.lock().expect("degraded gate poisoned") += 1;
+                self.0.freed.notify_one();
+            }
+        }
+        let _release = Release(self);
+        f()
+    }
 }
 
 /// The sharded analytics engine.
@@ -181,6 +243,13 @@ pub struct Engine {
     /// the completion-side deadline misses and contained panics) in
     /// [`aggregated_metrics`](Self::aggregated_metrics).
     admission_metrics: Arc<ServiceMetrics>,
+    /// The cross-shard lease broker — `None` when `max_borrow == 0`
+    /// (the default): no broker, no idle hook, no lease checks anywhere
+    /// on the data path.
+    broker: Option<Arc<LeaseBroker>>,
+    /// Bounds concurrent degraded inline executions (see
+    /// [`DegradedGate`]).
+    degraded_gate: DegradedGate,
 }
 
 impl Engine {
@@ -203,12 +272,21 @@ impl Engine {
         } else {
             None
         };
+        // Build the lease broker *before* the pool so the factory can
+        // hand every shard's coordinator its `CrossCtx`; the pool's
+        // depth/quarantine handles are bound right after construction
+        // (an unbound shard is never offered, so the window is safe).
+        let broker =
+            (config.max_borrow > 0).then(|| Arc::new(LeaseBroker::new(placements.len())));
         let (tx, rx): (Sender<(u64, Response)>, _) = channel();
         let factory = {
             let shard_metrics = shard_metrics.clone();
             let router_cfg = config.router.clone();
             let edf = config.admission.edf;
             let fault = config.pool.fault.clone();
+            let broker = broker.clone();
+            let max_borrow = config.max_borrow;
+            let offer_depth = config.offer_depth;
             move |p: &crate::relic::ShardPlacement| {
                 let mut coord = Coordinator::with_config(
                     Router::new(router_cfg.clone(), None),
@@ -218,6 +296,12 @@ impl Engine {
                 );
                 coord.set_edf(edf);
                 coord.set_fault(fault.clone());
+                coord.set_cross(broker.as_ref().map(|b| CrossCtx {
+                    broker: Arc::clone(b),
+                    shard: p.shard,
+                    max_borrow,
+                    offer_depth,
+                }));
                 ShardState { coord, shard: p.shard }
             }
         };
@@ -265,7 +349,25 @@ impl Engine {
                 }
             }
         };
-        let pool = RelicPool::with_placements(placements, &config.pool, factory, handler);
+        // With a broker, idle shards serve cross-shard leases between
+        // 1 ms queue polls instead of blocking on their channel; without
+        // one the pool's blocking pop is used unchanged.
+        let idle: Option<IdleHook<ShardState>> = broker.as_ref().map(|_| {
+            Arc::new(|state: &mut ShardState, should_return: &(dyn Fn() -> bool + Sync)| {
+                state.coord.serve_lease(should_return)
+            }) as IdleHook<ShardState>
+        });
+        let pool = RelicPool::with_placements_idle(placements, &config.pool, factory, handler, idle);
+        if let Some(b) = &broker {
+            for s in 0..pool.shard_count() {
+                b.bind(s, pool.depth_handle(s), pool.quarantined_handle(s));
+            }
+        }
+        let degraded_permits = if config.supervisor.degraded_max_inflight == 0 {
+            pool.shard_count()
+        } else {
+            config.supervisor.degraded_max_inflight
+        };
         Engine {
             pool,
             responses: rx,
@@ -277,6 +379,8 @@ impl Engine {
             supervisor,
             shard_metrics,
             admission_metrics: Arc::new(ServiceMetrics::default()),
+            broker,
+            degraded_gate: DegradedGate::new(degraded_permits),
         }
     }
 
@@ -293,6 +397,12 @@ impl Engine {
     /// Whether the shard watchdog is active.
     pub fn supervisor_enabled(&self) -> bool {
         self.supervisor.is_some()
+    }
+
+    /// Lease-traffic counters of the cross-shard broker, or `None` when
+    /// `max_borrow == 0` and no broker exists.
+    pub fn lease_stats(&self) -> Option<LeaseStats> {
+        self.broker.as_ref().map(|b| b.stats())
     }
 
     /// Shards currently quarantined (skipped by routing).
@@ -327,13 +437,20 @@ impl Engine {
         // Quarantined shards are not candidates; with the supervisor
         // off nothing is ever quarantined, so the filter is inert.
         let class = req.kernel.class();
-        let routed = pick_shard(
+        let routed = pick_shard_leased(
             self.shard_metrics
                 .iter()
                 .zip(self.pool.depths_iter())
                 .enumerate()
                 .filter(|(shard, _)| !self.pool.is_quarantined(*shard))
-                .map(|(shard, (m, depth))| (shard, depth, m.service_estimator.estimate_ns(class))),
+                .map(|(shard, (m, depth))| {
+                    (
+                        shard,
+                        depth,
+                        m.service_estimator.estimate_ns(class),
+                        self.broker.as_ref().is_some_and(|b| b.is_leased(shard)),
+                    )
+                }),
         );
         let est_wait = match routed {
             Ok((_, wait)) => wait,
@@ -398,11 +515,15 @@ impl Engine {
 
     /// Serial inline service for a request no shard can take: run the
     /// kernel on the calling thread, record completion on the engine's
-    /// own metrics, and complete the sequence slot.
+    /// own metrics, and complete the sequence slot. Concurrent inline
+    /// runs are bounded by the [`DegradedGate`] — the measured latency
+    /// includes any wait for a permit, since that wait *is* part of the
+    /// degraded service time.
     fn serve_inline(&mut self, sq: Sequenced) {
         let Sequenced { seq, req } = sq;
         let start = Instant::now();
-        let sum = run_native_kernel(req.kernel, &req.graph, req.source);
+        let sum =
+            self.degraded_gate.run(|| run_native_kernel(req.kernel, &req.graph, req.source));
         let latency_ns = start.elapsed().as_nanos() as u64;
         self.admission_metrics.record_completion(
             req.kernel,
@@ -431,7 +552,7 @@ impl Engine {
     /// exactly one of {healthy shard, inline} executes it.
     fn reroute(&mut self, sq: Sequenced) {
         let class = sq.req.kernel.class();
-        let retry = pick_shard(
+        let retry = pick_shard_leased(
             self.shard_metrics
                 .iter()
                 .zip(self.pool.depths_iter())
@@ -439,7 +560,14 @@ impl Engine {
                 .filter(|(shard, _)| {
                     !self.pool.is_quarantined(*shard) && !self.pool.shard_dead(*shard)
                 })
-                .map(|(shard, (m, depth))| (shard, depth, m.service_estimator.estimate_ns(class))),
+                .map(|(shard, (m, depth))| {
+                    (
+                        shard,
+                        depth,
+                        m.service_estimator.estimate_ns(class),
+                        self.broker.as_ref().is_some_and(|b| b.is_leased(shard)),
+                    )
+                }),
         );
         match retry {
             Ok((shard, _)) => match self.pool.try_submit_to(shard, sq) {
@@ -616,14 +744,19 @@ impl Engine {
                 self.pool.set_quarantined(dead.shard, true);
                 self.admission_metrics.fault.watchdog_trips.inc();
                 let sq = dead.item;
-                let retry = pick_shard(
+                let retry = pick_shard_leased(
                     self.shard_metrics
                         .iter()
                         .zip(self.pool.depths_iter())
                         .enumerate()
                         .filter(|(s, _)| !self.pool.is_quarantined(*s) && !self.pool.shard_dead(*s))
                         .map(|(s, (m, depth))| {
-                            (s, depth, m.service_estimator.estimate_ns(sq.req.kernel.class()))
+                            (
+                                s,
+                                depth,
+                                m.service_estimator.estimate_ns(sq.req.kernel.class()),
+                                self.broker.as_ref().is_some_and(|b| b.is_leased(s)),
+                            )
                         }),
                 );
                 match retry {
@@ -791,6 +924,12 @@ impl Engine {
                 sc.stuck_after,
                 sc.max_restarts,
                 self.pool.quarantined_count()
+            );
+        }
+        if let Some(ls) = self.lease_stats() {
+            out += &format!(
+                "cross-shard: leases served {}, revoked {}, chunks lent {}\n",
+                ls.served, ls.revoked, ls.chunks_lent
             );
         }
         if !agg.fault.is_quiet() {
@@ -1304,5 +1443,107 @@ mod tests {
         });
         let _ = e.submit(req(0, GraphKernel::Bfs));
         let _ = e.drain();
+    }
+
+    /// Engine with cross-shard borrowing enabled.
+    fn borrowing_engine(shards: usize, max_borrow: usize) -> Engine {
+        Engine::new(EngineConfig {
+            pool: PoolConfig { shards: Some(shards), pin: false, ..PoolConfig::default() },
+            max_borrow,
+            ..EngineConfig::default()
+        })
+    }
+
+    #[test]
+    fn max_borrow_zero_builds_no_broker() {
+        // The degeneracy knob: the default engine has no lease broker at
+        // all, so nothing on the data path can even consult one.
+        let e = engine(2);
+        assert!(e.lease_stats().is_none());
+        let b = borrowing_engine(2, 1);
+        assert_eq!(b.lease_stats(), Some(LeaseStats::default()));
+    }
+
+    #[test]
+    fn borrowing_engine_answers_with_serial_checksums() {
+        // Whale path end-to-end: single-request batches take the
+        // odd-leftover fork-join, which under a broker opens a lease per
+        // request. Whether or not a sibling attaches in time, the result
+        // must be bitwise the serial checksum.
+        let mut e = borrowing_engine(2, 1);
+        let g = paper_graph();
+        for (i, kernel) in GraphKernel::all().into_iter().enumerate() {
+            assert!(e.submit(req(i as u64, kernel)).is_accepted());
+            let responses = e.drain();
+            assert_eq!(responses.len(), 1);
+            assert_eq!(
+                responses[0].result,
+                RequestResult::Native(run_native_kernel(kernel, &g, 0)),
+                "{kernel:?} under max_borrow=1 must match serial"
+            );
+        }
+        // Teardown: dropping the engine closes the queues; the idle
+        // hook's should_return sees the close and the shards exit.
+        let report = e.report();
+        assert!(report.contains("cross-shard: leases served"));
+    }
+
+    #[test]
+    fn degraded_gate_bounds_concurrent_inline_runs() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let gate = Arc::new(DegradedGate::new(2));
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let (gate, inflight, peak) =
+                    (Arc::clone(&gate), Arc::clone(&inflight), Arc::clone(&peak));
+                std::thread::spawn(move || {
+                    gate.run(|| {
+                        let now = inflight.fetch_add(1, Ordering::SeqCst) + 1;
+                        peak.fetch_max(now, Ordering::SeqCst);
+                        std::thread::sleep(Duration::from_millis(5));
+                        inflight.fetch_sub(1, Ordering::SeqCst);
+                    });
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert!(peak.load(Ordering::SeqCst) <= 2, "at most two permits in flight");
+        assert_eq!(inflight.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn degraded_gate_releases_permit_on_panic() {
+        let gate = DegradedGate::new(1);
+        let _ = std::panic::catch_unwind(AssertUnwindSafe(|| gate.run(|| panic!("boom"))));
+        // The permit came back: a second run does not deadlock.
+        assert_eq!(gate.run(|| 7), 7);
+    }
+
+    #[test]
+    fn degraded_engine_still_serves_with_gate() {
+        // All shards quarantined → inline service through the gate; the
+        // answer and the degraded counter are unchanged by the cap.
+        let mut e = Engine::new(EngineConfig {
+            pool: PoolConfig { shards: Some(1), pin: false, ..PoolConfig::default() },
+            supervisor: SupervisorConfig {
+                degraded_max_inflight: 1,
+                ..SupervisorConfig::default()
+            },
+            ..EngineConfig::default()
+        });
+        e.set_quarantined(0, true);
+        let verdict = e.submit(req(0, GraphKernel::Tc));
+        assert!(matches!(verdict, Admission::Degraded));
+        let responses = e.drain();
+        assert_eq!(responses.len(), 1);
+        assert_eq!(
+            responses[0].result,
+            RequestResult::Native(run_native_kernel(GraphKernel::Tc, &paper_graph(), 0))
+        );
+        assert_eq!(e.aggregated_metrics().fault.degraded_requests.get(), 1);
     }
 }

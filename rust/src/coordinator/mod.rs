@@ -31,7 +31,7 @@ pub use admission::{
     edf_order, shed_decision, Admission, AdmissionConfig, Deadline, ShedPolicy, ShedReason,
 };
 pub use engine::{Engine, EngineConfig};
-pub use router::{pick_shard, Backend, RouteError, Router, RouterConfig};
+pub use router::{pick_shard, pick_shard_leased, Backend, RouteError, Router, RouterConfig};
 pub use service::{Coordinator, Request, RequestResult, Response, ServiceMetrics};
 
 use crate::graph::CsrGraph;

@@ -152,6 +152,46 @@ where
     Ok((shard, std::time::Duration::from_nanos(wait)))
 }
 
+/// [`pick_shard`] with lease awareness: each candidate carries a fourth
+/// flag — whether the shard currently holds a cross-shard lease (posted
+/// or taken, [`crate::relic::LeaseBroker::is_leased`]). Non-leased
+/// shards are preferred outright: among them the pick is exactly
+/// [`pick_shard`]'s. Only when *every* candidate is leased does the
+/// pick fall back to the full set, with the lease folded into the wait
+/// estimate as one extra virtual occupant — `(depth + 2) × est_ns` —
+/// because a borrowed shard is mid-chunk for a whale and a new request
+/// waits out roughly one extra service quantum before the revocation
+/// brings the shard home. With every flag false this is bit-for-bit
+/// [`pick_shard`] (the `max_borrow = 0` degeneracy).
+pub fn pick_shard_leased<I>(shards: I) -> Result<(usize, std::time::Duration), RouteError>
+where
+    I: IntoIterator<Item = (usize, usize, u64, bool)>,
+{
+    // Best (index, est wait ns, depth) among non-leased shards, and —
+    // in case there are none — among all shards with the lease counted
+    // as one extra occupant.
+    let mut best_free: Option<(usize, u64, usize)> = None;
+    let mut best_any: Option<(usize, u64, usize)> = None;
+    for (shard, depth, est_ns, leased) in shards {
+        let occupants = (depth as u64).saturating_add(1 + u64::from(leased));
+        let wait = occupants.saturating_mul(est_ns);
+        let better = |best: &Option<(usize, u64, usize)>| match *best {
+            None => true,
+            Some((_, best_wait, best_depth)) => {
+                wait < best_wait || (wait == best_wait && depth < best_depth)
+            }
+        };
+        if better(&best_any) {
+            best_any = Some((shard, wait, depth));
+        }
+        if !leased && better(&best_free) {
+            best_free = Some((shard, wait, depth));
+        }
+    }
+    let (shard, wait, _) = best_free.or(best_any).ok_or(RouteError::NoShardsAvailable)?;
+    Ok((shard, std::time::Duration::from_nanos(wait)))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -255,6 +295,40 @@ mod tests {
             RouteError::NoShardsAvailable.to_string(),
             "no shards available for routing"
         );
+    }
+
+    #[test]
+    fn pick_shard_leased_all_free_matches_pick_shard() {
+        // With every lease flag false the leased variant must be
+        // bit-for-bit pick_shard — the max_borrow = 0 degeneracy.
+        for cands in [
+            vec![(0usize, 3usize, 100u64), (1, 0, 10_000), (2, 1, 500)],
+            uniform(&[0, 0, 0], 0),
+            uniform(&[3, 2, 5], 1_000),
+            vec![(1, 2, 100), (3, 1, 100)],
+        ] {
+            let flagged: Vec<_> = cands.iter().map(|&(s, d, e)| (s, d, e, false)).collect();
+            assert_eq!(pick_shard_leased(flagged), pick_shard(cands));
+        }
+    }
+
+    #[test]
+    fn pick_shard_leased_avoids_whale_serving_shards() {
+        use std::time::Duration;
+        // Shard 0 is idle but lent to a whale; shard 1 has real queue
+        // depth. A small request prefers the non-leased shard outright.
+        assert_eq!(
+            pick_shard_leased([(0, 0, 1_000, true), (1, 2, 1_000, false)]),
+            Ok((1, Duration::from_nanos(3_000)))
+        );
+        // Everything leased: fall back to the full set with the lease
+        // folded in as one extra occupant — (0+2)×1000 beats (1+2)×1000.
+        assert_eq!(
+            pick_shard_leased([(0, 0, 1_000, true), (1, 1, 1_000, true)]),
+            Ok((0, Duration::from_nanos(2_000)))
+        );
+        // Empty candidate set still errors instead of panicking.
+        assert_eq!(pick_shard_leased(std::iter::empty()), Err(RouteError::NoShardsAvailable));
     }
 
     #[test]

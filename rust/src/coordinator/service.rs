@@ -18,7 +18,7 @@ use std::time::Instant;
 
 use crate::graph::{dense, CsrGraph};
 use crate::metrics::{AdmissionMetrics, Counter, FaultMetrics, Histogram, ServiceEstimator};
-use crate::relic::{FaultKind, FaultPlan, Par, Relic, RelicConfig};
+use crate::relic::{with_lease, CrossCtx, FaultKind, FaultPlan, Par, Relic, RelicConfig};
 use crate::runtime::GraphExecutor;
 
 use super::admission::{edf_order, Deadline};
@@ -168,6 +168,12 @@ pub struct Coordinator {
     /// inside the containment wrapper, so an injected panic exercises
     /// exactly the path a real kernel panic takes.
     fault: Option<Arc<FaultPlan>>,
+    /// Cross-shard borrowing context (`None` = PR 6 behavior exactly).
+    /// With it set, the odd-leftover request opens a lease session so
+    /// its intra-request fork-join can fan out to borrowed shards, and
+    /// [`serve_lease`](Self::serve_lease) lets *this* shard lend its
+    /// pair to a sibling's whale request while idle.
+    cross: Option<CrossCtx>,
     pub metrics: Arc<ServiceMetrics>,
 }
 
@@ -193,7 +199,26 @@ impl Coordinator {
             relic: Relic::with_config(relic),
             edf: false,
             fault: None,
+            cross: None,
             metrics,
+        }
+    }
+
+    /// Install (or clear) the cross-shard borrowing context. `None` —
+    /// the default — keeps every path bit-for-bit the single-pair
+    /// coordinator; the engine sets this only when `max_borrow > 0`.
+    pub fn set_cross(&mut self, cross: Option<CrossCtx>) {
+        self.cross = cross;
+    }
+
+    /// Serve any cross-shard lease posted to this shard: attach and
+    /// lend the pair to the owner's chunk race until the session closes
+    /// or `should_return` fires. Called from the pool's idle hook —
+    /// returns whether a lease was actually served.
+    pub fn serve_lease(&self, should_return: &(dyn Fn() -> bool + Sync)) -> bool {
+        match &self.cross {
+            Some(ctx) => ctx.broker.serve(ctx.shard, &self.relic, should_return),
+            None => false,
         }
     }
 
@@ -380,11 +405,14 @@ impl Coordinator {
                 (Some((idx, req)), None) => {
                     // Odd leftover: no partner request to pair with, so
                     // parallelize *inside* the request — fork-join the
-                    // kernel's hot loops over the same SMT pair. The
-                    // scope protocol re-raises an assistant-side panic
-                    // on this thread *after* the chunk protocol
-                    // completes, so catching here leaves the Relic pair
-                    // healthy.
+                    // kernel's hot loops over the same SMT pair, and,
+                    // with a cross context installed, over any idle
+                    // shards a lease session can borrow (the whale
+                    // path). The scope protocol re-raises an
+                    // assistant-side panic on this thread *after* the
+                    // chunk protocol completes, so catching here leaves
+                    // the Relic pair healthy; the lease session
+                    // likewise tears down before the unwind leaves it.
                     let t0 = Instant::now();
                     let outcome = catch_unwind(AssertUnwindSafe(|| {
                         if let Some(p) = plan.as_deref() {
@@ -392,12 +420,19 @@ impl Coordinator {
                                 panic!("injected fault: panic on {}", req.kernel.artifact_name());
                             }
                         }
-                        run_native_kernel_par(
-                            req.kernel,
-                            &req.graph,
-                            req.source,
-                            &Par::Relic(&self.relic),
-                        )
+                        match &self.cross {
+                            Some(ctx) => {
+                                with_lease(ctx, &self.relic, self.relic.default_schedule(), |par| {
+                                    run_native_kernel_par(req.kernel, &req.graph, req.source, par)
+                                })
+                            }
+                            None => run_native_kernel_par(
+                                req.kernel,
+                                &req.graph,
+                                req.source,
+                                &Par::Relic(&self.relic),
+                            ),
+                        }
                     }));
                     let done = Instant::now();
                     let latency = done.duration_since(t0).as_nanos() as u64;
@@ -696,6 +731,28 @@ mod tests {
         let again = c.process_batch(vec![req(1, GraphKernel::Tc)]);
         assert_eq!(again[0].result, RequestResult::Native(want));
         assert_eq!(c.metrics.intra_requests.get(), 1);
+    }
+
+    #[test]
+    fn cross_ctx_with_zero_borrow_matches_plain_coordinator() {
+        // The degeneracy rung for PR 7: max_borrow = 0 must leave the
+        // odd-leftover path bit-for-bit the single-pair coordinator.
+        use crate::relic::LeaseBroker;
+        let mut plain = native_coordinator();
+        let mut crossed = native_coordinator();
+        crossed.set_cross(Some(CrossCtx {
+            broker: Arc::new(LeaseBroker::new(1)),
+            shard: 0,
+            max_borrow: 0,
+            offer_depth: 0,
+        }));
+        for k in GraphKernel::all() {
+            let a = plain.process_batch(vec![req(0, k)]);
+            let b = crossed.process_batch(vec![req(0, k)]);
+            assert_eq!(a[0].result, b[0].result, "{k:?}");
+        }
+        assert!(!plain.serve_lease(&|| false), "no cross context → nothing to serve");
+        assert!(!crossed.serve_lease(&|| false), "no lease posted → nothing served");
     }
 
     #[test]

@@ -19,7 +19,10 @@
 //!                    --edf serves batches earliest-deadline-first,
 //!                    --supervisor / --no-supervisor arms the shard
 //!                    watchdog, --fault-* flags inject one scripted
-//!                    failure for recovery drills)
+//!                    failure for recovery drills, --max-borrow B lets
+//!                    whale requests borrow up to B idle pair-shards,
+//!                    --offer-depth D still offers shards with ≤ D
+//!                    queued requests)
 //! repro pool         pool-scaling sweep: throughput vs shard count,
 //!                    with pool-vs-single-pair checksum verification
 //!                    (--shards 1,2,4 --requests N --reps R)
@@ -36,14 +39,20 @@
 //!                    against a supervised engine, asserting the
 //!                    no-drop invariant and per-scenario recovery
 //!                    counters (--requests N --shards N)
+//! repro whale        whale-scaling sweep: one oversized request
+//!                    borrowing idle pair-shards via the lease broker,
+//!                    vs the serial and single-pair baselines, with a
+//!                    bitwise checksum gate (--shards N --max-borrow B
+//!                    --scale S --reps R; borrow 0 is always measured
+//!                    as the degeneracy anchor)
 //! repro selftest     PJRT artifact round-trip check
 //! ```
 //!
 //! Common options: `--out results` writes figure JSON/text files;
 //! `--iters N` (wallclock); `--artifacts DIR`; `--config FILE` loads
-//! `[pool]`/`[admission]`/`[supervisor]`/`[fault]` settings for
-//! serve/pool/admission/faults (CLI flags override); `--no-pin`
-//! disables CPU pinning.
+//! `[pool]`/`[admission]`/`[supervisor]`/`[fault]`/`[relic]` settings
+//! for serve/pool/admission/faults/whale (CLI flags override);
+//! `--no-pin` disables CPU pinning.
 
 use std::path::Path;
 
@@ -263,13 +272,15 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 let settings = pool_settings(args)?;
                 let supervisor = supervisor_settings(args)?;
                 let fault = fault_settings(args)?;
+                let relic = relic_settings(args)?;
                 let mut engine_cfg =
                     EngineConfig::from_settings(&settings, &admission, &supervisor);
                 engine_cfg.pool.fault = fault.plan();
+                engine_cfg.max_borrow = relic.max_borrow;
                 let mut engine = Engine::new(engine_cfg);
                 println!(
                     "host: {}; engine: {} shards; shed policy {}; deadline {:?}; \
-                     ema alpha {}; edf {}; supervisor {}{}",
+                     ema alpha {}; edf {}; supervisor {}; max borrow {}{}",
                     affinity::topology_summary(),
                     engine.shard_count(),
                     admission.shed,
@@ -277,6 +288,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
                     admission.ema_alpha,
                     if admission.edf { "on" } else { "off" },
                     if engine.supervisor_enabled() { "on" } else { "off" },
+                    relic.max_borrow,
                     if fault.is_empty() { "" } else { "; fault injection armed" },
                 );
                 let t0 = std::time::Instant::now();
@@ -375,6 +387,40 @@ fn run(args: &Args) -> anyhow::Result<()> {
             println!("{}", figures::render_faults(&rows));
             write_out(args, "faults.json", &figures::fault_rows_to_json(&rows))?;
         }
+        Some("whale") => {
+            let settings = pool_settings(args)?;
+            let admission = admission_settings(args)?;
+            let supervisor = supervisor_settings(args)?;
+            let relic = relic_settings(args)?;
+            let shards = args.get_u64("shards", 2).max(1) as usize;
+            let scale = args.get_u64("scale", 10) as u32;
+            let reps = args.get_u64("reps", 3);
+            // Borrow cap: CLI flag, else `[relic] max_borrow` when set,
+            // else every other shard. Borrow 0 is always measured too —
+            // it is the degeneracy anchor the speedups are read against.
+            let cap_default =
+                if relic.max_borrow > 0 { relic.max_borrow } else { shards - 1 };
+            let cap = args.get_u64("max-borrow", cap_default as u64) as usize;
+            let mut borrows = vec![0usize];
+            if cap > 0 {
+                borrows.push(cap);
+            }
+            println!("host: {}", affinity::topology_summary());
+            if shards < 2 || cap == 0 {
+                println!(
+                    "WARNING: borrowing needs >= 2 shards and a borrow cap > 0; \
+                     this run only exercises the degenerate path.\n"
+                );
+            }
+            let template = EngineConfig::from_settings(&settings, &admission, &supervisor);
+            println!(
+                "whale-scaling sweep: {shards} shard(s), borrow caps {borrows:?}, \
+                 graph scale {scale}, {reps} reps\n"
+            );
+            let rows = figures::whale_sweep(&template, shards, &borrows, scale, reps);
+            println!("{}", figures::render_whale(&rows));
+            write_out(args, "cross_shard.json", &figures::whale_rows_to_json(&rows))?;
+        }
         Some("selftest") => {
             let artifacts = args.get("artifacts").unwrap_or("artifacts");
             let mut exec = GraphExecutor::new(Path::new(artifacts))?;
@@ -405,7 +451,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         _ => {
             println!(
                 "usage: repro <fig1|fig3|fig4|granularity|ablation|wallclock|intra\
-                 |serve|pool|admission|faults|selftest> [--options]"
+                 |serve|pool|admission|faults|whale|selftest> [--options]"
             );
             println!("see rust/src/main.rs docs for details");
         }
@@ -414,7 +460,8 @@ fn run(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `[relic]` settings: config file first (`--config PATH`), then the
-/// `--schedule static|dynamic|edge-balanced` CLI override.
+/// `--schedule static|dynamic|edge-balanced` and `--max-borrow N` CLI
+/// overrides.
 fn relic_settings(args: &Args) -> anyhow::Result<RelicSettings> {
     let mut s = match args.get("config") {
         Some(path) => RelicSettings::from_raw(&RawConfig::load(Path::new(path))?),
@@ -425,6 +472,7 @@ fn relic_settings(args: &Args) -> anyhow::Result<RelicSettings> {
             anyhow::anyhow!("unknown --schedule {name:?} (static|dynamic|edge-balanced)")
         })?;
     }
+    s.max_borrow = args.get_u64("max-borrow", s.max_borrow as u64) as usize;
     Ok(s)
 }
 
@@ -459,9 +507,9 @@ fn admission_settings(args: &Args) -> anyhow::Result<AdmissionSettings> {
 
 /// `[pool]` settings: config file first (`--config PATH`), then CLI
 /// overrides (`--shards N`, `--no-pin`, `--channel-capacity N`,
-/// `--max-batch N`, `--park-timeout-ms N`). A `--shards` value that is
-/// not a single integer (the `pool` command's sweep list) leaves the
-/// file/default value.
+/// `--max-batch N`, `--park-timeout-ms N`, `--offer-depth N`). A
+/// `--shards` value that is not a single integer (the `pool` command's
+/// sweep list) leaves the file/default value.
 fn pool_settings(args: &Args) -> anyhow::Result<PoolSettings> {
     let mut s = match args.get("config") {
         Some(path) => PoolSettings::from_raw(&RawConfig::load(Path::new(path))?),
@@ -477,6 +525,7 @@ fn pool_settings(args: &Args) -> anyhow::Result<PoolSettings> {
         args.get_u64("channel-capacity", s.channel_capacity as u64).max(1) as usize;
     s.max_batch = args.get_u64("max-batch", s.max_batch as u64).max(1) as usize;
     s.park_timeout_ms = args.get_u64("park-timeout-ms", s.park_timeout_ms).max(1);
+    s.offer_depth = args.get_u64("offer-depth", s.offer_depth as u64) as usize;
     Ok(s)
 }
 

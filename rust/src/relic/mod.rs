@@ -39,6 +39,14 @@
 //! their queued work is redirected (see `ARCHITECTURE.md` §Failure
 //! domains & recovery).
 //!
+//! [`cross`] adds the *second* level of fork-join on top of the pool:
+//! one whale request can borrow idle sibling shards through a
+//! [`LeaseBroker`], fanning its parallel loops out to
+//! `2 × (1 + borrowed)` hardware threads while keeping results bitwise
+//! identical to the single-pair path — leases are revocable at chunk
+//! granularity, so a borrowed shard returns to its own queue the moment
+//! real work arrives (see `ARCHITECTURE.md` §Cross-shard cooperation).
+//!
 //! ```
 //! use relic_smt::relic::Relic;
 //! use std::sync::atomic::{AtomicU64, Ordering};
@@ -61,6 +69,7 @@
 //! ```
 
 pub mod affinity;
+pub mod cross;
 pub mod fault;
 mod framework;
 pub mod parallel;
@@ -69,6 +78,10 @@ pub mod scope;
 mod spsc;
 pub mod wait;
 
+pub use cross::{
+    cross_chunk_count, with_lease, CrossCtx, CrossSession, LeaseBroker, LeaseStats,
+    MAX_CROSS_CHUNKS,
+};
 pub use fault::{FaultKind, FaultPlan};
 pub use framework::{
     QueueFull, Relic, RelicConfig, RelicStats, DEFAULT_QUEUE_CAPACITY, MAX_BATCH_BLOCK,
@@ -76,8 +89,8 @@ pub use framework::{
 };
 pub use parallel::{Par, Schedule, DEFAULT_GRAIN};
 pub use pool::{
-    PoolConfig, PoolSnapshot, RelicPool, ShardDead, ShardHealth, ShardPlacement, Supervisor,
-    SupervisorConfig, SupervisorVerdict,
+    IdleHook, PoolConfig, PoolSnapshot, RelicPool, ShardDead, ShardHealth, ShardPlacement,
+    Supervisor, SupervisorConfig, SupervisorVerdict,
 };
 pub use scope::{dyn_chunk_count, Scope, MAX_ASSIST_CHUNKS, MAX_CHUNK_SLOTS, MAX_DYN_CHUNKS};
 pub use spsc::SpscQueue;

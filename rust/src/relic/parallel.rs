@@ -23,6 +23,15 @@
 //! the range fits a single grain: a 4-element loop should not pay the
 //! submit/wait handshake.
 //!
+//! [`Par::Cross`] (built only inside [`super::cross::with_lease`])
+//! widens the same helpers into a *two-level* fork-join: the loop is
+//! first carved at deterministic shard-level boundaries, then this
+//! pair and every borrowed pair-shard claim those chunks from a shared
+//! cursor and run each one through the ordinary pair-level protocol.
+//! Determinism is unchanged — boundaries stay a pure function of
+//! `(range, grain, schedule)` and partials still fold in ascending
+//! chunk order, so which shard ran a chunk never shows in the result.
+//!
 //! ```
 //! use relic_smt::relic::{Par, Relic, Schedule};
 //!
@@ -47,6 +56,7 @@
 
 use std::ops::Range;
 
+use super::cross::{bounds_by, cross_chunk_count, even_bounds, CrossSession, MAX_CROSS_CHUNKS};
 use super::framework::Relic;
 use super::scope::{dyn_chunk_count, MAX_CHUNK_SLOTS};
 
@@ -155,6 +165,13 @@ pub enum Par<'r> {
     /// Fork-join with an explicit per-loop schedule (built by
     /// [`Par::with_schedule`]; overrides the runtime default).
     Scheduled(&'r Relic, Schedule),
+    /// Hierarchical two-level fork-join: loops big enough to split are
+    /// carved at shard-level boundaries and claimed by this pair *and*
+    /// every borrowed pair-shard attached to the
+    /// [`CrossSession`](super::cross::CrossSession) (built only by
+    /// [`super::cross::with_lease`]). Loops that don't split fall back
+    /// to the plain pair path under the carried [`Schedule`].
+    Cross(&'r Relic, Schedule, &'r CrossSession<'r>),
 }
 
 /// Raw slice base pointer that may cross to the assistant thread.
@@ -195,6 +212,7 @@ impl<'r> Par<'r> {
         match self {
             Par::Serial => Par::Serial,
             Par::Relic(r) | Par::Scheduled(r, _) => Par::Scheduled(r, schedule),
+            Par::Cross(r, _, session) => Par::Cross(r, schedule, session),
         }
     }
 
@@ -204,7 +222,7 @@ impl<'r> Par<'r> {
         match self {
             Par::Serial => Schedule::Static,
             Par::Relic(r) => r.default_schedule(),
-            Par::Scheduled(_, s) => *s,
+            Par::Scheduled(_, s) | Par::Cross(_, s, _) => *s,
         }
     }
 
@@ -229,13 +247,60 @@ impl<'r> Par<'r> {
         match *self {
             Par::Serial => None,
             Par::Relic(r) => Some((r, r.default_schedule())),
-            Par::Scheduled(r, s) => Some((r, s)),
+            Par::Scheduled(r, s) | Par::Cross(r, s, _) => Some((r, s)),
+        }
+    }
+
+    /// The cross-shard session a loop of `len` indices should fan out
+    /// through, with the shard-level chunk count already computed.
+    /// `None` for every non-cross plan and for loops too small to carve
+    /// into at least two shard-level chunks — those fall through to the
+    /// single-pair paths via [`plan_for`](Self::plan_for).
+    fn cross_plan(
+        &self,
+        len: usize,
+        grain: usize,
+    ) -> Option<(&'r Relic, &'r CrossSession<'r>, usize)> {
+        match *self {
+            Par::Cross(r, _, session) if len > grain.max(1) => {
+                let k = cross_chunk_count(len, grain);
+                (k >= 2).then_some((r, session, k))
+            }
+            _ => None,
+        }
+    }
+
+    /// Shard-level chunk boundaries for a cross loop: edge-balanced
+    /// when this plan runs under [`Schedule::EdgeBalanced`] (the same
+    /// monotone-forced bisection the pair-level `_by` splitters use),
+    /// even index splits otherwise. Pure in `(range, k, bound)` — the
+    /// boundaries never depend on which shards end up serving.
+    fn cross_bounds(
+        &self,
+        range: &Range<usize>,
+        k: usize,
+        bound: &dyn Fn(usize, usize) -> usize,
+        bounds: &mut [usize],
+    ) {
+        match self.schedule() {
+            Schedule::EdgeBalanced => bounds_by(range, k, bound, bounds),
+            _ => even_bounds(range, k, bounds),
         }
     }
 
     /// Call `f(i)` for every `i` in `range`, chunks of at least `grain`.
     /// Shared-state effects inside `f` must be thread-safe (atomics).
     pub fn for_each_index<F: Fn(usize) + Sync>(&self, range: Range<usize>, grain: usize, f: F) {
+        if let Some((relic, session, k)) = self.cross_plan(range.len(), grain) {
+            let mut bounds = [0usize; MAX_CROSS_CHUNKS + 1];
+            even_bounds(&range, k, &mut bounds);
+            session.run(relic, &bounds[..=k], &|_, sub: Range<usize>| {
+                for i in sub {
+                    f(i);
+                }
+            });
+            return;
+        }
         match self.plan_for(range.len(), grain) {
             None => {
                 for i in range {
@@ -269,6 +334,16 @@ impl<'r> Par<'r> {
         F: Fn(usize) + Sync,
         B: Fn(usize, usize) -> usize,
     {
+        if let Some((relic, session, k)) = self.cross_plan(range.len(), grain) {
+            let mut bounds = [0usize; MAX_CROSS_CHUNKS + 1];
+            self.cross_bounds(&range, k, &bound, &mut bounds);
+            session.run(relic, &bounds[..=k], &|_, sub: Range<usize>| {
+                for i in sub {
+                    f(i);
+                }
+            });
+            return;
+        }
         match self.plan_for(range.len(), grain) {
             Some((relic, Schedule::EdgeBalanced)) => {
                 let k = dyn_chunk_count(range.len(), grain);
@@ -298,6 +373,19 @@ impl<'r> Par<'r> {
         F: Fn(usize) -> T + Sync,
     {
         let n = out.len();
+        if let Some((relic, session, k)) = self.cross_plan(n, grain) {
+            let base = RawSlice(out.as_mut_ptr());
+            let mut bounds = [0usize; MAX_CROSS_CHUNKS + 1];
+            even_bounds(&(0..n), k, &mut bounds);
+            session.run(relic, &bounds[..=k], &|_, sub: Range<usize>| {
+                for i in sub {
+                    // SAFETY: shard-level chunks are disjoint and
+                    // in-bounds (`sub ⊆ 0..n`); RawSlice's contract.
+                    unsafe { *base.0.add(i) = f(i) };
+                }
+            });
+            return;
+        }
         match self.plan_for(n, grain) {
             None => {
                 for (i, slot) in out.iter_mut().enumerate() {
@@ -333,6 +421,18 @@ impl<'r> Par<'r> {
         B: Fn(usize, usize) -> usize,
     {
         let n = out.len();
+        if let Some((relic, session, k)) = self.cross_plan(n, grain) {
+            let base = RawSlice(out.as_mut_ptr());
+            let mut bounds = [0usize; MAX_CROSS_CHUNKS + 1];
+            self.cross_bounds(&(0..n), k, &bound, &mut bounds);
+            session.run(relic, &bounds[..=k], &|_, sub: Range<usize>| {
+                for i in sub {
+                    // SAFETY: disjoint in-bounds shard-level chunks.
+                    unsafe { *base.0.add(i) = f(i) };
+                }
+            });
+            return;
+        }
         match self.plan_for(n, grain) {
             Some((relic, Schedule::EdgeBalanced)) => {
                 let base = RawSlice(out.as_mut_ptr());
@@ -397,6 +497,28 @@ impl<'r> Par<'r> {
         C: Fn(T, T) -> T + Sync,
         B: Fn(usize, usize) -> usize,
     {
+        if let Some((relic, session, k)) = self.cross_plan(range.len(), grain) {
+            let mut bounds = [0usize; MAX_CROSS_CHUNKS + 1];
+            self.cross_bounds(&range, k, &bound, &mut bounds);
+            let mut partials = [identity; MAX_CROSS_CHUNKS];
+            let slots = RawSlice(partials.as_mut_ptr());
+            session.run(relic, &bounds[..=k], &|ci: usize, sub: Range<usize>| {
+                let mut a = identity;
+                for i in sub {
+                    a = combine(a, f(i));
+                }
+                // SAFETY: `ci < MAX_CROSS_CHUNKS` (session contract)
+                // and each shard-level chunk owns its slot; the join
+                // in `session.run` publishes the writes before the
+                // ascending fold below reads them.
+                unsafe { *slots.0.add(ci) = a };
+            });
+            let mut acc = identity;
+            for p in &partials[..k] {
+                acc = combine(acc, *p);
+            }
+            return acc;
+        }
         let Some((relic, sched)) = self.plan_for(range.len(), grain) else {
             let mut acc = identity;
             for i in range {
@@ -479,6 +601,19 @@ impl<'r> Par<'r> {
         F: Fn(Range<usize>) -> T + Sync,
         B: Fn(usize, usize) -> usize,
     {
+        if let Some((relic, session, k)) = self.cross_plan(range.len(), grain) {
+            let mut bounds = [0usize; MAX_CROSS_CHUNKS + 1];
+            self.cross_bounds(&range, k, &bound, &mut bounds);
+            let mut outputs: [Option<T>; MAX_CROSS_CHUNKS] = std::array::from_fn(|_| None);
+            let slots = RawSlice(outputs.as_mut_ptr());
+            session.run(relic, &bounds[..=k], &|ci: usize, sub: Range<usize>| {
+                let v = f(sub);
+                // SAFETY: `ci < MAX_CROSS_CHUNKS`, chunk-private; the
+                // join in `session.run` publishes before the drain.
+                unsafe { *slots.0.add(ci) = Some(v) };
+            });
+            return outputs.into_iter().flatten().collect();
+        }
         let Some((relic, sched)) = self.plan_for(range.len(), grain) else {
             return if range.is_empty() { Vec::new() } else { vec![f(range)] };
         };

@@ -43,6 +43,12 @@
 //!   queue mutual exclusion: an item is either popped by the consumer
 //!   or stolen, never both), and respawns dead shards onto the *same*
 //!   queue up to a restart budget with exponential backoff;
+//! * an optional **idle hook** ([`RelicPool::with_placements_idle`]):
+//!   a shard whose queue stays empty past a ~1 ms poll can lend its
+//!   pair to a cross-shard lease ([`super::cross`]) through a
+//!   `should_return` predicate that pulls it back to its own queue
+//!   within one chunk of new work arriving — without the hook the loop
+//!   is byte-for-byte the plain blocking drain;
 //! * a shard's inner loop drains its queue into small batches, so a
 //!   batch handler built on `Coordinator::process_batch` still gets to
 //!   pair requests two-at-a-time and run the odd leftover with
@@ -75,6 +81,20 @@ pub const DEFAULT_MAX_BATCH: usize = 32;
 /// Default interval at which a parked producer wakes to check for a
 /// dead shard (overridable via [`PoolConfig::park_timeout`]).
 pub const DEFAULT_PARK_TIMEOUT: Duration = Duration::from_millis(50);
+
+/// How long an idle-hooked shard waits on its empty queue before
+/// running its idle hook (lease serving). Short enough that a posted
+/// lease is picked up promptly, long enough that an idle shard without
+/// offers burns no measurable CPU in the wait loop.
+const IDLE_POLL: Duration = Duration::from_millis(1);
+
+/// A shard's idle hook: run when the queue has stayed empty past the
+/// idle poll interval, with the shard's state and a `should_return`
+/// predicate that turns true the moment the shard has reasons to get
+/// back to its queue (new work admitted, quarantine, shutdown). The
+/// hook must poll the predicate and return promptly once it fires.
+/// Returns whether it found anything to do (currently informational).
+pub type IdleHook<S> = Arc<dyn Fn(&mut S, &(dyn Fn() -> bool + Sync)) -> bool + Send + Sync>;
 
 /// Pool sizing and placement knobs.
 #[derive(Debug, Clone)]
@@ -306,6 +326,12 @@ impl<I> ShardQueue<I> {
         }
     }
 
+    /// Whether the queue has been closed (pool shutdown). Part of the
+    /// idle hook's `should_return` predicate, not a hot path.
+    fn is_closed(&self) -> bool {
+        self.inner.lock().expect("shard queue poisoned").closed
+    }
+
     /// Consumer side: block for the first item, then drain up to `max`
     /// without waiting. Returns false when the queue is closed and
     /// empty (the shard loop's exit condition). Every pop frees
@@ -329,6 +355,38 @@ impl<I> ShardQueue<I> {
                 return false;
             }
             inner = self.not_empty.wait(inner).expect("shard queue poisoned");
+        }
+    }
+
+    /// [`pop_batch`](Self::pop_batch) with an idle budget: gives up
+    /// after `timeout` with an empty batch ([`Popped::Idle`]) so an
+    /// idle-hooked shard loop can go serve a lease instead of blocking
+    /// on its empty queue forever.
+    fn pop_batch_timed(&self, max: usize, out: &mut Vec<I>, timeout: Duration) -> Popped {
+        let mut inner = self.inner.lock().expect("shard queue poisoned");
+        loop {
+            if !inner.items.is_empty() {
+                while out.len() < max {
+                    match inner.items.pop_front() {
+                        Some(item) => out.push(item),
+                        None => break,
+                    }
+                }
+                drop(inner);
+                self.not_full.notify_all();
+                return Popped::Items;
+            }
+            if inner.closed {
+                return Popped::Closed;
+            }
+            let (guard, wait) = self
+                .not_empty
+                .wait_timeout(inner, timeout)
+                .expect("shard queue poisoned");
+            inner = guard;
+            if wait.timed_out() && inner.items.is_empty() && !inner.closed {
+                return Popped::Idle;
+            }
         }
     }
 
@@ -369,6 +427,16 @@ impl<I> ShardQueue<I> {
     }
 }
 
+/// What one timed pop observed (see [`ShardQueue::pop_batch_timed`]).
+enum Popped {
+    /// The batch has at least one item.
+    Items,
+    /// The queue stayed empty past the timeout — run the idle hook.
+    Idle,
+    /// Closed and empty — the shard loop exits.
+    Closed,
+}
+
 /// Point-in-time view of the pool (see [`RelicPool::snapshot`]).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PoolSnapshot {
@@ -401,8 +469,9 @@ struct Shard<I: Send + 'static> {
     /// containment normally fires first; this is the backstop).
     handler_panics: Arc<Counter>,
     /// Quarantined shards are skipped by routing until the supervisor
-    /// clears them.
-    quarantined: AtomicBool,
+    /// clears them. `Arc` so the lease broker can watch it live
+    /// (quarantined shards are never offered to a whale request).
+    quarantined: Arc<AtomicBool>,
     /// The current thread, if any (`None` transiently during respawn).
     handle: Mutex<Option<JoinHandle<()>>>,
     /// Spawns a fresh thread on the same queue (factory/handler
@@ -451,6 +520,28 @@ impl<I: Send + 'static> RelicPool<I> {
         F: Fn(&ShardPlacement) -> S + Send + Clone + 'static,
         H: Fn(&mut S, Vec<I>) + Send + Clone + 'static,
     {
+        Self::with_placements_idle(placements, config, factory, handler, None)
+    }
+
+    /// [`with_placements`](Self::with_placements) plus an optional
+    /// per-shard idle hook: when a shard's queue stays empty past the
+    /// idle poll interval the hook runs with the shard's state and a
+    /// `should_return` predicate (new work / quarantine / shutdown).
+    /// This is how a shard lends itself to cross-shard leases without
+    /// ever touching its admission fast path — `None` makes this
+    /// byte-for-byte the plain blocking loop.
+    pub fn with_placements_idle<S, F, H>(
+        placements: Vec<ShardPlacement>,
+        config: &PoolConfig,
+        factory: F,
+        handler: H,
+        idle: Option<IdleHook<S>>,
+    ) -> Self
+    where
+        S: 'static,
+        F: Fn(&ShardPlacement) -> S + Send + Clone + 'static,
+        H: Fn(&mut S, Vec<I>) + Send + Clone + 'static,
+    {
         assert!(!placements.is_empty(), "RelicPool needs at least one shard");
         let max_batch = config.max_batch.max(1);
         let capacity = config.channel_capacity.max(1);
@@ -461,6 +552,7 @@ impl<I: Send + 'static> RelicPool<I> {
             let completed = Arc::new(Counter::new());
             let heartbeat = Arc::new(AtomicU64::new(0));
             let handler_panics = Arc::new(Counter::new());
+            let quarantined = Arc::new(AtomicBool::new(false));
             // One closure both spawns the initial thread and respawns
             // replacements: every thread of this shard runs the same
             // loop on the same queue.
@@ -470,10 +562,12 @@ impl<I: Send + 'static> RelicPool<I> {
                 let completed = Arc::clone(&completed);
                 let heartbeat = Arc::clone(&heartbeat);
                 let handler_panics = Arc::clone(&handler_panics);
+                let quarantined = Arc::clone(&quarantined);
                 let factory = factory.clone();
                 let handler = handler.clone();
                 let placement = placement.clone();
                 let fault = config.fault.clone();
+                let idle = idle.clone();
                 Box::new(move || {
                     spawn_shard_thread(
                         placement.clone(),
@@ -482,10 +576,12 @@ impl<I: Send + 'static> RelicPool<I> {
                         Arc::clone(&completed),
                         Arc::clone(&heartbeat),
                         Arc::clone(&handler_panics),
+                        Arc::clone(&quarantined),
                         factory.clone(),
                         handler.clone(),
                         max_batch,
                         fault.clone(),
+                        idle.clone(),
                     )
                 })
             };
@@ -497,7 +593,7 @@ impl<I: Send + 'static> RelicPool<I> {
                 completed,
                 heartbeat,
                 handler_panics,
-                quarantined: AtomicBool::new(false),
+                quarantined,
                 handle: Mutex::new(Some(handle)),
                 respawn: Mutex::new(respawn),
                 restarts: AtomicU32::new(0),
@@ -627,6 +723,19 @@ impl<I: Send + 'static> RelicPool<I> {
     /// Items queued or in processing on one shard right now.
     pub fn depth(&self, shard: usize) -> usize {
         self.shards[shard].depth.load(Ordering::Acquire)
+    }
+
+    /// Shared handle to shard `i`'s depth counter. The lease broker
+    /// binds this so eligibility ("queue shallow enough to borrow?")
+    /// reads live state with no pool call on the serving path.
+    pub fn depth_handle(&self, shard: usize) -> Arc<AtomicUsize> {
+        Arc::clone(&self.shards[shard].depth)
+    }
+
+    /// Shared handle to shard `i`'s quarantine flag (the lease broker
+    /// binds this — quarantined shards are never offered).
+    pub fn quarantined_handle(&self, shard: usize) -> Arc<AtomicBool> {
+        Arc::clone(&self.shards[shard].quarantined)
     }
 
     /// Per-shard depths (the least-loaded / least-slack routing input).
@@ -776,10 +885,12 @@ fn spawn_shard_thread<I, S, F, H>(
     completed: Arc<Counter>,
     heartbeat: Arc<AtomicU64>,
     handler_panics: Arc<Counter>,
+    quarantined: Arc<AtomicBool>,
     factory: F,
     handler: H,
     max_batch: usize,
     fault: Option<Arc<FaultPlan>>,
+    idle: Option<IdleHook<S>>,
 ) -> JoinHandle<()>
 where
     I: Send + 'static,
@@ -799,8 +910,10 @@ where
                 &completed,
                 &heartbeat,
                 &handler_panics,
+                &quarantined,
                 max_batch,
                 fault.as_deref(),
+                idle,
             )
         })
         .expect("failed to spawn relic pool shard")
@@ -828,8 +941,10 @@ fn shard_loop<I, S, F, H>(
     completed: &Counter,
     heartbeat: &AtomicU64,
     handler_panics: &Counter,
+    quarantined: &AtomicBool,
     max_batch: usize,
     fault: Option<&FaultPlan>,
+    idle: Option<IdleHook<S>>,
 ) where
     F: Fn(&ShardPlacement) -> S,
     H: Fn(&mut S, Vec<I>),
@@ -840,8 +955,30 @@ fn shard_loop<I, S, F, H>(
     let mut state = factory(placement);
     loop {
         let mut batch = Vec::with_capacity(max_batch);
-        if !queue.pop_batch(max_batch, &mut batch) {
-            break;
+        match &idle {
+            // No idle hook: block on the queue exactly as before.
+            None => {
+                if !queue.pop_batch(max_batch, &mut batch) {
+                    break;
+                }
+            }
+            // Idle hook: a bounded wait, then go lend this pair to a
+            // posted lease. `should_return` is what makes the lease
+            // revocable — it trips on new local work (depth rises at
+            // submit, *before* the push), quarantine, or shutdown.
+            Some(hook) => match queue.pop_batch_timed(max_batch, &mut batch, IDLE_POLL) {
+                Popped::Closed => break,
+                Popped::Idle => {
+                    let should_return = || {
+                        depth.load(Ordering::Acquire) > 0
+                            || quarantined.load(Ordering::Acquire)
+                            || queue.is_closed()
+                    };
+                    hook(&mut state, &should_return);
+                    continue;
+                }
+                Popped::Items => {}
+            },
         }
         if let Some(plan) = fault {
             if plan.should_kill(placement.shard) {
@@ -894,6 +1031,11 @@ pub struct SupervisorConfig {
     pub max_restarts: u32,
     /// First respawn backoff; doubles per restart of that shard.
     pub backoff_base: Duration,
+    /// Cap on concurrent inline executions while the engine is degraded
+    /// (every shard quarantined). `0` = auto: one permit per shard, so
+    /// degraded throughput never oversubscribes the physical cores the
+    /// shards were pinned to.
+    pub degraded_max_inflight: usize,
 }
 
 impl Default for SupervisorConfig {
@@ -903,6 +1045,7 @@ impl Default for SupervisorConfig {
             stuck_after: Duration::from_millis(200),
             max_restarts: 3,
             backoff_base: Duration::from_millis(25),
+            degraded_max_inflight: 0,
         }
     }
 }
@@ -1417,6 +1560,48 @@ mod tests {
         gate_tx.send(()).unwrap();
         drop(pool);
         assert_eq!(out_rx.iter().collect::<Vec<_>>(), vec![0]);
+    }
+
+    #[test]
+    fn idle_hook_runs_when_empty_and_yields_to_new_work() {
+        let idle_runs = Arc::new(AtomicU64::new(0));
+        let (tx, rx) = mpsc::channel::<u64>();
+        let hook: IdleHook<()> = {
+            let idle_runs = Arc::clone(&idle_runs);
+            Arc::new(move |_state: &mut (), should_return: &(dyn Fn() -> bool + Sync)| {
+                idle_runs.fetch_add(1, Ordering::Relaxed);
+                // Sit in the hook like a lease would, until work
+                // arrives or shutdown closes the queue.
+                while !should_return() {
+                    std::thread::yield_now();
+                }
+                true
+            })
+        };
+        let pool = RelicPool::<u64>::with_placements_idle(
+            discover_placements(Some(1), false),
+            &PoolConfig { shards: Some(1), pin: false, ..PoolConfig::default() },
+            |_: &ShardPlacement| (),
+            move |_: &mut (), batch: Vec<u64>| {
+                for item in batch {
+                    tx.send(item).unwrap();
+                }
+            },
+            Some(hook),
+        );
+        // The empty queue must hand the shard to the idle hook.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while idle_runs.load(Ordering::Relaxed) == 0 {
+            assert!(std::time::Instant::now() < deadline, "idle hook never ran");
+            std::thread::yield_now();
+        }
+        // New work pulls the shard back out of the hook and is served
+        // in order — the hook never costs an item or reorders one.
+        for i in 0..16u64 {
+            pool.submit_to(0, i);
+        }
+        drop(pool);
+        assert_eq!(rx.iter().collect::<Vec<_>>(), (0..16).collect::<Vec<_>>());
     }
 
     #[test]

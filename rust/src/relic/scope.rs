@@ -24,6 +24,13 @@
 //!   chunks so per-chunk output slots stay stack-resident and
 //!   reductions can combine partials in ascending chunk-index order.
 //!
+//! Both modes are the *leaf* of the hierarchy: [`crate::relic::cross`]
+//! nests them under a shard-level splitter, so a whale request first
+//! carves its range into per-shard leases and each shard then runs one
+//! of these pair-level waves over its lease. The constraints below are
+//! what make that nesting legal — a lease is claimed whole by one pair,
+//! so no scope ever nests *inside* a scope.
+//!
 //! Design constraints, matching the rest of Relic:
 //! * **zero allocation** — chunk descriptors live on the caller's stack
 //!   and travel through the SPSC queue as raw pointers;

@@ -1,0 +1,244 @@
+//! Cross-shard cooperative-parallelism correctness suite.
+//!
+//! The tentpole invariant: a whale request that borrows idle
+//! pair-shards produces results **bitwise identical** to the serial and
+//! single-pair paths — chunk ownership is a pure function of `(range,
+//! boundaries, shard set)`, never of timing. On top of that:
+//! `max_borrow = 0` is response-for-response the pre-borrowing engine,
+//! revocation at chunk granularity loses and duplicates nothing, and
+//! borrowing composes with the fault-injection machinery (a killed
+//! shard mid-stream does not corrupt a later whale).
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use relic_smt::coordinator::{
+    run_native_kernel, run_native_kernel_par, Deadline, Engine, EngineConfig, GraphKernel,
+    Request, RequestResult,
+};
+use relic_smt::graph::kronecker::{kronecker_graph, KroneckerParams, PAPER_SEED};
+use relic_smt::graph::CsrGraph;
+use relic_smt::relic::{
+    with_lease, CrossCtx, FaultPlan, LeaseBroker, Par, PoolConfig, Relic, Schedule,
+};
+
+/// A graph big enough that the kernels' hot loops actually split into
+/// multiple cross-shard chunks (the paper graph's 32 vertices fit in
+/// one grain and would exercise nothing).
+fn whale_graph() -> CsrGraph {
+    kronecker_graph(&KroneckerParams::gap(8, 16, PAPER_SEED))
+}
+
+/// A broker with both shards' eligibility hooks bound (depth 0, not
+/// quarantined) plus a borrower thread that keeps serving shard 1's
+/// leases until told to stop. Returns `(broker, stop flag, handle)`.
+fn broker_with_borrower() -> (Arc<LeaseBroker>, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+    let broker = Arc::new(LeaseBroker::new(2));
+    for s in 0..2 {
+        broker.bind(s, Arc::new(AtomicUsize::new(0)), Arc::new(AtomicBool::new(false)));
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let handle = {
+        let broker = Arc::clone(&broker);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let relic = Relic::new();
+            let should_return = {
+                let stop = Arc::clone(&stop);
+                move || stop.load(Ordering::Acquire)
+            };
+            while !stop.load(Ordering::Acquire) {
+                if !broker.serve(1, &relic, &should_return) {
+                    std::thread::yield_now();
+                }
+            }
+        })
+    };
+    (broker, stop, handle)
+}
+
+#[test]
+fn borrowed_kernels_match_serial_and_pair_under_every_schedule() {
+    let g = whale_graph();
+    let (broker, stop, handle) = broker_with_borrower();
+    let ctx = CrossCtx { broker, shard: 0, max_borrow: 1, offer_depth: 0 };
+    let relic = Relic::new();
+    for schedule in [Schedule::Static, Schedule::Dynamic, Schedule::EdgeBalanced] {
+        for kernel in GraphKernel::all() {
+            let serial = run_native_kernel(kernel, &g, 0);
+            let pair =
+                run_native_kernel_par(kernel, &g, 0, &Par::Scheduled(&relic, schedule));
+            let crossed =
+                with_lease(&ctx, &relic, schedule, |par| run_native_kernel_par(kernel, &g, 0, par));
+            assert_eq!(pair, serial, "{kernel:?}/{schedule:?}: pair vs serial");
+            assert_eq!(crossed, serial, "{kernel:?}/{schedule:?}: borrowed vs serial");
+        }
+    }
+    stop.store(true, Ordering::Release);
+    handle.join().unwrap();
+}
+
+#[test]
+fn revocation_mid_loop_loses_and_duplicates_nothing() {
+    const N: usize = 1 << 12;
+    let broker = Arc::new(LeaseBroker::new(2));
+    for s in 0..2 {
+        broker.bind(s, Arc::new(AtomicUsize::new(0)), Arc::new(AtomicBool::new(false)));
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let revoke = Arc::new(AtomicBool::new(false));
+    // The borrower's should-return predicate watches `revoke`, which the
+    // owner flips from inside the loop body: the borrower hands its
+    // lease back at the next chunk boundary while the owner keeps
+    // claiming — exactly-once must hold across the handover.
+    let handle = {
+        let broker = Arc::clone(&broker);
+        let stop = Arc::clone(&stop);
+        let revoke = Arc::clone(&revoke);
+        std::thread::spawn(move || {
+            let relic = Relic::new();
+            let should_return = {
+                let stop = Arc::clone(&stop);
+                let revoke = Arc::clone(&revoke);
+                move || stop.load(Ordering::Acquire) || revoke.load(Ordering::Acquire)
+            };
+            while !stop.load(Ordering::Acquire) {
+                if !broker.serve(1, &relic, &should_return) {
+                    std::thread::yield_now();
+                }
+            }
+        })
+    };
+    let ctx = CrossCtx { broker: Arc::clone(&broker), shard: 0, max_borrow: 1, offer_depth: 0 };
+    let relic = Relic::new();
+    let hits: Vec<AtomicU32> = (0..N).map(|_| AtomicU32::new(0)).collect();
+    for round in 0..8 {
+        revoke.store(false, Ordering::Release);
+        for h in &hits {
+            h.store(0, Ordering::Relaxed);
+        }
+        let trigger = N / 4 + round * 16;
+        with_lease(&ctx, &relic, Schedule::Dynamic, |par| {
+            par.for_each_index(0..N, 16, |i| {
+                if i == trigger {
+                    revoke.store(true, Ordering::Release);
+                }
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "round {round}: index {i} hit count");
+        }
+    }
+    stop.store(true, Ordering::Release);
+    handle.join().unwrap();
+}
+
+fn mixed_requests(n: usize, graph: &CsrGraph) -> Vec<Request> {
+    let kernels = GraphKernel::all();
+    (0..n)
+        .map(|i| Request {
+            id: i as u64,
+            kernel: kernels[i % kernels.len()],
+            graph: graph.clone(),
+            source: (i % 16) as u32,
+            deadline: Deadline::none(),
+        })
+        .collect()
+}
+
+fn engine_with_borrow(max_borrow: usize) -> Engine {
+    Engine::new(EngineConfig {
+        pool: PoolConfig { shards: Some(2), pin: false, ..PoolConfig::default() },
+        max_borrow,
+        ..EngineConfig::default()
+    })
+}
+
+#[test]
+fn max_borrow_zero_is_response_for_response_the_default_engine() {
+    // The degeneracy gate: `max_borrow = 0` must not merely compute the
+    // same checksums — the whole response stream (ids, order, results)
+    // must be identical to the default engine's, which never built a
+    // broker at all.
+    let g = whale_graph();
+    let n = 24;
+    let mut zero = engine_with_borrow(0);
+    let mut default = Engine::new(EngineConfig {
+        pool: PoolConfig { shards: Some(2), pin: false, ..PoolConfig::default() },
+        ..EngineConfig::default()
+    });
+    assert!(zero.lease_stats().is_none(), "max_borrow = 0 builds no broker");
+    assert!(default.lease_stats().is_none());
+    let a = zero.process_batch(mixed_requests(n, &g));
+    let b = default.process_batch(mixed_requests(n, &g));
+    assert_eq!(a.len(), n);
+    let sig = |responses: &[relic_smt::coordinator::Response]| -> Vec<(u64, RequestResult)> {
+        responses.iter().map(|r| (r.id, r.result.clone())).collect()
+    };
+    assert_eq!(sig(&a), sig(&b), "response-for-response identical");
+}
+
+#[test]
+fn borrowing_engine_matches_non_borrowing_results() {
+    let g = whale_graph();
+    let n = 24;
+    let mut plain = engine_with_borrow(0);
+    let mut borrowing = engine_with_borrow(1);
+    assert_eq!(
+        borrowing.lease_stats().map(|s| s.served + s.revoked + s.chunks_lent),
+        Some(0),
+        "broker exists but has seen no traffic yet"
+    );
+    let a = plain.process_batch(mixed_requests(n, &g));
+    let b = borrowing.process_batch(mixed_requests(n, &g));
+    let sig = |responses: &[relic_smt::coordinator::Response]| -> Vec<(u64, RequestResult)> {
+        responses.iter().map(|r| (r.id, r.result.clone())).collect()
+    };
+    assert_eq!(sig(&a), sig(&b), "borrowing must never change results");
+}
+
+#[test]
+fn borrowing_composes_with_fault_injection() {
+    // Kill shard 1 on its first batch while borrowing is armed: the
+    // supervisor quarantines and recovers it, every accepted request is
+    // answered (correct checksum or a typed failure — never silence),
+    // and a subsequent whale request still computes the exact serial
+    // checksum through whatever shard set is healthy by then.
+    let g = whale_graph();
+    let n = 16;
+    let mut e = Engine::new(EngineConfig {
+        pool: PoolConfig {
+            shards: Some(2),
+            pin: false,
+            fault: Some(Arc::new(FaultPlan::new().with_kill(1, 1))),
+            ..PoolConfig::default()
+        },
+        max_borrow: 1,
+        ..EngineConfig::default()
+    });
+    let requests = mixed_requests(n, &g);
+    let expected: Vec<u64> =
+        requests.iter().map(|r| run_native_kernel(r.kernel, &r.graph, r.source)).collect();
+    let responses = e.process_batch(requests);
+    assert_eq!(responses.len(), n, "no-drop invariant under a killed shard");
+    for (i, r) in responses.iter().enumerate() {
+        match &r.result {
+            RequestResult::Native(sum) => assert_eq!(*sum, expected[i], "request {i}"),
+            RequestResult::Failed(_) => {} // typed loss is legal mid-kill
+            other => panic!("request {i}: unexpected result {other:?}"),
+        }
+    }
+    // Post-recovery whale: exact checksum, engine fully usable.
+    let whale = Request {
+        id: 999,
+        kernel: GraphKernel::Pr,
+        graph: g.clone(),
+        source: 0,
+        deadline: Deadline::none(),
+    };
+    let serial = run_native_kernel(GraphKernel::Pr, &g, 0);
+    let out = e.process_batch(vec![whale]);
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].result, RequestResult::Native(serial));
+}
