@@ -17,6 +17,7 @@ arrays that changed order still diff correctly:
                                                    parallel_for_speedup
     cross_shard.json    keyed by (kernel,          speedup_vs_pair,
                                   max_borrow)      speedup_vs_serial
+    chaos.json          keyed by (seed, round)     recovered_ratio
 
 Every metric is higher-is-better. A metric that drops by more than
 --threshold percent (default 10) counts as a regression; the script
@@ -44,6 +45,10 @@ SPECS = {
         ("kernel", "max_borrow"),
         ("speedup_vs_pair", "speedup_vs_serial"),
     ),
+    # recovered_ratio is ok/offered per soak round; the in-sweep gates
+    # pin it at 1.0 with replay on, so any drop is a hard signal, not
+    # runner noise.
+    "chaos.json": (("seed", "round"), ("recovered_ratio",)),
 }
 
 

@@ -1,0 +1,87 @@
+#!/usr/bin/env python3
+"""Refresh a committed BENCH_* snapshot file from a nightly artifact.
+
+Usage:
+    python3 python/refresh_bench_snapshot.py NIGHTLY_JSON SNAPSHOT_JSON
+
+NIGHTLY_JSON is a sweep artifact as written by `repro ... --out`
+(a JSON array of row objects, e.g. `bench-results/cross_shard.json`).
+SNAPSHOT_JSON is the committed snapshot wrapper (e.g.
+`BENCH_cross_shard.json`): an object carrying provenance metadata
+(`artifact`, `produced_by`, `row_schema`, `status`) around a `rows`
+array. The script replaces `rows` with the artifact's rows and rewrites
+`status` to record the refresh, leaving every other metadata field
+untouched — so the first real nightly run turns the schema-only
+placeholder into a filled table without anyone hand-editing JSON.
+
+Rows are lightly sanity-checked against `row_schema` when the snapshot
+carries one: a nightly row missing a schema-documented field is
+reported and the refresh aborts, because a silently narrowed snapshot
+would make future diffs lie.
+
+Exit status: 0 on a successful refresh, 1 on any problem (missing or
+malformed input, schema mismatch). bench.yml runs this after the whale
+sweep and uploads the refreshed file alongside the artifacts;
+committing it back to the repo stays a human decision.
+
+Stdlib-only by design: the CI image and the dev container carry no
+third-party Python packages.
+"""
+
+import json
+import sys
+from datetime import datetime, timezone
+from pathlib import Path
+
+
+def fail(msg):
+    print(f"error: {msg}", file=sys.stderr)
+    return 1
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 2:
+        return fail("usage: refresh_bench_snapshot.py NIGHTLY_JSON SNAPSHOT_JSON")
+    nightly_path, snapshot_path = Path(argv[0]), Path(argv[1])
+
+    try:
+        rows = json.loads(nightly_path.read_text())
+    except (OSError, json.JSONDecodeError) as err:
+        return fail(f"cannot read {nightly_path}: {err}")
+    if not isinstance(rows, list) or not all(isinstance(r, dict) for r in rows):
+        return fail(f"{nightly_path} is not a JSON array of row objects")
+    if not rows:
+        return fail(f"{nightly_path} has no rows; refusing to blank the snapshot")
+
+    try:
+        snapshot = json.loads(snapshot_path.read_text())
+    except (OSError, json.JSONDecodeError) as err:
+        return fail(f"cannot read {snapshot_path}: {err}")
+    if not isinstance(snapshot, dict) or "rows" not in snapshot:
+        return fail(f"{snapshot_path} is not a snapshot wrapper (no 'rows' field)")
+
+    schema = snapshot.get("row_schema")
+    if isinstance(schema, dict):
+        for i, row in enumerate(rows):
+            missing = [f for f in schema if f not in row]
+            if missing:
+                return fail(
+                    f"{nightly_path} row {i} is missing schema field(s) "
+                    f"{missing}; snapshot not refreshed"
+                )
+
+    stamp = datetime.now(timezone.utc).strftime("%Y-%m-%dT%H:%M:%SZ")
+    snapshot["rows"] = rows
+    snapshot["status"] = (
+        f"snapshot of {len(rows)} row(s) refreshed {stamp} from "
+        f"{nightly_path.name}; re-refresh from any later nightly artifact "
+        f"with python/refresh_bench_snapshot.py"
+    )
+    snapshot_path.write_text(json.dumps(snapshot, indent=2) + "\n")
+    print(f"{snapshot_path}: {len(rows)} row(s) from {nightly_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -896,6 +896,304 @@ pub fn fault_rows_to_json(rows: &[FaultRow]) -> String {
     crate::json::to_string(&Value::Array(arr))
 }
 
+/// One chaos-soak round: a seeded random multi-fault schedule against
+/// a fresh supervised engine, with the recovery and replay counters as
+/// columns and the built-in gates already asserted.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosRow {
+    /// The soak seed (rounds derive their own sub-seeds from it).
+    pub seed: u64,
+    /// Round index within the soak.
+    pub round: usize,
+    /// Injections armed this round, e.g. `"panic+kill+drop"`.
+    pub faults: String,
+    /// Whether at-least-once replay was on.
+    pub replay: bool,
+    /// Requests offered — all admitted (blocking, deadline-less).
+    pub offered: usize,
+    /// Responses that completed with a verified checksum.
+    pub ok: u64,
+    /// Responses carrying a typed `Failed` result.
+    pub failed: u64,
+    /// Kernel panics caught and contained.
+    pub panics: u64,
+    /// Watchdog quarantine trips.
+    pub trips: u64,
+    /// Dead shards respawned.
+    pub restarts: u64,
+    /// Quarantined shards' queued requests re-routed to survivors.
+    pub redirected: u64,
+    /// Lost responses synthesized as `Failed(ResponseLost)`.
+    pub lost: u64,
+    /// Replay attempts launched.
+    pub replays: u64,
+    /// Requests recovered by replay.
+    pub replay_successes: u64,
+    /// Requests whose replay budget ran out.
+    pub gave_up: u64,
+    /// `ok / offered` — the soak's higher-is-better headline (1.0 =
+    /// every request survived the fault schedule with a correct
+    /// checksum).
+    pub recovered_ratio: f64,
+    /// Wall time to offer + drain the stream (ms).
+    pub batch_ms: f64,
+}
+
+/// The deterministic chaos soak (EXPERIMENTS.md §Chaos-soak protocol):
+/// each round derives a fault schedule from `(seed, round)` — a random
+/// subset of {panic, stall, kill, drop} with randomized targets and
+/// trigger points — arms it on a fresh supervised engine, drives the
+/// deterministic mixed request stream through blocking submits, and
+/// drains. The *schedule* is a pure function of the seed; thread
+/// interleaving is not, so every gate is an invariant, not a trace.
+///
+/// Built-in gates (assertion failures, so `repro chaos` and the CI
+/// smoke fail loudly):
+/// * **no-drop** — exactly one response per submitted request, every
+///   round;
+/// * **checksum-equal-to-serial** — every surviving (non-`Failed`)
+///   result equals the serial kernel's checksum;
+/// * **books reconcile** — with replay on, every terminal failure is a
+///   resolved give-up or deadline shed (`failed == gave_up +
+///   replay_sheds`), and since these one-shot faults cannot outlast the
+///   attempt budget, every caught panic and synthesized loss is
+///   recovered (`failed == 0`, `replay_successes == panics + lost`).
+///   With replay off, the reliability counters stay silent and every
+///   caught panic / synthesized loss surfaces typed
+///   (`failed == panics + lost`).
+///
+/// The shard count is taken from the template (`None` = 2 — the soak
+/// needs a concrete count to aim shard-targeted faults). A tight
+/// (40 ms) watchdog is used only on rounds that arm a stall, exactly
+/// as in [`fault_sweep`].
+pub fn chaos_soak(
+    template: &crate::coordinator::EngineConfig,
+    seed: u64,
+    rounds: usize,
+    offered: usize,
+    replay: bool,
+) -> Vec<ChaosRow> {
+    use crate::coordinator::{
+        run_native_kernel, Deadline, Engine, GraphKernel, Request, RequestResult,
+    };
+    use crate::graph::kronecker::paper_graph;
+    use crate::relic::FaultPlan;
+    use crate::testutil::Rng;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let graph = paper_graph();
+    // Enough requests that every kernel appears several times (panic
+    // trigger points are per-kernel) and every shard sees work.
+    let offered = offered.max(24);
+    let plan = super::workloads::mixed_request_plan(offered);
+    let expected: Vec<u64> =
+        plan.iter().map(|&(k, s)| run_native_kernel(k, &graph, s)).collect();
+    let shards = template.pool.shards.unwrap_or(2).max(1);
+    let tight = Duration::from_millis(40);
+    let lax = Duration::from_secs(2);
+    let kernels = GraphKernel::all();
+
+    let mut rows = Vec::new();
+    for round in 0..rounds.max(1) {
+        // Sub-seed: decorrelate rounds while keeping the whole soak a
+        // pure function of `seed`.
+        let mut rng = Rng::new(seed ^ ((round as u64 + 1).wrapping_mul(0xA076_1D64_78BD_642F)));
+        let mut fault = FaultPlan::new();
+        let mut armed: Vec<&str> = Vec::new();
+        if rng.below(2) == 0 {
+            let kernel = kernels[rng.below(kernels.len() as u64) as usize];
+            let per_kernel = (offered / kernels.len()).max(1) as u64;
+            fault = fault.with_panic_on(kernel.artifact_name(), 1 + rng.below(per_kernel));
+            armed.push("panic");
+        }
+        let stall_armed = rng.below(2) == 0;
+        if stall_armed {
+            let shard = rng.below(shards as u64) as usize;
+            fault = fault.with_stall(shard, 1 + rng.below(2), tight * 5);
+            armed.push("stall");
+        }
+        if rng.below(2) == 0 {
+            fault = fault.with_kill(rng.below(shards as u64) as usize, 1 + rng.below(2));
+            armed.push("kill");
+        }
+        // Always leave at least one injection armed; the drop is the
+        // one the replay layer has the most to say about.
+        if rng.below(2) == 0 || armed.is_empty() {
+            fault = fault.with_drop_response(rng.below(shards as u64) as usize, 1 + rng.below(2));
+            armed.push("drop");
+        }
+        let faults = armed.join("+");
+
+        let mut cfg = template.clone();
+        cfg.pool.shards = Some(shards);
+        cfg.supervisor.enabled = true;
+        cfg.supervisor.stuck_after = if stall_armed { tight } else { lax };
+        cfg.pool.fault = Some(Arc::new(fault));
+        cfg.reliability.replay = replay;
+        let mut engine = Engine::new(cfg);
+
+        let t0 = std::time::Instant::now();
+        for (i, &(kernel, source)) in plan.iter().enumerate() {
+            let verdict = engine.submit(Request {
+                id: i as u64,
+                kernel,
+                graph: graph.clone(),
+                source,
+                deadline: Deadline::none(),
+            });
+            assert!(
+                verdict.is_accepted(),
+                "chaos[{seed}/{round}]: blocking deadline-less submits always admit"
+            );
+        }
+        let responses = engine.drain();
+        let batch_ms = t0.elapsed().as_nanos() as f64 / 1e6;
+        assert_eq!(
+            responses.len(),
+            offered,
+            "chaos[{seed}/{round}] ({faults}): the no-drop invariant — one response per \
+             submitted request"
+        );
+        let mut ok = 0u64;
+        let mut failed = 0u64;
+        for r in &responses {
+            if r.result.is_ok() {
+                assert_eq!(
+                    r.result,
+                    RequestResult::Native(expected[r.id as usize]),
+                    "chaos[{seed}/{round}] ({faults}): surviving checksum diverged (request {})",
+                    r.id
+                );
+                ok += 1;
+            } else {
+                failed += 1;
+            }
+        }
+        let agg = engine.aggregated_metrics();
+        let panics = agg.fault.panics_caught.get();
+        let lost = agg.fault.responses_lost.get();
+        if replay {
+            assert_eq!(
+                failed,
+                agg.reliability.gave_up.get() + agg.reliability.replay_sheds.get(),
+                "chaos[{seed}/{round}] ({faults}): the replay books reconcile — every \
+                 terminal failure is a resolved give-up or deadline shed"
+            );
+            assert_eq!(
+                failed, 0,
+                "chaos[{seed}/{round}] ({faults}): one-shot faults within the attempt \
+                 budget always recover"
+            );
+            assert_eq!(
+                agg.reliability.replay_successes.get(),
+                panics + lost,
+                "chaos[{seed}/{round}] ({faults}): every caught panic and synthesized \
+                 loss was recovered by replay"
+            );
+        } else {
+            assert!(
+                agg.reliability.is_quiet(),
+                "chaos[{seed}/{round}] ({faults}): replay off keeps the reliability \
+                 counters silent"
+            );
+            assert_eq!(
+                failed,
+                panics + lost,
+                "chaos[{seed}/{round}] ({faults}): with replay off every caught panic \
+                 and synthesized loss surfaces typed"
+            );
+        }
+        rows.push(ChaosRow {
+            seed,
+            round,
+            faults,
+            replay,
+            offered,
+            ok,
+            failed,
+            panics,
+            trips: agg.fault.watchdog_trips.get(),
+            restarts: agg.fault.shard_restarts.get(),
+            redirected: agg.fault.redirected_requests.get(),
+            lost,
+            replays: agg.reliability.replays.get(),
+            replay_successes: agg.reliability.replay_successes.get(),
+            gave_up: agg.reliability.gave_up.get(),
+            recovered_ratio: ok as f64 / offered as f64,
+            batch_ms,
+        });
+    }
+    rows
+}
+
+/// Render the chaos-soak table with its gate legend.
+pub fn render_chaos(rows: &[ChaosRow]) -> String {
+    let mut out = format!(
+        "{:<6}{:<22}{:>9}{:>6}{:>8}{:>8}{:>7}{:>10}{:>6}{:>9}{:>11}{:>9}{:>11}\n",
+        "round", "faults", "offered", "ok", "failed", "panics", "trips", "restarts", "lost",
+        "replays", "recovered", "gave-up", "batch ms"
+    );
+    for r in rows {
+        out += &format!(
+            "{:<6}{:<22}{:>9}{:>6}{:>8}{:>8}{:>7}{:>10}{:>6}{:>9}{:>11}{:>9}{:>11.1}\n",
+            r.round,
+            r.faults,
+            r.offered,
+            r.ok,
+            r.failed,
+            r.panics,
+            r.trips,
+            r.restarts,
+            r.lost,
+            r.replays,
+            r.replay_successes,
+            r.gave_up,
+            r.batch_ms,
+        );
+    }
+    out += "(gates passed: one response per submitted request in every round; surviving \
+            checksums equal the serial kernels'; the replay books reconcile)\n";
+    out
+}
+
+/// Serialize chaos-soak rows to JSON (the nightly bench workflow
+/// archives these as the HA trajectory).
+pub fn chaos_rows_to_json(rows: &[ChaosRow]) -> String {
+    use crate::json::Value;
+    let arr = rows
+        .iter()
+        .map(|r| {
+            Value::Object(vec![
+                ("seed".into(), Value::Number(r.seed as f64)),
+                ("round".into(), Value::Number(r.round as f64)),
+                ("faults".into(), Value::String(r.faults.clone())),
+                ("replay".into(), Value::Bool(r.replay)),
+                ("offered".into(), Value::Number(r.offered as f64)),
+                ("ok".into(), Value::Number(r.ok as f64)),
+                ("failed".into(), Value::Number(r.failed as f64)),
+                ("panics".into(), Value::Number(r.panics as f64)),
+                ("trips".into(), Value::Number(r.trips as f64)),
+                ("restarts".into(), Value::Number(r.restarts as f64)),
+                ("redirected".into(), Value::Number(r.redirected as f64)),
+                ("lost".into(), Value::Number(r.lost as f64)),
+                ("replays".into(), Value::Number(r.replays as f64)),
+                (
+                    "replay_successes".into(),
+                    Value::Number(r.replay_successes as f64),
+                ),
+                ("gave_up".into(), Value::Number(r.gave_up as f64)),
+                (
+                    "recovered_ratio".into(),
+                    Value::Number(r.recovered_ratio),
+                ),
+                ("batch_ms".into(), Value::Number(r.batch_ms)),
+            ])
+        })
+        .collect();
+    crate::json::to_string(&Value::Array(arr))
+}
+
 /// Serialize intra-kernel rows to JSON (the nightly bench workflow
 /// archives these as the fork-join perf trajectory).
 pub fn intra_rows_to_json(rows: &[IntraRow]) -> String {

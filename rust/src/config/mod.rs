@@ -36,6 +36,27 @@ impl std::fmt::Display for ParseError {
 
 impl std::error::Error for ParseError {}
 
+/// A semantic config error: the file parsed, but a value (or a
+/// combination of values) cannot run safely. Unlike the lenient
+/// per-key overlay clamps, these are *rejected* — silently "fixing" a
+/// reliability or supervision knob would change failure semantics the
+/// operator is counting on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ValidationError {
+    /// The `section.key` at fault.
+    pub key: String,
+    /// Why the value combination is rejected.
+    pub reason: String,
+}
+
+impl std::fmt::Display for ValidationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid config: {}: {}", self.key, self.reason)
+    }
+}
+
+impl std::error::Error for ValidationError {}
+
 impl RawConfig {
     /// Parse from TOML-subset text.
     pub fn parse(text: &str) -> Result<Self, ParseError> {
@@ -376,6 +397,15 @@ pub struct SupervisorSettings {
     /// Cap on concurrent degraded inline executions (0 = auto: one per
     /// shard, i.e. one per physical core the pool discovered).
     pub degraded_max_inflight: usize,
+    /// Consecutive healthy watchdog ticks after which a shard earns one
+    /// restart credit back (budget decay; 0 = credits never return).
+    pub heal_after_ticks: u32,
+    /// Policy once a shard's restart budget is exhausted:
+    /// `"quarantine"` (default), `"drain_and_exit"`, or `"rebuild"`.
+    /// Unknown spellings are rejected by [`SupervisorSettings::validate`]
+    /// rather than silently kept — a misread exit policy is exactly the
+    /// kind of config drift an HA deployment cannot absorb.
+    pub on_budget_exhausted: String,
 }
 
 impl Default for SupervisorSettings {
@@ -387,6 +417,8 @@ impl Default for SupervisorSettings {
             max_restarts: d.max_restarts,
             backoff_ms: d.backoff_base.as_millis() as u64,
             degraded_max_inflight: d.degraded_max_inflight,
+            heal_after_ticks: d.heal_after_ticks,
+            on_budget_exhausted: d.on_budget_exhausted.name().to_string(),
         }
     }
 }
@@ -413,7 +445,47 @@ impl SupervisorSettings {
                 .get_int("supervisor.degraded_max_inflight")
                 .map(|v| v.max(0) as usize)
                 .unwrap_or(d.degraded_max_inflight),
+            heal_after_ticks: raw
+                .get_int("supervisor.heal_after_ticks")
+                .map(|v| v.max(0) as u32)
+                .unwrap_or(d.heal_after_ticks),
+            on_budget_exhausted: raw
+                .get_str("supervisor.on_budget_exhausted")
+                .unwrap_or(&d.on_budget_exhausted)
+                .to_string(),
         }
+    }
+
+    /// Reject combinations that would change failure semantics in a
+    /// way the operator almost certainly did not intend.
+    pub fn validate(&self) -> Result<(), ValidationError> {
+        if self.enabled && self.stuck_after_ms == 0 {
+            return Err(ValidationError {
+                key: "supervisor.stuck_after_ms".into(),
+                reason: "0 would classify every busy shard as stuck instantly; \
+                         set it >= 1 or disable the supervisor"
+                    .into(),
+            });
+        }
+        if self.enabled && self.backoff_ms == 0 && self.max_restarts > 0 {
+            return Err(ValidationError {
+                key: "supervisor.backoff_ms".into(),
+                reason: "a zero backoff with a nonzero restart budget respawns a \
+                         crash-looping shard in a hot loop; set backoff_ms >= 1 \
+                         or max_restarts = 0"
+                    .into(),
+            });
+        }
+        if crate::relic::BudgetPolicy::parse(&self.on_budget_exhausted).is_none() {
+            return Err(ValidationError {
+                key: "supervisor.on_budget_exhausted".into(),
+                reason: format!(
+                    "unknown policy {:?}; expected quarantine | drain_and_exit | rebuild",
+                    self.on_budget_exhausted
+                ),
+            });
+        }
+        Ok(())
     }
 
     /// Materialize as the pool's runtime supervisor config.
@@ -424,6 +496,128 @@ impl SupervisorSettings {
             max_restarts: self.max_restarts,
             backoff_base: std::time::Duration::from_millis(self.backoff_ms),
             degraded_max_inflight: self.degraded_max_inflight,
+            heal_after_ticks: self.heal_after_ticks,
+            on_budget_exhausted: crate::relic::BudgetPolicy::parse(&self.on_budget_exhausted)
+                .unwrap_or_default(),
+        }
+    }
+}
+
+/// At-least-once replay configuration (section `[reliability]`;
+/// defaults mirror [`crate::coordinator::ReliabilityConfig`]: replay
+/// *off*, so the engine stays bit-for-bit the at-most-once engine).
+/// See `ARCHITECTURE.md` §High availability for the replay contract.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReliabilitySettings {
+    /// Master switch for retaining accepted requests and re-submitting
+    /// ones that come back with a typed failure.
+    pub replay: bool,
+    /// Replay attempts per request beyond its first execution.
+    pub max_attempts: u32,
+    /// Backoff before the first replay, in milliseconds; doubles per
+    /// attempt and is capped by the request's remaining deadline slack.
+    pub backoff_ms: u64,
+    /// Comma-separated allow-list of kernels eligible for replay
+    /// (empty = every idempotent kernel). Names must be known kernels
+    /// whose idempotence contract holds — see
+    /// [`crate::coordinator::GraphKernel::idempotent`].
+    pub replay_kernels: String,
+}
+
+impl Default for ReliabilitySettings {
+    fn default() -> Self {
+        let d = crate::coordinator::ReliabilityConfig::default();
+        ReliabilitySettings {
+            replay: d.replay,
+            max_attempts: d.max_attempts,
+            backoff_ms: d.backoff_base.as_millis() as u64,
+            replay_kernels: String::new(),
+        }
+    }
+}
+
+impl ReliabilitySettings {
+    /// Overlay values from a raw config (section `[reliability]`).
+    pub fn from_raw(raw: &RawConfig) -> Self {
+        let d = Self::default();
+        ReliabilitySettings {
+            replay: raw.get_bool("reliability.replay").unwrap_or(d.replay),
+            max_attempts: raw
+                .get_int("reliability.max_attempts")
+                .map(|v| v.max(0) as u32)
+                .unwrap_or(d.max_attempts),
+            backoff_ms: raw
+                .get_int("reliability.backoff_ms")
+                .map(|v| v.max(0) as u64)
+                .unwrap_or(d.backoff_ms),
+            replay_kernels: raw
+                .get_str("reliability.replay_kernels")
+                .unwrap_or(&d.replay_kernels)
+                .to_string(),
+        }
+    }
+
+    /// The allow-list names, trimmed, with empty entries dropped.
+    fn kernel_names(&self) -> Vec<&str> {
+        self.replay_kernels
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .collect()
+    }
+
+    /// Reject a replay setup that cannot honor the at-least-once
+    /// contract: a zero attempt budget (every failure would count as a
+    /// give-up without one retry), an unknown kernel name, or a kernel
+    /// whose idempotence contract does not hold (replaying it could
+    /// produce a different checksum or a visible side effect).
+    pub fn validate(&self) -> Result<(), ValidationError> {
+        if self.replay && self.max_attempts == 0 {
+            return Err(ValidationError {
+                key: "reliability.max_attempts".into(),
+                reason: "replay = true with a zero attempt budget never replays \
+                         anything; set max_attempts >= 1 or replay = false"
+                    .into(),
+            });
+        }
+        for name in self.kernel_names() {
+            match crate::coordinator::GraphKernel::parse(name) {
+                None => {
+                    return Err(ValidationError {
+                        key: "reliability.replay_kernels".into(),
+                        reason: format!(
+                            "unknown kernel {name:?}; expected bc | bfs | cc | pr | sssp | tc"
+                        ),
+                    });
+                }
+                Some(k) if !k.idempotent() => {
+                    return Err(ValidationError {
+                        key: "reliability.replay_kernels".into(),
+                        reason: format!(
+                            "kernel {name:?} is not idempotent; replaying it is unsafe \
+                             and it cannot appear in the allow-list"
+                        ),
+                    });
+                }
+                Some(_) => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Materialize as the engine's runtime reliability config. Call
+    /// [`validate`](Self::validate) first; unknown allow-list names are
+    /// dropped here, not diagnosed.
+    pub fn to_config(&self) -> crate::coordinator::ReliabilityConfig {
+        crate::coordinator::ReliabilityConfig {
+            replay: self.replay,
+            max_attempts: self.max_attempts,
+            backoff_base: std::time::Duration::from_millis(self.backoff_ms),
+            replay_kernels: self
+                .kernel_names()
+                .into_iter()
+                .filter_map(crate::coordinator::GraphKernel::parse)
+                .collect(),
         }
     }
 }
@@ -694,6 +888,92 @@ mod tests {
         assert!(s.enabled);
         assert_eq!(s.max_restarts, 9);
         assert_eq!(s.stuck_after_ms, 200);
+        // HA knobs: defaults mirror the runtime config, overlays stick.
+        assert_eq!(s.heal_after_ticks, 32, "budget decay on by default");
+        assert_eq!(s.on_budget_exhausted, "quarantine");
+        let raw = RawConfig::parse(
+            "[supervisor]\nheal_after_ticks = 0\non_budget_exhausted = \"rebuild\"\n",
+        )
+        .unwrap();
+        let s = SupervisorSettings::from_raw(&raw);
+        assert_eq!(s.heal_after_ticks, 0);
+        let c = s.to_config();
+        assert_eq!(c.heal_after_ticks, 0);
+        assert_eq!(c.on_budget_exhausted, crate::relic::BudgetPolicy::Rebuild);
+    }
+
+    #[test]
+    fn supervisor_validation_rejects_unsafe_combinations() {
+        assert!(SupervisorSettings::default().validate().is_ok(), "defaults are valid");
+        let mut s = SupervisorSettings {
+            stuck_after_ms: 0,
+            ..SupervisorSettings::default()
+        };
+        let err = s.validate().unwrap_err();
+        assert_eq!(err.key, "supervisor.stuck_after_ms");
+        // The same knobs are fine with supervision off.
+        s.enabled = false;
+        assert!(s.validate().is_ok());
+        let mut s = SupervisorSettings {
+            backoff_ms: 0,
+            ..SupervisorSettings::default()
+        };
+        let err = s.validate().unwrap_err();
+        assert_eq!(err.key, "supervisor.backoff_ms");
+        s.max_restarts = 0;
+        assert!(s.validate().is_ok(), "zero backoff is legal without a restart budget");
+        let mut s = SupervisorSettings {
+            on_budget_exhausted: "explode".into(),
+            ..SupervisorSettings::default()
+        };
+        let err = s.validate().unwrap_err();
+        assert_eq!(err.key, "supervisor.on_budget_exhausted");
+        assert!(err.to_string().contains("drain_and_exit"), "error names the legal spellings");
+        // Both accepted spellings of the exit policy parse.
+        s.on_budget_exhausted = "drain_and_exit".into();
+        assert!(s.validate().is_ok());
+        s.on_budget_exhausted = "drain-and-exit".into();
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn reliability_settings_overlay_validate_and_materialize() {
+        use crate::coordinator::GraphKernel;
+        let d = ReliabilitySettings::default();
+        assert!(!d.replay, "replay is opt-in; the default engine is at-most-once");
+        assert_eq!(d.max_attempts, 3);
+        assert_eq!(d.backoff_ms, 1);
+        assert!(d.validate().is_ok());
+        let dc = d.to_config();
+        assert!(!dc.replay);
+        assert!(dc.replay_kernels.is_empty(), "empty list = every idempotent kernel");
+        let raw = RawConfig::parse(
+            "[reliability]\nreplay = true\nmax_attempts = 5\nbackoff_ms = 2\n\
+             replay_kernels = \"bfs, pr\"\n",
+        )
+        .unwrap();
+        let s = ReliabilitySettings::from_raw(&raw);
+        assert!(s.replay);
+        assert!(s.validate().is_ok());
+        let c = s.to_config();
+        assert_eq!(c.max_attempts, 5);
+        assert_eq!(c.backoff_base, std::time::Duration::from_millis(2));
+        assert_eq!(c.replay_kernels, vec![GraphKernel::Bfs, GraphKernel::Pr]);
+        assert!(c.replays_kernel(GraphKernel::Bfs));
+        assert!(!c.replays_kernel(GraphKernel::Tc), "allow-list restricts replay");
+        // Zero attempts with replay on is rejected, not clamped.
+        let raw = RawConfig::parse("[reliability]\nreplay = true\nmax_attempts = 0\n").unwrap();
+        let err = ReliabilitySettings::from_raw(&raw).validate().unwrap_err();
+        assert_eq!(err.key, "reliability.max_attempts");
+        // ...but a disabled replay layer tolerates any attempt budget.
+        let raw = RawConfig::parse("[reliability]\nmax_attempts = 0\n").unwrap();
+        assert!(ReliabilitySettings::from_raw(&raw).validate().is_ok());
+        // Unknown kernel names are rejected with the legal spellings.
+        let raw =
+            RawConfig::parse("[reliability]\nreplay_kernels = \"bfs, warp\"\n").unwrap();
+        let err = ReliabilitySettings::from_raw(&raw).validate().unwrap_err();
+        assert_eq!(err.key, "reliability.replay_kernels");
+        assert!(err.to_string().contains("warp"));
     }
 
     #[test]

@@ -95,12 +95,15 @@ use std::time::{Duration, Instant};
 
 use crate::config::{AdmissionSettings, PoolSettings, SupervisorSettings};
 use crate::relic::pool::{
-    discover_placements, IdleHook, PoolConfig, PoolSnapshot, RelicPool, Supervisor,
-    SupervisorConfig,
+    discover_placements, BudgetPolicy, IdleHook, PoolConfig, PoolSnapshot, RelicPool, ShardHealth,
+    Supervisor, SupervisorConfig,
 };
 use crate::relic::{CrossCtx, FaultKind, LeaseBroker, LeaseStats, RelicConfig};
 
 use super::admission::{shed_decision, Admission, AdmissionConfig, ShedReason};
+use super::reliability::{
+    HealthReport, ReliabilityConfig, ReplayBook, ReplayVerdict, ShardHealthRow,
+};
 use super::router::{pick_shard_leased, Router, RouterConfig};
 use super::service::{Coordinator, Request, RequestResult, Response, ServiceMetrics};
 use super::{run_native_kernel, Backend};
@@ -125,6 +128,10 @@ pub struct EngineConfig {
     /// Maximum queue depth at which a shard is still offered to a whale
     /// (`[pool] offer_depth`). Only read when `max_borrow > 0`.
     pub offer_depth: usize,
+    /// At-least-once replay (`[reliability]`). `replay = false` (the
+    /// default) retains no requests and replays nothing — bit-for-bit
+    /// the at-most-once engine.
+    pub reliability: ReliabilityConfig,
 }
 
 impl EngineConfig {
@@ -159,9 +166,11 @@ impl EngineConfig {
             admission: admission.to_config(),
             supervisor: supervisor.to_config(),
             // `[relic] max_borrow` is not part of these three sections;
-            // the CLI overlays it after this call (serve / repro whale).
+            // the CLI overlays it after this call (serve / repro whale),
+            // exactly as it overlays `[reliability]`.
             max_borrow: 0,
             offer_depth: pool.offer_depth,
+            reliability: ReliabilityConfig::default(),
         }
     }
 }
@@ -216,6 +225,11 @@ impl DegradedGate {
         let _release = Release(self);
         f()
     }
+
+    /// Permits currently free (the health surface's occupancy readout).
+    fn available(&self) -> usize {
+        *self.permits.lock().expect("degraded gate poisoned")
+    }
 }
 
 /// The sharded analytics engine.
@@ -250,6 +264,18 @@ pub struct Engine {
     /// Bounds concurrent degraded inline executions (see
     /// [`DegradedGate`]).
     degraded_gate: DegradedGate,
+    /// The degraded gate's total permit count (for the health surface).
+    degraded_permits: usize,
+    /// At-least-once replay knobs; `replay = false` short-circuits
+    /// every reliability branch on the data path.
+    reliability: ReliabilityConfig,
+    /// Retained requests for possible replay (empty with replay off).
+    replay_book: ReplayBook,
+    /// The `rebuild` budget-exhausted policy fires at most once.
+    rebuilt: bool,
+    /// A `drain_and_exit` verdict fired: finish flushing, then the
+    /// process should exit nonzero (see [`Engine::exit_requested`]).
+    exit_requested: bool,
 }
 
 impl Engine {
@@ -381,6 +407,11 @@ impl Engine {
             admission_metrics: Arc::new(ServiceMetrics::default()),
             broker,
             degraded_gate: DegradedGate::new(degraded_permits),
+            degraded_permits: degraded_permits.max(1),
+            reliability: config.reliability,
+            replay_book: ReplayBook::default(),
+            rebuilt: false,
+            exit_requested: false,
         }
     }
 
@@ -416,6 +447,100 @@ impl Engine {
     /// release them the same way.
     pub fn set_quarantined(&self, shard: usize, quarantined: bool) {
         self.pool.set_quarantined(shard, quarantined);
+    }
+
+    /// Whether a `drain_and_exit` budget verdict asked the process to
+    /// terminate. The engine itself never exits: it finishes flushing
+    /// the current drain (every accepted request still gets a typed
+    /// verdict) and leaves the actual nonzero exit to the caller.
+    pub fn exit_requested(&self) -> bool {
+        self.exit_requested
+    }
+
+    /// Serializable health snapshot: liveness/readiness, per-shard
+    /// status, restart budgets, the fault and replay counters, and
+    /// lease state. Read-only — taking it never quarantines, steals,
+    /// or respawns (see [`HealthReport`] for the semantics).
+    pub fn health(&self) -> HealthReport {
+        let agg = self.aggregated_metrics();
+        let (max_restarts, on_budget_exhausted) = match &self.supervisor {
+            Some(sup) => {
+                let sc = sup.config();
+                (sc.max_restarts, sc.on_budget_exhausted.name())
+            }
+            None => (0, BudgetPolicy::Quarantine.name()),
+        };
+        let shards: Vec<ShardHealthRow> = match &self.supervisor {
+            Some(sup) => sup
+                .peek(&self.pool)
+                .into_iter()
+                .enumerate()
+                .map(|(i, s)| ShardHealthRow {
+                    shard: i,
+                    health: s.health.name(),
+                    heartbeat_age_ms: s.heartbeat_age.as_secs_f64() * 1e3,
+                    depth: self.pool.depth(i),
+                    quarantined: self.pool.is_quarantined(i),
+                    quarantined_for_ms: s.quarantined_for.map(|d| d.as_secs_f64() * 1e3),
+                    restarts_used: s.restarts_used,
+                    restarts_remaining: max_restarts.saturating_sub(s.restarts_used),
+                    backoff_pending: s.backoff_pending,
+                })
+                .collect(),
+            // Unsupervised engines still report what the pool itself
+            // knows: thread liveness and manual quarantines. Heartbeat
+            // ages and restart budgets are watchdog concepts and read
+            // as zero here.
+            None => (0..self.pool.shard_count())
+                .map(|i| ShardHealthRow {
+                    shard: i,
+                    health: if self.pool.shard_dead(i) {
+                        ShardHealth::Dead.name()
+                    } else {
+                        ShardHealth::Healthy.name()
+                    },
+                    heartbeat_age_ms: 0.0,
+                    depth: self.pool.depth(i),
+                    quarantined: self.pool.is_quarantined(i),
+                    quarantined_for_ms: None,
+                    restarts_used: self.pool.restarts(i),
+                    restarts_remaining: 0,
+                    backoff_pending: false,
+                })
+                .collect(),
+        };
+        let any_serving = shards
+            .iter()
+            .any(|r| r.health != ShardHealth::Dead.name() && !r.quarantined);
+        HealthReport {
+            live: !self.exit_requested,
+            ready: !self.exit_requested && any_serving,
+            quarantined: self.pool.quarantined_count(),
+            shards,
+            supervised: self.supervisor.is_some(),
+            max_restarts,
+            on_budget_exhausted,
+            exit_requested: self.exit_requested,
+            degraded_permits: self.degraded_permits,
+            degraded_in_use: self
+                .degraded_permits
+                .saturating_sub(self.degraded_gate.available()),
+            replay: self.reliability.replay,
+            retained_requests: self.replay_book.len(),
+            panics_caught: agg.fault.panics_caught.get(),
+            shard_restarts: agg.fault.shard_restarts.get(),
+            watchdog_trips: agg.fault.watchdog_trips.get(),
+            redirected_requests: agg.fault.redirected_requests.get(),
+            degraded_requests: agg.fault.degraded_requests.get(),
+            responses_lost: agg.fault.responses_lost.get(),
+            replays: agg.reliability.replays.get(),
+            replay_successes: agg.reliability.replay_successes.get(),
+            replay_sheds: agg.reliability.replay_sheds.get(),
+            gave_up: agg.reliability.gave_up.get(),
+            leases: self
+                .lease_stats()
+                .map(|l| (l.served, l.revoked, l.chunks_lent)),
+        }
     }
 
     /// The shared admission gate: route the request to the
@@ -533,8 +658,7 @@ impl Engine {
             Instant::now(),
         );
         self.admission_metrics.fault.degraded_requests.inc();
-        self.in_flight.remove(&seq);
-        self.collected.push((
+        self.collect(
             seq,
             Response {
                 id: req.id,
@@ -542,7 +666,95 @@ impl Engine {
                 result: RequestResult::Native(sum),
                 latency_ns,
             },
-        ));
+        );
+    }
+
+    /// Deliver one response toward the current drain. With replay on,
+    /// a failed response is first offered to the replay book: a
+    /// re-submitted request keeps its sequence slot (and its in-flight
+    /// entry) and produces no response here, while a successful one
+    /// releases its retention. Everything terminal resolves the slot
+    /// and joins `collected`. With replay off this is exactly the
+    /// pre-HA remove-and-push.
+    fn collect(&mut self, seq: u64, resp: Response) {
+        if self.reliability.replay {
+            if resp.result.is_ok() {
+                if let Some(attempts) = self.replay_book.complete(seq) {
+                    if attempts > 0 {
+                        self.admission_metrics.reliability.replay_successes.inc();
+                    }
+                }
+            } else if self.try_replay(seq) {
+                return;
+            }
+        }
+        self.in_flight.remove(&seq);
+        self.collected.push((seq, resp));
+    }
+
+    /// Offer one failed sequence to the replay book. `true` = a replay
+    /// was re-submitted and the failed response must *not* surface;
+    /// `false` = the failure is terminal (deadline shed, budget
+    /// exhausted, or never retained) and surfaces typed.
+    fn try_replay(&mut self, seq: u64) -> bool {
+        let rm = &self.admission_metrics;
+        match self.replay_book.consider(seq, &self.reliability, Instant::now()) {
+            ReplayVerdict::Replay { request, backoff } => {
+                rm.reliability.replays.inc();
+                if !backoff.is_zero() {
+                    // Bounded by max_attempts doublings of the (small)
+                    // backoff base and by the deadline slack, so the
+                    // drain loop stalls at most a few milliseconds per
+                    // replayed failure.
+                    std::thread::sleep(backoff);
+                }
+                self.resubmit(seq, request);
+                true
+            }
+            ReplayVerdict::Shed => {
+                rm.reliability.replay_sheds.inc();
+                false
+            }
+            ReplayVerdict::GaveUp => {
+                rm.reliability.gave_up.inc();
+                false
+            }
+            ReplayVerdict::NotRetained => false,
+        }
+    }
+
+    /// Re-submit a replayed request under its original sequence
+    /// number: healthiest live shard, inline fallback. Deliberately
+    /// not counted as a redirect — the replay counters already account
+    /// for it.
+    fn resubmit(&mut self, seq: u64, req: Request) {
+        let class = req.kernel.class();
+        let retry = pick_shard_leased(
+            self.shard_metrics
+                .iter()
+                .zip(self.pool.depths_iter())
+                .enumerate()
+                .filter(|(shard, _)| {
+                    !self.pool.is_quarantined(*shard) && !self.pool.shard_dead(*shard)
+                })
+                .map(|(shard, (m, depth))| {
+                    (
+                        shard,
+                        depth,
+                        m.service_estimator.estimate_ns(class),
+                        self.broker.as_ref().is_some_and(|b| b.is_leased(shard)),
+                    )
+                }),
+        );
+        let sq = Sequenced { seq, req };
+        match retry {
+            Ok((shard, _)) => {
+                if let Err(bounced) = self.pool.try_submit_to(shard, sq) {
+                    self.serve_inline(bounced);
+                }
+            }
+            Err(_) => self.serve_inline(sq),
+        }
     }
 
     /// Re-route an accepted-but-unprocessed request stolen from a
@@ -601,6 +813,9 @@ impl Engine {
         for sq in verdict.redirected {
             self.reroute(sq);
         }
+        if !verdict.budget_exhausted.is_empty() {
+            self.apply_budget_policy(&verdict.budget_exhausted);
+        }
         // Idle = nothing queued and nothing in processing anywhere
         // (depth decrements only after a batch's responses are sent),
         // so whatever is still unanswered can never arrive. Two
@@ -614,23 +829,77 @@ impl Engine {
             return idle_passes + 1;
         }
         while let Ok((seq, resp)) = self.responses.try_recv() {
-            self.in_flight.remove(&seq);
-            self.collected.push((seq, resp));
+            self.collect(seq, resp);
         }
-        if self.collected.len() < self.pending {
+        // Re-check idleness: with replay on, a failure absorbed by the
+        // sweep above may have just re-submitted its request — the pool
+        // is busy again, and synthesizing its sequence as lost now
+        // would answer it twice.
+        if self.pool.depths_iter().sum::<usize>() == 0 && self.collected.len() < self.pending {
             self.synthesize_lost();
         }
         0
+    }
+
+    /// Apply `[supervisor] on_budget_exhausted` to shards the watchdog
+    /// just reported dead with no restart credits left.
+    ///
+    /// * `Quarantine` (default) — nothing: the shard stays quarantined
+    ///   and the engine keeps serving around it (the pre-HA behavior).
+    /// * `DrainAndExit` — mark the engine for a nonzero process exit;
+    ///   the current drain still flushes every accepted request with a
+    ///   typed verdict before the CLI honors the flag.
+    /// * `Rebuild` — reconstruct the dead shards once: respawn each on
+    ///   its surviving queue with a zeroed restart count, a forgiven
+    ///   watchdog history, and quarantine lifted. A second exhaustion
+    ///   falls back to quarantine.
+    fn apply_budget_policy(&mut self, exhausted: &[usize]) {
+        let policy = self
+            .supervisor
+            .as_ref()
+            .expect("budget policy implies a supervisor")
+            .config()
+            .on_budget_exhausted;
+        match policy {
+            BudgetPolicy::Quarantine => {}
+            BudgetPolicy::DrainAndExit => {
+                self.exit_requested = true;
+            }
+            BudgetPolicy::Rebuild => {
+                if self.rebuilt {
+                    return;
+                }
+                self.rebuilt = true;
+                for &shard in exhausted {
+                    if self.pool.respawn_shard(shard) {
+                        self.pool.reset_restart_count(shard);
+                        self.pool.set_quarantined(shard, false);
+                        self.supervisor
+                            .as_mut()
+                            .expect("budget policy implies a supervisor")
+                            .forgive(shard);
+                        self.admission_metrics.fault.shard_restarts.inc();
+                    }
+                }
+            }
+        }
     }
 
     /// Answer every still-unanswered sequence with a typed
     /// [`FaultKind::ResponseLost`] failure — the no-drop invariant's
     /// last line of defense.
     fn synthesize_lost(&mut self) {
-        let fm = &self.admission_metrics.fault;
-        for (&seq, &id) in &self.in_flight {
-            fm.responses_lost.inc();
-            self.collected.push((
+        // Snapshot first: with replay on, `collect` may re-submit an
+        // orphan to the pool (keeping its in-flight entry) while this
+        // loop runs.
+        let orphans: Vec<(u64, u64)> =
+            self.in_flight.iter().map(|(&seq, &id)| (seq, id)).collect();
+        for (seq, id) in orphans {
+            // The loss itself is a fault-layer fact and is always
+            // counted, whether or not the reliability layer then
+            // recovers the request by replaying it.
+            self.admission_metrics.fault.responses_lost.inc();
+            self.collect(
                 seq,
                 Response {
                     id,
@@ -638,9 +907,8 @@ impl Engine {
                     result: RequestResult::Failed(FaultKind::ResponseLost),
                     latency_ns: 0,
                 },
-            ));
+            );
         }
-        self.in_flight.clear();
     }
 
     /// Dispatch one request, blocking when the routed shard's channel
@@ -680,6 +948,9 @@ impl Engine {
             Err(verdict) => return verdict,
         };
         let id = req.id;
+        if self.reliability.replays_kernel(req.kernel) {
+            self.replay_book.retain(self.next_seq, &req);
+        }
         self.pool.submit_to(shard, Sequenced { seq: self.next_seq, req });
         self.accepted(shard, false, slack_ns, id)
     }
@@ -694,9 +965,15 @@ impl Engine {
             Err(verdict) => return verdict,
         };
         let id = req.id;
+        if self.reliability.replays_kernel(req.kernel) {
+            self.replay_book.retain(self.next_seq, &req);
+        }
         match self.pool.try_submit_to(shard, Sequenced { seq: self.next_seq, req }) {
             Ok(()) => self.accepted(shard, false, slack_ns, id),
             Err(bounced) => {
+                // Never queued: the caller keeps the request, so the
+                // book must not hold a retention for this sequence.
+                self.replay_book.forget(self.next_seq);
                 self.admission_metrics.admission.queue_full_rejections.inc();
                 Admission::QueueFull { rejected: bounced.req }
             }
@@ -725,6 +1002,9 @@ impl Engine {
             Err(verdict) => return verdict,
         };
         let id = req.id;
+        if self.reliability.replays_kernel(req.kernel) {
+            self.replay_book.retain(self.next_seq, &req);
+        }
         match self.pool.submit_or_park_to(shard, Sequenced { seq: self.next_seq, req }) {
             Ok(parked) => {
                 if parked {
@@ -799,9 +1079,8 @@ impl Engine {
         while self.collected.len() < self.pending {
             match self.responses.recv_timeout(tick) {
                 Ok((seq, resp)) => {
-                    self.in_flight.remove(&seq);
                     idle_passes = 0;
-                    self.collected.push((seq, resp));
+                    self.collect(seq, resp);
                 }
                 Err(RecvTimeoutError::Timeout) => {
                     if self.supervisor.is_some() {
@@ -832,6 +1111,10 @@ impl Engine {
         }
         self.pending = 0;
         self.in_flight.clear();
+        // A settled drain leaves nothing outstanding: any entry still
+        // retained here was answered terminally (gave-up / shed / never
+        // failed), so retention must not leak across drains.
+        self.replay_book.clear();
         let mut out = std::mem::take(&mut self.collected);
         out.sort_by_key(|(seq, _)| *seq);
         out.into_iter().map(|(_, resp)| resp).collect()
@@ -934,6 +1217,9 @@ impl Engine {
         }
         if !agg.fault.is_quiet() {
             out += &format!("faults: {}\n", agg.fault.summary());
+        }
+        if !agg.reliability.is_quiet() {
+            out += &format!("reliability: {}\n", agg.reliability.summary());
         }
         for (i, m) in self.shard_metrics.iter().enumerate() {
             let p = self.pool.placement(i);

@@ -24,6 +24,7 @@
 
 pub mod admission;
 pub mod engine;
+pub mod reliability;
 pub mod router;
 pub mod service;
 
@@ -31,6 +32,7 @@ pub use admission::{
     edf_order, shed_decision, Admission, AdmissionConfig, Deadline, ShedPolicy, ShedReason,
 };
 pub use engine::{Engine, EngineConfig};
+pub use reliability::{HealthReport, ReliabilityConfig, ReplayBook, ShardHealthRow};
 pub use router::{pick_shard, pick_shard_leased, Backend, RouteError, Router, RouterConfig};
 pub use service::{Coordinator, Request, RequestResult, Response, ServiceMetrics};
 
@@ -85,6 +87,33 @@ impl GraphKernel {
             GraphKernel::Sssp,
             GraphKernel::Tc,
         ]
+    }
+
+    /// The replay-safety contract: true when re-running this kernel
+    /// with the same `(graph, source)` is guaranteed to produce the
+    /// same checksum with no side effects, so the reliability layer's
+    /// at-least-once replay may re-submit a failed request.
+    ///
+    /// All six GAP kernels qualify: each is a pure function of the
+    /// immutable [`CsrGraph`] and the source vertex — no shared mutable
+    /// state survives a request, deterministic iteration orders make
+    /// the checksum reproducible bit-for-bit, and a request that failed
+    /// mid-kernel left nothing behind (each run allocates its own
+    /// frontier/score buffers). A future kernel that mutates the graph,
+    /// consumes a stream, or reads wall-clock state MUST return `false`
+    /// here; the replay layer then never re-submits it (its failures
+    /// surface typed, exactly as with `replay = false`), and config
+    /// validation rejects a `[reliability] replay_kernels` list that
+    /// names it.
+    pub fn idempotent(self) -> bool {
+        match self {
+            GraphKernel::Bc
+            | GraphKernel::Bfs
+            | GraphKernel::Cc
+            | GraphKernel::Pr
+            | GraphKernel::Sssp
+            | GraphKernel::Tc => true,
+        }
     }
 
     /// Parse from the CLI / figure name.

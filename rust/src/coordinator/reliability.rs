@@ -1,0 +1,549 @@
+//! **The high-availability layer**: at-least-once replay bookkeeping
+//! and the machine-readable health surface.
+//!
+//! PR 6 *contained* failures (typed `Failed` responses, quarantine,
+//! respawn); this module closes the loop from "failure counted" to
+//! "failure recovered":
+//!
+//! * [`ReliabilityConfig`] — the opt-in `[reliability]` knobs. With
+//!   `replay = false` (the default) the engine never clones a request
+//!   and never consults the book: bit-for-bit the at-most-once engine.
+//! * [`ReplayBook`] — per-sequence retention of accepted requests so a
+//!   request that comes back [`RequestResult::Failed`] can be rebuilt
+//!   and re-submitted. Replay is allowed only for kernels whose
+//!   [`GraphKernel::idempotent`] contract holds, with bounded attempts,
+//!   exponential backoff between attempts, and a deadline-aware budget:
+//!   a request whose deadline has already passed is **shed, never
+//!   replayed** — retrying cannot un-miss a deadline.
+//! * [`HealthReport`] / [`ShardHealthRow`] — the serializable snapshot
+//!   behind [`Engine::health`](super::Engine::health), `serve
+//!   --health-json`, and the `repro health` self-check, with
+//!   liveness/readiness semantics an external orchestrator can poll.
+//!
+//! # The replay state machine
+//!
+//! ```text
+//!  accepted ──► retained (attempts = 0)
+//!                  │ response ok          ──► complete  [replay_successes if attempts > 0]
+//!                  │ response Failed:
+//!                  │   deadline past      ──► surface Failed  [replay_sheds]
+//!                  │   attempts = max     ──► surface Failed  [gave_up]
+//!                  │   else               ──► backoff, re-submit same seq  [replays]
+//! ```
+//!
+//! Every request that enters the failed branch resolves exactly once —
+//! as a replayed success, a deadline shed, or a give-up — so the
+//! engine's `submitted = completed + shed + failed_terminal` balance
+//! holds with replay on exactly as it does with replay off; the
+//! [`crate::metrics::ReliabilityMetrics`] counters make the resolution
+//! auditable (`repro chaos` gates on the books reconciling).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::graph::CsrGraph;
+use crate::json::{self, Value};
+
+use super::admission::Deadline;
+use super::service::Request;
+use super::GraphKernel;
+
+/// Knobs for the opt-in at-least-once replay layer (`[reliability]`).
+#[derive(Debug, Clone)]
+pub struct ReliabilityConfig {
+    /// Master switch. Off (the default) retains nothing and replays
+    /// nothing: the at-most-once engine, bit-for-bit.
+    pub replay: bool,
+    /// Replay attempts per request beyond its first execution. `0`
+    /// with `replay = true` is rejected by config validation — it
+    /// would count every failure as a give-up without ever retrying.
+    pub max_attempts: u32,
+    /// Backoff before the first replay of a request; doubles per
+    /// attempt, and is always capped by the request's remaining
+    /// deadline slack (a deadline-less request waits the full backoff).
+    pub backoff_base: Duration,
+    /// Restrict replay to these kernels (empty = every kernel whose
+    /// [`GraphKernel::idempotent`] contract holds). Config validation
+    /// rejects a list naming an unknown or non-idempotent kernel.
+    pub replay_kernels: Vec<GraphKernel>,
+}
+
+impl Default for ReliabilityConfig {
+    fn default() -> Self {
+        ReliabilityConfig {
+            replay: false,
+            max_attempts: 3,
+            backoff_base: Duration::from_millis(1),
+            replay_kernels: Vec::new(),
+        }
+    }
+}
+
+impl ReliabilityConfig {
+    /// Whether a request running `kernel` is eligible for retention and
+    /// replay under this config: the master switch is on, the kernel's
+    /// idempotence contract holds, and the allow-list (when non-empty)
+    /// names it.
+    pub fn replays_kernel(&self, kernel: GraphKernel) -> bool {
+        self.replay
+            && kernel.idempotent()
+            && (self.replay_kernels.is_empty() || self.replay_kernels.contains(&kernel))
+    }
+}
+
+/// What the replay book retains per accepted sequence: enough to
+/// rebuild the [`Request`] (which is deliberately not `Clone` — the
+/// clone cost here is opt-in) plus the attempt count.
+#[derive(Debug)]
+struct Retained {
+    id: u64,
+    kernel: GraphKernel,
+    graph: CsrGraph,
+    source: u32,
+    deadline: Deadline,
+    /// Replays already launched for this sequence.
+    attempts: u32,
+}
+
+/// How the book resolved one failed response.
+#[derive(Debug)]
+pub enum ReplayVerdict {
+    /// Re-submit this rebuilt request under the same sequence number
+    /// after waiting `backoff` (already capped by deadline slack).
+    Replay { request: Request, backoff: Duration },
+    /// The deadline passed — surface the typed failure, count a shed.
+    Shed,
+    /// The attempt budget ran out — surface the typed failure.
+    GaveUp,
+    /// Nothing retained for this sequence (replay off for it, or a
+    /// non-idempotent kernel): surface the failure untouched.
+    NotRetained,
+}
+
+/// Per-sequence retention for at-least-once replay. Owned by the
+/// engine and only touched when `replay = true`.
+#[derive(Debug, Default)]
+pub struct ReplayBook {
+    retained: BTreeMap<u64, Retained>,
+}
+
+impl ReplayBook {
+    /// Retain an accepted request for possible replay. Non-idempotent
+    /// kernels are never retained — their failures always surface
+    /// typed, exactly as with replay off.
+    pub fn retain(&mut self, seq: u64, req: &Request) {
+        if !req.kernel.idempotent() {
+            return;
+        }
+        self.retained.insert(
+            seq,
+            Retained {
+                id: req.id,
+                kernel: req.kernel,
+                graph: req.graph.clone(),
+                source: req.source,
+                deadline: req.deadline,
+                attempts: 0,
+            },
+        );
+    }
+
+    /// Drop the retention for a sequence that was never actually
+    /// queued (a `QueueFull` bounce returned the request to the
+    /// caller).
+    pub fn forget(&mut self, seq: u64) {
+        self.retained.remove(&seq);
+    }
+
+    /// A successful response arrived for `seq`: release the retention
+    /// and report how many replays it took (`None` when nothing was
+    /// retained, `Some(0)` when the first execution succeeded).
+    pub fn complete(&mut self, seq: u64) -> Option<u32> {
+        self.retained.remove(&seq).map(|r| r.attempts)
+    }
+
+    /// A failed response arrived for `seq`: decide its fate. `Replay`
+    /// keeps the retention (with the attempt counted) so a repeat
+    /// failure is judged against the same budget; every other verdict
+    /// releases it.
+    pub fn consider(&mut self, seq: u64, config: &ReliabilityConfig, now: Instant) -> ReplayVerdict {
+        let Some(entry) = self.retained.get_mut(&seq) else {
+            return ReplayVerdict::NotRetained;
+        };
+        if entry.deadline.is_past(now) {
+            self.retained.remove(&seq);
+            return ReplayVerdict::Shed;
+        }
+        if entry.attempts >= config.max_attempts {
+            self.retained.remove(&seq);
+            return ReplayVerdict::GaveUp;
+        }
+        // Exponential backoff per attempt, capped by the remaining
+        // deadline slack — sleeping past the deadline would turn a
+        // recoverable failure into a guaranteed miss.
+        let exp = entry.attempts.min(10);
+        let mut backoff = config.backoff_base * (1u32 << exp);
+        if let Some(slack) = entry.deadline.slack_at(now) {
+            backoff = backoff.min(slack);
+        }
+        entry.attempts += 1;
+        ReplayVerdict::Replay {
+            request: Request {
+                id: entry.id,
+                kernel: entry.kernel,
+                graph: entry.graph.clone(),
+                source: entry.source,
+                deadline: entry.deadline,
+            },
+            backoff,
+        }
+    }
+
+    /// Retentions currently held (accepted but not yet resolved).
+    pub fn len(&self) -> usize {
+        self.retained.len()
+    }
+
+    /// True when nothing is retained.
+    pub fn is_empty(&self) -> bool {
+        self.retained.is_empty()
+    }
+
+    /// Release every retention (a completed drain owes nothing).
+    pub fn clear(&mut self) {
+        self.retained.clear();
+    }
+}
+
+/// One shard's row in the [`HealthReport`].
+#[derive(Debug, Clone)]
+pub struct ShardHealthRow {
+    /// Shard index.
+    pub shard: usize,
+    /// `healthy | stuck | dead` — what a watchdog pass would decide
+    /// right now ([`crate::relic::ShardHealth::name`]).
+    pub health: &'static str,
+    /// Time since the shard's heartbeat last advanced, in milliseconds.
+    pub heartbeat_age_ms: f64,
+    /// Requests queued or in processing on the shard.
+    pub depth: usize,
+    /// Whether routing currently skips the shard.
+    pub quarantined: bool,
+    /// Duration of the current quarantine, in milliseconds.
+    pub quarantined_for_ms: Option<f64>,
+    /// Restart credits consumed (budget decay hands them back).
+    pub restarts_used: u32,
+    /// Restart credits left before `on_budget_exhausted` applies.
+    pub restarts_remaining: u32,
+    /// A respawn is owed but waiting out its exponential backoff.
+    pub backoff_pending: bool,
+}
+
+/// Serializable engine health snapshot — the orchestrator-facing
+/// surface behind `Engine::health()`, `serve --health-json`, and
+/// `repro health`.
+///
+/// Semantics: **live** means the engine can still answer requests at
+/// all — true as long as it exists, because the degraded inline path
+/// serves even with every shard down, and false only once a
+/// `drain_and_exit` verdict asked the process to terminate. **ready**
+/// means the engine should receive new traffic: at least one shard is
+/// alive and unquarantined, and no exit has been requested. An
+/// orchestrator restarts on `!live` and steers traffic away on
+/// `!ready`.
+#[derive(Debug, Clone)]
+pub struct HealthReport {
+    /// The engine can still answer requests (possibly degraded).
+    pub live: bool,
+    /// The engine should receive new traffic.
+    pub ready: bool,
+    /// Per-shard status rows.
+    pub shards: Vec<ShardHealthRow>,
+    /// Shards currently quarantined.
+    pub quarantined: usize,
+    /// Whether the watchdog is active.
+    pub supervised: bool,
+    /// Restart budget per shard (0 when unsupervised).
+    pub max_restarts: u32,
+    /// The budget-exhausted policy name.
+    pub on_budget_exhausted: &'static str,
+    /// A `drain_and_exit` verdict fired; the process should exit
+    /// nonzero after the current drain.
+    pub exit_requested: bool,
+    /// Degraded-gate size (permits total).
+    pub degraded_permits: usize,
+    /// Degraded-gate permits in use right now.
+    pub degraded_in_use: usize,
+    /// Whether at-least-once replay is enabled.
+    pub replay: bool,
+    /// Requests currently retained for possible replay.
+    pub retained_requests: usize,
+    /// Fault counters: kernel panics caught.
+    pub panics_caught: u64,
+    /// Fault counters: shard threads respawned.
+    pub shard_restarts: u64,
+    /// Fault counters: watchdog quarantine trips.
+    pub watchdog_trips: u64,
+    /// Fault counters: requests redirected off quarantined shards.
+    pub redirected_requests: u64,
+    /// Fault counters: requests served inline while degraded.
+    pub degraded_requests: u64,
+    /// Fault counters: responses synthesized as lost.
+    pub responses_lost: u64,
+    /// Replay counters: re-submissions launched.
+    pub replays: u64,
+    /// Replay counters: requests recovered by replay.
+    pub replay_successes: u64,
+    /// Replay counters: replay candidates shed past their deadline.
+    pub replay_sheds: u64,
+    /// Replay counters: requests whose replay budget ran out.
+    pub gave_up: u64,
+    /// Cross-shard lease state: `(served, revoked, chunks_lent)`, when
+    /// a broker exists.
+    pub leases: Option<(u64, u64, u64)>,
+}
+
+impl HealthReport {
+    /// Serialize for `serve --health-json` / `repro health` (and any
+    /// future wire surface). Key order is stable.
+    pub fn to_json(&self) -> String {
+        let shards = self
+            .shards
+            .iter()
+            .map(|s| {
+                Value::Object(vec![
+                    ("shard".into(), Value::Number(s.shard as f64)),
+                    ("health".into(), Value::String(s.health.into())),
+                    ("heartbeat_age_ms".into(), Value::Number(s.heartbeat_age_ms)),
+                    ("depth".into(), Value::Number(s.depth as f64)),
+                    ("quarantined".into(), Value::Bool(s.quarantined)),
+                    (
+                        "quarantined_for_ms".into(),
+                        match s.quarantined_for_ms {
+                            Some(ms) => Value::Number(ms),
+                            None => Value::Null,
+                        },
+                    ),
+                    ("restarts_used".into(), Value::Number(s.restarts_used as f64)),
+                    (
+                        "restarts_remaining".into(),
+                        Value::Number(s.restarts_remaining as f64),
+                    ),
+                    ("backoff_pending".into(), Value::Bool(s.backoff_pending)),
+                ])
+            })
+            .collect();
+        let faults = Value::Object(vec![
+            ("panics_caught".into(), Value::Number(self.panics_caught as f64)),
+            ("shard_restarts".into(), Value::Number(self.shard_restarts as f64)),
+            ("watchdog_trips".into(), Value::Number(self.watchdog_trips as f64)),
+            (
+                "redirected_requests".into(),
+                Value::Number(self.redirected_requests as f64),
+            ),
+            (
+                "degraded_requests".into(),
+                Value::Number(self.degraded_requests as f64),
+            ),
+            ("responses_lost".into(), Value::Number(self.responses_lost as f64)),
+        ]);
+        let reliability = Value::Object(vec![
+            ("replay".into(), Value::Bool(self.replay)),
+            (
+                "retained_requests".into(),
+                Value::Number(self.retained_requests as f64),
+            ),
+            ("replays".into(), Value::Number(self.replays as f64)),
+            (
+                "replay_successes".into(),
+                Value::Number(self.replay_successes as f64),
+            ),
+            ("replay_sheds".into(), Value::Number(self.replay_sheds as f64)),
+            ("gave_up".into(), Value::Number(self.gave_up as f64)),
+        ]);
+        let leases = match self.leases {
+            Some((served, revoked, chunks_lent)) => Value::Object(vec![
+                ("served".into(), Value::Number(served as f64)),
+                ("revoked".into(), Value::Number(revoked as f64)),
+                ("chunks_lent".into(), Value::Number(chunks_lent as f64)),
+            ]),
+            None => Value::Null,
+        };
+        json::to_string(&Value::Object(vec![
+            ("live".into(), Value::Bool(self.live)),
+            ("ready".into(), Value::Bool(self.ready)),
+            ("supervised".into(), Value::Bool(self.supervised)),
+            ("quarantined".into(), Value::Number(self.quarantined as f64)),
+            ("max_restarts".into(), Value::Number(self.max_restarts as f64)),
+            (
+                "on_budget_exhausted".into(),
+                Value::String(self.on_budget_exhausted.into()),
+            ),
+            ("exit_requested".into(), Value::Bool(self.exit_requested)),
+            (
+                "degraded_permits".into(),
+                Value::Number(self.degraded_permits as f64),
+            ),
+            ("degraded_in_use".into(), Value::Number(self.degraded_in_use as f64)),
+            ("shards".into(), Value::Array(shards)),
+            ("faults".into(), faults),
+            ("reliability".into(), reliability),
+            ("leases".into(), leases),
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::kronecker::paper_graph;
+
+    fn req(id: u64, deadline: Deadline) -> Request {
+        Request {
+            id,
+            kernel: GraphKernel::Bfs,
+            graph: paper_graph(),
+            source: 0,
+            deadline,
+        }
+    }
+
+    #[test]
+    fn replay_book_retains_until_complete() {
+        let mut book = ReplayBook::default();
+        assert!(book.is_empty());
+        book.retain(0, &req(7, Deadline::none()));
+        assert_eq!(book.len(), 1);
+        assert_eq!(book.complete(0), Some(0));
+        assert!(book.is_empty());
+        // Completing an unknown sequence is a no-op.
+        assert_eq!(book.complete(0), None);
+    }
+
+    #[test]
+    fn failed_requests_replay_until_the_budget_runs_out() {
+        let cfg = ReliabilityConfig {
+            replay: true,
+            max_attempts: 2,
+            backoff_base: Duration::from_millis(1),
+        };
+        let mut book = ReplayBook::default();
+        book.retain(0, &req(7, Deadline::none()));
+        let now = Instant::now();
+        // First failure: replay with the base backoff.
+        match book.consider(0, &cfg, now) {
+            ReplayVerdict::Replay { request, backoff } => {
+                assert_eq!(request.id, 7);
+                assert_eq!(backoff, Duration::from_millis(1));
+            }
+            other => panic!("expected replay, got {other:?}"),
+        }
+        // Second failure: backoff doubles.
+        match book.consider(0, &cfg, now) {
+            ReplayVerdict::Replay { backoff, .. } => {
+                assert_eq!(backoff, Duration::from_millis(2));
+            }
+            other => panic!("expected replay, got {other:?}"),
+        }
+        // Third failure: budget exhausted; retention released.
+        assert!(matches!(book.consider(0, &cfg, now), ReplayVerdict::GaveUp));
+        assert!(book.is_empty());
+        assert!(matches!(
+            book.consider(0, &cfg, now),
+            ReplayVerdict::NotRetained
+        ));
+    }
+
+    #[test]
+    fn expired_deadlines_shed_instead_of_replaying() {
+        let cfg = ReliabilityConfig::default();
+        let mut book = ReplayBook::default();
+        let past = Deadline::at(Instant::now() - Duration::from_millis(5));
+        book.retain(0, &req(1, past));
+        assert!(matches!(
+            book.consider(0, &cfg, Instant::now()),
+            ReplayVerdict::Shed
+        ));
+        assert!(book.is_empty());
+    }
+
+    #[test]
+    fn backoff_is_capped_by_remaining_slack() {
+        let cfg = ReliabilityConfig {
+            replay: true,
+            max_attempts: 1,
+            backoff_base: Duration::from_secs(60),
+        };
+        let mut book = ReplayBook::default();
+        let soon = Deadline::within(Duration::from_millis(50));
+        book.retain(0, &req(1, soon));
+        match book.consider(0, &cfg, Instant::now()) {
+            ReplayVerdict::Replay { backoff, .. } => {
+                assert!(
+                    backoff <= Duration::from_millis(50),
+                    "backoff {backoff:?} must not outlast the deadline slack"
+                );
+            }
+            other => panic!("expected replay, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn queue_full_bounces_forget_their_retention() {
+        let mut book = ReplayBook::default();
+        book.retain(3, &req(1, Deadline::none()));
+        book.forget(3);
+        assert!(book.is_empty());
+    }
+
+    #[test]
+    fn health_report_serializes_stable_keys() {
+        let report = HealthReport {
+            live: true,
+            ready: false,
+            shards: vec![ShardHealthRow {
+                shard: 0,
+                health: "dead",
+                heartbeat_age_ms: 12.5,
+                depth: 3,
+                quarantined: true,
+                quarantined_for_ms: Some(40.0),
+                restarts_used: 3,
+                restarts_remaining: 0,
+                backoff_pending: false,
+            }],
+            quarantined: 1,
+            supervised: true,
+            max_restarts: 3,
+            on_budget_exhausted: "quarantine",
+            exit_requested: false,
+            degraded_permits: 1,
+            degraded_in_use: 0,
+            replay: true,
+            retained_requests: 2,
+            panics_caught: 0,
+            shard_restarts: 3,
+            watchdog_trips: 1,
+            redirected_requests: 4,
+            degraded_requests: 0,
+            responses_lost: 0,
+            replays: 2,
+            replay_successes: 1,
+            replay_sheds: 0,
+            gave_up: 0,
+            leases: None,
+        };
+        let json = report.to_json();
+        for key in [
+            "\"live\":true",
+            "\"ready\":false",
+            "\"health\":\"dead\"",
+            "\"restarts_remaining\":0",
+            "\"on_budget_exhausted\":\"quarantine\"",
+            "\"replays\":2",
+            "\"leases\":null",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+    }
+}

@@ -17,7 +17,9 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::graph::{dense, CsrGraph};
-use crate::metrics::{AdmissionMetrics, Counter, FaultMetrics, Histogram, ServiceEstimator};
+use crate::metrics::{
+    AdmissionMetrics, Counter, FaultMetrics, Histogram, ReliabilityMetrics, ServiceEstimator,
+};
 use crate::relic::{with_lease, CrossCtx, FaultKind, FaultPlan, Par, Relic, RelicConfig};
 use crate::runtime::GraphExecutor;
 
@@ -96,6 +98,10 @@ pub struct ServiceMetrics {
     /// its own instance; aggregation merges both. All-zero in a
     /// healthy run.
     pub fault: FaultMetrics,
+    /// At-least-once replay counters, recorded engine-side by the
+    /// opt-in reliability layer. All-zero with `replay = false` (the
+    /// default) — the degeneracy-ladder anchor.
+    pub reliability: ReliabilityMetrics,
 }
 
 impl ServiceMetrics {
@@ -111,6 +117,7 @@ impl ServiceMetrics {
         self.admission.merge_from(&other.admission);
         self.service_estimator.merge_from(&other.service_estimator);
         self.fault.merge_from(&other.fault);
+        self.reliability.merge_from(&other.reliability);
     }
 
     /// Completion accounting for exactly one request: a request

@@ -22,7 +22,10 @@
 //!                    failure for recovery drills, --max-borrow B lets
 //!                    whale requests borrow up to B idle pair-shards,
 //!                    --offer-depth D still offers shards with ≤ D
-//!                    queued requests)
+//!                    queued requests, --replay re-submits typed
+//!                    failures of idempotent kernels at least once,
+//!                    --health-json prints the health report after the
+//!                    batch)
 //! repro pool         pool-scaling sweep: throughput vs shard count,
 //!                    with pool-vs-single-pair checksum verification
 //!                    (--shards 1,2,4 --requests N --reps R)
@@ -39,6 +42,16 @@
 //!                    against a supervised engine, asserting the
 //!                    no-drop invariant and per-scenario recovery
 //!                    counters (--requests N --shards N)
+//! repro chaos        deterministic chaos soak: seeded random multi-fault
+//!                    schedules (panic + stall + kill + drop interleaved)
+//!                    against a supervised engine with at-least-once
+//!                    replay, gated on no-drop, checksum-equal-to-serial
+//!                    and replay-book reconciliation (--seed S --rounds R
+//!                    --requests N --shards N; --no-replay soaks the
+//!                    typed-failure path instead)
+//! repro health       build the engine, warm it with one request per
+//!                    kernel, and print the serialized health report;
+//!                    exits nonzero unless the engine is live and ready
 //! repro whale        whale-scaling sweep: one oversized request
 //!                    borrowing idle pair-shards via the lease broker,
 //!                    vs the serial and single-pair baselines, with a
@@ -50,8 +63,9 @@
 //!
 //! Common options: `--out results` writes figure JSON/text files;
 //! `--iters N` (wallclock); `--artifacts DIR`; `--config FILE` loads
-//! `[pool]`/`[admission]`/`[supervisor]`/`[fault]`/`[relic]` settings
-//! for serve/pool/admission/faults/whale (CLI flags override);
+//! `[pool]`/`[admission]`/`[supervisor]`/`[fault]`/`[relic]`/
+//! `[reliability]` settings for serve/pool/admission/faults/chaos/
+//! health/whale (CLI flags override);
 //! `--no-pin` disables CPU pinning.
 
 use std::path::Path;
@@ -60,7 +74,8 @@ use relic_smt::bench::{self, figures};
 use relic_smt::bench::ablation;
 use relic_smt::cli::Args;
 use relic_smt::config::{
-    AdmissionSettings, FaultSettings, PoolSettings, RawConfig, RelicSettings, SupervisorSettings,
+    AdmissionSettings, FaultSettings, PoolSettings, RawConfig, RelicSettings,
+    ReliabilitySettings, SupervisorSettings,
 };
 use relic_smt::coordinator::{
     Coordinator, Deadline, Engine, EngineConfig, GraphKernel, Request, Router, RouterConfig,
@@ -273,14 +288,16 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 let supervisor = supervisor_settings(args)?;
                 let fault = fault_settings(args)?;
                 let relic = relic_settings(args)?;
+                let reliability = reliability_settings(args)?;
                 let mut engine_cfg =
                     EngineConfig::from_settings(&settings, &admission, &supervisor);
                 engine_cfg.pool.fault = fault.plan();
                 engine_cfg.max_borrow = relic.max_borrow;
+                engine_cfg.reliability = reliability.to_config();
                 let mut engine = Engine::new(engine_cfg);
                 println!(
                     "host: {}; engine: {} shards; shed policy {}; deadline {:?}; \
-                     ema alpha {}; edf {}; supervisor {}; max borrow {}{}",
+                     ema alpha {}; edf {}; supervisor {}; max borrow {}; replay {}{}",
                     affinity::topology_summary(),
                     engine.shard_count(),
                     admission.shed,
@@ -289,6 +306,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
                     if admission.edf { "on" } else { "off" },
                     if engine.supervisor_enabled() { "on" } else { "off" },
                     relic.max_borrow,
+                    if reliability.replay { "on" } else { "off" },
                     if fault.is_empty() { "" } else { "; fault injection armed" },
                 );
                 let t0 = std::time::Instant::now();
@@ -301,6 +319,16 @@ fn run(args: &Args) -> anyhow::Result<()> {
                     responses.len()
                 );
                 println!("{}", engine.report());
+                if args.flag("health-json") {
+                    println!("{}", engine.health().to_json());
+                }
+                if engine.exit_requested() {
+                    anyhow::bail!(
+                        "restart budget exhausted with on_budget_exhausted = \
+                         drain_and_exit; in-flight work was flushed with typed \
+                         verdicts — exiting nonzero as configured"
+                    );
+                }
             } else {
                 let artifacts = args.get("artifacts").unwrap_or("artifacts");
                 let executor = GraphExecutor::new(Path::new(artifacts)).ok();
@@ -387,6 +415,73 @@ fn run(args: &Args) -> anyhow::Result<()> {
             println!("{}", figures::render_faults(&rows));
             write_out(args, "faults.json", &figures::fault_rows_to_json(&rows))?;
         }
+        Some("chaos") => {
+            let settings = pool_settings(args)?;
+            let admission = admission_settings(args)?;
+            let supervisor = supervisor_settings(args)?;
+            let reliability = reliability_settings(args)?;
+            let seed = args.get_u64("seed", 1);
+            let rounds = args.get_u64("rounds", 3) as usize;
+            let requests = args.get_u64("requests", 96) as usize;
+            // The soak defaults replay ON — recovering every injected
+            // failure is what it exists to prove. `--no-replay` soaks
+            // the typed-failure surfacing path instead.
+            let replay = !args.flag("no-replay");
+            println!("host: {}", affinity::topology_summary());
+            let mut template = EngineConfig::from_settings(&settings, &admission, &supervisor);
+            template.reliability = reliability.to_config();
+            println!(
+                "chaos soak: seed {seed}, {rounds} round(s), {requests} requests/round, \
+                 {} shard(s), replay {}\n",
+                settings
+                    .shard_count_hint()
+                    .map(|n| n.to_string())
+                    .unwrap_or_else(|| "auto (2)".into()),
+                if replay { "on" } else { "off" },
+            );
+            let rows = figures::chaos_soak(&template, seed, rounds, requests, replay);
+            println!("{}", figures::render_chaos(&rows));
+            write_out(args, "chaos.json", &figures::chaos_rows_to_json(&rows))?;
+        }
+        Some("health") => {
+            let settings = pool_settings(args)?;
+            let admission = admission_settings(args)?;
+            let mut supervisor = supervisor_settings(args)?;
+            let reliability = reliability_settings(args)?;
+            // The self-check wants the watchdog's view; honor an
+            // explicit opt-out but default it on.
+            if !args.flag("no-supervisor") {
+                supervisor.enabled = true;
+            }
+            let mut engine_cfg = EngineConfig::from_settings(&settings, &admission, &supervisor);
+            engine_cfg.reliability = reliability.to_config();
+            let mut engine = Engine::new(engine_cfg);
+            // Warm every shard with one request per kernel so the
+            // heartbeats and depth columns report a served engine, not
+            // a cold one.
+            let requests: Vec<Request> = GraphKernel::all()
+                .into_iter()
+                .enumerate()
+                .map(|(i, kernel)| Request {
+                    id: i as u64,
+                    kernel,
+                    graph: paper_graph(),
+                    source: 0,
+                    deadline: Deadline::none(),
+                })
+                .collect();
+            let warmed = engine.process_batch(requests);
+            let report = engine.health();
+            println!("{}", report.to_json());
+            anyhow::ensure!(warmed.len() == 6, "health warmup lost responses");
+            anyhow::ensure!(
+                report.live && report.ready,
+                "engine is not healthy (live={}, ready={})",
+                report.live,
+                report.ready
+            );
+            println!("health OK: live and ready");
+        }
         Some("whale") => {
             let settings = pool_settings(args)?;
             let admission = admission_settings(args)?;
@@ -451,7 +546,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         _ => {
             println!(
                 "usage: repro <fig1|fig3|fig4|granularity|ablation|wallclock|intra\
-                 |serve|pool|admission|faults|whale|selftest> [--options]"
+                 |serve|pool|admission|faults|chaos|health|whale|selftest> [--options]"
             );
             println!("see rust/src/main.rs docs for details");
         }
@@ -532,7 +627,12 @@ fn pool_settings(args: &Args) -> anyhow::Result<PoolSettings> {
 /// `[supervisor]` settings: config file first (`--config PATH`), then
 /// CLI overrides (`--supervisor` / `--no-supervisor` — the flag pair
 /// lets the CLI A/B against a config file that disables the watchdog —
-/// `--stuck-after-ms N`, `--max-restarts N`, `--backoff-ms N`).
+/// `--stuck-after-ms N`, `--max-restarts N`, `--backoff-ms N`,
+/// `--heal-after-ticks N`, `--on-budget-exhausted POLICY`). The merged
+/// result is validated before use: contradictory combinations (a zero
+/// stuck threshold, a restart budget with no backoff) and unknown exit
+/// policies are typed startup errors, not silent surprises at fault
+/// time.
 fn supervisor_settings(args: &Args) -> anyhow::Result<SupervisorSettings> {
     let mut s = match args.get("config") {
         Some(path) => SupervisorSettings::from_raw(&RawConfig::load(Path::new(path))?),
@@ -547,6 +647,37 @@ fn supervisor_settings(args: &Args) -> anyhow::Result<SupervisorSettings> {
     s.stuck_after_ms = args.get_u64("stuck-after-ms", s.stuck_after_ms).max(1);
     s.max_restarts = args.get_u64("max-restarts", s.max_restarts as u64) as u32;
     s.backoff_ms = args.get_u64("backoff-ms", s.backoff_ms);
+    s.heal_after_ticks = args.get_u64("heal-after-ticks", s.heal_after_ticks as u64) as u32;
+    if let Some(policy) = args.get("on-budget-exhausted") {
+        s.on_budget_exhausted = policy.to_string();
+    }
+    s.validate()?;
+    Ok(s)
+}
+
+/// `[reliability]` settings: config file first (`--config PATH`), then
+/// CLI overrides (`--replay` / `--no-replay`, `--replay-max-attempts N`,
+/// `--replay-backoff-ms N`, `--replay-kernels bfs,pr`). Validated
+/// before use: replay with a zero attempt budget, an unknown kernel
+/// name, or a non-idempotent kernel in the allow-list is a typed
+/// startup error, not a silent no-op.
+fn reliability_settings(args: &Args) -> anyhow::Result<ReliabilitySettings> {
+    let mut s = match args.get("config") {
+        Some(path) => ReliabilitySettings::from_raw(&RawConfig::load(Path::new(path))?),
+        None => ReliabilitySettings::default(),
+    };
+    if args.flag("replay") {
+        s.replay = true;
+    }
+    if args.flag("no-replay") {
+        s.replay = false;
+    }
+    s.max_attempts = args.get_u64("replay-max-attempts", s.max_attempts as u64) as u32;
+    s.backoff_ms = args.get_u64("replay-backoff-ms", s.backoff_ms);
+    if let Some(list) = args.get("replay-kernels") {
+        s.replay_kernels = list.to_string();
+    }
+    s.validate()?;
     Ok(s)
 }
 

@@ -472,6 +472,63 @@ impl FaultMetrics {
     }
 }
 
+/// At-least-once replay bookkeeping: what the opt-in reliability layer
+/// did with failed responses. Every replayed request either eventually
+/// completes (`replay_successes`), runs out of attempts (`gave_up`), or
+/// is shed because its deadline passed before a retry could help
+/// (`replay_sheds`). `replays` counts *attempts* (a request retried
+/// twice counts twice), so once a drain settles the per-request books
+/// balance as `replay_successes + replay_sheds + gave_up` resolved
+/// requests with `replays >=` that sum, terminal failures equal
+/// `gave_up + replay_sheds`, and the engine's `submitted = completed +
+/// shed + failed_terminal` balance still holds exactly.
+/// With `replay = false` (the default) every counter stays zero and
+/// [`ReliabilityMetrics::is_quiet`] keeps reports free of replay noise.
+#[derive(Debug, Default)]
+pub struct ReliabilityMetrics {
+    /// Failed responses absorbed and re-submitted (attempt count, not
+    /// request count — a request retried twice counts twice).
+    pub replays: Counter,
+    /// Requests that completed successfully after at least one replay.
+    pub replay_successes: Counter,
+    /// Replay candidates shed because their deadline had already
+    /// passed when the failure came back.
+    pub replay_sheds: Counter,
+    /// Requests whose replay budget ran out; the final typed failure
+    /// was surfaced to the caller.
+    pub gave_up: Counter,
+}
+
+impl ReliabilityMetrics {
+    /// Fold another instance into this one.
+    pub fn merge_from(&self, other: &ReliabilityMetrics) {
+        self.replays.add(other.replays.get());
+        self.replay_successes.add(other.replay_successes.get());
+        self.replay_sheds.add(other.replay_sheds.get());
+        self.gave_up.add(other.gave_up.get());
+    }
+
+    /// True when no replay activity happened (replay off, or on but
+    /// never needed) — reports stay silent then.
+    pub fn is_quiet(&self) -> bool {
+        self.replays.get() == 0
+            && self.replay_successes.get() == 0
+            && self.replay_sheds.get() == 0
+            && self.gave_up.get() == 0
+    }
+
+    /// One-line report of the replay activity.
+    pub fn summary(&self) -> String {
+        format!(
+            "replays={} successes={} sheds={} gave-up={}",
+            self.replays.get(),
+            self.replay_successes.get(),
+            self.replay_sheds.get(),
+            self.gave_up.get(),
+        )
+    }
+}
+
 /// Wall-clock stopwatch recording into a [`Histogram`] on drop.
 pub struct Timer<'a> {
     hist: &'a Histogram,

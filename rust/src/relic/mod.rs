@@ -89,8 +89,8 @@ pub use framework::{
 };
 pub use parallel::{Par, Schedule, DEFAULT_GRAIN};
 pub use pool::{
-    IdleHook, PoolConfig, PoolSnapshot, RelicPool, ShardDead, ShardHealth, ShardPlacement,
-    Supervisor, SupervisorConfig, SupervisorVerdict,
+    BudgetPolicy, IdleHook, PoolConfig, PoolSnapshot, RelicPool, ShardDead, ShardHealth,
+    ShardPlacement, ShardStatus, Supervisor, SupervisorConfig, SupervisorVerdict,
 };
 pub use scope::{dyn_chunk_count, Scope, MAX_ASSIST_CHUNKS, MAX_CHUNK_SLOTS, MAX_DYN_CHUNKS};
 pub use spsc::SpscQueue;

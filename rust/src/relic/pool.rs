@@ -821,6 +821,35 @@ impl<I: Send + 'static> RelicPool<I> {
         self.shards[shard].restarts.load(Ordering::Acquire)
     }
 
+    /// Hand shard `i` one restart credit back (decrement its restart
+    /// count, floored at zero). Returns whether a credit was actually
+    /// restored — false when the shard never restarted, so budget decay
+    /// is a strict no-op on a fault-free pool. Called by the
+    /// supervisor's health-streak decay, never from hot paths.
+    pub fn restore_restart_credit(&self, shard: usize) -> bool {
+        let restarts = &self.shards[shard].restarts;
+        let mut current = restarts.load(Ordering::Acquire);
+        while current > 0 {
+            match restarts.compare_exchange_weak(
+                current,
+                current - 1,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return true,
+                Err(seen) => current = seen,
+            }
+        }
+        false
+    }
+
+    /// Zero shard `i`'s restart count — the `rebuild`
+    /// budget-exhausted policy's reset, giving the reconstructed shard
+    /// a full budget again.
+    pub fn reset_restart_count(&self, shard: usize) {
+        self.shards[shard].restarts.store(0, Ordering::Release);
+    }
+
     /// Take every queued-but-unprocessed item off shard `i` for
     /// redirection. At-most-once: the queue's mutex means an item is
     /// either stolen here or popped by the consumer, never both.
@@ -1017,6 +1046,57 @@ pub enum ShardHealth {
     Dead,
 }
 
+impl ShardHealth {
+    /// Stable lower-case name for reports and JSON artifacts.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardHealth::Healthy => "healthy",
+            ShardHealth::Stuck => "stuck",
+            ShardHealth::Dead => "dead",
+        }
+    }
+}
+
+/// What the engine should do when a dead shard has exhausted its
+/// restart budget. The default, [`BudgetPolicy::Quarantine`], is the
+/// pre-HA behavior bit-for-bit: the shard stays quarantined and the
+/// engine degrades around it forever.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BudgetPolicy {
+    /// Leave the shard quarantined; keep serving around it.
+    #[default]
+    Quarantine,
+    /// Finish flushing in-flight work (every queued request still gets
+    /// a typed verdict), then ask the process to exit nonzero so an
+    /// external orchestrator can restart it cleanly.
+    DrainAndExit,
+    /// Tear the dead shard down and reconstruct it once, with a fresh
+    /// restart budget. A second exhaustion falls back to quarantine.
+    Rebuild,
+}
+
+impl BudgetPolicy {
+    /// Parse a config/CLI name (`quarantine|drain_and_exit|rebuild`;
+    /// hyphens accepted).
+    pub fn parse(name: &str) -> Option<Self> {
+        match name {
+            "quarantine" => Some(BudgetPolicy::Quarantine),
+            "drain_and_exit" | "drain-and-exit" => Some(BudgetPolicy::DrainAndExit),
+            "rebuild" => Some(BudgetPolicy::Rebuild),
+            _ => None,
+        }
+    }
+
+    /// Stable name for reports and JSON artifacts.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BudgetPolicy::Quarantine => "quarantine",
+            BudgetPolicy::DrainAndExit => "drain_and_exit",
+            BudgetPolicy::Rebuild => "rebuild",
+        }
+    }
+}
+
 /// Watchdog and recovery policy knobs.
 #[derive(Debug, Clone)]
 pub struct SupervisorConfig {
@@ -1036,6 +1116,16 @@ pub struct SupervisorConfig {
     /// degraded throughput never oversubscribes the physical cores the
     /// shards were pinned to.
     pub degraded_max_inflight: usize,
+    /// Consecutive `Healthy` supervisor ticks after which a shard that
+    /// has restarted earns one restart credit back (and resets its
+    /// respawn backoff), so a transient bad hour doesn't permanently
+    /// exhaust `max_restarts`. `0` disables decay. A shard that never
+    /// restarted has nothing to earn back — on a fault-free pool the
+    /// decay is a strict no-op.
+    pub heal_after_ticks: u32,
+    /// What to do when a dead shard has exhausted `max_restarts`.
+    /// The default keeps the pre-HA behavior: stay quarantined.
+    pub on_budget_exhausted: BudgetPolicy,
 }
 
 impl Default for SupervisorConfig {
@@ -1046,6 +1136,8 @@ impl Default for SupervisorConfig {
             max_restarts: 3,
             backoff_base: Duration::from_millis(25),
             degraded_max_inflight: 0,
+            heal_after_ticks: 32,
+            on_budget_exhausted: BudgetPolicy::Quarantine,
         }
     }
 }
@@ -1065,6 +1157,12 @@ pub struct SupervisorVerdict<I> {
     pub trips: usize,
     /// Time spent in quarantine by each shard released this pass.
     pub released: Vec<Duration>,
+    /// Restart credits handed back by budget decay this pass.
+    pub credits_restored: usize,
+    /// Shards observed dead with an exhausted restart budget for the
+    /// first time this pass — the caller applies its
+    /// [`SupervisorConfig::on_budget_exhausted`] policy to these.
+    pub budget_exhausted: Vec<usize>,
 }
 
 /// Per-shard watchdog memory.
@@ -1074,6 +1172,29 @@ struct BeatState {
     changed_at: Instant,
     quarantined_since: Option<Instant>,
     next_restart_at: Option<Instant>,
+    /// Consecutive `Healthy` classifications (budget-decay streak).
+    healthy_ticks: u32,
+    /// Budget exhaustion already surfaced in a verdict (report once).
+    exhausted_reported: bool,
+}
+
+/// Read-only view of one shard's supervision state, for the health
+/// surface ([`Supervisor::peek`]). Unlike a [`SupervisorVerdict`] this
+/// carries no recovery actions — peeking never quarantines, steals, or
+/// respawns.
+#[derive(Debug, Clone)]
+pub struct ShardStatus {
+    /// What a watchdog pass *would* classify this shard as right now.
+    pub health: ShardHealth,
+    /// Time since the shard's heartbeat last advanced (zero when it
+    /// has advanced since the last `check`).
+    pub heartbeat_age: Duration,
+    /// How long the shard has been in its current quarantine, if any.
+    pub quarantined_for: Option<Duration>,
+    /// Restart credits consumed so far.
+    pub restarts_used: u32,
+    /// A respawn is owed but waiting out its exponential backoff.
+    pub backoff_pending: bool,
 }
 
 /// The pool's watchdog: classifies shards from heartbeats and thread
@@ -1102,6 +1223,8 @@ impl Supervisor {
                     changed_at: now,
                     quarantined_since: None,
                     next_restart_at: None,
+                    healthy_ticks: 0,
+                    exhausted_reported: false,
                 };
                 shards
             ],
@@ -1124,6 +1247,8 @@ impl Supervisor {
             restarted: 0,
             trips: 0,
             released: Vec::new(),
+            credits_restored: 0,
+            budget_exhausted: Vec::new(),
         };
         for shard in 0..pool.shard_count() {
             let beat = pool.heartbeat(shard);
@@ -1149,8 +1274,24 @@ impl Supervisor {
                         state.next_restart_at = None;
                         verdict.released.push(now.duration_since(since));
                     }
+                    // Budget decay: a sustained healthy streak earns
+                    // one restart credit back. No-op while the shard's
+                    // restart count is zero, so a fault-free pool is
+                    // bit-for-bit unaffected.
+                    state.healthy_ticks = state.healthy_ticks.saturating_add(1);
+                    if self.config.heal_after_ticks > 0
+                        && state.healthy_ticks >= self.config.heal_after_ticks
+                    {
+                        state.healthy_ticks = 0;
+                        if pool.restore_restart_credit(shard) {
+                            state.next_restart_at = None;
+                            state.exhausted_reported = false;
+                            verdict.credits_restored += 1;
+                        }
+                    }
                 }
                 ShardHealth::Stuck | ShardHealth::Dead => {
+                    state.healthy_ticks = 0;
                     if state.quarantined_since.is_none() {
                         state.quarantined_since = Some(now);
                         pool.set_quarantined(shard, true);
@@ -1161,10 +1302,15 @@ impl Supervisor {
                         let restarts = pool.restarts(shard);
                         let backoff_over =
                             state.next_restart_at.is_none_or(|t| now >= t);
-                        if restarts < self.config.max_restarts
-                            && backoff_over
-                            && pool.respawn_shard(shard)
-                        {
+                        if restarts >= self.config.max_restarts {
+                            // Out of budget: surface it exactly once so
+                            // the engine can apply its
+                            // `on_budget_exhausted` policy.
+                            if !state.exhausted_reported {
+                                state.exhausted_reported = true;
+                                verdict.budget_exhausted.push(shard);
+                            }
+                        } else if backoff_over && pool.respawn_shard(shard) {
                             verdict.restarted += 1;
                             // Exponential backoff for the *next*
                             // respawn of this shard.
@@ -1185,6 +1331,55 @@ impl Supervisor {
             }
         }
         verdict
+    }
+
+    /// Read-only classification of every shard, for the health surface:
+    /// what a watchdog pass would decide *right now*, without
+    /// quarantining, stealing, respawning, or advancing any beat
+    /// state. Safe to call between (or without) `check` passes.
+    pub fn peek<I: Send + 'static>(&self, pool: &RelicPool<I>) -> Vec<ShardStatus> {
+        let now = Instant::now();
+        (0..pool.shard_count())
+            .map(|shard| {
+                let state = &self.beats[shard];
+                let advanced = pool.heartbeat(shard) != state.last_beat;
+                let heartbeat_age = if advanced {
+                    Duration::ZERO
+                } else {
+                    now.duration_since(state.changed_at)
+                };
+                let health = if pool.shard_dead(shard) {
+                    ShardHealth::Dead
+                } else if !advanced
+                    && pool.depth(shard) > 0
+                    && heartbeat_age >= self.config.stuck_after
+                {
+                    ShardHealth::Stuck
+                } else {
+                    ShardHealth::Healthy
+                };
+                ShardStatus {
+                    health,
+                    heartbeat_age,
+                    quarantined_for: state.quarantined_since.map(|s| now.duration_since(s)),
+                    restarts_used: pool.restarts(shard),
+                    backoff_pending: state.next_restart_at.is_some_and(|t| now < t),
+                }
+            })
+            .collect()
+    }
+
+    /// Forget shard `i`'s failure history — the `rebuild` policy calls
+    /// this after reconstructing a budget-exhausted shard so the fresh
+    /// thread starts with a clean slate (no backoff, no streak, and
+    /// budget exhaustion is reportable again).
+    pub fn forgive(&mut self, shard: usize) {
+        let state = &mut self.beats[shard];
+        state.changed_at = Instant::now();
+        state.quarantined_since = None;
+        state.next_restart_at = None;
+        state.healthy_ticks = 0;
+        state.exhausted_reported = false;
     }
 }
 

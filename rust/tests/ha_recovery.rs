@@ -1,0 +1,294 @@
+//! Integration: the high-availability layer end to end. At-least-once
+//! replay must recover injected failures without breaking the no-drop
+//! invariant or the degeneracy ladder (replay off ≡ the at-most-once
+//! engine, bit for bit); the budget-exhausted policies must flush, not
+//! drop; deadline-expired failures must shed, never replay; and the
+//! health surface must agree with what the supervisor actually decided.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use relic_smt::coordinator::{
+    run_native_kernel, Deadline, Engine, EngineConfig, GraphKernel, ReliabilityConfig, Request,
+    RequestResult,
+};
+use relic_smt::graph::kronecker::paper_graph;
+use relic_smt::relic::{BudgetPolicy, FaultKind, FaultPlan, PoolConfig, SupervisorConfig};
+
+/// Unpinned supervised engine (CI containers may refuse affinity
+/// syscalls) with an optional fault plan, a test-scale watchdog, and
+/// replay on or off.
+fn ha_engine(
+    shards: usize,
+    fault: Option<Arc<FaultPlan>>,
+    stuck_after_ms: u64,
+    replay: bool,
+) -> Engine {
+    Engine::new(EngineConfig {
+        pool: PoolConfig {
+            shards: Some(shards),
+            pin: false,
+            fault,
+            ..PoolConfig::default()
+        },
+        supervisor: SupervisorConfig {
+            stuck_after: Duration::from_millis(stuck_after_ms),
+            ..SupervisorConfig::default()
+        },
+        reliability: ReliabilityConfig { replay, ..ReliabilityConfig::default() },
+        ..EngineConfig::default()
+    })
+}
+
+/// Mixed stream cycling every kernel over several sources.
+fn mixed_batch(n: usize) -> Vec<Request> {
+    let kernels = GraphKernel::all();
+    (0..n)
+        .map(|i| Request {
+            id: i as u64,
+            kernel: kernels[i % kernels.len()],
+            graph: paper_graph(),
+            source: (i % 8) as u32,
+            deadline: Deadline::none(),
+        })
+        .collect()
+}
+
+/// Serial checksums for [`mixed_batch`], indexed by request id.
+fn expected_checksums(n: usize) -> Vec<u64> {
+    let g = paper_graph();
+    mixed_batch(n).iter().map(|r| run_native_kernel(r.kernel, &g, r.source)).collect()
+}
+
+#[test]
+fn replay_recovers_injected_failures_and_reconciles_books() {
+    // One caught panic and one dropped response, both one-shot. With
+    // replay on, both requests must come back as verified successes —
+    // the consumed injections cannot re-fire on the retry — and the
+    // books must balance: every failure resolved by exactly one
+    // recorded replay success, nothing shed, nothing given up.
+    let n = 24usize;
+    let fault = Arc::new(FaultPlan::new().with_panic_on("tc", 1).with_drop_response(0, 1));
+    let mut e = ha_engine(2, Some(fault), 200, true);
+    let want = expected_checksums(n);
+    for r in mixed_batch(n) {
+        assert!(e.submit(r).is_accepted());
+    }
+    let responses = e.drain();
+    assert_eq!(responses.len(), n, "one response per submitted request, replay included");
+    for (i, r) in responses.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "acceptance order survives replay");
+        assert_eq!(
+            r.result,
+            RequestResult::Native(want[i]),
+            "request {i} recovered with the serial checksum"
+        );
+    }
+    let agg = e.aggregated_metrics();
+    assert_eq!(agg.fault.panics_caught.get(), 1, "the panic was injected and caught");
+    assert_eq!(agg.fault.responses_lost.get(), 1, "the drop was injected and synthesized");
+    assert_eq!(
+        agg.reliability.replay_successes.get(),
+        2,
+        "each injected failure was recovered by replay"
+    );
+    assert!(agg.reliability.replays.get() >= 2, "at least one attempt per failure");
+    assert_eq!(agg.reliability.replay_sheds.get(), 0);
+    assert_eq!(agg.reliability.gave_up.get(), 0);
+    // At-least-once means the dropped response's work ran twice; the
+    // completion count reflects the re-execution, never fewer than one
+    // completion per request.
+    assert!(agg.native_requests.get() >= n as u64);
+    assert!(e.report().contains("reliability:"), "active counters surface in the report");
+}
+
+#[test]
+fn replay_off_is_bitwise_identical_to_the_at_most_once_engine() {
+    // The degeneracy ladder, both rungs. Under a fault with replay off,
+    // the typed failure surfaces exactly as the pre-replay engine
+    // surfaced it and the reliability counters stay silent. With no
+    // fault, replay on and replay off produce identical
+    // (id, backend, result) streams — retention is invisible until
+    // something actually fails.
+    let n = 24usize;
+    let fault = Arc::new(FaultPlan::new().with_panic_on("tc", 1));
+    let mut off = ha_engine(2, Some(fault), 200, false);
+    let want = expected_checksums(n);
+    let responses = off.process_batch(mixed_batch(n));
+    assert_eq!(responses.len(), n);
+    let mut failed = 0u64;
+    for (i, r) in responses.iter().enumerate() {
+        match r.result {
+            RequestResult::Failed(kind) => {
+                assert_eq!(kind, FaultKind::Panic);
+                failed += 1;
+            }
+            _ => assert_eq!(r.result, RequestResult::Native(want[i])),
+        }
+    }
+    assert_eq!(failed, 1, "replay off surfaces the typed failure untouched");
+    let agg = off.aggregated_metrics();
+    assert!(agg.reliability.is_quiet(), "replay off never touches the replay books");
+    assert!(!off.report().contains("reliability:"), "quiet counters stay out of reports");
+
+    let mut healthy_on = ha_engine(1, None, 200, true);
+    let mut healthy_off = ha_engine(1, None, 200, false);
+    let a = healthy_on.process_batch(mixed_batch(n));
+    let b = healthy_off.process_batch(mixed_batch(n));
+    assert_eq!(a.len(), n);
+    assert_eq!(b.len(), n);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.backend, y.backend);
+        assert_eq!(x.result, y.result, "replay on a healthy run is invisible");
+    }
+    assert!(healthy_on.aggregated_metrics().reliability.is_quiet());
+}
+
+#[test]
+fn drain_and_exit_flushes_queued_work_with_typed_verdicts() {
+    // Shard 0 dies with a zero restart budget and the policy set to
+    // drain_and_exit. The engine must finish the drain — every queued
+    // request resolved with a typed verdict, nothing dropped on the
+    // floor — and only then raise the exit request for the CLI to map
+    // to a nonzero exit.
+    let n = 16usize;
+    let fault = Arc::new(FaultPlan::new().with_kill(0, 1));
+    let mut e = Engine::new(EngineConfig {
+        pool: PoolConfig {
+            shards: Some(2),
+            pin: false,
+            fault: Some(fault),
+            ..PoolConfig::default()
+        },
+        supervisor: SupervisorConfig {
+            stuck_after: Duration::from_millis(40),
+            max_restarts: 0,
+            on_budget_exhausted: BudgetPolicy::DrainAndExit,
+            ..SupervisorConfig::default()
+        },
+        ..EngineConfig::default()
+    });
+    let want = expected_checksums(n);
+    for r in mixed_batch(n) {
+        assert!(e.submit(r).is_accepted());
+    }
+    let responses = e.drain();
+    assert_eq!(responses.len(), n, "drain_and_exit flushes, it does not drop");
+    for (i, r) in responses.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "flush preserves acceptance order");
+        match r.result {
+            RequestResult::Failed(_) => {} // a typed verdict is a flush, not a loss
+            _ => assert_eq!(r.result, RequestResult::Native(want[i]), "request {i} checksum"),
+        }
+    }
+    assert!(e.exit_requested(), "budget exhaustion under drain_and_exit requests exit");
+    let report = e.health();
+    assert!(!report.live, "an exit-requested engine is not live");
+    assert!(!report.ready, "and must not receive new traffic");
+    assert!(report.exit_requested);
+    assert_eq!(report.on_budget_exhausted, "drain_and_exit");
+}
+
+#[test]
+fn expired_deadline_failures_are_shed_not_replayed() {
+    // A request whose deadline has already passed cannot be saved by a
+    // retry. With replay on and a panic injected into a stream whose
+    // deadlines are all expired at submission (shed policy `never`
+    // still admits them), the failed request must surface typed and be
+    // counted as a replay shed — zero replay attempts launched.
+    let n = 12usize;
+    let fault = Arc::new(FaultPlan::new().with_panic_on("tc", 1));
+    let mut e = ha_engine(2, Some(fault), 200, true);
+    let want = expected_checksums(n);
+    let kernels = GraphKernel::all();
+    for i in 0..n {
+        let verdict = e.submit(Request {
+            id: i as u64,
+            kernel: kernels[i % kernels.len()],
+            graph: paper_graph(),
+            source: (i % 8) as u32,
+            deadline: Deadline::within(Duration::ZERO),
+        });
+        assert!(verdict.is_accepted(), "shed policy `never` admits expired deadlines");
+    }
+    let responses = e.drain();
+    assert_eq!(responses.len(), n);
+    let mut failed = 0u64;
+    for (i, r) in responses.iter().enumerate() {
+        match r.result {
+            RequestResult::Failed(kind) => {
+                assert_eq!(kind, FaultKind::Panic);
+                failed += 1;
+            }
+            _ => assert_eq!(r.result, RequestResult::Native(want[i])),
+        }
+    }
+    assert_eq!(failed, 1, "the expired request surfaces its typed failure");
+    let agg = e.aggregated_metrics();
+    assert_eq!(agg.reliability.replay_sheds.get(), 1, "counted as a deadline shed");
+    assert_eq!(agg.reliability.replays.get(), 0, "retrying cannot un-miss a deadline");
+    assert_eq!(agg.reliability.replay_successes.get(), 0);
+    assert_eq!(agg.reliability.gave_up.get(), 0);
+}
+
+#[test]
+fn health_report_agrees_with_supervisor_verdicts() {
+    // Kill shard 0 with a zero restart budget under the default
+    // quarantine policy: the health surface must tell the same story
+    // the supervisor's verdicts told — one dead, quarantined shard with
+    // no credits left, one healthy shard still serving, engine live and
+    // ready, counters equal to the aggregated fault metrics.
+    let n = 16usize;
+    let fault = Arc::new(FaultPlan::new().with_kill(0, 1));
+    let mut e = Engine::new(EngineConfig {
+        pool: PoolConfig {
+            shards: Some(2),
+            pin: false,
+            fault: Some(fault),
+            ..PoolConfig::default()
+        },
+        supervisor: SupervisorConfig {
+            stuck_after: Duration::from_millis(40),
+            max_restarts: 0,
+            ..SupervisorConfig::default()
+        },
+        ..EngineConfig::default()
+    });
+    let responses = e.process_batch(mixed_batch(n));
+    assert_eq!(responses.len(), n, "a dead shard with no budget still loses nothing");
+    let report = e.health();
+    assert!(report.live, "a quarantined shard does not kill the engine");
+    assert!(report.ready, "the surviving shard keeps it ready");
+    assert!(report.supervised);
+    assert!(!report.exit_requested);
+    assert_eq!(report.on_budget_exhausted, "quarantine");
+    assert_eq!(report.max_restarts, 0);
+    assert_eq!(report.shards.len(), 2);
+    assert_eq!(
+        report.quarantined,
+        e.quarantined_count(),
+        "the report's quarantine count is the engine's"
+    );
+    let dead = &report.shards[0];
+    assert_eq!(dead.health, "dead", "shard 0's verdict is visible in its row");
+    assert!(dead.quarantined, "and routing skips it");
+    assert!(dead.quarantined_for_ms.is_some(), "with a measured quarantine age");
+    assert_eq!(dead.restarts_remaining, 0, "no credits with a zero budget");
+    let alive = &report.shards[1];
+    assert!(!alive.quarantined, "the survivor serves unquarantined");
+    let agg = e.aggregated_metrics();
+    assert_eq!(report.watchdog_trips, agg.fault.watchdog_trips.get());
+    assert_eq!(report.panics_caught, agg.fault.panics_caught.get());
+    assert_eq!(report.shard_restarts, agg.fault.shard_restarts.get());
+    assert_eq!(report.responses_lost, agg.fault.responses_lost.get());
+    assert!(report.watchdog_trips >= 1, "the death was detected");
+    assert_eq!(report.shard_restarts, 0, "a zero budget never respawns");
+    // The serialized form carries the same verdicts for an external
+    // orchestrator (compact JSON, stable key order).
+    let json = report.to_json();
+    assert!(json.contains("\"live\":true"));
+    assert!(json.contains("\"ready\":true"));
+    assert!(json.contains("\"health\":\"dead\""));
+    assert!(json.contains("\"on_budget_exhausted\":\"quarantine\""));
+}
