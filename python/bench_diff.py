@@ -18,6 +18,7 @@ arrays that changed order still diff correctly:
     cross_shard.json    keyed by (kernel,          speedup_vs_pair,
                                   max_borrow)      speedup_vs_serial
     chaos.json          keyed by (seed, round)     recovered_ratio
+    plan.json           keyed by (config)          speedup_vs_baseline
 
 Every metric is higher-is-better. A metric that drops by more than
 --threshold percent (default 10) counts as a regression; the script
@@ -49,6 +50,10 @@ SPECS = {
     # pin it at 1.0 with replay on, so any drop is a hard signal, not
     # runner noise.
     "chaos.json": (("seed", "round"), ("recovered_ratio",)),
+    # One row per plan source (baseline / forced statics / tuner); the
+    # baseline row's speedup is pinned at 1.0 by construction, so only
+    # the other rows trend.
+    "plan.json": (("config",), ("speedup_vs_baseline",)),
 }
 
 

@@ -1415,6 +1415,207 @@ pub fn whale_rows_to_json(rows: &[WhaleRow]) -> String {
     crate::json::to_string(&Value::Array(arr))
 }
 
+/// One plan-ablation measurement: a mixed-kernel workload served under
+/// one plan source (see `EXPERIMENTS.md` §Plan-ablation protocol).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanRow {
+    /// Plan source: `baseline` (no plan machinery), a forced plan spec,
+    /// or `tuner`.
+    pub config: String,
+    /// Requests per round.
+    pub requests: usize,
+    /// Mean wall time per timed round (ms).
+    pub mean_batch_ms: f64,
+    /// Mean per-request completion latency (µs) across timed rounds.
+    pub mean_req_us: f64,
+    /// Mean batch time vs the `baseline` row.
+    pub speedup_vs_baseline: f64,
+    /// Whether every response matched the serial checksum. Asserted
+    /// inside the sweep, so a false value never reaches the output —
+    /// the field keeps the gate visible in the archived JSON.
+    pub checksum_ok: bool,
+    /// The tuner's resolved per-(kernel, shape) assignment after the
+    /// run (`tuner` row only; empty for static rows). Non-uniform
+    /// entries here are the ablation's headline observation.
+    pub resolved: String,
+}
+
+/// The plan-ablation sweep: one engine per plan source — the pre-plan
+/// baseline, each forced static plan, and the online tuner — all
+/// serving identical mixed-kernel rounds on the same graph. The tuner
+/// engine first runs untimed warm rounds so epsilon-greedy's forced
+/// exploration sweeps the lattice before measurement. Every response is
+/// asserted bitwise equal to the serial checksum: plans and tuning
+/// change *assignment*, never results.
+pub fn plan_sweep(
+    template: &crate::coordinator::EngineConfig,
+    shards: usize,
+    scale: u32,
+    reps: u64,
+) -> Vec<PlanRow> {
+    use crate::coordinator::{
+        run_native_kernel, Deadline, Engine, GraphKernel, Request, RequestResult, TunerConfig,
+    };
+    use crate::graph::kronecker::{kronecker_graph, KroneckerParams, PAPER_SEED};
+    use crate::relic::{ExecutionPlan, Schedule};
+
+    let graph = kronecker_graph(&KroneckerParams::gap(scale, 16, PAPER_SEED));
+    let reps = reps.max(1);
+    let expected: Vec<(GraphKernel, u64)> = GraphKernel::all()
+        .into_iter()
+        .map(|k| (k, run_native_kernel(k, &graph, 0)))
+        .collect();
+    // Two requests per kernel per round: every round has pairing
+    // partners available for serial-planned arms.
+    let per_round = 2 * expected.len();
+    let tuner_cfg = template.tuner.unwrap_or_default();
+    // Enough untimed rounds (one settle tick each) for forced
+    // exploration to give every arm its quota before measurement.
+    let warm_rounds =
+        (ExecutionPlan::lattice().len() as u64 * tuner_cfg.min_samples.max(1) + 10) as usize;
+
+    let configs: Vec<(String, Option<ExecutionPlan>, Option<TunerConfig>)> = vec![
+        ("baseline".into(), None, None),
+        ("serial".into(), Some(ExecutionPlan::serial()), None),
+        ("pair:static".into(), Some(ExecutionPlan::pair(Schedule::Static)), None),
+        ("pair:dynamic".into(), Some(ExecutionPlan::pair(Schedule::Dynamic)), None),
+        (
+            "pair:edge-balanced".into(),
+            Some(ExecutionPlan::pair(Schedule::EdgeBalanced)),
+            None,
+        ),
+        ("tuner".into(), None, Some(tuner_cfg)),
+    ];
+
+    let mut rows: Vec<PlanRow> = Vec::new();
+    let mut baseline_ms = 0.0f64;
+    for (name, plan, tuner) in configs {
+        let mut config = template.clone();
+        config.pool.shards = Some(shards.max(1));
+        config.plan = plan;
+        config.tuner = tuner;
+        let mut engine = Engine::new(config);
+        let make_round = |round: u64| -> Vec<Request> {
+            (0..per_round)
+                .map(|i| Request {
+                    id: round * per_round as u64 + i as u64,
+                    kernel: expected[i % expected.len()].0,
+                    graph: graph.clone(),
+                    source: 0,
+                    deadline: Deadline::none(),
+                })
+                .collect()
+        };
+        let check = |responses: &[crate::coordinator::Response]| {
+            assert_eq!(responses.len(), per_round, "{name}: lost responses");
+            for (i, r) in responses.iter().enumerate() {
+                let (kernel, want) = expected[i % expected.len()];
+                assert_eq!(
+                    r.result,
+                    RequestResult::Native(want),
+                    "{name}: {kernel:?} checksum diverged from serial"
+                );
+            }
+        };
+        // Warm rounds: shard spawn + first-touch for everyone; lattice
+        // exploration for the tuner. Checksums are gated here too —
+        // exploration must never be visible in results.
+        let warm = if tuner.is_some() { warm_rounds } else { 1 };
+        for round in 0..warm {
+            check(&engine.process_batch(make_round(round as u64)));
+        }
+        let mut batch_total = 0u128;
+        let mut latency_total = 0u128;
+        for rep in 0..reps {
+            let t0 = std::time::Instant::now();
+            let responses = engine.process_batch(make_round(warm as u64 + rep));
+            batch_total += t0.elapsed().as_nanos();
+            check(&responses);
+            latency_total += responses.iter().map(|r| r.latency_ns as u128).sum::<u128>();
+        }
+        let mean_batch_ms = batch_total as f64 / reps as f64 / 1e6;
+        let mean_req_us =
+            latency_total as f64 / (reps as u128 * per_round as u128) as f64 / 1e3;
+        if name == "baseline" {
+            baseline_ms = mean_batch_ms;
+        }
+        let resolved = engine
+            .tuner()
+            .map(|t| {
+                t.resolved()
+                    .iter()
+                    .map(|r| {
+                        format!(
+                            "{}[{}]={}",
+                            r.kernel.artifact_name(),
+                            crate::coordinator::tuner::shape_name(r.shape),
+                            r.plan
+                        )
+                    })
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            })
+            .unwrap_or_default();
+        rows.push(PlanRow {
+            config: name,
+            requests: per_round,
+            mean_batch_ms,
+            mean_req_us,
+            speedup_vs_baseline: if mean_batch_ms > 0.0 {
+                baseline_ms / mean_batch_ms
+            } else {
+                0.0
+            },
+            checksum_ok: true,
+            resolved,
+        });
+    }
+    rows
+}
+
+/// Render the plan-ablation table.
+pub fn render_plan(rows: &[PlanRow]) -> String {
+    let mut out = format!(
+        "{:<20}{:>10}{:>12}{:>12}{:>13}\n",
+        "plan source", "requests", "batch ms", "req µs", "vs baseline"
+    );
+    for r in rows {
+        out += &format!(
+            "{:<20}{:>10}{:>12.3}{:>12.1}{:>12.3}x\n",
+            r.config, r.requests, r.mean_batch_ms, r.mean_req_us, r.speedup_vs_baseline
+        );
+    }
+    for r in rows.iter().filter(|r| !r.resolved.is_empty()) {
+        out += &format!("resolved ({}): {}\n", r.config, r.resolved);
+    }
+    out += "(baseline = pre-plan pairing path; every response asserted bitwise \
+            equal to the serial checksum under every plan source)\n";
+    out
+}
+
+/// Serialize plan-ablation rows to JSON for the nightly trend diff.
+pub fn plan_rows_to_json(rows: &[PlanRow]) -> String {
+    use crate::json::Value;
+    let arr = rows
+        .iter()
+        .map(|r| {
+            Value::Object(vec![
+                ("config".into(), Value::String(r.config.clone())),
+                ("requests".into(), Value::Number(r.requests as f64)),
+                ("mean_batch_ms".into(), Value::Number(r.mean_batch_ms)),
+                ("mean_req_us".into(), Value::Number(r.mean_req_us)),
+                (
+                    "speedup_vs_baseline".into(),
+                    Value::Number(r.speedup_vs_baseline),
+                ),
+                ("checksum_ok".into(), Value::Bool(r.checksum_ok)),
+                ("resolved".into(), Value::String(r.resolved.clone())),
+            ])
+        })
+        .collect();
+    crate::json::to_string(&Value::Array(arr))
+}
+
 /// Render the intra-kernel comparison table.
 pub fn render_intra(rows: &[IntraRow]) -> String {
     let mut out = format!(
@@ -1817,5 +2018,38 @@ mod tests {
         let json = whale_rows_to_json(&rows);
         assert!(json.contains("\"speedup_vs_pair\""));
         assert!(json.contains("\"checksum_ok\""));
+    }
+
+    #[test]
+    fn plan_sweep_small_graph_covers_every_source_and_resolves_the_tuner() {
+        // Unpinned, tiny scale, one rep: the correctness shape of the
+        // sweep (baseline + four forced plans + tuner, all checksums
+        // asserted inside), not a performance claim.
+        let template = crate::coordinator::EngineConfig {
+            pool: crate::relic::PoolConfig { pin: false, ..Default::default() },
+            ..Default::default()
+        };
+        let rows = plan_sweep(&template, 2, 6, 1);
+        let names: Vec<&str> = rows.iter().map(|r| r.config.as_str()).collect();
+        assert_eq!(
+            names,
+            ["baseline", "serial", "pair:static", "pair:dynamic", "pair:edge-balanced", "tuner"]
+        );
+        assert!(rows.iter().all(|r| r.checksum_ok && r.mean_batch_ms > 0.0));
+        // Only the tuner row resolves per-(kernel, shape) assignments,
+        // and after the warm rounds every kernel has one.
+        assert!(rows.iter().filter(|r| r.config != "tuner").all(|r| r.resolved.is_empty()));
+        let tuner_row = rows.last().expect("tuner row");
+        for k in crate::coordinator::GraphKernel::all() {
+            assert!(
+                tuner_row.resolved.contains(k.artifact_name()),
+                "tuner resolved nothing for {k:?}: {}",
+                tuner_row.resolved
+            );
+        }
+        let s = render_plan(&rows);
+        assert!(s.contains("vs baseline") && s.contains("resolved (tuner):"));
+        let json = plan_rows_to_json(&rows);
+        assert!(json.contains("\"speedup_vs_baseline\"") && json.contains("\"resolved\""));
     }
 }

@@ -622,6 +622,158 @@ impl ReliabilitySettings {
     }
 }
 
+/// Forced execution-plan configuration (section `[plan]`; default: no
+/// forced plan, so nothing plan-related exists at runtime). A forced
+/// plan pins every native request to one
+/// [`ExecutionPlan`](crate::relic::ExecutionPlan) — the ablation /
+/// debugging counterpart of the online tuner, and mutually exclusive
+/// with it (see [`check_plan_conflict`]).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct PlanSettings {
+    /// Plan spec in [`ExecutionPlan::parse`](crate::relic::ExecutionPlan::parse)
+    /// syntax (`serial`, `pair:dynamic`, `pair:edge-balanced:32`, …).
+    /// Empty (the default) forces nothing.
+    pub force: String,
+}
+
+impl PlanSettings {
+    /// Overlay values from a raw config (section `[plan]`).
+    pub fn from_raw(raw: &RawConfig) -> Self {
+        PlanSettings {
+            force: raw.get_str("plan.force").unwrap_or("").to_string(),
+        }
+    }
+
+    /// Reject a spec [`ExecutionPlan::parse`](crate::relic::ExecutionPlan::parse)
+    /// does not accept — a silently dropped plan would run an ablation
+    /// under the wrong configuration.
+    pub fn validate(&self) -> Result<(), ValidationError> {
+        if !self.force.is_empty() && crate::relic::ExecutionPlan::parse(&self.force).is_none() {
+            return Err(ValidationError {
+                key: "plan.force".into(),
+                reason: format!(
+                    "unrecognized plan spec {:?}; expected serial | \
+                     pair:<static|dynamic|edge-balanced>[:<grain>[:<borrow>]]",
+                    self.force
+                ),
+            });
+        }
+        Ok(())
+    }
+
+    /// The forced plan, or `None` when the spec is empty. Call
+    /// [`validate`](Self::validate) first; a malformed spec is `None`
+    /// here, not diagnosed.
+    pub fn to_plan(&self) -> Option<crate::relic::ExecutionPlan> {
+        crate::relic::ExecutionPlan::parse(&self.force)
+    }
+}
+
+/// Online plan-tuner configuration (section `[tuner]`; defaults mirror
+/// [`crate::coordinator::TunerConfig`] with the master switch *off*, so
+/// the engine stays bit-for-bit the pre-plan engine).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunerSettings {
+    /// Master switch for building (and feeding) the online tuner.
+    pub enabled: bool,
+    /// Exploration probability per settle tick, in `[0, 1]`.
+    pub epsilon: f64,
+    /// Seed of the tuner's deterministic exploration sequence.
+    pub seed: u64,
+    /// Samples every arm must collect before greedy selection starts.
+    pub min_samples: u64,
+    /// Seed arm priors from the probe/smtsim offline oracle at engine
+    /// construction (the calibration pass).
+    pub calibrate: bool,
+}
+
+impl Default for TunerSettings {
+    fn default() -> Self {
+        let d = crate::coordinator::TunerConfig::default();
+        TunerSettings {
+            enabled: false,
+            epsilon: d.epsilon,
+            seed: d.seed,
+            min_samples: d.min_samples,
+            calibrate: d.calibrate,
+        }
+    }
+}
+
+impl TunerSettings {
+    /// Overlay values from a raw config (section `[tuner]`).
+    pub fn from_raw(raw: &RawConfig) -> Self {
+        let d = Self::default();
+        TunerSettings {
+            enabled: raw.get_bool("tuner.enabled").unwrap_or(d.enabled),
+            epsilon: raw.get_float("tuner.epsilon").unwrap_or(d.epsilon),
+            seed: raw.get_int("tuner.seed").map(|v| v.max(0) as u64).unwrap_or(d.seed),
+            min_samples: raw
+                .get_int("tuner.min_samples")
+                .map(|v| v.max(0) as u64)
+                .unwrap_or(d.min_samples),
+            calibrate: raw.get_bool("tuner.calibrate").unwrap_or(d.calibrate),
+        }
+    }
+
+    /// Reject a tuner setup that cannot select plans soundly: an
+    /// out-of-range exploration probability, or a zero sample quota
+    /// (greedy selection over arms that were never required to collect
+    /// a sample compares empty means).
+    pub fn validate(&self) -> Result<(), ValidationError> {
+        if !self.epsilon.is_finite() || !(0.0..=1.0).contains(&self.epsilon) {
+            return Err(ValidationError {
+                key: "tuner.epsilon".into(),
+                reason: format!(
+                    "exploration probability must be in [0, 1], got {}",
+                    self.epsilon
+                ),
+            });
+        }
+        if self.enabled && self.min_samples == 0 {
+            return Err(ValidationError {
+                key: "tuner.min_samples".into(),
+                reason: "every arm needs at least one forced sample before greedy \
+                         selection; set min_samples >= 1 or enabled = false"
+                    .into(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Materialize as the engine's runtime tuner config, or `None` with
+    /// the master switch off. Call [`validate`](Self::validate) first.
+    pub fn to_config(&self) -> Option<crate::coordinator::TunerConfig> {
+        self.enabled.then(|| crate::coordinator::TunerConfig {
+            epsilon: self.epsilon,
+            seed: self.seed,
+            min_samples: self.min_samples,
+            calibrate: self.calibrate,
+        })
+    }
+}
+
+/// A forced plan and an enabled tuner are mutually exclusive: the
+/// forced plan wins on every request, so the tuner would measure arms
+/// it never chose. Rejected rather than silently resolved — an
+/// operator asking for both is confused about which one is driving.
+pub fn check_plan_conflict(
+    tuner: &TunerSettings,
+    plan: &PlanSettings,
+) -> Result<(), ValidationError> {
+    if tuner.enabled && !plan.force.is_empty() {
+        return Err(ValidationError {
+            key: "tuner.enabled".into(),
+            reason: format!(
+                "a forced plan ({:?}) pins every request; the tuner would never \
+                 act — drop plan.force / --plan or set enabled = false",
+                plan.force
+            ),
+        });
+    }
+    Ok(())
+}
+
 /// Deterministic fault-injection configuration (section `[fault]`;
 /// everything defaults to *off* and [`FaultSettings::plan`] returns
 /// `None` then, so the compiled-in hooks cost one `Option` branch).
@@ -1084,5 +1236,66 @@ mod tests {
         let raw = RawConfig::parse("x = 3\n").unwrap();
         assert_eq!(raw.get_float("x"), Some(3.0));
         assert_eq!(raw.get_str("x"), None);
+    }
+
+    #[test]
+    fn plan_settings_parse_validate_and_materialize() {
+        use crate::relic::{ExecutionPlan, Schedule};
+        // Defaults: force nothing, validate clean.
+        let d = PlanSettings::default();
+        assert!(d.validate().is_ok());
+        assert_eq!(d.to_plan(), None);
+        // A real spec round-trips into the plan it names.
+        let raw = RawConfig::parse("[plan]\nforce = \"pair:edge-balanced:32\"\n").unwrap();
+        let s = PlanSettings::from_raw(&raw);
+        assert!(s.validate().is_ok());
+        assert_eq!(
+            s.to_plan(),
+            Some(ExecutionPlan::pair(Schedule::EdgeBalanced).with_grain(32))
+        );
+        // Junk is rejected with the section.key convention.
+        let bad = PlanSettings { force: "pair:sideways".into() };
+        let err = bad.validate().unwrap_err();
+        assert_eq!(err.key, "plan.force");
+        assert!(err.to_string().starts_with("invalid config: plan.force:"));
+        assert_eq!(bad.to_plan(), None);
+    }
+
+    #[test]
+    fn tuner_settings_parse_validate_and_materialize() {
+        // Off by default: no runtime config is built at all.
+        let d = TunerSettings::default();
+        assert!(!d.enabled);
+        assert!(d.validate().is_ok());
+        assert_eq!(d.to_config(), None);
+        // Enabled with overrides materializes them.
+        let raw = RawConfig::parse(
+            "[tuner]\nenabled = true\nepsilon = 0.25\nseed = 7\nmin_samples = 3\n\
+             calibrate = true\n",
+        )
+        .unwrap();
+        let s = TunerSettings::from_raw(&raw);
+        assert!(s.validate().is_ok());
+        let tc = s.to_config().expect("enabled builds a config");
+        assert_eq!(tc.epsilon, 0.25);
+        assert_eq!(tc.seed, 7);
+        assert_eq!(tc.min_samples, 3);
+        assert!(tc.calibrate);
+        // Out-of-range epsilon and a zero sample quota are typed errors.
+        let bad = TunerSettings { epsilon: 1.5, ..TunerSettings::default() };
+        assert_eq!(bad.validate().unwrap_err().key, "tuner.epsilon");
+        let bad = TunerSettings { enabled: true, min_samples: 0, ..TunerSettings::default() };
+        assert_eq!(bad.validate().unwrap_err().key, "tuner.min_samples");
+    }
+
+    #[test]
+    fn forced_plan_and_enabled_tuner_conflict() {
+        let tuner = TunerSettings { enabled: true, ..TunerSettings::default() };
+        let plan = PlanSettings { force: "serial".into() };
+        let err = check_plan_conflict(&tuner, &plan).unwrap_err();
+        assert_eq!(err.key, "tuner.enabled");
+        // Either alone is fine.
+        assert!(check_plan_conflict(&tuner, &PlanSettings::default()).is_ok());
+        assert!(check_plan_conflict(&TunerSettings::default(), &plan).is_ok());
     }
 }

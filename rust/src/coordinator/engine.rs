@@ -98,7 +98,7 @@ use crate::relic::pool::{
     discover_placements, BudgetPolicy, IdleHook, PoolConfig, PoolSnapshot, RelicPool, ShardHealth,
     Supervisor, SupervisorConfig,
 };
-use crate::relic::{CrossCtx, FaultKind, LeaseBroker, LeaseStats, RelicConfig};
+use crate::relic::{CrossCtx, ExecutionPlan, FaultKind, LeaseBroker, LeaseStats, RelicConfig};
 
 use super::admission::{shed_decision, Admission, AdmissionConfig, ShedReason};
 use super::reliability::{
@@ -106,6 +106,7 @@ use super::reliability::{
 };
 use super::router::{pick_shard_leased, Router, RouterConfig};
 use super::service::{Coordinator, Request, RequestResult, Response, ServiceMetrics};
+use super::tuner::{shape_name, Tuner, TunerConfig};
 use super::{run_native_kernel, Backend};
 
 /// Engine configuration: pool sizing/placement, routing, admission
@@ -132,6 +133,13 @@ pub struct EngineConfig {
     /// default) retains no requests and replays nothing — bit-for-bit
     /// the at-most-once engine.
     pub reliability: ReliabilityConfig,
+    /// Online plan tuning (`[tuner]`). `None` (the default) installs no
+    /// tuner anywhere — bit-for-bit the pre-plan engine.
+    pub tuner: Option<TunerConfig>,
+    /// Force one [`ExecutionPlan`] on every native request (`--plan`).
+    /// `None` (the default) forces nothing; a forced plan wins over the
+    /// tuner.
+    pub plan: Option<ExecutionPlan>,
 }
 
 impl EngineConfig {
@@ -171,6 +179,9 @@ impl EngineConfig {
             max_borrow: 0,
             offer_depth: pool.offer_depth,
             reliability: ReliabilityConfig::default(),
+            // `[tuner]` / `--plan` are likewise CLI overlays.
+            tuner: None,
+            plan: None,
         }
     }
 }
@@ -271,6 +282,11 @@ pub struct Engine {
     reliability: ReliabilityConfig,
     /// Retained requests for possible replay (empty with replay off).
     replay_book: ReplayBook,
+    /// The shared online plan tuner (`None` = tuning off). Ticked once
+    /// per settled drain; read/fed by every shard's coordinator.
+    tuner: Option<Arc<Tuner>>,
+    /// The forced plan, kept for the report line.
+    forced_plan: Option<ExecutionPlan>,
     /// The `rebuild` budget-exhausted policy fires at most once.
     rebuilt: bool,
     /// A `drain_and_exit` verdict fired: finish flushing, then the
@@ -304,6 +320,16 @@ impl Engine {
         // (an unbound shard is never offered, so the window is safe).
         let broker =
             (config.max_borrow > 0).then(|| Arc::new(LeaseBroker::new(placements.len())));
+        // The tuner is built (and optionally smtsim-calibrated) before
+        // the pool so the factory can hand every shard a handle — one
+        // tuner per engine, arm statistics aggregate across shards.
+        let tuner = config.tuner.map(|tc| {
+            let t = Arc::new(Tuner::new(tc));
+            if tc.calibrate {
+                t.calibrate();
+            }
+            t
+        });
         let (tx, rx): (Sender<(u64, Response)>, _) = channel();
         let factory = {
             let shard_metrics = shard_metrics.clone();
@@ -313,6 +339,8 @@ impl Engine {
             let broker = broker.clone();
             let max_borrow = config.max_borrow;
             let offer_depth = config.offer_depth;
+            let tuner = tuner.clone();
+            let forced_plan = config.plan;
             move |p: &crate::relic::ShardPlacement| {
                 let mut coord = Coordinator::with_config(
                     Router::new(router_cfg.clone(), None),
@@ -328,6 +356,8 @@ impl Engine {
                     max_borrow,
                     offer_depth,
                 }));
+                coord.set_tuner(tuner.clone());
+                coord.set_plan(forced_plan);
                 ShardState { coord, shard: p.shard }
             }
         };
@@ -410,9 +440,18 @@ impl Engine {
             degraded_permits: degraded_permits.max(1),
             reliability: config.reliability,
             replay_book: ReplayBook::default(),
+            tuner,
+            forced_plan: config.plan,
             rebuilt: false,
             exit_requested: false,
         }
+    }
+
+    /// The engine's online tuner, when `[tuner] enabled = true` built
+    /// one (`None` otherwise). Exposes the resolved per-(kernel, shape)
+    /// plan table to sweeps and demos.
+    pub fn tuner(&self) -> Option<&Arc<Tuner>> {
+        self.tuner.as_ref()
     }
 
     /// Number of shards serving requests.
@@ -1115,6 +1154,14 @@ impl Engine {
         // retained here was answered terminally (gave-up / shed / never
         // failed), so retention must not leak across drains.
         self.replay_book.clear();
+        // Settle point: every completion of this drain has been
+        // recorded, so re-select arms now — the next batch runs under
+        // plans informed by everything measured so far. Shard threads
+        // are idle between drains, so no request observes a mid-batch
+        // arm switch.
+        if let Some(tuner) = &self.tuner {
+            tuner.tick();
+        }
         let mut out = std::mem::take(&mut self.collected);
         out.sort_by_key(|(seq, _)| *seq);
         out.into_iter().map(|(_, resp)| resp).collect()
@@ -1220,6 +1267,22 @@ impl Engine {
         }
         if !agg.reliability.is_quiet() {
             out += &format!("reliability: {}\n", agg.reliability.summary());
+        }
+        if let Some(plan) = self.forced_plan {
+            out += &format!("plan: forced {plan}\n");
+        }
+        if let Some(tuner) = &self.tuner {
+            out += &format!("tuner: on ({})\n", tuner.summary());
+            for row in tuner.resolved() {
+                out += &format!(
+                    "  {} [{}]: {} ({} samples, mean {:.1} µs)\n",
+                    row.kernel.artifact_name(),
+                    shape_name(row.shape),
+                    row.plan,
+                    row.samples,
+                    row.mean_ns as f64 / 1e3,
+                );
+            }
         }
         for (i, m) in self.shard_metrics.iter().enumerate() {
             let p = self.pool.placement(i);
@@ -1807,6 +1870,79 @@ mod tests {
         let _ = std::panic::catch_unwind(AssertUnwindSafe(|| gate.run(|| panic!("boom"))));
         // The permit came back: a second run does not deadlock.
         assert_eq!(gate.run(|| 7), 7);
+    }
+
+    #[test]
+    fn tuned_engine_keeps_serial_checksums_and_reports_resolved_plans() {
+        // The tuner explores the whole lattice across drains; every
+        // response must still carry the serial checksum, and the report
+        // must surface the resolved per-(kernel, shape) table.
+        let mut e = Engine::new(EngineConfig {
+            pool: PoolConfig { shards: Some(2), pin: false, ..PoolConfig::default() },
+            tuner: Some(TunerConfig { epsilon: 0.0, min_samples: 1, ..TunerConfig::default() }),
+            ..EngineConfig::default()
+        });
+        let want: Vec<u64> = GraphKernel::all()
+            .iter()
+            .map(|&k| run_native_kernel(k, &paper_graph(), 0))
+            .collect();
+        for _ in 0..12 {
+            let reqs: Vec<Request> = GraphKernel::all()
+                .iter()
+                .enumerate()
+                .map(|(i, &k)| req(i as u64, k))
+                .collect();
+            let responses = e.process_batch(reqs);
+            assert_eq!(responses.len(), 6);
+            for (r, w) in responses.iter().zip(&want) {
+                assert_eq!(r.result, RequestResult::Native(*w));
+            }
+        }
+        let tuner = e.tuner().expect("tuner installed");
+        let rows = tuner.resolved();
+        assert_eq!(rows.len(), 6, "every kernel's paper-shape cell saw traffic");
+        assert!(rows.iter().all(|r| r.samples >= 12), "completions fed every cell");
+        let report = e.report();
+        assert!(report.contains("tuner: on"), "report:\n{report}");
+        assert!(report.contains("  tc [n<64]:"), "resolved table present:\n{report}");
+    }
+
+    #[test]
+    fn forced_plan_engine_matches_serial_and_reports_the_plan() {
+        use crate::relic::Schedule;
+        let mut e = Engine::new(EngineConfig {
+            pool: PoolConfig { shards: Some(2), pin: false, ..PoolConfig::default() },
+            plan: Some(crate::relic::ExecutionPlan::pair(Schedule::Dynamic)),
+            ..EngineConfig::default()
+        });
+        let reqs: Vec<Request> = GraphKernel::all()
+            .iter()
+            .enumerate()
+            .map(|(i, &k)| req(i as u64, k))
+            .collect();
+        let responses = e.process_batch(reqs);
+        for (r, &k) in responses.iter().zip(GraphKernel::all().iter()) {
+            assert_eq!(
+                r.result,
+                RequestResult::Native(run_native_kernel(k, &paper_graph(), 0)),
+                "{k:?}"
+            );
+        }
+        assert!(e.tuner().is_none(), "forced plan builds no tuner");
+        assert!(e.report().contains("plan: forced pair:dynamic"), "{}", e.report());
+    }
+
+    #[test]
+    fn default_config_builds_no_tuner_and_no_forced_plan() {
+        // The degeneracy anchor: nothing plan-related exists unless
+        // explicitly configured.
+        let cfg = EngineConfig::default();
+        assert!(cfg.tuner.is_none());
+        assert!(cfg.plan.is_none());
+        let e = engine(1);
+        assert!(e.tuner().is_none());
+        assert!(!e.report().contains("tuner"));
+        assert!(!e.report().contains("plan: forced"));
     }
 
     #[test]

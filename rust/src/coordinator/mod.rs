@@ -14,6 +14,10 @@
 //! * [`admission`] — deadlines, the shed policy, the
 //!   [`Admission`] verdict every engine submit path returns, and the
 //!   [`edf_order`] earliest-deadline-first batch ordering rule;
+//! * [`tuner`] — the online [`crate::relic::ExecutionPlan`] selector:
+//!   epsilon-greedy per (kernel, graph-shape) cell over the candidate
+//!   lattice, fed by measured completion latencies, optionally seeded
+//!   by the probe/smtsim offline oracle;
 //! * [`engine`] — the machine-scale layer: [`Engine::submit`] /
 //!   [`Engine::try_submit`] / [`Engine::submit_or_park`] /
 //!   [`Engine::drain`] over a [`crate::relic::RelicPool`] of pinned
@@ -27,6 +31,7 @@ pub mod engine;
 pub mod reliability;
 pub mod router;
 pub mod service;
+pub mod tuner;
 
 pub use admission::{
     edf_order, shed_decision, Admission, AdmissionConfig, Deadline, ShedPolicy, ShedReason,
@@ -35,6 +40,7 @@ pub use engine::{Engine, EngineConfig};
 pub use reliability::{HealthReport, ReliabilityConfig, ReplayBook, ShardHealthRow};
 pub use router::{pick_shard, pick_shard_leased, Backend, RouteError, Router, RouterConfig};
 pub use service::{Coordinator, Request, RequestResult, Response, ServiceMetrics};
+pub use tuner::{ResolvedPlan, Tuner, TunerConfig};
 
 use crate::graph::CsrGraph;
 
@@ -178,6 +184,40 @@ pub fn run_native_kernel_par(
     }
 }
 
+/// [`run_native_kernel_par`] under an explicit
+/// [`ExecutionPlan`](crate::relic::ExecutionPlan): the plan decides
+/// serial vs pair, the schedule, and the grain for the kernel's hot
+/// loops. Plans change *assignment only* — for every plan the checksum
+/// equals [`run_native_kernel`]'s (the tuner's correctness gate rests
+/// on this).
+pub fn run_native_kernel_plan(
+    kernel: GraphKernel,
+    graph: &CsrGraph,
+    source: u32,
+    par: &crate::relic::Par,
+    plan: &crate::relic::ExecutionPlan,
+) -> u64 {
+    use crate::graph::*;
+    match kernel {
+        GraphKernel::Bc => {
+            bc::checksum(&bc::brandes_single_source_plan(graph, source, par, plan))
+        }
+        GraphKernel::Bfs => bfs::checksum(&bfs::bfs_plan(graph, source, par, plan)),
+        GraphKernel::Cc => cc::checksum(&cc::shiloach_vishkin_plan(graph, par, plan)),
+        GraphKernel::Pr => {
+            pr::checksum(&pr::pagerank_plan(graph, pr::MAX_ITERS, pr::TOLERANCE, par, plan))
+        }
+        GraphKernel::Sssp => sssp::checksum(&sssp::delta_stepping_plan(
+            graph,
+            source,
+            sssp::DEFAULT_DELTA,
+            par,
+            plan,
+        )),
+        GraphKernel::Tc => tc::checksum(tc::triangle_count_plan(graph, par, plan)),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -193,6 +233,22 @@ mod tests {
                 run_native_kernel(k, &g, 0),
                 "{k:?} parallel checksum must equal serial"
             );
+        }
+    }
+
+    #[test]
+    fn planned_kernels_match_serial_checksums_across_lattice() {
+        let g = crate::graph::kronecker::paper_graph();
+        let relic = crate::relic::Relic::new();
+        let par = crate::relic::Par::Relic(&relic);
+        for plan in crate::relic::ExecutionPlan::lattice() {
+            for k in GraphKernel::all() {
+                assert_eq!(
+                    run_native_kernel_plan(k, &g, 0, &par, &plan),
+                    run_native_kernel(k, &g, 0),
+                    "{k:?} under plan {plan}"
+                );
+            }
         }
     }
 

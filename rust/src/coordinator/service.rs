@@ -20,12 +20,15 @@ use crate::graph::{dense, CsrGraph};
 use crate::metrics::{
     AdmissionMetrics, Counter, FaultMetrics, Histogram, ReliabilityMetrics, ServiceEstimator,
 };
-use crate::relic::{with_lease, CrossCtx, FaultKind, FaultPlan, Par, Relic, RelicConfig};
+use crate::relic::{
+    with_lease, CrossCtx, ExecutionPlan, FaultKind, FaultPlan, Par, ParMode, Relic, RelicConfig,
+};
 use crate::runtime::GraphExecutor;
 
 use super::admission::{edf_order, Deadline};
 use super::router::{Backend, Router};
-use super::{run_native_kernel, run_native_kernel_par, GraphKernel};
+use super::tuner::Tuner;
+use super::{run_native_kernel, run_native_kernel_par, run_native_kernel_plan, GraphKernel};
 
 /// One analytics request.
 #[derive(Debug)]
@@ -181,6 +184,14 @@ pub struct Coordinator {
     /// [`serve_lease`](Self::serve_lease) lets *this* shard lend its
     /// pair to a sibling's whale request while idle.
     cross: Option<CrossCtx>,
+    /// Online plan selector shared across the engine's shards (`None` =
+    /// pre-plan behavior exactly). With it set, native requests run
+    /// under the tuner's current arm for their (kernel, shape) cell and
+    /// feed their measured latency back ([`Tuner::record`]).
+    tuner: Option<Arc<Tuner>>,
+    /// A single forced [`ExecutionPlan`] for every native request
+    /// (`--plan` on the CLI). Takes precedence over the tuner.
+    forced_plan: Option<ExecutionPlan>,
     pub metrics: Arc<ServiceMetrics>,
 }
 
@@ -207,8 +218,23 @@ impl Coordinator {
             edf: false,
             fault: None,
             cross: None,
+            tuner: None,
+            forced_plan: None,
             metrics,
         }
+    }
+
+    /// Install (or clear) the shared online tuner. `None` — the default
+    /// — keeps the native path bit-for-bit the pre-plan coordinator.
+    pub fn set_tuner(&mut self, tuner: Option<Arc<Tuner>>) {
+        self.tuner = tuner;
+    }
+
+    /// Force every native request onto one [`ExecutionPlan`] (`None` —
+    /// the default — forces nothing). A forced plan wins over the
+    /// tuner.
+    pub fn set_plan(&mut self, plan: Option<ExecutionPlan>) {
+        self.forced_plan = plan;
     }
 
     /// Install (or clear) the cross-shard borrowing context. `None` —
@@ -325,6 +351,15 @@ impl Coordinator {
                 result,
                 latency_ns: latency,
             });
+        }
+
+        // Plan-aware native path (ISSUE 9): taken only when a forced
+        // plan or the online tuner is installed. Without either —
+        // the default — the pre-plan pairing below runs bit-for-bit,
+        // the degeneracy rung this PR preserves.
+        if self.forced_plan.is_some() || self.tuner.is_some() {
+            self.process_native_planned(native_queue, &mut responses, &promoted);
+            return responses.into_iter().map(|r| r.expect("all requests answered")).collect();
         }
 
         // Native requests: pair onto the SMT core through Relic.
@@ -476,6 +511,178 @@ impl Coordinator {
         }
 
         responses.into_iter().map(|r| r.expect("all requests answered")).collect()
+    }
+
+    /// The plan-aware native path. Every request resolves an
+    /// [`ExecutionPlan`] — the forced one, or the tuner's current arm
+    /// for its (kernel, graph-shape) cell. Serial-mode requests are
+    /// co-scheduled two at a time through [`Relic::pair`] exactly like
+    /// the pre-plan path (plans decide *how a request runs*, and two
+    /// serial requests still fill both SMT threads); pair-mode requests
+    /// run one at a time with intra-request fork-join under the plan's
+    /// schedule and grain, borrowing idle shards when the plan hints at
+    /// it and a cross context exists. Measured completion latencies
+    /// feed back to the sampled arm — the closed measurement loop.
+    ///
+    /// Containment, EDF promotion credit, and the one-completion-
+    /// one-sample funnel all match the pre-plan path; failed requests
+    /// never feed the tuner (a panic's "latency" is not a service-time
+    /// sample).
+    fn process_native_planned(
+        &self,
+        native_queue: Vec<(usize, Request)>,
+        responses: &mut [Option<Response>],
+        promoted: &[bool],
+    ) {
+        let was_promoted = |idx: usize| promoted.get(idx).copied().unwrap_or(false);
+        let faults = self.fault.clone();
+        let contained = |kernel: GraphKernel, graph: &CsrGraph, source: u32| -> Result<u64, ()> {
+            catch_unwind(AssertUnwindSafe(|| {
+                if let Some(p) = faults.as_deref() {
+                    if p.should_panic(kernel.artifact_name()) {
+                        panic!("injected fault: panic on {}", kernel.artifact_name());
+                    }
+                }
+                run_native_kernel(kernel, graph, source)
+            }))
+            .map_err(|_| ())
+        };
+        let resolve = |req: &Request| -> (Option<usize>, ExecutionPlan) {
+            match self.forced_plan {
+                Some(plan) => (None, plan),
+                None => {
+                    let tuner = self.tuner.as_ref().expect("planned path needs a plan source");
+                    let (arm, plan) = tuner.plan_for(req.kernel, req.graph.num_vertices());
+                    (Some(arm), plan)
+                }
+            }
+        };
+        // Shared completion epilogue: funnel, promotion credit, tuner
+        // feedback, response slot.
+        let finish = |idx: usize,
+                      req: &Request,
+                      arm: Option<usize>,
+                      outcome: Result<u64, ()>,
+                      latency: u64,
+                      done: Instant,
+                      responses: &mut [Option<Response>]| {
+            let result = match outcome {
+                Ok(sum) => {
+                    self.metrics.record_completion(
+                        req.kernel,
+                        Backend::Native,
+                        latency,
+                        req.deadline,
+                        done,
+                    );
+                    if was_promoted(idx) && !req.deadline.is_past(done) {
+                        self.metrics.admission.deadline_misses_avoided.inc();
+                    }
+                    if let (Some(tuner), Some(arm)) = (self.tuner.as_ref(), arm) {
+                        tuner.record(req.kernel, req.graph.num_vertices(), arm, latency);
+                    }
+                    RequestResult::Native(sum)
+                }
+                Err(()) => {
+                    self.metrics.fault.panics_caught.inc();
+                    RequestResult::Failed(FaultKind::Panic)
+                }
+            };
+            responses[idx] = Some(Response {
+                id: req.id,
+                backend: Backend::Native,
+                result,
+                latency_ns: latency,
+            });
+        };
+
+        let mut pending: Option<(usize, Request, Option<usize>)> = None;
+        for (idx, req) in native_queue {
+            let (arm, plan) = resolve(&req);
+            if plan.par_mode == ParMode::Serial {
+                let Some((ia, ra, arm_a)) = pending.take() else {
+                    pending = Some((idx, req, arm));
+                    continue;
+                };
+                // Two serial-planned requests: co-schedule on the SMT
+                // pair, exactly the pre-plan pairing.
+                let t0 = Instant::now();
+                let out_a = AtomicU64::new(0);
+                let out_b = AtomicU64::new(0);
+                let fail_a = AtomicBool::new(false);
+                let fail_b = AtomicBool::new(false);
+                let task_b = || match contained(req.kernel, &req.graph, req.source) {
+                    Ok(sum) => out_b.store(sum, Ordering::Release),
+                    Err(()) => fail_b.store(true, Ordering::Release),
+                };
+                self.relic.pair(
+                    || match contained(ra.kernel, &ra.graph, ra.source) {
+                        Ok(sum) => out_a.store(sum, Ordering::Release),
+                        Err(()) => fail_a.store(true, Ordering::Release),
+                    },
+                    &task_b,
+                );
+                let done = Instant::now();
+                let latency = done.duration_since(t0).as_nanos() as u64;
+                self.metrics.relic_pairs.inc();
+                for (i, r, a, out, failed) in
+                    [(ia, &ra, arm_a, &out_a, &fail_a), (idx, &req, arm, &out_b, &fail_b)]
+                {
+                    let outcome = if failed.load(Ordering::Acquire) {
+                        Err(())
+                    } else {
+                        Ok(out.load(Ordering::Acquire))
+                    };
+                    finish(i, r, a, outcome, latency, done, responses);
+                }
+            } else {
+                // Pair-mode plan: intra-request fork-join under the
+                // plan's schedule and grain (plus a lease session when
+                // the plan hints at borrowing and a cross context
+                // exists).
+                let t0 = Instant::now();
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    if let Some(p) = faults.as_deref() {
+                        if p.should_panic(req.kernel.artifact_name()) {
+                            panic!("injected fault: panic on {}", req.kernel.artifact_name());
+                        }
+                    }
+                    match &self.cross {
+                        Some(ctx) if plan.max_borrow_hint > 0 => {
+                            with_lease(ctx, &self.relic, plan.schedule, |par| {
+                                run_native_kernel_plan(
+                                    req.kernel, &req.graph, req.source, par, &plan,
+                                )
+                            })
+                        }
+                        _ => run_native_kernel_plan(
+                            req.kernel,
+                            &req.graph,
+                            req.source,
+                            &Par::Relic(&self.relic),
+                            &plan,
+                        ),
+                    }
+                }))
+                .map_err(|_| ());
+                let done = Instant::now();
+                let latency = done.duration_since(t0).as_nanos() as u64;
+                if outcome.is_ok() {
+                    self.metrics.intra_requests.inc();
+                }
+                finish(idx, &req, arm, outcome, latency, done, responses);
+            }
+        }
+        // A lone serial-planned leftover runs on this thread alone —
+        // the plan chose serial, so there is nothing to fork and no
+        // partner left to pair with.
+        if let Some((idx, req, arm)) = pending {
+            let t0 = Instant::now();
+            let outcome = contained(req.kernel, &req.graph, req.source);
+            let done = Instant::now();
+            let latency = done.duration_since(t0).as_nanos() as u64;
+            finish(idx, &req, arm, outcome, latency, done, responses);
+        }
     }
 
     fn execute_pjrt(&mut self, req: &Request) -> RequestResult {
@@ -776,6 +983,104 @@ mod tests {
         }
         assert!(plain.metrics.fault.is_quiet());
         assert!(empty.metrics.fault.is_quiet());
+    }
+
+    #[test]
+    fn forced_serial_plan_pairs_requests_and_runs_the_leftover_inline() {
+        // A forced serial plan reproduces the pre-plan pairing for the
+        // paired positions, but the odd leftover now honors the plan
+        // and runs serially (no intra-request fork-join).
+        let mut c = native_coordinator();
+        c.set_plan(Some(ExecutionPlan::serial()));
+        let want = run_native_kernel(GraphKernel::Tc, &paper_graph(), 0);
+        let responses = c.process_batch((0..5).map(|i| req(i, GraphKernel::Tc)).collect());
+        assert_eq!(responses.len(), 5);
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.result, RequestResult::Native(want));
+        }
+        assert_eq!(c.metrics.relic_pairs.get(), 2);
+        assert_eq!(c.metrics.intra_requests.get(), 0, "serial plan never forks");
+        assert_eq!(c.metrics.native_requests.get(), 5);
+        assert_eq!(c.metrics.native_latency.count(), 5);
+    }
+
+    #[test]
+    fn forced_pair_plans_run_every_request_intra_with_serial_checksums() {
+        use crate::relic::Schedule;
+        for schedule in Schedule::all() {
+            let mut c = native_coordinator();
+            c.set_plan(Some(ExecutionPlan::pair(schedule).with_grain(4)));
+            let serial: Vec<u64> = GraphKernel::all()
+                .iter()
+                .map(|&k| run_native_kernel(k, &paper_graph(), 0))
+                .collect();
+            let reqs = GraphKernel::all()
+                .iter()
+                .enumerate()
+                .map(|(i, &k)| req(i as u64, k))
+                .collect();
+            let responses = c.process_batch(reqs);
+            for (resp, want) in responses.iter().zip(&serial) {
+                assert_eq!(resp.result, RequestResult::Native(*want), "{schedule:?}");
+            }
+            assert_eq!(c.metrics.relic_pairs.get(), 0, "{schedule:?}: no inter-pairing");
+            assert_eq!(c.metrics.intra_requests.get(), 6, "{schedule:?}");
+            assert_eq!(c.metrics.native_latency.count(), 6, "{schedule:?}");
+        }
+    }
+
+    #[test]
+    fn tuner_feeds_on_completions_and_keeps_checksums_serial() {
+        use crate::coordinator::tuner::{Tuner, TunerConfig};
+        let mut c = native_coordinator();
+        let tuner = Arc::new(Tuner::new(TunerConfig {
+            epsilon: 0.0,
+            min_samples: 1,
+            ..TunerConfig::default()
+        }));
+        c.set_tuner(Some(tuner.clone()));
+        let want = run_native_kernel(GraphKernel::Pr, &paper_graph(), 0);
+        // Enough batches to sweep the whole lattice for this cell.
+        for round in 0..(2 * tuner.lattice().len() as u64) {
+            let responses =
+                c.process_batch((0..2).map(|i| req(round * 2 + i, GraphKernel::Pr)).collect());
+            for r in &responses {
+                assert_eq!(r.result, RequestResult::Native(want), "round {round}");
+            }
+            tuner.tick();
+        }
+        let rows = tuner.resolved();
+        assert_eq!(rows.len(), 1, "exactly the (Pr, paper-shape) cell saw traffic");
+        assert!(rows[0].samples > 0, "completions fed the tuner");
+        assert_eq!(rows[0].kernel, GraphKernel::Pr);
+        // One completion sample per request on every planned path too.
+        assert_eq!(
+            c.metrics.native_latency.count(),
+            4 * tuner.lattice().len() as u64
+        );
+    }
+
+    #[test]
+    fn injected_panic_is_contained_under_a_forced_plan() {
+        for plan in [ExecutionPlan::serial(), ExecutionPlan::default()] {
+            let mut c = native_coordinator();
+            c.set_plan(Some(plan));
+            c.set_fault(Some(Arc::new(FaultPlan::new().with_panic_on("tc", 1))));
+            let want = run_native_kernel(GraphKernel::Bfs, &paper_graph(), 0);
+            let kernels = [GraphKernel::Tc, GraphKernel::Bfs];
+            let responses = c.process_batch(
+                kernels.iter().enumerate().map(|(i, &k)| req(i as u64, k)).collect(),
+            );
+            assert_eq!(responses[0].result, RequestResult::Failed(FaultKind::Panic), "{plan}");
+            assert_eq!(responses[1].result, RequestResult::Native(want), "{plan}");
+            assert_eq!(c.metrics.fault.panics_caught.get(), 1, "{plan}");
+            // Failed requests skip the completion funnel here too.
+            assert_eq!(c.metrics.native_requests.get(), 1, "{plan}");
+            // The shard survives for the next batch.
+            let again = c.process_batch(vec![req(9, GraphKernel::Bfs)]);
+            assert_eq!(again[0].result, RequestResult::Native(want), "{plan}");
+        }
     }
 
     #[test]

@@ -1,0 +1,465 @@
+//! Online execution-plan tuner: closes the measurement loop the ROADMAP
+//! called "profile-guided adaptive execution".
+//!
+//! The engine already *measures* per-kernel completion latencies
+//! ([`crate::metrics::ServiceEstimator`]); this module makes the
+//! measurements *steer*. A [`Tuner`] keeps one statistics cell per
+//! (kernel class, graph-shape class); each cell runs epsilon-greedy
+//! over the shared candidate lattice of [`ExecutionPlan`]s
+//! ([`ExecutionPlan::lattice`]): serial, plus pair-parallel under every
+//! schedule at three grain tiers.
+//!
+//! Division of labor, chosen so the shard hot path stays lock-free:
+//! * [`Tuner::plan_for`] — *hot*, called per request from shard
+//!   threads: one relaxed atomic load of the cell's current arm.
+//! * [`Tuner::record`] — *hot*, called per completion: two relaxed
+//!   atomic adds on the sampled arm.
+//! * [`Tuner::tick`] — *cold*, called by the engine's drain path at
+//!   settle points: re-selects each cell's arm (forced round-robin
+//!   until every arm has `min_samples`, then epsilon-greedy on mean
+//!   latency). Randomness comes from a seeded LCG, so a fixed seed
+//!   yields a fixed decision sequence for a fixed feed — the
+//!   repo's determinism discipline extends to the tuner itself.
+//!
+//! An optional offline **calibration pass** ([`Tuner::calibrate`])
+//! revives the dormant probe/smtsim machinery as an oracle: each
+//! kernel's calibrated instruction trace ([`crate::bench::Workload`])
+//! is co-simulated against itself on the SMT core model
+//! ([`crate::smtsim::speedup`]), and the predicted pairing speedup
+//! seeds every cell's arms as prior samples — the tuner then starts
+//! from the oracle's ranking instead of a cold uniform sweep.
+//!
+//! Correctness contract: plans change *assignment only* — every arm
+//! the tuner explores yields checksums bitwise-equal to serial (see
+//! `tests/plan_correctness.rs`), so exploration is never visible in
+//! responses, only in latency.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::relic::{ExecutionPlan, ParMode};
+
+use super::GraphKernel;
+
+/// Graph-shape classes: coarse vertex-count buckets. Service time per
+/// plan varies with input size (a 32-vertex task amortizes no fork-join
+/// overhead; a 100k-vertex one does), so each bucket tunes separately.
+pub const SHAPE_CLASSES: usize = 4;
+
+/// The shape class of a graph with `n` vertices.
+pub fn shape_class(n: usize) -> usize {
+    match n {
+        0..=63 => 0,
+        64..=511 => 1,
+        512..=4095 => 2,
+        _ => 3,
+    }
+}
+
+/// Human-readable name of a shape class (report labels).
+pub fn shape_name(class: usize) -> &'static str {
+    match class {
+        0 => "n<64",
+        1 => "n<512",
+        2 => "n<4096",
+        _ => "n>=4096",
+    }
+}
+
+/// Tuner policy knobs (see `config::TunerSettings` for the validated
+/// config-file surface that produces this).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TunerConfig {
+    /// Exploration probability per [`Tuner::tick`] once every arm has
+    /// `min_samples`.
+    pub epsilon: f64,
+    /// Seed of the tuner's deterministic LCG.
+    pub seed: u64,
+    /// Samples every arm must collect before greedy selection starts
+    /// (the forced round-robin phase).
+    pub min_samples: u64,
+    /// Run the smtsim calibration pass at engine construction.
+    pub calibrate: bool,
+}
+
+impl Default for TunerConfig {
+    fn default() -> Self {
+        TunerConfig { epsilon: 0.1, seed: 1, min_samples: 2, calibrate: false }
+    }
+}
+
+/// Per-arm statistics: sample count and total latency, both relaxed
+/// atomics so shard threads record without coordination.
+struct Arm {
+    count: AtomicU64,
+    total_ns: AtomicU64,
+}
+
+impl Arm {
+    fn new() -> Self {
+        Arm { count: AtomicU64::new(0), total_ns: AtomicU64::new(0) }
+    }
+
+    fn mean_ns(&self) -> Option<f64> {
+        let count = self.count.load(Ordering::Relaxed);
+        (count > 0).then(|| self.total_ns.load(Ordering::Relaxed) as f64 / count as f64)
+    }
+}
+
+/// One (kernel class, shape class) statistics cell.
+struct Cell {
+    /// Index into the lattice of the arm new requests should use.
+    current: AtomicUsize,
+    /// Round-robin cursor for the epsilon-exploration branch.
+    explore_cursor: AtomicUsize,
+    /// Total sample count at the last tick: a cell with no new traffic
+    /// keeps its arm and consumes no randomness, so the decision
+    /// sequence depends only on the recorded feed, not on how often
+    /// the engine settles.
+    last_total: AtomicU64,
+    arms: Vec<Arm>,
+}
+
+impl Cell {
+    fn new(arms: usize, default_arm: usize) -> Self {
+        Cell {
+            current: AtomicUsize::new(default_arm),
+            explore_cursor: AtomicUsize::new(0),
+            last_total: AtomicU64::new(0),
+            arms: (0..arms).map(|_| Arm::new()).collect(),
+        }
+    }
+
+    fn total(&self) -> u64 {
+        self.arms.iter().map(|a| a.count.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Best-mean arm among those with samples; `None` on a cold cell.
+    fn best_arm(&self) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, arm) in self.arms.iter().enumerate() {
+            if let Some(mean) = arm.mean_ns() {
+                if best.map(|(_, m)| mean < m).unwrap_or(true) {
+                    best = Some((i, mean));
+                }
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+}
+
+/// One row of the resolved-plan table (see [`Tuner::resolved`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResolvedPlan {
+    pub kernel: GraphKernel,
+    pub shape: usize,
+    pub plan: ExecutionPlan,
+    pub samples: u64,
+    pub mean_ns: u64,
+}
+
+/// The online plan selector. One instance is shared (via `Arc`) by
+/// every shard of an engine, so arm statistics aggregate machine-wide.
+pub struct Tuner {
+    cfg: TunerConfig,
+    lattice: Vec<ExecutionPlan>,
+    cells: Vec<Cell>,
+    /// LCG state; touched only by [`tick`](Self::tick).
+    rng: AtomicU64,
+    ticks: AtomicU64,
+    explorations: AtomicU64,
+}
+
+impl Tuner {
+    /// Build over [`ExecutionPlan::lattice`]. Every cell starts on the
+    /// pre-plan default arm, so a tuner that never ticks assigns
+    /// exactly the engine's historical behavior.
+    pub fn new(cfg: TunerConfig) -> Self {
+        let lattice = ExecutionPlan::lattice();
+        let default_arm = lattice
+            .iter()
+            .position(|p| *p == ExecutionPlan::default())
+            .expect("lattice contains the default plan");
+        let cells = (0..crate::metrics::SERVICE_CLASSES * SHAPE_CLASSES)
+            .map(|_| Cell::new(lattice.len(), default_arm))
+            .collect();
+        Tuner {
+            rng: AtomicU64::new(cfg.seed.wrapping_mul(2).wrapping_add(1)),
+            cfg,
+            lattice,
+            cells,
+            ticks: AtomicU64::new(0),
+            explorations: AtomicU64::new(0),
+        }
+    }
+
+    /// The candidate lattice this tuner selects over.
+    pub fn lattice(&self) -> &[ExecutionPlan] {
+        &self.lattice
+    }
+
+    fn cell(&self, kernel: GraphKernel, n: usize) -> &Cell {
+        &self.cells[kernel.class() * SHAPE_CLASSES + shape_class(n)]
+    }
+
+    /// The plan a request of this (kernel, size) should run under, and
+    /// the arm index to pass back to [`record`](Self::record). Hot
+    /// path: one relaxed load.
+    pub fn plan_for(&self, kernel: GraphKernel, n: usize) -> (usize, ExecutionPlan) {
+        let arm = self.cell(kernel, n).current.load(Ordering::Relaxed).min(self.lattice.len() - 1);
+        (arm, self.lattice[arm])
+    }
+
+    /// Feed one measured completion latency back to the sampled arm.
+    /// Hot path: two relaxed adds.
+    pub fn record(&self, kernel: GraphKernel, n: usize, arm: usize, latency_ns: u64) {
+        if let Some(a) = self.cell(kernel, n).arms.get(arm) {
+            a.count.fetch_add(1, Ordering::Relaxed);
+            a.total_ns.fetch_add(latency_ns, Ordering::Relaxed);
+        }
+    }
+
+    /// One uniform draw in `[0, 1)` from the seeded LCG.
+    fn next_uniform(&self) -> f64 {
+        // MMIX constants; the low bits are weak, so take the top 53.
+        let next = self
+            .rng
+            .load(Ordering::Relaxed)
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        self.rng.store(next, Ordering::Relaxed);
+        (next >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Re-select every cell's arm. Called from the engine's drain path
+    /// at settle points (never from shard threads). Cells with no new
+    /// samples since the last tick are left untouched and consume no
+    /// randomness.
+    pub fn tick(&self) {
+        self.ticks.fetch_add(1, Ordering::Relaxed);
+        for cell in &self.cells {
+            let total = cell.total();
+            if cell.last_total.swap(total, Ordering::Relaxed) == total {
+                continue;
+            }
+            // Forced exploration: cycle through under-sampled arms
+            // (starting from the current one, so it finishes its quota
+            // before the cursor moves on) until every arm has
+            // `min_samples`.
+            let cur = cell.current.load(Ordering::Relaxed).min(self.lattice.len() - 1);
+            let k = self.lattice.len();
+            let under = (0..k)
+                .map(|off| (cur + off) % k)
+                .find(|&i| cell.arms[i].count.load(Ordering::Relaxed) < self.cfg.min_samples);
+            if let Some(arm) = under {
+                cell.current.store(arm, Ordering::Relaxed);
+                continue;
+            }
+            if self.next_uniform() < self.cfg.epsilon {
+                self.explorations.fetch_add(1, Ordering::Relaxed);
+                let arm = cell.explore_cursor.fetch_add(1, Ordering::Relaxed) % k;
+                cell.current.store(arm, Ordering::Relaxed);
+            } else if let Some(best) = cell.best_arm() {
+                cell.current.store(best, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Offline calibration (the revived probe/smtsim oracle): simulate
+    /// each kernel's calibrated trace co-running with itself on the SMT
+    /// core model and seed every cell's arms with the predicted
+    /// serial-vs-pair ratio as `min_samples` prior samples each. The
+    /// priors satisfy the forced-exploration quota, so a calibrated
+    /// tuner starts greedy on the oracle's ranking and lets real
+    /// measurements overrule it. Deterministic: the simulator is a pure
+    /// function of the traces and the core model.
+    pub fn calibrate(&self) {
+        use crate::smtsim::CoreConfig;
+        // Only the serial:pair *ratio* matters; the scale cancels out
+        // of every mean comparison and real samples soon dominate.
+        const PRIOR_NS: f64 = (1u64 << 20) as f64;
+        let core = CoreConfig::default();
+        let prior_count = self.cfg.min_samples.max(1);
+        for kernel in GraphKernel::all() {
+            let name = workload_name(kernel);
+            let trace = crate::bench::Workload::new(name).trace(0, &core);
+            let speed = crate::smtsim::speedup("relic", &trace, &trace, &core).max(0.1);
+            for shape in 0..SHAPE_CLASSES {
+                let cell = &self.cells[kernel.class() * SHAPE_CLASSES + shape];
+                for (i, plan) in self.lattice.iter().enumerate() {
+                    let prior = match plan.par_mode {
+                        ParMode::Serial => PRIOR_NS,
+                        ParMode::Pair => PRIOR_NS / speed,
+                    };
+                    cell.arms[i].count.fetch_add(prior_count, Ordering::Relaxed);
+                    cell.arms[i]
+                        .total_ns
+                        .fetch_add(prior as u64 * prior_count, Ordering::Relaxed);
+                }
+                if let Some(best) = cell.best_arm() {
+                    cell.current.store(best, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
+    /// The resolved per-(kernel, shape) plan table: current arm, sample
+    /// count and mean latency for every cell that has data. Printed by
+    /// `Engine::report` when the tuner is on.
+    pub fn resolved(&self) -> Vec<ResolvedPlan> {
+        let mut rows = Vec::new();
+        for kernel in GraphKernel::all() {
+            for shape in 0..SHAPE_CLASSES {
+                let cell = &self.cells[kernel.class() * SHAPE_CLASSES + shape];
+                let samples = cell.total();
+                if samples == 0 {
+                    continue;
+                }
+                let arm = cell.current.load(Ordering::Relaxed).min(self.lattice.len() - 1);
+                rows.push(ResolvedPlan {
+                    kernel,
+                    shape,
+                    plan: self.lattice[arm],
+                    samples,
+                    mean_ns: cell.arms[arm].mean_ns().unwrap_or(0.0) as u64,
+                });
+            }
+        }
+        rows
+    }
+
+    /// One-line activity summary for reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} ticks, {} explorations, epsilon {}, seed {}",
+            self.ticks.load(Ordering::Relaxed),
+            self.explorations.load(Ordering::Relaxed),
+            self.cfg.epsilon,
+            self.cfg.seed,
+        )
+    }
+}
+
+/// The [`crate::bench::Workload`] name of a kernel (the bench table
+/// spells PageRank "pr", the artifact manifest "pagerank").
+fn workload_name(kernel: GraphKernel) -> &'static str {
+    match kernel {
+        GraphKernel::Bc => "bc",
+        GraphKernel::Bfs => "bfs",
+        GraphKernel::Cc => "cc",
+        GraphKernel::Pr => "pr",
+        GraphKernel::Sssp => "sssp",
+        GraphKernel::Tc => "tc",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive one cell with a synthetic latency feed: the planted arm
+    /// measures `fast` ns, every other arm `slow` ns.
+    fn drive(tuner: &Tuner, kernel: GraphKernel, n: usize, planted: usize, rounds: usize) {
+        for _ in 0..rounds {
+            let (arm, _) = tuner.plan_for(kernel, n);
+            tuner.record(kernel, n, arm, if arm == planted { 100 } else { 1_000 });
+            tuner.tick();
+        }
+    }
+
+    #[test]
+    fn fresh_tuner_assigns_the_preplan_default() {
+        let tuner = Tuner::new(TunerConfig::default());
+        for kernel in GraphKernel::all() {
+            for n in [32, 100, 1000, 10_000] {
+                let (_, plan) = tuner.plan_for(kernel, n);
+                assert_eq!(plan, ExecutionPlan::default(), "{kernel:?} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn converges_to_the_planted_best_arm() {
+        // Pure greed after the forced sweep (epsilon 0): the tuner must
+        // land on the planted arm and stay there.
+        let cfg = TunerConfig { epsilon: 0.0, min_samples: 2, ..TunerConfig::default() };
+        let tuner = Tuner::new(cfg);
+        let planted = 7; // an arbitrary non-default arm
+        drive(&tuner, GraphKernel::Tc, 32, planted, 3 * tuner.lattice().len());
+        for _ in 0..10 {
+            let (arm, _) = tuner.plan_for(GraphKernel::Tc, 32);
+            assert_eq!(arm, planted);
+            tuner.record(GraphKernel::Tc, 32, arm, 100);
+            tuner.tick();
+        }
+        // Other cells never saw traffic and still hold the default.
+        let (_, plan) = tuner.plan_for(GraphKernel::Tc, 100_000);
+        assert_eq!(plan, ExecutionPlan::default());
+    }
+
+    #[test]
+    fn fixed_seed_selection_sequences_are_deterministic() {
+        let cfg = TunerConfig { epsilon: 0.3, seed: 42, ..TunerConfig::default() };
+        let run = || {
+            let tuner = Tuner::new(cfg);
+            let mut arms = Vec::new();
+            for round in 0..200 {
+                let (arm, _) = tuner.plan_for(GraphKernel::Bfs, 512);
+                // Latency depends only on (arm, round): a fixed feed.
+                tuner.record(GraphKernel::Bfs, 512, arm, 500 + (arm as u64 * 37 + round) % 100);
+                tuner.tick();
+                arms.push(arm);
+            }
+            arms
+        };
+        assert_eq!(run(), run(), "same seed + same feed => same plan sequence");
+    }
+
+    #[test]
+    fn cells_without_new_traffic_keep_their_arm_and_consume_no_randomness() {
+        let cfg = TunerConfig { epsilon: 1.0, min_samples: 1, ..TunerConfig::default() };
+        let tuner = Tuner::new(cfg);
+        drive(&tuner, GraphKernel::Cc, 32, 0, 2 * tuner.lattice().len());
+        let (arm_before, _) = tuner.plan_for(GraphKernel::Cc, 32);
+        // Idle ticks: no cell saw new samples, so nothing may move.
+        for _ in 0..50 {
+            tuner.tick();
+        }
+        let (arm_after, _) = tuner.plan_for(GraphKernel::Cc, 32);
+        assert_eq!(arm_before, arm_after);
+    }
+
+    #[test]
+    fn calibration_seeds_every_cell_and_prefers_pair_when_the_sim_does() {
+        let tuner = Tuner::new(TunerConfig::default());
+        tuner.calibrate();
+        let rows = tuner.resolved();
+        assert_eq!(
+            rows.len(),
+            crate::metrics::SERVICE_CLASSES * SHAPE_CLASSES,
+            "every cell carries prior samples"
+        );
+        // The seeded mode must agree with the oracle: pair wherever
+        // the simulator predicts a pairing speedup, serial otherwise.
+        let core = crate::smtsim::CoreConfig::default();
+        for row in &rows {
+            let trace =
+                crate::bench::Workload::new(workload_name(row.kernel)).trace(0, &core);
+            let sp = crate::smtsim::speedup("relic", &trace, &trace, &core);
+            let want = if sp > 1.0 { ParMode::Pair } else { ParMode::Serial };
+            assert_eq!(
+                row.plan.par_mode,
+                want,
+                "{:?}/{} seeded against the oracle (speedup {sp:.3})",
+                row.kernel,
+                shape_name(row.shape)
+            );
+        }
+    }
+
+    #[test]
+    fn record_out_of_range_arm_is_ignored() {
+        let tuner = Tuner::new(TunerConfig::default());
+        tuner.record(GraphKernel::Pr, 32, 10_000, 999);
+        assert!(tuner.resolved().is_empty());
+    }
+}

@@ -6,7 +6,7 @@
 //! the benchmark task and [`brandes`] the full exact variant.
 
 use crate::probe::Probe;
-use crate::relic::{Par, Schedule};
+use crate::relic::{ExecutionPlan, Grain, Par, Schedule};
 
 use super::csr::balanced_boundary;
 use super::CsrGraph;
@@ -110,6 +110,22 @@ pub fn brandes_single_source<P: Probe>(
 /// reused buffer), so a hub on the level no longer strands its whole
 /// neighbor scan in one chunk.
 pub fn brandes_single_source_par(g: &CsrGraph, source: u32, par: &Par) -> Vec<f64> {
+    brandes_single_source_grain(g, source, par, PAR_GRAIN)
+}
+
+/// [`brandes_single_source_par`] under an [`ExecutionPlan`]: the plan
+/// picks serial vs pair, the schedule, and the grain (0 defers to this
+/// kernel's default). Scores stay bitwise-identical for every plan.
+pub fn brandes_single_source_plan(
+    g: &CsrGraph,
+    source: u32,
+    par: &Par,
+    plan: &ExecutionPlan,
+) -> Vec<f64> {
+    brandes_single_source_grain(g, source, &plan.apply(par), plan.grain_or(PAR_GRAIN))
+}
+
+fn brandes_single_source_grain(g: &CsrGraph, source: u32, par: &Par, grain: usize) -> Vec<f64> {
     let n = g.num_vertices();
     let edge_balanced = par.schedule() == Schedule::EdgeBalanced;
     let mut level_work: Vec<u64> = Vec::new();
@@ -147,26 +163,22 @@ pub fn brandes_single_source_par(g: &CsrGraph, source: u32, par: &Par) -> Vec<f6
             let lvl = &order[lvl_start..lvl_end];
             // Levels that fit one grain take the serial fast path and
             // never read the prefix — skip building it for them.
-            if edge_balanced && lvl.len() > PAR_GRAIN {
+            if edge_balanced && lvl.len() > grain {
                 g.degree_prefix_into(lvl, &mut level_work);
             }
             {
                 let (sigma, depth) = (&sigma, &depth);
                 let level_work = &level_work;
-                par.map_into_by(
-                    &mut vals[..lvl.len()],
-                    PAR_GRAIN,
-                    |i, k| balanced_boundary(level_work, 0, lvl.len(), i, k),
-                    |j| {
-                        let mut s = 0.0;
-                        for &u in g.neighbors(lvl[j]) {
-                            if depth[u as usize] == d - 1 {
-                                s += sigma[u as usize];
-                            }
+                let bound = |i: usize, k: usize| balanced_boundary(level_work, 0, lvl.len(), i, k);
+                par.map_into(&mut vals[..lvl.len()], Grain::Bounded(grain, &bound), |j| {
+                    let mut s = 0.0;
+                    for &u in g.neighbors(lvl[j]) {
+                        if depth[u as usize] == d - 1 {
+                            s += sigma[u as usize];
                         }
-                        s
-                    },
-                );
+                    }
+                    s
+                });
             }
             for (j, &v) in lvl.iter().enumerate() {
                 sigma[v as usize] = vals[j];

@@ -7,7 +7,7 @@
 use std::sync::atomic::{AtomicU32, Ordering};
 
 use crate::probe::Probe;
-use crate::relic::{Par, Schedule};
+use crate::relic::{ExecutionPlan, Grain, Par, Schedule};
 
 use super::csr::balanced_boundary;
 use super::CsrGraph;
@@ -71,6 +71,17 @@ pub fn bfs<P: Probe>(g: &CsrGraph, source: u32, probe: &mut P) -> Vec<u32> {
 /// hub on a tiny frontier is not split; the fast path matters more on
 /// the many near-empty levels real BFS runs see.)
 pub fn bfs_par(g: &CsrGraph, source: u32, par: &Par) -> Vec<u32> {
+    bfs_grain(g, source, par, PAR_GRAIN)
+}
+
+/// [`bfs_par`] under an [`ExecutionPlan`]: the plan picks serial vs
+/// pair, the schedule, and the grain (0 defers to this kernel's
+/// default). Depths stay identical for every plan.
+pub fn bfs_plan(g: &CsrGraph, source: u32, par: &Par, plan: &ExecutionPlan) -> Vec<u32> {
+    bfs_grain(g, source, &plan.apply(par), plan.grain_or(PAR_GRAIN))
+}
+
+fn bfs_grain(g: &CsrGraph, source: u32, par: &Par, grain: usize) -> Vec<u32> {
     let n = g.num_vertices();
     if n == 0 {
         return Vec::new();
@@ -86,14 +97,14 @@ pub fn bfs_par(g: &CsrGraph, source: u32, par: &Par) -> Vec<u32> {
         let f = &frontier;
         // Frontiers that fit one grain take the serial fast path and
         // never read the prefix — skip building it for them.
-        if edge_balanced && f.len() > PAR_GRAIN {
+        if edge_balanced && f.len() > grain {
             g.degree_prefix_into(f, &mut frontier_work);
         }
         let frontier_work = &frontier_work;
-        let parts: Vec<Vec<u32>> = par.chunk_map_by(
+        let bound = |i: usize, k: usize| balanced_boundary(frontier_work, 0, f.len(), i, k);
+        let parts: Vec<Vec<u32>> = par.chunk_map(
             0..f.len(),
-            PAR_GRAIN,
-            |i, k| balanced_boundary(frontier_work, 0, f.len(), i, k),
+            Grain::Bounded(grain, &bound),
             |sub| {
                 let mut local = Vec::new();
                 for i in sub {

@@ -9,7 +9,7 @@
 use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 
 use crate::probe::Probe;
-use crate::relic::Par;
+use crate::relic::{ExecutionPlan, Grain, Par};
 
 use super::CsrGraph;
 
@@ -82,14 +82,26 @@ pub fn shiloach_vishkin<P: Probe>(g: &CsrGraph, probe: &mut P) -> Vec<u32> {
 /// `Schedule::EdgeBalanced` its chunks bisect the CSR offsets; the
 /// compress sweep is ~O(1) per vertex and keeps uniform chunks.
 pub fn shiloach_vishkin_par(g: &CsrGraph, par: &Par) -> Vec<u32> {
+    shiloach_vishkin_grain(g, par, PAR_GRAIN)
+}
+
+/// [`shiloach_vishkin_par`] under an [`ExecutionPlan`]: the plan picks
+/// serial vs pair, the schedule, and the grain (0 defers to this
+/// kernel's default). Labels stay identical for every plan.
+pub fn shiloach_vishkin_plan(g: &CsrGraph, par: &Par, plan: &ExecutionPlan) -> Vec<u32> {
+    shiloach_vishkin_grain(g, &plan.apply(par), plan.grain_or(PAR_GRAIN))
+}
+
+fn shiloach_vishkin_grain(g: &CsrGraph, par: &Par, grain: usize) -> Vec<u32> {
     let n = g.num_vertices();
     let comp: Vec<AtomicU32> = (0..n as u32).map(AtomicU32::new).collect();
     let changed = AtomicBool::new(true);
+    let hook_bound = |i: usize, k: usize| g.edge_balanced_boundary(0, n, i, k);
     while changed.swap(false, Ordering::Relaxed) {
         // Hook sweep: for every edge (u, v) with comp[u] < comp[v], pull
         // the label of vertex `comp[v]` down toward comp[u]. The scope
         // barrier after the sweep publishes all writes to the next phase.
-        par.for_each_index_by(0..n, PAR_GRAIN, |i, k| g.edge_balanced_boundary(0, n, i, k), |u| {
+        par.for_each_index(0..n, Grain::Bounded(grain, &hook_bound), |u| {
             let cu = comp[u].load(Ordering::Relaxed);
             for &v in g.neighbors(u as u32) {
                 let cv = comp[v as usize].load(Ordering::Relaxed);
@@ -101,7 +113,7 @@ pub fn shiloach_vishkin_par(g: &CsrGraph, par: &Par) -> Vec<u32> {
         // Compress sweep: pointer jumping. Labels decrease monotonically
         // (comp[x] <= x always), so the per-vertex loop terminates even
         // while other chunks are jumping concurrently.
-        par.for_each_index(0..n, PAR_GRAIN, |v| loop {
+        par.for_each_index(0..n, grain, |v| loop {
             let c = comp[v].load(Ordering::Relaxed);
             let cc = comp[c as usize].load(Ordering::Relaxed);
             if c == cc {

@@ -155,8 +155,9 @@ impl CsrGraph {
     ///
     /// This is the degree-aware boundary function the
     /// [`Schedule::EdgeBalanced`](crate::relic::Schedule) kernel loops
-    /// feed to [`Par::map_into_by`](crate::relic::Par::map_into_by) and
-    /// friends: on skewed (power-law) graphs a uniform vertex split
+    /// wrap in a [`Grain::Bounded`](crate::relic::Grain) and feed to
+    /// [`Par::map_into`](crate::relic::Par::map_into) and friends: on
+    /// skewed (power-law) graphs a uniform vertex split
     /// strands the hub vertices' edges in one chunk, while this one
     /// narrows chunks around the hubs.
     pub fn edge_balanced_boundary(&self, lo: usize, hi: usize, i: usize, k: usize) -> usize {

@@ -5,7 +5,7 @@
 //! 32-node input a task takes 4.3 µs — the second-coarsest kernel.
 
 use crate::probe::Probe;
-use crate::relic::Par;
+use crate::relic::{ExecutionPlan, Grain, Par};
 
 use super::CsrGraph;
 
@@ -88,6 +88,29 @@ pub fn pagerank<P: Probe>(
 /// number of edges — the scatter loop is O(1) per vertex and keeps
 /// uniform chunks.
 pub fn pagerank_par(g: &CsrGraph, max_iters: u32, tolerance: f64, par: &Par) -> Vec<f64> {
+    pagerank_grain(g, max_iters, tolerance, par, PAR_GRAIN)
+}
+
+/// [`pagerank_par`] under an [`ExecutionPlan`]: the plan picks serial
+/// vs pair, the schedule, and the grain (0 defers to this kernel's
+/// default). Scores stay bitwise-identical for every plan.
+pub fn pagerank_plan(
+    g: &CsrGraph,
+    max_iters: u32,
+    tolerance: f64,
+    par: &Par,
+    plan: &ExecutionPlan,
+) -> Vec<f64> {
+    pagerank_grain(g, max_iters, tolerance, &plan.apply(par), plan.grain_or(PAR_GRAIN))
+}
+
+fn pagerank_grain(
+    g: &CsrGraph,
+    max_iters: u32,
+    tolerance: f64,
+    par: &Par,
+    grain: usize,
+) -> Vec<f64> {
     let n = g.num_vertices();
     if n == 0 {
         return Vec::new();
@@ -96,12 +119,13 @@ pub fn pagerank_par(g: &CsrGraph, max_iters: u32, tolerance: f64, par: &Par) -> 
     let mut scores = vec![1.0 / n as f64; n];
     let mut next = vec![0.0f64; n];
     let mut outgoing = vec![0.0f64; n];
+    let pull_bound = |i: usize, k: usize| g.edge_balanced_boundary(0, n, i, k);
 
     for _ in 0..max_iters {
         // Scatter contributions (disjoint writes per vertex).
         {
             let scores = &scores;
-            par.map_into(&mut outgoing, PAR_GRAIN, |v| {
+            par.map_into(&mut outgoing, grain, |v| {
                 let deg = g.degree(v as u32);
                 if deg > 0 {
                     scores[v] / deg as f64
@@ -115,18 +139,13 @@ pub fn pagerank_par(g: &CsrGraph, max_iters: u32, tolerance: f64, par: &Par) -> 
         // bisects the offsets array instead of counting vertices.
         {
             let outgoing = &outgoing;
-            par.map_into_by(
-                &mut next,
-                PAR_GRAIN,
-                |i, k| g.edge_balanced_boundary(0, n, i, k),
-                |u| {
-                    let mut incoming = 0.0;
-                    for &v in g.neighbors(u as u32) {
-                        incoming += outgoing[v as usize];
-                    }
-                    base + DAMPING * incoming
-                },
-            );
+            par.map_into(&mut next, Grain::Bounded(grain, &pull_bound), |u| {
+                let mut incoming = 0.0;
+                for &v in g.neighbors(u as u32) {
+                    incoming += outgoing[v as usize];
+                }
+                base + DAMPING * incoming
+            });
         }
         // Convergence error: serial, in vertex order — the identical
         // float-add sequence as the serial kernel's accumulation.

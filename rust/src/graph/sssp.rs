@@ -7,7 +7,7 @@
 use std::sync::atomic::{AtomicU32, Ordering};
 
 use crate::probe::Probe;
-use crate::relic::{Par, Schedule};
+use crate::relic::{ExecutionPlan, Grain, Par, Schedule};
 
 use super::csr::balanced_boundary;
 use super::CsrGraph;
@@ -99,6 +99,23 @@ pub fn delta_stepping<P: Probe>(
 /// chunks are balanced by their entries' degrees (a per-wave prefix
 /// over one reused buffer).
 pub fn delta_stepping_par(g: &CsrGraph, source: u32, delta: u32, par: &Par) -> Vec<u32> {
+    delta_stepping_grain(g, source, delta, par, PAR_GRAIN)
+}
+
+/// [`delta_stepping_par`] under an [`ExecutionPlan`]: the plan picks
+/// serial vs pair, the schedule, and the grain (0 defers to this
+/// kernel's default). Distances stay identical for every plan.
+pub fn delta_stepping_plan(
+    g: &CsrGraph,
+    source: u32,
+    delta: u32,
+    par: &Par,
+    plan: &ExecutionPlan,
+) -> Vec<u32> {
+    delta_stepping_grain(g, source, delta, &plan.apply(par), plan.grain_or(PAR_GRAIN))
+}
+
+fn delta_stepping_grain(g: &CsrGraph, source: u32, delta: u32, par: &Par, grain: usize) -> Vec<u32> {
     assert!(g.is_weighted(), "SSSP requires a weighted graph");
     assert!(delta > 0);
     let n = g.num_vertices();
@@ -115,16 +132,16 @@ pub fn delta_stepping_par(g: &CsrGraph, source: u32, delta: u32, par: &Par) -> V
             let w = &wave;
             // Waves that fit one grain take the serial fast path and
             // never read the prefix — skip building it for them.
-            if edge_balanced && w.len() > PAR_GRAIN {
+            if edge_balanced && w.len() > grain {
                 g.degree_prefix_into(w, &mut wave_work);
             }
             let wave_work = &wave_work;
+            let bound = |ci: usize, k: usize| balanced_boundary(wave_work, 0, w.len(), ci, k);
             // Relax every edge of the wave's live entries; collect the
             // (bucket, vertex) of each successful improvement per chunk.
-            let parts: Vec<Vec<(usize, u32)>> = par.chunk_map_by(
+            let parts: Vec<Vec<(usize, u32)>> = par.chunk_map(
                 0..w.len(),
-                PAR_GRAIN,
-                |ci, k| balanced_boundary(wave_work, 0, w.len(), ci, k),
+                Grain::Bounded(grain, &bound),
                 |sub| {
                     let mut local: Vec<(usize, u32)> = Vec::new();
                     for idx in sub {

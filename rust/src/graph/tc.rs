@@ -4,7 +4,7 @@
 //! A task on the paper's input runs in ~1.3 µs.
 
 use crate::probe::{NoProbe, Probe};
-use crate::relic::{Par, Schedule};
+use crate::relic::{ExecutionPlan, Grain, Par, Schedule};
 
 use super::csr::{balanced_boundary, TARGETS_BASE};
 use super::CsrGraph;
@@ -70,16 +70,27 @@ fn intersect_above<P: Probe>(a: &[u32], b: &[u32], lo: u32, probe: &mut P) -> u6
 /// vertex counts — the one allocation this costs happens once per
 /// call, outside the scope hot path.
 pub fn triangle_count_par(g: &CsrGraph, par: &Par) -> u64 {
+    triangle_count_grain(g, par, PAR_GRAIN)
+}
+
+/// [`triangle_count_par`] under an [`ExecutionPlan`]: the plan picks
+/// serial vs pair, the schedule, and the grain (0 defers to this
+/// kernel's default). The count stays identical for every plan.
+pub fn triangle_count_plan(g: &CsrGraph, par: &Par, plan: &ExecutionPlan) -> u64 {
+    triangle_count_grain(g, &plan.apply(par), plan.grain_or(PAR_GRAIN))
+}
+
+fn triangle_count_grain(g: &CsrGraph, par: &Par, grain: usize) -> u64 {
     // Graphs that fit one grain take the serial fast path and never
     // read the wedge prefix — skip building it for them. Callers that
     // count on the same graph repeatedly can amortize the scan through
     // [`triangle_count_par_with_wedges`].
-    let wedges = if par.schedule() == Schedule::EdgeBalanced && g.num_vertices() > PAR_GRAIN {
+    let wedges = if par.schedule() == Schedule::EdgeBalanced && g.num_vertices() > grain {
         g.cumulative_wedge_work()
     } else {
         Vec::new()
     };
-    triangle_count_par_with_wedges(g, par, &wedges)
+    triangle_count_wedges_grain(g, par, &wedges, grain)
 }
 
 /// [`triangle_count_par`] with a precomputed
@@ -88,11 +99,15 @@ pub fn triangle_count_par(g: &CsrGraph, par: &Par) -> u64 {
 /// prefix is only read under `Schedule::EdgeBalanced` (pass `&[]`
 /// otherwise).
 pub fn triangle_count_par_with_wedges(g: &CsrGraph, par: &Par, wedges: &[u64]) -> u64 {
+    triangle_count_wedges_grain(g, par, wedges, PAR_GRAIN)
+}
+
+fn triangle_count_wedges_grain(g: &CsrGraph, par: &Par, wedges: &[u64], grain: usize) -> u64 {
     let n = g.num_vertices();
-    par.reduce_by(
+    let bound = |i: usize, k: usize| balanced_boundary(wedges, 0, n, i, k);
+    par.reduce(
         0..n,
-        PAR_GRAIN,
-        |i, k| balanced_boundary(wedges, 0, n, i, k),
+        Grain::Bounded(grain, &bound),
         0u64,
         |u| {
             let u = u as u32;

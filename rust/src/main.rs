@@ -25,7 +25,9 @@
 //!                    queued requests, --replay re-submits typed
 //!                    failures of idempotent kernels at least once,
 //!                    --health-json prints the health report after the
-//!                    batch)
+//!                    batch, --plan SPEC forces one execution plan on
+//!                    every native request, --tuner turns on the online
+//!                    per-(kernel, shape) plan tuner)
 //! repro pool         pool-scaling sweep: throughput vs shard count,
 //!                    with pool-vs-single-pair checksum verification
 //!                    (--shards 1,2,4 --requests N --reps R)
@@ -58,14 +60,22 @@
 //!                    bitwise checksum gate (--shards N --max-borrow B
 //!                    --scale S --reps R; borrow 0 is always measured
 //!                    as the degeneracy anchor)
+//! repro plan         plan-ablation sweep: mixed-kernel rounds under the
+//!                    pre-plan baseline, each forced static plan, and
+//!                    the online tuner, with the tuner's resolved
+//!                    per-(kernel, shape) assignments printed and a
+//!                    bitwise checksum gate on every response
+//!                    (--shards N --scale S --reps R; --tuner-epsilon,
+//!                    --tuner-seed, --tuner-min-samples and --calibrate
+//!                    shape the tuner row)
 //! repro selftest     PJRT artifact round-trip check
 //! ```
 //!
 //! Common options: `--out results` writes figure JSON/text files;
 //! `--iters N` (wallclock); `--artifacts DIR`; `--config FILE` loads
 //! `[pool]`/`[admission]`/`[supervisor]`/`[fault]`/`[relic]`/
-//! `[reliability]` settings for serve/pool/admission/faults/chaos/
-//! health/whale (CLI flags override);
+//! `[reliability]`/`[plan]`/`[tuner]` settings for serve/pool/
+//! admission/faults/chaos/health/whale/plan (CLI flags override);
 //! `--no-pin` disables CPU pinning.
 
 use std::path::Path;
@@ -74,8 +84,8 @@ use relic_smt::bench::{self, figures};
 use relic_smt::bench::ablation;
 use relic_smt::cli::Args;
 use relic_smt::config::{
-    AdmissionSettings, FaultSettings, PoolSettings, RawConfig, RelicSettings,
-    ReliabilitySettings, SupervisorSettings,
+    check_plan_conflict, AdmissionSettings, FaultSettings, PlanSettings, PoolSettings,
+    RawConfig, RelicSettings, ReliabilitySettings, SupervisorSettings, TunerSettings,
 };
 use relic_smt::coordinator::{
     Coordinator, Deadline, Engine, EngineConfig, GraphKernel, Request, Router, RouterConfig,
@@ -289,11 +299,16 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 let fault = fault_settings(args)?;
                 let relic = relic_settings(args)?;
                 let reliability = reliability_settings(args)?;
+                let plan = plan_settings(args)?;
+                let tuner = tuner_settings(args)?;
+                check_plan_conflict(&tuner, &plan)?;
                 let mut engine_cfg =
                     EngineConfig::from_settings(&settings, &admission, &supervisor);
                 engine_cfg.pool.fault = fault.plan();
                 engine_cfg.max_borrow = relic.max_borrow;
                 engine_cfg.reliability = reliability.to_config();
+                engine_cfg.plan = plan.to_plan();
+                engine_cfg.tuner = tuner.to_config();
                 let mut engine = Engine::new(engine_cfg);
                 println!(
                     "host: {}; engine: {} shards; shed policy {}; deadline {:?}; \
@@ -516,6 +531,32 @@ fn run(args: &Args) -> anyhow::Result<()> {
             println!("{}", figures::render_whale(&rows));
             write_out(args, "cross_shard.json", &figures::whale_rows_to_json(&rows))?;
         }
+        Some("plan") => {
+            let settings = pool_settings(args)?;
+            let admission = admission_settings(args)?;
+            let supervisor = supervisor_settings(args)?;
+            let mut tuner = tuner_settings(args)?;
+            // The sweep always measures a tuner row — `--tuner` is
+            // implied; the remaining knobs shape that row.
+            tuner.enabled = true;
+            tuner.validate()?;
+            let shards = args.get_u64("shards", 2).max(1) as usize;
+            let scale = args.get_u64("scale", 8) as u32;
+            let reps = args.get_u64("reps", 3);
+            println!("host: {}", affinity::topology_summary());
+            let mut template = EngineConfig::from_settings(&settings, &admission, &supervisor);
+            template.tuner = tuner.to_config();
+            println!(
+                "plan-ablation sweep: {shards} shard(s), graph scale {scale}, {reps} reps, \
+                 tuner epsilon {}, seed {}, calibrate {}\n",
+                tuner.epsilon,
+                tuner.seed,
+                if tuner.calibrate { "on" } else { "off" },
+            );
+            let rows = figures::plan_sweep(&template, shards, scale, reps);
+            println!("{}", figures::render_plan(&rows));
+            write_out(args, "plan.json", &figures::plan_rows_to_json(&rows))?;
+        }
         Some("selftest") => {
             let artifacts = args.get("artifacts").unwrap_or("artifacts");
             let mut exec = GraphExecutor::new(Path::new(artifacts))?;
@@ -546,7 +587,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
         _ => {
             println!(
                 "usage: repro <fig1|fig3|fig4|granularity|ablation|wallclock|intra\
-                 |serve|pool|admission|faults|chaos|health|whale|selftest> [--options]"
+                 |serve|pool|admission|faults|chaos|health|whale|plan|selftest> [--options]"
             );
             println!("see rust/src/main.rs docs for details");
         }
@@ -676,6 +717,51 @@ fn reliability_settings(args: &Args) -> anyhow::Result<ReliabilitySettings> {
     s.backoff_ms = args.get_u64("replay-backoff-ms", s.backoff_ms);
     if let Some(list) = args.get("replay-kernels") {
         s.replay_kernels = list.to_string();
+    }
+    s.validate()?;
+    Ok(s)
+}
+
+/// `[plan]` settings: config file first (`--config PATH`), then the
+/// `--plan SPEC` CLI override (`serial` or
+/// `pair:<static|dynamic|edge-balanced>[:<grain>[:<borrow>]]`). The
+/// merged spec is validated before use: an unrecognized spec is a typed
+/// startup error.
+fn plan_settings(args: &Args) -> anyhow::Result<PlanSettings> {
+    let mut s = match args.get("config") {
+        Some(path) => PlanSettings::from_raw(&RawConfig::load(Path::new(path))?),
+        None => PlanSettings::default(),
+    };
+    if let Some(spec) = args.get("plan") {
+        s.force = spec.to_string();
+    }
+    s.validate()?;
+    Ok(s)
+}
+
+/// `[tuner]` settings: config file first (`--config PATH`), then CLI
+/// overrides (`--tuner` / `--no-tuner` — the flag pair lets the CLI A/B
+/// against a config file that enables the tuner — `--tuner-epsilon A`,
+/// `--tuner-seed S`, `--tuner-min-samples N`; `--calibrate` seeds the
+/// arm statistics from the probe/smtsim offline oracle before serving).
+/// Validated before use: an out-of-range epsilon or a zero exploration
+/// quota on an enabled tuner is a typed startup error.
+fn tuner_settings(args: &Args) -> anyhow::Result<TunerSettings> {
+    let mut s = match args.get("config") {
+        Some(path) => TunerSettings::from_raw(&RawConfig::load(Path::new(path))?),
+        None => TunerSettings::default(),
+    };
+    if args.flag("tuner") {
+        s.enabled = true;
+    }
+    if args.flag("no-tuner") {
+        s.enabled = false;
+    }
+    s.epsilon = args.get_f64("tuner-epsilon", s.epsilon);
+    s.seed = args.get_u64("tuner-seed", s.seed);
+    s.min_samples = args.get_u64("tuner-min-samples", s.min_samples);
+    if args.flag("calibrate") {
+        s.calibrate = true;
     }
     s.validate()?;
     Ok(s)

@@ -121,13 +121,20 @@ pub struct RelicStats {
     /// SPSC queue was full when their task (or their wave's task) was
     /// submitted.
     pub inline_fallback: u64,
+    /// Parallel loops that asked for [`Schedule::EdgeBalanced`] without
+    /// supplying work boundaries ([`crate::relic::Grain::Elems`] call
+    /// sites) and were run under [`Schedule::Dynamic`] instead. The
+    /// substitution used to be silent (ISSUE 9); now every occurrence
+    /// is counted, so a profile showing zero edge-balanced benefit can
+    /// be told apart from one that never ran edge-balanced at all.
+    pub schedule_downgrades: u64,
 }
 
 impl RelicStats {
     /// One-line human-readable report, shared by `repro intra` and the
     /// fork-join benches so every surface prints the same fields.
     pub fn report(&self) -> String {
-        format!(
+        let mut line = format!(
             "{} tasks submitted, {} completed, {} queue-full events, \
              {} helped chunks (main-thread claims), {} inline-fallback chunks",
             self.submitted,
@@ -135,7 +142,15 @@ impl RelicStats {
             self.queue_full_events,
             self.helped_chunks,
             self.inline_fallback
-        )
+        );
+        // Silent at zero so the pre-plan surfaces print unchanged.
+        if self.schedule_downgrades > 0 {
+            line += &format!(
+                ", {} schedule downgrades (edge-balanced without bounds -> dynamic)",
+                self.schedule_downgrades
+            );
+        }
+        line
     }
 }
 
@@ -149,6 +164,7 @@ pub struct Relic {
     queue_full: Cell<u64>,
     helped: Cell<u64>,
     inline_fallback: Cell<u64>,
+    schedule_downgrades: Cell<u64>,
     /// True while a [`scope`](Self::scope) is active (fork-join sections
     /// may not nest — see `relic::scope`).
     in_scope: Cell<bool>,
@@ -198,6 +214,7 @@ impl Relic {
             queue_full: Cell::new(0),
             helped: Cell::new(0),
             inline_fallback: Cell::new(0),
+            schedule_downgrades: Cell::new(0),
             in_scope: Cell::new(false),
             schedule: config.schedule,
             assistant: Some(assistant),
@@ -220,6 +237,13 @@ impl Relic {
     /// SPSC queue was full at submit time (main thread only).
     pub(crate) fn note_inline_fallback(&self, chunks: u64) {
         self.inline_fallback.set(self.inline_fallback.get() + chunks);
+    }
+
+    /// Record one parallel loop that requested [`Schedule::EdgeBalanced`]
+    /// without work boundaries and fell back to [`Schedule::Dynamic`]
+    /// (main thread only; see [`RelicStats::schedule_downgrades`]).
+    pub(crate) fn note_schedule_downgrade(&self) {
+        self.schedule_downgrades.set(self.schedule_downgrades.get() + 1);
     }
 
     /// Submit a raw routine/data task — the untyped core the safe
@@ -416,6 +440,7 @@ impl Relic {
             queue_full_events: self.queue_full.get(),
             helped_chunks: self.helped.get(),
             inline_fallback: self.inline_fallback.get(),
+            schedule_downgrades: self.schedule_downgrades.get(),
         }
     }
 }

@@ -73,6 +73,7 @@ pub mod cross;
 pub mod fault;
 mod framework;
 pub mod parallel;
+pub mod plan;
 pub mod pool;
 pub mod scope;
 mod spsc;
@@ -87,7 +88,8 @@ pub use framework::{
     QueueFull, Relic, RelicConfig, RelicStats, DEFAULT_QUEUE_CAPACITY, MAX_BATCH_BLOCK,
     MIN_BATCH_BLOCK,
 };
-pub use parallel::{Par, Schedule, DEFAULT_GRAIN};
+pub use parallel::{Grain, Par, Schedule, DEFAULT_GRAIN};
+pub use plan::{ExecutionPlan, ParMode};
 pub use pool::{
     BudgetPolicy, IdleHook, PoolConfig, PoolSnapshot, RelicPool, ShardDead, ShardHealth,
     ShardPlacement, ShardStatus, Supervisor, SupervisorConfig, SupervisorVerdict,

@@ -65,6 +65,57 @@ use super::scope::{dyn_chunk_count, MAX_CHUNK_SLOTS};
 /// submit+dispatch cost.
 pub const DEFAULT_GRAIN: usize = 16;
 
+/// How a parallel loop is chunked: a plain minimum chunk size, or a
+/// chunk size plus *work-balanced* boundaries.
+///
+/// Every [`Par`] entry point takes `impl Into<Grain>`, so ordinary call
+/// sites keep passing a bare `usize` and only the kernels that own a
+/// CSR work profile spell out [`Grain::Bounded`] — this replaced the
+/// duplicated `_by` helper variants (ISSUE 9).
+///
+/// ```
+/// use relic_smt::relic::{Grain, Par, Relic, Schedule};
+///
+/// let relic = Relic::new();
+/// let par = Par::Relic(&relic).with_schedule(Schedule::EdgeBalanced);
+/// let n = 500;
+/// // Quadratically skewed boundaries stand in for a CSR bisection:
+/// let bound = |i: usize, k: usize| n * i * i / (k * k);
+/// let balanced = par.reduce(0..n, Grain::Bounded(8, &bound), 0u64, |i| i as u64, |a, b| a + b);
+/// let plain = par.reduce(0..n, 8, 0u64, |i| i as u64, |a, b| a + b);
+/// assert_eq!(balanced, plain, "boundaries change assignment, never the result");
+/// ```
+#[derive(Clone, Copy)]
+pub enum Grain<'b> {
+    /// At least this many indices per chunk; boundaries are even splits
+    /// of the index range. Under [`Schedule::EdgeBalanced`] a loop with
+    /// no work information falls back to [`Schedule::Dynamic`] — the
+    /// substitution is counted in
+    /// [`RelicStats::schedule_downgrades`](crate::relic::RelicStats::schedule_downgrades).
+    Elems(usize),
+    /// A minimum chunk size plus work-balanced boundaries: under
+    /// [`Schedule::EdgeBalanced`], chunk `i` of `k` covers
+    /// `bound(i, k)..bound(i + 1, k)` (monotone; typically a CSR
+    /// bisection like [`crate::graph::CsrGraph::edge_balanced_boundary`]).
+    /// Other schedules use the chunk size and ignore the boundaries.
+    Bounded(usize, &'b dyn Fn(usize, usize) -> usize),
+}
+
+impl From<usize> for Grain<'static> {
+    fn from(elems: usize) -> Self {
+        Grain::Elems(elems)
+    }
+}
+
+impl<'b> Grain<'b> {
+    /// The minimum indices per chunk, whichever variant carries it.
+    pub fn size(&self) -> usize {
+        match self {
+            Grain::Elems(g) | Grain::Bounded(g, _) => *g,
+        }
+    }
+}
+
 /// How a `Par::Relic` loop's chunks are assigned to the SMT pair.
 ///
 /// # Example
@@ -95,8 +146,9 @@ pub enum Schedule {
     Dynamic,
     /// [`Schedule::Dynamic`] claiming over *work-balanced* boundaries —
     /// e.g. equal edge counts bisected from the CSR offsets array.
-    /// Helpers without weight information (the plain, non-`_by` entry
-    /// points) degrade to `Dynamic`.
+    /// Loops without weight information ([`Grain::Elems`] call sites)
+    /// fall back to `Dynamic`; the substitution is recorded in
+    /// [`RelicStats::schedule_downgrades`](crate::relic::RelicStats::schedule_downgrades).
     EdgeBalanced,
 }
 
@@ -226,14 +278,21 @@ impl<'r> Par<'r> {
         }
     }
 
-    /// This `Par` as an *unweighted* helper must run it: edge-balanced
-    /// needs per-chunk work information the plain (non-`_by`) entry
-    /// points don't have, so it degrades to plain self-scheduling.
-    fn degrade_unweighted(&self) -> Par<'r> {
-        match self.schedule() {
-            Schedule::EdgeBalanced => self.with_schedule(Schedule::Dynamic),
-            _ => *self,
+    /// This `Par` as an *unweighted* loop of `len` indices must run it:
+    /// edge-balanced needs per-chunk work information a
+    /// [`Grain::Elems`] call site doesn't have, so it falls back to
+    /// plain self-scheduling. No longer silent (ISSUE 9): whenever the
+    /// substitution takes effect — i.e. the loop actually fans out; a
+    /// tiny range runs serially under every schedule — it is counted in
+    /// [`RelicStats::schedule_downgrades`](crate::relic::RelicStats::schedule_downgrades).
+    fn downgrade_unweighted(&self, len: usize, grain: usize) -> Par<'r> {
+        if self.schedule() != Schedule::EdgeBalanced {
+            return *self;
         }
+        if let Some((relic, _)) = self.plan_for(len, grain) {
+            relic.note_schedule_downgrade();
+        }
+        self.with_schedule(Schedule::Dynamic)
     }
 
     /// The runtime + schedule a loop of `len` indices should use.
@@ -272,7 +331,7 @@ impl<'r> Par<'r> {
 
     /// Shard-level chunk boundaries for a cross loop: edge-balanced
     /// when this plan runs under [`Schedule::EdgeBalanced`] (the same
-    /// monotone-forced bisection the pair-level `_by` splitters use),
+    /// monotone-forced bisection the pair-level bounded splitters use),
     /// even index splits otherwise. Pure in `(range, k, bound)` — the
     /// boundaries never depend on which shards end up serving.
     fn cross_bounds(
@@ -288,9 +347,29 @@ impl<'r> Par<'r> {
         }
     }
 
-    /// Call `f(i)` for every `i` in `range`, chunks of at least `grain`.
-    /// Shared-state effects inside `f` must be thread-safe (atomics).
-    pub fn for_each_index<F: Fn(usize) + Sync>(&self, range: Range<usize>, grain: usize, f: F) {
+    /// Call `f(i)` for every `i` in `range`. The [`Grain`] picks the
+    /// chunking: a bare `usize` for plain chunks of at least that many
+    /// indices, or [`Grain::Bounded`] to add work-balanced boundaries
+    /// for [`Schedule::EdgeBalanced`]. Shared-state effects inside `f`
+    /// must be thread-safe (atomics).
+    pub fn for_each_index<'b, F: Fn(usize) + Sync>(
+        &self,
+        range: Range<usize>,
+        grain: impl Into<Grain<'b>>,
+        f: F,
+    ) {
+        match grain.into() {
+            Grain::Elems(g) => {
+                self.downgrade_unweighted(range.len(), g).for_each_unbounded(range, g, f)
+            }
+            Grain::Bounded(g, bound) => self.for_each_bounded(range, g, bound, f),
+        }
+    }
+
+    /// [`for_each_index`](Self::for_each_index) for [`Grain::Elems`]
+    /// call sites; the caller has already applied the edge-balanced
+    /// downgrade.
+    fn for_each_unbounded<F: Fn(usize) + Sync>(&self, range: Range<usize>, grain: usize, f: F) {
         if let Some((relic, session, k)) = self.cross_plan(range.len(), grain) {
             let mut bounds = [0usize; MAX_CROSS_CHUNKS + 1];
             even_bounds(&range, k, &mut bounds);
@@ -324,19 +403,20 @@ impl<'r> Par<'r> {
         }
     }
 
-    /// [`for_each_index`](Self::for_each_index) with work-balanced chunk
-    /// boundaries: under [`Schedule::EdgeBalanced`], chunk `i` of `k`
-    /// covers `bound(i, k)..bound(i + 1, k)` (monotone; typically a CSR
-    /// bisection like [`crate::graph::CsrGraph::edge_balanced_boundary`]).
-    /// Other schedules ignore `bound`.
-    pub fn for_each_index_by<F, B>(&self, range: Range<usize>, grain: usize, bound: B, f: F)
-    where
+    /// [`for_each_index`](Self::for_each_index) for [`Grain::Bounded`]
+    /// call sites.
+    fn for_each_bounded<F>(
+        &self,
+        range: Range<usize>,
+        grain: usize,
+        bound: &dyn Fn(usize, usize) -> usize,
+        f: F,
+    ) where
         F: Fn(usize) + Sync,
-        B: Fn(usize, usize) -> usize,
     {
         if let Some((relic, session, k)) = self.cross_plan(range.len(), grain) {
             let mut bounds = [0usize; MAX_CROSS_CHUNKS + 1];
-            self.cross_bounds(&range, k, &bound, &mut bounds);
+            self.cross_bounds(&range, k, bound, &mut bounds);
             session.run(relic, &bounds[..=k], &|_, sub: Range<usize>| {
                 for i in sub {
                     f(i);
@@ -361,13 +441,30 @@ impl<'r> Par<'r> {
                     );
                 });
             }
-            _ => self.for_each_index(range, grain, f),
+            _ => self.for_each_unbounded(range, grain, f),
         }
     }
 
     /// `out[i] = f(i)` for every element — the scatter/pull-loop shape.
-    /// `f` may read any shared data except `out` itself.
-    pub fn map_into<T, F>(&self, out: &mut [T], grain: usize, f: F)
+    /// `f` may read any shared data except `out` itself. See
+    /// [`for_each_index`](Self::for_each_index) for the [`Grain`]
+    /// semantics (the boundary function spans `0..out.len()`).
+    pub fn map_into<'b, T, F>(&self, out: &mut [T], grain: impl Into<Grain<'b>>, f: F)
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        match grain.into() {
+            Grain::Elems(g) => {
+                self.downgrade_unweighted(out.len(), g).map_into_unbounded(out, g, f)
+            }
+            Grain::Bounded(g, bound) => self.map_into_bounded(out, g, bound, f),
+        }
+    }
+
+    /// [`map_into`](Self::map_into) for [`Grain::Elems`] call sites;
+    /// the caller has already applied the edge-balanced downgrade.
+    fn map_into_unbounded<T, F>(&self, out: &mut [T], grain: usize, f: F)
     where
         T: Send,
         F: Fn(usize) -> T + Sync,
@@ -411,20 +508,22 @@ impl<'r> Par<'r> {
         }
     }
 
-    /// [`map_into`](Self::map_into) with work-balanced chunk boundaries
-    /// under [`Schedule::EdgeBalanced`] (other schedules ignore
-    /// `bound`). The boundary function spans `0..out.len()`.
-    pub fn map_into_by<T, F, B>(&self, out: &mut [T], grain: usize, bound: B, f: F)
-    where
+    /// [`map_into`](Self::map_into) for [`Grain::Bounded`] call sites.
+    fn map_into_bounded<T, F>(
+        &self,
+        out: &mut [T],
+        grain: usize,
+        bound: &dyn Fn(usize, usize) -> usize,
+        f: F,
+    ) where
         T: Send,
         F: Fn(usize) -> T + Sync,
-        B: Fn(usize, usize) -> usize,
     {
         let n = out.len();
         if let Some((relic, session, k)) = self.cross_plan(n, grain) {
             let base = RawSlice(out.as_mut_ptr());
             let mut bounds = [0usize; MAX_CROSS_CHUNKS + 1];
-            self.cross_bounds(&(0..n), k, &bound, &mut bounds);
+            self.cross_bounds(&(0..n), k, bound, &mut bounds);
             session.run(relic, &bounds[..=k], &|_, sub: Range<usize>| {
                 for i in sub {
                     // SAFETY: disjoint in-bounds shard-level chunks.
@@ -452,7 +551,7 @@ impl<'r> Par<'r> {
                     );
                 });
             }
-            _ => self.map_into(out, grain, f),
+            _ => self.map_into_unbounded(out, grain, f),
         }
     }
 
@@ -460,11 +559,13 @@ impl<'r> Par<'r> {
     /// Each chunk folds serially in index order into a private slot;
     /// slots are combined in ascending chunk order on the main thread
     /// (wave by wave under the self-scheduled modes — still ascending).
-    /// `identity` must be neutral for `combine`.
-    pub fn reduce<T, F, C>(
+    /// `identity` must be neutral for `combine`. See
+    /// [`for_each_index`](Self::for_each_index) for the [`Grain`]
+    /// semantics.
+    pub fn reduce<'b, T, F, C>(
         &self,
         range: Range<usize>,
-        grain: usize,
+        grain: impl Into<Grain<'b>>,
         identity: T,
         f: F,
         combine: C,
@@ -474,19 +575,25 @@ impl<'r> Par<'r> {
         F: Fn(usize) -> T + Sync,
         C: Fn(T, T) -> T + Sync,
     {
-        // The dummy bound below is unreachable: degrade_unweighted
-        // guarantees the EdgeBalanced path is never taken from here.
-        self.degrade_unweighted().reduce_by(range, grain, |_, _| 0, identity, f, combine)
+        match grain.into() {
+            Grain::Elems(g) => {
+                // The dummy bound is unreachable: downgrade_unweighted
+                // guarantees the EdgeBalanced path is never taken here.
+                self.downgrade_unweighted(range.len(), g)
+                    .reduce_bounded(range, g, &|_, _| 0, identity, f, combine)
+            }
+            Grain::Bounded(g, bound) => self.reduce_bounded(range, g, bound, identity, f, combine),
+        }
     }
 
-    /// [`reduce`](Self::reduce) with work-balanced chunk boundaries
-    /// under [`Schedule::EdgeBalanced`] (other schedules ignore
-    /// `bound`).
-    pub fn reduce_by<T, F, C, B>(
+    /// [`reduce`](Self::reduce) for [`Grain::Bounded`] call sites (a
+    /// [`Grain::Elems`] caller passes a dummy bound after applying the
+    /// edge-balanced downgrade).
+    fn reduce_bounded<T, F, C>(
         &self,
         range: Range<usize>,
         grain: usize,
-        bound: B,
+        bound: &dyn Fn(usize, usize) -> usize,
         identity: T,
         f: F,
         combine: C,
@@ -495,11 +602,10 @@ impl<'r> Par<'r> {
         T: Copy + Send + Sync,
         F: Fn(usize) -> T + Sync,
         C: Fn(T, T) -> T + Sync,
-        B: Fn(usize, usize) -> usize,
     {
         if let Some((relic, session, k)) = self.cross_plan(range.len(), grain) {
             let mut bounds = [0usize; MAX_CROSS_CHUNKS + 1];
-            self.cross_bounds(&range, k, &bound, &mut bounds);
+            self.cross_bounds(&range, k, bound, &mut bounds);
             let mut partials = [identity; MAX_CROSS_CHUNKS];
             let slots = RawSlice(partials.as_mut_ptr());
             session.run(relic, &bounds[..=k], &|ci: usize, sub: Range<usize>| {
@@ -581,29 +687,47 @@ impl<'r> Par<'r> {
     /// outputs in ascending chunk order (i.e. range order). The frontier
     /// shape: each chunk gathers into its own buffer, the main thread
     /// concatenates. The returned `Vec` (plus the per-chunk outputs
-    /// themselves) is the only allocation.
-    pub fn chunk_map<T, F>(&self, range: Range<usize>, grain: usize, f: F) -> Vec<T>
+    /// themselves) is the only allocation. See
+    /// [`for_each_index`](Self::for_each_index) for the [`Grain`]
+    /// semantics.
+    pub fn chunk_map<'b, T, F>(
+        &self,
+        range: Range<usize>,
+        grain: impl Into<Grain<'b>>,
+        f: F,
+    ) -> Vec<T>
     where
         T: Send,
         F: Fn(Range<usize>) -> T + Sync,
     {
-        // The dummy bound below is unreachable: degrade_unweighted
-        // guarantees the EdgeBalanced path is never taken from here.
-        self.degrade_unweighted().chunk_map_by(range, grain, |_, _| 0, f)
+        match grain.into() {
+            Grain::Elems(g) => {
+                // The dummy bound is unreachable: downgrade_unweighted
+                // guarantees the EdgeBalanced path is never taken here.
+                self.downgrade_unweighted(range.len(), g)
+                    .chunk_map_bounded(range, g, &|_, _| 0, f)
+            }
+            Grain::Bounded(g, bound) => self.chunk_map_bounded(range, g, bound, f),
+        }
     }
 
-    /// [`chunk_map`](Self::chunk_map) with work-balanced chunk
-    /// boundaries under [`Schedule::EdgeBalanced`] (other schedules
-    /// ignore `bound`).
-    pub fn chunk_map_by<T, F, B>(&self, range: Range<usize>, grain: usize, bound: B, f: F) -> Vec<T>
+    /// [`chunk_map`](Self::chunk_map) for [`Grain::Bounded`] call sites
+    /// (a [`Grain::Elems`] caller passes a dummy bound after applying
+    /// the edge-balanced downgrade).
+    fn chunk_map_bounded<T, F>(
+        &self,
+        range: Range<usize>,
+        grain: usize,
+        bound: &dyn Fn(usize, usize) -> usize,
+        f: F,
+    ) -> Vec<T>
     where
         T: Send,
         F: Fn(Range<usize>) -> T + Sync,
-        B: Fn(usize, usize) -> usize,
     {
         if let Some((relic, session, k)) = self.cross_plan(range.len(), grain) {
             let mut bounds = [0usize; MAX_CROSS_CHUNKS + 1];
-            self.cross_bounds(&range, k, &bound, &mut bounds);
+            self.cross_bounds(&range, k, bound, &mut bounds);
             let mut outputs: [Option<T>; MAX_CROSS_CHUNKS] = std::array::from_fn(|_| None);
             let slots = RawSlice(outputs.as_mut_ptr());
             session.run(relic, &bounds[..=k], &|ci: usize, sub: Range<usize>| {
@@ -656,6 +780,62 @@ impl<'r> Par<'r> {
             });
         }
         all
+    }
+
+    /// Former boundary-carrying variant, kept one PR for out-of-tree
+    /// callers (ISSUE 9).
+    #[deprecated(note = "pass `Grain::Bounded(grain, &bound)` to `for_each_index`")]
+    pub fn for_each_index_by<F, B>(&self, range: Range<usize>, grain: usize, bound: B, f: F)
+    where
+        F: Fn(usize) + Sync,
+        B: Fn(usize, usize) -> usize,
+    {
+        self.for_each_index(range, Grain::Bounded(grain, &bound), f);
+    }
+
+    /// Former boundary-carrying variant, kept one PR for out-of-tree
+    /// callers (ISSUE 9).
+    #[deprecated(note = "pass `Grain::Bounded(grain, &bound)` to `map_into`")]
+    pub fn map_into_by<T, F, B>(&self, out: &mut [T], grain: usize, bound: B, f: F)
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+        B: Fn(usize, usize) -> usize,
+    {
+        self.map_into(out, Grain::Bounded(grain, &bound), f);
+    }
+
+    /// Former boundary-carrying variant, kept one PR for out-of-tree
+    /// callers (ISSUE 9).
+    #[deprecated(note = "pass `Grain::Bounded(grain, &bound)` to `reduce`")]
+    pub fn reduce_by<T, F, C, B>(
+        &self,
+        range: Range<usize>,
+        grain: usize,
+        bound: B,
+        identity: T,
+        f: F,
+        combine: C,
+    ) -> T
+    where
+        T: Copy + Send + Sync,
+        F: Fn(usize) -> T + Sync,
+        C: Fn(T, T) -> T + Sync,
+        B: Fn(usize, usize) -> usize,
+    {
+        self.reduce(range, Grain::Bounded(grain, &bound), identity, f, combine)
+    }
+
+    /// Former boundary-carrying variant, kept one PR for out-of-tree
+    /// callers (ISSUE 9).
+    #[deprecated(note = "pass `Grain::Bounded(grain, &bound)` to `chunk_map`")]
+    pub fn chunk_map_by<T, F, B>(&self, range: Range<usize>, grain: usize, bound: B, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(Range<usize>) -> T + Sync,
+        B: Fn(usize, usize) -> usize,
+    {
+        self.chunk_map(range, Grain::Bounded(grain, &bound), f)
     }
 }
 
@@ -712,7 +892,7 @@ mod tests {
     }
 
     #[test]
-    fn map_into_by_uses_balanced_bounds() {
+    fn map_into_bounded_uses_balanced_bounds() {
         let relic = Relic::new();
         let n = 500;
         let mut want = vec![0u64; n];
@@ -720,7 +900,8 @@ mod tests {
         for par in plans(&relic) {
             let mut got = vec![0u64; n];
             // Quadratically skewed boundaries exercise uneven chunks.
-            par.map_into_by(&mut got, 8, |i, k| n * i * i / (k * k), |i| i as u64 * 3);
+            let bound = |i: usize, k: usize| n * i * i / (k * k);
+            par.map_into(&mut got, Grain::Bounded(8, &bound), |i| i as u64 * 3);
             assert_eq!(got, want, "{}", par.schedule().name());
         }
     }
@@ -738,15 +919,15 @@ mod tests {
     }
 
     #[test]
-    fn reduce_by_balanced_bounds_exact() {
+    fn reduce_bounded_balanced_bounds_exact() {
         let relic = Relic::new();
         let n = 3000usize;
         let want = Par::Serial.reduce(0..n, 16, 0u64, |i| (i * i) as u64, |a, b| a + b);
+        let bound = |i: usize, k: usize| n * i * i / (k * k);
         for par in plans(&relic) {
-            let got = par.reduce_by(
+            let got = par.reduce(
                 0..n,
-                16,
-                |i, k| n * i * i / (k * k),
+                Grain::Bounded(16, &bound),
                 0u64,
                 |i| (i * i) as u64,
                 |a, b| a + b,
@@ -802,18 +983,77 @@ mod tests {
     }
 
     #[test]
-    fn chunk_map_by_preserves_range_order_across_waves() {
+    fn chunk_map_bounded_preserves_range_order_across_waves() {
         let relic = Relic::new();
+        let bound = |i: usize, k: usize| 1000 * i * i / (k * k);
         for par in plans(&relic) {
             // Grain 1 over 1000 indices forces the MAX_DYN_CHUNKS cap
             // and multiple waves under the self-scheduled modes.
-            let chunks =
-                par.chunk_map_by(0..1000, 1, |i, k| 1000 * i * i / (k * k), |sub| {
-                    sub.collect::<Vec<usize>>()
-                });
+            let chunks = par.chunk_map(0..1000, Grain::Bounded(1, &bound), |sub| {
+                sub.collect::<Vec<usize>>()
+            });
             let flat: Vec<usize> = chunks.into_iter().flatten().collect();
             assert_eq!(flat, (0..1000).collect::<Vec<usize>>(), "{}", par.schedule().name());
         }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_by_shims_still_route_through_bounded_paths() {
+        let relic = Relic::new();
+        let n = 400usize;
+        let bound = |i: usize, k: usize| n * i * i / (k * k);
+        let par = Par::Relic(&relic).with_schedule(Schedule::EdgeBalanced);
+
+        let hits = AtomicU64::new(0);
+        par.for_each_index_by(0..n, 8, bound, |i| {
+            hits.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), (n as u64 - 1) * n as u64 / 2);
+
+        let mut out = vec![0u64; n];
+        par.map_into_by(&mut out, 8, bound, |i| i as u64 * 7);
+        assert_eq!(out[n - 1], (n as u64 - 1) * 7);
+
+        let red = par.reduce_by(0..n, 8, bound, 0u64, |i| i as u64, |a, b| a + b);
+        assert_eq!(red, (n as u64 - 1) * n as u64 / 2);
+
+        let chunks = par.chunk_map_by(0..n, 8, bound, |sub| sub.len());
+        assert_eq!(chunks.iter().sum::<usize>(), n);
+    }
+
+    #[test]
+    fn edge_balanced_without_bounds_counts_a_downgrade() {
+        let relic = Relic::new();
+        let par = Par::Relic(&relic).with_schedule(Schedule::EdgeBalanced);
+        assert_eq!(relic.stats().schedule_downgrades, 0);
+
+        // An unweighted loop that actually fans out: one downgrade.
+        let sum = AtomicU64::new(0);
+        par.for_each_index(0..1000, 8, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 999 * 1000 / 2);
+        assert_eq!(relic.stats().schedule_downgrades, 1);
+
+        // A bounded loop carries its own weights: no downgrade.
+        let bound = |i: usize, k: usize| 1000 * i * i / (k * k);
+        par.for_each_index(0..1000, Grain::Bounded(8, &bound), |_| {});
+        assert_eq!(relic.stats().schedule_downgrades, 1);
+
+        // A tiny unweighted range runs serially under every schedule:
+        // the substitution never takes effect, so it is not counted.
+        par.reduce(0..8, 8, 0u64, |i| i as u64, |a, b| a + b);
+        assert_eq!(relic.stats().schedule_downgrades, 1);
+
+        // Other schedules never downgrade.
+        Par::Relic(&relic).with_schedule(Schedule::Dynamic).for_each_index(0..1000, 8, |_| {});
+        assert_eq!(relic.stats().schedule_downgrades, 1);
+
+        // And each fanning-out unweighted loop counts once more.
+        let mut out = vec![0u64; 1000];
+        par.map_into(&mut out, 8, |i| i as u64);
+        assert_eq!(relic.stats().schedule_downgrades, 2);
     }
 
     #[test]

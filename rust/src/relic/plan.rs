@@ -1,0 +1,234 @@
+//! First-class execution plans: *how* a kernel's hot loops should run.
+//!
+//! Before this module the decision was scattered: kernels hardcoded a
+//! grain, callers picked a [`Schedule`] per loop, config toggled a
+//! runtime default, and the cross-shard borrow cap lived in yet another
+//! knob. An [`ExecutionPlan`] folds all of it into one `Copy` value
+//! that flows config → engine → shard → kernel call site unchanged, so
+//! the coordinator's online tuner (`coordinator::tuner`) can swap whole
+//! plans per (kernel, graph-shape) instead of twiddling four knobs.
+//!
+//! A plan changes *assignment only*: which thread runs which chunk, or
+//! whether the request forks at all. Chunk boundaries stay a pure
+//! function of `(range, grain, schedule)`, so every plan yields results
+//! bitwise-equal to serial — the repo's standing determinism contract.
+//!
+//! ```
+//! use relic_smt::relic::{ExecutionPlan, ParMode, Schedule};
+//!
+//! let plan = ExecutionPlan::parse("pair:edge-balanced:32").unwrap();
+//! assert_eq!(plan.par_mode, ParMode::Pair);
+//! assert_eq!(plan.schedule, Schedule::EdgeBalanced);
+//! assert_eq!(plan.grain_or(16), 32);
+//! assert_eq!(ExecutionPlan::parse(&plan.name()), Some(plan), "name round-trips");
+//! // Grain 0 defers to the kernel's own default:
+//! assert_eq!(ExecutionPlan::default().grain_or(16), 16);
+//! assert_eq!(ExecutionPlan::parse("serial"), Some(ExecutionPlan::serial()));
+//! ```
+
+use super::parallel::{Par, Schedule};
+
+/// Whether a kernel's loops run on one thread or fork over the pair.
+///
+/// `Serial` is a real plan, not an absence of one: on sub-grain inputs
+/// the submit/wait handshake costs more than it buys, and the tuner
+/// must be able to *choose* that (the source paper's §IV crossover).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ParMode {
+    /// Plain serial loops on the serving thread.
+    Serial,
+    /// Intra-kernel fork-join over the SMT pair.
+    #[default]
+    Pair,
+}
+
+/// One complete execution decision for a kernel invocation.
+///
+/// The four fields are exactly the knobs that used to be scattered:
+/// serial vs pair ([`ParMode`]), chunk assignment ([`Schedule`]), chunk
+/// size (`grain`, 0 = the kernel's own default), and how many idle
+/// pair-shards a whale invocation may borrow (`max_borrow_hint`, a
+/// *hint* — borrowing still requires a broker and idle lenders).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecutionPlan {
+    /// Serial loops, or fork-join over the SMT pair.
+    pub par_mode: ParMode,
+    /// How parallel chunks are assigned (ignored under `Serial`).
+    pub schedule: Schedule,
+    /// Minimum indices per chunk; 0 defers to the kernel's default.
+    pub grain: usize,
+    /// Cross-shard borrow hint; 0 = stay on this pair. Honored only
+    /// where a lease broker is actually wired (see `relic::cross`).
+    pub max_borrow_hint: usize,
+}
+
+impl Default for ExecutionPlan {
+    /// Pair-parallel, static assignment, kernel-default grain, no
+    /// borrowing — the behavior every kernel had before plans existed.
+    fn default() -> Self {
+        ExecutionPlan {
+            par_mode: ParMode::Pair,
+            schedule: Schedule::Static,
+            grain: 0,
+            max_borrow_hint: 0,
+        }
+    }
+}
+
+impl ExecutionPlan {
+    /// The all-serial plan.
+    pub fn serial() -> ExecutionPlan {
+        ExecutionPlan { par_mode: ParMode::Serial, ..ExecutionPlan::default() }
+    }
+
+    /// A pair-parallel plan under `schedule` with kernel-default grain.
+    pub fn pair(schedule: Schedule) -> ExecutionPlan {
+        ExecutionPlan { schedule, ..ExecutionPlan::default() }
+    }
+
+    /// This plan with an explicit grain (0 = kernel default).
+    pub fn with_grain(self, grain: usize) -> ExecutionPlan {
+        ExecutionPlan { grain, ..self }
+    }
+
+    /// The grain a call site should use: the plan's, unless the plan
+    /// defers (`grain == 0`) to the kernel's own `default`.
+    pub fn grain_or(&self, default: usize) -> usize {
+        if self.grain == 0 {
+            default
+        } else {
+            self.grain
+        }
+    }
+
+    /// Rebind a call site's `Par` under this plan: `Serial` plans force
+    /// the plain loop, `Pair` plans keep the runtime (and any attached
+    /// cross-shard session) but impose the plan's schedule.
+    pub fn apply<'r>(&self, par: &Par<'r>) -> Par<'r> {
+        match self.par_mode {
+            ParMode::Serial => Par::Serial,
+            ParMode::Pair => par.with_schedule(self.schedule),
+        }
+    }
+
+    /// Canonical spelling, round-trips through [`parse`](Self::parse):
+    /// `serial`, `pair:<schedule>`, `pair:<schedule>:<grain>`, or
+    /// `pair:<schedule>:<grain>:<borrow>` — trailing zero fields are
+    /// omitted.
+    pub fn name(&self) -> String {
+        match self.par_mode {
+            ParMode::Serial => "serial".to_string(),
+            ParMode::Pair => {
+                let mut s = format!("pair:{}", self.schedule.name());
+                if self.grain > 0 || self.max_borrow_hint > 0 {
+                    s += &format!(":{}", self.grain);
+                }
+                if self.max_borrow_hint > 0 {
+                    s += &format!(":{}", self.max_borrow_hint);
+                }
+                s
+            }
+        }
+    }
+
+    /// Parse a CLI/config spelling (see [`name`](Self::name)).
+    pub fn parse(s: &str) -> Option<ExecutionPlan> {
+        if s == "serial" {
+            return Some(ExecutionPlan::serial());
+        }
+        let mut parts = s.split(':');
+        if parts.next()? != "pair" {
+            return None;
+        }
+        let schedule = Schedule::parse(parts.next()?)?;
+        let grain = match parts.next() {
+            Some(g) => g.parse().ok()?,
+            None => 0,
+        };
+        let max_borrow_hint = match parts.next() {
+            Some(b) => b.parse().ok()?,
+            None => 0,
+        };
+        if parts.next().is_some() {
+            return None;
+        }
+        Some(ExecutionPlan { par_mode: ParMode::Pair, schedule, grain, max_borrow_hint })
+    }
+
+    /// The tuner's candidate lattice: serial, plus pair-parallel under
+    /// every schedule at three grain tiers — the kernel default (0), a
+    /// fine tier that halves most kernels' chunks, and a coarse tier
+    /// that amortizes the submit/wait handshake on cheap loop bodies.
+    /// [`ExecutionPlan::default`] is always a member, so a tuner that
+    /// never moves is the pre-plan engine.
+    pub fn lattice() -> Vec<ExecutionPlan> {
+        let mut arms = vec![ExecutionPlan::serial()];
+        for schedule in Schedule::all() {
+            for grain in [0usize, 4, 64] {
+                arms.push(ExecutionPlan {
+                    par_mode: ParMode::Pair,
+                    schedule,
+                    grain,
+                    max_borrow_hint: 0,
+                });
+            }
+        }
+        arms
+    }
+}
+
+impl std::fmt::Display for ExecutionPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::relic::Relic;
+
+    #[test]
+    fn lattice_round_trips_and_contains_default() {
+        let arms = ExecutionPlan::lattice();
+        assert_eq!(arms.len(), 1 + 3 * 3, "serial + 3 schedules x 3 grain tiers");
+        assert!(arms.contains(&ExecutionPlan::default()));
+        assert!(arms.contains(&ExecutionPlan::serial()));
+        for arm in &arms {
+            assert_eq!(ExecutionPlan::parse(&arm.name()), Some(*arm), "{arm}");
+        }
+        // No duplicate arms — the tuner keys statistics by index.
+        for (i, a) in arms.iter().enumerate() {
+            assert!(!arms[i + 1..].contains(a), "duplicate arm {a}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_junk() {
+        let junk = ["", "pair", "pair:nope", "serial:static", "pair:static:x", "pair:static:8:1:9"];
+        for bad in junk {
+            assert_eq!(ExecutionPlan::parse(bad), None, "{bad:?}");
+        }
+        let hinted = ExecutionPlan::parse("pair:dynamic:8:2").unwrap();
+        assert_eq!(hinted.max_borrow_hint, 2);
+        assert_eq!(ExecutionPlan::parse(&hinted.name()), Some(hinted));
+    }
+
+    #[test]
+    fn apply_rebinds_par() {
+        let relic = Relic::new();
+        let par = Par::Relic(&relic);
+        assert!(!ExecutionPlan::serial().apply(&par).is_parallel());
+        let dynamic = ExecutionPlan::pair(Schedule::Dynamic).apply(&par);
+        assert!(dynamic.is_parallel());
+        assert_eq!(dynamic.schedule(), Schedule::Dynamic);
+        // Serial call sites stay serial whatever the plan says.
+        assert!(!ExecutionPlan::default().apply(&Par::Serial).is_parallel());
+    }
+
+    #[test]
+    fn grain_tiers_defer_or_override() {
+        assert_eq!(ExecutionPlan::default().with_grain(4).grain_or(16), 4);
+        assert_eq!(ExecutionPlan::default().with_grain(0).grain_or(16), 16);
+    }
+}

@@ -1,0 +1,166 @@
+//! Plan / tuner correctness suite.
+//!
+//! The tentpole invariants of profile-guided adaptive execution:
+//!
+//! 1. **Plans change assignment, never results** — under every plan in
+//!    the candidate lattice, every kernel's checksum through the full
+//!    engine path is bitwise equal to serial, and the same holds for
+//!    every plan the online tuner explores.
+//! 2. **Degeneracy** — a config with no tuner and no forced plan (the
+//!    default) is response-for-response the pre-plan engine: the
+//!    planned dispatch branch is never taken.
+//! 3. **Determinism** — the tuner's exploration sequence is a pure
+//!    function of `(seed, request stream)`; wall-clock latencies feed
+//!    only the greedy ranking, never the exploration order.
+
+use relic_smt::coordinator::{
+    run_native_kernel, Deadline, Engine, EngineConfig, GraphKernel, Request, RequestResult,
+    TunerConfig,
+};
+use relic_smt::graph::kronecker::{kronecker_graph, paper_graph, KroneckerParams, PAPER_SEED};
+use relic_smt::graph::CsrGraph;
+use relic_smt::relic::{ExecutionPlan, PoolConfig};
+
+fn base_config() -> EngineConfig {
+    EngineConfig {
+        pool: PoolConfig { shards: Some(2), pin: false, ..PoolConfig::default() },
+        ..EngineConfig::default()
+    }
+}
+
+/// Two requests per kernel so serial-planned arms always have a pairing
+/// partner in the batch.
+fn mixed_requests(graph: &CsrGraph, first_id: u64) -> Vec<Request> {
+    let kernels = GraphKernel::all();
+    (0..2 * kernels.len())
+        .map(|i| Request {
+            id: first_id + i as u64,
+            kernel: kernels[i % kernels.len()],
+            graph: graph.clone(),
+            source: 0,
+            deadline: Deadline::none(),
+        })
+        .collect()
+}
+
+fn expected_checksums(graph: &CsrGraph) -> Vec<u64> {
+    GraphKernel::all().iter().map(|&k| run_native_kernel(k, graph, 0)).collect()
+}
+
+#[test]
+fn every_lattice_plan_keeps_every_kernel_bitwise_equal_to_serial() {
+    let g = paper_graph();
+    let expected = expected_checksums(&g);
+    for plan in ExecutionPlan::lattice() {
+        let mut cfg = base_config();
+        cfg.plan = Some(plan);
+        let mut e = Engine::new(cfg);
+        let responses = e.process_batch(mixed_requests(&g, 0));
+        assert_eq!(responses.len(), 12, "plan {plan}: lost responses");
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(
+                r.result,
+                RequestResult::Native(expected[i % expected.len()]),
+                "plan {plan}: {:?} checksum diverged from serial",
+                GraphKernel::all()[i % expected.len()]
+            );
+        }
+    }
+}
+
+#[test]
+fn no_tuner_no_plan_config_is_response_for_response_the_default_engine() {
+    // The degeneracy anchor: the default config carries neither a tuner
+    // nor a forced plan, so the planned dispatch branch is never taken
+    // and the response stream (ids, order, results) is the pre-plan
+    // engine's.
+    let default_cfg = EngineConfig::default();
+    assert!(default_cfg.tuner.is_none() && default_cfg.plan.is_none());
+    let g = kronecker_graph(&KroneckerParams::gap(7, 16, PAPER_SEED));
+    let mut explicit_cfg = base_config();
+    explicit_cfg.tuner = None;
+    explicit_cfg.plan = None;
+    let mut explicit = Engine::new(explicit_cfg);
+    let mut default_engine = Engine::new(base_config());
+    assert!(explicit.tuner().is_none() && default_engine.tuner().is_none());
+    let sig = |responses: &[relic_smt::coordinator::Response]| -> Vec<(u64, RequestResult)> {
+        responses.iter().map(|r| (r.id, r.result.clone())).collect()
+    };
+    for round in 0..4u64 {
+        let a = explicit.process_batch(mixed_requests(&g, round * 100));
+        let b = default_engine.process_batch(mixed_requests(&g, round * 100));
+        assert_eq!(sig(&a), sig(&b), "round {round}: response-for-response identical");
+    }
+}
+
+#[test]
+fn tuner_resolves_per_shape_plans_and_every_explored_plan_matches_serial() {
+    // Two graph sizes land in two shape classes (32 vertices -> n<64,
+    // 128 vertices -> n<512), so the tuner keeps independent statistics
+    // per (kernel, shape) cell. Every response along the way — quota
+    // round-robin, exploration, greedy — is gated against serial.
+    let small = paper_graph();
+    let big = kronecker_graph(&KroneckerParams::gap(7, 16, PAPER_SEED));
+    let expected_small = expected_checksums(&small);
+    let expected_big = expected_checksums(&big);
+    let mut cfg = base_config();
+    cfg.tuner = Some(TunerConfig { epsilon: 0.0, min_samples: 1, ..TunerConfig::default() });
+    let mut e = Engine::new(cfg);
+    let rounds = ExecutionPlan::lattice().len() + 4;
+    for round in 0..rounds {
+        for (graph, expected) in [(&small, &expected_small), (&big, &expected_big)] {
+            let responses = e.process_batch(mixed_requests(graph, round as u64 * 1000));
+            assert_eq!(responses.len(), 12);
+            for (i, r) in responses.iter().enumerate() {
+                assert_eq!(
+                    r.result,
+                    RequestResult::Native(expected[i % expected.len()]),
+                    "round {round}: explored plan diverged from serial"
+                );
+            }
+        }
+    }
+    let tuner = e.tuner().expect("tuner installed");
+    let rows = tuner.resolved();
+    assert_eq!(rows.len(), 12, "6 kernels x 2 shape classes have samples: {rows:?}");
+    for k in GraphKernel::all() {
+        let shapes: Vec<usize> =
+            rows.iter().filter(|r| r.kernel == k).map(|r| r.shape).collect();
+        assert_eq!(shapes, [0, 1], "{k:?} tuned per shape class");
+    }
+    // Quota satisfied: every cell saw at least one sample per arm.
+    let arms = ExecutionPlan::lattice().len() as u64;
+    assert!(
+        rows.iter().all(|r| r.samples >= arms),
+        "every arm collected its forced sample: {rows:?}"
+    );
+}
+
+#[test]
+fn fixed_seed_exploration_sequences_are_deterministic() {
+    // epsilon = 1.0: after the forced quota the tuner explores on every
+    // settle tick, so the sequence of selected arms — and therefore the
+    // per-arm sample counts and the finally-resolved plan — depends
+    // only on the seed and the request stream, never on measured
+    // wall-clock latencies.
+    let g = paper_graph();
+    let run = || -> Vec<(GraphKernel, usize, String, u64)> {
+        let mut cfg = base_config();
+        cfg.tuner =
+            Some(TunerConfig { epsilon: 1.0, seed: 42, min_samples: 1, calibrate: false });
+        let mut e = Engine::new(cfg);
+        for round in 0..30u64 {
+            let responses = e.process_batch(mixed_requests(&g, round * 100));
+            assert_eq!(responses.len(), 12);
+        }
+        e.tuner()
+            .expect("tuner installed")
+            .resolved()
+            .iter()
+            .map(|r| (r.kernel, r.shape, r.plan.to_string(), r.samples))
+            .collect()
+    };
+    let first = run();
+    assert!(!first.is_empty());
+    assert_eq!(first, run(), "identical seed + stream => identical selection sequence");
+}

@@ -11,7 +11,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use relic_smt::coordinator::{run_native_kernel, run_native_kernel_par, GraphKernel};
 use relic_smt::graph::kronecker::{kronecker_graph, KroneckerParams};
 use relic_smt::graph::CsrGraph;
-use relic_smt::relic::{Par, Relic, RelicConfig, Schedule};
+use relic_smt::relic::{Grain, Par, Relic, RelicConfig, Schedule};
 
 /// The skewed fixture: R-MAT is power-law-ish by construction, and at
 /// scale 9 the graph is big enough that every kernel loop splits into
@@ -104,13 +104,13 @@ fn edge_balanced_float_reduce_yields_a_single_bit_pattern_across_100_runs() {
     let relic = Relic::new();
     let par = Par::Relic(&relic).with_schedule(Schedule::EdgeBalanced);
     let n = 5000usize;
+    // A skewed (quadratic) boundary stands in for the CSR bisection.
+    let bound = |i: usize, k: usize| n * i * i / (k * k);
     let mut seen = HashSet::new();
     for _ in 0..100 {
-        // A skewed (quadratic) boundary stands in for the CSR bisection.
-        let v = par.reduce_by(
+        let v = par.reduce(
             0..n,
-            7,
-            |i, k| n * i * i / (k * k),
+            Grain::Bounded(7, &bound),
             0.0f64,
             |i| (i as f64).sqrt(),
             |a, b| a + b,
