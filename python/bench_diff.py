@@ -19,6 +19,8 @@ arrays that changed order still diff correctly:
                                   max_borrow)      speedup_vs_serial
     chaos.json          keyed by (seed, round)     recovered_ratio
     plan.json           keyed by (config)          speedup_vs_baseline
+    stream.json         keyed by (scenario,        updates_per_sec
+                                  batch)
 
 Every metric is higher-is-better. A metric that drops by more than
 --threshold percent (default 10) counts as a regression; the script
@@ -54,6 +56,11 @@ SPECS = {
     # baseline row's speedup is pinned at 1.0 by construction, so only
     # the other rows trend.
     "plan.json": (("config",), ("speedup_vs_baseline",)),
+    # One row per edge-stream scenario; accepted updates/sec through the
+    # pinned parse -> analytics -> emit pipeline is the trend series
+    # (the correctness gates inside the sweep are hard, so a row that
+    # exists at all already passed its bitwise oracles).
+    "stream.json": (("scenario", "batch"), ("updates_per_sec",)),
 }
 
 

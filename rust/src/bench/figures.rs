@@ -1616,6 +1616,241 @@ pub fn plan_rows_to_json(rows: &[PlanRow]) -> String {
     crate::json::to_string(&Value::Array(arr))
 }
 
+/// One streaming-pipeline scenario measurement (`repro stream`,
+/// `stream.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamRow {
+    /// Edge-stream generator scenario (`power-law` / `uniform`).
+    pub scenario: String,
+    /// Edges per delta batch.
+    pub batch: usize,
+    /// Batches streamed.
+    pub batches: usize,
+    /// Vertices in the stream graph.
+    pub vertices: usize,
+    /// Edges actually inserted.
+    pub edges_accepted: u64,
+    /// Self-loops and duplicates rejected by the apply path.
+    pub edges_rejected: u64,
+    /// Accepted insertions per second of pipeline wall-clock — the
+    /// headline metric the nightly diff trends.
+    pub updates_per_sec: f64,
+    /// Pipeline wall-clock (ms).
+    pub elapsed_ms: f64,
+    /// Escape-hatch rebuilds performed (each verified bit-identical).
+    pub recomputes: u64,
+    /// Backpressure stalls summed over the three stage links.
+    pub stalls: u64,
+    /// Final incremental-CC checksum (equals the full-recompute value;
+    /// gated before the row is emitted).
+    pub cc_checksum: u64,
+    /// Final delta-PageRank checksum (bitwise-gated against the serial
+    /// kernel on the rebuilt graph).
+    pub pr_checksum: u64,
+    /// Final dynamic-BFS checksum (gated against the BFS oracle).
+    pub bfs_checksum: u64,
+    /// All three oracle gates passed. A false value never reaches the
+    /// output — the sweep returns `Err` first — the field keeps the
+    /// gate visible in the archived JSON.
+    pub oracle_ok: bool,
+    /// The `[stream] off` degeneracy leg: two plain engines answered
+    /// the mixed workload response-for-response identically.
+    pub stream_off_identical: bool,
+}
+
+/// Typed hard gate for the streaming sweep. Where the older sweeps
+/// assert (a panic aborts nonzero but prints no table), a failed stream
+/// gate becomes an `Err` whose message embeds the *rendered failing
+/// row* — `repro stream` propagates it to `main`, which prints it and
+/// exits 1. Unit-tested by `stream_gate_failure_propagates`.
+fn stream_gate(ok: bool, reason: &str, row: &StreamRow) -> crate::Result<()> {
+    if ok {
+        return Ok(());
+    }
+    anyhow::bail!(
+        "stream gate failed: {reason}\nfailing row:\n{}",
+        render_stream(std::slice::from_ref(row))
+    )
+}
+
+/// The `[stream] off` degeneracy leg: `[stream] enabled = false`
+/// materializes no pipeline and leaves [`crate::coordinator::Engine`]
+/// construction untouched, so an engine built alongside a disabled
+/// stream config must answer a mixed-kernel workload response for
+/// response like a plain engine. This builds both and compares
+/// `(id, result)` streams (latency is wall-clock and excluded).
+fn stream_off_degeneracy(template: &crate::coordinator::EngineConfig, shards: usize) -> bool {
+    use crate::coordinator::{Deadline, Engine, GraphKernel, Request, Response};
+    let graph = crate::graph::kronecker::paper_graph();
+    let mut serve = || -> Vec<Response> {
+        let mut config = template.clone();
+        config.pool.shards = Some(shards.max(1));
+        let mut engine = Engine::new(config);
+        let requests: Vec<Request> = GraphKernel::all()
+            .iter()
+            .enumerate()
+            .map(|(i, &kernel)| Request {
+                id: i as u64,
+                kernel,
+                graph: graph.clone(),
+                source: 0,
+                deadline: Deadline::none(),
+            })
+            .collect();
+        engine.process_batch(requests)
+    };
+    let plain = serve();
+    let with_disabled_stream = serve();
+    plain.len() == with_disabled_stream.len()
+        && plain
+            .iter()
+            .zip(with_disabled_stream.iter())
+            .all(|(a, b)| a.id == b.id && a.result == b.result)
+}
+
+/// The streaming sweep: run the parse → analytics → emit pipeline over
+/// both generator scenarios and hard-gate every round — lossless
+/// ordered delivery, clean parses, escape-hatch rebuilds bit-identical,
+/// and the final incremental CC / delta-PageRank / dynamic-BFS state
+/// bitwise equal to full recomputes on the rebuilt graph — plus the
+/// `[stream] off` engine-degeneracy leg. Gate failures return a typed
+/// error with the failing row rendered (see [`stream_gate`]).
+pub fn stream_sweep(
+    template: &crate::coordinator::EngineConfig,
+    cfg: &crate::coordinator::StreamConfig,
+    shards: usize,
+) -> crate::Result<Vec<StreamRow>> {
+    use crate::coordinator::stream::{encode_stream, run_pipeline, EdgeDist};
+    use crate::graph::{cc, oracle, pr};
+    use crate::probe::NoProbe;
+
+    let stream_off_identical = stream_off_degeneracy(template, shards);
+    let mut rows = Vec::new();
+    for dist in EdgeDist::all() {
+        let docs = encode_stream(dist, cfg);
+        let (report, analytics) = run_pipeline(cfg, docs);
+        let rebuilt = analytics.graph().rebuild();
+        let labels = analytics.cc_labels();
+        let cc_ok = labels == oracle::components_min_label(&rebuilt)
+            && labels == cc::shiloach_vishkin(&rebuilt, &mut NoProbe);
+        let kernel = pr::pagerank(&rebuilt, pr::MAX_ITERS, pr::TOLERANCE, &mut NoProbe);
+        let pr_ok = analytics
+            .pr_scores()
+            .iter()
+            .map(|s| s.to_bits())
+            .eq(kernel.iter().map(|s| s.to_bits()));
+        let bfs_ok = analytics.bfs_depths() == oracle::bfs_depths(&rebuilt, cfg.source);
+        let row = StreamRow {
+            scenario: dist.name().into(),
+            batch: cfg.batch,
+            batches: cfg.batches,
+            vertices: 1usize << cfg.scale,
+            edges_accepted: report.edges_accepted,
+            edges_rejected: report.edges_rejected,
+            updates_per_sec: report.updates_per_sec,
+            elapsed_ms: report.elapsed_ms,
+            recomputes: report.recomputes,
+            stalls: report.stalls.iter().sum(),
+            cc_checksum: report.checksums.0,
+            pr_checksum: report.checksums.1,
+            bfs_checksum: report.checksums.2,
+            oracle_ok: cc_ok && pr_ok && bfs_ok,
+            stream_off_identical,
+        };
+        stream_gate(
+            report.emitted.len() == cfg.batches && report.out_of_order == 0,
+            "pipeline dropped or reordered a batch",
+            &row,
+        )?;
+        stream_gate(report.parse_errors == 0, "generated stream must parse cleanly", &row)?;
+        stream_gate(
+            report.recompute_mismatches == 0,
+            "escape-hatch rebuild diverged from the incremental state",
+            &row,
+        )?;
+        stream_gate(cc_ok, "incremental CC != full-recompute oracle", &row)?;
+        stream_gate(pr_ok, "delta-PageRank != serial kernel (bitwise)", &row)?;
+        stream_gate(bfs_ok, "dynamic BFS != full-recompute oracle", &row)?;
+        stream_gate(
+            stream_off_identical,
+            "[stream] off engines diverged response-for-response",
+            &row,
+        )?;
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+/// Render the streaming-sweep table with its gate legend.
+pub fn render_stream(rows: &[StreamRow]) -> String {
+    let mut out = format!(
+        "{:<12}{:>8}{:>9}{:>10}{:>10}{:>10}{:>13}{:>8}{:>8}\n",
+        "scenario",
+        "batch",
+        "batches",
+        "vertices",
+        "accepted",
+        "rejected",
+        "updates/s",
+        "recomp",
+        "stalls"
+    );
+    for r in rows {
+        out += &format!(
+            "{:<12}{:>8}{:>9}{:>10}{:>10}{:>10}{:>13.0}{:>8}{:>8}\n",
+            r.scenario,
+            r.batch,
+            r.batches,
+            r.vertices,
+            r.edges_accepted,
+            r.edges_rejected,
+            r.updates_per_sec,
+            r.recomputes,
+            r.stalls
+        );
+    }
+    out += "(gates passed: lossless ordered pipeline; incremental CC / delta-PR / \
+            dynamic BFS bitwise equal to full recomputes on the rebuilt graph; \
+            escape-hatch rebuilds matched; [stream] off identical to the plain \
+            engine response-for-response)\n";
+    out
+}
+
+/// Serialize streaming rows to JSON for the nightly trend diff
+/// (`python/bench_diff.py` keys on `(scenario, batch)` and trends
+/// `updates_per_sec`). Checksums travel as strings: they are u64 bit
+/// reductions and must survive the f64-backed JSON number type
+/// losslessly.
+pub fn stream_rows_to_json(rows: &[StreamRow]) -> String {
+    use crate::json::Value;
+    let arr = rows
+        .iter()
+        .map(|r| {
+            Value::Object(vec![
+                ("scenario".into(), Value::String(r.scenario.clone())),
+                ("batch".into(), Value::Number(r.batch as f64)),
+                ("batches".into(), Value::Number(r.batches as f64)),
+                ("vertices".into(), Value::Number(r.vertices as f64)),
+                ("edges_accepted".into(), Value::Number(r.edges_accepted as f64)),
+                ("edges_rejected".into(), Value::Number(r.edges_rejected as f64)),
+                ("updates_per_sec".into(), Value::Number(r.updates_per_sec)),
+                ("elapsed_ms".into(), Value::Number(r.elapsed_ms)),
+                ("recomputes".into(), Value::Number(r.recomputes as f64)),
+                ("stalls".into(), Value::Number(r.stalls as f64)),
+                ("cc_checksum".into(), Value::String(r.cc_checksum.to_string())),
+                ("pr_checksum".into(), Value::String(r.pr_checksum.to_string())),
+                ("bfs_checksum".into(), Value::String(r.bfs_checksum.to_string())),
+                ("oracle_ok".into(), Value::Bool(r.oracle_ok)),
+                (
+                    "stream_off_identical".into(),
+                    Value::Bool(r.stream_off_identical),
+                ),
+            ])
+        })
+        .collect();
+    crate::json::to_string(&Value::Array(arr))
+}
+
 /// Render the intra-kernel comparison table.
 pub fn render_intra(rows: &[IntraRow]) -> String {
     let mut out = format!(
@@ -2051,5 +2286,73 @@ mod tests {
         assert!(s.contains("vs baseline") && s.contains("resolved (tuner):"));
         let json = plan_rows_to_json(&rows);
         assert!(json.contains("\"speedup_vs_baseline\"") && json.contains("\"resolved\""));
+    }
+
+    #[test]
+    fn stream_sweep_passes_gates_and_serializes() {
+        // Tiny stream: plumbing + every hard gate (oracle equality,
+        // lossless pipeline, escape-hatch match, engine degeneracy),
+        // not timing quality. Unpinned for affinity-restricted CI.
+        let template = crate::coordinator::EngineConfig {
+            pool: crate::relic::PoolConfig { pin: false, ..Default::default() },
+            ..Default::default()
+        };
+        let cfg = crate::coordinator::StreamConfig {
+            enabled: true,
+            scale: 6,
+            batch: 32,
+            batches: 8,
+            queue_capacity: 4,
+            recompute_interval: 4,
+            source: 0,
+            seed: 5,
+            pin: false,
+        };
+        let rows = stream_sweep(&template, &cfg, 1).expect("all stream gates hold");
+        assert_eq!(rows.len(), 2, "one row per scenario");
+        let names: Vec<&str> = rows.iter().map(|r| r.scenario.as_str()).collect();
+        assert_eq!(names, ["power-law", "uniform"]);
+        for r in &rows {
+            assert!(r.oracle_ok && r.stream_off_identical);
+            assert_eq!(r.recomputes, 2, "8 batches / interval 4");
+            assert_eq!(r.vertices, 64);
+            assert!(r.edges_accepted > 0);
+        }
+        let s = render_stream(&rows);
+        assert!(s.contains("power-law") && s.contains("uniform"));
+        assert!(s.contains("gates passed"));
+        let json = stream_rows_to_json(&rows);
+        assert!(json.contains("\"scenario\"") && json.contains("\"updates_per_sec\""));
+        assert!(json.contains("\"cc_checksum\""));
+    }
+
+    #[test]
+    fn stream_gate_failure_propagates_with_the_failing_row() {
+        // The satellite-4 contract: a failed gate surfaces as a typed
+        // error carrying the rendered failing row, which `repro stream`
+        // propagates to main's nonzero-exit path.
+        let row = StreamRow {
+            scenario: "uniform".into(),
+            batch: 32,
+            batches: 8,
+            vertices: 64,
+            edges_accepted: 10,
+            edges_rejected: 2,
+            updates_per_sec: 1.0,
+            elapsed_ms: 1.0,
+            recomputes: 1,
+            stalls: 0,
+            cc_checksum: 1,
+            pr_checksum: 2,
+            bfs_checksum: 3,
+            oracle_ok: false,
+            stream_off_identical: true,
+        };
+        assert!(stream_gate(true, "unused", &row).is_ok());
+        let err = stream_gate(false, "synthetic failure", &row).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("stream gate failed: synthetic failure"), "{msg}");
+        assert!(msg.contains("failing row"), "{msg}");
+        assert!(msg.contains("uniform"), "row rendered into the error: {msg}");
     }
 }

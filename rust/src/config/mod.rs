@@ -774,6 +774,144 @@ pub fn check_plan_conflict(
     Ok(())
 }
 
+/// Streaming-pipeline configuration (section `[stream]`; defaults
+/// mirror [`crate::coordinator::StreamConfig`]). Everything defaults to
+/// *off*: with `enabled = false` the serving path never constructs a
+/// pipeline and the engine is response-for-response identical to the
+/// non-streaming engine (the degeneracy ladder's newest rung).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StreamSettings {
+    /// Master switch for the parse → analytics → emit pipeline.
+    pub enabled: bool,
+    /// Stream graph size: `1 << scale` vertices.
+    pub scale: u32,
+    /// Edges per delta batch.
+    pub batch: usize,
+    /// Batches per stream run.
+    pub batches: usize,
+    /// SPSC stage-link capacity (rounded up to a power of two).
+    pub queue_capacity: usize,
+    /// Rebuild-from-scratch cadence in batches (0 = never); the
+    /// bit-identical escape hatch.
+    pub recompute_interval: usize,
+    /// BFS source vertex (must be `< 1 << scale`).
+    pub source: u32,
+    /// Edge-stream generator seed.
+    pub seed: u64,
+    /// Pin the stages to an SMT sibling pair when one is available.
+    pub pin: bool,
+}
+
+impl Default for StreamSettings {
+    fn default() -> Self {
+        let d = crate::coordinator::StreamConfig::default();
+        StreamSettings {
+            enabled: d.enabled,
+            scale: d.scale,
+            batch: d.batch,
+            batches: d.batches,
+            queue_capacity: d.queue_capacity,
+            recompute_interval: d.recompute_interval,
+            source: d.source,
+            seed: d.seed,
+            pin: d.pin,
+        }
+    }
+}
+
+impl StreamSettings {
+    /// Overlay values from a raw config (section `[stream]`).
+    pub fn from_raw(raw: &RawConfig) -> Self {
+        let d = Self::default();
+        StreamSettings {
+            enabled: raw.get_bool("stream.enabled").unwrap_or(d.enabled),
+            scale: raw.get_int("stream.scale").map(|v| v.max(0) as u32).unwrap_or(d.scale),
+            batch: raw.get_int("stream.batch").map(|v| v.max(0) as usize).unwrap_or(d.batch),
+            batches: raw
+                .get_int("stream.batches")
+                .map(|v| v.max(0) as usize)
+                .unwrap_or(d.batches),
+            queue_capacity: raw
+                .get_int("stream.queue_capacity")
+                .map(|v| v.max(0) as usize)
+                .unwrap_or(d.queue_capacity),
+            recompute_interval: raw
+                .get_int("stream.recompute_interval")
+                .map(|v| v.max(0) as usize)
+                .unwrap_or(d.recompute_interval),
+            source: raw.get_int("stream.source").map(|v| v.max(0) as u32).unwrap_or(d.source),
+            seed: raw.get_int("stream.seed").map(|v| v.max(0) as u64).unwrap_or(d.seed),
+            pin: raw.get_bool("stream.pin").unwrap_or(d.pin),
+        }
+    }
+
+    /// Reject a stream setup that cannot run: a degenerate graph or
+    /// batch shape, a source outside the vertex range, or a scale whose
+    /// memoized PageRank trajectory (`MAX_ITERS × 2^scale` doubles)
+    /// would not fit a sane memory budget.
+    pub fn validate(&self) -> Result<(), ValidationError> {
+        if self.scale == 0 || self.scale > 20 {
+            return Err(ValidationError {
+                key: "stream.scale".into(),
+                reason: format!(
+                    "scale must be in [1, 20] (2^scale vertices; the delta-PageRank \
+                     trajectory memoizes 20 score vectors), got {}",
+                    self.scale
+                ),
+            });
+        }
+        if self.batch == 0 {
+            return Err(ValidationError {
+                key: "stream.batch".into(),
+                reason: "delta batches need at least one edge".into(),
+            });
+        }
+        if self.batches == 0 {
+            return Err(ValidationError {
+                key: "stream.batches".into(),
+                reason: "a stream run needs at least one batch".into(),
+            });
+        }
+        if self.queue_capacity < 2 {
+            return Err(ValidationError {
+                key: "stream.queue_capacity".into(),
+                reason: format!(
+                    "stage links need capacity >= 2 (got {}); a 1-slot ring cannot \
+                     overlap producer and consumer",
+                    self.queue_capacity
+                ),
+            });
+        }
+        if u64::from(self.source) >= (1u64 << self.scale) {
+            return Err(ValidationError {
+                key: "stream.source".into(),
+                reason: format!(
+                    "BFS source {} is outside the vertex range 0..{}",
+                    self.source,
+                    1u64 << self.scale
+                ),
+            });
+        }
+        Ok(())
+    }
+
+    /// Materialize as the pipeline's runtime config. Call
+    /// [`validate`](Self::validate) first.
+    pub fn to_config(&self) -> crate::coordinator::StreamConfig {
+        crate::coordinator::StreamConfig {
+            enabled: self.enabled,
+            scale: self.scale,
+            batch: self.batch,
+            batches: self.batches,
+            queue_capacity: self.queue_capacity,
+            recompute_interval: self.recompute_interval,
+            source: self.source,
+            seed: self.seed,
+            pin: self.pin,
+        }
+    }
+}
+
 /// Deterministic fault-injection configuration (section `[fault]`;
 /// everything defaults to *off* and [`FaultSettings::plan`] returns
 /// `None` then, so the compiled-in hooks cost one `Option` branch).
@@ -1286,6 +1424,54 @@ mod tests {
         assert_eq!(bad.validate().unwrap_err().key, "tuner.epsilon");
         let bad = TunerSettings { enabled: true, min_samples: 0, ..TunerSettings::default() };
         assert_eq!(bad.validate().unwrap_err().key, "tuner.min_samples");
+    }
+
+    #[test]
+    fn stream_settings_parse_validate_and_materialize() {
+        // Off by default, and the defaults validate.
+        let d = StreamSettings::default();
+        assert!(!d.enabled, "streaming is opt-in");
+        assert!(d.validate().is_ok());
+        assert_eq!(d.to_config(), crate::coordinator::StreamConfig::default());
+        // Enabled with overrides materializes them.
+        let raw = RawConfig::parse(
+            "[stream]\nenabled = true\nscale = 8\nbatch = 64\nbatches = 16\n\
+             queue_capacity = 4\nrecompute_interval = 2\nsource = 5\nseed = 9\npin = false\n",
+        )
+        .unwrap();
+        let s = StreamSettings::from_raw(&raw);
+        assert!(s.validate().is_ok());
+        let c = s.to_config();
+        assert!(c.enabled);
+        assert_eq!(c.scale, 8);
+        assert_eq!(c.batch, 64);
+        assert_eq!(c.batches, 16);
+        assert_eq!(c.queue_capacity, 4);
+        assert_eq!(c.recompute_interval, 2);
+        assert_eq!(c.source, 5);
+        assert_eq!(c.seed, 9);
+        assert!(!c.pin);
+        // Partial overlay keeps defaults.
+        let raw = RawConfig::parse("[stream]\nbatch = 7\n").unwrap();
+        let s = StreamSettings::from_raw(&raw);
+        assert_eq!(s.batch, 7);
+        assert_eq!(s.scale, StreamSettings::default().scale);
+        // Degenerate shapes are typed errors, not clamps.
+        let bad = StreamSettings { scale: 0, ..StreamSettings::default() };
+        assert_eq!(bad.validate().unwrap_err().key, "stream.scale");
+        let bad = StreamSettings { scale: 21, ..StreamSettings::default() };
+        assert_eq!(bad.validate().unwrap_err().key, "stream.scale");
+        let bad = StreamSettings { batch: 0, ..StreamSettings::default() };
+        assert_eq!(bad.validate().unwrap_err().key, "stream.batch");
+        let bad = StreamSettings { batches: 0, ..StreamSettings::default() };
+        assert_eq!(bad.validate().unwrap_err().key, "stream.batches");
+        let bad = StreamSettings { queue_capacity: 1, ..StreamSettings::default() };
+        assert_eq!(bad.validate().unwrap_err().key, "stream.queue_capacity");
+        let bad =
+            StreamSettings { scale: 4, source: 16, ..StreamSettings::default() };
+        let err = bad.validate().unwrap_err();
+        assert_eq!(err.key, "stream.source");
+        assert!(err.to_string().contains("0..16"));
     }
 
     #[test]

@@ -292,6 +292,10 @@ pub struct Engine {
     /// A `drain_and_exit` verdict fired: finish flushing, then the
     /// process should exit nonzero (see [`Engine::exit_requested`]).
     exit_requested: bool,
+    /// Counters from the most recent streaming-pipeline run attached
+    /// via [`Engine::set_stream`] (`None` = `[stream]` off: the report
+    /// is byte-identical to the non-streaming engine's).
+    stream: Option<super::stream::StreamSnapshot>,
 }
 
 impl Engine {
@@ -444,7 +448,16 @@ impl Engine {
             forced_plan: config.plan,
             rebuilt: false,
             exit_requested: false,
+            stream: None,
         }
+    }
+
+    /// Attach (or clear) the counters of a streaming-pipeline run so
+    /// [`Engine::report`] surfaces them. The engine itself never runs
+    /// the pipeline — `serve --stream` drives
+    /// [`super::stream::run_pipeline`] and hands the snapshot over.
+    pub fn set_stream(&mut self, snapshot: Option<super::stream::StreamSnapshot>) {
+        self.stream = snapshot;
     }
 
     /// The engine's online tuner, when `[tuner] enabled = true` built
@@ -1271,6 +1284,20 @@ impl Engine {
         if let Some(plan) = self.forced_plan {
             out += &format!("plan: forced {plan}\n");
         }
+        if let Some(s) = &self.stream {
+            out += &format!(
+                "stream: {} batches, {} updates ({:.0}/s), {} parse errors, {} recomputes, \
+                 stalls in/parse/analytics {}/{}/{}\n",
+                s.batches,
+                s.updates,
+                s.updates_per_sec,
+                s.parse_errors,
+                s.recomputes,
+                s.stalls[0],
+                s.stalls[1],
+                s.stalls[2],
+            );
+        }
         if let Some(tuner) = &self.tuner {
             out += &format!("tuner: on ({})\n", tuner.summary());
             for row in tuner.resolved() {
@@ -1967,5 +1994,30 @@ mod tests {
             RequestResult::Native(run_native_kernel(GraphKernel::Tc, &paper_graph(), 0))
         );
         assert_eq!(e.aggregated_metrics().fault.degraded_requests.get(), 1);
+    }
+
+    #[test]
+    fn stream_counters_only_appear_when_attached() {
+        // Degeneracy: with no snapshot attached the report is the PR 9
+        // report, byte for byte; attaching adds exactly one line.
+        let mut e = engine(1);
+        let before = e.report();
+        assert!(!before.contains("stream:"), "{before}");
+        e.set_stream(Some(super::super::stream::StreamSnapshot {
+            batches: 12,
+            updates: 3400,
+            updates_per_sec: 1.7e6,
+            parse_errors: 1,
+            recomputes: 3,
+            stalls: [0, 4, 2],
+        }));
+        let after = e.report();
+        assert!(
+            after.contains("stream: 12 batches, 3400 updates (1700000/s), 1 parse errors"),
+            "{after}"
+        );
+        assert!(after.contains("stalls in/parse/analytics 0/4/2"), "{after}");
+        e.set_stream(None);
+        assert_eq!(e.report(), before, "clearing restores the exact report");
     }
 }

@@ -31,6 +31,7 @@ pub mod engine;
 pub mod reliability;
 pub mod router;
 pub mod service;
+pub mod stream;
 pub mod tuner;
 
 pub use admission::{
@@ -40,6 +41,7 @@ pub use engine::{Engine, EngineConfig};
 pub use reliability::{HealthReport, ReliabilityConfig, ReplayBook, ShardHealthRow};
 pub use router::{pick_shard, pick_shard_leased, Backend, RouteError, Router, RouterConfig};
 pub use service::{Coordinator, Request, RequestResult, Response, ServiceMetrics};
+pub use stream::{EdgeDist, StreamConfig, StreamReport, StreamSnapshot};
 pub use tuner::{ResolvedPlan, Tuner, TunerConfig};
 
 use crate::graph::CsrGraph;

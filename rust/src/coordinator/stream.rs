@@ -1,0 +1,700 @@
+//! Streaming pipeline: parse → analytics → emit over SPSC stage links.
+//!
+//! The paper's argument for near-zero-overhead tasking is strongest when
+//! each unit of work is microseconds — exactly the regime of streaming
+//! edge updates. This module composes three pipeline stages, linked by
+//! the same lock-free [`SpscQueue`] the Relic runtime uses for its own
+//! task handoff (FastFlow-style stage composition, PAPERS.md):
+//!
+//! ```text
+//!   driver ──q₀──▶ parse ──q₁──▶ analytics ──q₂──▶ emit
+//!                 (JSON →        (DeltaCsr +        (records →
+//!                  edge batch)    incremental        JSON lines,
+//!                                 kernels)           order check)
+//! ```
+//!
+//! JSON ingest and kernel compute overlap instead of serializing: while
+//! the analytics stage folds batch *k* into the incremental kernels
+//! ([`IncrementalAnalytics`]), the parse stage is already decoding batch
+//! *k + 1*. With pinning enabled and an SMT sibling pair available, the
+//! light stages (parse, emit) share one sibling and the analytics stage
+//! owns the other — the same placement philosophy as the pool's
+//! pair-shards. Inside the analytics stage, delta batches are classified
+//! [`Par`]-parallel before the serial authoritative apply, so the
+//! fine-grained tasking story extends to the update path itself.
+//!
+//! Every queue handoff is bounded: a full queue makes the producer spin
+//! (counted in [`StreamReport::stalls`]) rather than drop — the
+//! pipeline is lossless and order-preserving by construction, and the
+//! emit stage *verifies* both (no-drop, no-reorder) rather than
+//! assuming them.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::graph::IncrementalAnalytics;
+use crate::json::{self, Value};
+use crate::relic::affinity::{pin_to_cpu, smt_sibling_pair};
+use crate::relic::{Par, Relic, SpscQueue};
+use crate::testutil::Rng;
+
+/// Typed view of the `[stream]` config section (defaults here, lenient
+/// overlay + validation in [`crate::config::StreamSettings`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamConfig {
+    /// Master switch: when false, the serving path is byte-identical to
+    /// the non-streaming engine (degeneracy ladder).
+    pub enabled: bool,
+    /// Vertices = `1 << scale`.
+    pub scale: u32,
+    /// Edges per delta batch.
+    pub batch: usize,
+    /// Batches per stream run.
+    pub batches: usize,
+    /// Capacity of each SPSC stage link (rounded up to a power of two).
+    pub queue_capacity: usize,
+    /// Rebuild-from-scratch every N batches (0 = never); the escape
+    /// hatch that must reproduce the incremental state bit for bit.
+    pub recompute_interval: usize,
+    /// BFS source vertex.
+    pub source: u32,
+    /// Seed for the edge-stream generators.
+    pub seed: u64,
+    /// Pin stages to an SMT sibling pair when the topology offers one.
+    pub pin: bool,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            enabled: false,
+            scale: 10,
+            batch: 256,
+            batches: 32,
+            queue_capacity: 8,
+            recompute_interval: 8,
+            source: 0,
+            seed: 1,
+            pin: true,
+        }
+    }
+}
+
+/// Edge-stream shape for the seeded generators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeDist {
+    /// R-MAT quadrant sampling (GAP's Kronecker parameters): skewed
+    /// degree distribution, many duplicates — the hard case for the
+    /// classify/dedup path.
+    PowerLaw,
+    /// Independent uniform endpoints.
+    Uniform,
+}
+
+impl EdgeDist {
+    /// Stable name used in config, CLI, and artifact rows.
+    pub fn name(self) -> &'static str {
+        match self {
+            EdgeDist::PowerLaw => "power-law",
+            EdgeDist::Uniform => "uniform",
+        }
+    }
+
+    /// Inverse of [`EdgeDist::name`].
+    pub fn parse(s: &str) -> Option<EdgeDist> {
+        match s {
+            "power-law" => Some(EdgeDist::PowerLaw),
+            "uniform" => Some(EdgeDist::Uniform),
+            _ => None,
+        }
+    }
+
+    /// Both scenarios, sweep order.
+    pub fn all() -> [EdgeDist; 2] {
+        [EdgeDist::PowerLaw, EdgeDist::Uniform]
+    }
+}
+
+/// R-MAT quadrant probabilities (GAP: A=0.57, B=0.19, C=0.19, D=0.05).
+const RMAT_A: f64 = 0.57;
+const RMAT_B: f64 = 0.19;
+const RMAT_C: f64 = 0.19;
+
+/// Generate `batches` delta batches of `batch` edges each over
+/// `1 << scale` vertices. Deterministic in `seed`; self-loops and
+/// duplicates are left in on purpose (the apply path must reject them).
+pub fn generate_batches(
+    dist: EdgeDist,
+    scale: u32,
+    batches: usize,
+    batch: usize,
+    seed: u64,
+) -> Vec<Vec<(u32, u32)>> {
+    let n = 1u64 << scale;
+    let mut rng = Rng::new(seed ^ 0x5752_4D41_5453_7472);
+    (0..batches)
+        .map(|_| {
+            (0..batch)
+                .map(|_| match dist {
+                    EdgeDist::Uniform => (rng.below(n) as u32, rng.below(n) as u32),
+                    EdgeDist::PowerLaw => {
+                        let (mut u, mut v) = (0u32, 0u32);
+                        for bit in 0..scale {
+                            let r = rng.f64();
+                            if r < RMAT_A {
+                                // top-left quadrant: neither bit set
+                            } else if r < RMAT_A + RMAT_B {
+                                v |= 1 << bit;
+                            } else if r < RMAT_A + RMAT_B + RMAT_C {
+                                u |= 1 << bit;
+                            } else {
+                                u |= 1 << bit;
+                                v |= 1 << bit;
+                            }
+                        }
+                        (u, v)
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Encode one delta batch in the stream wire format:
+/// `{"seq": N, "edges": [[u, v], ...]}`.
+pub fn encode_batch(seq: u64, edges: &[(u32, u32)]) -> Vec<u8> {
+    let edges = edges
+        .iter()
+        .map(|&(u, v)| {
+            Value::Array(vec![Value::Number(u as f64), Value::Number(v as f64)])
+        })
+        .collect();
+    let doc = Value::Object(vec![
+        ("seq".into(), Value::Number(seq as f64)),
+        ("edges".into(), Value::Array(edges)),
+    ]);
+    json::to_string(&doc).into_bytes()
+}
+
+/// Decode a parsed wire document back into `(seq, edges)`. Strict:
+/// missing fields, wrong shapes, fractional or out-of-range endpoints
+/// are all rejected (the parse stage counts these, it never applies
+/// them).
+pub fn decode_batch(doc: &Value) -> Result<(u64, Vec<(u32, u32)>), &'static str> {
+    let seq = doc.get("seq").and_then(Value::as_u64).ok_or("missing or invalid seq")?;
+    let arr = doc.get("edges").and_then(Value::as_array).ok_or("missing edges array")?;
+    let mut edges = Vec::with_capacity(arr.len());
+    for e in arr {
+        let pair = e.as_array().ok_or("edge is not a 2-array")?;
+        if pair.len() != 2 {
+            return Err("edge is not a 2-array");
+        }
+        let u = pair[0].as_u64().ok_or("edge endpoint is not an integer")?;
+        let v = pair[1].as_u64().ok_or("edge endpoint is not an integer")?;
+        if u > u32::MAX as u64 || v > u32::MAX as u64 {
+            return Err("edge endpoint exceeds u32");
+        }
+        edges.push((u as u32, v as u32));
+    }
+    Ok((seq, edges))
+}
+
+/// Generate and encode a whole stream for one scenario (the sweep's and
+/// the tests' input builder).
+pub fn encode_stream(dist: EdgeDist, cfg: &StreamConfig) -> Vec<Vec<u8>> {
+    generate_batches(dist, cfg.scale, cfg.batches, cfg.batch, cfg.seed)
+        .iter()
+        .enumerate()
+        .map(|(i, edges)| encode_batch(i as u64, edges))
+        .collect()
+}
+
+/// A raw wire document entering the pipeline.
+struct Doc {
+    index: u64,
+    bytes: Vec<u8>,
+}
+
+/// Parse-stage output: the decoded batch, or the reason it was rejected.
+struct Parsed {
+    index: u64,
+    payload: Result<(u64, Vec<(u32, u32)>), &'static str>,
+}
+
+/// Analytics-stage output: one emit record per input document.
+struct Record {
+    index: u64,
+    seq: u64,
+    accepted: usize,
+    rejected: usize,
+    recomputed: bool,
+    recompute_matched: bool,
+    checksums: (u64, u64, u64),
+    error: Option<&'static str>,
+}
+
+/// Stage message: an item, or the upstream's end-of-stream marker.
+enum Msg<T> {
+    Item(T),
+    Done,
+}
+
+/// Push with bounded-queue backpressure: spin-retry until the consumer
+/// frees a slot, counting each failed attempt as a stall.
+fn push_blocking<T>(q: &SpscQueue<Msg<T>>, mut msg: Msg<T>, stalls: &mut u64) {
+    loop {
+        match q.push(msg) {
+            Ok(()) => return,
+            Err(back) => {
+                msg = back;
+                *stalls += 1;
+                std::thread::yield_now();
+            }
+        }
+    }
+}
+
+/// Pop, yielding while the queue is empty.
+fn pop_blocking<T>(q: &SpscQueue<Msg<T>>) -> Msg<T> {
+    loop {
+        match q.pop() {
+            Some(msg) => return msg,
+            None => std::thread::yield_now(),
+        }
+    }
+}
+
+/// Aggregate result of one pipeline run.
+#[derive(Debug, Clone)]
+pub struct StreamReport {
+    /// Documents fed into the pipeline.
+    pub batches_in: u64,
+    /// Documents rejected at the parse stage (malformed JSON or wire
+    /// shape); they still flow through as error records — never dropped.
+    pub parse_errors: u64,
+    /// Edges offered across all well-formed batches.
+    pub edges_offered: u64,
+    /// Edges actually inserted.
+    pub edges_accepted: u64,
+    /// Self-loops, duplicates, out-of-range endpoints.
+    pub edges_rejected: u64,
+    /// Escape-hatch rebuilds performed.
+    pub recomputes: u64,
+    /// Escape-hatch rebuilds that did NOT bitwise-match the incremental
+    /// state (hard-gated to 0 by `repro stream` and the tests).
+    pub recompute_mismatches: u64,
+    /// Emit-stage order violations (hard-gated to 0).
+    pub out_of_order: u64,
+    /// Backpressure stall counts per stage link: `[driver→parse,
+    /// parse→analytics, analytics→emit]`.
+    pub stalls: [u64; 3],
+    /// Wall-clock for the whole run.
+    pub elapsed_ms: f64,
+    /// Accepted edge insertions per second of wall-clock.
+    pub updates_per_sec: f64,
+    /// Whether the stages were actually pinned to an SMT sibling pair.
+    pub pinned: bool,
+    /// Final `(cc, pr, bfs)` checksums of the incremental state.
+    pub checksums: (u64, u64, u64),
+    /// One JSON line per input document, in input order.
+    pub emitted: Vec<String>,
+}
+
+impl StreamReport {
+    /// Compact counter view for [`crate::coordinator::Engine::report`].
+    pub fn snapshot(&self) -> StreamSnapshot {
+        StreamSnapshot {
+            batches: self.batches_in,
+            updates: self.edges_accepted,
+            updates_per_sec: self.updates_per_sec,
+            parse_errors: self.parse_errors,
+            recomputes: self.recomputes,
+            stalls: self.stalls,
+        }
+    }
+}
+
+/// Stream counters surfaced in the engine's operator report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamSnapshot {
+    /// Documents processed.
+    pub batches: u64,
+    /// Edge insertions applied.
+    pub updates: u64,
+    /// Insertions per second of pipeline wall-clock.
+    pub updates_per_sec: f64,
+    /// Malformed documents rejected at parse.
+    pub parse_errors: u64,
+    /// Escape-hatch rebuilds.
+    pub recomputes: u64,
+    /// Backpressure stalls per stage link.
+    pub stalls: [u64; 3],
+}
+
+/// Serialize one analytics record as an emit line. Checksums travel as
+/// strings: they are u64 bit-reductions and must survive the f64-backed
+/// JSON number type losslessly.
+fn record_to_line(rec: &Record) -> String {
+    let mut fields = vec![
+        ("seq".to_string(), Value::Number(rec.seq as f64)),
+        ("accepted".to_string(), Value::Number(rec.accepted as f64)),
+        ("rejected".to_string(), Value::Number(rec.rejected as f64)),
+        ("cc".to_string(), Value::String(rec.checksums.0.to_string())),
+        ("pr".to_string(), Value::String(rec.checksums.1.to_string())),
+        ("bfs".to_string(), Value::String(rec.checksums.2.to_string())),
+        ("recomputed".to_string(), Value::Bool(rec.recomputed)),
+    ];
+    if let Some(err) = rec.error {
+        fields.push(("error".to_string(), Value::String(err.to_string())));
+    }
+    json::to_string(&Value::Object(fields))
+}
+
+/// Run the parse → analytics → emit pipeline over a sequence of wire
+/// documents, returning the run report and the final incremental state
+/// (so callers can gate it against full-recompute oracles).
+///
+/// The caller's thread is the driver/producer; the three stages are
+/// spawned threads. With `cfg.pin` and an SMT pair `(a, b)` available,
+/// parse and emit share sibling `a` and analytics owns sibling `b`;
+/// without a pair (or with pinning off) all stages float. The analytics
+/// stage owns an unpinned [`Relic`] runtime for `Par`-parallel batch
+/// classification.
+pub fn run_pipeline(
+    cfg: &StreamConfig,
+    docs: Vec<Vec<u8>>,
+) -> (StreamReport, IncrementalAnalytics) {
+    let n = 1usize << cfg.scale;
+    let source = cfg.source;
+    let recompute_interval = cfg.recompute_interval;
+    let pair = if cfg.pin { smt_sibling_pair() } else { None };
+    let q_in: Arc<SpscQueue<Msg<Doc>>> = Arc::new(SpscQueue::new(cfg.queue_capacity));
+    let q_ab: Arc<SpscQueue<Msg<Parsed>>> = Arc::new(SpscQueue::new(cfg.queue_capacity));
+    let q_bc: Arc<SpscQueue<Msg<Record>>> = Arc::new(SpscQueue::new(cfg.queue_capacity));
+
+    let start = Instant::now();
+
+    let parse_stage = {
+        let (q_in, q_ab) = (Arc::clone(&q_in), Arc::clone(&q_ab));
+        std::thread::spawn(move || {
+            if let Some((a, _)) = pair {
+                pin_to_cpu(a);
+            }
+            let mut parse_errors = 0u64;
+            let mut stalls = 0u64;
+            loop {
+                match pop_blocking(&q_in) {
+                    Msg::Done => {
+                        push_blocking(&q_ab, Msg::Done, &mut stalls);
+                        return (parse_errors, stalls);
+                    }
+                    Msg::Item(doc) => {
+                        let payload = json::parse(&doc.bytes)
+                            .map_err(|_| "malformed JSON")
+                            .and_then(|v| decode_batch(&v));
+                        if payload.is_err() {
+                            parse_errors += 1;
+                        }
+                        let item = Parsed { index: doc.index, payload };
+                        push_blocking(&q_ab, Msg::Item(item), &mut stalls);
+                    }
+                }
+            }
+        })
+    };
+
+    let analytics_stage = {
+        let (q_ab, q_bc) = (Arc::clone(&q_ab), Arc::clone(&q_bc));
+        std::thread::spawn(move || {
+            if let Some((_, b)) = pair {
+                pin_to_cpu(b);
+            }
+            let relic = Relic::new();
+            let par = Par::Relic(&relic);
+            let mut an = IncrementalAnalytics::empty(n, source, recompute_interval);
+            let mut offered = 0u64;
+            let mut accepted = 0u64;
+            let mut rejected = 0u64;
+            let mut stalls = 0u64;
+            loop {
+                match pop_blocking(&q_ab) {
+                    Msg::Done => {
+                        push_blocking(&q_bc, Msg::Done, &mut stalls);
+                        break;
+                    }
+                    Msg::Item(parsed) => {
+                        let rec = match parsed.payload {
+                            Ok((seq, edges)) => {
+                                offered += edges.len() as u64;
+                                let out = an.apply_batch(&edges, &par);
+                                accepted += out.accepted as u64;
+                                rejected += out.rejected as u64;
+                                Record {
+                                    index: parsed.index,
+                                    seq,
+                                    accepted: out.accepted,
+                                    rejected: out.rejected,
+                                    recomputed: out.recomputed,
+                                    recompute_matched: out.recompute_matched,
+                                    checksums: an.checksums(),
+                                    error: None,
+                                }
+                            }
+                            Err(reason) => Record {
+                                index: parsed.index,
+                                seq: parsed.index,
+                                accepted: 0,
+                                rejected: 0,
+                                recomputed: false,
+                                recompute_matched: true,
+                                checksums: an.checksums(),
+                                error: Some(reason),
+                            },
+                        };
+                        push_blocking(&q_bc, Msg::Item(rec), &mut stalls);
+                    }
+                }
+            }
+            (an, offered, accepted, rejected, stalls)
+        })
+    };
+
+    let emit_stage = {
+        let q_bc = Arc::clone(&q_bc);
+        std::thread::spawn(move || {
+            if let Some((a, _)) = pair {
+                pin_to_cpu(a);
+            }
+            let mut lines = Vec::new();
+            let mut out_of_order = 0u64;
+            let mut mismatches = 0u64;
+            let mut expected = 0u64;
+            loop {
+                match pop_blocking(&q_bc) {
+                    Msg::Done => return (lines, out_of_order, mismatches),
+                    Msg::Item(rec) => {
+                        if rec.index != expected {
+                            out_of_order += 1;
+                        }
+                        expected = rec.index + 1;
+                        if !rec.recompute_matched {
+                            mismatches += 1;
+                        }
+                        lines.push(record_to_line(&rec));
+                    }
+                }
+            }
+        })
+    };
+
+    let mut stalls_in = 0u64;
+    let batches_in = docs.len() as u64;
+    for (i, bytes) in docs.into_iter().enumerate() {
+        let doc = Doc { index: i as u64, bytes };
+        push_blocking(&q_in, Msg::Item(doc), &mut stalls_in);
+    }
+    push_blocking(&q_in, Msg::Done, &mut stalls_in);
+
+    let (parse_errors, stalls_ab) = parse_stage.join().expect("parse stage panicked");
+    let (analytics, edges_offered, edges_accepted, edges_rejected, stalls_bc) =
+        analytics_stage.join().expect("analytics stage panicked");
+    let (emitted, out_of_order, emit_mismatches) =
+        emit_stage.join().expect("emit stage panicked");
+    let elapsed = start.elapsed();
+
+    let elapsed_ms = elapsed.as_secs_f64() * 1e3;
+    let updates_per_sec = if elapsed.as_secs_f64() > 0.0 {
+        edges_accepted as f64 / elapsed.as_secs_f64()
+    } else {
+        0.0
+    };
+    debug_assert_eq!(emit_mismatches, analytics.recompute_mismatches());
+    let report = StreamReport {
+        batches_in,
+        parse_errors,
+        edges_offered,
+        edges_accepted,
+        edges_rejected,
+        recomputes: analytics.recomputes(),
+        recompute_mismatches: analytics.recompute_mismatches(),
+        out_of_order,
+        stalls: [stalls_in, stalls_ab, stalls_bc],
+        elapsed_ms,
+        updates_per_sec,
+        pinned: pair.is_some(),
+        checksums: analytics.checksums(),
+        emitted,
+    };
+    (report, analytics)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{bfs, cc, oracle, pr};
+    use crate::probe::NoProbe;
+
+    fn tiny_cfg() -> StreamConfig {
+        StreamConfig {
+            enabled: true,
+            scale: 6,
+            batch: 32,
+            batches: 12,
+            queue_capacity: 4,
+            recompute_interval: 4,
+            source: 0,
+            seed: 7,
+            pin: false,
+        }
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_batches() {
+        crate::testutil::check(20, |rng| {
+            let seq = rng.next_u64() >> 20;
+            let edges: Vec<(u32, u32)> = (0..rng.below(40) as usize)
+                .map(|_| (rng.below(1 << 20) as u32, rng.below(1 << 20) as u32))
+                .collect();
+            let doc = encode_batch(seq, &edges);
+            let parsed = json::parse(&doc).map_err(|e| format!("{e}"))?;
+            let (got_seq, got_edges) =
+                decode_batch(&parsed).map_err(|e| e.to_string())?;
+            if got_seq != seq || got_edges != edges {
+                return Err("round trip mutated the batch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decode_rejects_malformed_shapes() {
+        let cases: &[&[u8]] = &[
+            br#"{"edges": []}"#,                          // missing seq
+            br#"{"seq": -1, "edges": []}"#,               // negative seq
+            br#"{"seq": 1.5, "edges": []}"#,              // fractional seq
+            br#"{"seq": 0}"#,                             // missing edges
+            br#"{"seq": 0, "edges": 3}"#,                 // edges not an array
+            br#"{"seq": 0, "edges": [[1]]}"#,             // arity 1
+            br#"{"seq": 0, "edges": [[1, 2, 3]]}"#,       // arity 3
+            br#"{"seq": 0, "edges": [[1, "a"]]}"#,        // non-numeric endpoint
+            br#"{"seq": 0, "edges": [[1, 2.5]]}"#,        // fractional endpoint
+            br#"{"seq": 0, "edges": [[1, 4294967296]]}"#, // > u32::MAX
+        ];
+        for c in cases {
+            let v = json::parse(c).expect("valid JSON shape test");
+            assert!(
+                decode_batch(&v).is_err(),
+                "should reject: {}",
+                String::from_utf8_lossy(c)
+            );
+        }
+    }
+
+    #[test]
+    fn generators_are_deterministic_and_distinct() {
+        for dist in EdgeDist::all() {
+            let a = generate_batches(dist, 8, 4, 64, 9);
+            let b = generate_batches(dist, 8, 4, 64, 9);
+            assert_eq!(a, b, "{} must be seed-deterministic", dist.name());
+            let c = generate_batches(dist, 8, 4, 64, 10);
+            assert_ne!(a, c, "{} must vary with the seed", dist.name());
+        }
+        let pl = generate_batches(EdgeDist::PowerLaw, 8, 2, 64, 9);
+        let un = generate_batches(EdgeDist::Uniform, 8, 2, 64, 9);
+        assert_ne!(pl, un, "scenarios must differ");
+    }
+
+    #[test]
+    fn edge_dist_names_roundtrip() {
+        for dist in EdgeDist::all() {
+            assert_eq!(EdgeDist::parse(dist.name()), Some(dist));
+        }
+        assert_eq!(EdgeDist::parse("zipf"), None);
+    }
+
+    #[test]
+    fn pipeline_is_lossless_ordered_and_oracle_consistent() {
+        let cfg = tiny_cfg();
+        for dist in EdgeDist::all() {
+            let docs = encode_stream(dist, &cfg);
+            let (report, analytics) = run_pipeline(&cfg, docs);
+            assert_eq!(report.batches_in, cfg.batches as u64);
+            assert_eq!(report.emitted.len(), cfg.batches, "no drops");
+            assert_eq!(report.out_of_order, 0, "no reorders");
+            assert_eq!(report.parse_errors, 0);
+            assert_eq!(report.recompute_mismatches, 0);
+            assert_eq!(report.recomputes, (cfg.batches / cfg.recompute_interval) as u64);
+            assert_eq!(
+                report.edges_offered,
+                (cfg.batches * cfg.batch) as u64,
+                "classification saw every offered edge"
+            );
+            assert_eq!(
+                report.edges_accepted + report.edges_rejected,
+                report.edges_offered
+            );
+            // Final state equals full recomputes on the rebuilt graph.
+            let g = analytics.graph().rebuild();
+            assert_eq!(analytics.cc_labels(), oracle::components_min_label(&g));
+            assert_eq!(analytics.bfs_depths(), oracle::bfs_depths(&g, cfg.source));
+            let kernel = pr::pagerank(&g, pr::MAX_ITERS, pr::TOLERANCE, &mut NoProbe);
+            assert_eq!(
+                analytics.pr_scores().iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+                kernel.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+                "{}: pr bitwise", dist.name()
+            );
+            assert_eq!(
+                report.checksums,
+                (
+                    cc::checksum(&analytics.cc_labels()),
+                    pr::checksum(analytics.pr_scores()),
+                    bfs::checksum(analytics.bfs_depths()),
+                )
+            );
+        }
+    }
+
+    #[test]
+    fn pipeline_counts_malformed_docs_without_dropping() {
+        let cfg = tiny_cfg();
+        let mut docs = encode_stream(EdgeDist::Uniform, &cfg);
+        docs[3] = b"{\"seq\": 3, \"edges\": [[1".to_vec(); // truncated
+        docs[7] = b"not json at all".to_vec();
+        let total = docs.len();
+        let (report, _) = run_pipeline(&cfg, docs);
+        assert_eq!(report.parse_errors, 2);
+        assert_eq!(report.emitted.len(), total, "error records still emitted");
+        assert_eq!(report.out_of_order, 0);
+        let line3 = &report.emitted[3];
+        assert!(line3.contains("\"error\""), "line carries the reason: {line3}");
+    }
+
+    #[test]
+    fn pipeline_is_deterministic_across_runs() {
+        let cfg = tiny_cfg();
+        let docs = encode_stream(EdgeDist::PowerLaw, &cfg);
+        let (r1, a1) = run_pipeline(&cfg, docs.clone());
+        let (r2, a2) = run_pipeline(&cfg, docs);
+        assert_eq!(r1.emitted, r2.emitted, "emit lines are seed-deterministic");
+        assert_eq!(r1.checksums, r2.checksums);
+        assert_eq!(a1.cc_labels(), a2.cc_labels());
+        assert_eq!(
+            a1.pr_scores().iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+            a2.pr_scores().iter().map(|s| s.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(a1.bfs_depths(), a2.bfs_depths());
+    }
+
+    #[test]
+    fn snapshot_compacts_the_report() {
+        let cfg = tiny_cfg();
+        let docs = encode_stream(EdgeDist::Uniform, &cfg);
+        let (report, _) = run_pipeline(&cfg, docs);
+        let snap = report.snapshot();
+        assert_eq!(snap.batches, report.batches_in);
+        assert_eq!(snap.updates, report.edges_accepted);
+        assert_eq!(snap.parse_errors, 0);
+        assert_eq!(snap.recomputes, report.recomputes);
+        assert_eq!(snap.stalls, report.stalls);
+    }
+}

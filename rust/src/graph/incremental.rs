@@ -1,0 +1,1003 @@
+//! Incremental graph kernels over a mutable edge-stream view (ISSUE 10).
+//!
+//! The streaming engine ([`crate::coordinator::stream`]) applies batches
+//! of edge insertions to a live graph and re-derives analytics after
+//! every batch. Rebuilding the CSR and re-running the kernels from
+//! scratch per batch would make each microsecond-scale update pay a
+//! full-recompute cost; this module maintains the kernel state
+//! *incrementally* instead:
+//!
+//! * [`DeltaCsr`] — an adjacency overlay over an immutable
+//!   [`CsrGraph`]: inserted edges live in per-vertex sorted side lists,
+//!   and neighbor iteration merges base + overlay in sorted order, so a
+//!   traversal sees **exactly** the neighbor sequence a rebuilt CSR
+//!   would produce. That ordering contract is what makes every
+//!   incremental kernel bitwise-comparable to a from-scratch run.
+//! * [`IncrementalCc`] — connected components by union-find
+//!   maintenance. The union rule (larger root attaches under smaller)
+//!   keeps each tree's root the minimum vertex id of its component, so
+//!   [`IncrementalCc::labels`] is canonical: identical to
+//!   [`super::oracle::components_min_label`] and to
+//!   [`super::cc::shiloach_vishkin`] regardless of insertion order.
+//! * [`DeltaPageRank`] — the serial [`super::pr::pagerank`] power
+//!   iteration with a memoized per-iteration trajectory and
+//!   residual-driven recomputation: only vertices whose inputs changed
+//!   (adjacency deltas, or a neighbor whose score diverged bitwise from
+//!   the previous run) re-pull; everything else reuses the memoized
+//!   value. The result is **bitwise identical** to running the serial
+//!   kernel from scratch on the rebuilt graph — see the module test
+//!   `delta_pagerank_bitwise_equals_kernel_on_rebuilt_graph`.
+//! * [`DynamicBfs`] — dynamic frontier BFS. Edge insertions only ever
+//!   lower depths, so a worklist relaxation from the new edge's
+//!   endpoints converges to the unique BFS fixpoint
+//!   ([`super::oracle::bfs_depths`]).
+//!
+//! [`IncrementalAnalytics`] bundles the three kernels behind one
+//! `apply_batch` entry point (with [`Par`]-parallel delta
+//! classification) and implements the `recompute_interval` escape
+//! hatch: every Nth batch the overlay is collapsed into a fresh base
+//! CSR and all three kernels are recomputed from scratch — the
+//! recomputed state must be bit-identical to the incremental state
+//! (checked, counted, and gated by `repro stream` and
+//! `tests/stream_correctness.rs`).
+
+use std::collections::VecDeque;
+
+use crate::relic::Par;
+
+use super::pr::{DAMPING, MAX_ITERS, TOLERANCE};
+use super::CsrGraph;
+
+/// Minimum batch entries per parallel classification chunk: a
+/// classification is two binary searches (~tens of ns), so chunks need
+/// enough of them to amortize Relic's submit cost.
+const CLASSIFY_GRAIN: usize = 64;
+
+/// A mutable edge-stream view over an immutable [`CsrGraph`]: the base
+/// adjacency plus per-vertex sorted overlays of inserted edges.
+///
+/// **Ordering contract.** [`DeltaCsr::neighbors`] yields the merge of
+/// the base's sorted neighbor slice and the sorted overlay — i.e. the
+/// ascending neighbor list a [`CsrGraph`] rebuilt from the same edge
+/// set would store. Every kernel in this module iterates neighbors
+/// exclusively through that merge, so floating-point summation orders
+/// (and therefore checksums) match the rebuilt graph bit for bit.
+///
+/// Weights are deliberately not modeled: the incremental kernels (CC,
+/// PR, BFS) are weight-free, and carrying weights through the overlay
+/// would complicate the rebuild-equality contract for nothing.
+#[derive(Debug, Clone)]
+pub struct DeltaCsr {
+    base: CsrGraph,
+    /// Per-vertex sorted extra neighbors, disjoint from the base lists
+    /// (duplicates are rejected at [`DeltaCsr::insert`]).
+    extra: Vec<Vec<u32>>,
+    /// Undirected edges living in the overlay.
+    extra_edges: usize,
+}
+
+impl DeltaCsr {
+    /// Wrap an unweighted base graph. Panics on a weighted base — the
+    /// overlay cannot represent weights, so a rebuild would silently
+    /// drop them.
+    pub fn new(base: CsrGraph) -> Self {
+        assert!(
+            !base.is_weighted(),
+            "DeltaCsr views the unweighted skeleton; strip weights first"
+        );
+        let n = base.num_vertices();
+        DeltaCsr { base, extra: vec![Vec::new(); n], extra_edges: 0 }
+    }
+
+    /// An empty graph on `n` vertices — the usual stream starting point.
+    pub fn empty(n: usize) -> Self {
+        Self::new(CsrGraph::from_undirected_edges(n, &[]))
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.base.num_vertices()
+    }
+
+    /// Number of undirected edges (base + overlay).
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.base.num_edges() + self.extra_edges
+    }
+
+    /// Undirected edges currently in the overlay (the rebuild pressure
+    /// the `recompute_interval` escape hatch relieves).
+    #[inline]
+    pub fn overlay_edges(&self) -> usize {
+        self.extra_edges
+    }
+
+    /// Degree of `v` in the merged view.
+    #[inline]
+    pub fn degree(&self, v: u32) -> usize {
+        self.base.degree(v) + self.extra[v as usize].len()
+    }
+
+    /// Merged sorted neighbors of `v` — the rebuilt-CSR iteration order.
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> MergedNeighbors<'_> {
+        MergedNeighbors {
+            base: self.base.neighbors(v),
+            extra: &self.extra[v as usize],
+            i: 0,
+            j: 0,
+        }
+    }
+
+    /// Whether the undirected edge `{u, v}` is present.
+    #[inline]
+    pub fn has_edge(&self, u: u32, v: u32) -> bool {
+        self.base.neighbors(u).binary_search(&v).is_ok()
+            || self.extra[u as usize].binary_search(&v).is_ok()
+    }
+
+    /// Insert the undirected edge `{u, v}`. Returns `false` (and leaves
+    /// the view untouched) for self-loops and duplicates — mirroring
+    /// what [`CsrGraph::from_undirected_edges`] drops at build time.
+    ///
+    /// # Panics
+    /// If an endpoint is out of range (malformed wire input must be
+    /// rejected by [`DeltaCsr::classify`] / the decode layer first).
+    pub fn insert(&mut self, u: u32, v: u32) -> bool {
+        let n = self.num_vertices();
+        assert!((u as usize) < n && (v as usize) < n, "edge ({u}, {v}) out of range");
+        if u == v || self.has_edge(u, v) {
+            return false;
+        }
+        for (a, b) in [(u, v), (v, u)] {
+            let list = &mut self.extra[a as usize];
+            let pos = list.binary_search(&b).unwrap_err();
+            list.insert(pos, b);
+        }
+        self.extra_edges += 1;
+        true
+    }
+
+    /// Classify a delta batch in parallel: `true` where the edge is a
+    /// well-formed *new* edge against the current (pre-batch) view —
+    /// in-range, not a self-loop, not already present. Intra-batch
+    /// duplicates still pass here (the read-only snapshot cannot see
+    /// them); the serial [`DeltaCsr::insert`] stays authoritative.
+    ///
+    /// Deterministic under every [`crate::relic::Schedule`]: each slot
+    /// is a pure function of `(self, edges[i])` and the writes are
+    /// disjoint.
+    pub fn classify(&self, edges: &[(u32, u32)], par: &Par) -> Vec<bool> {
+        let n = self.num_vertices();
+        let mut keep = vec![false; edges.len()];
+        par.map_into(&mut keep, CLASSIFY_GRAIN, |i| {
+            let (u, v) = edges[i];
+            (u as usize) < n && (v as usize) < n && u != v && !self.has_edge(u, v)
+        });
+        keep
+    }
+
+    /// Every undirected edge once, `(u, v)` with `u < v`, ascending.
+    pub fn edges(&self) -> Vec<(u32, u32)> {
+        let mut out = Vec::with_capacity(self.num_edges());
+        for u in 0..self.num_vertices() as u32 {
+            for v in self.neighbors(u) {
+                if v > u {
+                    out.push((u, v));
+                }
+            }
+        }
+        out
+    }
+
+    /// Collapse the view into a standalone CSR. The rebuilt graph's
+    /// neighbor lists equal this view's merged iteration order exactly
+    /// (both are the sorted dedup'd union), which is what the
+    /// bitwise-equality contract of every kernel here rests on.
+    pub fn rebuild(&self) -> CsrGraph {
+        CsrGraph::from_undirected_edges(self.num_vertices(), &self.edges())
+    }
+}
+
+/// Sorted merge of a base neighbor slice and an overlay slice (the two
+/// are disjoint, so no tie-break is ever taken).
+pub struct MergedNeighbors<'a> {
+    base: &'a [u32],
+    extra: &'a [u32],
+    i: usize,
+    j: usize,
+}
+
+impl Iterator for MergedNeighbors<'_> {
+    type Item = u32;
+
+    #[inline]
+    fn next(&mut self) -> Option<u32> {
+        match (self.base.get(self.i), self.extra.get(self.j)) {
+            (Some(&b), Some(&e)) => {
+                if b < e {
+                    self.i += 1;
+                    Some(b)
+                } else {
+                    self.j += 1;
+                    Some(e)
+                }
+            }
+            (Some(&b), None) => {
+                self.i += 1;
+                Some(b)
+            }
+            (None, Some(&e)) => {
+                self.j += 1;
+                Some(e)
+            }
+            (None, None) => None,
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let rem = (self.base.len() - self.i) + (self.extra.len() - self.j);
+        (rem, Some(rem))
+    }
+}
+
+impl ExactSizeIterator for MergedNeighbors<'_> {}
+
+/// Incremental connected components: a union-find forest maintained
+/// under edge insertions.
+///
+/// The union rule attaches the *larger* root under the *smaller*, so
+/// by induction every tree's root is the minimum vertex id of its
+/// component — [`IncrementalCc::labels`] is therefore canonical (a
+/// pure function of the edge *set*, not the insertion order) and equal
+/// to [`super::oracle::components_min_label`] /
+/// [`super::cc::shiloach_vishkin`] on the same graph.
+#[derive(Debug, Clone)]
+pub struct IncrementalCc {
+    parent: Vec<u32>,
+}
+
+impl IncrementalCc {
+    /// Build from the current edges of a view.
+    pub fn new(g: &DeltaCsr) -> Self {
+        let mut cc = IncrementalCc { parent: (0..g.num_vertices() as u32).collect() };
+        for u in 0..g.num_vertices() as u32 {
+            for v in g.neighbors(u) {
+                if v > u {
+                    cc.union(u, v);
+                }
+            }
+        }
+        cc
+    }
+
+    /// Root of `v`'s tree, with path halving.
+    fn find(&mut self, mut v: u32) -> u32 {
+        while self.parent[v as usize] != v {
+            let grand = self.parent[self.parent[v as usize] as usize];
+            self.parent[v as usize] = grand;
+            v = grand;
+        }
+        v
+    }
+
+    /// Record the edge `{u, v}`: merge the two components, min-id root
+    /// winning. Idempotent for edges already in one component.
+    pub fn union(&mut self, u: u32, v: u32) {
+        let (ru, rv) = (self.find(u), self.find(v));
+        if ru == rv {
+            return;
+        }
+        let (lo, hi) = if ru < rv { (ru, rv) } else { (rv, ru) };
+        self.parent[hi as usize] = lo;
+    }
+
+    /// Canonical labels: `labels[v]` = minimum vertex id of `v`'s
+    /// component. Read-only (no path compression), so interior forest
+    /// shape never leaks into the observable state.
+    pub fn labels(&self) -> Vec<u32> {
+        self.parent
+            .iter()
+            .enumerate()
+            .map(|(v, _)| {
+                let mut r = v as u32;
+                while self.parent[r as usize] != r {
+                    r = self.parent[r as usize];
+                }
+                r
+            })
+            .collect()
+    }
+}
+
+/// Delta-PageRank with a memoized trajectory and residual-driven
+/// recomputation, bitwise-equal to the serial kernel by construction.
+///
+/// The serial [`super::pr::pagerank`] is a pure Jacobi iteration: each
+/// pass scatters `scores[v] / deg(v)` into an `outgoing` buffer, then
+/// pulls per-vertex sums *only from that buffer* (the in-place score
+/// write never feeds the same iteration), and accumulates the L1 error
+/// serially in vertex order. That structure makes the computation
+/// *replayable*: vertex `u`'s value at iteration `t` depends only on
+/// `u`'s adjacency and its neighbors' scores at `t` — so if none of
+/// those inputs changed bitwise since the previous run, the previous
+/// run's value **is** the new value, bit for bit.
+///
+/// [`DeltaPageRank::refresh`] exploits exactly that: it memoizes every
+/// iteration's score vector (`MAX_ITERS` × n doubles), and on the next
+/// refresh recomputes a vertex's pull sum only when its own adjacency
+/// changed or a neighbor is *dirty* (bitwise-diverged from the
+/// memoized trajectory) or adjacency-changed — the residual-driven
+/// re-push rule, with "residual ≠ 0" decided by exact bit comparison
+/// instead of a threshold so no error is ever introduced. The
+/// per-iteration L1 error is recomputed serially in full (each term is
+/// bitwise equal to the from-scratch term), so the convergence break
+/// fires on exactly the same iteration.
+#[derive(Debug, Clone)]
+pub struct DeltaPageRank {
+    max_iters: u32,
+    tolerance: f64,
+    /// Scores at the end of each completed iteration of the last
+    /// refresh (`traj.last()` = the published scores).
+    traj: Vec<Vec<f64>>,
+    /// Published scores (initial uniform vector until first refresh).
+    scores: Vec<f64>,
+    /// Vertices whose adjacency changed since the last refresh.
+    changed: Vec<bool>,
+    changed_list: Vec<u32>,
+}
+
+impl DeltaPageRank {
+    /// Build and run the initial full computation (GAP defaults:
+    /// [`DAMPING`], [`TOLERANCE`], [`MAX_ITERS`]).
+    pub fn new(g: &DeltaCsr) -> Self {
+        Self::with_limits(g, MAX_ITERS, TOLERANCE)
+    }
+
+    /// [`DeltaPageRank::new`] with explicit iteration cap / tolerance
+    /// (tests drive small caps to cross the early-exit boundary).
+    pub fn with_limits(g: &DeltaCsr, max_iters: u32, tolerance: f64) -> Self {
+        let n = g.num_vertices();
+        let mut pr = DeltaPageRank {
+            max_iters,
+            tolerance,
+            traj: Vec::new(),
+            scores: if n == 0 { Vec::new() } else { vec![1.0 / n as f64; n] },
+            changed: vec![false; n],
+            changed_list: Vec::new(),
+        };
+        pr.refresh(g);
+        pr
+    }
+
+    /// Mark both endpoints of an applied edge as adjacency-changed.
+    /// Call once per accepted insertion, before the next `refresh`.
+    pub fn note_insert(&mut self, u: u32, v: u32) {
+        for x in [u, v] {
+            if !self.changed[x as usize] {
+                self.changed[x as usize] = true;
+                self.changed_list.push(x);
+            }
+        }
+    }
+
+    /// Re-derive the scores for the view's current edge set. Bitwise
+    /// identical to running the serial kernel from scratch on
+    /// `g.rebuild()`; the memoized trajectory only skips pull sums
+    /// whose inputs are provably (bitwise) unchanged.
+    pub fn refresh(&mut self, g: &DeltaCsr) {
+        let n = g.num_vertices();
+        if n == 0 {
+            return;
+        }
+        let base = (1.0 - DAMPING) / n as f64;
+        let old = std::mem::take(&mut self.traj);
+        let mut scores = vec![1.0 / n as f64; n];
+        let mut outgoing = vec![0.0f64; n];
+        // Vertices whose pull inputs this iteration may differ from the
+        // memoized run: recomputed fresh each iteration below.
+        let mut recompute = vec![false; n];
+        // `dirty`: scores[v] differs bitwise from the memoized run at
+        // the same point. Both runs start from the uniform vector.
+        let mut dirty_list: Vec<u32> = Vec::new();
+
+        for t in 0..self.max_iters as usize {
+            // Scatter. Every value is bitwise the from-scratch value
+            // because `scores` is (inductively) and degrees are current.
+            for (v, out) in outgoing.iter_mut().enumerate() {
+                let deg = g.degree(v as u32);
+                *out = if deg > 0 { scores[v] / deg as f64 } else { 0.0 };
+            }
+            let memo = old.get(t);
+            // Residual-driven marking: a vertex re-pulls when its own
+            // adjacency changed, or a neighbor's outgoing contribution
+            // differs from the memoized run (score dirty or degree
+            // changed). With no memoized iteration, everything re-pulls.
+            recompute.fill(memo.is_none());
+            if memo.is_some() {
+                for &v in &self.changed_list {
+                    recompute[v as usize] = true;
+                    for w in g.neighbors(v) {
+                        recompute[w as usize] = true;
+                    }
+                }
+                for &v in &dirty_list {
+                    for w in g.neighbors(v) {
+                        recompute[w as usize] = true;
+                    }
+                }
+            }
+            // Pull + serial error accumulation, exactly the kernel's
+            // in-place single pass (reads only `outgoing`).
+            dirty_list.clear();
+            let mut error = 0.0;
+            for u in 0..n {
+                let new = if recompute[u] {
+                    let mut incoming = 0.0;
+                    for v in g.neighbors(u as u32) {
+                        incoming += outgoing[v as usize];
+                    }
+                    base + DAMPING * incoming
+                } else {
+                    memo.expect("reuse implies a memoized iteration")[u]
+                };
+                error += (new - scores[u]).abs();
+                if recompute[u] {
+                    if let Some(m) = memo {
+                        if new.to_bits() != m[u].to_bits() {
+                            dirty_list.push(u as u32);
+                        }
+                    }
+                }
+                scores[u] = new;
+            }
+            self.traj.push(scores.clone());
+            if error < self.tolerance {
+                break;
+            }
+        }
+        self.scores = scores;
+        for &v in &self.changed_list {
+            self.changed[v as usize] = false;
+        }
+        self.changed_list.clear();
+    }
+
+    /// The current scores (after the last `refresh`).
+    pub fn scores(&self) -> &[f64] {
+        &self.scores
+    }
+
+    /// The serial kernel run from scratch over a view — the oracle the
+    /// incremental path is bitwise-gated against. Identical to
+    /// [`super::pr::pagerank`] on `g.rebuild()` (same iteration
+    /// structure over the same sorted neighbor order).
+    pub fn from_scratch(g: &DeltaCsr, max_iters: u32, tolerance: f64) -> Vec<f64> {
+        let n = g.num_vertices();
+        if n == 0 {
+            return Vec::new();
+        }
+        let base = (1.0 - DAMPING) / n as f64;
+        let mut scores = vec![1.0 / n as f64; n];
+        let mut outgoing = vec![0.0f64; n];
+        for _ in 0..max_iters {
+            for (v, out) in outgoing.iter_mut().enumerate() {
+                let deg = g.degree(v as u32);
+                *out = if deg > 0 { scores[v] / deg as f64 } else { 0.0 };
+            }
+            let mut error = 0.0;
+            for u in 0..n {
+                let mut incoming = 0.0;
+                for v in g.neighbors(u as u32) {
+                    incoming += outgoing[v as usize];
+                }
+                let new = base + DAMPING * incoming;
+                error += (new - scores[u]).abs();
+                scores[u] = new;
+            }
+            if error < tolerance {
+                break;
+            }
+        }
+        scores
+    }
+}
+
+/// Dynamic frontier BFS: depths from a fixed source maintained under
+/// edge insertions.
+///
+/// Insertions only ever *lower* depths, so relaxing outward from each
+/// new edge's endpoints converges to the unique fixpoint — the true
+/// BFS depth vector ([`super::oracle::bfs_depths`], `u32::MAX` =
+/// unreachable). Depths are integers, so bitwise equality is exact
+/// equality.
+#[derive(Debug, Clone)]
+pub struct DynamicBfs {
+    source: u32,
+    depth: Vec<u32>,
+}
+
+impl DynamicBfs {
+    /// Full BFS over the view's current edges.
+    pub fn new(g: &DeltaCsr, source: u32) -> Self {
+        DynamicBfs { source, depth: Self::from_scratch(g, source) }
+    }
+
+    /// The BFS source.
+    pub fn source(&self) -> u32 {
+        self.source
+    }
+
+    /// Account for the (already applied) insertion of `{u, v}`:
+    /// worklist relaxation from whichever endpoint the new edge
+    /// improves, then outward until no depth can drop further.
+    pub fn insert(&mut self, g: &DeltaCsr, u: u32, v: u32) {
+        let mut work: VecDeque<u32> = VecDeque::new();
+        let (du, dv) = (self.depth[u as usize], self.depth[v as usize]);
+        if du != u32::MAX && du + 1 < dv {
+            self.depth[v as usize] = du + 1;
+            work.push_back(v);
+        } else if dv != u32::MAX && dv + 1 < du {
+            self.depth[u as usize] = dv + 1;
+            work.push_back(u);
+        }
+        while let Some(w) = work.pop_front() {
+            let dw = self.depth[w as usize];
+            for x in g.neighbors(w) {
+                if dw + 1 < self.depth[x as usize] {
+                    self.depth[x as usize] = dw + 1;
+                    work.push_back(x);
+                }
+            }
+        }
+    }
+
+    /// Current depths (`u32::MAX` = unreachable).
+    pub fn depths(&self) -> &[u32] {
+        &self.depth
+    }
+
+    /// Full BFS oracle over a view (matches
+    /// [`super::oracle::bfs_depths`] on the rebuilt graph).
+    pub fn from_scratch(g: &DeltaCsr, source: u32) -> Vec<u32> {
+        let n = g.num_vertices();
+        let mut depth = vec![u32::MAX; n];
+        if n == 0 {
+            return depth;
+        }
+        depth[source as usize] = 0;
+        let mut queue: VecDeque<u32> = VecDeque::new();
+        queue.push_back(source);
+        while let Some(u) = queue.pop_front() {
+            let du = depth[u as usize];
+            for v in g.neighbors(u) {
+                if depth[v as usize] == u32::MAX {
+                    depth[v as usize] = du + 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        depth
+    }
+}
+
+/// Outcome of one applied delta batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchOutcome {
+    /// Edges actually inserted.
+    pub accepted: usize,
+    /// Self-loops, duplicates (inter- or intra-batch), out-of-range.
+    pub rejected: usize,
+    /// Whether this batch tripped the `recompute_interval` escape hatch.
+    pub recomputed: bool,
+    /// When `recomputed`: did the from-scratch state match the
+    /// incremental state bit for bit? (`true` when not recomputed.)
+    pub recompute_matched: bool,
+}
+
+/// The three incremental kernels behind one batch-apply entry point,
+/// plus the `recompute_interval` escape hatch.
+#[derive(Debug)]
+pub struct IncrementalAnalytics {
+    graph: DeltaCsr,
+    cc: IncrementalCc,
+    pr: DeltaPageRank,
+    bfs: DynamicBfs,
+    /// Rebuild-and-recompute from scratch every N batches (0 = never).
+    /// The recomputed state must equal the incremental state bitwise —
+    /// the escape hatch doubles as a continuous self-check.
+    recompute_interval: usize,
+    batches_applied: usize,
+    recomputes: u64,
+    recompute_mismatches: u64,
+}
+
+impl IncrementalAnalytics {
+    /// Start from an existing (unweighted) base graph.
+    pub fn new(base: CsrGraph, source: u32, recompute_interval: usize) -> Self {
+        let graph = DeltaCsr::new(base);
+        let cc = IncrementalCc::new(&graph);
+        let pr = DeltaPageRank::new(&graph);
+        let bfs = DynamicBfs::new(&graph, source);
+        IncrementalAnalytics {
+            graph,
+            cc,
+            pr,
+            bfs,
+            recompute_interval,
+            batches_applied: 0,
+            recomputes: 0,
+            recompute_mismatches: 0,
+        }
+    }
+
+    /// Start from an empty graph on `n` vertices.
+    pub fn empty(n: usize, source: u32, recompute_interval: usize) -> Self {
+        Self::new(CsrGraph::from_undirected_edges(n, &[]), source, recompute_interval)
+    }
+
+    /// Apply one delta batch: classify in parallel (`par`), insert the
+    /// survivors serially in batch order (the authoritative dedup),
+    /// update CC/BFS per edge, refresh PageRank once, then — every
+    /// `recompute_interval` batches — rebuild from scratch and swap the
+    /// recomputed state in after checking it matches bitwise.
+    pub fn apply_batch(&mut self, edges: &[(u32, u32)], par: &Par) -> BatchOutcome {
+        let keep = self.graph.classify(edges, par);
+        let mut accepted = 0usize;
+        let mut rejected = 0usize;
+        for (i, &(u, v)) in edges.iter().enumerate() {
+            if keep[i] && self.graph.insert(u, v) {
+                self.cc.union(u, v);
+                self.bfs.insert(&self.graph, u, v);
+                self.pr.note_insert(u, v);
+                accepted += 1;
+            } else {
+                rejected += 1;
+            }
+        }
+        self.pr.refresh(&self.graph);
+        self.batches_applied += 1;
+        let due = self.recompute_interval > 0
+            && self.batches_applied % self.recompute_interval == 0;
+        let matched = if due { self.recompute_from_scratch() } else { true };
+        BatchOutcome { accepted, rejected, recomputed: due, recompute_matched: matched }
+    }
+
+    /// The escape hatch: collapse the overlay into a fresh base CSR,
+    /// recompute all three kernels from scratch on it, verify the
+    /// states match the incremental ones bit for bit, and swap the
+    /// fresh state in (resetting overlay growth and trajectory noise).
+    /// Returns whether the states matched; a mismatch is counted and
+    /// the *recomputed* (ground-truth) state still wins.
+    fn recompute_from_scratch(&mut self) -> bool {
+        self.recomputes += 1;
+        let fresh_graph = DeltaCsr::new(self.graph.rebuild());
+        let fresh_cc = IncrementalCc::new(&fresh_graph);
+        let fresh_pr = DeltaPageRank::new(&fresh_graph);
+        let fresh_bfs = DynamicBfs::new(&fresh_graph, self.bfs.source());
+        let bits = |s: &[f64]| s.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        let matched = fresh_cc.labels() == self.cc.labels()
+            && bits(fresh_pr.scores()) == bits(self.pr.scores())
+            && fresh_bfs.depths() == self.bfs.depths();
+        if !matched {
+            self.recompute_mismatches += 1;
+        }
+        self.graph = fresh_graph;
+        self.cc = fresh_cc;
+        self.pr = fresh_pr;
+        self.bfs = fresh_bfs;
+        matched
+    }
+
+    /// The live graph view.
+    pub fn graph(&self) -> &DeltaCsr {
+        &self.graph
+    }
+
+    /// Canonical component labels (min vertex id per component).
+    pub fn cc_labels(&self) -> Vec<u32> {
+        self.cc.labels()
+    }
+
+    /// Current PageRank scores.
+    pub fn pr_scores(&self) -> &[f64] {
+        self.pr.scores()
+    }
+
+    /// Current BFS depths from the configured source.
+    pub fn bfs_depths(&self) -> &[u32] {
+        self.bfs.depths()
+    }
+
+    /// `(cc, pr, bfs)` checksums in the kernels' own reductions —
+    /// comparable against [`super::cc::checksum`] /
+    /// [`super::pr::checksum`] / [`super::bfs::checksum`] of a
+    /// from-scratch run on the rebuilt graph.
+    pub fn checksums(&self) -> (u64, u64, u64) {
+        (
+            super::cc::checksum(&self.cc.labels()),
+            super::pr::checksum(self.pr.scores()),
+            super::bfs::checksum(self.bfs.depths()),
+        )
+    }
+
+    /// Batches applied so far.
+    pub fn batches_applied(&self) -> usize {
+        self.batches_applied
+    }
+
+    /// Escape-hatch rebuilds performed so far.
+    pub fn recomputes(&self) -> u64 {
+        self.recomputes
+    }
+
+    /// Escape-hatch rebuilds whose state did NOT match the incremental
+    /// state (always 0 unless the bitwise contract is broken — gated by
+    /// `repro stream` and the stream correctness tests).
+    pub fn recompute_mismatches(&self) -> u64 {
+        self.recompute_mismatches
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{bfs, cc, oracle, pr};
+    use crate::probe::NoProbe;
+    use crate::relic::{Par, Relic, Schedule};
+    use crate::testutil::Rng;
+
+    /// Seeded random edge stream (mix of fresh edges, duplicates, and
+    /// self-loops) over `n` vertices.
+    fn random_edges(rng: &mut Rng, n: usize, count: usize) -> Vec<(u32, u32)> {
+        (0..count)
+            .map(|_| {
+                let u = rng.below(n as u64) as u32;
+                // ~1/8 self-loops to exercise rejection.
+                let v = if rng.below(8) == 0 { u } else { rng.below(n as u64) as u32 };
+                (u, v)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn merged_neighbors_match_rebuilt_csr() {
+        crate::testutil::check(20, |rng| {
+            let n = 2 + rng.below(60) as usize;
+            let mut g = DeltaCsr::empty(n);
+            for (u, v) in random_edges(rng, n, 4 * n) {
+                g.insert(u, v);
+            }
+            let rebuilt = g.rebuild();
+            for v in 0..n as u32 {
+                let merged: Vec<u32> = g.neighbors(v).collect();
+                if merged != rebuilt.neighbors(v) {
+                    return Err(format!("vertex {v}: merged {merged:?}"));
+                }
+                if g.degree(v) != rebuilt.degree(v) {
+                    return Err(format!("vertex {v}: degree mismatch"));
+                }
+            }
+            if g.num_edges() != rebuilt.num_edges() {
+                return Err("edge count mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn insert_rejects_self_loops_and_duplicates() {
+        let mut g = DeltaCsr::empty(4);
+        assert!(!g.insert(2, 2), "self-loop");
+        assert!(g.insert(0, 1));
+        assert!(!g.insert(0, 1), "duplicate");
+        assert!(!g.insert(1, 0), "reversed duplicate");
+        assert_eq!(g.num_edges(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn insert_panics_out_of_range() {
+        DeltaCsr::empty(3).insert(0, 7);
+    }
+
+    #[test]
+    fn overlay_over_nonempty_base() {
+        let base = CsrGraph::from_undirected_edges(5, &[(0, 1), (1, 2)]);
+        let mut g = DeltaCsr::new(base);
+        assert!(g.has_edge(0, 1));
+        assert!(!g.insert(1, 2), "base edges count as duplicates");
+        assert!(g.insert(2, 3));
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.neighbors(2).collect::<Vec<_>>(), vec![1, 3]);
+    }
+
+    #[test]
+    fn classify_agrees_with_serial_under_every_schedule() {
+        let relic = Relic::new();
+        crate::testutil::check(8, |rng| {
+            let n = 2 + rng.below(40) as usize;
+            let mut g = DeltaCsr::empty(n);
+            for (u, v) in random_edges(rng, n, 2 * n) {
+                g.insert(u, v);
+            }
+            let batch = random_edges(rng, n, 3 * n);
+            let want = g.classify(&batch, &Par::Serial);
+            for sched in Schedule::all() {
+                let got = g.classify(&batch, &Par::Relic(&relic).with_schedule(sched));
+                if got != want {
+                    return Err(format!("schedule {} diverged", sched.name()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn incremental_cc_matches_oracle_and_kernel() {
+        crate::testutil::check(15, |rng| {
+            let n = 2 + rng.below(50) as usize;
+            let mut g = DeltaCsr::empty(n);
+            let mut cc = IncrementalCc::new(&g);
+            for (u, v) in random_edges(rng, n, 5 * n) {
+                if g.insert(u, v) {
+                    cc.union(u, v);
+                }
+            }
+            let rebuilt = g.rebuild();
+            let labels = cc.labels();
+            if labels != oracle::components_min_label(&rebuilt) {
+                return Err("labels != oracle".into());
+            }
+            if labels != cc::shiloach_vishkin(&rebuilt, &mut NoProbe) {
+                return Err("labels != shiloach_vishkin".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn delta_pagerank_bitwise_equals_kernel_on_rebuilt_graph() {
+        crate::testutil::check(10, |rng| {
+            let n = 2 + rng.below(40) as usize;
+            let mut g = DeltaCsr::empty(n);
+            let mut dpr = DeltaPageRank::new(&g);
+            // Several checkpoints so the trajectory is actually reused.
+            for _ in 0..4 {
+                for (u, v) in random_edges(rng, n, n) {
+                    if g.insert(u, v) {
+                        dpr.note_insert(u, v);
+                    }
+                }
+                dpr.refresh(&g);
+                let kernel =
+                    pr::pagerank(&g.rebuild(), pr::MAX_ITERS, pr::TOLERANCE, &mut NoProbe);
+                let got: Vec<u64> = dpr.scores().iter().map(|s| s.to_bits()).collect();
+                let want: Vec<u64> = kernel.iter().map(|s| s.to_bits()).collect();
+                if got != want {
+                    return Err(format!("scores diverged at {} edges", g.num_edges()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn delta_pagerank_handles_iteration_count_shifts() {
+        // A tiny iteration cap + loose tolerance makes the early-exit
+        // boundary move between refreshes; bitwise equality must hold
+        // whether the new run is shorter or longer than the memo.
+        crate::testutil::check(10, |rng| {
+            let n = 2 + rng.below(30) as usize;
+            let mut g = DeltaCsr::empty(n);
+            let mut dpr = DeltaPageRank::with_limits(&g, 5, 1e-2);
+            for _ in 0..5 {
+                for (u, v) in random_edges(rng, n, n / 2 + 1) {
+                    if g.insert(u, v) {
+                        dpr.note_insert(u, v);
+                    }
+                }
+                dpr.refresh(&g);
+                let want = DeltaPageRank::from_scratch(&g, 5, 1e-2);
+                let got: Vec<u64> = dpr.scores().iter().map(|s| s.to_bits()).collect();
+                let want: Vec<u64> = want.iter().map(|s| s.to_bits()).collect();
+                if got != want {
+                    return Err(format!("diverged at {} edges", g.num_edges()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn from_scratch_matches_kernel_on_view() {
+        crate::testutil::check(10, |rng| {
+            let n = 2 + rng.below(40) as usize;
+            let mut g = DeltaCsr::empty(n);
+            for (u, v) in random_edges(rng, n, 3 * n) {
+                g.insert(u, v);
+            }
+            let view = DeltaPageRank::from_scratch(&g, pr::MAX_ITERS, pr::TOLERANCE);
+            let kernel = pr::pagerank(&g.rebuild(), pr::MAX_ITERS, pr::TOLERANCE, &mut NoProbe);
+            let view: Vec<u64> = view.iter().map(|s| s.to_bits()).collect();
+            let kernel: Vec<u64> = kernel.iter().map(|s| s.to_bits()).collect();
+            if view != kernel {
+                return Err("view run != kernel on rebuilt graph".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dynamic_bfs_matches_oracle_at_every_insertion() {
+        crate::testutil::check(10, |rng| {
+            let n = 2 + rng.below(40) as usize;
+            let source = rng.below(n as u64) as u32;
+            let mut g = DeltaCsr::empty(n);
+            let mut dbfs = DynamicBfs::new(&g, source);
+            for (u, v) in random_edges(rng, n, 4 * n) {
+                if g.insert(u, v) {
+                    dbfs.insert(&g, u, v);
+                    if dbfs.depths() != oracle::bfs_depths(&g.rebuild(), source) {
+                        return Err(format!("depths diverged after ({u}, {v})"));
+                    }
+                }
+            }
+            if dbfs.depths() != bfs::bfs(&g.rebuild(), source, &mut NoProbe) {
+                return Err("final depths != bfs kernel".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn analytics_escape_hatch_matches_and_resets_overlay() {
+        let relic = Relic::new();
+        let par = Par::Relic(&relic);
+        let mut rng = Rng::new(42);
+        let mut an = IncrementalAnalytics::empty(64, 0, 2);
+        for round in 0..6 {
+            let batch = random_edges(&mut rng, 64, 48);
+            let out = an.apply_batch(&batch, &par);
+            assert!(out.recompute_matched, "round {round}: escape hatch diverged");
+            assert_eq!(out.recomputed, (round + 1) % 2 == 0);
+            if out.recomputed {
+                assert_eq!(an.graph().overlay_edges(), 0, "rebuild collapses the overlay");
+            }
+        }
+        assert_eq!(an.recomputes(), 3);
+        assert_eq!(an.recompute_mismatches(), 0);
+        assert_eq!(an.batches_applied(), 6);
+    }
+
+    #[test]
+    fn analytics_checksums_match_kernels_on_rebuilt_graph() {
+        let mut rng = Rng::new(7);
+        let mut an = IncrementalAnalytics::empty(50, 3, 0);
+        for _ in 0..4 {
+            let batch = random_edges(&mut rng, 50, 40);
+            an.apply_batch(&batch, &Par::Serial);
+        }
+        let g = an.graph().rebuild();
+        let (ccs, prs, bfss) = an.checksums();
+        assert_eq!(ccs, cc::checksum(&cc::shiloach_vishkin(&g, &mut NoProbe)));
+        assert_eq!(
+            prs,
+            pr::checksum(&pr::pagerank(&g, pr::MAX_ITERS, pr::TOLERANCE, &mut NoProbe))
+        );
+        assert_eq!(bfss, bfs::checksum(&bfs::bfs(&g, 3, &mut NoProbe)));
+    }
+
+    #[test]
+    fn analytics_counts_accepted_and_rejected() {
+        let mut an = IncrementalAnalytics::empty(8, 0, 0);
+        // 2 good edges, 1 self-loop, 1 intra-batch duplicate.
+        let out = an.apply_batch(&[(0, 1), (2, 3), (4, 4), (0, 1)], &Par::Serial);
+        assert_eq!(out.accepted, 2);
+        assert_eq!(out.rejected, 2);
+        assert!(!out.recomputed);
+        assert!(out.recompute_matched);
+        assert_eq!(an.graph().num_edges(), 2);
+    }
+}

@@ -24,6 +24,7 @@ pub mod bfs;
 pub mod cc;
 pub mod csr;
 pub mod dense;
+pub mod incremental;
 pub mod io;
 pub mod kronecker;
 pub mod oracle;
@@ -32,4 +33,5 @@ pub mod sssp;
 pub mod tc;
 
 pub use csr::{balanced_boundary, CsrGraph};
+pub use incremental::{DeltaCsr, DynamicBfs, IncrementalAnalytics, IncrementalCc};
 pub use kronecker::{kronecker_graph, kronecker_graph_par, paper_graph, KroneckerParams};

@@ -27,7 +27,10 @@
 //!                    --health-json prints the health report after the
 //!                    batch, --plan SPEC forces one execution plan on
 //!                    every native request, --tuner turns on the online
-//!                    per-(kernel, shape) plan tuner)
+//!                    per-(kernel, shape) plan tuner, --stream runs the
+//!                    [stream] edge pipeline after the batch and folds
+//!                    its counters into the engine report — sharded
+//!                    engine only)
 //! repro pool         pool-scaling sweep: throughput vs shard count,
 //!                    with pool-vs-single-pair checksum verification
 //!                    (--shards 1,2,4 --requests N --reps R)
@@ -68,15 +71,24 @@
 //!                    (--shards N --scale S --reps R; --tuner-epsilon,
 //!                    --tuner-seed, --tuner-min-samples and --calibrate
 //!                    shape the tuner row)
+//! repro stream       streaming-pipeline sweep: parse → analytics →
+//!                    emit stages over seeded power-law and uniform
+//!                    edge streams, every incremental kernel hard-gated
+//!                    bitwise against its full-recompute oracle and the
+//!                    [stream]-off engine checked response-for-response
+//!                    against a plain one (--scale S --batch B
+//!                    --batches N --seed S --recompute-interval K
+//!                    --queue-capacity Q; --shards N sizes the off-leg
+//!                    engines)
 //! repro selftest     PJRT artifact round-trip check
 //! ```
 //!
 //! Common options: `--out results` writes figure JSON/text files;
 //! `--iters N` (wallclock); `--artifacts DIR`; `--config FILE` loads
 //! `[pool]`/`[admission]`/`[supervisor]`/`[fault]`/`[relic]`/
-//! `[reliability]`/`[plan]`/`[tuner]` settings for serve/pool/
-//! admission/faults/chaos/health/whale/plan (CLI flags override);
-//! `--no-pin` disables CPU pinning.
+//! `[reliability]`/`[plan]`/`[tuner]`/`[stream]` settings for serve/
+//! pool/admission/faults/chaos/health/whale/plan/stream (CLI flags
+//! override); `--no-pin` disables CPU pinning.
 
 use std::path::Path;
 
@@ -85,11 +97,12 @@ use relic_smt::bench::ablation;
 use relic_smt::cli::Args;
 use relic_smt::config::{
     check_plan_conflict, AdmissionSettings, FaultSettings, PlanSettings, PoolSettings,
-    RawConfig, RelicSettings, ReliabilitySettings, SupervisorSettings, TunerSettings,
+    RawConfig, RelicSettings, ReliabilitySettings, StreamSettings, SupervisorSettings,
+    TunerSettings,
 };
 use relic_smt::coordinator::{
-    Coordinator, Deadline, Engine, EngineConfig, GraphKernel, Request, Router, RouterConfig,
-    ShedPolicy,
+    stream, Coordinator, Deadline, EdgeDist, Engine, EngineConfig, GraphKernel, Request,
+    Router, RouterConfig, ShedPolicy,
 };
 use relic_smt::graph::kronecker::paper_graph;
 use relic_smt::relic::affinity;
@@ -301,6 +314,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 let reliability = reliability_settings(args)?;
                 let plan = plan_settings(args)?;
                 let tuner = tuner_settings(args)?;
+                let streaming = stream_settings(args)?;
                 check_plan_conflict(&tuner, &plan)?;
                 let mut engine_cfg =
                     EngineConfig::from_settings(&settings, &admission, &supervisor);
@@ -333,6 +347,21 @@ fn run(args: &Args) -> anyhow::Result<()> {
                      (the difference, if any, was shed — see below)",
                     responses.len()
                 );
+                if streaming.enabled {
+                    // The edge-stream pipeline runs beside the request
+                    // path; its counters fold into the report below.
+                    // With `[stream]` off this block never executes and
+                    // the report is byte-identical to a plain engine's.
+                    let scfg = streaming.to_config();
+                    let docs = stream::encode_stream(EdgeDist::PowerLaw, &scfg);
+                    let (srep, _state) = stream::run_pipeline(&scfg, docs);
+                    println!(
+                        "stream leg: {} documents through the pipeline in {:.1} ms \
+                         (pinned: {})",
+                        srep.batches_in, srep.elapsed_ms, srep.pinned,
+                    );
+                    engine.set_stream(Some(srep.snapshot()));
+                }
                 println!("{}", engine.report());
                 if args.flag("health-json") {
                     println!("{}", engine.health().to_json());
@@ -557,6 +586,32 @@ fn run(args: &Args) -> anyhow::Result<()> {
             println!("{}", figures::render_plan(&rows));
             write_out(args, "plan.json", &figures::plan_rows_to_json(&rows))?;
         }
+        Some("stream") => {
+            let settings = pool_settings(args)?;
+            let admission = admission_settings(args)?;
+            let supervisor = supervisor_settings(args)?;
+            let streaming = stream_settings(args)?;
+            let shards = args.get_u64("shards", 2).max(1) as usize;
+            println!("host: {}", affinity::topology_summary());
+            let template = EngineConfig::from_settings(&settings, &admission, &supervisor);
+            let scfg = streaming.to_config();
+            println!(
+                "streaming sweep: 2^{} vertices, {} batches x {} edges, queue capacity {}, \
+                 recompute every {} batches, seed {}, {} shard(s) for the off-leg\n",
+                scfg.scale,
+                scfg.batches,
+                scfg.batch,
+                scfg.queue_capacity,
+                scfg.recompute_interval,
+                scfg.seed,
+                shards,
+            );
+            // Every row passes the hard gates inside the sweep or the
+            // whole command exits nonzero with the failing row printed.
+            let rows = figures::stream_sweep(&template, &scfg, shards)?;
+            println!("{}", figures::render_stream(&rows));
+            write_out(args, "stream.json", &figures::stream_rows_to_json(&rows))?;
+        }
         Some("selftest") => {
             let artifacts = args.get("artifacts").unwrap_or("artifacts");
             let mut exec = GraphExecutor::new(Path::new(artifacts))?;
@@ -587,7 +642,8 @@ fn run(args: &Args) -> anyhow::Result<()> {
         _ => {
             println!(
                 "usage: repro <fig1|fig3|fig4|granularity|ablation|wallclock|intra\
-                 |serve|pool|admission|faults|chaos|health|whale|plan|selftest> [--options]"
+                 |serve|pool|admission|faults|chaos|health|whale|plan|stream|selftest> \
+                 [--options]"
             );
             println!("see rust/src/main.rs docs for details");
         }
@@ -762,6 +818,36 @@ fn tuner_settings(args: &Args) -> anyhow::Result<TunerSettings> {
     s.min_samples = args.get_u64("tuner-min-samples", s.min_samples);
     if args.flag("calibrate") {
         s.calibrate = true;
+    }
+    s.validate()?;
+    Ok(s)
+}
+
+/// `[stream]` settings: config file first (`--config PATH`), then CLI
+/// overrides (`--stream` turns the pipeline on for `serve`, `--scale S`,
+/// `--batch B`, `--batches N`, `--queue-capacity Q`,
+/// `--recompute-interval K`, `--source V`, `--seed S`, `--no-pin`).
+/// The merged result is validated before use: a scale outside the
+/// memoized-trajectory range, a degenerate batch shape or queue, or a
+/// BFS source outside the vertex range is a typed startup error.
+fn stream_settings(args: &Args) -> anyhow::Result<StreamSettings> {
+    let mut s = match args.get("config") {
+        Some(path) => StreamSettings::from_raw(&RawConfig::load(Path::new(path))?),
+        None => StreamSettings::default(),
+    };
+    if args.flag("stream") {
+        s.enabled = true;
+    }
+    s.scale = args.get_u64("scale", u64::from(s.scale)) as u32;
+    s.batch = args.get_u64("batch", s.batch as u64) as usize;
+    s.batches = args.get_u64("batches", s.batches as u64) as usize;
+    s.queue_capacity = args.get_u64("queue-capacity", s.queue_capacity as u64) as usize;
+    s.recompute_interval =
+        args.get_u64("recompute-interval", s.recompute_interval as u64) as usize;
+    s.source = args.get_u64("source", u64::from(s.source)) as u32;
+    s.seed = args.get_u64("seed", s.seed);
+    if args.flag("no-pin") {
+        s.pin = false;
     }
     s.validate()?;
     Ok(s)

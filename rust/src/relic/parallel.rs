@@ -781,62 +781,6 @@ impl<'r> Par<'r> {
         }
         all
     }
-
-    /// Former boundary-carrying variant, kept one PR for out-of-tree
-    /// callers (ISSUE 9).
-    #[deprecated(note = "pass `Grain::Bounded(grain, &bound)` to `for_each_index`")]
-    pub fn for_each_index_by<F, B>(&self, range: Range<usize>, grain: usize, bound: B, f: F)
-    where
-        F: Fn(usize) + Sync,
-        B: Fn(usize, usize) -> usize,
-    {
-        self.for_each_index(range, Grain::Bounded(grain, &bound), f);
-    }
-
-    /// Former boundary-carrying variant, kept one PR for out-of-tree
-    /// callers (ISSUE 9).
-    #[deprecated(note = "pass `Grain::Bounded(grain, &bound)` to `map_into`")]
-    pub fn map_into_by<T, F, B>(&self, out: &mut [T], grain: usize, bound: B, f: F)
-    where
-        T: Send,
-        F: Fn(usize) -> T + Sync,
-        B: Fn(usize, usize) -> usize,
-    {
-        self.map_into(out, Grain::Bounded(grain, &bound), f);
-    }
-
-    /// Former boundary-carrying variant, kept one PR for out-of-tree
-    /// callers (ISSUE 9).
-    #[deprecated(note = "pass `Grain::Bounded(grain, &bound)` to `reduce`")]
-    pub fn reduce_by<T, F, C, B>(
-        &self,
-        range: Range<usize>,
-        grain: usize,
-        bound: B,
-        identity: T,
-        f: F,
-        combine: C,
-    ) -> T
-    where
-        T: Copy + Send + Sync,
-        F: Fn(usize) -> T + Sync,
-        C: Fn(T, T) -> T + Sync,
-        B: Fn(usize, usize) -> usize,
-    {
-        self.reduce(range, Grain::Bounded(grain, &bound), identity, f, combine)
-    }
-
-    /// Former boundary-carrying variant, kept one PR for out-of-tree
-    /// callers (ISSUE 9).
-    #[deprecated(note = "pass `Grain::Bounded(grain, &bound)` to `chunk_map`")]
-    pub fn chunk_map_by<T, F, B>(&self, range: Range<usize>, grain: usize, bound: B, f: F) -> Vec<T>
-    where
-        T: Send,
-        F: Fn(Range<usize>) -> T + Sync,
-        B: Fn(usize, usize) -> usize,
-    {
-        self.chunk_map(range, Grain::Bounded(grain, &bound), f)
-    }
 }
 
 impl Relic {
@@ -998,27 +942,30 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_by_shims_still_route_through_bounded_paths() {
+    fn bounded_grain_routes_every_entry_point_through_bounded_paths() {
+        // The `_by` shims are gone (deprecated one PR, ISSUE 9 → 10);
+        // `Grain::Bounded` on the plan-carrying entry points is the one
+        // way to hand a boundary function to every helper.
         let relic = Relic::new();
         let n = 400usize;
         let bound = |i: usize, k: usize| n * i * i / (k * k);
         let par = Par::Relic(&relic).with_schedule(Schedule::EdgeBalanced);
 
         let hits = AtomicU64::new(0);
-        par.for_each_index_by(0..n, 8, bound, |i| {
+        par.for_each_index(0..n, Grain::Bounded(8, &bound), |i| {
             hits.fetch_add(i as u64, Ordering::Relaxed);
         });
         assert_eq!(hits.load(Ordering::Relaxed), (n as u64 - 1) * n as u64 / 2);
 
         let mut out = vec![0u64; n];
-        par.map_into_by(&mut out, 8, bound, |i| i as u64 * 7);
+        par.map_into(&mut out, Grain::Bounded(8, &bound), |i| i as u64 * 7);
         assert_eq!(out[n - 1], (n as u64 - 1) * 7);
 
-        let red = par.reduce_by(0..n, 8, bound, 0u64, |i| i as u64, |a, b| a + b);
+        let red =
+            par.reduce(0..n, Grain::Bounded(8, &bound), 0u64, |i| i as u64, |a, b| a + b);
         assert_eq!(red, (n as u64 - 1) * n as u64 / 2);
 
-        let chunks = par.chunk_map_by(0..n, 8, bound, |sub| sub.len());
+        let chunks = par.chunk_map(0..n, Grain::Bounded(8, &bound), |sub| sub.len());
         assert_eq!(chunks.iter().sum::<usize>(), n);
     }
 

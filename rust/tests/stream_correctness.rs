@@ -1,0 +1,286 @@
+//! Streaming correctness suite.
+//!
+//! The tentpole invariants of the edge-stream pipeline and the
+//! incremental kernels behind it:
+//!
+//! 1. **Differential** — at *every* checkpoint of a randomized seeded
+//!    edge-insertion stream (power-law and uniform), incremental CC,
+//!    delta-PageRank and dynamic BFS equal a full recompute on the
+//!    rebuilt graph: CC/BFS against [`oracle`], PageRank bitwise
+//!    against the serial kernel.
+//! 2. **Determinism** — the same seed produces bitwise-identical
+//!    emitted lines, checksums and scores across two pipeline runs.
+//! 3. **No drop, no reorder** — under a deliberately tiny stage queue
+//!    the pipeline backpressures; every input document still produces
+//!    exactly one emit line, in input order.
+//! 4. **Degeneracy** — with `[stream]` off the engine is
+//!    response-for-response (and report-for-report) the PR 9 engine.
+//! 5. **Wire format** — `encode_batch → parse_batch_par → decode_batch`
+//!    round-trips seeded random batches losslessly, and truncated or
+//!    shape-malformed documents are rejected, never misread.
+
+use relic_smt::config::StreamSettings;
+use relic_smt::coordinator::stream::{
+    decode_batch, encode_batch, encode_stream, generate_batches, run_pipeline,
+};
+use relic_smt::coordinator::{
+    Deadline, EdgeDist, Engine, EngineConfig, GraphKernel, Request, Response, StreamConfig,
+};
+use relic_smt::graph::kronecker::paper_graph;
+use relic_smt::graph::{oracle, pr, IncrementalAnalytics};
+use relic_smt::json::{self, Value};
+use relic_smt::probe::NoProbe;
+use relic_smt::relic::{Par, PoolConfig, Relic, Schedule};
+use relic_smt::testutil::check;
+
+const SCALE: u32 = 7;
+const SOURCE: u32 = 3;
+
+fn bits(scores: &[f64]) -> Vec<u64> {
+    scores.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Small stream shape shared by the pipeline tests; the 2-deep queues
+/// in `backpressure_never_drops_or_reorders` override `queue_capacity`.
+fn small_cfg(seed: u64) -> StreamConfig {
+    StreamConfig {
+        enabled: true,
+        scale: 6,
+        batch: 32,
+        batches: 10,
+        queue_capacity: 4,
+        recompute_interval: 3,
+        source: 0,
+        seed,
+        pin: false,
+    }
+}
+
+/// Full differential check of one incremental state against a
+/// from-scratch recompute on the rebuilt graph.
+fn assert_checkpoint(an: &IncrementalAnalytics, source: u32, tag: &str) {
+    let rebuilt = an.graph().rebuild();
+    assert_eq!(
+        an.cc_labels(),
+        oracle::components_min_label(&rebuilt),
+        "{tag}: incremental CC diverged from the oracle"
+    );
+    assert_eq!(
+        an.bfs_depths(),
+        oracle::bfs_depths(&rebuilt, source),
+        "{tag}: dynamic BFS diverged from the oracle"
+    );
+    let fresh = pr::pagerank(&rebuilt, pr::MAX_ITERS, pr::TOLERANCE, &mut NoProbe);
+    assert_eq!(
+        bits(an.pr_scores()),
+        bits(&fresh),
+        "{tag}: delta-PageRank is not bitwise equal to the serial kernel"
+    );
+}
+
+#[test]
+fn incremental_kernels_match_full_recomputes_at_every_checkpoint() {
+    let relic = Relic::new();
+    let par = Par::Relic(&relic);
+    for dist in EdgeDist::all() {
+        for seed in [11u64, 29] {
+            let batches = generate_batches(dist, SCALE, 12, 40, seed);
+            let mut an = IncrementalAnalytics::empty(1 << SCALE, SOURCE, 5);
+            for (round, batch) in batches.iter().enumerate() {
+                let outcome = an.apply_batch(batch, &par);
+                assert!(
+                    outcome.recompute_matched,
+                    "{} seed {seed} round {round}: escape hatch mismatch",
+                    dist.name()
+                );
+                let tag = format!("{} seed {seed} round {round}", dist.name());
+                assert_checkpoint(&an, SOURCE, &tag);
+            }
+            assert_eq!(an.recomputes(), 2, "12 batches / interval 5");
+            assert_eq!(an.recompute_mismatches(), 0);
+        }
+    }
+}
+
+#[test]
+fn pipeline_final_state_matches_a_serial_replay() {
+    // The threaded pipeline and a single-threaded replay of the same
+    // generated stream are the same state machine: identical final
+    // checksums and bitwise-identical scores, for both scenarios.
+    for dist in EdgeDist::all() {
+        let cfg = small_cfg(17);
+        let (report, an) = run_pipeline(&cfg, encode_stream(dist, &cfg));
+        let batches =
+            generate_batches(dist, cfg.scale, cfg.batches, cfg.batch, cfg.seed);
+        let mut replay =
+            IncrementalAnalytics::empty(1 << cfg.scale, cfg.source, cfg.recompute_interval);
+        for batch in &batches {
+            replay.apply_batch(batch, &Par::Serial);
+        }
+        assert_eq!(report.checksums, replay.checksums(), "{}", dist.name());
+        assert_eq!(bits(an.pr_scores()), bits(replay.pr_scores()), "{}", dist.name());
+        assert_checkpoint(&an, cfg.source, dist.name());
+    }
+}
+
+#[test]
+fn same_seed_pipeline_runs_are_bitwise_identical() {
+    let cfg = small_cfg(21);
+    for dist in EdgeDist::all() {
+        let run = || {
+            let (report, an) = run_pipeline(&cfg, encode_stream(dist, &cfg));
+            (report.emitted.clone(), report.checksums, bits(an.pr_scores()))
+        };
+        assert_eq!(run(), run(), "{}: seeded runs must be reproducible", dist.name());
+    }
+}
+
+#[test]
+fn backpressure_never_drops_or_reorders() {
+    // 2-slot stage links against 24 large batches: the producer outruns
+    // every stage, so the links saturate and the push side spins. The
+    // contract is lossless FIFO delivery regardless.
+    let cfg = StreamConfig {
+        batch: 64,
+        batches: 24,
+        queue_capacity: 2,
+        ..small_cfg(31)
+    };
+    let (report, _an) = run_pipeline(&cfg, encode_stream(EdgeDist::PowerLaw, &cfg));
+    assert_eq!(report.batches_in, 24);
+    assert_eq!(report.parse_errors, 0);
+    assert_eq!(report.out_of_order, 0, "emit saw records out of input order");
+    assert_eq!(report.emitted.len(), 24, "every document produces exactly one line");
+    for (i, line) in report.emitted.iter().enumerate() {
+        let doc = json::parse(line.as_bytes()).expect("emit lines are valid JSON");
+        let seq = doc.get("seq").and_then(Value::as_u64).expect("emit line has seq");
+        assert_eq!(seq, i as u64, "line {i} carries the wrong sequence number");
+    }
+}
+
+#[test]
+fn stream_off_engine_is_response_for_response_the_plain_engine() {
+    // `[stream]` defaults off, and an off section materializes nothing:
+    // engine construction never consults it. Operationally, running the
+    // pipeline next to one engine must not perturb its request path,
+    // and detaching the counters must restore its report byte for byte.
+    let settings = StreamSettings::default();
+    assert!(!settings.enabled, "[stream] must default off");
+    let base = || EngineConfig {
+        pool: PoolConfig { shards: Some(2), pin: false, ..PoolConfig::default() },
+        ..EngineConfig::default()
+    };
+    let requests = |first: u64| -> Vec<Request> {
+        let kernels = GraphKernel::all();
+        (0..2 * kernels.len())
+            .map(|i| Request {
+                id: first + i as u64,
+                kernel: kernels[i % kernels.len()],
+                graph: paper_graph(),
+                source: 0,
+                deadline: Deadline::none(),
+            })
+            .collect()
+    };
+    let sig = |responses: &[Response]| -> Vec<(u64, relic_smt::coordinator::RequestResult)> {
+        responses.iter().map(|r| (r.id, r.result.clone())).collect()
+    };
+    let mut plain = Engine::new(base());
+    let mut beside_stream = Engine::new(base());
+    for round in 0..3u64 {
+        let a = plain.process_batch(requests(round * 100));
+        let b = beside_stream.process_batch(requests(round * 100));
+        assert_eq!(sig(&a), sig(&b), "round {round}: responses diverged");
+        if round == 1 {
+            // Run a whole pipeline between serving rounds on one engine
+            // only; its subsequent responses must not change.
+            let scfg = small_cfg(5);
+            let (report, _an) =
+                run_pipeline(&scfg, encode_stream(EdgeDist::Uniform, &scfg));
+            let before = beside_stream.report();
+            beside_stream.set_stream(Some(report.snapshot()));
+            assert!(beside_stream.report().contains("stream: "), "counters attached");
+            beside_stream.set_stream(None);
+            assert_eq!(
+                beside_stream.report(),
+                before,
+                "detaching the stream counters must restore the report byte-identically"
+            );
+        }
+    }
+}
+
+#[test]
+fn wire_roundtrip_preserves_seeded_random_batches() {
+    let relic = Relic::new();
+    let par = Par::Relic(&relic);
+    check(40, |rng| {
+        let seq = rng.below(1 << 48);
+        let count = rng.range(0, 65);
+        let edges: Vec<(u32, u32)> = (0..count)
+            .map(|_| (rng.below(1 << 32) as u32, rng.below(1 << 32) as u32))
+            .collect();
+        let bytes = encode_batch(seq, &edges);
+        let docs = [bytes.as_slice()];
+        let parsed = json::parse_batch_par(&docs, &par);
+        let value = parsed[0].as_ref().map_err(|e| format!("parse failed: {e}"))?;
+        let (got_seq, got_edges) = decode_batch(value).map_err(str::to_string)?;
+        if got_seq != seq || got_edges != edges {
+            return Err(format!("round-trip mutated the batch (seq {seq})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parse_batch_par_round_trips_whole_streams_under_every_schedule() {
+    let cfg = small_cfg(13);
+    let expected =
+        generate_batches(EdgeDist::Uniform, cfg.scale, cfg.batches, cfg.batch, cfg.seed);
+    let docs = encode_stream(EdgeDist::Uniform, &cfg);
+    let refs: Vec<&[u8]> = docs.iter().map(|d| d.as_slice()).collect();
+    let relic = Relic::new();
+    for sched in Schedule::all() {
+        let par = Par::Relic(&relic).with_schedule(sched);
+        let parsed = json::parse_batch_par(&refs, &par);
+        assert_eq!(parsed.len(), docs.len());
+        for (i, result) in parsed.iter().enumerate() {
+            let value = result.as_ref().expect("stream documents parse");
+            let (seq, edges) = decode_batch(value).expect("stream documents decode");
+            assert_eq!(seq, i as u64, "{}", sched.name());
+            assert_eq!(edges, expected[i], "{} batch {i}", sched.name());
+        }
+    }
+}
+
+#[test]
+fn truncated_and_malformed_documents_are_rejected() {
+    // Every strict prefix of a valid wire document must fail to parse —
+    // a truncated write can never be misread as a shorter valid batch.
+    check(20, |rng| {
+        let edges: Vec<(u32, u32)> = (0..rng.range(1, 9))
+            .map(|_| (rng.below(64) as u32, rng.below(64) as u32))
+            .collect();
+        let bytes = encode_batch(rng.below(1000), &edges);
+        for cut in 0..bytes.len() {
+            if json::parse(&bytes[..cut]).is_ok() {
+                return Err(format!("truncation at {cut}/{} parsed", bytes.len()));
+            }
+        }
+        Ok(())
+    });
+    // Shape-malformed documents parse as JSON but fail strict decode.
+    for bad in [
+        r#"{"edges": [[1, 2]]}"#,
+        r#"{"seq": 1.5, "edges": []}"#,
+        r#"{"seq": 1}"#,
+        r#"{"seq": 1, "edges": 2}"#,
+        r#"{"seq": 1, "edges": [[1, 2, 3]]}"#,
+        r#"{"seq": 1, "edges": [[1, 2.5]]}"#,
+        r#"{"seq": 1, "edges": [[1, -2]]}"#,
+        r#"{"seq": 1, "edges": [[1, 4294967296]]}"#,
+    ] {
+        let doc = json::parse(bad.as_bytes()).expect("shape-malformed is still JSON");
+        assert!(decode_batch(&doc).is_err(), "decode accepted {bad}");
+    }
+}
